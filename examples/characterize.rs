@@ -1,0 +1,74 @@
+//! Re-derive the paper's empirical constants from microbenchmarks — the
+//! Section II methodology as a runnable program.
+//!
+//! The paper: (1) sweeps synthesized layers to find that achieved GFLOPS
+//! saturates at `OpCount_critical = 10^1.25` GOPs per core; (2) runs PCA
+//! over layer features to find op count (1st) and channel (2nd) dominate;
+//! (3) fits the Eq. 5 MP-selection weights α = 0.316, β = 0.659. This
+//! example repeats all three steps against the simulator substrate and
+//! prints paper-vs-derived values.
+//!
+//! ```bash
+//! cargo run --release --example characterize
+//! ```
+
+use dlfusion::accel::Simulator;
+use dlfusion::microbench;
+use dlfusion::perfmodel::{critical, features, mp_select::MpModel};
+use dlfusion::util::units::fmt_gops;
+use dlfusion::util::Table;
+
+fn main() {
+    let sim = Simulator::mlu100();
+    println!("characterizing {} via synthesized microbenchmarks\n", sim.spec.name);
+
+    // ---- step 1: single-core saturation (Fig. 3(b) / 4(a)) ----
+    let sweep = critical::single_core_sweep(&sim, 48);
+    let mut t = Table::new(&["op count", "achieved GFLOPS"]).label_first()
+        .with_title("single-core sweep (subsample)");
+    for p in sweep.iter().step_by(6) {
+        t.row(vec![fmt_gops(p.gops), format!("{:.1}", p.gflops)]);
+    }
+    println!("{t}\n");
+    let crit = critical::fit_opcount_critical(&sweep, 0.9);
+    println!("OpCount_critical  paper: {}   derived: {}\n",
+             fmt_gops(10f64.powf(1.25)), fmt_gops(crit));
+
+    // ---- step 2: PCA feature ranking (Section II.B) ----
+    let layers = microbench::conv_sweep();
+    let ch = features::characterize(&sim, &layers, 1);
+    let mut t = Table::new(&["feature", "|corr with perf|"]).label_first()
+        .with_title("feature association with achieved performance");
+    for (name, assoc) in features::FEATURE_NAMES.iter().zip(ch.perf_association) {
+        t.row(vec![name.to_string(), format!("{assoc:.3}")]);
+    }
+    println!("{t}");
+    let ratios = ch.pca.explained_ratio();
+    println!("PCA explained variance: PC1 {:.1}%  PC2 {:.1}%\n",
+             100.0 * ratios[0], 100.0 * ratios[1]);
+
+    // ---- step 3: Eq. 5 weight fit ----
+    let fitted = MpModel::fit(&sim, &layers);
+    println!("Eq. 5 weights      paper: alpha=0.316 beta=0.659");
+    println!("                 derived: alpha={:.3} beta={:.3} bias={:.3}",
+             fitted.alpha, fitted.beta, fitted.bias);
+
+    // Show the derived selector against the simulator optimum on a few
+    // familiar layers.
+    let mut t = Table::new(&["layer", "simulator best MP", "Eq.5 MP"]).label_first()
+        .with_title("\nMP selection spot-check");
+    for (name, layer) in [
+        ("vgg conv1_2 {64,64,224^2}", microbench::channel_scaled_series(&[1])[0].clone()),
+        ("resnet mid {128,128,28^2}",
+         dlfusion::graph::Layer::conv("r", dlfusion::graph::ConvSpec::same(128, 128, 28, 3))),
+        ("vgg late {512,512,28^2}",
+         dlfusion::graph::Layer::conv("v", dlfusion::graph::ConvSpec::same(512, 512, 28, 3))),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            sim.best_layer_mp(&layer).to_string(),
+            fitted.select_layer(&sim.spec, &layer).to_string(),
+        ]);
+    }
+    println!("{t}");
+}

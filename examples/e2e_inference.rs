@@ -1,0 +1,102 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Pipeline (every arrow is real code, no mocks):
+//!
+//! 1. build a small CNN ([`zoo::mini_cnn`]: six 3x3 conv+ReLU stages);
+//! 2. run **DLFusion** (Algorithm 1) over it — the paper's contribution;
+//! 3. emit the CNML-style C++ the paper's code generator produces;
+//! 4. map the schedule onto the AOT artifact catalog (Pallas fused-conv
+//!    kernels lowered by `make artifacts`) and execute the *fused* plan and
+//!    the *unfused* per-layer plan through the PJRT CPU runtime, asserting
+//!    mathematical equivalence — DLFusion's correctness claim;
+//! 5. serve a batched request loop on the fused plan, measuring wall-clock
+//!    latency/throughput;
+//! 6. print the simulated Fig. 10-style strategy row for the same model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use dlfusion::accel::Simulator;
+use dlfusion::coordinator::{driver, equivalence, plan, Engine};
+use dlfusion::optimizer::{self, Strategy};
+use dlfusion::runtime::Runtime;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    let model = zoo::mini_cnn();
+    let sim = Simulator::mlu100();
+
+    // ---- (2) optimize ----
+    let schedule = optimizer::dlfusion_schedule(&model, &sim.spec);
+    println!("== DLFusion schedule for {} ==", model.name);
+    println!("   {}\n", schedule.summary());
+
+    // ---- (3) codegen ----
+    let cpp = dlfusion::codegen::generate_cpp(&model, &schedule);
+    let out_dir = std::path::Path::new("generated");
+    std::fs::create_dir_all(out_dir).expect("mkdir generated/");
+    std::fs::write(out_dir.join("mini_cnn_inference.cpp"), &cpp).unwrap();
+    std::fs::write(out_dir.join("cnml_compat.h"),
+                   dlfusion::codegen::generate_header()).unwrap();
+    println!("== generated CNML-style C++ -> generated/mini_cnn_inference.cpp ==");
+    println!("   ({} lines, {} fused operators)\n",
+             cpp.lines().count(),
+             cpp.matches("cnmlCompileFusionOperator").count());
+
+    // ---- (4) PJRT equivalence ----
+    let mut rt = Runtime::open_default().unwrap_or_else(|e| {
+        eprintln!("error: {e}\nrun `make artifacts` first");
+        std::process::exit(1);
+    });
+    println!("== PJRT runtime: platform {} ==", rt.platform());
+    let eq = equivalence::check_fused_vs_unfused(&mut rt, 42).expect("equivalence run");
+    for c in &eq.checks {
+        println!("   fused vs unfused {:<22} max|diff| {:.3e}  [{}]",
+                 c.artifact, c.max_abs_diff, if c.passed { "ok" } else { "FAIL" });
+    }
+    assert!(eq.all_passed(), "fusion must be mathematically equivalent");
+    let gold = equivalence::check_golden(&mut rt, 1e-4).expect("golden run");
+    for c in &gold.checks {
+        println!("   golden replay    {:<22} max|diff| {:.3e}  [{}]",
+                 c.artifact, c.max_abs_diff, if c.passed { "ok" } else { "FAIL" });
+    }
+    assert!(gold.all_passed(), "golden vectors must replay");
+    println!();
+
+    // ---- (5) request loop ----
+    let ex_plan = plan::build_plan(&model, &schedule, rt.manifest()).expect("plan");
+    println!("== execution plan: {} steps ({} fused) ==",
+             ex_plan.steps.len(), ex_plan.num_fused_steps());
+    for s in &ex_plan.steps {
+        println!("   step: {:<12} convs {:?} (block {}, MP {})",
+                 s.artifact, s.conv_indices, s.block_index, s.mp);
+    }
+    let mut engine = Engine::new(rt, &model, ex_plan, 7).expect("engine");
+    let cfg = driver::DriverConfig { requests: 64, warmup: 8, seed: 11, verify_each: true };
+    let rep = driver::serve(&mut engine, &cfg).expect("serve");
+    println!("\n== request loop (PJRT CPU wall-clock) ==");
+    println!("   {}", rep.latency.report());
+    println!("   throughput: {:.1} inferences/s", rep.fps());
+    println!("   per-request equivalence: {} ok / {} failures",
+             rep.counters.get("equivalence_ok"),
+             rep.counters.get("equivalence_failures"));
+    assert_eq!(rep.counters.get("equivalence_failures"), 0);
+
+    // ---- (6) simulated strategy comparison ----
+    let mut t = Table::new(&["#", "strategy", "FPS (sim)", "speedup"])
+        .label_first()
+        .with_title("\nFig. 10-style row — mini_cnn on the MLU100 simulator");
+    let mut base = None;
+    for st in Strategy::ALL {
+        let (_, r) = optimizer::run_strategy(&sim, &model, st);
+        let b = *base.get_or_insert(r.fps());
+        t.row(vec![st.index().to_string(), st.name().into(),
+                   format!("{:.0}", r.fps()), format!("{:.2}x", r.fps() / b)]);
+    }
+    println!("{t}");
+    println!("\ne2e OK");
+}

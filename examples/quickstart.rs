@@ -1,0 +1,31 @@
+//! Quickstart: the 10-line DLFusion API tour.
+//!
+//! Loads a zoo model, runs Algorithm 1, and simulates the optimized
+//! schedule against the no-optimization baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dlfusion::prelude::*;
+
+fn main() {
+    let spec = AcceleratorSpec::mlu100();
+    let sim = Simulator::new(spec.clone());
+    let model = zoo::resnet18();
+
+    // The paper's contribution: joint fusion + MP auto-tuning in O(n).
+    let schedule = optimizer::dlfusion_schedule(&model, &spec);
+    println!("model:    {} ({} layers, {} convs)",
+             model.name, model.num_layers(), model.stats().num_conv);
+    println!("schedule: {}", schedule.summary());
+
+    let optimized = sim.run_schedule(&model, &schedule);
+    let baseline = sim.run_schedule(
+        &model,
+        &optimizer::Schedule::layerwise(model.num_layers(), 1),
+    );
+    println!("baseline:  {:8.1} FPS", baseline.fps());
+    println!("DLFusion:  {:8.1} FPS  ({:.1}x speedup)",
+             optimized.fps(), optimized.fps() / baseline.fps());
+}

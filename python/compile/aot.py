@@ -1,0 +1,141 @@
+"""AOT lowering: JAX fusion blocks -> HLO *text* artifacts + manifest.
+
+Build-time half of the three-layer architecture.  Each BlockSpec in
+``model.CATALOG`` (plus its unfused per-stage convs) is jitted, lowered to
+stablehlo, converted to an XlaComputation, and dumped as HLO **text** to
+``artifacts/<name>.hlo.txt``.
+
+HLO text -- NOT ``lowered.compile().serialize()`` / serialized protos -- is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Also writes ``artifacts/manifest.json`` describing every artifact (shapes,
+dtypes, fused->stage pairing) for the Rust runtime, and, for each fused
+block, a deterministic input/output checksum the Rust integration tests
+verify end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .model import BlockSpec, make_block_fn, example_args, random_args
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(spec: BlockSpec) -> str:
+    fn = make_block_fn(spec, use_kernel=True)
+    lowered = jax.jit(fn).lower(*example_args(spec))
+    return to_hlo_text(lowered)
+
+
+def _checksum(spec: BlockSpec, seed: int = 0):
+    """Run the block in-process and fingerprint inputs/outputs.
+
+    The Rust integration suite re-executes the artifact via PJRT with the
+    same deterministic inputs (shipped as .npy-like flat f32 files) and
+    asserts the outputs match this fingerprint's values.
+    """
+    args = random_args(spec, seed=seed)
+    (out,) = make_block_fn(spec, use_kernel=False)(*args)
+    out = np.asarray(out, dtype=np.float32)
+    h = hashlib.sha256()
+    for a in args:
+        h.update(np.asarray(a, dtype=np.float32).tobytes())
+    h.update(out.tobytes())
+    return args, out, h.hexdigest()
+
+
+def write_flat_f32(path: str, arr) -> None:
+    np.asarray(arr, dtype="<f4").tofile(path)
+
+
+def emit(outdir: str, verbose: bool = True) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    specs, pairs = model_mod.catalog_with_stages()
+    manifest = {
+        "format_version": 1,
+        "interchange": "hlo-text",
+        "artifacts": [],
+        "fused_pairs": pairs,
+    }
+    for spec in specs:
+        hlo = lower_block(spec)
+        fname = f"{spec.name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(hlo)
+        entry = spec.to_json_dict()
+        entry["file"] = fname
+        entry["input_shapes"] = [list(s) for s in spec.input_shapes()]
+        entry["output_shape"] = list(spec.output_shape())
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  lowered {spec.name}: depth={spec.depth} "
+                  f"{spec.height}x{spec.width} ch={list(spec.channels)} "
+                  f"({len(hlo)} chars)")
+
+    # Golden vectors for the deepest fused block + the realistic block: the
+    # Rust integration tests feed these exact inputs through PJRT.
+    golden = {}
+    for name in ("b2_c8_h16", "b2_c16_h32"):
+        spec = next(s for s in specs if s.name == name)
+        args, out, digest = _checksum(spec)
+        gdir = os.path.join(outdir, "golden", name)
+        os.makedirs(gdir, exist_ok=True)
+        for i, a in enumerate(args):
+            write_flat_f32(os.path.join(gdir, f"in{i}.f32"), a)
+        write_flat_f32(os.path.join(gdir, "out.f32"), out)
+        golden[name] = {
+            "sha256": digest,
+            "num_inputs": len(args),
+            "dir": f"golden/{name}",
+        }
+    manifest["golden"] = golden
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {outdir}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default=None, help="artifact output directory")
+    p.add_argument("--out", default=None,
+                   help="(compat) path like ../artifacts/model.hlo.txt; "
+                        "its directory is used as --outdir")
+    p.add_argument("-q", "--quiet", action="store_true")
+    args = p.parse_args()
+    outdir = args.outdir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    manifest = emit(outdir, verbose=not args.quiet)
+    # Keep the Makefile's sentinel file contract: model.hlo.txt is the first
+    # artifact, copied under the sentinel name.
+    sentinel = os.path.join(outdir, "model.hlo.txt")
+    first = os.path.join(outdir, manifest["artifacts"][0]["file"])
+    with open(first) as src, open(sentinel, "w") as dst:
+        dst.write(src.read())
+
+
+if __name__ == "__main__":
+    main()

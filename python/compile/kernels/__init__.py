@@ -1,0 +1,12 @@
+"""L1: Pallas kernel(s) for the paper's compute hot-spot (fused conv blocks)."""
+
+from .fused_conv import fused_conv_chain, conv_stage_tile, KERNEL_SIZE
+from .ref import conv2d_same_ref, fused_conv_chain_ref
+
+__all__ = [
+    "fused_conv_chain",
+    "conv_stage_tile",
+    "KERNEL_SIZE",
+    "conv2d_same_ref",
+    "fused_conv_chain_ref",
+]

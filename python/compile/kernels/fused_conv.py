@@ -1,0 +1,202 @@
+"""Layer-1 Pallas kernel: the fused-layer convolution pyramid.
+
+This is the compute hot-spot of the DLFusion paper: a *fusion block* of
+consecutive 3x3 convolutions (stride 1, SAME padding, bias + ReLU after each
+stage) executed tile-wise so that intermediate feature maps never leave
+on-chip memory.  Each grid program:
+
+  1. loads one spatial *input window with halo* -- for a depth-``d`` block of
+     3x3 convs the window is ``(tile + 2d) x (tile + 2d)`` -- the halo rows
+     and columns are exactly the *redundant computation* of Fig. 7(a)
+     (Alwani et al., "Fused-layer CNN accelerators");
+  2. carries the tile through all ``d`` conv stages entirely in registers /
+     scratch (VMEM on a real TPU), masking positions that fall outside the
+     original image to zero after every intermediate stage so the fused chain
+     is *bit-for-bit mathematically equivalent* to the unfused SAME-padded
+     per-layer execution (the equivalence DLFusion's auto-fusion relies on);
+  3. writes only the final ``tile x tile`` output block.
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): the MLU100's
+core-local buffer maps to a VMEM tile expressed through BlockSpecs; the
+channel-granular model-parallel partitioning of the paper maps to the channel
+axis of the dot-product below (lowered as an MXU-friendly contraction); the
+halo redundancy the paper's cost model charges is physically materialised by
+the overlapping windows this kernel reads.
+
+The kernel is always lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and all numerics in this project run on
+the CPU client from the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fused_conv_chain", "conv_stage_tile", "KERNEL_SIZE"]
+
+# All convolutions in a DLFusion fusion block are KxK, stride 1, SAME.  The
+# paper's characterization (Fig. 4(b)) shows kernel size contributes little to
+# the performance variance, so like the paper's microbenchmarks we fix K=3.
+KERNEL_SIZE = 3
+_RADIUS = KERNEL_SIZE // 2
+
+
+def conv_stage_tile(x_tile, w, b, *, apply_relu: bool):
+    """One VALID 3x3 conv stage over an in-register tile.
+
+    ``x_tile``: (h, w, cin) -- already includes the 1-pixel halo ring.
+    ``w``: (3, 3, cin, cout), ``b``: (cout,).
+    Returns (h-2, w-2, cout).
+
+    The 3x3 spatial taps are unrolled into 9 (h*w, cin) x (cin, cout)
+    contractions -- the shape an MXU systolic array (or the MLU100's matrix
+    unit) consumes, rather than a scalar loop nest.
+    """
+    h, wd, cin = x_tile.shape
+    oh, ow = h - 2 * _RADIUS, wd - 2 * _RADIUS
+    cout = w.shape[-1]
+    acc = jnp.zeros((oh * ow, cout), dtype=jnp.float32)
+    for dy in range(KERNEL_SIZE):
+        for dx in range(KERNEL_SIZE):
+            patch = x_tile[dy : dy + oh, dx : dx + ow, :].reshape(oh * ow, cin)
+            acc = acc + jax.lax.dot(
+                patch.astype(jnp.float32),
+                w[dy, dx].astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST,
+            )
+    out = acc.reshape(oh, ow, cout) + b.astype(jnp.float32)
+    if apply_relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def _border_mask(tile_h: int, tile_w: int, row0, col0, img_h: int, img_w: int):
+    """1.0 inside the original image, 0.0 in the halo overhang.
+
+    ``row0``/``col0`` are the global coordinates of the tile's (0, 0) element
+    (possibly negative: halo positions hang off the image edge).  Masking
+    intermediate stages to zero reproduces the zero padding the unfused
+    SAME-convolution chain would apply, which is what makes arbitrary-depth
+    fusion mathematically equivalent to layer-wise execution.
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tile_h, tile_w), 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tile_h, tile_w), 1) + col0
+    inside = (rows >= 0) & (rows < img_h) & (cols >= 0) & (cols < img_w)
+    return inside.astype(jnp.float32)[:, :, None]
+
+
+def _fused_kernel(x_ref, *refs, depth: int, tile: int, img_h: int, img_w: int,
+                  relu: Sequence[bool]):
+    """Pallas kernel body.  ``refs`` = w_0, b_0, ..., w_{d-1}, b_{d-1}, o_ref."""
+    w_refs = [refs[2 * i] for i in range(depth)]
+    b_refs = [refs[2 * i + 1] for i in range(depth)]
+    o_ref = refs[-1]
+
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+
+    halo = depth * _RADIUS
+    win = tile + 2 * halo
+    # x_ref holds the zero-padded image (img + `halo` ring); the window for
+    # tile (ti, tj) starts at (ti*tile, tj*tile) in padded coordinates.
+    row_start = ti * tile
+    col_start = tj * tile
+    x_win = pl.load(
+        x_ref,
+        (pl.dslice(row_start, win), pl.dslice(col_start, win), slice(None)),
+    )
+
+    cur = x_win
+    for stage in range(depth):
+        cur = conv_stage_tile(
+            cur, w_refs[stage][...], b_refs[stage][...], apply_relu=relu[stage]
+        )
+        if stage != depth - 1:
+            # Global coords of this intermediate tile's origin: the window
+            # origin in *image* coords is (ti*tile - halo); each VALID stage
+            # eats one radius ring.
+            off = (stage + 1) * _RADIUS
+            r0 = ti * tile - halo + off
+            c0 = tj * tile - halo + off
+            th = tile + 2 * (halo - off)
+            cur = cur * _border_mask(th, th, r0, c0, img_h, img_w)
+
+    o_ref[...] = cur.astype(o_ref.dtype)
+
+
+def _pick_tile(h: int, w: int, requested: int | None) -> int:
+    """Largest tile <= requested that divides both spatial dims."""
+    cap = requested if requested is not None else 16
+    for t in range(min(cap, h, w), 0, -1):
+        if h % t == 0 and w % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile", "relu_last", "interpret"),
+)
+def fused_conv_chain(x, weights, biases, *, tile: int | None = None,
+                     relu_last: bool = True, interpret: bool = True):
+    """Run a fused chain of 3x3/s1/SAME conv(+bias, +ReLU) stages.
+
+    Args:
+      x: (H, W, C_in) single image (batch via ``jax.vmap``).
+      weights: tuple of (3, 3, C_{l}, C_{l+1}) arrays.
+      biases:  tuple of (C_{l+1},) arrays.
+      tile: spatial tile edge (defaults to the largest divisor of H, W <= 16).
+      relu_last: whether the final stage applies ReLU (intermediates always do,
+        matching the conv+ReLU pairs DLFusion fuses).
+      interpret: must stay True on CPU PJRT (Mosaic custom-calls cannot run).
+
+    Returns:
+      (H, W, C_out) output, same dtype as ``x``.
+    """
+    weights = tuple(weights)
+    biases = tuple(biases)
+    depth = len(weights)
+    if depth == 0:
+        raise ValueError("fusion block must contain at least one conv stage")
+    if len(biases) != depth:
+        raise ValueError("weights/biases length mismatch")
+    h, w, cin = x.shape
+    if weights[0].shape[2] != cin:
+        raise ValueError(
+            f"stage-0 weight expects C_in={weights[0].shape[2]}, got {cin}"
+        )
+    for l in range(1, depth):
+        if weights[l].shape[2] != weights[l - 1].shape[3]:
+            raise ValueError(f"channel mismatch between stages {l-1} and {l}")
+
+    t = _pick_tile(h, w, tile)
+    halo = depth * _RADIUS
+    cout = weights[-1].shape[3]
+    relu = [True] * (depth - 1) + [relu_last]
+
+    xp = jnp.pad(x, ((halo, halo), (halo, halo), (0, 0)))
+
+    grid = (h // t, w // t)
+    kernel = functools.partial(
+        _fused_kernel, depth=depth, tile=t, img_h=h, img_w=w, relu=relu
+    )
+
+    in_specs = [pl.BlockSpec(xp.shape, lambda i, j: (0, 0, 0))]
+    for l in range(depth):
+        in_specs.append(pl.BlockSpec(weights[l].shape, lambda i, j: (0, 0, 0, 0)))
+        in_specs.append(pl.BlockSpec(biases[l].shape, lambda i, j: (0,)))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((t, t, cout), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, cout), x.dtype),
+        interpret=interpret,
+    )(xp, *[a for pair in zip(weights, biases) for a in pair])
+    return out

@@ -1,0 +1,47 @@
+"""Pure-jax.lax oracle for the fused conv chain.
+
+This is the ground truth the Pallas kernel (and therefore every AOT artifact
+the Rust coordinator executes) is validated against: an unfused, layer-wise
+chain of SAME-padded 3x3 convolutions with bias and ReLU -- exactly what the
+MLU100 would run with fusion disabled.  DLFusion's central equivalence claim
+("arbitrary auto-fusion patterns that are mathematically equivalent") is
+checked by asserting kernel == ref over randomized shapes in pytest.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["conv2d_same_ref", "fused_conv_chain_ref"]
+
+
+def conv2d_same_ref(x, w, b, *, apply_relu: bool):
+    """One 3x3/s1/SAME conv + bias (+ReLU) on a single (H, W, C) image."""
+    y = jax.lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=jax.lax.Precision.HIGHEST,
+    )[0]
+    y = y + b.astype(jnp.float32)
+    if apply_relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def fused_conv_chain_ref(x, weights: Sequence, biases: Sequence,
+                         *, relu_last: bool = True):
+    """Layer-wise (unfused) execution of the conv chain."""
+    depth = len(weights)
+    cur = x
+    for l in range(depth):
+        cur = conv2d_same_ref(
+            cur, weights[l], biases[l],
+            apply_relu=(l != depth - 1) or relu_last,
+        )
+    return cur

@@ -1,0 +1,172 @@
+"""Layer-2: the JAX model -- DLFusion fusion blocks as jittable functions.
+
+A *fusion block* is the unit DLFusion's Algorithm 1 produces: a run of
+consecutive conv layers executed as one compiled operator.  This module
+builds the batched forward function for a block (calling the L1 Pallas
+kernel) and for its unfused single-layer counterpart, in the exact
+calling convention the Rust runtime uses:
+
+    fn(x, w_0, b_0, w_1, b_1, ..., w_{d-1}, b_{d-1}) -> (y,)
+
+with ``x: (N, H, W, C_0)``, ``w_l: (3, 3, C_l, C_{l+1})``, ``b_l: (C_{l+1},)``.
+
+Only lowered at build time by ``aot.py``; Python is never on the request
+path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_conv import fused_conv_chain
+from .kernels.ref import fused_conv_chain_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """Static description of one fusion block artifact.
+
+    Mirrors the Rust-side ``runtime::manifest::ArtifactSpec``; serialized into
+    ``artifacts/manifest.json`` by ``aot.py``.
+    """
+
+    name: str
+    batch: int
+    height: int
+    width: int
+    channels: Tuple[int, ...]  # C_0 (input) followed by each stage's C_out
+    tile: int = 16
+    relu_last: bool = True
+    dtype: str = "f32"
+
+    @property
+    def depth(self) -> int:
+        return len(self.channels) - 1
+
+    def input_shapes(self):
+        """Shapes in the artifact's parameter order: x, then (w, b) per stage."""
+        shapes = [(self.batch, self.height, self.width, self.channels[0])]
+        for l in range(self.depth):
+            shapes.append((3, 3, self.channels[l], self.channels[l + 1]))
+            shapes.append((self.channels[l + 1],))
+        return shapes
+
+    def output_shape(self):
+        return (self.batch, self.height, self.width, self.channels[-1])
+
+    def stage_specs(self):
+        """Single-layer BlockSpecs for the unfused execution of this block."""
+        return [
+            BlockSpec(
+                name=f"{self.name}__stage{l}",
+                batch=self.batch,
+                height=self.height,
+                width=self.width,
+                channels=(self.channels[l], self.channels[l + 1]),
+                tile=self.tile,
+                relu_last=True if l != self.depth - 1 else self.relu_last,
+                dtype=self.dtype,
+            )
+            for l in range(self.depth)
+        ]
+
+    def jnp_dtype(self):
+        return {"f32": jnp.float32, "bf16": jnp.bfloat16}[self.dtype]
+
+    def to_json_dict(self):
+        return {
+            "name": self.name,
+            "batch": self.batch,
+            "height": self.height,
+            "width": self.width,
+            "channels": list(self.channels),
+            "tile": self.tile,
+            "relu_last": self.relu_last,
+            "dtype": self.dtype,
+            "depth": self.depth,
+        }
+
+
+def block_forward(spec: BlockSpec, x, *params, use_kernel: bool = True):
+    """Batched fused-block forward.  ``params`` = w_0, b_0, ..., interleaved."""
+    depth = spec.depth
+    weights = tuple(params[2 * l] for l in range(depth))
+    biases = tuple(params[2 * l + 1] for l in range(depth))
+    fn = fused_conv_chain if use_kernel else fused_conv_chain_ref
+
+    def single(img):
+        return fn(img, weights, biases, relu_last=spec.relu_last)
+
+    return (jax.vmap(single)(x),)
+
+
+def make_block_fn(spec: BlockSpec, *, use_kernel: bool = True):
+    """Closure over the spec, suitable for ``jax.jit(...).lower``."""
+    return functools.partial(block_forward, spec, use_kernel=use_kernel)
+
+
+def example_args(spec: BlockSpec):
+    """ShapeDtypeStructs in artifact parameter order, for AOT lowering."""
+    dt = spec.jnp_dtype()
+    return [jax.ShapeDtypeStruct(s, dt) for s in spec.input_shapes()]
+
+
+def random_args(spec: BlockSpec, seed: int = 0):
+    """Concrete random inputs (He-ish scaled) for testing a block."""
+    key = jax.random.PRNGKey(seed)
+    dt = spec.jnp_dtype()
+    args = []
+    for i, shape in enumerate(spec.input_shapes()):
+        key, sub = jax.random.split(key)
+        fan_in = shape[-2] * 9 if len(shape) == 4 else 1  # weights vs biases
+        scale = 1.0 if i == 0 else (2.0 / max(1, fan_in)) ** 0.5
+        args.append((jax.random.normal(sub, shape) * scale).astype(dt))
+    return args
+
+
+# ---------------------------------------------------------------------------
+# The artifact catalog: every HLO program the Rust side may load.
+#
+# Kept deliberately small-channel / small-image so the CPU PJRT client runs
+# them fast; the *performance* numbers of the paper come from the simulator,
+# the artifacts prove mathematical equivalence and exercise the real
+# request path.  For each fused block we also emit its per-stage single
+# convs so the Rust coordinator can execute fused-vs-unfused and compare.
+# ---------------------------------------------------------------------------
+
+CATALOG: Tuple[BlockSpec, ...] = (
+    # Minimal smoke block.
+    BlockSpec("b1_c8_h16", batch=1, height=16, width=16, channels=(8, 8)),
+    # Depth-2 and depth-3 fusion pyramids (the Fig. 7 structure).
+    BlockSpec("b2_c8_h16", batch=1, height=16, width=16, channels=(8, 8, 8)),
+    BlockSpec("b3_c8_h16", batch=1, height=16, width=16, channels=(8, 8, 8, 8)),
+    # Channel-growing block, as in VGG-ish stages.
+    BlockSpec("b2_c4_c8_c16_h16", batch=1, height=16, width=16, channels=(4, 8, 16)),
+    # The e2e driver's "realistic" block: larger image, batch 2.
+    BlockSpec("b2_c16_h32", batch=2, height=32, width=32, channels=(16, 16, 16)),
+    # Depth-4: deepest fusion the e2e mini-net uses.
+    BlockSpec("b4_c8_h16", batch=1, height=16, width=16, channels=(8, 8, 8, 8, 8)),
+)
+
+
+def catalog_with_stages(catalog: Sequence[BlockSpec] = CATALOG):
+    """All artifacts to emit: each fused block plus its unfused stages.
+
+    Returns (all_specs, pairs) where pairs maps fused name -> stage names.
+    """
+    seen = {}
+    pairs = {}
+    for spec in catalog:
+        seen[spec.name] = spec
+        stage_names = []
+        if spec.depth > 1:
+            for st in spec.stage_specs():
+                seen.setdefault(st.name, st)
+                stage_names.append(st.name)
+        pairs[spec.name] = stage_names
+    return list(seen.values()), pairs

@@ -1,0 +1,177 @@
+"""L1 correctness: the Pallas fused-conv kernel vs the pure-lax oracle.
+
+This is the core correctness signal for the whole stack: every HLO artifact
+the Rust coordinator executes embeds this kernel, so kernel == ref here means
+fused execution on the request path is mathematically equivalent to unfused
+layer-wise execution -- DLFusion's foundational claim.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_conv import fused_conv_chain, conv_stage_tile, KERNEL_SIZE
+from compile.kernels.ref import fused_conv_chain_ref, conv2d_same_ref
+
+
+def make_chain(key, depth, channels, h, w, dtype=jnp.float32):
+    """Random image + weights/biases for a depth-d chain."""
+    if isinstance(channels, int):
+        channels = [channels] * (depth + 1)
+    assert len(channels) == depth + 1
+    keys = jax.random.split(key, 2 * depth + 1)
+    x = jax.random.normal(keys[0], (h, w, channels[0])).astype(dtype)
+    ws, bs = [], []
+    for l in range(depth):
+        ws.append(
+            (jax.random.normal(keys[2 * l + 1], (3, 3, channels[l], channels[l + 1]))
+             * 0.3).astype(dtype))
+        bs.append((jax.random.normal(keys[2 * l + 2], (channels[l + 1],)) * 0.1)
+                  .astype(dtype))
+    return x, ws, bs
+
+
+def assert_matches(x, ws, bs, relu_last=True, tile=None, tol=1e-4):
+    got = fused_conv_chain(x, tuple(ws), tuple(bs), tile=tile, relu_last=relu_last)
+    want = fused_conv_chain_ref(x, ws, bs, relu_last=relu_last)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+class TestSingleStage:
+    def test_depth1_matches_ref(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(0), 1, 8, 16, 16)
+        assert_matches(x, ws, bs)
+
+    def test_depth1_no_relu(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(1), 1, 8, 16, 16)
+        assert_matches(x, ws, bs, relu_last=False)
+
+    def test_conv_stage_tile_valid_conv(self):
+        """The in-kernel stage is a VALID conv: compare against lax directly."""
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (10, 10, 4))
+        w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, 4, 6)) * 0.3
+        b = jnp.zeros((6,))
+        got = conv_stage_tile(x, w, b, apply_relu=False)
+        want = jax.lax.conv_general_dilated(
+            x[None], w, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_nonsquare_image(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(4), 1, 4, 16, 24)
+        assert_matches(x, ws, bs)
+
+    def test_single_channel(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(5), 1, 1, 8, 8)
+        assert_matches(x, ws, bs)
+
+
+class TestFusedChain:
+    @pytest.mark.parametrize("depth", [2, 3, 4])
+    def test_depth_matches_ref(self, depth):
+        x, ws, bs = make_chain(jax.random.PRNGKey(10 + depth), depth, 8, 16, 16)
+        assert_matches(x, ws, bs)
+
+    def test_channel_growth(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(20), 3, [4, 8, 16, 8], 16, 16)
+        assert_matches(x, ws, bs)
+
+    def test_border_masking_is_exact(self):
+        """The halo overhang must be re-zeroed between stages: feed an image
+        whose border pixels dominate so any masking bug explodes."""
+        x, ws, bs = make_chain(jax.random.PRNGKey(21), 3, 4, 12, 12)
+        x = x.at[0, :, :].set(100.0).at[-1, :, :].set(-100.0)
+        x = x.at[:, 0, :].set(50.0).at[:, -1, :].set(-50.0)
+        assert_matches(x, ws, bs, tol=1e-3)
+
+    def test_tile_smaller_than_halo(self):
+        # tile=4 with depth=4 -> halo (4) >= tile: stresses window arithmetic.
+        x, ws, bs = make_chain(jax.random.PRNGKey(22), 4, 4, 8, 8)
+        assert_matches(x, ws, bs, tile=4, tol=1e-3)
+
+    @pytest.mark.parametrize("tile", [2, 4, 8, 16])
+    def test_tile_invariance(self, tile):
+        """All tile sizes must produce the identical function."""
+        x, ws, bs = make_chain(jax.random.PRNGKey(23), 2, 6, 16, 16)
+        assert_matches(x, ws, bs, tile=tile)
+
+    def test_no_relu_last_negative_outputs_survive(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(24), 2, 4, 8, 8)
+        got = fused_conv_chain(x, tuple(ws), tuple(bs), relu_last=False)
+        assert np.asarray(got).min() < 0.0
+
+    def test_zero_input_gives_bias_cascade(self):
+        """x == 0 -> stage0 output is relu(b0) everywhere in the interior."""
+        depth = 2
+        x, ws, bs = make_chain(jax.random.PRNGKey(25), depth, 4, 12, 12)
+        x = jnp.zeros_like(x)
+        assert_matches(x, ws, bs)
+
+    def test_bfloat16(self):
+        x, ws, bs = make_chain(jax.random.PRNGKey(26), 2, 8, 16, 16,
+                               dtype=jnp.bfloat16)
+        got = fused_conv_chain(x, tuple(ws), tuple(bs))
+        want = fused_conv_chain_ref(x, ws, bs)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=5e-2, atol=5e-2)
+
+
+class TestValidation:
+    def test_empty_chain_rejected(self):
+        x = jnp.zeros((8, 8, 4))
+        with pytest.raises(ValueError, match="at least one"):
+            fused_conv_chain(x, (), ())
+
+    def test_channel_mismatch_rejected(self):
+        x = jnp.zeros((8, 8, 4))
+        w0 = jnp.zeros((3, 3, 4, 8))
+        w1 = jnp.zeros((3, 3, 4, 8))  # expects 8 in
+        b = jnp.zeros((8,))
+        with pytest.raises(ValueError, match="channel mismatch"):
+            fused_conv_chain(x, (w0, w1), (b, b))
+
+    def test_input_channel_mismatch_rejected(self):
+        x = jnp.zeros((8, 8, 3))
+        w0 = jnp.zeros((3, 3, 4, 8))
+        with pytest.raises(ValueError, match="C_in"):
+            fused_conv_chain(x, (w0,), (jnp.zeros((8,)),))
+
+    def test_weight_bias_arity_mismatch_rejected(self):
+        x = jnp.zeros((8, 8, 4))
+        w0 = jnp.zeros((3, 3, 4, 8))
+        with pytest.raises(ValueError, match="mismatch"):
+            fused_conv_chain(x, (w0,), ())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    depth=st.integers(1, 3),
+    c0=st.integers(1, 6),
+    c1=st.integers(1, 6),
+    h=st.sampled_from([6, 8, 12]),
+    w=st.sampled_from([6, 8, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_kernel_vs_ref(depth, c0, c1, h, w, seed):
+    """Randomized sweep of shapes/depths: kernel == oracle everywhere."""
+    channels = [c0] + [c1] * depth
+    x, ws, bs = make_chain(jax.random.PRNGKey(seed), depth, channels, h, w)
+    assert_matches(x, ws, bs, tol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    relu_last=st.booleans(),
+    tile=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_tile_and_relu(relu_last, tile, seed):
+    x, ws, bs = make_chain(jax.random.PRNGKey(seed), 2, 4, 8, 8)
+    assert_matches(x, ws, bs, relu_last=relu_last, tile=tile, tol=5e-4)

@@ -1,0 +1,125 @@
+"""L2 correctness: fusion-block forward functions, catalog, and shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.model import (
+    BlockSpec, CATALOG, block_forward, catalog_with_stages, example_args,
+    make_block_fn, random_args,
+)
+
+
+SMALL = BlockSpec("t_b2", batch=2, height=8, width=8, channels=(4, 6, 4))
+
+
+class TestBlockSpec:
+    def test_depth(self):
+        assert SMALL.depth == 2
+
+    def test_input_shapes_order(self):
+        shapes = SMALL.input_shapes()
+        assert shapes[0] == (2, 8, 8, 4)          # x
+        assert shapes[1] == (3, 3, 4, 6)          # w0
+        assert shapes[2] == (6,)                  # b0
+        assert shapes[3] == (3, 3, 6, 4)          # w1
+        assert shapes[4] == (4,)                  # b1
+
+    def test_output_shape(self):
+        assert SMALL.output_shape() == (2, 8, 8, 4)
+
+    def test_stage_specs_chain_channels(self):
+        stages = SMALL.stage_specs()
+        assert [s.channels for s in stages] == [(4, 6), (6, 4)]
+        assert all(s.batch == 2 and s.height == 8 for s in stages)
+
+    def test_stage_specs_relu_last_propagates(self):
+        spec = BlockSpec("t", batch=1, height=8, width=8,
+                         channels=(4, 4, 4), relu_last=False)
+        stages = spec.stage_specs()
+        assert stages[0].relu_last is True
+        assert stages[1].relu_last is False
+
+    def test_json_dict_roundtrip_fields(self):
+        d = SMALL.to_json_dict()
+        assert d["channels"] == [4, 6, 4]
+        assert d["depth"] == 2
+        assert d["dtype"] == "f32"
+
+
+class TestForward:
+    def test_batched_forward_shape(self):
+        args = random_args(SMALL, seed=1)
+        (y,) = block_forward(SMALL, *args)
+        assert y.shape == SMALL.output_shape()
+
+    def test_kernel_vs_ref_path(self):
+        args = random_args(SMALL, seed=2)
+        (yk,) = block_forward(SMALL, *args, use_kernel=True)
+        (yr,) = block_forward(SMALL, *args, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_fused_equals_stagewise(self):
+        """Running the fused block == feeding stages one at a time.
+
+        This is the property the Rust coordinator checks over PJRT; assert it
+        in-process first.
+        """
+        args = random_args(SMALL, seed=3)
+        (fused,) = block_forward(SMALL, *args)
+        x = args[0]
+        cur = x
+        for i, st in enumerate(SMALL.stage_specs()):
+            (cur,) = block_forward(st, cur, args[1 + 2 * i], args[2 + 2 * i])
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(cur),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_example_args_match_random_args_shapes(self):
+        ex = example_args(SMALL)
+        rnd = random_args(SMALL)
+        assert [tuple(a.shape) for a in ex] == [tuple(a.shape) for a in rnd]
+
+
+class TestCatalog:
+    def test_catalog_names_unique(self):
+        names = [s.name for s in CATALOG]
+        assert len(names) == len(set(names))
+
+    def test_catalog_tile_divides_image(self):
+        for s in CATALOG:
+            assert s.height % min(s.tile, s.height) == 0
+
+    def test_catalog_with_stages_covers_fused(self):
+        specs, pairs = catalog_with_stages()
+        names = {s.name for s in specs}
+        for fused, stages in pairs.items():
+            assert fused in names
+            for st in stages:
+                assert st in names
+
+    def test_pairs_empty_for_depth1(self):
+        _, pairs = catalog_with_stages()
+        assert pairs["b1_c8_h16"] == []
+
+    def test_pairs_depth_matches(self):
+        specs, pairs = catalog_with_stages()
+        by_name = {s.name: s for s in specs}
+        for fused, stages in pairs.items():
+            if stages:
+                assert len(stages) == by_name[fused].depth
+
+    def test_stage_channels_compose(self):
+        specs, pairs = catalog_with_stages()
+        by_name = {s.name: s for s in specs}
+        for fused, stages in pairs.items():
+            if not stages:
+                continue
+            f = by_name[fused]
+            chain = [by_name[s] for s in stages]
+            assert chain[0].channels[0] == f.channels[0]
+            assert chain[-1].channels[-1] == f.channels[-1]
+            for a, b in zip(chain, chain[1:]):
+                assert a.channels[-1] == b.channels[0]

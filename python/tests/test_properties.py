@@ -1,0 +1,97 @@
+"""Mathematical properties of the fused-conv computation (hypothesis).
+
+Beyond pointwise kernel==oracle agreement (test_kernel.py), these pin the
+algebraic structure the fusion equivalence rests on: linearity of the conv
+stage, locality (receptive field), and composition depth.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_conv import fused_conv_chain
+from compile.kernels.ref import conv2d_same_ref, fused_conv_chain_ref
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+def chain(key, depth, c, h):
+    ks = jax.random.split(key, 2 * depth + 1)
+    x = rand(ks[0], (h, h, c))
+    ws = [rand(ks[2 * i + 1], (3, 3, c, c), 0.3) for i in range(depth)]
+    bs = [rand(ks[2 * i + 2], (c,), 0.1) for i in range(depth)]
+    return x, ws, bs
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv_stage_is_linear_without_relu(seed):
+    """conv(a*x + b*y) == a*conv(x) + b*conv(y) (bias cancelled)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (8, 8, 4))
+    y = rand(k2, (8, 8, 4))
+    w = rand(k3, (3, 3, 4, 4), 0.3)
+    zero_b = jnp.zeros((4,))
+    lhs = conv2d_same_ref(2.0 * x + 0.5 * y, w, zero_b, apply_relu=False)
+    rhs = (2.0 * conv2d_same_ref(x, w, zero_b, apply_relu=False)
+           + 0.5 * conv2d_same_ref(y, w, zero_b, apply_relu=False))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 3))
+def test_receptive_field_locality(seed, depth):
+    """Perturbing one pixel only changes outputs within `depth` pixels —
+    the locality that makes tile-wise fusion with finite halos possible."""
+    key = jax.random.PRNGKey(seed)
+    x, ws, bs = chain(key, depth, 3, 12)
+    y0 = np.asarray(fused_conv_chain(x, tuple(ws), tuple(bs)))
+    x2 = x.at[6, 6, 0].add(3.0)
+    y1 = np.asarray(fused_conv_chain(x2, tuple(ws), tuple(bs)))
+    diff = np.abs(y1 - y0).sum(axis=-1)
+    affected = np.argwhere(diff > 1e-6)
+    if affected.size:
+        d = np.abs(affected - np.array([6, 6])).max()
+        assert d <= depth, f"change leaked {d} pixels for depth {depth}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_relu_output_nonnegative(seed):
+    key = jax.random.PRNGKey(seed)
+    x, ws, bs = chain(key, 2, 4, 8)
+    y = np.asarray(fused_conv_chain(x, tuple(ws), tuple(bs), relu_last=True))
+    assert (y >= 0.0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), split=st.integers(1, 2))
+def test_fusion_composes_at_any_split(seed, split):
+    """chain(d) == chain(split) ∘ chain(d - split): the property Algorithm 1
+    exploits when it places a fusion boundary anywhere."""
+    depth = 3
+    key = jax.random.PRNGKey(seed)
+    x, ws, bs = chain(key, depth, 4, 8)
+    full = fused_conv_chain_ref(x, ws, bs)
+    head = fused_conv_chain_ref(x, ws[:split], bs[:split], relu_last=True)
+    tail = fused_conv_chain_ref(head, ws[split:], bs[split:])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tail),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_translation_equivariance_interior(seed):
+    """Shifting the input shifts the output (away from borders)."""
+    key = jax.random.PRNGKey(seed)
+    x, ws, bs = chain(key, 2, 3, 12)
+    y = np.asarray(fused_conv_chain(x, tuple(ws), tuple(bs)))
+    xs = jnp.roll(x, shift=2, axis=0)
+    ys = np.asarray(fused_conv_chain(xs, tuple(ws), tuple(bs)))
+    # Compare interiors only (borders see different padding).
+    np.testing.assert_allclose(ys[6:10, 4:8], y[4:8, 4:8], rtol=1e-3, atol=1e-3)

@@ -1,0 +1,109 @@
+//! Ablation: sensitivity of DLFusion to the constants Algorithm 1 / Eq. 5
+//! hard-code — `OpCount_critical`, the Eq. 5 weights, the channel
+//! granularity — plus the cost of the oracle's search-space reduction.
+//! (Beyond-paper analysis; DESIGN.md §4 "additional benches".)
+
+use dlfusion::accel::{AcceleratorSpec, Simulator};
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::optimizer::{algorithm, AlgorithmParams};
+use dlfusion::perfmodel::mp_select::MpModel;
+use dlfusion::search;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn geomean_fps(sim: &Simulator, params: &AlgorithmParams) -> f64 {
+    let fps: Vec<f64> = zoo::all_models()
+        .iter()
+        .map(|m| {
+            let s = algorithm::dlfusion_schedule_with(m, &sim.spec, params);
+            sim.run_schedule(m, &s).fps()
+        })
+        .collect();
+    dlfusion::stats::descriptive::geomean(&fps)
+}
+
+fn main() {
+    banner("Ablation", "sensitivity of DLFusion's constants (geomean FPS over the zoo)");
+    let sim = Simulator::mlu100();
+    let base = AlgorithmParams::for_spec(&sim.spec);
+    let base_fps = geomean_fps(&sim, &base);
+
+    // ---- OpCount_critical ----
+    let mut t = Table::new(&["OpCount_critical (GOPs/core)", "geomean FPS", "vs default"])
+        .label_first().with_title("Algorithm 1 threshold");
+    let mut csv = Csv::new(&["knob", "value", "geomean_fps"]);
+    for mult in [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 16.0] {
+        let p = AlgorithmParams { opcount_critical: base.opcount_critical * mult, ..base };
+        let f = geomean_fps(&sim, &p);
+        t.row(vec![format!("{:.2}", p.opcount_critical), format!("{f:.0}"),
+                   format!("{:+.1}%", 100.0 * (f / base_fps - 1.0))]);
+        csv.row_display(&["critical".to_string(), format!("{:.3}", p.opcount_critical),
+                          format!("{f:.1}")]);
+    }
+    println!("{t}");
+
+    // ---- Eq. 5 weights ----
+    let mut t = Table::new(&["(alpha, beta, bias)", "geomean FPS", "vs default"])
+        .label_first().with_title("Eq. 5 weights");
+    for (a, b_, c) in [(0.316, 0.659, 3.0), (0.659, 0.316, 3.0), (0.0, 0.659, 3.0),
+                       (0.316, 0.0, 3.0), (0.316, 0.659, 2.0), (0.316, 0.659, 4.0)] {
+        let p = AlgorithmParams {
+            mp_model: MpModel { alpha: a, beta: b_, bias: c }, ..base
+        };
+        let f = geomean_fps(&sim, &p);
+        t.row(vec![format!("({a}, {b_}, {c})"), format!("{f:.0}"),
+                   format!("{:+.1}%", 100.0 * (f / base_fps - 1.0))]);
+        csv.row_display(&["eq5".to_string(), format!("{a}/{b_}/{c}"), format!("{f:.1}")]);
+    }
+    println!("{t}");
+
+    // ---- channel granularity (hardware what-if) ----
+    let mut t = Table::new(&["granularity", "geomean FPS (DLFusion)"])
+        .label_first().with_title("channel partition granularity");
+    for g in [1usize, 4, 16, 64] {
+        let mut spec = AcceleratorSpec::mlu100();
+        spec.channel_granularity = g;
+        let sim_g = Simulator::new(spec);
+        let p = AlgorithmParams::for_spec(&sim_g.spec);
+        let f = geomean_fps(&sim_g, &p);
+        t.row(vec![g.to_string(), format!("{f:.0}")]);
+        csv.row_display(&["granularity".to_string(), g.to_string(), format!("{f:.1}")]);
+    }
+    println!("{t}");
+
+    // ---- generic stochastic search vs DLFusion (beyond-paper) ----
+    let mut t = Table::new(&["network", "DLFusion FPS", "anneal FPS (2k moves)",
+                             "anneal-from-DLFusion FPS"])
+        .label_first()
+        .with_title("simulated annealing over the unreduced space");
+    for m in [zoo::resnet18(), zoo::alexnet()] {
+        let dlf = algorithm::dlfusion_schedule_with(&m, &sim.spec, &base);
+        let f_dlf = sim.run_schedule(&m, &dlf).fps();
+        let cfg = search::annealing::AnnealConfig::default();
+        let (_, cold_ms) = search::annealing::anneal(&sim, &m, &cfg, None);
+        let (_, warm_ms) = search::annealing::anneal(&sim, &m, &cfg, Some(dlf));
+        t.row(vec![m.name.clone(), format!("{f_dlf:.0}"),
+                   format!("{:.0}", 1000.0 / cold_ms),
+                   format!("{:.0}", 1000.0 / warm_ms)]);
+        csv.row_display(&["annealing".to_string(), m.name.clone(),
+                          format!("{:.3}", (1000.0 / cold_ms) / f_dlf)]);
+    }
+    println!("{t}");
+
+    // ---- oracle reduction cost ----
+    let mut t = Table::new(&["network", "reduced oracle FPS", "full-DP FPS", "reduction cost"])
+        .label_first().with_title("what the paper's search-space reduction gives up");
+    for m in [zoo::resnet18(), zoo::alexnet()] {
+        let (red, _) = search::oracle_schedule(&sim, &m);
+        let (full, _) = search::oracle_schedule_full(&sim, &m);
+        let f_red = sim.run_schedule(&m, &red).fps();
+        let f_full = sim.run_schedule(&m, &full).fps();
+        t.row(vec![m.name.clone(), format!("{f_red:.0}"), format!("{f_full:.0}"),
+                   format!("{:.1}%", 100.0 * (1.0 - f_red / f_full))]);
+        csv.row_display(&["oracle_reduction".to_string(), m.name.clone(),
+                          format!("{:.3}", f_red / f_full)]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "ablation").unwrap();
+}

@@ -1,0 +1,60 @@
+//! Fig. 3 — roofline model vs actual (simulated) performance.
+//!
+//! Regenerates the paper's scatter: for the synthesized conv + FC
+//! microbenchmarks, operation intensity (Eq. 3) vs attainable roofline
+//! GFLOPS and achieved GFLOPS, quantifying the gap that motivates going
+//! beyond the roofline model.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
+use dlfusion::microbench;
+use dlfusion::perfmodel::roofline;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+
+fn main() {
+    banner("Fig. 3", "roofline vs actual performance (conv + FC microbenchmarks)");
+    let sim = Simulator::mlu100();
+    let mut layers = microbench::conv_sweep();
+    layers.extend(microbench::fc_sweep());
+
+    let mut csv = Csv::new(&["layer", "intensity_ops_per_byte", "gops",
+                             "roofline_gflops", "achieved_gflops", "gap_x"]);
+    let mut gaps = Vec::new();
+    for l in &layers {
+        let intensity = l.intensity();
+        let bound = roofline::roofline_gflops(&sim.spec, intensity);
+        let achieved = sim.layer_gflops(l, 32);
+        gaps.push(bound / achieved);
+        csv.row_display(&[
+            l.name.clone(),
+            format!("{intensity:.2}"),
+            format!("{:.4}", l.op_gops()),
+            format!("{bound:.1}"),
+            format!("{achieved:.1}"),
+            format!("{:.2}", bound / achieved),
+        ]);
+    }
+    let path = csv.write_to(BENCH_OUT_DIR, "fig3_roofline").unwrap();
+
+    let mut t = Table::new(&["quantile", "roofline/achieved gap"]).label_first()
+        .with_title("Fig. 3 gap distribution (the paper's motivating observation)");
+    let mut sorted = gaps.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (q, name) in [(10.0, "p10"), (50.0, "p50"), (90.0, "p90")] {
+        let v = dlfusion::stats::descriptive::percentile_sorted(&sorted, q);
+        t.row(vec![name.to_string(), format!("{v:.1}x")]);
+    }
+    println!("{t}");
+    println!("ridge point: {:.0} ops/byte; {} layers swept; CSV -> {}",
+             roofline::ridge_intensity(&sim.spec), layers.len(), path.display());
+    assert!(dlfusion::stats::descriptive::percentile_sorted(&sorted, 50.0) > 1.5,
+            "paper's observation: a significant roofline gap exists");
+
+    // Also time the sweep itself (simulator throughput).
+    let mut b = Bench::new("fig3");
+    b.time("full_sweep", || {
+        layers.iter().map(|l| sim.layer_gflops(l, 32)).sum::<f64>()
+    });
+    b.finish();
+}

@@ -1,0 +1,49 @@
+//! Fig. 4(c) — multi-core performance vs op count.
+//!
+//! The Section II.B.2 experiment: the VGG-19 base conv `{64,64,224x224,3x3}`
+//! with its channel dimension expanded by factors, swept over core counts.
+//! Large-op-count layers prefer many cores; small ones prefer few.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::microbench;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+
+fn main() {
+    banner("Fig. 4(c)", "multi-core GFLOPS vs op count (channel-scaled VGG base conv)");
+    let sim = Simulator::mlu100();
+    let factors = [1usize, 2, 4, 8];
+    let layers = microbench::channel_scaled_series(&factors);
+    let mps = [1usize, 2, 4, 8, 16, 32];
+
+    let mut header = vec!["layer (xfactor)".to_string(), "GOPs".to_string()];
+    header.extend(mps.iter().map(|m| format!("MP={m}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs).label_first()
+        .with_title("Fig. 4(c) achieved GFLOPS by MP");
+    let mut csv = Csv::new(&["factor", "gops", "mp", "gflops", "best"]);
+
+    let mut best_mps = Vec::new();
+    for (f, l) in factors.iter().zip(&layers) {
+        let perfs: Vec<f64> = mps.iter().map(|&m| sim.layer_gflops(l, m)).collect();
+        let best_idx = perfs.iter().enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        best_mps.push(mps[best_idx]);
+        let mut row = vec![format!("x{f}"), format!("{:.1}", l.op_gops())];
+        for (i, p) in perfs.iter().enumerate() {
+            row.push(if i == best_idx { format!("[{p:.0}]") } else { format!("{p:.0}") });
+        }
+        t.row(row);
+        for (&m, &p) in mps.iter().zip(&perfs) {
+            csv.row_display(&[f.to_string(), format!("{:.2}", l.op_gops()),
+                              m.to_string(), format!("{p:.1}"),
+                              (m == mps[best_idx]).to_string()]);
+        }
+    }
+    println!("{t}");
+    println!("optimal MP per factor: {best_mps:?} (paper: grows with op count)");
+    csv.write_to(BENCH_OUT_DIR, "fig4c_multi_core").unwrap();
+    assert!(best_mps.windows(2).all(|w| w[1] >= w[0]),
+            "larger op count must not prefer fewer cores");
+}

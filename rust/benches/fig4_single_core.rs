@@ -1,0 +1,85 @@
+//! Fig. 4(a)/(b) — single-core performance characterization.
+//!
+//! (a) achieved GFLOPS vs op count, with the per-bucket error bars the
+//!     paper attributes to channel variation;
+//! (b) one-factor sweeps: channel vs kernel size vs feature size influence
+//!     with the other parameters fixed.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::graph::layer::ConvSpec;
+use dlfusion::graph::Layer;
+use dlfusion::microbench;
+use dlfusion::stats::Summary;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+
+fn main() {
+    banner("Fig. 4(a)(b)", "single-core GFLOPS vs op count; per-parameter influence");
+    let sim = Simulator::mlu100();
+
+    // ---- (a): bucket the sweep by log10(op count) ----
+    let layers = microbench::conv_sweep();
+    let mut buckets: std::collections::BTreeMap<i64, Vec<f64>> = Default::default();
+    for l in &layers {
+        let b = (l.op_gops().log10() * 2.0).round() as i64; // half-decade bins
+        buckets.entry(b).or_default().push(sim.layer_gflops(l, 1));
+    }
+    let mut t = Table::new(&["op count bin", "mean GFLOPS", "std (error bar)", "n"])
+        .label_first()
+        .with_title("Fig. 4(a) single-core performance vs op count");
+    let mut csv = Csv::new(&["log10_gops_bin", "mean_gflops", "std_gflops", "n"]);
+    let mut means = Vec::new();
+    for (bin, vals) in &buckets {
+        let s = Summary::of(vals);
+        means.push(s.mean);
+        t.row(vec![
+            format!("10^{:.1} GOPs", *bin as f64 / 2.0),
+            format!("{:.1}", s.mean),
+            format!("{:.1}", s.std),
+            s.n.to_string(),
+        ]);
+        csv.row_display(&[*bin as f64 / 2.0, s.mean, s.std, s.n as f64]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig4a_single_core").unwrap();
+    assert!(means.windows(2).all(|w| w[1] >= w[0] * 0.95),
+            "performance rises with op count");
+
+    // ---- (b): one-factor influence ----
+    let base = ConvSpec::same(128, 128, 56, 3);
+    let channel: Vec<Layer> = [16usize, 32, 64, 128, 256, 512].iter()
+        .map(|&c| Layer::conv(format!("ch{c}"), ConvSpec { c_in: c, c_out: c, ..base }))
+        .collect();
+    let kernel: Vec<Layer> = [1usize, 3, 5, 7].iter()
+        .map(|&k| Layer::conv(format!("k{k}"), ConvSpec { k, pad: k / 2, ..base }))
+        .collect();
+    let feature: Vec<Layer> = [14usize, 28, 56, 112].iter()
+        .map(|&h| Layer::conv(format!("f{h}"), ConvSpec { h_in: h, w_in: h, ..base }))
+        .collect();
+
+    let mut t = Table::new(&["factor", "GFLOPS range (min..max)", "spread per op-count decade"])
+        .label_first()
+        .with_title("Fig. 4(b) per-parameter influence (others fixed)");
+    let mut csv = Csv::new(&["factor", "setting", "gops", "gflops"]);
+    for (name, series) in [("channel", &channel), ("kernel", &kernel), ("feature", &feature)] {
+        let perf: Vec<f64> = series.iter().map(|l| sim.layer_gflops(l, 1)).collect();
+        let gops: Vec<f64> = series.iter().map(|l| l.op_gops()).collect();
+        for (l, (&g, &p)) in series.iter().zip(gops.iter().zip(&perf)) {
+            csv.row_display(&[name.to_string(), l.name.clone(),
+                              format!("{g:.4}"), format!("{p:.1}")]);
+        }
+        let (min, max) = (perf.iter().cloned().fold(f64::MAX, f64::min),
+                          perf.iter().cloned().fold(0.0, f64::max));
+        // Normalize spread by how much of it is just op-count change.
+        let decades = (gops.iter().cloned().fold(0.0, f64::max)
+            / gops.iter().cloned().fold(f64::MAX, f64::min)).log10().max(1e-9);
+        t.row(vec![name.to_string(),
+                   format!("{min:.0} .. {max:.0}"),
+                   format!("{:.2}", (max / min).log10() / decades)]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig4b_influence").unwrap();
+    println!("(paper: channel has non-negligible influence; kernel/feature mostly \
+              act through op count)");
+}

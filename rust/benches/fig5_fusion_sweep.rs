@@ -1,0 +1,53 @@
+//! Fig. 5(b) — optimal fusion block size for three synthetic 16-layer CNNs
+//! built from `{64,64,56x56,3x3}`, `{256,256,56x56,3x3}`,
+//! `{512,512,28x28,3x3}` baseline convs. Bigger layers prefer smaller
+//! fusion blocks (redundant halo computation overtakes the launch/fill
+//! amortization sooner).
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::optimizer::Schedule;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    banner("Fig. 5(b)", "optimal fusion block size, three 16-conv stacks");
+    let sim = Simulator::mlu100();
+    let models = zoo::synthetic::fig5b_models(16);
+    let sizes = [1usize, 2, 4, 8, 16];
+
+    let mut header = vec!["stack".to_string()];
+    header.extend(sizes.iter().map(|s| format!("B={s}")));
+    header.push("best".into());
+    let hr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hr).label_first()
+        .with_title("FPS by fusion block size (conv count per block; MP=16)");
+    let mut csv = Csv::new(&["stack", "block_convs", "fps"]);
+
+    let mut bests = Vec::new();
+    for m in &models {
+        // Each conv is followed by a ReLU: block of B convs = 2B layers.
+        let fps: Vec<f64> = sizes.iter()
+            .map(|&bsz| {
+                let sched = Schedule::uniform_blocks(m.num_layers(), 2 * bsz, 16);
+                sim.run_schedule(m, &sched).fps()
+            })
+            .collect();
+        let bi = fps.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        bests.push(sizes[bi]);
+        let mut row = vec![m.name.clone()];
+        row.extend(fps.iter().map(|f| format!("{f:.0}")));
+        row.push(format!("B={}", sizes[bi]));
+        t.row(row);
+        for (&s, &f) in sizes.iter().zip(&fps) {
+            csv.row_display(&[m.name.clone(), s.to_string(), format!("{f:.1}")]);
+        }
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig5b_fusion_sweep").unwrap();
+    println!("optimal block sizes (convs): {bests:?} \
+              (paper: smaller optimal blocks for bigger convs)");
+    assert!(bests[0] >= bests[2],
+            "the 64-ch stack must tolerate at least as deep fusion as the 512-ch stack");
+}

@@ -1,0 +1,48 @@
+//! Fig. 5(a) — optimal uniform MP per network (all layers share one MP,
+//! no fusion). Paper: ResNet-18 peaks at a small MP (4), VGG-19 at a
+//! large one (16).
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::optimizer::Schedule;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    banner("Fig. 5(a)", "optimal uniform MP per network (no fusion)");
+    let sim = Simulator::mlu100();
+    let mps = [1usize, 2, 4, 8, 12, 16, 24, 32];
+
+    let mut header = vec!["network".to_string()];
+    header.extend(mps.iter().map(|m| format!("MP={m}")));
+    header.push("best".into());
+    let hr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hr).label_first().with_title("FPS by uniform MP");
+    let mut csv = Csv::new(&["network", "mp", "fps"]);
+
+    let mut best = std::collections::BTreeMap::new();
+    for m in zoo::all_models() {
+        let fps: Vec<f64> = mps.iter()
+            .map(|&mp| {
+                let r = sim.run_schedule(&m, &Schedule::layerwise(m.num_layers(), mp));
+                r.fps()
+            })
+            .collect();
+        let bi = fps.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        best.insert(m.name.clone(), mps[bi]);
+        let mut row = vec![m.name.clone()];
+        row.extend(fps.iter().map(|f| format!("{f:.0}")));
+        row.push(format!("MP={}", mps[bi]));
+        t.row(row);
+        for (&mp, &f) in mps.iter().zip(&fps) {
+            csv.row_display(&[m.name.clone(), mp.to_string(), format!("{f:.1}")]);
+        }
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig5a_mp_sweep").unwrap();
+    println!("paper: ResNet-18 optimal 4, VGG-19 optimal 16 — measured: \
+              resnet18={} vgg19={}", best["resnet18"], best["vgg19"]);
+    assert!(best["vgg19"] > best["resnet18"],
+            "high-op-count VGG must prefer more cores than ResNet-18");
+}

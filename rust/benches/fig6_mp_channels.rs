@@ -1,0 +1,62 @@
+//! Fig. 6 — why Eq. 5 needs both features.
+//!
+//! (a) same op count, different channel widths -> different optimal MP;
+//! (b) same channels, different op counts -> different optimal MP.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::microbench;
+use dlfusion::perfmodel::mp_select::MpModel;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+
+fn main() {
+    banner("Fig. 6", "optimal MP: fixed op count vs fixed channel sweeps");
+    let sim = Simulator::mlu100();
+    let model = MpModel::default();
+
+    // ---- (a) fixed op count ----
+    let series = microbench::equal_ops_channel_series();
+    let mut t = Table::new(&["channels", "GOPs", "simulator best MP", "Eq.5 MP"])
+        .label_first()
+        .with_title("Fig. 6(a) equal op count, varying channels");
+    let mut csv = Csv::new(&["channels", "gops", "best_mp", "eq5_mp"]);
+    let mut best_a = Vec::new();
+    for (c, l) in &series {
+        let best = sim.best_layer_mp(l);
+        let pred = model.select_layer(&sim.spec, l);
+        best_a.push(best);
+        t.row(vec![c.to_string(), format!("{:.2}", l.op_gops()),
+                   best.to_string(), pred.to_string()]);
+        csv.row_display(&[c.to_string(), format!("{:.3}", l.op_gops()),
+                          best.to_string(), pred.to_string()]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig6a_equal_ops").unwrap();
+    assert!(best_a.first() < best_a.last(),
+            "narrow layers must prefer fewer cores at equal op count");
+
+    // ---- (b) fixed channels ----
+    let series = microbench::fixed_channel_op_series(128);
+    let mut t = Table::new(&["feature size", "GOPs", "simulator best MP", "Eq.5 MP"])
+        .label_first()
+        .with_title("Fig. 6(b) fixed channels (128), varying op count");
+    let mut csv = Csv::new(&["hw", "gops", "best_mp", "eq5_mp"]);
+    let mut best_b = Vec::new();
+    for l in &series {
+        let best = sim.best_layer_mp(l);
+        let pred = model.select_layer(&sim.spec, l);
+        best_b.push(best);
+        t.row(vec![format!("{}x{}", l.input_shape().h, l.input_shape().w),
+                   format!("{:.3}", l.op_gops()),
+                   best.to_string(), pred.to_string()]);
+        csv.row_display(&[l.input_shape().h.to_string(),
+                          format!("{:.4}", l.op_gops()),
+                          best.to_string(), pred.to_string()]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig6b_fixed_channel").unwrap();
+    assert!(best_b.first() < best_b.last(),
+            "op count must move the optimum at fixed channels");
+    println!("(both features are necessary -> the joint Eq. 5 model)");
+}

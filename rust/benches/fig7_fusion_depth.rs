@@ -1,0 +1,70 @@
+//! Fig. 7 — fusion depth trade-off.
+//!
+//! (b) fusing 4 vs 16 layers for Conv1 (1.72 GOPs) and Conv2 (0.43 GOPs):
+//!     big layers lose from deep fusion, small layers win;
+//! (c) speed-up ratio vs cores used for fused blocks, with the critical
+//!     op count shifting down as cores increase.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::graph::Layer;
+use dlfusion::optimizer::Schedule;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    banner("Fig. 7(b)(c)", "fusion depth and core count trade-off");
+    let sim = Simulator::mlu100();
+    let (conv1, conv2) = zoo::synthetic::fig7_convs();
+
+    // ---- (b) 4-layer vs 16-layer fusion, MP=16 ----
+    let mut t = Table::new(&["conv", "GOPs/layer", "B=4 FPS", "B=16 FPS", "winner"])
+        .label_first()
+        .with_title("Fig. 7(b) fusing 4 vs 16 identical layers (MP=16)");
+    let mut csv = Csv::new(&["conv", "gops", "block", "fps"]);
+    let mut winners = Vec::new();
+    for (name, spec) in [("conv1", conv1), ("conv2", conv2)] {
+        let m = zoo::identical_conv_model(name, spec, 16);
+        let fps4 = sim.run_schedule(&m, &Schedule::uniform_blocks(m.num_layers(), 8, 16)).fps();
+        let fps16 = sim.run_schedule(&m, &Schedule::single_block(m.num_layers(), 16)).fps();
+        let g = Layer::conv("x", spec).op_gops();
+        winners.push(if fps16 > fps4 { 16 } else { 4 });
+        t.row(vec![name.into(), format!("{g:.2}"),
+                   format!("{fps4:.0}"), format!("{fps16:.0}"),
+                   format!("B={}", winners.last().unwrap())]);
+        csv.row_display(&[name.to_string(), format!("{g:.3}"), "4".into(), format!("{fps4:.1}")]);
+        csv.row_display(&[name.to_string(), format!("{g:.3}"), "16".into(), format!("{fps16:.1}")]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig7b_fusion_depth").unwrap();
+    assert!(winners[1] >= winners[0],
+            "the smaller conv must tolerate at least as deep fusion");
+
+    // ---- (c) speed-up vs cores for a fused block, and the critical point ----
+    let m = zoo::identical_conv_model("c", conv2, 8);
+    let base = sim.run_schedule(&m, &Schedule::layerwise(m.num_layers(), 1)).total_ms;
+    let mut t = Table::new(&["cores", "fused speed-up vs unfused MP=1",
+                             "per-core computed GOPs"])
+        .label_first()
+        .with_title("Fig. 7(c) fused-block speed-up vs cores (8x conv2)");
+    let mut csv = Csv::new(&["mp", "speedup", "per_core_gops"]);
+    let mut speedups = Vec::new();
+    for mp in [1usize, 2, 4, 8, 16, 32] {
+        let fused = sim.run_schedule(&m, &Schedule::single_block(m.num_layers(), mp));
+        let (computed, _) =
+            dlfusion::accel::fusion::block_redundant_gops(&m.layers, mp);
+        let speedup = base / fused.total_ms;
+        speedups.push(speedup);
+        t.row(vec![mp.to_string(), format!("{speedup:.2}x"),
+                   format!("{:.2}", computed / mp as f64)]);
+        csv.row_display(&[mp.to_string(), format!("{speedup:.3}"),
+                          format!("{:.3}", computed / mp as f64)]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig7c_speedup_vs_cores").unwrap();
+    assert!(speedups.iter().cloned().fold(0.0, f64::max) > speedups[0],
+            "multi-core fusion must beat single-core fusion somewhere");
+    println!("(fusion wins before the critical per-core op count, and more \
+              cores shrink per-core op count while adding redundancy)");
+}

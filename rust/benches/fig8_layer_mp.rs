@@ -1,0 +1,83 @@
+//! Fig. 8 — layer heterogeneity inside real networks.
+//!
+//! (a) per-layer optimal MP across ResNet-18 and VGG-19 (the spread that
+//!     motivates grouping similar-MP layers);
+//! (b) fusing layers with divergent optimal MPs underperforms fusing
+//!     layers that agree.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::graph::layer::ConvSpec;
+use dlfusion::graph::{Layer, LayerKind};
+use dlfusion::perfmodel::mp_select::MpModel;
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    banner("Fig. 8", "per-layer optimal MP and mixed-MP fusion penalty");
+    let sim = Simulator::mlu100();
+    let model = MpModel::default();
+
+    // ---- (a) per-layer MP distribution ----
+    let mut csv = Csv::new(&["network", "layer", "channels", "gops", "eq5_mp"]);
+    let mut t = Table::new(&["network", "MP histogram (mp: count)"])
+        .label_first()
+        .with_title("Fig. 8(a) per-conv-layer MP selected by Eq. 5");
+    for m in [zoo::resnet18(), zoo::vgg19()] {
+        let mut hist: std::collections::BTreeMap<usize, usize> = Default::default();
+        for l in m.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv(_))) {
+            let mp = model.select_layer(&sim.spec, l);
+            *hist.entry(mp).or_default() += 1;
+            csv.row_display(&[m.name.clone(), l.name.clone(),
+                              l.channels().to_string(),
+                              format!("{:.3}", l.op_gops()), mp.to_string()]);
+        }
+        let pretty: Vec<String> =
+            hist.iter().map(|(mp, n)| format!("{mp}:{n}")).collect();
+        t.row(vec![m.name.clone(), pretty.join("  ")]);
+        assert!(hist.len() >= 2, "{}: optimal MP must vary across layers", m.name);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "fig8a_layer_mp").unwrap();
+
+    // ---- (b) mixed-MP fusion penalty ----
+    // Homogeneous block: four layers that all want the same MP.
+    // Mixed block: two layers wanting small MP + two wanting large MP
+    // (constructed per the paper's methodology: pick MPs first, then layer
+    // parameters matching them).
+    let wants_small = ConvSpec::same(16, 16, 112, 3); // narrow -> few cores
+    let wants_large = ConvSpec::same(512, 512, 56, 3); // wide, big -> many
+    let homo_small: Vec<Layer> =
+        (0..4).map(|i| Layer::conv(format!("s{i}"), wants_small)).collect();
+    let homo_large: Vec<Layer> =
+        (0..4).map(|i| Layer::conv(format!("l{i}"), wants_large)).collect();
+    let best_block_ms = |layers: &[Layer]| {
+        (1..=32usize)
+            .filter(|m| m.is_power_of_two())
+            .map(|mp| sim.block_latency_ms(layers, mp))
+            .fold(f64::MAX, f64::min)
+    };
+    // Mixed: interleave small/large (channel chain broken is fine for the
+    // cost model: the simulator prices shapes, not weights).
+    let mixed: Vec<Layer> = vec![
+        homo_small[0].clone(), homo_large[0].clone(),
+        homo_small[1].clone(), homo_large[1].clone(),
+    ];
+    let t_homo = best_block_ms(&homo_small[..2]) + best_block_ms(&homo_large[..2]);
+    let t_mixed = best_block_ms(&mixed);
+    let mut t = Table::new(&["grouping", "latency (ms)"])
+        .label_first()
+        .with_title("Fig. 8(b) fusing agreeing-MP vs divergent-MP layers");
+    t.row(vec!["two homogeneous blocks (MP-matched)".into(), format!("{t_homo:.3}")]);
+    t.row(vec!["one mixed block (single shared MP)".into(), format!("{t_mixed:.3}")]);
+    println!("{t}");
+    let mut csv = Csv::new(&["grouping", "ms"]);
+    csv.row_display(&["homogeneous", &format!("{t_homo:.4}")]);
+    csv.row_display(&["mixed", &format!("{t_mixed:.4}")]);
+    csv.write_to(BENCH_OUT_DIR, "fig8b_mixed_mp").unwrap();
+    assert!(t_mixed > t_homo,
+            "divergent-MP fusion must underperform MP-matched grouping");
+    println!("(grouping layers with similar optimal MP is what Algorithm 1's \
+              avg-MP blocks exploit)");
+}

@@ -1,0 +1,49 @@
+//! L3 hot-path micro-benchmarks (§Perf): the operations on or near the
+//! request path — schedule construction, simulation, plan building, PJRT
+//! execution, and coordinator overhead vs raw execute.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, Bench};
+use dlfusion::coordinator::{plan, Engine};
+use dlfusion::optimizer;
+use dlfusion::runtime::{artifact_dir, Runtime};
+use dlfusion::zoo;
+
+fn main() {
+    banner("§Perf", "L3 hot-path microbenchmarks");
+    let sim = Simulator::mlu100();
+    let resnet = zoo::resnet50();
+
+    let mut b = Bench::new("optimizer").with_iters(3, 30);
+    b.time("algorithm1_resnet50", || optimizer::dlfusion_schedule(&resnet, &sim.spec));
+    let sched = optimizer::dlfusion_schedule(&resnet, &sim.spec);
+    b.time("simulate_resnet50", || sim.run_schedule(&resnet, &sched));
+    b.time("oracle_dp_resnet50", || dlfusion::search::oracle_schedule(&sim, &resnet));
+    b.time("codegen_resnet50", || dlfusion::codegen::generate_cpp(&resnet, &sched));
+    b.finish();
+
+    if !artifact_dir().join("manifest.json").exists() {
+        println!("(artifacts not built; skipping PJRT hot-path section)");
+        return;
+    }
+    let rt = Runtime::open_default().expect("runtime");
+    let model = zoo::mini_cnn();
+    let fused_sched = optimizer::dlfusion_schedule(&model, &sim.spec);
+    let ex_plan = plan::build_plan(&model, &fused_sched, rt.manifest()).unwrap();
+    let mut engine = Engine::new(rt, &model, ex_plan, 7).unwrap();
+    // Warm the executables + get a request tensor.
+    let x = engine.random_input(1);
+    engine.infer(x.clone()).unwrap();
+
+    let mut b = Bench::new("pjrt").with_iters(3, 20);
+    b.time("infer_fused_mini_cnn", || engine.infer(x.clone()).unwrap());
+    b.time("infer_unfused_mini_cnn", || engine.infer_unfused(x.clone()).unwrap());
+    b.time("random_input", || engine.random_input(2));
+    let results = b.finish();
+
+    let fused = results[0].mean_ms();
+    let unfused = results[1].mean_ms();
+    println!("\nfused plan is {:.2}x the unfused per-stage path on PJRT CPU \
+              wall-clock (fewer dispatches + no intermediate materialization)",
+             unfused / fused);
+}

@@ -1,0 +1,91 @@
+//! The per-core efficiency curve: achieved fraction of peak as a function of
+//! the operation count dispatched to the core.
+//!
+//! The paper's single-core characterization (Fig. 4(a), Fig. 3(b)) finds
+//! performance efficiency "largely determined by operation count: the higher
+//! the operation count, the better performance efficiency ... once the
+//! operation count reaches a critical value, the performance will not
+//! increase". We model this with a Michaelis–Menten saturation
+//!
+//! `eta(g) = g / (g + fill)`
+//!
+//! which has exactly the observed shape and a clean physical reading: each
+//! dispatch pays a fixed pipeline-fill cost worth `fill` GOPs, so
+//! `t_compute = (g + fill) / peak` — *strictly monotone* in real work (a
+//! property the simulator-invariant test suite pins down).
+
+use super::spec::AcceleratorSpec;
+
+/// Fraction of per-core peak achieved when a core is dispatched `gops` of
+/// work in one launch.
+pub fn core_efficiency(spec: &AcceleratorSpec, gops: f64) -> f64 {
+    assert!(gops >= 0.0);
+    gops / (gops + spec.fill_gops)
+}
+
+/// Compute time (milliseconds) for one core to retire `gops` in one launch.
+pub fn core_compute_ms(spec: &AcceleratorSpec, gops: f64) -> f64 {
+    assert!(gops >= 0.0);
+    // (g + fill) / peak, in seconds -> ms. peak is GFLOPS = GOP/s.
+    (gops + spec.fill_gops) / spec.peak_gflops_per_core * 1e3
+}
+
+/// Achieved GFLOPS for a single-core dispatch of `gops`.
+pub fn core_achieved_gflops(spec: &AcceleratorSpec, gops: f64) -> f64 {
+    core_efficiency(spec, gops) * spec.peak_gflops_per_core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> AcceleratorSpec {
+        AcceleratorSpec::mlu100()
+    }
+
+    #[test]
+    fn efficiency_monotone_increasing() {
+        let s = spec();
+        let mut last = 0.0;
+        for i in 1..200 {
+            let g = i as f64 * 0.25;
+            let e = core_efficiency(&s, g);
+            assert!(e > last, "eta not monotone at g={g}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn efficiency_saturates_at_critical() {
+        // Per core, 90% of peak at the per-core critical op count; the
+        // chip-wide OpCount_critical of Table I is num_cores times that.
+        let s = spec();
+        let crit = s.opcount_critical_per_core();
+        let e = core_efficiency(&s, crit);
+        assert!((e - 0.9).abs() < 1e-9, "eta(critical) = {e}");
+        assert!(core_efficiency(&s, 10.0 * crit) > 0.98);
+        assert!((s.opcount_critical() - 32.0 * crit).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_time_monotone_in_work() {
+        let s = spec();
+        assert!(core_compute_ms(&s, 2.0) > core_compute_ms(&s, 1.0));
+        assert!(core_compute_ms(&s, 0.001) > core_compute_ms(&s, 0.0) - 1e-12);
+    }
+
+    #[test]
+    fn achieved_gflops_below_peak() {
+        let s = spec();
+        for g in [0.01, 0.1, 1.0, 10.0, 100.0] {
+            let a = core_achieved_gflops(&s, g);
+            assert!(a < s.peak_gflops_per_core);
+            assert!(a > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_work_zero_efficiency() {
+        assert_eq!(core_efficiency(&spec(), 0.0), 0.0);
+    }
+}

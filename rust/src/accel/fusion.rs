@@ -1,0 +1,164 @@
+//! Halo-redundancy accounting for fused blocks (Fig. 7(a)).
+//!
+//! A fused block executes tile-wise: the block's spatial extent is split into
+//! `mp` row bands, and each core carries its band through every layer of the
+//! block with intermediates kept on-chip. Because convolution needs a
+//! neighbourhood, each band must be computed with a *halo* whose height at
+//! layer `l` is the receptive-field reach of all downstream layers in the
+//! block — rows that adjacent cores compute too. That overlap is the
+//! *redundant computation* the paper trades against fusion's benefits: it
+//! grows both with block depth (more downstream radii) and with MP (more
+//! band boundaries), which is exactly the Fig. 7(b)/(c) behaviour.
+//!
+//! With MP = 1 there is a single band and no internal boundary: no redundant
+//! work — matching the paper's note that "using a single core will not
+//! introduce redundant computation".
+
+use crate::graph::Layer;
+
+/// Downstream halo requirement (in rows of each layer's *output*) for every
+/// layer of a fused block.
+///
+/// Walking backward from the block's last layer: `H_last = 0`, and a layer
+/// followed by a layer with kernel radius `r` needs `H_prev = H_next + r`
+/// rows beyond its band.
+///
+/// At spatial-reduction layers (stride > 1, pooling) the runtime *re-tiles*
+/// the fused block: cores synchronize and the band partition restarts at the
+/// reduced resolution, so the halo pyramid resets instead of compounding
+/// through the stride (this is also how fused-layer accelerators bound the
+/// recomputation pyramid — Alwani et al. fuse within a resolution stage).
+pub fn downstream_halos(layers: &[Layer]) -> Vec<usize> {
+    let mut halos = vec![0usize; layers.len()];
+    let mut acc = 0usize;
+    for i in (0..layers.len()).rev() {
+        halos[i] = acc;
+        // Entering layer i from below: its own radius extends the
+        // requirement imposed on whatever precedes it — unless it re-tiles.
+        let stride = match &layers[i].kind {
+            crate::graph::LayerKind::Conv(c) => c.stride,
+            crate::graph::LayerKind::Pool { stride, .. } => *stride,
+            _ => 1,
+        };
+        if stride > 1 {
+            acc = layers[i].halo_radius();
+        } else {
+            acc += layers[i].halo_radius();
+        }
+    }
+    halos
+}
+
+/// Redundancy factor for layer `l` of a fused block at MP = `mp`:
+/// total rows computed across cores divided by the layer's real rows.
+///
+/// Each of the `mp - 1` internal band boundaries adds `2 * halo` overlap
+/// rows, clamped so no core computes more than the full image.
+pub fn layer_redundancy(rows: usize, halo: usize, mp: usize) -> f64 {
+    assert!(rows >= 1);
+    assert!(mp >= 1);
+    if mp == 1 {
+        return 1.0;
+    }
+    let band = (rows as f64 / mp as f64).ceil();
+    // Rows one core computes, clamped to the image.
+    let per_core = (band + 2.0 * halo as f64).min(rows as f64);
+    (per_core * mp as f64) / rows as f64
+}
+
+/// Total redundancy-weighted op count (GOPs) of a fused block at MP = `mp`,
+/// plus the per-layer redundancy factors.
+pub fn block_redundant_gops(layers: &[Layer], mp: usize) -> (f64, Vec<f64>) {
+    let halos = downstream_halos(layers);
+    let mut factors = Vec::with_capacity(layers.len());
+    let mut total = 0.0;
+    for (layer, &halo) in layers.iter().zip(&halos) {
+        let rows = layer.output_shape().h.max(1);
+        let rho = layer_redundancy(rows, halo, mp);
+        factors.push(rho);
+        total += layer.op_gops() * rho;
+    }
+    (total, factors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{ConvSpec, Layer, LayerKind, TensorShape};
+
+    fn conv_chain(n: usize, hw: usize) -> Vec<Layer> {
+        (0..n)
+            .map(|i| Layer::conv(format!("c{i}"), ConvSpec::same(8, 8, hw, 3)))
+            .collect()
+    }
+
+    #[test]
+    fn halos_accumulate_backward() {
+        // Three 3x3 convs: downstream halos are [2, 1, 0].
+        let h = downstream_halos(&conv_chain(3, 56));
+        assert_eq!(h, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn halos_reset_at_stride_boundaries() {
+        let mut layers = conv_chain(1, 56);
+        layers.push(Layer::conv(
+            "s2",
+            ConvSpec { c_in: 8, c_out: 8, h_in: 56, w_in: 56, k: 3, stride: 2, pad: 1, groups: 1 },
+        ));
+        layers.push(Layer::conv("c2", ConvSpec::same(8, 8, 28, 3)));
+        // From the back: acc=0; after c2: acc=1; s2 re-tiles: acc resets to
+        // its own radius (1); halos = [1, 1, 0].
+        assert_eq!(downstream_halos(&layers), vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn relu_layers_are_halo_transparent() {
+        let mut layers = conv_chain(1, 56);
+        layers.push(Layer::new("r", LayerKind::ReLU { shape: TensorShape::new(56, 56, 8) }));
+        layers.push(Layer::conv("c1", ConvSpec::same(8, 8, 56, 3)));
+        assert_eq!(downstream_halos(&layers), vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn single_core_no_redundancy() {
+        assert_eq!(layer_redundancy(56, 10, 1), 1.0);
+        let (g, factors) = block_redundant_gops(&conv_chain(8, 56), 1);
+        let plain: f64 = conv_chain(8, 56).iter().map(|l| l.op_gops()).sum();
+        assert!((g - plain).abs() < 1e-12);
+        assert!(factors.iter().all(|&f| f == 1.0));
+    }
+
+    #[test]
+    fn redundancy_grows_with_mp() {
+        let mut last = 1.0;
+        for mp in [2, 4, 8, 16] {
+            let r = layer_redundancy(56, 2, mp);
+            assert!(r >= last, "mp={mp}");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn redundancy_grows_with_depth() {
+        let (g4, _) = block_redundant_gops(&conv_chain(4, 56), 4);
+        let (g8, _) = block_redundant_gops(&conv_chain(8, 56), 4);
+        let plain4: f64 = conv_chain(4, 56).iter().map(|l| l.op_gops()).sum();
+        let plain8: f64 = conv_chain(8, 56).iter().map(|l| l.op_gops()).sum();
+        // Relative redundancy (weighted) must increase with depth.
+        assert!(g8 / plain8 > g4 / plain4);
+    }
+
+    #[test]
+    fn clamped_at_full_image() {
+        // Halo so large each core computes the whole image: factor == mp.
+        let r = layer_redundancy(10, 50, 4);
+        assert!((r - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_layer_never_redundant() {
+        let (_, factors) = block_redundant_gops(&conv_chain(5, 56), 8);
+        assert_eq!(*factors.last().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Off-chip memory traffic model.
+//!
+//! Layer-wise execution writes every intermediate feature map off-chip and
+//! reads it back for the next layer; a fused block only touches off-chip
+//! memory for the block's input, its final output, and the weights of all
+//! its layers — "the output of a layer can be generated on-chip and
+//! immediately reused" (Section III.B). Fusion's working set must fit the
+//! per-core on-chip buffer; intermediates that overflow spill (both
+//! directions), eroding the benefit.
+
+use super::fusion::downstream_halos;
+use super::spec::AcceleratorSpec;
+use crate::graph::Layer;
+
+/// Off-chip bytes moved by one *unfused* layer (input + output + weights).
+pub fn unfused_layer_bytes(layer: &Layer) -> f64 {
+    layer.input_shape().bytes() + layer.output_shape().bytes() + layer.weight_bytes()
+}
+
+/// Off-chip traffic of a fused block at MP = `mp`, including spills.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockTraffic {
+    /// Block input + final output bytes.
+    pub boundary_bytes: f64,
+    /// Sum of all layer weights in the block.
+    pub weight_bytes: f64,
+    /// Intermediate bytes that exceed on-chip capacity and round-trip.
+    pub spill_bytes: f64,
+}
+
+impl BlockTraffic {
+    pub fn total(&self) -> f64 {
+        self.boundary_bytes + self.weight_bytes + self.spill_bytes
+    }
+}
+
+/// Compute the fused block's off-chip traffic.
+///
+/// Per-core working set at the boundary after layer `l`: the band rows
+/// (`rows/mp + 2*halo`, clamped to the image) times width times channels of
+/// layer `l`'s output, double-buffered (producer + consumer tiles), plus the
+/// next layer's weights. Whatever exceeds `core_buffer_bytes` spills:
+/// that boundary's tensor is charged a full write + read.
+pub fn fused_block_traffic(spec: &AcceleratorSpec, layers: &[Layer], mp: usize) -> BlockTraffic {
+    assert!(!layers.is_empty());
+    let first = &layers[0];
+    let last = layers.last().unwrap();
+    let boundary_bytes = first.input_shape().bytes() + last.output_shape().bytes();
+    let weight_bytes: f64 = layers.iter().map(|l| l.weight_bytes()).sum();
+
+    let halos = downstream_halos(layers);
+    let mut spill_bytes = 0.0;
+    for l in 0..layers.len().saturating_sub(1) {
+        let out = layers[l].output_shape();
+        let rows = out.h.max(1) as f64;
+        let band_rows = (rows / mp as f64).ceil() + 2.0 * halos[l] as f64;
+        let band_rows = band_rows.min(rows);
+        let band_bytes = band_rows * out.w as f64 * out.c as f64
+            * crate::graph::layer::BYTES_PER_ELEM;
+        let next_weights = layers[l + 1].weight_bytes() / mp as f64;
+        // Producer tile + consumer tile + stage weights resident together.
+        let working = 2.0 * band_bytes + next_weights;
+        if working > spec.core_buffer_bytes {
+            // The boundary tensor round-trips off-chip.
+            spill_bytes += 2.0 * out.bytes();
+        }
+    }
+    BlockTraffic { boundary_bytes, weight_bytes, spill_bytes }
+}
+
+/// Transfer time in milliseconds for `bytes` at the spec's bandwidth.
+pub fn transfer_ms(spec: &AcceleratorSpec, bytes: f64) -> f64 {
+    bytes / (spec.mem_bw_gbps * 1e9) * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::ConvSpec;
+
+    fn spec() -> AcceleratorSpec {
+        AcceleratorSpec::mlu100()
+    }
+
+    fn small_chain(n: usize) -> Vec<Layer> {
+        (0..n)
+            .map(|i| Layer::conv(format!("c{i}"), ConvSpec::same(64, 64, 56, 3)))
+            .collect()
+    }
+
+    fn big_chain(n: usize) -> Vec<Layer> {
+        (0..n)
+            .map(|i| Layer::conv(format!("c{i}"), ConvSpec::same(64, 64, 224, 3)))
+            .collect()
+    }
+
+    #[test]
+    fn fusion_saves_intermediate_traffic() {
+        let s = spec();
+        let chain = small_chain(4);
+        let unfused: f64 = chain.iter().map(unfused_layer_bytes).sum();
+        let fused = fused_block_traffic(&s, &chain, 4);
+        assert_eq!(fused.spill_bytes, 0.0, "56x56x64 bands must fit on-chip");
+        assert!(fused.total() < unfused * 0.6,
+                "fused {} vs unfused {unfused}", fused.total());
+    }
+
+    #[test]
+    fn large_maps_spill() {
+        let s = spec();
+        // 224x224x64 fp16 = 6.4 MB per map; a 1-core band is the whole map,
+        // far over the 2 MiB core buffer.
+        let fused = fused_block_traffic(&s, &big_chain(3), 1);
+        assert!(fused.spill_bytes > 0.0);
+    }
+
+    #[test]
+    fn more_cores_shrink_working_set() {
+        let s = spec();
+        let spill_mp1 = fused_block_traffic(&s, &big_chain(3), 1).spill_bytes;
+        let spill_mp32 = fused_block_traffic(&s, &big_chain(3), 32).spill_bytes;
+        assert!(spill_mp32 <= spill_mp1);
+    }
+
+    #[test]
+    fn single_layer_block_boundary_only() {
+        let s = spec();
+        let chain = small_chain(1);
+        let t = fused_block_traffic(&s, &chain, 4);
+        assert_eq!(t.spill_bytes, 0.0);
+        assert!((t.total() - unfused_layer_bytes(&chain[0])).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_time_linear() {
+        let s = spec();
+        let t1 = transfer_ms(&s, 102.4e9); // one second worth
+        assert!((t1 - 1000.0).abs() < 1e-9);
+        assert!((transfer_ms(&s, 51.2e9) - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,27 @@
+//! The accelerator performance-simulator substrate.
+//!
+//! The paper's experiments run on a physical Cambricon MLU100; this module is
+//! the synthetic equivalent (DESIGN.md §2): a multi-core accelerator model
+//! whose observable behaviour — achieved GFLOPS vs operation count, channel-
+//! granular partitioning, fusion halo redundancy, memory round-trips — is
+//! shaped by the same mechanisms the paper characterizes in Sections II–III.
+//! The optimizer and oracle only ever see `(latency, GFLOPS, FPS)` through
+//! [`Simulator`], the same interface a real board would give them.
+//!
+//! - [`spec`]: Table I hardware parameters + the calibration constants;
+//! - [`efficiency`]: the per-core op-count→efficiency saturation curve;
+//! - [`partition`]: channel-granular model-parallel tensor partitioning;
+//! - [`fusion`]: halo-redundancy accounting for fused blocks (Fig. 7(a));
+//! - [`memory`]: off-chip traffic for unfused layers vs fused blocks;
+//! - [`sim`]: the latency model combining the above, [`Simulator`].
+
+pub mod spec;
+pub mod efficiency;
+pub mod partition;
+pub mod fusion;
+pub mod memory;
+pub mod sim;
+pub mod trace;
+
+pub use sim::{BlockPerf, PerfReport, Simulator};
+pub use spec::AcceleratorSpec;

@@ -1,0 +1,130 @@
+//! Channel-granular model-parallel partitioning of a single operator.
+//!
+//! Section IV.A: "the hardware partitions the tensor on channel dimension
+//! with a certain minimal partition size". Requesting MP = m splits the
+//! output-channel axis into `m` chunks of `ceil(C/m)` channels; each chunk is
+//! padded up to the partition granularity `g`, and chunks beyond the channel
+//! count leave their cores idle. This is the mechanism behind Fig. 6(a):
+//! layers with the same op count but fewer channels stop benefiting from
+//! cores earlier, and mis-sized chunks waste work on pad lanes.
+
+use super::spec::AcceleratorSpec;
+
+/// Result of partitioning `channels` across `mp` cores.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Partition {
+    /// Cores that actually received channels.
+    pub active_cores: usize,
+    /// Useful channels in the widest chunk.
+    pub chunk_channels: usize,
+    /// Chunk width after padding to the granularity (what the core computes).
+    pub padded_channels: usize,
+}
+
+impl Partition {
+    /// Fraction of the widest core's computed lanes that are useful.
+    pub fn utilization(&self) -> f64 {
+        self.chunk_channels as f64 / self.padded_channels as f64
+    }
+
+    /// Work multiplier on the critical-path core relative to an ideal
+    /// `channels/mp` split: `padded / ideal`.
+    pub fn work_factor(&self, channels: usize, mp: usize) -> f64 {
+        let ideal = channels as f64 / mp as f64;
+        self.padded_channels as f64 / ideal
+    }
+}
+
+/// Partition `channels` output channels over `mp` cores with the spec's
+/// minimal granularity.
+pub fn partition_channels(spec: &AcceleratorSpec, channels: usize, mp: usize) -> Partition {
+    assert!(mp >= 1 && mp <= spec.num_cores, "MP {mp} out of range");
+    assert!(channels >= 1);
+    let g = spec.channel_granularity;
+    let chunk = channels.div_ceil(mp);
+    let padded = chunk.div_ceil(g) * g;
+    let active = channels.div_ceil(chunk);
+    Partition { active_cores: active, chunk_channels: chunk, padded_channels: padded }
+}
+
+/// Per-core op count (GOPs) on the critical path when a layer of `gops`
+/// total work over `channels` output channels runs at MP = `mp`.
+///
+/// The critical-path core computes `padded_channels` lanes out of
+/// `channels`, i.e. `gops * padded / channels`.
+pub fn per_core_gops(spec: &AcceleratorSpec, gops: f64, channels: usize, mp: usize) -> f64 {
+    let p = partition_channels(spec, channels, mp);
+    gops * p.padded_channels as f64 / channels as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> AcceleratorSpec {
+        AcceleratorSpec::mlu100()
+    }
+
+    #[test]
+    fn exact_split_no_padding() {
+        // 64 channels over 4 cores: 16-channel chunks, granularity-aligned.
+        let p = partition_channels(&spec(), 64, 4);
+        assert_eq!(p.active_cores, 4);
+        assert_eq!(p.chunk_channels, 16);
+        assert_eq!(p.padded_channels, 16);
+        assert_eq!(p.utilization(), 1.0);
+    }
+
+    #[test]
+    fn oversplit_pads() {
+        // 6 channels over 4 cores: 2-channel chunks padded to the
+        // granularity (4).
+        let p = partition_channels(&spec(), 6, 4);
+        assert_eq!(p.chunk_channels, 2);
+        assert_eq!(p.padded_channels, 4);
+        assert_eq!(p.utilization(), 0.5);
+    }
+
+    #[test]
+    fn more_cores_than_channels_idles() {
+        let p = partition_channels(&spec(), 8, 32);
+        assert_eq!(p.chunk_channels, 1);
+        assert_eq!(p.padded_channels, 4);
+        assert_eq!(p.active_cores, 8);
+    }
+
+    #[test]
+    fn per_core_gops_floors_at_granularity() {
+        // Beyond ceil(C/g) useful cores, per-core work stops shrinking:
+        // 64 channels bottom out at 16 partitions of one granule.
+        let s = spec();
+        let g16 = per_core_gops(&s, 1.0, 64, 16);
+        let g32 = per_core_gops(&s, 1.0, 64, 32);
+        assert!((g32 - g16).abs() < 1e-12, "{g32} vs {g16}");
+        let g8 = per_core_gops(&s, 1.0, 64, 8);
+        assert!(g8 > g16, "below the floor, more cores still shrink work");
+    }
+
+    #[test]
+    fn wide_layers_keep_scaling() {
+        let s = spec();
+        let g8 = per_core_gops(&s, 1.0, 512, 8);
+        let g32 = per_core_gops(&s, 1.0, 512, 32);
+        assert!(g32 < g8 * 0.3);
+    }
+
+    #[test]
+    fn work_factor_one_when_aligned() {
+        let s = spec();
+        let p = partition_channels(&s, 512, 32);
+        assert!((p.work_factor(512, 32) - 1.0).abs() < 1e-12);
+        let p2 = partition_channels(&s, 64, 32);
+        assert!(p2.work_factor(64, 32) > 1.9); // 4 padded vs 2 ideal
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn zero_mp_rejected() {
+        partition_channels(&spec(), 64, 0);
+    }
+}

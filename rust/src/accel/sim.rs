@@ -1,0 +1,398 @@
+//! The latency model: single operators, fused blocks, and whole schedules.
+//!
+//! Latency of one compiled operator / fused block at MP = m:
+//!
+//! ```text
+//! t = max(t_compute, t_mem) + t_launch + m * t_sync
+//! t_compute = (g_core + fill) / peak_core          [+ per-layer issue cost]
+//! t_mem     = traffic / BW
+//! ```
+//!
+//! `g_core` is the critical-path core's op count: channel-partitioned (with
+//! granularity padding) for single operators, spatial-band partitioned (with
+//! halo redundancy) for fused blocks. `max(compute, mem)` models the
+//! double-buffered DMA overlap the CNML runtime performs.
+
+use super::efficiency;
+use super::fusion;
+use super::memory;
+use super::partition;
+use super::spec::AcceleratorSpec;
+use crate::graph::{Layer, Model};
+use crate::optimizer::schedule::Schedule;
+
+/// Per-block outcome inside a [`PerfReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPerf {
+    /// Layer index range `[start, end)` in the model.
+    pub start: usize,
+    pub end: usize,
+    pub mp: usize,
+    pub latency_ms: f64,
+    /// Useful (non-redundant) op count, GOPs.
+    pub gops: f64,
+    /// Redundancy-weighted op count actually computed, GOPs.
+    pub computed_gops: f64,
+    pub fused: bool,
+}
+
+/// Outcome of simulating a schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfReport {
+    pub model_name: String,
+    pub total_ms: f64,
+    pub total_gops: f64,
+    pub blocks: Vec<BlockPerf>,
+}
+
+impl PerfReport {
+    /// Frames per second at batch 1 — the paper's Fig. 10 metric.
+    pub fn fps(&self) -> f64 {
+        1000.0 / self.total_ms
+    }
+
+    /// End-to-end achieved GFLOPS (useful ops / time).
+    pub fn achieved_gflops(&self) -> f64 {
+        self.total_gops / (self.total_ms / 1e3)
+    }
+
+    /// Total redundant op count introduced by fusion, GOPs.
+    pub fn redundant_gops(&self) -> f64 {
+        self.blocks
+            .iter()
+            .map(|b| b.computed_gops - b.gops)
+            .sum()
+    }
+}
+
+/// The accelerator simulator (see module docs and DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub spec: AcceleratorSpec,
+}
+
+impl Simulator {
+    pub fn new(spec: AcceleratorSpec) -> Self {
+        Simulator { spec }
+    }
+
+    pub fn mlu100() -> Self {
+        Simulator::new(AcceleratorSpec::mlu100())
+    }
+
+    /// Latency (ms) of one *unfused* operator at MP = `mp`
+    /// (channel-partitioned, Section IV.A).
+    pub fn layer_latency_ms(&self, layer: &Layer, mp: usize) -> f64 {
+        let s = &self.spec;
+        let gops = layer.op_gops();
+        let channels = layer.channels().max(1);
+        let g_core = partition::per_core_gops(s, gops, channels, mp);
+        let t_compute = efficiency::core_compute_ms(s, g_core);
+        let t_mem = memory::transfer_ms(s, memory::unfused_layer_bytes(layer));
+        t_compute.max(t_mem) + self.overheads_ms(mp)
+    }
+
+    /// Latency (ms) of a fused block of consecutive layers at MP = `mp`
+    /// (spatial-band partitioned with halo redundancy, Section IV.B).
+    ///
+    /// A one-layer block is just the operator compiled alone and takes the
+    /// unfused path.
+    pub fn block_latency_ms(&self, layers: &[Layer], mp: usize) -> f64 {
+        assert!(!layers.is_empty(), "empty fusion block");
+        if layers.len() == 1 {
+            return self.layer_latency_ms(&layers[0], mp);
+        }
+        let s = &self.spec;
+        let (computed_gops, _) = fusion::block_redundant_gops(layers, mp);
+        let g_core = computed_gops / mp as f64;
+        let t_compute = efficiency::core_compute_ms(s, g_core)
+            + s.fused_layer_us * layers.len() as f64 / 1e3;
+        let traffic = memory::fused_block_traffic(s, layers, mp);
+        let t_mem = memory::transfer_ms(s, traffic.total());
+        // Every spatial-reduction layer inside the block re-tiles the band
+        // partition (see fusion::downstream_halos): a full multi-core
+        // barrier + data redistribution, charged per participating core.
+        let barriers = layers
+            .iter()
+            .filter(|l| match &l.kind {
+                crate::graph::LayerKind::Conv(c) => c.stride > 1,
+                crate::graph::LayerKind::Pool { stride, .. } => *stride > 1,
+                _ => false,
+            })
+            .count();
+        let t_retile = s.sync_us_per_core * mp as f64 * barriers as f64 / 1e3;
+        t_compute.max(t_mem) + t_retile + self.overheads_ms(mp)
+    }
+
+    fn overheads_ms(&self, mp: usize) -> f64 {
+        (self.spec.launch_overhead_us + self.spec.sync_us_per_core * mp as f64) / 1e3
+    }
+
+    /// Evaluate a fused block's latency for *many* MP settings at once.
+    ///
+    /// Hot path of the brute-force oracle's DP (§Perf): the per-layer
+    /// quantities that don't depend on MP — downstream halos, op counts,
+    /// output geometry, weight bytes — are computed once per candidate
+    /// block instead of once per (block, MP) pair. Identical results to
+    /// calling [`Self::block_latency_ms`] per MP (pinned by a unit test).
+    pub fn block_latency_ms_multi(&self, layers: &[Layer], mps: &[usize]) -> Vec<f64> {
+        assert!(!layers.is_empty());
+        if layers.len() == 1 {
+            return mps.iter().map(|&m| self.layer_latency_ms(&layers[0], m)).collect();
+        }
+        let s = &self.spec;
+        let halos = fusion::downstream_halos(layers);
+        // Per-layer MP-independent facts.
+        struct LayerFacts {
+            gops: f64,
+            rows: f64,
+            halo: f64,
+            out_row_bytes: f64,
+            out_bytes: f64,
+            next_weights: f64,
+        }
+        let facts: Vec<LayerFacts> = layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let out = l.output_shape();
+                LayerFacts {
+                    gops: l.op_gops(),
+                    rows: out.h.max(1) as f64,
+                    halo: halos[i] as f64,
+                    out_row_bytes: out.w as f64 * out.c as f64
+                        * crate::graph::layer::BYTES_PER_ELEM,
+                    out_bytes: out.bytes(),
+                    next_weights: layers.get(i + 1).map_or(0.0, |n| n.weight_bytes()),
+                }
+            })
+            .collect();
+        let boundary = layers[0].input_shape().bytes()
+            + layers.last().unwrap().output_shape().bytes();
+        let weight_bytes: f64 = layers.iter().map(|l| l.weight_bytes()).sum();
+        let barriers = layers
+            .iter()
+            .filter(|l| match &l.kind {
+                crate::graph::LayerKind::Conv(c) => c.stride > 1,
+                crate::graph::LayerKind::Pool { stride, .. } => *stride > 1,
+                _ => false,
+            })
+            .count() as f64;
+        let t_issue = s.fused_layer_us * layers.len() as f64 / 1e3;
+
+        mps.iter()
+            .map(|&mp| {
+                let mpf = mp as f64;
+                let mut computed = 0.0;
+                let mut spill = 0.0;
+                for (i, f) in facts.iter().enumerate() {
+                    // Redundancy (fusion::layer_redundancy inlined on facts).
+                    let rho = if mp == 1 {
+                        1.0
+                    } else {
+                        let band = (f.rows / mpf).ceil();
+                        let per_core = (band + 2.0 * f.halo).min(f.rows);
+                        per_core * mpf / f.rows
+                    };
+                    computed += f.gops * rho;
+                    // Spill check (memory::fused_block_traffic inlined).
+                    if i + 1 < facts.len() {
+                        let band_rows =
+                            ((f.rows / mpf).ceil() + 2.0 * f.halo).min(f.rows);
+                        let working = 2.0 * band_rows * f.out_row_bytes
+                            + f.next_weights / mpf;
+                        if working > s.core_buffer_bytes {
+                            spill += 2.0 * f.out_bytes;
+                        }
+                    }
+                }
+                let t_compute =
+                    efficiency::core_compute_ms(s, computed / mpf) + t_issue;
+                let t_mem =
+                    memory::transfer_ms(s, boundary + weight_bytes + spill);
+                let t_retile = s.sync_us_per_core * mpf * barriers / 1e3;
+                t_compute.max(t_mem) + t_retile + self.overheads_ms(mp)
+            })
+            .collect()
+    }
+
+    /// Achieved GFLOPS of one unfused operator at MP = `mp` (useful ops only)
+    /// — the y-axis of Figs. 3/4/6.
+    pub fn layer_gflops(&self, layer: &Layer, mp: usize) -> f64 {
+        layer.op_gops() / (self.layer_latency_ms(layer, mp) / 1e3)
+    }
+
+    /// The MP in `1..=num_cores` minimizing a single layer's latency
+    /// (ground truth the Eq. 5 model approximates).
+    pub fn best_layer_mp(&self, layer: &Layer) -> usize {
+        self.spec
+            .mp_range()
+            .min_by(|&a, &b| {
+                self.layer_latency_ms(layer, a)
+                    .total_cmp(&self.layer_latency_ms(layer, b))
+            })
+            .unwrap()
+    }
+
+    /// Simulate a whole schedule over a model. Panics if the schedule does
+    /// not exactly cover the model's layers (use `Schedule::validate`).
+    pub fn run_schedule(&self, model: &Model, schedule: &Schedule) -> PerfReport {
+        schedule
+            .validate(model.num_layers(), self.spec.num_cores)
+            .unwrap_or_else(|e| panic!("invalid schedule for '{}': {e}", model.name));
+        let mut blocks = Vec::with_capacity(schedule.blocks.len());
+        let mut total_ms = 0.0;
+        let mut total_gops = 0.0;
+        for b in &schedule.blocks {
+            let layers = &model.layers[b.start..b.end];
+            let gops: f64 = layers.iter().map(|l| l.op_gops()).sum();
+            let (computed, latency) = if layers.len() == 1 {
+                (gops, self.layer_latency_ms(&layers[0], b.mp))
+            } else {
+                let (c, _) = fusion::block_redundant_gops(layers, b.mp);
+                (c, self.block_latency_ms(layers, b.mp))
+            };
+            total_ms += latency;
+            total_gops += gops;
+            blocks.push(BlockPerf {
+                start: b.start,
+                end: b.end,
+                mp: b.mp,
+                latency_ms: latency,
+                gops,
+                computed_gops: computed,
+                fused: layers.len() > 1,
+            });
+        }
+        PerfReport { model_name: model.name.clone(), total_ms, total_gops, blocks }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::ConvSpec;
+    use crate::optimizer::schedule::Schedule;
+    use crate::zoo;
+
+    fn sim() -> Simulator {
+        Simulator::mlu100()
+    }
+
+    fn conv(c: usize, hw: usize) -> Layer {
+        Layer::conv("c", ConvSpec::same(c, c, hw, 3))
+    }
+
+    #[test]
+    fn latency_positive_and_finite() {
+        let s = sim();
+        for mp in [1, 2, 4, 8, 16, 32] {
+            let t = s.layer_latency_ms(&conv(64, 56), mp);
+            assert!(t.is_finite() && t > 0.0);
+        }
+    }
+
+    #[test]
+    fn big_layers_prefer_more_cores() {
+        // Fig. 4(c): large op count -> larger optimal MP.
+        let s = sim();
+        let small = conv(64, 28); // ~0.06 GOPs
+        let big = conv(512, 56);  // ~14.8 GOPs
+        assert!(s.best_layer_mp(&big) > s.best_layer_mp(&small));
+    }
+
+    #[test]
+    fn channel_caps_useful_mp() {
+        // Fig. 6(a): few channels -> small optimal MP even at high op count.
+        let s = sim();
+        let narrow = Layer::conv("n", ConvSpec::same(16, 16, 224, 3));
+        let wide = Layer::conv("w", ConvSpec::same(256, 256, 56, 3));
+        assert!(s.best_layer_mp(&narrow) < s.best_layer_mp(&wide));
+    }
+
+    #[test]
+    fn fusing_identical_small_layers_helps() {
+        // Fig. 7: fusing low-op-count layers beats layer-wise execution.
+        let s = sim();
+        let layers: Vec<Layer> = (0..4).map(|_| conv(64, 56)).collect();
+        let fused = s.block_latency_ms(&layers, 4);
+        let unfused: f64 = layers.iter().map(|l| s.layer_latency_ms(l, 4)).sum();
+        assert!(fused < unfused, "fused {fused} vs unfused {unfused}");
+    }
+
+    #[test]
+    fn oversized_fusion_hurts_big_layers() {
+        // Fig. 7(b) Conv1 case: fusing many big layers at high MP loses to a
+        // shallower block because of halo redundancy.
+        let s = sim();
+        let (c1, _) = zoo::synthetic::fig7_convs();
+        let big: Vec<Layer> = (0..16).map(|i| Layer::conv(format!("c{i}"), c1)).collect();
+        let t16 = s.block_latency_ms(&big, 32);
+        let t4: f64 = big
+            .chunks(4)
+            .map(|ch| s.block_latency_ms(ch, 32))
+            .sum();
+        assert!(t4 < t16, "4-blocks {t4} vs one 16-block {t16}");
+    }
+
+    #[test]
+    fn single_layer_block_equals_unfused() {
+        let s = sim();
+        let l = conv(128, 56);
+        assert_eq!(s.block_latency_ms(std::slice::from_ref(&l), 8),
+                   s.layer_latency_ms(&l, 8));
+    }
+
+    #[test]
+    fn run_schedule_sums_blocks() {
+        let s = sim();
+        let m = zoo::mini_cnn();
+        let sched = Schedule::uniform_blocks(m.num_layers(), 4, 2);
+        let rep = s.run_schedule(&m, &sched);
+        let sum: f64 = rep.blocks.iter().map(|b| b.latency_ms).sum();
+        assert!((rep.total_ms - sum).abs() < 1e-12);
+        assert!(rep.fps() > 0.0);
+        assert!(rep.achieved_gflops() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid schedule")]
+    fn run_schedule_rejects_gap() {
+        let s = sim();
+        let m = zoo::mini_cnn();
+        let mut sched = Schedule::uniform_blocks(m.num_layers(), 4, 2);
+        sched.blocks.pop();
+        s.run_schedule(&m, &sched);
+    }
+
+    #[test]
+    fn multi_mp_matches_scalar_path() {
+        // The §Perf fast path must be bit-identical to the reference path.
+        let s = sim();
+        let mps = s.spec.reduced_mp_set();
+        for m in [zoo::resnet18(), zoo::vgg19(), zoo::mini_cnn()] {
+            for (start, end) in [(0usize, 3usize), (2, 9), (0, m.num_layers())] {
+                let layers = &m.layers[start..end.min(m.num_layers())];
+                let fast = s.block_latency_ms_multi(layers, &mps);
+                for (&mp, &f) in mps.iter().zip(&fast) {
+                    let slow = s.block_latency_ms(layers, mp);
+                    assert!((f - slow).abs() < 1e-12,
+                            "{} [{start}..{end}] mp={mp}: {f} vs {slow}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn redundant_gops_reported() {
+        let s = sim();
+        let m = zoo::synthetic::identical_conv_model(
+            "t", ConvSpec::same(64, 64, 56, 3), 8);
+        let fused = Schedule::single_block(m.num_layers(), 8);
+        let rep = s.run_schedule(&m, &fused);
+        assert!(rep.redundant_gops() > 0.0);
+        let unfused = Schedule::layerwise(m.num_layers(), 1);
+        let rep2 = s.run_schedule(&m, &unfused);
+        assert_eq!(rep2.redundant_gops(), 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Execution traces: a per-block timeline + utilization breakdown for a
+//! simulated run — the observability layer a deployed compiler ships with
+//! (what a profiler would show on the real board).
+
+use super::sim::{PerfReport, Simulator};
+use crate::graph::Model;
+use crate::optimizer::schedule::Schedule;
+use crate::util::Table;
+
+/// One timeline event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub label: String,
+    pub mp: usize,
+    pub fused: bool,
+    /// Useful GOPs retired.
+    pub gops: f64,
+    /// Redundant (halo) GOPs recomputed.
+    pub redundant_gops: f64,
+}
+
+/// A full simulated-run trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub model_name: String,
+    pub events: Vec<TraceEvent>,
+    pub total_ms: f64,
+}
+
+impl Trace {
+    /// Build from a simulation report.
+    pub fn from_report(model: &Model, report: &PerfReport) -> Trace {
+        let mut events = Vec::with_capacity(report.blocks.len());
+        let mut clock = 0.0;
+        for b in &report.blocks {
+            let label = if b.end - b.start == 1 {
+                model.layers[b.start].name.clone()
+            } else {
+                format!("fused[{}..{}] ({}…{})", b.start, b.end,
+                        model.layers[b.start].name,
+                        model.layers[b.end - 1].name)
+            };
+            events.push(TraceEvent {
+                start_ms: clock,
+                end_ms: clock + b.latency_ms,
+                label,
+                mp: b.mp,
+                fused: b.fused,
+                gops: b.gops,
+                redundant_gops: b.computed_gops - b.gops,
+            });
+            clock += b.latency_ms;
+        }
+        Trace { model_name: model.name.clone(), events, total_ms: clock }
+    }
+
+    /// Convenience: simulate + trace in one call.
+    pub fn capture(sim: &Simulator, model: &Model, schedule: &Schedule) -> Trace {
+        Trace::from_report(model, &sim.run_schedule(model, schedule))
+    }
+
+    /// Fraction of total computed work that is halo redundancy.
+    pub fn redundancy_ratio(&self) -> f64 {
+        let useful: f64 = self.events.iter().map(|e| e.gops).sum();
+        let red: f64 = self.events.iter().map(|e| e.redundant_gops).sum();
+        if useful + red == 0.0 { 0.0 } else { red / (useful + red) }
+    }
+
+    /// Mean effective chip utilization: useful ops / (peak * makespan).
+    pub fn utilization(&self, sim: &Simulator) -> f64 {
+        let useful: f64 = self.events.iter().map(|e| e.gops).sum();
+        useful / (sim.spec.peak_gflops() * self.total_ms / 1e3)
+    }
+
+    /// Render the timeline as a table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["t (ms)", "block", "MP", "GOPs", "halo GOPs", "dur (ms)"])
+            .label_first()
+            .align(1, crate::util::table::Align::Left)
+            .with_title(&format!("trace: {} ({:.3} ms total)", self.model_name, self.total_ms));
+        for e in &self.events {
+            t.row(vec![
+                format!("{:.3}", e.start_ms),
+                e.label.clone(),
+                e.mp.to_string(),
+                format!("{:.3}", e.gops),
+                format!("{:.3}", e.redundant_gops),
+                format!("{:.3}", e.end_ms - e.start_ms),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer;
+    use crate::zoo;
+
+    #[test]
+    fn trace_covers_makespan_contiguously() {
+        let sim = Simulator::mlu100();
+        let m = zoo::resnet18();
+        let sched = optimizer::dlfusion_schedule(&m, &sim.spec);
+        let trace = Trace::capture(&sim, &m, &sched);
+        assert_eq!(trace.events.len(), sched.num_blocks());
+        let mut clock = 0.0;
+        for e in &trace.events {
+            assert!((e.start_ms - clock).abs() < 1e-12);
+            assert!(e.end_ms > e.start_ms);
+            clock = e.end_ms;
+        }
+        assert!((clock - trace.total_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn redundancy_zero_for_layerwise() {
+        let sim = Simulator::mlu100();
+        let m = zoo::alexnet();
+        let sched = optimizer::Schedule::layerwise(m.num_layers(), 1);
+        let trace = Trace::capture(&sim, &m, &sched);
+        assert_eq!(trace.redundancy_ratio(), 0.0);
+    }
+
+    #[test]
+    fn fused_trace_reports_redundancy_and_utilization() {
+        let sim = Simulator::mlu100();
+        let m = zoo::vgg19();
+        let sched = optimizer::dlfusion_schedule(&m, &sim.spec);
+        let trace = Trace::capture(&sim, &m, &sched);
+        assert!(trace.redundancy_ratio() > 0.0);
+        let u = trace.utilization(&sim);
+        assert!(u > 0.0 && u < 1.0, "utilization {u}");
+        let rendered = trace.render();
+        assert!(rendered.contains("fused["));
+        assert!(rendered.contains("trace: vgg19"));
+    }
+
+    #[test]
+    fn better_schedules_have_higher_utilization() {
+        let sim = Simulator::mlu100();
+        let m = zoo::vgg19();
+        let base = Trace::capture(&sim, &m,
+                                  &optimizer::Schedule::layerwise(m.num_layers(), 1));
+        let opt = Trace::capture(&sim, &m,
+                                 &optimizer::dlfusion_schedule(&m, &sim.spec));
+        assert!(opt.utilization(&sim) > base.utilization(&sim));
+    }
+}

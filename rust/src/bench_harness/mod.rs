@@ -1,0 +1,134 @@
+//! Criterion-replacement micro-benchmark harness (offline environment —
+//! see DESIGN.md §2 environment substitutions).
+//!
+//! Each `rust/benches/*.rs` target (built with `harness = false`) uses
+//! [`Bench`] for timed sections and the free functions for the paper-figure
+//! tables it regenerates. Results land on stdout and, for every figure, as
+//! CSV under `bench_out/`.
+
+use std::time::Instant;
+
+use crate::stats::Summary;
+
+/// Default output directory for bench CSVs.
+pub const BENCH_OUT_DIR: &str = "bench_out";
+
+/// Timing result of one benchmarked closure.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, milliseconds.
+    pub summary: Summary,
+    pub iterations: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean
+    }
+
+    /// One-line criterion-style report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.4} ms/iter (median {:.4}, sd {:.4}, n={})",
+            self.name, self.summary.mean, self.summary.median,
+            self.summary.std, self.iterations
+        )
+    }
+}
+
+/// A named group of timed benchmarks.
+pub struct Bench {
+    group: String,
+    warmup_iters: usize,
+    sample_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Honor the harness contract: `cargo bench -- --quick` style knobs
+        // are not needed; defaults keep full runs < ~1 min per target.
+        Bench { group: group.to_string(), warmup_iters: 3, sample_iters: 15,
+                results: Vec::new() }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, samples: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.sample_iters = samples.max(2);
+        self
+    }
+
+    /// Time a closure; the closure's return value is black-boxed so the
+    /// optimizer cannot elide the work.
+    pub fn time<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        self.results.push(BenchResult {
+            name: format!("{}/{}", self.group, name),
+            summary: Summary::of(&samples),
+            iterations: self.sample_iters,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print all accumulated reports.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("\n== timing: {} ==", self.group);
+        for r in &self.results {
+            println!("  {}", r.report());
+        }
+        self.results
+    }
+}
+
+/// `std::hint::black_box` wrapper (stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print the standard bench banner with the paper artifact being
+/// regenerated.
+pub fn banner(figure: &str, what: &str) {
+    println!("================================================================");
+    println!("  DLFusion reproduction — {figure}");
+    println!("  {what}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_produces_sane_stats() {
+        let mut b = Bench::new("test").with_iters(1, 5);
+        let r = b.time("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.summary.mean > 0.0);
+        assert_eq!(r.iterations, 5);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+        assert!(all[0].name.starts_with("test/"));
+    }
+
+    #[test]
+    fn report_contains_name_and_units() {
+        let mut b = Bench::new("g").with_iters(0, 2);
+        let r = b.time("x", || 1 + 1);
+        let rep = r.report();
+        assert!(rep.contains("g/x") && rep.contains("ms/iter"));
+    }
+}

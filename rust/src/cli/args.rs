@@ -1,0 +1,135 @@
+//! Minimal subcommand + flag parser.
+//!
+//! Grammar: `dlfusion <command> [positionals...] [--flag[=value]|--flag value]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+/// Parse failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, ParseError> {
+        let mut it = argv.into_iter().peekable();
+        let command = it
+            .next()
+            .ok_or_else(|| ParseError("missing command (try 'help')".into()))?;
+        let mut args = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err(ParseError("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.flags.insert(flag.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, ParseError> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| ParseError(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, ParseError> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| ParseError(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("optimize resnet18 extra");
+        assert_eq!(a.command, "optimize");
+        assert_eq!(a.positional(0), Some("resnet18"));
+        assert_eq!(a.positional(1), Some("extra"));
+        assert_eq!(a.positional(2), None);
+    }
+
+    #[test]
+    fn flags_with_values() {
+        let a = parse("simulate vgg19 --strategy 6 --out=bench_out");
+        assert_eq!(a.flag("strategy"), Some("6"));
+        assert_eq!(a.flag("out"), Some("bench_out"));
+        assert_eq!(a.flag_usize("strategy").unwrap(), Some(6));
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("run --verify --requests 8");
+        assert!(a.flag_bool("verify"));
+        assert_eq!(a.flag_usize("requests").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("zoo --spec");
+        assert!(a.flag_bool("spec"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --n abc");
+        assert!(a.flag_usize("n").is_err());
+    }
+
+    #[test]
+    fn missing_command_errors() {
+        assert!(Args::parse(Vec::<String>::new()).is_err());
+    }
+}

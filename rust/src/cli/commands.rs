@@ -1,0 +1,274 @@
+//! CLI command implementations.
+
+use super::args::Args;
+use crate::accel::Simulator;
+use crate::codegen;
+use crate::coordinator::{self, driver, equivalence, plan};
+use crate::graph::{format as dlm, Model};
+use crate::optimizer::{self, Strategy};
+use crate::perfmodel;
+use crate::runtime::Runtime;
+use crate::util::units::{fmt_gops, fmt_ms};
+use crate::util::Table;
+use crate::zoo;
+
+pub const HELP: &str = "\
+dlfusion — auto-tuning layer-fusion compiler (DLFusion reproduction)
+
+USAGE:
+    dlfusion <command> [args] [--flags]
+
+COMMANDS:
+    zoo [--spec]                 list built-in models (Table II) / hardware spec
+    optimize <model|file.dlm>    run Algorithm 1, print the schedule
+        [--strategy 1..7] [--critical GOPS]
+    simulate <model|file.dlm>    simulate all seven strategies (Fig. 10 row)
+    codegen <model|file.dlm>     emit CNML-style C++ [--out DIR]
+    characterize                 re-derive OpCount_critical / Eq.5 weights
+    space <n>                    evaluate Eq. 4 search-space size
+    trace <model|file.dlm>       per-block timeline + utilization breakdown
+        [--strategy 1..7]
+    run [--requests N] [--verify] end-to-end PJRT inference on mini_cnn
+    help                         this text
+
+MODELS: resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file)
+";
+
+/// Execute a parsed command line; returns the process exit code.
+pub fn run(args: &Args) -> i32 {
+    let result = match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "zoo" => cmd_zoo(args),
+        "optimize" => cmd_optimize(args),
+        "simulate" => cmd_simulate(args),
+        "codegen" => cmd_codegen(args),
+        "characterize" => cmd_characterize(),
+        "space" => cmd_space(args),
+        "trace" => cmd_trace(args),
+        "run" => cmd_run(args),
+        other => Err(format!("unknown command '{other}' (try 'help')")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn load_model(args: &Args) -> Result<Model, String> {
+    let name = args
+        .positional(0)
+        .ok_or("missing model name or .dlm path")?;
+    if name.ends_with(".dlm") {
+        let text = std::fs::read_to_string(name).map_err(|e| format!("{name}: {e}"))?;
+        dlm::from_dlm(&text)
+    } else {
+        zoo::by_name(name).ok_or_else(|| {
+            format!("unknown model '{name}' (known: {})", zoo::MODEL_NAMES.join(", "))
+        })
+    }
+}
+
+fn cmd_zoo(args: &Args) -> Result<(), String> {
+    if args.flag_bool("spec") {
+        let s = crate::accel::AcceleratorSpec::mlu100();
+        let mut t = Table::new(&["item", "value"]).label_first()
+            .with_title("Table I — hardware specification (simulated)");
+        t.row(vec!["name".into(), s.name.clone()]);
+        t.row(vec!["cores".into(), s.num_cores.to_string()]);
+        t.row(vec!["peak FP16".into(),
+                   format!("{:.0} TFLOPS", s.peak_gflops() / 1000.0)]);
+        t.row(vec!["memory BW".into(), format!("{} GB/s", s.mem_bw_gbps)]);
+        t.row(vec!["memory".into(), format!("{:.0} GiB", s.mem_bytes / (1u64 << 30) as f64)]);
+        t.row(vec!["OpCount_critical".into(), fmt_gops(s.opcount_critical())]);
+        println!("{t}");
+        return Ok(());
+    }
+    let mut t = Table::new(&["network", "total conv op", "avg op", "#conv", "#layers"])
+        .label_first()
+        .with_title("Table II — evaluated networks");
+    for m in zoo::all_models() {
+        let s = m.stats();
+        t.row(vec![
+            m.name.clone(),
+            fmt_gops(s.total_conv_gops),
+            fmt_gops(s.avg_conv_gops),
+            s.num_conv.to_string(),
+            s.num_layers.to_string(),
+        ]);
+    }
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<(), String> {
+    let model = load_model(args)?;
+    let sim = Simulator::mlu100();
+    let strategy = match args.flag_usize("strategy").map_err(|e| e.to_string())? {
+        None => Strategy::DlFusion,
+        Some(i) => Strategy::from_index(i).ok_or(format!("strategy must be 1..=7, got {i}"))?,
+    };
+    let mut params = optimizer::AlgorithmParams::for_spec(&sim.spec);
+    if let Some(c) = args.flag_f64("critical").map_err(|e| e.to_string())? {
+        params.opcount_critical = c;
+    }
+    let sched = optimizer::strategies::strategy_schedule(&sim, &model, strategy, &params);
+    let report = sim.run_schedule(&model, &sched);
+    println!("model:     {}", model.name);
+    println!("strategy:  {} ({})", strategy.index(), strategy.name());
+    println!("schedule:  {}", sched.summary());
+    println!("blocks:    {}", sched.num_blocks());
+    println!("latency:   {}", fmt_ms(report.total_ms));
+    println!("FPS:       {:.1}", report.fps());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let model = load_model(args)?;
+    let sim = Simulator::mlu100();
+    let mut t = Table::new(&["#", "strategy", "blocks", "latency", "FPS", "speedup"])
+        .label_first()
+        .align(1, crate::util::table::Align::Left)
+        .with_title(&format!("Fig. 10 row — {}", model.name));
+    let mut base_fps = None;
+    for st in Strategy::ALL {
+        let (sched, rep) = optimizer::run_strategy(&sim, &model, st);
+        let fps = rep.fps();
+        let base = *base_fps.get_or_insert(fps);
+        t.row(vec![
+            st.index().to_string(),
+            st.name().to_string(),
+            sched.num_blocks().to_string(),
+            fmt_ms(rep.total_ms),
+            format!("{fps:.1}"),
+            format!("{:.2}x", fps / base),
+        ]);
+    }
+    println!("{t}");
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> Result<(), String> {
+    let model = load_model(args)?;
+    let sim = Simulator::mlu100();
+    let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
+    let out = args.flag("out").unwrap_or("generated");
+    std::fs::create_dir_all(out).map_err(|e| e.to_string())?;
+    let cpp_path = format!("{out}/{}_inference.cpp", model.name);
+    std::fs::write(&cpp_path, codegen::generate_cpp(&model, &sched))
+        .map_err(|e| e.to_string())?;
+    let h_path = format!("{out}/cnml_compat.h");
+    std::fs::write(&h_path, codegen::generate_header()).map_err(|e| e.to_string())?;
+    println!("wrote {cpp_path}");
+    println!("wrote {h_path}");
+    println!("schedule: {}", sched.summary());
+    Ok(())
+}
+
+fn cmd_characterize() -> Result<(), String> {
+    let sim = Simulator::mlu100();
+    println!("running microbenchmark characterization on {} ...", sim.spec.name);
+    let sweep = perfmodel::critical::single_core_sweep(&sim, 48);
+    let crit = perfmodel::critical::fit_opcount_critical(&sweep, 0.9);
+    println!("fitted OpCount_critical: {} (paper: 10^1.25 = {})",
+             fmt_gops(crit), fmt_gops(10f64.powf(1.25)));
+
+    let layers = crate::microbench::conv_sweep();
+    let ch = perfmodel::features::characterize(&sim, &layers, 1);
+    let mut t = Table::new(&["feature", "|corr with perf|"])
+        .label_first()
+        .with_title("PCA / correlation characterization (Section II.B)");
+    for (name, assoc) in perfmodel::features::FEATURE_NAMES
+        .iter()
+        .zip(ch.perf_association)
+    {
+        t.row(vec![name.to_string(), format!("{assoc:.3}")]);
+    }
+    println!("{t}");
+
+    let fitted = perfmodel::mp_select::MpModel::fit(&sim, &layers);
+    println!(
+        "fitted Eq.5 weights: alpha={:.3} beta={:.3} bias={:.3} (paper: 0.316 / 0.659)",
+        fitted.alpha, fitted.beta, fitted.bias
+    );
+    Ok(())
+}
+
+fn cmd_space(args: &Args) -> Result<(), String> {
+    let n: usize = args
+        .positional(0)
+        .ok_or("usage: space <num_layers>")?
+        .parse()
+        .map_err(|_| "n must be an integer")?;
+    if n < 2 {
+        return Err("n must be >= 2".into());
+    }
+    let s = optimizer::space::search_space(n, 32);
+    println!("Eq. 4: Space({n}) = {s} joint (fusion, MP) combinations");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let model = load_model(args)?;
+    let sim = Simulator::mlu100();
+    let strategy = match args.flag_usize("strategy").map_err(|e| e.to_string())? {
+        None => Strategy::DlFusion,
+        Some(i) => Strategy::from_index(i).ok_or(format!("strategy must be 1..=7, got {i}"))?,
+    };
+    let params = optimizer::AlgorithmParams::for_spec(&sim.spec);
+    let sched = optimizer::strategies::strategy_schedule(&sim, &model, strategy, &params);
+    let trace = crate::accel::trace::Trace::capture(&sim, &model, &sched);
+    println!("{}", trace.render());
+    println!("redundant compute: {:.1}% of total;  chip utilization: {:.1}%",
+             100.0 * trace.redundancy_ratio(),
+             100.0 * trace.utilization(&sim));
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let requests = args
+        .flag_usize("requests")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(32);
+    let verify = args.flag_bool("verify");
+    let model = zoo::mini_cnn();
+    let sim = Simulator::mlu100();
+    let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
+    println!("model {} schedule {}", model.name, sched.summary());
+
+    let mut rt = Runtime::open_default().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let eq = equivalence::check_fused_vs_unfused(&mut rt, 42).map_err(|e| e.to_string())?;
+    for c in &eq.checks {
+        println!(
+            "  equivalence {}: max|diff| = {:.2e} [{}]",
+            c.artifact, c.max_abs_diff,
+            if c.passed { "ok" } else { "FAIL" }
+        );
+    }
+    if !eq.all_passed() {
+        return Err("fused-vs-unfused equivalence failed".into());
+    }
+
+    let ex_plan = plan::build_plan(&model, &sched, rt.manifest())?;
+    let mut engine =
+        coordinator::Engine::new(rt, &model, ex_plan, 7).map_err(|e| e.to_string())?;
+    let cfg = driver::DriverConfig { requests, verify_each: verify, ..Default::default() };
+    let report = driver::serve(&mut engine, &cfg).map_err(|e| e.to_string())?;
+    println!("served {} requests: {}", requests, report.latency.report());
+    println!("throughput: {:.1} inferences/s (PJRT CPU wall-clock)", report.fps());
+    if verify {
+        println!(
+            "per-request equivalence: {} ok / {} failures",
+            report.counters.get("equivalence_ok"),
+            report.counters.get("equivalence_failures")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Command-line interface (hand-rolled arg parsing — offline environment).
+
+pub mod args;
+pub mod commands;
+
+pub use args::{Args, ParseError};

@@ -1,0 +1,13 @@
+//! CNML-style C++ code generation (paper Fig. 9 / Fig. 2).
+//!
+//! The paper's tool-chain emits C++ that drives the vendor's CNML
+//! operator SDK: create each operator, fuse operators into `cnmlFusionOp_t`
+//! blocks per the optimized schedule, compile each (fusion) operator with
+//! its Model_Parallelism setting, and run the inference session. This module
+//! reproduces that code generator against a `cnml_compat.h` header we ship
+//! (the SDK itself is proprietary — DESIGN.md §2); the emitted program
+//! structure is exactly the paper's Fig. 2 calling convention.
+
+pub mod cnml;
+
+pub use cnml::{generate_cpp, generate_header};

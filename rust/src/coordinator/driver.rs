@@ -1,0 +1,99 @@
+//! The batched request loop: serve inferences through an [`Engine`] and
+//! report wall-clock latency/throughput (the real-path counterpart of the
+//! simulator's FPS numbers).
+
+use std::time::Instant;
+
+use super::executor::Engine;
+use super::metrics::{Counters, LatencyRecorder};
+use crate::runtime::RuntimeError;
+
+/// Request-loop configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DriverConfig {
+    /// Total requests to serve (after warmup).
+    pub requests: usize,
+    /// Warmup inferences (excluded from stats).
+    pub warmup: usize,
+    /// RNG seed for request payloads.
+    pub seed: u64,
+    /// Also run the unfused path each request and verify equivalence.
+    pub verify_each: bool,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig { requests: 64, warmup: 4, seed: 7, verify_each: false }
+    }
+}
+
+/// Request-loop outcome.
+#[derive(Debug, Clone)]
+pub struct DriverReport {
+    pub latency: LatencyRecorder,
+    pub counters: Counters,
+    pub wall_ms: f64,
+}
+
+impl DriverReport {
+    /// Measured throughput (requests / wall-clock second).
+    pub fn fps(&self) -> f64 {
+        self.counters.get("requests") as f64 / (self.wall_ms / 1e3)
+    }
+}
+
+/// Serve `cfg.requests` single-image requests through the engine.
+pub fn serve(engine: &mut Engine, cfg: &DriverConfig) -> Result<DriverReport, RuntimeError> {
+    let mut latency = LatencyRecorder::new();
+    let mut counters = Counters::new();
+
+    for w in 0..cfg.warmup {
+        let x = engine.random_input(cfg.seed ^ (w as u64).wrapping_mul(0x9E37));
+        engine.infer(x)?;
+        counters.inc("warmup");
+    }
+
+    let wall0 = Instant::now();
+    for r in 0..cfg.requests {
+        let x = engine.random_input(cfg.seed.wrapping_add(r as u64));
+        let t0 = Instant::now();
+        let y = engine.infer(x.clone())?;
+        latency.record(t0.elapsed().as_secs_f64() * 1e3);
+        counters.inc("requests");
+        counters.add("convs", engine.plan().num_convs() as u64);
+        if cfg.verify_each {
+            let y2 = engine.infer_unfused(x)?;
+            if y.max_abs_diff(&y2) > super::equivalence::FUSION_TOL {
+                counters.inc("equivalence_failures");
+            } else {
+                counters.inc("equivalence_ok");
+            }
+        }
+        // Keep the output alive so nothing is optimized away.
+        std::hint::black_box(&y);
+    }
+    let wall_ms = wall0.elapsed().as_secs_f64() * 1e3;
+    Ok(DriverReport { latency, counters, wall_ms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = DriverConfig::default();
+        assert!(c.requests > 0);
+        assert!(!c.verify_each);
+    }
+
+    #[test]
+    fn report_fps_math() {
+        let mut latency = LatencyRecorder::new();
+        latency.record(1.0);
+        let mut counters = Counters::new();
+        counters.add("requests", 100);
+        let r = DriverReport { latency, counters, wall_ms: 2000.0 };
+        assert!((r.fps() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,122 @@
+//! Fused-vs-unfused numerical equivalence — DLFusion's foundational claim
+//! ("arbitrary auto-fusion patterns that are mathematically equivalent"),
+//! checked on the real execution path.
+
+use crate::runtime::{Runtime, RuntimeError, Tensor};
+
+/// One equivalence check outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EquivalenceCheck {
+    pub artifact: String,
+    pub max_abs_diff: f32,
+    pub passed: bool,
+}
+
+/// Aggregated equivalence report.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EquivalenceReport {
+    pub checks: Vec<EquivalenceCheck>,
+}
+
+impl EquivalenceReport {
+    pub fn all_passed(&self) -> bool {
+        !self.checks.is_empty() && self.checks.iter().all(|c| c.passed)
+    }
+
+    pub fn worst_diff(&self) -> f32 {
+        self.checks.iter().map(|c| c.max_abs_diff).fold(0.0, f32::max)
+    }
+}
+
+/// Tolerance for fused-vs-unfused f32 comparison. The two paths reassociate
+/// the same dot products, so differences are a few ULPs.
+pub const FUSION_TOL: f32 = 2e-4;
+
+/// For every fused artifact with per-stage counterparts, execute both paths
+/// on identical random inputs and compare.
+pub fn check_fused_vs_unfused(rt: &mut Runtime, seed: u64)
+                              -> Result<EquivalenceReport, RuntimeError> {
+    let names: Vec<String> = rt
+        .manifest()
+        .fused_pairs
+        .iter()
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(k, _)| k.clone())
+        .collect();
+    let mut report = EquivalenceReport::default();
+    for name in names {
+        let inputs = rt.random_inputs(&name, seed)?;
+        let fused = rt.execute(&name, &inputs)?;
+        let unfused = rt.execute_stagewise(&name, &inputs)?;
+        let diff = fused.max_abs_diff(&unfused);
+        report.checks.push(EquivalenceCheck {
+            artifact: name,
+            max_abs_diff: diff,
+            passed: diff <= FUSION_TOL,
+        });
+    }
+    Ok(report)
+}
+
+/// Replay the python-recorded golden vectors: execute each golden artifact
+/// with the exact inputs `aot.py` saved and compare against its saved
+/// output. This pins the whole AOT chain (pallas kernel -> HLO text ->
+/// PJRT) against the build-time reference.
+pub fn check_golden(rt: &mut Runtime, tol: f32) -> Result<EquivalenceReport, RuntimeError> {
+    let golden: Vec<(String, String, usize)> = rt
+        .manifest()
+        .golden
+        .iter()
+        .map(|(k, g)| (k.clone(), g.dir.clone(), g.num_inputs))
+        .collect();
+    let dir = rt.manifest().dir.clone();
+    let mut report = EquivalenceReport::default();
+    for (name, gdir, num_inputs) in golden {
+        let spec = rt
+            .manifest()
+            .get(&name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.clone()))?
+            .clone();
+        let gpath = dir.join(&gdir);
+        let mut inputs = Vec::with_capacity(num_inputs);
+        for (i, shape) in spec.input_shapes.iter().enumerate() {
+            let t = Tensor::from_f32_file(&gpath.join(format!("in{i}.f32")), shape.clone())
+                .map_err(|e| RuntimeError::Io(e.to_string()))?;
+            inputs.push(t);
+        }
+        let want = Tensor::from_f32_file(&gpath.join("out.f32"), spec.output_shape.clone())
+            .map_err(|e| RuntimeError::Io(e.to_string()))?;
+        let got = rt.execute(&name, &inputs)?;
+        let diff = got.max_abs_diff(&want);
+        report.checks.push(EquivalenceCheck {
+            artifact: name,
+            max_abs_diff: diff,
+            passed: diff <= tol,
+        });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_not_passed() {
+        let r = EquivalenceReport::default();
+        assert!(!r.all_passed());
+        assert_eq!(r.worst_diff(), 0.0);
+    }
+
+    #[test]
+    fn report_aggregation() {
+        let r = EquivalenceReport {
+            checks: vec![
+                EquivalenceCheck { artifact: "a".into(), max_abs_diff: 1e-6, passed: true },
+                EquivalenceCheck { artifact: "b".into(), max_abs_diff: 3e-5, passed: true },
+            ],
+        };
+        assert!(r.all_passed());
+        assert!((r.worst_diff() - 3e-5).abs() < 1e-12);
+    }
+}

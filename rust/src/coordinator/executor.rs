@@ -1,0 +1,131 @@
+//! The inference engine: a compiled execution plan + model weights, run
+//! against the PJRT runtime.
+
+use std::collections::HashMap;
+
+use super::plan::ExecutionPlan;
+use crate::graph::{LayerKind, Model};
+use crate::runtime::{Runtime, RuntimeError, Tensor};
+use crate::util::XorShiftRng;
+
+/// A ready-to-serve inference session: executables compiled, weights
+/// resident (the paper's "executable inference session" after codegen+g++).
+pub struct Engine {
+    runtime: Runtime,
+    plan: ExecutionPlan,
+    /// conv layer index -> (weights HWIO, bias).
+    weights: HashMap<usize, (Tensor, Tensor)>,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+}
+
+impl Engine {
+    /// Build an engine: deterministic He-style random weights per conv layer
+    /// (seeded — fused and unfused paths share the exact same parameters),
+    /// and all plan artifacts compiled up front.
+    pub fn new(mut runtime: Runtime, model: &Model, plan: ExecutionPlan, seed: u64)
+               -> Result<Engine, RuntimeError> {
+        let mut weights = HashMap::new();
+        let mut rng = XorShiftRng::new(seed);
+        for (i, layer) in model.layers.iter().enumerate() {
+            if let LayerKind::Conv(c) = &layer.kind {
+                let fan_in = (c.k * c.k * c.c_in) as f32;
+                let w = Tensor::random(
+                    vec![c.k, c.k, c.c_in, c.c_out],
+                    &mut rng,
+                    (2.0 / fan_in).sqrt(),
+                );
+                let b = Tensor::random(vec![c.c_out], &mut rng, 0.05);
+                weights.insert(i, (w, b));
+            }
+        }
+        for step in &plan.steps {
+            runtime.prepare(&step.artifact)?;
+        }
+        let first = runtime
+            .manifest()
+            .get(&plan.steps[0].artifact)
+            .expect("plan references manifest artifacts")
+            .clone();
+        let last = runtime
+            .manifest()
+            .get(&plan.steps.last().unwrap().artifact)
+            .unwrap()
+            .clone();
+        Ok(Engine {
+            runtime,
+            plan,
+            weights,
+            input_shape: first.input_shapes[0].clone(),
+            output_shape: last.output_shape.clone(),
+        })
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+
+    /// Assemble the artifact inputs for one plan step given the flowing
+    /// activation.
+    fn step_inputs(&self, step_idx: usize, activation: Tensor) -> Vec<Tensor> {
+        let step = &self.plan.steps[step_idx];
+        let mut inputs = Vec::with_capacity(1 + 2 * step.conv_indices.len());
+        inputs.push(activation);
+        for &ci in &step.conv_indices {
+            let (w, b) = self
+                .weights
+                .get(&ci)
+                .unwrap_or_else(|| panic!("no weights for conv layer {ci}"));
+            inputs.push(w.clone());
+            inputs.push(b.clone());
+        }
+        inputs
+    }
+
+    /// Run one inference through the *fused* plan.
+    pub fn infer(&mut self, x: Tensor) -> Result<Tensor, RuntimeError> {
+        let mut cur = x;
+        for si in 0..self.plan.steps.len() {
+            let inputs = self.step_inputs(si, cur);
+            let name = self.plan.steps[si].artifact.clone();
+            cur = self.runtime.execute(&name, &inputs)?;
+        }
+        Ok(cur)
+    }
+
+    /// Run the same computation layer-wise (every fused step expanded into
+    /// its per-stage artifacts) — the unfused baseline used for the
+    /// mathematical-equivalence check.
+    pub fn infer_unfused(&mut self, x: Tensor) -> Result<Tensor, RuntimeError> {
+        let mut cur = x;
+        for si in 0..self.plan.steps.len() {
+            let name = self.plan.steps[si].artifact.clone();
+            let fused = self.plan.steps[si].conv_indices.len() > 1;
+            let inputs = self.step_inputs(si, cur);
+            cur = if fused {
+                self.runtime.execute_stagewise(&name, &inputs)?
+            } else {
+                self.runtime.execute(&name, &inputs)?
+            };
+        }
+        Ok(cur)
+    }
+
+    /// A deterministic random input for this engine.
+    pub fn random_input(&self, seed: u64) -> Tensor {
+        let mut rng = XorShiftRng::new(seed);
+        Tensor::random(self.input_shape.clone(), &mut rng, 1.0)
+    }
+}

@@ -1,0 +1,119 @@
+//! Request-loop metrics: counters and latency histograms.
+
+use crate::stats::descriptive::{percentile, Summary};
+
+/// Online latency recorder with percentile reporting.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples_ms.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.samples_ms))
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.samples_ms.is_empty() {
+            None
+        } else {
+            Some(percentile(&self.samples_ms, p))
+        }
+    }
+
+    /// "p50/p95/p99 mean" one-liner.
+    pub fn report(&self) -> String {
+        match self.summary() {
+            None => "no samples".to_string(),
+            Some(s) => format!(
+                "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+                s.n,
+                s.mean,
+                self.percentile(50.0).unwrap(),
+                self.percentile(95.0).unwrap(),
+                self.percentile(99.0).unwrap(),
+                s.max
+            ),
+        }
+    }
+}
+
+/// Named monotonically-increasing counters.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    entries: std::collections::BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.entries.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.entries.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.entries.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.percentile(50.0).unwrap() - 50.5).abs() < 1.0);
+        assert!(r.percentile(99.0).unwrap() > 98.0);
+        assert!(r.report().contains("p95"));
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::new();
+        assert!(r.summary().is_none());
+        assert_eq!(r.report(), "no samples");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.inc("requests");
+        c.inc("requests");
+        c.add("convs", 6);
+        assert_eq!(c.get("requests"), 2);
+        assert_eq!(c.get("convs"), 6);
+        assert_eq!(c.get("missing"), 0);
+        assert_eq!(c.iter().count(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer-3 coordination: the end-to-end inference driver.
+//!
+//! This is where the three layers meet at run time: a model is optimized by
+//! [`crate::optimizer`] (Algorithm 1), the resulting schedule is mapped onto
+//! the AOT artifact catalog ([`plan`]), executed numerically through the
+//! PJRT runtime ([`executor`]) with fused-vs-unfused equivalence checking
+//! ([`equivalence`]), and driven under a batched request loop with metrics
+//! ([`driver`]). Performance numbers come from the simulator; numerics from
+//! PJRT — Python is never on this path.
+
+pub mod plan;
+pub mod executor;
+pub mod equivalence;
+pub mod metrics;
+pub mod driver;
+
+pub use driver::{DriverConfig, DriverReport};
+pub use equivalence::EquivalenceReport;
+pub use executor::Engine;
+pub use plan::{ExecutionPlan, PlanStep};

@@ -1,0 +1,199 @@
+//! Mapping an optimized schedule onto the AOT artifact catalog.
+//!
+//! A fusion block of `d` conv layers (with interleaved ReLUs) executes as
+//! the fused artifact of depth `d` matching its (channels, spatial) shape;
+//! blocks deeper than any available artifact split greedily into the largest
+//! available depths. The plan is the compiled form the request loop runs —
+//! the analogue of the generated CNML program, but executing through PJRT.
+
+use crate::graph::{LayerKind, Model};
+use crate::optimizer::schedule::Schedule;
+use crate::runtime::manifest::Manifest;
+
+/// One step: run `artifact` with the weights of conv layers
+/// `conv_indices` (model layer indices, in order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanStep {
+    pub artifact: String,
+    pub conv_indices: Vec<usize>,
+    /// The schedule block this step came from.
+    pub block_index: usize,
+    pub mp: usize,
+}
+
+/// A fully resolved execution plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    pub model_name: String,
+    pub steps: Vec<PlanStep>,
+}
+
+impl ExecutionPlan {
+    /// Total conv layers executed (must equal the model's conv count).
+    pub fn num_convs(&self) -> usize {
+        self.steps.iter().map(|s| s.conv_indices.len()).sum()
+    }
+
+    /// Number of fused (depth > 1) steps.
+    pub fn num_fused_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.conv_indices.len() > 1).count()
+    }
+}
+
+/// Build an execution plan for `model` under `schedule` against the
+/// artifact catalog in `manifest`.
+///
+/// Requirements (met by [`crate::zoo::mini_cnn`]-style models): every conv
+/// in the model is 3x3/s1/SAME with constant spatial size, and the catalog
+/// contains artifacts for its (channels, h, w) at depth 1 (deeper variants
+/// are used opportunistically).
+pub fn build_plan(model: &Model, schedule: &Schedule, manifest: &Manifest)
+                  -> Result<ExecutionPlan, String> {
+    schedule
+        .validate(model.num_layers(), usize::MAX)
+        .map_err(|e| format!("invalid schedule: {e}"))?;
+    let mut steps = Vec::new();
+    for (bi, block) in schedule.blocks.iter().enumerate() {
+        // Conv layers inside this block, in order.
+        let convs: Vec<usize> = (block.start..block.end)
+            .filter(|&i| matches!(model.layers[i].kind, LayerKind::Conv(_)))
+            .collect();
+        if convs.is_empty() {
+            continue; // pure relu/add blocks are no-ops on the PJRT path
+        }
+        let mut rest: &[usize] = &convs;
+        while !rest.is_empty() {
+            let (name, taken) = best_artifact(model, rest, manifest)
+                .ok_or_else(|| {
+                    let i = rest[0];
+                    format!(
+                        "no artifact matches conv '{}' (layer {i}) of '{}'",
+                        model.layers[i].name, model.name
+                    )
+                })?;
+            steps.push(PlanStep {
+                artifact: name,
+                conv_indices: rest[..taken].to_vec(),
+                block_index: bi,
+                mp: block.mp,
+            });
+            rest = &rest[taken..];
+        }
+    }
+    if steps.is_empty() {
+        return Err(format!("model '{}' produced an empty plan", model.name));
+    }
+    Ok(ExecutionPlan { model_name: model.name.clone(), steps })
+}
+
+/// Find the deepest artifact that matches a prefix of `convs` (channel
+/// chain, spatial size, batch 1). Returns (artifact name, convs consumed).
+fn best_artifact(model: &Model, convs: &[usize], manifest: &Manifest)
+                 -> Option<(String, usize)> {
+    let mut best: Option<(String, usize)> = None;
+    for a in &manifest.artifacts {
+        if a.batch != 1 || a.depth > convs.len() {
+            continue;
+        }
+        // Check the channel chain + spatial extents of the prefix.
+        let mut ok = true;
+        for (d, &li) in convs[..a.depth].iter().enumerate() {
+            let LayerKind::Conv(c) = &model.layers[li].kind else { ok = false; break };
+            if c.h_in != a.height
+                || c.w_in != a.width
+                || c.c_in != a.channels[d]
+                || c.c_out != a.channels[d + 1]
+                || c.k != 3
+                || c.stride != 1
+                || c.groups != 1
+            {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        if best.as_ref().map_or(true, |(_, depth)| a.depth > *depth) {
+            best = Some((a.name.clone(), a.depth));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::schedule::{Block, Schedule};
+    use crate::runtime::manifest::Manifest;
+    use crate::zoo;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::runtime::artifact_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn plans_mini_cnn_single_block() {
+        let Some(m) = manifest() else { return };
+        let model = zoo::mini_cnn();
+        let sched = Schedule::single_block(model.num_layers(), 8);
+        let plan = build_plan(&model, &sched, &m).unwrap();
+        assert_eq!(plan.num_convs(), 6);
+        // 6 convs with max artifact depth 4 -> 2 steps (4 + 2).
+        assert_eq!(plan.steps.len(), 2);
+        assert_eq!(plan.steps[0].artifact, "b4_c8_h16");
+        assert_eq!(plan.steps[1].artifact, "b2_c8_h16");
+    }
+
+    #[test]
+    fn plans_layerwise_as_single_stages() {
+        let Some(m) = manifest() else { return };
+        let model = zoo::mini_cnn();
+        let sched = Schedule::layerwise(model.num_layers(), 1);
+        let plan = build_plan(&model, &sched, &m).unwrap();
+        assert_eq!(plan.num_convs(), 6);
+        assert_eq!(plan.num_fused_steps(), 0);
+        assert!(plan.steps.iter().all(|s| s.conv_indices.len() == 1));
+    }
+
+    #[test]
+    fn rejects_unmatched_model() {
+        let Some(m) = manifest() else { return };
+        let model = zoo::alexnet(); // 11x11 convs: no artifact
+        let sched = Schedule::single_block(model.num_layers(), 8);
+        let err = build_plan(&model, &sched, &m).unwrap_err();
+        assert!(err.contains("no artifact"), "{err}");
+    }
+
+    #[test]
+    fn parse_only_manifest_plan() {
+        // Synthetic manifest (no files needed): depth-2 then depth-1 split.
+        let text = r#"{
+          "format_version": 1, "interchange": "hlo-text",
+          "artifacts": [
+            {"name": "a1", "file": "a1.hlo.txt", "depth": 1, "batch": 1,
+             "height": 16, "width": 16, "channels": [8, 8],
+             "input_shapes": [[1,16,16,8],[3,3,8,8],[8]],
+             "output_shape": [1,16,16,8]},
+            {"name": "a2", "file": "a2.hlo.txt", "depth": 2, "batch": 1,
+             "height": 16, "width": 16, "channels": [8, 8, 8],
+             "input_shapes": [[1,16,16,8],[3,3,8,8],[8],[3,3,8,8],[8]],
+             "output_shape": [1,16,16,8]}
+          ],
+          "fused_pairs": {}, "golden": {}
+        }"#;
+        let man = Manifest::parse(text, Path::new("/tmp")).unwrap();
+        let model = zoo::mini_cnn(); // 6 convs
+        let sched = Schedule::single_block(model.num_layers(), 4);
+        let plan = build_plan(&model, &sched, &man).unwrap();
+        // Greedy: 2+2+2.
+        assert_eq!(plan.steps.len(), 3);
+        assert!(plan.steps.iter().all(|s| s.artifact == "a2"));
+    }
+}

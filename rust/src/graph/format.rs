@@ -1,0 +1,215 @@
+//! The `.dlm` model-description format.
+//!
+//! Our framework-independent substitute for ONNX (DESIGN.md §2): a JSON
+//! document listing the input shape and the layer sequence. The paper's
+//! tool-chain consumed ONNX through TVM.Relay and only retained per-layer
+//! specifications; `.dlm` carries exactly those specifications, so the
+//! optimizer sees the same information.
+//!
+//! Example:
+//! ```json
+//! {
+//!   "name": "tiny",
+//!   "input": [8, 8, 3],
+//!   "layers": [
+//!     {"name": "c1", "op": "conv", "c_in": 3, "c_out": 8,
+//!      "h_in": 8, "w_in": 8, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+//!     {"name": "r1", "op": "relu", "shape": [8, 8, 8]}
+//!   ]
+//! }
+//! ```
+
+use super::layer::{ConvSpec, FcSpec, Layer, LayerKind, TensorShape};
+use super::model::Model;
+use crate::util::json::Json;
+
+/// Serialize a model to `.dlm` JSON text (pretty-printed).
+pub fn to_dlm(model: &Model) -> String {
+    let layers: Vec<Json> = model.layers.iter().map(layer_to_json).collect();
+    Json::obj(vec![
+        ("name", Json::Str(model.name.clone())),
+        ("input", shape_to_json(model.input)),
+        ("layers", Json::Arr(layers)),
+    ])
+    .to_pretty()
+}
+
+/// Parse `.dlm` JSON text into a [`Model`] (validated).
+pub fn from_dlm(text: &str) -> Result<Model, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    let name = v
+        .get("name")
+        .as_str()
+        .ok_or("missing model 'name'")?
+        .to_string();
+    let input = shape_from_json(v.get("input")).ok_or("bad 'input' shape")?;
+    let layers_json = v.get("layers").as_arr().ok_or("missing 'layers' array")?;
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (i, lj) in layers_json.iter().enumerate() {
+        layers.push(layer_from_json(lj).map_err(|e| format!("layer {i}: {e}"))?);
+    }
+    let model = Model::new(name, input, layers);
+    model.validate()?;
+    Ok(model)
+}
+
+fn shape_to_json(s: TensorShape) -> Json {
+    Json::arr_usize(&[s.h, s.w, s.c])
+}
+
+fn shape_from_json(v: &Json) -> Option<TensorShape> {
+    let a = v.as_arr()?;
+    if a.len() != 3 {
+        return None;
+    }
+    Some(TensorShape::new(
+        a[0].as_usize()?,
+        a[1].as_usize()?,
+        a[2].as_usize()?,
+    ))
+}
+
+fn layer_to_json(l: &Layer) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![("name", Json::Str(l.name.clone()))];
+    match &l.kind {
+        LayerKind::Conv(c) => {
+            pairs.push(("op", Json::Str("conv".into())));
+            pairs.push(("c_in", Json::Num(c.c_in as f64)));
+            pairs.push(("c_out", Json::Num(c.c_out as f64)));
+            pairs.push(("h_in", Json::Num(c.h_in as f64)));
+            pairs.push(("w_in", Json::Num(c.w_in as f64)));
+            pairs.push(("k", Json::Num(c.k as f64)));
+            pairs.push(("stride", Json::Num(c.stride as f64)));
+            pairs.push(("pad", Json::Num(c.pad as f64)));
+            pairs.push(("groups", Json::Num(c.groups as f64)));
+        }
+        LayerKind::Fc(f) => {
+            pairs.push(("op", Json::Str("fc".into())));
+            pairs.push(("k", Json::Num(f.k as f64)));
+            pairs.push(("n", Json::Num(f.n as f64)));
+        }
+        LayerKind::ReLU { shape } => {
+            pairs.push(("op", Json::Str("relu".into())));
+            pairs.push(("shape", shape_to_json(*shape)));
+        }
+        LayerKind::BatchNorm { shape } => {
+            pairs.push(("op", Json::Str("batchnorm".into())));
+            pairs.push(("shape", shape_to_json(*shape)));
+        }
+        LayerKind::Pool { shape, k, stride } => {
+            pairs.push(("op", Json::Str("pool".into())));
+            pairs.push(("shape", shape_to_json(*shape)));
+            pairs.push(("k", Json::Num(*k as f64)));
+            pairs.push(("stride", Json::Num(*stride as f64)));
+        }
+        LayerKind::Add { shape } => {
+            pairs.push(("op", Json::Str("add".into())));
+            pairs.push(("shape", shape_to_json(*shape)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn layer_from_json(v: &Json) -> Result<Layer, String> {
+    let name = v.get("name").as_str().ok_or("missing 'name'")?.to_string();
+    let op = v.get("op").as_str().ok_or("missing 'op'")?;
+    let usize_field = |key: &str| -> Result<usize, String> {
+        v.get(key)
+            .as_usize()
+            .ok_or_else(|| format!("missing/invalid '{key}'"))
+    };
+    let kind = match op {
+        "conv" => LayerKind::Conv(ConvSpec {
+            c_in: usize_field("c_in")?,
+            c_out: usize_field("c_out")?,
+            h_in: usize_field("h_in")?,
+            w_in: usize_field("w_in")?,
+            k: usize_field("k")?,
+            stride: usize_field("stride")?,
+            pad: usize_field("pad")?,
+            groups: if v.get("groups").is_null() { 1 } else { usize_field("groups")? },
+        }),
+        "fc" => LayerKind::Fc(FcSpec { k: usize_field("k")?, n: usize_field("n")? }),
+        "relu" => LayerKind::ReLU {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+        },
+        "batchnorm" => LayerKind::BatchNorm {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+        },
+        "pool" => LayerKind::Pool {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+            k: usize_field("k")?,
+            stride: usize_field("stride")?,
+        },
+        "add" => LayerKind::Add {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+        },
+        other => return Err(format!("unknown op '{other}'")),
+    };
+    Ok(Layer::new(name, kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn roundtrip_tiny() {
+        let m = Model::new(
+            "t",
+            TensorShape::new(8, 8, 3),
+            vec![
+                Layer::conv("c1", ConvSpec::same(3, 8, 8, 3)),
+                Layer::new("r", LayerKind::ReLU { shape: TensorShape::new(8, 8, 8) }),
+                Layer::new("p", LayerKind::Pool {
+                    shape: TensorShape::new(8, 8, 8), k: 2, stride: 2 }),
+                Layer::new("fc", LayerKind::Fc(FcSpec { k: 128, n: 10 })),
+            ],
+        );
+        let text = to_dlm(&m);
+        let back = from_dlm(&text).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn roundtrip_every_zoo_model() {
+        for m in zoo::all_models() {
+            let text = to_dlm(&m);
+            let back = from_dlm(&text).expect(&m.name);
+            assert_eq!(m, back, "roundtrip {}", m.name);
+        }
+    }
+
+    #[test]
+    fn groups_default_to_one() {
+        let text = r#"{"name":"g","input":[4,4,2],"layers":[
+            {"name":"c","op":"conv","c_in":2,"c_out":2,"h_in":4,"w_in":4,
+             "k":3,"stride":1,"pad":1}]}"#;
+        let m = from_dlm(text).unwrap();
+        match &m.layers[0].kind {
+            LayerKind::Conv(c) => assert_eq!(c.groups, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let text = r#"{"name":"g","input":[4,4,2],"layers":[
+            {"name":"x","op":"softmax9000"}]}"#;
+        assert!(from_dlm(text).unwrap_err().contains("unknown op"));
+    }
+
+    #[test]
+    fn rejects_invalid_chain() {
+        let text = r#"{"name":"g","input":[4,4,2],"layers":[
+            {"name":"c","op":"conv","c_in":5,"c_out":2,"h_in":4,"w_in":4,
+             "k":3,"stride":1,"pad":1,"groups":1}]}"#;
+        assert!(from_dlm(text).unwrap_err().contains("expects input"));
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        assert!(from_dlm("{not json").is_err());
+    }
+}

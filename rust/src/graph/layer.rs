@@ -1,0 +1,326 @@
+//! Layer kinds and the paper's operation-count math.
+//!
+//! Eq. 1: `GOPS_Conv = 2 · H_out · W_out · H_K · W_K · C_in · C_out`
+//! Eq. 2: `GOPS_FC   = 2 · M · K · N`
+//!
+//! For grouped convolutions `C_in` is the *per-group* input channel count
+//! (the factor the multiply-accumulates actually see). Batch is 1 throughout,
+//! matching the paper's latency-oriented inference setting.
+
+/// Bytes per element; the MLU100 runs FP16 on its compute path (Table I).
+pub const BYTES_PER_ELEM: f64 = 2.0;
+
+/// A (height, width, channels) activation shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl TensorShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        TensorShape { h, w, c }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn bytes(&self) -> f64 {
+        self.elems() as f64 * BYTES_PER_ELEM
+    }
+}
+
+/// Convolution layer specification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Input spatial extent.
+    pub h_in: usize,
+    pub w_in: usize,
+    /// Square kernel edge.
+    pub k: usize,
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+    /// Convolution groups (1 = dense, `c_in` = depthwise).
+    pub groups: usize,
+}
+
+impl ConvSpec {
+    /// Dense (groups=1) conv in the paper's `{C_in, C_out, HxW, KxK}`
+    /// notation, stride 1, SAME padding.
+    pub fn same(c_in: usize, c_out: usize, hw: usize, k: usize) -> Self {
+        ConvSpec { c_in, c_out, h_in: hw, w_in: hw, k, stride: 1, pad: k / 2, groups: 1 }
+    }
+
+    pub fn h_out(&self) -> usize {
+        (self.h_in + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn w_out(&self) -> usize {
+        (self.w_in + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Eq. 1 operation count in GOPs (2 ops per MAC), group-aware.
+    pub fn op_gops(&self) -> f64 {
+        let per_group_cin = (self.c_in / self.groups).max(1);
+        2.0 * self.h_out() as f64
+            * self.w_out() as f64
+            * (self.k * self.k) as f64
+            * per_group_cin as f64
+            * self.c_out as f64
+            / 1e9
+    }
+
+    /// Eq. 1 *ignoring* groups — the convention under which the paper's
+    /// Table II MobileNet row was computed (see EXPERIMENTS.md discussion).
+    pub fn op_gops_dense_equiv(&self) -> f64 {
+        2.0 * self.h_out() as f64
+            * self.w_out() as f64
+            * (self.k * self.k) as f64
+            * self.c_in as f64
+            * self.c_out as f64
+            / 1e9
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        let per_group_cin = (self.c_in / self.groups).max(1);
+        (self.k * self.k * per_group_cin * self.c_out) as f64 * BYTES_PER_ELEM
+    }
+}
+
+/// Fully-connected layer specification (`y[M,N] = x[M,K] · W[K,N]`, M = 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FcSpec {
+    pub k: usize,
+    pub n: usize,
+}
+
+impl FcSpec {
+    /// Eq. 2 operation count in GOPs with M = 1.
+    pub fn op_gops(&self) -> f64 {
+        2.0 * (self.k * self.n) as f64 / 1e9
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        (self.k * self.n) as f64 * BYTES_PER_ELEM
+    }
+}
+
+/// The layer types the CNML operator SDK supports that we model
+/// (conv, FC, ReLU, BatchNorm, pooling, elementwise add — the building
+/// blocks of every evaluated network).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerKind {
+    Conv(ConvSpec),
+    Fc(FcSpec),
+    /// In-place activation over `shape`.
+    ReLU { shape: TensorShape },
+    /// Batch normalization over `shape` (scale+shift at inference).
+    BatchNorm { shape: TensorShape },
+    /// Max/avg pooling.
+    Pool { shape: TensorShape, k: usize, stride: usize },
+    /// Elementwise residual add over `shape`.
+    Add { shape: TensorShape },
+}
+
+/// One layer in the model's execution order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
+        Layer { name: name.into(), kind }
+    }
+
+    pub fn conv(name: impl Into<String>, spec: ConvSpec) -> Self {
+        Layer::new(name, LayerKind::Conv(spec))
+    }
+
+    /// Is this a layer Algorithm 1 assigns an MP to (line 6: Conv / FC)?
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv(_) | LayerKind::Fc(_))
+    }
+
+    /// Operation count in GOPs (Eq. 1 / Eq. 2; auxiliary layers are counted
+    /// at their elementwise cost, which is negligible next to conv/FC and
+    /// matches the paper's conv-centric accounting).
+    pub fn op_gops(&self) -> f64 {
+        match &self.kind {
+            LayerKind::Conv(c) => c.op_gops(),
+            LayerKind::Fc(f) => f.op_gops(),
+            LayerKind::ReLU { shape } => shape.elems() as f64 / 1e9,
+            LayerKind::BatchNorm { shape } => 2.0 * shape.elems() as f64 / 1e9,
+            LayerKind::Pool { shape, k, .. } => {
+                (shape.elems() * k * k) as f64 / 1e9
+            }
+            LayerKind::Add { shape } => shape.elems() as f64 / 1e9,
+        }
+    }
+
+    /// Output-channel dimension — the tensor axis the MLU100 partitions
+    /// across cores, and the "channel" feature of Eq. 5.
+    pub fn channels(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv(c) => c.c_out,
+            LayerKind::Fc(f) => f.n,
+            LayerKind::ReLU { shape }
+            | LayerKind::BatchNorm { shape }
+            | LayerKind::Add { shape } => shape.c,
+            LayerKind::Pool { shape, .. } => shape.c,
+        }
+    }
+
+    /// Input activation shape.
+    pub fn input_shape(&self) -> TensorShape {
+        match &self.kind {
+            LayerKind::Conv(c) => TensorShape::new(c.h_in, c.w_in, c.c_in),
+            LayerKind::Fc(f) => TensorShape::new(1, 1, f.k),
+            LayerKind::ReLU { shape }
+            | LayerKind::BatchNorm { shape }
+            | LayerKind::Add { shape } => *shape,
+            LayerKind::Pool { shape, .. } => *shape,
+        }
+    }
+
+    /// Output activation shape.
+    pub fn output_shape(&self) -> TensorShape {
+        match &self.kind {
+            LayerKind::Conv(c) => TensorShape::new(c.h_out(), c.w_out(), c.c_out),
+            LayerKind::Fc(f) => TensorShape::new(1, 1, f.n),
+            LayerKind::ReLU { shape }
+            | LayerKind::BatchNorm { shape }
+            | LayerKind::Add { shape } => *shape,
+            LayerKind::Pool { shape, stride, .. } => {
+                let s = (*stride).max(1);
+                TensorShape::new(shape.h / s, shape.w / s, shape.c)
+            }
+        }
+    }
+
+    /// Parameter bytes resident off-chip.
+    pub fn weight_bytes(&self) -> f64 {
+        match &self.kind {
+            LayerKind::Conv(c) => c.weight_bytes(),
+            LayerKind::Fc(f) => f.weight_bytes(),
+            LayerKind::BatchNorm { shape } => 2.0 * shape.c as f64 * BYTES_PER_ELEM,
+            _ => 0.0,
+        }
+    }
+
+    /// Spatial receptive-field radius this layer adds to a fusion block's
+    /// halo (Fig. 7(a)): (k-1)/2 per conv/pool stage, 0 for pointwise ops.
+    pub fn halo_radius(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv(c) => (c.k.saturating_sub(1)) / 2,
+            LayerKind::Pool { k, .. } => (k.saturating_sub(1)) / 2,
+            _ => 0,
+        }
+    }
+
+    /// Total tensor traffic (input + output + weights) in bytes — the
+    /// denominator of the paper's Eq. 3 operation intensity.
+    pub fn tensor_bytes(&self) -> f64 {
+        self.input_shape().bytes() + self.output_shape().bytes() + self.weight_bytes()
+    }
+
+    /// Eq. 3: operation intensity in ops/byte.
+    pub fn intensity(&self) -> f64 {
+        self.op_gops() * 1e9 / self.tensor_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's running example: VGG-19 conv {64, 64, 224x224, 3x3}.
+    fn vgg_conv() -> ConvSpec {
+        ConvSpec::same(64, 64, 224, 3)
+    }
+
+    #[test]
+    fn eq1_vgg_example() {
+        // 2 * 224 * 224 * 3 * 3 * 64 * 64 = 3.7 GOPs
+        let g = vgg_conv().op_gops();
+        assert!((g - 3.699).abs() < 0.01, "got {g}");
+    }
+
+    #[test]
+    fn eq1_fig7_conv_examples() {
+        // Fig. 7(b): Conv2 has 0.43 GOPs; {64,64,56x56,3x3} has ~0.231.
+        let c = ConvSpec::same(64, 64, 56, 3);
+        assert!((c.op_gops() - 0.231).abs() < 0.01);
+        let c2 = ConvSpec::same(128, 128, 28, 3);
+        assert!((c2.op_gops() - 0.231).abs() < 0.01);
+    }
+
+    #[test]
+    fn eq2_fc() {
+        let f = FcSpec { k: 4096, n: 1000 };
+        assert!((f.op_gops() - 2.0 * 4096.0 * 1000.0 / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stride_and_pad_output_shape() {
+        let c = ConvSpec { c_in: 3, c_out: 96, h_in: 227, w_in: 227, k: 11,
+                           stride: 4, pad: 0, groups: 1 };
+        assert_eq!(c.h_out(), 55);
+        let c2 = ConvSpec { c_in: 64, c_out: 64, h_in: 56, w_in: 56, k: 3,
+                            stride: 2, pad: 1, groups: 1 };
+        assert_eq!(c2.h_out(), 28);
+    }
+
+    #[test]
+    fn grouped_conv_reduces_ops() {
+        let dense = ConvSpec::same(64, 64, 28, 3);
+        let dw = ConvSpec { groups: 64, ..dense };
+        assert!((dw.op_gops() - dense.op_gops() / 64.0).abs() < 1e-12);
+        assert!((dw.op_gops_dense_equiv() - dense.op_gops()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halo_radius_by_kind() {
+        assert_eq!(Layer::conv("c", vgg_conv()).halo_radius(), 1);
+        let five = ConvSpec::same(8, 8, 28, 5);
+        assert_eq!(Layer::conv("c5", five).halo_radius(), 2);
+        let relu = Layer::new("r", LayerKind::ReLU { shape: TensorShape::new(28, 28, 8) });
+        assert_eq!(relu.halo_radius(), 0);
+    }
+
+    #[test]
+    fn intensity_positive_and_sane() {
+        let l = Layer::conv("c", vgg_conv());
+        // ~3.7e9 ops over ~13 MB -> hundreds of ops/byte.
+        let i = l.intensity();
+        assert!(i > 100.0 && i < 1000.0, "intensity {i}");
+    }
+
+    #[test]
+    fn compute_layer_classification() {
+        assert!(Layer::conv("c", vgg_conv()).is_compute());
+        assert!(Layer::new("f", LayerKind::Fc(FcSpec { k: 10, n: 10 })).is_compute());
+        let shape = TensorShape::new(4, 4, 4);
+        assert!(!Layer::new("r", LayerKind::ReLU { shape }).is_compute());
+        assert!(!Layer::new("a", LayerKind::Add { shape }).is_compute());
+    }
+
+    #[test]
+    fn weight_bytes_fp16() {
+        let c = ConvSpec::same(64, 64, 56, 3);
+        assert_eq!(c.weight_bytes(), (3 * 3 * 64 * 64) as f64 * 2.0);
+    }
+
+    #[test]
+    fn pool_output_shape() {
+        let p = Layer::new("p", LayerKind::Pool {
+            shape: TensorShape::new(56, 56, 64), k: 2, stride: 2 });
+        assert_eq!(p.output_shape(), TensorShape::new(28, 28, 64));
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer-level intermediate representation of DNN models.
+//!
+//! The paper's optimizer consumes ONNX files through TVM's Relay parser and
+//! only ever looks at per-layer *specifications*: layer type, channel sizes,
+//! spatial extents, kernel size — from which it derives the two features that
+//! drive the tuning decisions, operation count (Eq. 1/2) and channel size.
+//! This module carries exactly those facts:
+//!
+//! - [`layer`]: the layer kinds and the Eq. 1/2 operation-count math;
+//! - [`model`]: a model as an ordered layer sequence with validation and the
+//!   Table II statistics;
+//! - [`format`]: the `.dlm` JSON model-description format (our ONNX
+//!   substitute — see DESIGN.md §2) with parser and serializer.
+
+pub mod layer;
+pub mod model;
+pub mod format;
+
+pub use layer::{ConvSpec, FcSpec, Layer, LayerKind, TensorShape};
+pub use model::{Model, ModelStats};

@@ -1,0 +1,170 @@
+//! A model is an ordered sequence of layers (the execution order TVM's Relay
+//! parser hands the paper's optimizer), plus the Table II statistics.
+
+use super::layer::{Layer, LayerKind, TensorShape};
+
+/// A DNN model in execution order.
+///
+/// Like the paper (whose Algorithm 1 walks `0..num_of_layer` linearly), the
+/// IR is a *linear* sequence: residual topologies are represented by their
+/// layer execution order with explicit `Add` layers, which is the shape the
+/// fusion partitioner consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub name: String,
+    /// Network input activation.
+    pub input: TensorShape,
+    pub layers: Vec<Layer>,
+}
+
+/// The Table II row for a model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelStats {
+    /// Total op count over conv layers, GOPs.
+    pub total_conv_gops: f64,
+    /// Average per-conv op count, GOPs.
+    pub avg_conv_gops: f64,
+    pub num_conv: usize,
+    /// Total over *all* layers (incl. FC and auxiliaries), GOPs.
+    pub total_gops: f64,
+    pub num_layers: usize,
+}
+
+impl Model {
+    pub fn new(name: impl Into<String>, input: TensorShape, layers: Vec<Layer>) -> Self {
+        Model { name: name.into(), input, layers }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Indices of compute (Conv/FC) layers.
+    pub fn compute_indices(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_compute())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The Table II statistics (conv layers only, like the paper's
+    /// "Total Op / Avg. Op / No. of CONV" columns).
+    pub fn stats(&self) -> ModelStats {
+        let convs: Vec<&Layer> = self
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv(_)))
+            .collect();
+        let total_conv: f64 = convs.iter().map(|l| l.op_gops()).sum();
+        let num_conv = convs.len();
+        ModelStats {
+            total_conv_gops: total_conv,
+            avg_conv_gops: if num_conv == 0 { 0.0 } else { total_conv / num_conv as f64 },
+            num_conv,
+            total_gops: self.layers.iter().map(|l| l.op_gops()).sum(),
+            num_layers: self.layers.len(),
+        }
+    }
+
+    /// Check structural sanity: non-empty, shapes chain (each layer's input
+    /// matches the previous layer's output, with `Add` layers allowed to
+    /// merge an earlier skip tensor of identical shape).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err(format!("model '{}' has no layers", self.name));
+        }
+        let mut cur = self.input;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let expect = layer.input_shape();
+            // FC layers flatten whatever precedes them.
+            let flatten_ok = matches!(layer.kind, LayerKind::Fc(f) if f.k == cur.elems());
+            if expect != cur && !flatten_ok {
+                return Err(format!(
+                    "model '{}' layer {} ('{}'): expects input {}x{}x{}, got {}x{}x{}",
+                    self.name, i, layer.name,
+                    expect.h, expect.w, expect.c, cur.h, cur.w, cur.c
+                ));
+            }
+            cur = layer.output_shape();
+        }
+        Ok(())
+    }
+
+    /// Summed weight bytes (model footprint in device memory).
+    pub fn weight_bytes(&self) -> f64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::{ConvSpec, FcSpec};
+
+    fn tiny_model() -> Model {
+        let c1 = ConvSpec::same(3, 8, 8, 3);
+        let c2 = ConvSpec::same(8, 8, 8, 3);
+        Model::new(
+            "tiny",
+            TensorShape::new(8, 8, 3),
+            vec![
+                Layer::conv("c1", c1),
+                Layer::new("r1", LayerKind::ReLU { shape: TensorShape::new(8, 8, 8) }),
+                Layer::conv("c2", c2),
+            ],
+        )
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny_model().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_channel_break() {
+        let mut m = tiny_model();
+        m.layers[2] = Layer::conv("bad", ConvSpec::same(16, 8, 8, 3));
+        let err = m.validate().unwrap_err();
+        assert!(err.contains("expects input"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_empty() {
+        let m = Model::new("e", TensorShape::new(1, 1, 1), vec![]);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn fc_flatten_accepted() {
+        let m = Model::new(
+            "f",
+            TensorShape::new(2, 2, 3),
+            vec![Layer::new("fc", LayerKind::Fc(FcSpec { k: 12, n: 5 }))],
+        );
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn stats_count_convs_only() {
+        let s = tiny_model().stats();
+        assert_eq!(s.num_conv, 2);
+        assert_eq!(s.num_layers, 3);
+        assert!(s.total_conv_gops > 0.0);
+        assert!((s.avg_conv_gops - s.total_conv_gops / 2.0).abs() < 1e-15);
+        assert!(s.total_gops >= s.total_conv_gops);
+    }
+
+    #[test]
+    fn compute_indices() {
+        assert_eq!(tiny_model().compute_indices(), vec![0, 2]);
+    }
+
+    #[test]
+    fn weight_bytes_sums() {
+        let m = tiny_model();
+        let want: f64 = (3 * 3 * 3 * 8 + 3 * 3 * 8 * 8) as f64 * 2.0;
+        assert_eq!(m.weight_bytes(), want);
+    }
+}

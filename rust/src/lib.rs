@@ -1,0 +1,73 @@
+//! # DLFusion
+//!
+//! A reproduction of *DLFusion: An Auto-Tuning Compiler for Layer Fusion on
+//! Deep Neural Network Accelerator* (Liu et al., 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! DLFusion jointly tunes the two execution hyper-parameters the Cambricon
+//! MLU100's operator SDK exposes — **model parallelism** (number of cores an
+//! operator runs on) and the **layer-fusion scheme** (how consecutive layers
+//! are grouped into fused blocks) — using per-layer operation count and
+//! channel size as features, instead of brute-forcing an `~10^75`-sized
+//! joint space (paper Eq. 4).
+//!
+//! ## Crate layout (Layer 3: the Rust coordinator)
+//!
+//! | module | role |
+//! |---|---|
+//! | [`graph`] | layer-level IR, `.dlm` model format, op-count math (Eq. 1/2) |
+//! | [`zoo`] | built-in models: ResNet-18/50, VGG-19, AlexNet, MobileNetV2, synthetics |
+//! | [`microbench`] | synthesized layer sweeps (the paper's Section II methodology) |
+//! | [`accel`] | the MLU100 performance-simulator substrate (see DESIGN.md §6) |
+//! | [`perfmodel`] | roofline, `OpCount_critical`, the `MP(C, Op)` scorer (Eq. 5) |
+//! | [`optimizer`] | Algorithm 1 and the seven evaluation strategies (Table III) |
+//! | [`search`] | the reduced brute-force oracle (strategy 7) |
+//! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
+//! | [`runtime`] | PJRT client: load AOT HLO-text artifacts, execute |
+//! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
+//! | [`stats`] | descriptive stats, regression, PCA (used for characterization) |
+//! | [`util`] | JSON, RNG, tables, CSV (offline-environment substitutes) |
+//! | [`bench_harness`] | criterion-replacement used by `rust/benches/` |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dlfusion::prelude::*;
+//!
+//! let spec = AcceleratorSpec::mlu100();
+//! let model = zoo::resnet18();
+//! let schedule = optimizer::dlfusion_schedule(&model, &spec);
+//! let sim = Simulator::new(spec);
+//! let report = sim.run_schedule(&model, &schedule);
+//! println!("{}: {:.1} FPS", model.name, report.fps());
+//! ```
+//!
+//! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
+//! the fused-convolution kernel to HLO text which [`runtime`] loads through
+//! the PJRT C API. Python is never on the request path.
+
+pub mod util;
+pub mod stats;
+pub mod graph;
+pub mod zoo;
+pub mod microbench;
+pub mod accel;
+pub mod perfmodel;
+pub mod optimizer;
+pub mod search;
+pub mod codegen;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_harness;
+pub mod testutil;
+pub mod cli;
+
+/// Most-used types, for `use dlfusion::prelude::*`.
+pub mod prelude {
+    pub use crate::accel::{AcceleratorSpec, Simulator, PerfReport};
+    pub use crate::graph::{Layer, LayerKind, Model};
+    pub use crate::optimizer::{self, Schedule, Strategy};
+    pub use crate::perfmodel;
+    pub use crate::search;
+    pub use crate::zoo;
+}

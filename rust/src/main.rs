@@ -1,0 +1,16 @@
+//! `dlfusion` CLI entrypoint (Layer-3 leader binary).
+
+use dlfusion::cli::{args::Args, commands};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprint!("{}", commands::HELP);
+            std::process::exit(2);
+        }
+    };
+    std::process::exit(commands::run(&args));
+}

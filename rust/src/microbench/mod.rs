@@ -1,0 +1,149 @@
+//! Synthesized microbenchmarks (the paper's Section II methodology).
+//!
+//! "With those auto-generated microbenchmarks covering different
+//! computational intensity and operation count, we can quickly have a
+//! high-level understanding of the target hardware's computational
+//! characteristics." These generators produce the layer populations behind
+//! Figs. 3, 4 and 6; the benches sweep them through the simulator.
+
+use crate::graph::layer::{ConvSpec, FcSpec, Layer, LayerKind};
+use crate::util::XorShiftRng;
+
+/// A broad conv sweep over channels × spatial size × kernel — the Fig. 3 /
+/// Fig. 4(a) population (360 layers, op counts from ~1e-3 to ~60 GOPs).
+pub fn conv_sweep() -> Vec<Layer> {
+    let mut out = Vec::new();
+    for &c in &[16usize, 32, 64, 128, 256, 512] {
+        for &hw in &[7usize, 14, 28, 56, 112, 224] {
+            for &k in &[1usize, 3, 5] {
+                // Skip degenerate huge cases (512ch @ 224 @ 5x5 = 1.2 TOPs).
+                if c * hw > 512 * 112 {
+                    continue;
+                }
+                out.push(Layer::conv(
+                    format!("mb_c{c}_s{hw}_k{k}"),
+                    ConvSpec::same(c, c, hw, k),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// FC sweep (the other Eq. 2 population of Section II.B).
+pub fn fc_sweep() -> Vec<Layer> {
+    let mut out = Vec::new();
+    for &k in &[256usize, 1024, 4096, 9216] {
+        for &n in &[256usize, 1000, 4096] {
+            out.push(Layer::new(
+                format!("mb_fc_{k}x{n}"),
+                LayerKind::Fc(FcSpec { k, n }),
+            ));
+        }
+    }
+    out
+}
+
+/// Layers with (approximately) equal op count but different channel widths —
+/// the Fig. 6(a) experiment. Returns `(channels, layer)` pairs including the
+/// paper's `{128, 128, 56x56, 3x3}` member.
+pub fn equal_ops_channel_series() -> Vec<(usize, Layer)> {
+    // G = 2*h^2*9*c^2 is constant when h = 7168/c (0.925 GOPs); the series
+    // spans a 32x channel range around the paper's {128,128,56x56,3x3}
+    // member so the channel-partition cap actually bites at the narrow end.
+    let mut out = Vec::new();
+    for &c in &[8usize, 32, 64, 128, 256] {
+        let h = (7168 / c).max(1);
+        out.push((
+            c,
+            Layer::conv(format!("eq_c{c}_s{h}"), ConvSpec::same(c, c, h, 3)),
+        ));
+    }
+    out
+}
+
+/// Fixed-channel, varying-op-count series — the Fig. 6(b) experiment.
+pub fn fixed_channel_op_series(channels: usize) -> Vec<Layer> {
+    [14usize, 28, 56, 112, 224]
+        .iter()
+        .map(|&hw| {
+            Layer::conv(
+                format!("fx_c{channels}_s{hw}"),
+                ConvSpec::same(channels, channels, hw, 3),
+            )
+        })
+        .collect()
+}
+
+/// The Section II.B.2 series: the VGG-19 base conv `{64,64,224x224,3x3}`
+/// with its channel dimension expanded by the given factors (Fig. 4(c)).
+pub fn channel_scaled_series(factors: &[usize]) -> Vec<Layer> {
+    factors
+        .iter()
+        .map(|&f| crate::zoo::synthetic::scaled_conv_layer(f))
+        .collect()
+}
+
+/// Randomized conv population for property tests and PCA robustness.
+pub fn random_convs(rng: &mut XorShiftRng, n: usize) -> Vec<Layer> {
+    (0..n)
+        .map(|i| {
+            let c_pow = rng.gen_usize(4, 9); // 16..512
+            let c = 1usize << c_pow;
+            let hw = *rng.choose(&[7usize, 14, 28, 56, 112]);
+            let k = *rng.choose(&[1usize, 3, 5]);
+            Layer::conv(format!("rnd{i}"), ConvSpec::same(c, c, hw, k))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_sweep_covers_decades() {
+        let layers = conv_sweep();
+        assert!(layers.len() > 50);
+        let min = layers.iter().map(|l| l.op_gops()).fold(f64::MAX, f64::min);
+        let max = layers.iter().map(|l| l.op_gops()).fold(0.0, f64::max);
+        assert!(min < 0.01, "min {min}");
+        assert!(max > 10.0, "max {max}");
+    }
+
+    #[test]
+    fn equal_ops_series_is_equal_ops() {
+        let series = equal_ops_channel_series();
+        let gops: Vec<f64> = series.iter().map(|(_, l)| l.op_gops()).collect();
+        let base = gops[0];
+        for g in &gops {
+            assert!((g / base - 1.0).abs() < 0.15, "{gops:?}");
+        }
+        // ... but spans a 32x channel range.
+        assert_eq!(series.first().unwrap().0, 8);
+        assert_eq!(series.last().unwrap().0, 256);
+    }
+
+    #[test]
+    fn fixed_channel_series_spans_ops() {
+        let s = fixed_channel_op_series(128);
+        let g0 = s.first().unwrap().op_gops();
+        let g1 = s.last().unwrap().op_gops();
+        assert!(g1 / g0 > 100.0);
+        assert!(s.iter().all(|l| l.channels() == 128));
+    }
+
+    #[test]
+    fn channel_scaled_series_matches_fig4c() {
+        let s = channel_scaled_series(&[1, 2, 4]);
+        assert!((s[0].op_gops() - 3.7).abs() < 0.05);
+        assert!((s[2].op_gops() / s[0].op_gops() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_convs_deterministic() {
+        let mut r1 = XorShiftRng::new(9);
+        let mut r2 = XorShiftRng::new(9);
+        assert_eq!(random_convs(&mut r1, 10), random_convs(&mut r2, 10));
+    }
+}

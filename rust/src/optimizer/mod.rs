@@ -1,0 +1,19 @@
+//! The DLFusion optimizer: Algorithm 1 and the Table III strategies.
+//!
+//! - [`schedule`]: the output representation — a partition of the model's
+//!   layers into contiguous fused blocks, each with an MP setting (the
+//!   paper's `fusion_partition_index[]` + `mp_of_fusionblock[]`);
+//! - [`algorithm`]: Algorithm 1 — joint fusion-scheme + MP selection in
+//!   O(n);
+//! - [`strategies`]: the seven evaluation strategies of Table III / Fig. 10;
+//! - [`space`]: Eq. 4 — the size of the joint search space that makes
+//!   brute force infeasible.
+
+pub mod schedule;
+pub mod algorithm;
+pub mod strategies;
+pub mod space;
+
+pub use algorithm::{dlfusion_schedule, AlgorithmParams};
+pub use schedule::{Block, Schedule};
+pub use strategies::{run_strategy, Strategy};

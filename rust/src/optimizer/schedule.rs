@@ -1,0 +1,196 @@
+//! Execution schedules: contiguous fusion blocks with per-block MP.
+//!
+//! Algorithm 1's outputs are `fusion_partition_index[]` (where blocks end)
+//! and `mp_of_fusionblock[]`; a [`Schedule`] carries both as explicit
+//! `[start, end)` blocks. Every strategy and the brute-force oracle produce
+//! this same type, so the simulator, code generator, and PJRT coordinator
+//! are strategy-agnostic.
+
+/// One fused block: layers `[start, end)` compiled together, run at `mp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block {
+    pub start: usize,
+    pub end: usize,
+    pub mp: usize,
+}
+
+impl Block {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// A complete schedule for a model: blocks must tile `0..num_layers`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    pub blocks: Vec<Block>,
+}
+
+impl Schedule {
+    pub fn new(blocks: Vec<Block>) -> Self {
+        Schedule { blocks }
+    }
+
+    /// Strategy-1 shape: every layer its own block at a fixed MP.
+    pub fn layerwise(num_layers: usize, mp: usize) -> Self {
+        Schedule {
+            blocks: (0..num_layers)
+                .map(|i| Block { start: i, end: i + 1, mp })
+                .collect(),
+        }
+    }
+
+    /// Strategy-4 shape: all layers fused into one block.
+    pub fn single_block(num_layers: usize, mp: usize) -> Self {
+        Schedule { blocks: vec![Block { start: 0, end: num_layers, mp }] }
+    }
+
+    /// Equal-size blocks of `block_size` (last block takes the remainder).
+    pub fn uniform_blocks(num_layers: usize, block_size: usize, mp: usize) -> Self {
+        assert!(block_size >= 1);
+        let mut blocks = Vec::new();
+        let mut start = 0;
+        while start < num_layers {
+            let end = (start + block_size).min(num_layers);
+            blocks.push(Block { start, end, mp });
+            start = end;
+        }
+        Schedule { blocks }
+    }
+
+    /// Check the blocks exactly tile `0..num_layers` with valid MPs.
+    pub fn validate(&self, num_layers: usize, max_mp: usize) -> Result<(), String> {
+        if self.blocks.is_empty() {
+            return Err("schedule has no blocks".into());
+        }
+        let mut expected = 0usize;
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.is_empty() {
+                return Err(format!("block {i} is empty ({}..{})", b.start, b.end));
+            }
+            if b.start != expected {
+                return Err(format!(
+                    "block {i} starts at {} but previous ended at {expected}",
+                    b.start
+                ));
+            }
+            if b.mp < 1 || b.mp > max_mp {
+                return Err(format!("block {i} MP {} outside 1..={max_mp}", b.mp));
+            }
+            expected = b.end;
+        }
+        if expected != num_layers {
+            return Err(format!(
+                "schedule covers {expected} layers but the model has {num_layers}"
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Largest block length.
+    pub fn max_block_len(&self) -> usize {
+        self.blocks.iter().map(|b| b.len()).max().unwrap_or(0)
+    }
+
+    /// The paper's output form: indices where blocks end, plus block MPs.
+    pub fn partition_indices(&self) -> (Vec<usize>, Vec<usize>) {
+        (
+            self.blocks.iter().map(|b| b.end).collect(),
+            self.blocks.iter().map(|b| b.mp).collect(),
+        )
+    }
+
+    /// Human-readable one-liner, e.g. `[0..8@4 | 8..20@8]`.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .blocks
+            .iter()
+            .map(|b| format!("{}..{}@{}", b.start, b.end, b.mp))
+            .collect();
+        format!("[{}]", parts.join(" | "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layerwise_tiles() {
+        let s = Schedule::layerwise(5, 1);
+        assert_eq!(s.num_blocks(), 5);
+        assert!(s.validate(5, 32).is_ok());
+    }
+
+    #[test]
+    fn single_block_tiles() {
+        let s = Schedule::single_block(7, 32);
+        assert_eq!(s.num_blocks(), 1);
+        assert!(s.validate(7, 32).is_ok());
+    }
+
+    #[test]
+    fn uniform_blocks_remainder() {
+        let s = Schedule::uniform_blocks(10, 4, 2);
+        assert_eq!(s.blocks.len(), 3);
+        assert_eq!(s.blocks[2].len(), 2);
+        assert!(s.validate(10, 32).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_gap() {
+        let s = Schedule::new(vec![
+            Block { start: 0, end: 2, mp: 1 },
+            Block { start: 3, end: 5, mp: 1 },
+        ]);
+        assert!(s.validate(5, 32).unwrap_err().contains("starts at 3"));
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let s = Schedule::new(vec![
+            Block { start: 0, end: 3, mp: 1 },
+            Block { start: 2, end: 5, mp: 1 },
+        ]);
+        assert!(s.validate(5, 32).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_mp() {
+        let s = Schedule::new(vec![Block { start: 0, end: 2, mp: 64 }]);
+        assert!(s.validate(2, 32).unwrap_err().contains("MP"));
+        let s0 = Schedule::new(vec![Block { start: 0, end: 2, mp: 0 }]);
+        assert!(s0.validate(2, 32).is_err());
+    }
+
+    #[test]
+    fn validate_catches_short_cover() {
+        let s = Schedule::new(vec![Block { start: 0, end: 2, mp: 1 }]);
+        assert!(s.validate(5, 32).unwrap_err().contains("covers 2"));
+    }
+
+    #[test]
+    fn partition_indices_match_paper_form() {
+        let s = Schedule::new(vec![
+            Block { start: 0, end: 3, mp: 4 },
+            Block { start: 3, end: 5, mp: 8 },
+        ]);
+        let (idx, mps) = s.partition_indices();
+        assert_eq!(idx, vec![3, 5]);
+        assert_eq!(mps, vec![4, 8]);
+    }
+
+    #[test]
+    fn summary_readable() {
+        let s = Schedule::uniform_blocks(4, 2, 8);
+        assert_eq!(s.summary(), "[0..2@8 | 2..4@8]");
+    }
+}

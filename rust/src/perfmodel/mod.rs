@@ -1,0 +1,21 @@
+//! The analytical performance model derived from characterization.
+//!
+//! Section II of the paper builds, in order: a roofline model that *fails*
+//! to predict measured performance (Fig. 3), a PCA over layer features that
+//! identifies operation count and channel size as the dominant factors, a
+//! fitted `OpCount_critical` where per-core performance saturates, and the
+//! Eq. 5 MP selector used by Algorithm 1. Each step is a submodule here:
+//!
+//! - [`roofline`]: Eq. 3 intensity + the classical roofline bound;
+//! - [`features`]: layer feature extraction + the PCA characterization;
+//! - [`critical`]: fitting `OpCount_critical` from a single-core sweep;
+//! - [`mp_select`]: the Eq. 5 `MP(C, OpCount)` selector (α = 0.316,
+//!   β = 0.659) with a regression fitter to re-derive the weights.
+
+pub mod roofline;
+pub mod features;
+pub mod critical;
+pub mod mp_select;
+
+pub use mp_select::{MpModel, select_mp};
+pub use roofline::roofline_gflops;

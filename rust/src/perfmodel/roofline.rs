@@ -1,0 +1,65 @@
+//! The roofline model (Eq. 3 + Williams et al.) the paper starts from —
+//! and shows to be insufficient for the MLU100 (Fig. 3).
+
+use crate::accel::AcceleratorSpec;
+use crate::graph::Layer;
+
+/// Eq. 3: operation intensity = ops / total tensor bytes.
+pub fn intensity(layer: &Layer) -> f64 {
+    layer.intensity()
+}
+
+/// Roofline-attainable GFLOPS at a given intensity for the whole chip:
+/// `min(peak, intensity * BW)`.
+pub fn roofline_gflops(spec: &AcceleratorSpec, intensity_ops_per_byte: f64) -> f64 {
+    (intensity_ops_per_byte * spec.mem_bw_gbps).min(spec.peak_gflops())
+}
+
+/// Roofline for a single core (1/num_cores of bandwidth and compute).
+pub fn roofline_gflops_single_core(spec: &AcceleratorSpec, intensity_ops_per_byte: f64) -> f64 {
+    (intensity_ops_per_byte * spec.mem_bw_gbps).min(spec.peak_gflops_per_core)
+}
+
+/// The ridge point (ops/byte) where the chip turns compute-bound.
+pub fn ridge_intensity(spec: &AcceleratorSpec) -> f64 {
+    spec.peak_gflops() / spec.mem_bw_gbps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Simulator;
+    use crate::graph::layer::ConvSpec;
+
+    #[test]
+    fn memory_bound_region_linear() {
+        let s = AcceleratorSpec::mlu100();
+        assert!((roofline_gflops(&s, 10.0) - 1024.0).abs() < 1e-9);
+        assert!((roofline_gflops(&s, 100.0) - 10240.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_bound_region_flat() {
+        let s = AcceleratorSpec::mlu100();
+        assert_eq!(roofline_gflops(&s, 1e6), s.peak_gflops());
+    }
+
+    #[test]
+    fn ridge_point() {
+        let s = AcceleratorSpec::mlu100();
+        // 64000 / 102.4 = 625 ops/byte.
+        assert!((ridge_intensity(&s) - 625.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_gap_exists() {
+        // The Fig. 3 observation: actual performance sits well below the
+        // roofline for real layers.
+        let sim = Simulator::mlu100();
+        let layer = crate::graph::Layer::conv("c", ConvSpec::same(64, 64, 56, 3));
+        let measured = sim.layer_gflops(&layer, 32);
+        let bound = roofline_gflops(&sim.spec, intensity(&layer));
+        assert!(measured < 0.5 * bound,
+                "measured {measured} should gap below roofline {bound}");
+    }
+}

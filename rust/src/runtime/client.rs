@@ -1,0 +1,238 @@
+//! PJRT client wrapper: compile-once, execute-many.
+//!
+//! Follows /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are cached by artifact name so
+//! the request loop never recompiles (the paper's "compiled inference
+//! session" model).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// Runtime error domain.
+#[derive(Debug)]
+pub enum RuntimeError {
+    Io(String),
+    Xla(String),
+    Shape(String),
+    UnknownArtifact(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Io(m) => write!(f, "I/O error: {m}"),
+            RuntimeError::Xla(m) => write!(f, "XLA error: {m}"),
+            RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
+            RuntimeError::UnknownArtifact(m) => write!(f, "unknown artifact: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// The PJRT-backed execution runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(dir).map_err(RuntimeError::Io)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Open the default artifact directory (see [`super::artifact_dir`]).
+    pub fn open_default() -> Result<Runtime, RuntimeError> {
+        Runtime::new(&super::artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn prepare(&mut self, name: &str) -> Result<(), RuntimeError> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?
+            .clone();
+        let path = self.manifest.hlo_path(&spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| RuntimeError::Io(format!("non-UTF8 path {path:?}")))?;
+        // HLO *text* interchange — see gen_hlo.py / DESIGN.md: serialized
+        // protos from jax >= 0.5 carry 64-bit ids this XLA rejects.
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given inputs (shapes checked against the
+    /// manifest). Returns the single output tensor.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Tensor, RuntimeError> {
+        self.prepare(name)?;
+        let spec = self.manifest.get(name).unwrap().clone();
+        check_shapes(&spec, inputs)?;
+        let exe = self.executables.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(Tensor::from_literal(&out, spec.output_shape.clone())?)
+    }
+
+    /// Execute a fused artifact's unfused stage chain: feed `x` through each
+    /// per-stage executable, threading the activation. `params` are the
+    /// fused artifact's (w, b) pairs in order.
+    pub fn execute_stagewise(&mut self, fused_name: &str, inputs: &[Tensor])
+                             -> Result<Tensor, RuntimeError> {
+        let stages: Vec<String> = self
+            .manifest
+            .fused_pairs
+            .get(fused_name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(fused_name.to_string()))?
+            .clone();
+        if stages.is_empty() {
+            return Err(RuntimeError::UnknownArtifact(format!(
+                "{fused_name} has no per-stage artifacts"
+            )));
+        }
+        let mut cur = inputs[0].clone();
+        for (i, stage) in stages.iter().enumerate() {
+            let stage_inputs =
+                vec![cur, inputs[1 + 2 * i].clone(), inputs[2 + 2 * i].clone()];
+            cur = self.execute(stage, &stage_inputs)?;
+        }
+        Ok(cur)
+    }
+
+    /// Deterministic random inputs for an artifact (for equivalence checks).
+    pub fn random_inputs(&self, name: &str, seed: u64) -> Result<Vec<Tensor>, RuntimeError> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let mut rng = crate::util::XorShiftRng::new(seed);
+        Ok(spec
+            .input_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let scale = if i == 0 { 1.0 } else { 0.3 };
+                Tensor::random(s.clone(), &mut rng, scale)
+            })
+            .collect())
+    }
+}
+
+fn check_shapes(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<(), RuntimeError> {
+    if inputs.len() != spec.input_shapes.len() {
+        return Err(RuntimeError::Shape(format!(
+            "{}: {} inputs given, {} expected",
+            spec.name,
+            inputs.len(),
+            spec.input_shapes.len()
+        )));
+    }
+    for (i, (t, want)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+        if &t.shape != want {
+            return Err(RuntimeError::Shape(format!(
+                "{}: input {i} has shape {:?}, expected {:?}",
+                spec.name, t.shape, want
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-touching tests live in rust/tests/runtime_numerics.rs (they need
+    // built artifacts); here we only cover pure helpers.
+    use super::*;
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            depth: 1,
+            batch: 1,
+            height: 4,
+            width: 4,
+            channels: vec![2, 2],
+            relu_last: true,
+            dtype: "f32".into(),
+            input_shapes: vec![vec![1, 4, 4, 2], vec![3, 3, 2, 2], vec![2]],
+            output_shape: vec![1, 4, 4, 2],
+        }
+    }
+
+    #[test]
+    fn shape_check_passes_on_match() {
+        let s = spec();
+        let inputs: Vec<Tensor> = s
+            .input_shapes
+            .iter()
+            .map(|sh| Tensor::zeros(sh.clone()))
+            .collect();
+        assert!(check_shapes(&s, &inputs).is_ok());
+    }
+
+    #[test]
+    fn shape_check_rejects_arity() {
+        let s = spec();
+        let inputs = vec![Tensor::zeros(vec![1, 4, 4, 2])];
+        assert!(matches!(check_shapes(&s, &inputs), Err(RuntimeError::Shape(_))));
+    }
+
+    #[test]
+    fn shape_check_rejects_wrong_dims() {
+        let s = spec();
+        let mut inputs: Vec<Tensor> = s
+            .input_shapes
+            .iter()
+            .map(|sh| Tensor::zeros(sh.clone()))
+            .collect();
+        inputs[1] = Tensor::zeros(vec![3, 3, 2, 4]);
+        let err = check_shapes(&s, &inputs).unwrap_err();
+        assert!(err.to_string().contains("input 1"));
+    }
+
+    #[test]
+    fn error_display() {
+        let e = RuntimeError::UnknownArtifact("zz".into());
+        assert!(e.to_string().contains("zz"));
+    }
+}

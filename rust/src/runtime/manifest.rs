@@ -1,0 +1,281 @@
+//! The `artifacts/manifest.json` schema, written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT artifact: a fused block (or single conv stage) lowered to HLO
+/// text. Mirrors `python/compile/model.py::BlockSpec`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub depth: usize,
+    pub batch: usize,
+    pub height: usize,
+    pub width: usize,
+    /// C_0 (input) followed by each stage's output channels.
+    pub channels: Vec<usize>,
+    pub relu_last: bool,
+    pub dtype: String,
+    /// Parameter shapes in calling order: x, then (w, b) per stage.
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+}
+
+/// Golden-vector entry (deterministic inputs + expected output on disk).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoldenSpec {
+    pub dir: String,
+    pub num_inputs: usize,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// fused artifact name -> its unfused per-stage artifact names.
+    pub fused_pairs: BTreeMap<String, Vec<String>>,
+    pub golden: BTreeMap<String, GoldenSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = v.get("format_version").as_usize().ok_or("missing format_version")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        if v.get("interchange").as_str() != Some("hlo-text") {
+            return Err("manifest interchange must be 'hlo-text'".into());
+        }
+        let mut artifacts = Vec::new();
+        for (i, a) in v.get("artifacts").as_arr().ok_or("missing artifacts")?.iter().enumerate() {
+            artifacts.push(parse_artifact(a).map_err(|e| format!("artifact {i}: {e}"))?);
+        }
+        let mut fused_pairs = BTreeMap::new();
+        if let Some(obj) = v.get("fused_pairs").as_obj() {
+            for (k, stages) in obj {
+                let names = stages
+                    .as_arr()
+                    .ok_or("fused_pairs entry not an array")?
+                    .iter()
+                    .map(|s| s.as_str().map(String::from).ok_or("stage name not a string"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                fused_pairs.insert(k.clone(), names);
+            }
+        }
+        let mut golden = BTreeMap::new();
+        if let Some(obj) = v.get("golden").as_obj() {
+            for (k, g) in obj {
+                golden.insert(
+                    k.clone(),
+                    GoldenSpec {
+                        dir: g.get("dir").as_str().ok_or("golden missing dir")?.to_string(),
+                        num_inputs: g.get("num_inputs").as_usize().ok_or("golden missing num_inputs")?,
+                        sha256: g.get("sha256").as_str().unwrap_or("").to_string(),
+                    },
+                );
+            }
+        }
+        let m = Manifest { dir: dir.to_path_buf(), artifacts, fused_pairs, golden };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        let names: std::collections::BTreeSet<&str> =
+            self.artifacts.iter().map(|a| a.name.as_str()).collect();
+        if names.len() != self.artifacts.len() {
+            return Err("duplicate artifact names".into());
+        }
+        for (fused, stages) in &self.fused_pairs {
+            if !names.contains(fused.as_str()) {
+                return Err(format!("fused_pairs references unknown '{fused}'"));
+            }
+            for s in stages {
+                if !names.contains(s.as_str()) {
+                    return Err(format!("fused_pairs references unknown stage '{s}'"));
+                }
+            }
+        }
+        for a in &self.artifacts {
+            if a.input_shapes.len() != 1 + 2 * a.depth {
+                return Err(format!(
+                    "{}: {} input shapes for depth {}",
+                    a.name, a.input_shapes.len(), a.depth
+                ));
+            }
+            if a.channels.len() != a.depth + 1 {
+                return Err(format!("{}: channels/depth mismatch", a.name));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Path of an artifact's HLO text file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Fused artifacts that have per-stage counterparts (depth > 1).
+    pub fn fused_with_stages(&self) -> Vec<(&ArtifactSpec, Vec<&ArtifactSpec>)> {
+        self.fused_pairs
+            .iter()
+            .filter(|(_, stages)| !stages.is_empty())
+            .filter_map(|(name, stages)| {
+                let fused = self.get(name)?;
+                let st: Option<Vec<&ArtifactSpec>> =
+                    stages.iter().map(|s| self.get(s)).collect();
+                Some((fused, st?))
+            })
+            .collect()
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactSpec, String> {
+    let shapes = |key: &str| -> Result<Vec<Vec<usize>>, String> {
+        a.get(key)
+            .as_arr()
+            .ok_or_else(|| format!("missing {key}"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .ok_or("shape not an array".to_string())?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                    .collect()
+            })
+            .collect()
+    };
+    Ok(ArtifactSpec {
+        name: a.get("name").as_str().ok_or("missing name")?.to_string(),
+        file: a.get("file").as_str().ok_or("missing file")?.to_string(),
+        depth: a.get("depth").as_usize().ok_or("missing depth")?,
+        batch: a.get("batch").as_usize().ok_or("missing batch")?,
+        height: a.get("height").as_usize().ok_or("missing height")?,
+        width: a.get("width").as_usize().ok_or("missing width")?,
+        channels: a
+            .get("channels")
+            .as_arr()
+            .ok_or("missing channels")?
+            .iter()
+            .map(|c| c.as_usize().ok_or("bad channel".to_string()))
+            .collect::<Result<_, _>>()?,
+        relu_last: a.get("relu_last").as_bool().unwrap_or(true),
+        dtype: a.get("dtype").as_str().unwrap_or("f32").to_string(),
+        input_shapes: shapes("input_shapes")?,
+        output_shape: a
+            .get("output_shape")
+            .as_arr()
+            .ok_or("missing output_shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+            .collect::<Result<_, _>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+          "format_version": 1,
+          "interchange": "hlo-text",
+          "artifacts": [
+            {"name": "b2", "file": "b2.hlo.txt", "depth": 2, "batch": 1,
+             "height": 16, "width": 16, "channels": [8, 8, 8],
+             "relu_last": true, "dtype": "f32",
+             "input_shapes": [[1,16,16,8],[3,3,8,8],[8],[3,3,8,8],[8]],
+             "output_shape": [1,16,16,8]},
+            {"name": "b2__stage0", "file": "s0.hlo.txt", "depth": 1, "batch": 1,
+             "height": 16, "width": 16, "channels": [8, 8],
+             "relu_last": true, "dtype": "f32",
+             "input_shapes": [[1,16,16,8],[3,3,8,8],[8]],
+             "output_shape": [1,16,16,8]},
+            {"name": "b2__stage1", "file": "s1.hlo.txt", "depth": 1, "batch": 1,
+             "height": 16, "width": 16, "channels": [8, 8],
+             "relu_last": true, "dtype": "f32",
+             "input_shapes": [[1,16,16,8],[3,3,8,8],[8]],
+             "output_shape": [1,16,16,8]}
+          ],
+          "fused_pairs": {"b2": ["b2__stage0", "b2__stage1"]},
+          "golden": {"b2": {"dir": "golden/b2", "num_inputs": 5,
+                            "sha256": "abc"}}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let b2 = m.get("b2").unwrap();
+        assert_eq!(b2.depth, 2);
+        assert_eq!(b2.input_shapes.len(), 5);
+        assert_eq!(m.fused_pairs["b2"].len(), 2);
+        assert_eq!(m.golden["b2"].num_inputs, 5);
+        assert_eq!(m.hlo_path(b2), PathBuf::from("/tmp/a/b2.hlo.txt"));
+    }
+
+    #[test]
+    fn fused_with_stages_resolves() {
+        let m = Manifest::parse(&sample(), Path::new("/tmp/a")).unwrap();
+        let pairs = m.fused_with_stages();
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].1.len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = sample().replace("\"format_version\": 1", "\"format_version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn rejects_unknown_stage_reference() {
+        let bad = sample().replace("b2__stage1\"]", "nonexistent\"]");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_arity_mismatch() {
+        let bad = sample().replace(
+            "\"input_shapes\": [[1,16,16,8],[3,3,8,8],[8],[3,3,8,8],[8]]",
+            "\"input_shapes\": [[1,16,16,8],[3,3,8,8],[8]]",
+        );
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).unwrap_err().contains("input shapes"));
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::runtime::artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        assert!(!m.fused_with_stages().is_empty());
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{} missing", a.file);
+        }
+    }
+}

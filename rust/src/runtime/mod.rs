@@ -1,0 +1,38 @@
+//! The PJRT runtime: loads AOT-compiled HLO-text artifacts and executes
+//! them on the request path.
+//!
+//! Architecture (see /opt/xla-example and DESIGN.md §3): Python/JAX lowers
+//! the Pallas fused-conv blocks ONCE at build time (`make artifacts`) to HLO
+//! *text*; this module loads the text through `xla::HloModuleProto::
+//! from_text_file`, compiles with the PJRT CPU client, and executes with
+//! concrete tensors. Python is never involved at run time.
+//!
+//! - [`manifest`]: the `artifacts/manifest.json` schema (names, shapes,
+//!   fused-block ↔ per-stage pairings, golden vectors);
+//! - [`tensor`]: shaped host-side f32 buffers + flat-file I/O;
+//! - [`client`]: the PJRT client wrapper with an executable cache.
+
+pub mod manifest;
+pub mod tensor;
+pub mod client;
+
+pub use client::{Runtime, RuntimeError};
+pub use manifest::{ArtifactSpec, Manifest};
+pub use tensor::Tensor;
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$DLFUSION_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate root (so tests
+/// and examples work from any cwd).
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("DLFUSION_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::Path::new(ARTIFACT_DIR);
+    if cwd.join("manifest.json").exists() {
+        return cwd.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(ARTIFACT_DIR)
+}

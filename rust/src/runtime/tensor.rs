@@ -1,0 +1,155 @@
+//! Shaped host-side f32 tensors and flat-file I/O.
+//!
+//! The runtime exchanges plain row-major f32 buffers with PJRT (`xla::
+//! Literal`) and with the python-written golden vectors (`*.f32` files,
+//! little-endian).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::XorShiftRng;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (for equivalence tests and the
+    /// request generator).
+    pub fn random(shape: Vec<usize>, rng: &mut XorShiftRng, scale: f32) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| (rng.gen_normal() as f32) * scale).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn num_elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Read a little-endian flat f32 file with a known shape (the format
+    /// `aot.py` writes under `artifacts/golden/`).
+    pub fn from_f32_file(path: &Path, shape: Vec<usize>) -> std::io::Result<Tensor> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let want: usize = shape.iter().product::<usize>() * 4;
+        if bytes.len() != want {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: {} bytes, expected {want}", path.display(), bytes.len()),
+            ));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { shape, data })
+    }
+
+    /// Max absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// allclose with combined absolute/relative tolerance.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Convert to an `xla::Literal` with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal, xla::Error> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data).reshape(&dims)
+    }
+
+    /// Convert from an `xla::Literal` (f32) with a known shape.
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor, xla::Error> {
+        let data = lit.to_vec::<f32>()?;
+        Ok(Tensor::new(shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.num_elems(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.0 + 1e-6, 3.0]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::new(vec![3], vec![1.0, 2.5, 3.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+        assert!((a.max_abs_diff(&c) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatch_not_close() {
+        let a = Tensor::zeros(vec![2, 2]);
+        let b = Tensor::zeros(vec![4]);
+        assert!(!a.allclose(&b, 1.0, 1.0));
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("dlfusion_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.f32");
+        let values = [1.5f32, -2.25, 3.125];
+        let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = Tensor::from_f32_file(&path, vec![3]).unwrap();
+        assert_eq!(t.data, values);
+        // Wrong shape -> error.
+        assert!(Tensor::from_f32_file(&path, vec![4]).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let mut r1 = XorShiftRng::new(3);
+        let mut r2 = XorShiftRng::new(3);
+        assert_eq!(
+            Tensor::random(vec![4, 4], &mut r1, 1.0),
+            Tensor::random(vec![4, 4], &mut r2, 1.0)
+        );
+    }
+}

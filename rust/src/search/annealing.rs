@@ -1,0 +1,164 @@
+//! Simulated-annealing search over the *unreduced* joint space — a
+//! beyond-paper comparator (the paper's related work points at learned /
+//! stochastic schedulers like REGAL as the alternative to heuristics).
+//!
+//! State: a full [`Schedule`]. Moves: split a random block, merge two
+//! adjacent blocks, or bump one block's MP up/down a power of two.
+//! Acceptance: Metropolis on simulated latency with geometric cooling.
+//! Deterministic under a fixed seed.
+//!
+//! Used by `benches/ablation.rs` to show where DLFusion's O(n) heuristic
+//! sits between the oracle DP and a generic stochastic search given equal
+//! and much larger move budgets.
+
+use crate::accel::Simulator;
+use crate::graph::Model;
+use crate::optimizer::schedule::{Block, Schedule};
+use crate::util::XorShiftRng;
+
+/// Annealer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AnnealConfig {
+    pub iterations: usize,
+    pub seed: u64,
+    /// Initial temperature as a fraction of the initial cost.
+    pub t0_fraction: f64,
+    /// Geometric cooling factor per iteration.
+    pub cooling: f64,
+}
+
+impl Default for AnnealConfig {
+    fn default() -> Self {
+        AnnealConfig { iterations: 2000, seed: 0xA11EA1, t0_fraction: 0.1, cooling: 0.997 }
+    }
+}
+
+/// Run the annealer from the layer-wise MP=1 baseline (or a provided seed
+/// schedule). Returns the best schedule found and its latency.
+pub fn anneal(sim: &Simulator, model: &Model, cfg: &AnnealConfig,
+              init: Option<Schedule>) -> (Schedule, f64) {
+    let n = model.num_layers();
+    let max_mp = sim.spec.num_cores;
+    let mut rng = XorShiftRng::new(cfg.seed);
+    let mut cur = init.unwrap_or_else(|| Schedule::layerwise(n, 1));
+    debug_assert!(cur.validate(n, max_mp).is_ok());
+    let cost = |s: &Schedule| sim.run_schedule(model, s).total_ms;
+    let mut cur_cost = cost(&cur);
+    let mut best = cur.clone();
+    let mut best_cost = cur_cost;
+    let mut temp = cur_cost * cfg.t0_fraction;
+
+    for _ in 0..cfg.iterations {
+        let cand = propose(&cur, &mut rng, max_mp);
+        let cand_cost = cost(&cand);
+        let accept = cand_cost < cur_cost
+            || rng.next_f64() < (-(cand_cost - cur_cost) / temp.max(1e-12)).exp();
+        if accept {
+            cur = cand;
+            cur_cost = cand_cost;
+            if cur_cost < best_cost {
+                best = cur.clone();
+                best_cost = cur_cost;
+            }
+        }
+        temp *= cfg.cooling;
+    }
+    (best, best_cost)
+}
+
+/// One random neighbourhood move; always yields a valid schedule.
+fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize) -> Schedule {
+    let mut blocks = s.blocks.clone();
+    match rng.gen_usize(0, 2) {
+        // Split a random block at a random interior point (keeps both MPs).
+        0 => {
+            let bi = rng.gen_usize(0, blocks.len() - 1);
+            let b = blocks[bi];
+            if b.len() >= 2 {
+                let cut = b.start + rng.gen_usize(1, b.len() - 1);
+                blocks[bi] = Block { start: b.start, end: cut, mp: b.mp };
+                blocks.insert(bi + 1, Block { start: cut, end: b.end, mp: b.mp });
+            }
+        }
+        // Merge a random adjacent pair (MP of the larger half).
+        1 => {
+            if blocks.len() >= 2 {
+                let bi = rng.gen_usize(0, blocks.len() - 2);
+                let (a, b) = (blocks[bi], blocks[bi + 1]);
+                let mp = if a.len() >= b.len() { a.mp } else { b.mp };
+                blocks[bi] = Block { start: a.start, end: b.end, mp };
+                blocks.remove(bi + 1);
+            }
+        }
+        // Nudge one block's MP by a power-of-two step.
+        _ => {
+            let bi = rng.gen_usize(0, blocks.len() - 1);
+            let b = &mut blocks[bi];
+            if rng.next_f64() < 0.5 {
+                b.mp = (b.mp * 2).min(max_mp.next_power_of_two() / 2 * 2).min(max_mp);
+            } else {
+                b.mp = (b.mp / 2).max(1);
+            }
+        }
+    }
+    Schedule::new(blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::ConvSpec;
+    use crate::optimizer;
+    use crate::zoo;
+
+    fn sim() -> Simulator {
+        Simulator::mlu100()
+    }
+
+    #[test]
+    fn proposals_stay_valid() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut rng = XorShiftRng::new(1);
+        let mut cur = Schedule::layerwise(m.num_layers(), 1);
+        for _ in 0..500 {
+            cur = propose(&cur, &mut rng, s.spec.num_cores);
+            cur.validate(m.num_layers(), s.spec.num_cores).unwrap();
+        }
+    }
+
+    #[test]
+    fn anneal_improves_on_baseline() {
+        let s = sim();
+        let m = zoo::identical_conv_model("t", ConvSpec::same(64, 64, 56, 3), 12);
+        let base = s
+            .run_schedule(&m, &Schedule::layerwise(m.num_layers(), 1))
+            .total_ms;
+        let cfg = AnnealConfig { iterations: 800, ..Default::default() };
+        let (sched, cost) = anneal(&s, &m, &cfg, None);
+        sched.validate(m.num_layers(), s.spec.num_cores).unwrap();
+        assert!(cost < base * 0.6, "anneal {cost} vs baseline {base}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let cfg = AnnealConfig { iterations: 300, ..Default::default() };
+        let (a, ca) = anneal(&s, &m, &cfg, None);
+        let (b, cb) = anneal(&s, &m, &cfg, None);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn warm_start_from_dlfusion_never_worse() {
+        let s = sim();
+        let m = zoo::resnet18();
+        let dlf = optimizer::dlfusion_schedule(&m, &s.spec);
+        let dlf_cost = s.run_schedule(&m, &dlf).total_ms;
+        let cfg = AnnealConfig { iterations: 500, ..Default::default() };
+        let (_, cost) = anneal(&s, &m, &cfg, Some(dlf));
+        assert!(cost <= dlf_cost * 1.0 + 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! The reduced brute-force oracle (strategy 7, Section V.3).
+//!
+//! Search-space reductions taken from the paper:
+//! 1. MP drawn from `{1, 2, 4, 8, 12, 16, 24, 32}` instead of `1..=32`;
+//! 2. fusion-block sizes restricted to multiples of four (the final block
+//!    may take the remainder so every layer is covered).
+//!
+//! Within that reduced space the total latency is a sum of independent
+//! per-block costs, so the global optimum is a shortest path over cut
+//! positions: `dp[j] = min over i of dp[i] + best_mp_cost(i..j)`. The DP
+//! visits every (block, MP) candidate exactly once — identical result to
+//! explicit enumeration (certified against [`super::exhaustive`] in tests)
+//! without the exponential blowup.
+
+use crate::accel::Simulator;
+use crate::graph::Model;
+use crate::optimizer::schedule::{Block, Schedule};
+
+/// Bookkeeping from a search run (for the search-time comparison the paper
+/// makes: oracle O(n²) block evaluations vs DLFusion O(n)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Number of (block, mp) latency evaluations performed.
+    pub evaluations: usize,
+    /// Number of candidate blocks considered.
+    pub blocks_considered: usize,
+}
+
+/// The paper's reduced oracle. Returns the optimal schedule in the reduced
+/// space plus search statistics.
+pub fn oracle_schedule(sim: &Simulator, model: &Model) -> (Schedule, SearchStats) {
+    let sizes = SizeRule::MultipleOfFour;
+    dp_search(sim, model, &sim.spec.reduced_mp_set(), sizes)
+}
+
+/// Extension: the same DP over *all* block sizes and every power-of-two MP —
+/// a strictly larger space than the paper's reduced oracle (used by the
+/// ablation bench to quantify what the reduction costs).
+pub fn oracle_schedule_full(sim: &Simulator, model: &Model) -> (Schedule, SearchStats) {
+    let mps: Vec<usize> = (0..=5).map(|p| 1usize << p)
+        .filter(|&m| m <= sim.spec.num_cores).collect();
+    dp_search(sim, model, &mps, SizeRule::Any)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SizeRule {
+    /// Paper rule: |block| ≡ 0 (mod 4), remainder allowed only at the end.
+    MultipleOfFour,
+    /// Any contiguous block.
+    Any,
+}
+
+impl SizeRule {
+    fn allowed(&self, len: usize, ends_at_model_end: bool) -> bool {
+        match self {
+            SizeRule::Any => len >= 1,
+            SizeRule::MultipleOfFour => len >= 1 && (len % 4 == 0 || ends_at_model_end),
+        }
+    }
+}
+
+fn dp_search(sim: &Simulator, model: &Model, mp_set: &[usize], sizes: SizeRule)
+             -> (Schedule, SearchStats) {
+    let n = model.num_layers();
+    assert!(n >= 1);
+    assert!(!mp_set.is_empty());
+    let mut stats = SearchStats { evaluations: 0, blocks_considered: 0 };
+
+    // best_block[i][j-1]: (cost, mp) of the best single block over [i, j).
+    // dp[j]: best cost covering [0, j); parent[j] = (i, mp) of last block.
+    let mut dp = vec![f64::INFINITY; n + 1];
+    let mut parent: Vec<Option<(usize, usize)>> = vec![None; n + 1];
+    dp[0] = 0.0;
+
+    for j in 1..=n {
+        for i in 0..j {
+            let len = j - i;
+            if !sizes.allowed(len, j == n) {
+                continue;
+            }
+            if dp[i].is_infinite() {
+                continue;
+            }
+            stats.blocks_considered += 1;
+            let layers = &model.layers[i..j];
+            // §Perf: one shared-precomputation call for the whole MP set
+            // (identical numbers to per-MP block_latency_ms; see
+            // EXPERIMENTS.md §Perf for the before/after).
+            let costs = sim.block_latency_ms_multi(layers, mp_set);
+            stats.evaluations += mp_set.len();
+            let (best_idx, best) = costs
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(k, &c)| (k, c))
+                .unwrap();
+            let best_mp = mp_set[best_idx];
+            let total = dp[i] + best;
+            if total < dp[j] {
+                dp[j] = total;
+                parent[j] = Some((i, best_mp));
+            }
+        }
+    }
+
+    // Reconstruct.
+    let mut blocks = Vec::new();
+    let mut j = n;
+    while j > 0 {
+        let (i, mp) = parent[j].expect("dp unreachable state");
+        blocks.push(Block { start: i, end: j, mp });
+        j = i;
+    }
+    blocks.reverse();
+    let schedule = Schedule::new(blocks);
+    debug_assert!(schedule.validate(n, sim.spec.num_cores).is_ok());
+    (schedule, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::ConvSpec;
+    use crate::optimizer::dlfusion_schedule;
+    use crate::zoo;
+
+    fn sim() -> Simulator {
+        Simulator::mlu100()
+    }
+
+    #[test]
+    fn oracle_covers_and_respects_block_rule() {
+        let s = sim();
+        let m = zoo::resnet18();
+        let (sched, _) = oracle_schedule(&s, &m);
+        sched.validate(m.num_layers(), s.spec.num_cores).unwrap();
+        for (i, b) in sched.blocks.iter().enumerate() {
+            let last = i == sched.blocks.len() - 1;
+            assert!(b.len() % 4 == 0 || last,
+                    "block {i} len {} violates multiple-of-four", b.len());
+            assert!(s.spec.reduced_mp_set().contains(&b.mp));
+        }
+    }
+
+    #[test]
+    fn oracle_beats_or_matches_dlfusion() {
+        // Strategy 7 is the optimal point of a superset of DLFusion's
+        // decisions *up to the size rule*; on the evaluated networks it must
+        // not lose by more than the rule's quantization. We assert the
+        // stronger practical property the paper reports: oracle >= DLFusion.
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::vgg19(), zoo::alexnet()] {
+            let (oracle, _) = oracle_schedule(&s, &m);
+            let heuristic = dlfusion_schedule(&m, &s.spec);
+            let t_oracle = s.run_schedule(&m, &oracle).total_ms;
+            let t_heur = s.run_schedule(&m, &heuristic).total_ms;
+            assert!(t_oracle <= t_heur * 1.02,
+                    "{}: oracle {t_oracle} vs dlfusion {t_heur}", m.name);
+        }
+    }
+
+    #[test]
+    fn full_dp_at_least_as_good_as_reduced() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let (red, _) = oracle_schedule(&s, &m);
+        let (full, _) = oracle_schedule_full(&s, &m);
+        let t_red = s.run_schedule(&m, &red).total_ms;
+        let t_full = s.run_schedule(&m, &full).total_ms;
+        assert!(t_full <= t_red + 1e-12);
+    }
+
+    #[test]
+    fn search_stats_scale_quadratically() {
+        let s = sim();
+        let m1 = zoo::identical_conv_model("a", ConvSpec::same(64, 64, 28, 3), 8);
+        let m2 = zoo::identical_conv_model("b", ConvSpec::same(64, 64, 28, 3), 16);
+        let (_, st1) = oracle_schedule(&s, &m1);
+        let (_, st2) = oracle_schedule(&s, &m2);
+        assert!(st2.blocks_considered > st1.blocks_considered * 2);
+        assert_eq!(st1.evaluations, st1.blocks_considered * 8);
+    }
+
+    #[test]
+    fn single_layer_model() {
+        let s = sim();
+        let m = zoo::identical_conv_model("one", ConvSpec::same(64, 64, 28, 3), 1);
+        // n=2 layers (conv+relu). Must still produce a valid schedule.
+        let (sched, _) = oracle_schedule(&s, &m);
+        sched.validate(m.num_layers(), s.spec.num_cores).unwrap();
+    }
+}

@@ -1,0 +1,115 @@
+//! True exhaustive enumeration over the *full* joint space for tiny models:
+//! every contiguous partition (2^(n-1) cut masks) × every MP assignment.
+//! Exponential — guarded to n <= 12 — and used solely to certify that the
+//! DP oracle is exact and that Eq. 4 counts what we think it counts.
+
+use crate::accel::Simulator;
+use crate::graph::Model;
+use crate::optimizer::schedule::{Block, Schedule};
+
+/// Enumerate everything; return the best schedule and the number of
+/// candidates visited.
+pub fn exhaustive_schedule(sim: &Simulator, model: &Model, mp_set: &[usize])
+                           -> (Schedule, u64) {
+    let n = model.num_layers();
+    assert!(n >= 1 && n <= 12, "exhaustive search is exponential (n={n})");
+    assert!(!mp_set.is_empty());
+    let mut best_cost = f64::INFINITY;
+    let mut best: Option<Schedule> = None;
+    let mut visited = 0u64;
+
+    // Each mask bit k set = a cut after layer k.
+    for mask in 0u32..(1 << (n - 1)) {
+        // Build block ranges.
+        let mut ranges = Vec::new();
+        let mut start = 0usize;
+        for k in 0..(n - 1) {
+            if mask & (1 << k) != 0 {
+                ranges.push((start, k + 1));
+                start = k + 1;
+            }
+        }
+        ranges.push((start, n));
+        // Cost of each block is independent: pick its best MP directly
+        // (equivalent to enumerating the cross product, but we still count
+        // the full cross product as "visited" for the space comparison).
+        let mut total = 0.0;
+        let mut blocks = Vec::with_capacity(ranges.len());
+        for &(i, j) in &ranges {
+            let mut best_mp = mp_set[0];
+            let mut best_c = f64::INFINITY;
+            for &mp in mp_set {
+                let c = sim.block_latency_ms(&model.layers[i..j], mp);
+                if c < best_c {
+                    best_c = c;
+                    best_mp = mp;
+                }
+            }
+            total += best_c;
+            blocks.push(Block { start: i, end: j, mp: best_mp });
+        }
+        visited += (mp_set.len() as u64).pow(ranges.len() as u32);
+        if total < best_cost {
+            best_cost = total;
+            best = Some(Schedule::new(blocks));
+        }
+    }
+    (best.unwrap(), visited)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::ConvSpec;
+    use crate::optimizer::space::enumerate_space;
+    use crate::search::brute::oracle_schedule_full;
+    use crate::zoo;
+
+    #[test]
+    fn dp_matches_exhaustive_on_tiny_models() {
+        let sim = Simulator::mlu100();
+        let mp_set: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
+        for n in [2usize, 3, 5, 8] {
+            let m = zoo::identical_conv_model(
+                "t", ConvSpec::same(64, 64, 28, 3), n);
+            // Strip the relus so n stays tiny and blocks equal convs.
+            let m = crate::graph::Model::new(
+                "t",
+                m.input,
+                m.layers.into_iter().filter(|l| l.is_compute()).collect(),
+            );
+            let (ex, _) = exhaustive_schedule(&sim, &m, &mp_set);
+            let (dp, _) = oracle_schedule_full(&sim, &m);
+            let t_ex = sim.run_schedule(&m, &ex).total_ms;
+            let t_dp = sim.run_schedule(&m, &dp).total_ms;
+            assert!((t_ex - t_dp).abs() < 1e-9,
+                    "n={n}: exhaustive {t_ex} vs dp {t_dp}");
+        }
+    }
+
+    #[test]
+    fn visited_count_matches_eq4_including_single_block() {
+        // Eq. 4 counts partitions with >= 2 blocks; exhaustive also visits
+        // the single-block case, so visited = Eq4(n, m) + m.
+        let sim = Simulator::mlu100();
+        let n = 6;
+        let mp_set = vec![1, 2, 4, 8];
+        let m = zoo::identical_conv_model("t", ConvSpec::same(32, 32, 14, 3), n);
+        let m = crate::graph::Model::new(
+            "t",
+            m.input,
+            m.layers.into_iter().filter(|l| l.is_compute()).collect(),
+        );
+        let (_, visited) = exhaustive_schedule(&sim, &m, &mp_set);
+        let eq4 = enumerate_space(n, mp_set.len());
+        assert_eq!(visited as u128, eq4 + mp_set.len() as u128);
+    }
+
+    #[test]
+    #[should_panic(expected = "exponential")]
+    fn guards_large_n() {
+        let sim = Simulator::mlu100();
+        let m = zoo::resnet18();
+        exhaustive_schedule(&sim, &m, &[1]);
+    }
+}

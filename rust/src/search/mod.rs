@@ -1,0 +1,17 @@
+//! Search strategies over the joint (fusion, MP) space.
+//!
+//! - [`brute`]: the paper's *reduced* brute-force oracle (strategy 7):
+//!   MP restricted to `{1,2,4,8,12,16,24,32}` and block sizes to multiples
+//!   of four. Because block latencies are additive, the optimum over the
+//!   reduced space is found exactly by shortest-path dynamic programming in
+//!   `O(n²/16 · |MP|)` block evaluations — the same optimum an explicit
+//!   enumeration would reach, at "acceptable search time".
+//! - [`exhaustive`]: true enumeration for tiny models, used by the tests to
+//!   certify the DP is exact.
+
+pub mod brute;
+pub mod exhaustive;
+pub mod annealing;
+
+pub use brute::{oracle_schedule, oracle_schedule_full, SearchStats};
+pub use exhaustive::exhaustive_schedule;

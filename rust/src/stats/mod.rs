@@ -1,0 +1,17 @@
+//! Statistics toolkit for the characterization methodology.
+//!
+//! The paper derives its performance model by (1) sweeping microbenchmarks,
+//! (2) running **PCA** over layer features to find that operation count and
+//! channel size dominate achieved performance (Section II.B), and (3)
+//! empirically fitting the Eq. 5 weights (α = 0.316, β = 0.659) from the PCA
+//! weights. This module provides exactly those tools: descriptive stats for
+//! the error bars of Fig. 4(a), least-squares fits for `OpCount_critical`,
+//! and a dependency-free PCA (covariance + Jacobi eigensolver).
+
+pub mod descriptive;
+pub mod regression;
+pub mod pca;
+
+pub use descriptive::Summary;
+pub use pca::Pca;
+pub use regression::linear_fit;

@@ -1,0 +1,278 @@
+//! Principal component analysis, from scratch.
+//!
+//! The paper applies PCA to (standardized) layer features — operation count,
+//! channel size, kernel size, feature-map size — against achieved
+//! performance, finding op count and channel carry the weight; the Eq. 5
+//! coefficients α = 0.316 and β = 0.659 come from "the weight result of
+//! PCA". `examples/characterize.rs` repeats that derivation on simulator
+//! sweeps using this implementation.
+//!
+//! Implementation: standardize features, form the covariance matrix, and
+//! diagonalize with the cyclic Jacobi eigenvalue algorithm (symmetric
+//! matrices, unconditionally convergent — no external linear algebra needed).
+
+/// PCA decomposition result.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    /// Eigenvalues (explained variance), descending.
+    pub eigenvalues: Vec<f64>,
+    /// Row i = i-th principal axis (unit length), matching `eigenvalues[i]`.
+    pub components: Vec<Vec<f64>>,
+    /// Per-feature means used for standardization.
+    pub means: Vec<f64>,
+    /// Per-feature standard deviations used for standardization.
+    pub stds: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit on a samples × features matrix. Features with zero variance get
+    /// std 1 (they simply contribute nothing).
+    pub fn fit(data: &[Vec<f64>]) -> Pca {
+        assert!(data.len() >= 2, "PCA needs at least 2 samples");
+        let d = data[0].len();
+        assert!(d >= 1);
+        for row in data {
+            assert_eq!(row.len(), d, "ragged data");
+        }
+        let n = data.len() as f64;
+        let means: Vec<f64> = (0..d)
+            .map(|j| data.iter().map(|r| r[j]).sum::<f64>() / n)
+            .collect();
+        let stds: Vec<f64> = (0..d)
+            .map(|j| {
+                let v = data.iter().map(|r| (r[j] - means[j]).powi(2)).sum::<f64>()
+                    / (n - 1.0);
+                let s = v.sqrt();
+                if s > 1e-12 { s } else { 1.0 }
+            })
+            .collect();
+        // Covariance of standardized data (== correlation matrix).
+        let mut cov = vec![vec![0.0f64; d]; d];
+        for row in data {
+            let z: Vec<f64> = (0..d).map(|j| (row[j] - means[j]) / stds[j]).collect();
+            for i in 0..d {
+                for j in 0..d {
+                    cov[i][j] += z[i] * z[j];
+                }
+            }
+        }
+        for r in cov.iter_mut() {
+            for v in r.iter_mut() {
+                *v /= n - 1.0;
+            }
+        }
+        let (mut eigenvalues, mut components) = jacobi_eigen(&cov);
+        // Sort descending by eigenvalue.
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.sort_by(|&a, &b| eigenvalues[b].partial_cmp(&eigenvalues[a]).unwrap());
+        eigenvalues = idx.iter().map(|&i| eigenvalues[i]).collect();
+        components = idx.iter().map(|&i| components[i].clone()).collect();
+        // Sign convention: largest-magnitude entry positive (deterministic).
+        for c in components.iter_mut() {
+            let lead = c
+                .iter()
+                .cloned()
+                .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+                .unwrap();
+            if lead < 0.0 {
+                for v in c.iter_mut() {
+                    *v = -*v;
+                }
+            }
+        }
+        Pca { eigenvalues, components, means, stds }
+    }
+
+    /// Fraction of variance explained by each component.
+    pub fn explained_ratio(&self) -> Vec<f64> {
+        let total: f64 = self.eigenvalues.iter().sum();
+        self.eigenvalues.iter().map(|&e| e / total.max(1e-300)).collect()
+    }
+
+    /// Project one sample onto the principal axes.
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        let z: Vec<f64> = row
+            .iter()
+            .zip(self.means.iter().zip(&self.stds))
+            .map(|(x, (m, s))| (x - m) / s)
+            .collect();
+        self.components
+            .iter()
+            .map(|c| c.iter().zip(&z).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// |loading| of each input feature on the first principal component,
+    /// normalized to sum 1 — the paper's "weight result of PCA" used for the
+    /// Eq. 5 α/β.
+    pub fn pc1_weights(&self) -> Vec<f64> {
+        let abs: Vec<f64> = self.components[0].iter().map(|v| v.abs()).collect();
+        let sum: f64 = abs.iter().sum();
+        abs.iter().map(|v| v / sum.max(1e-300)).collect()
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors-as-rows), unsorted.
+fn jacobi_eigen(m: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = m.len();
+    let mut a: Vec<Vec<f64>> = m.to_vec();
+    // v starts as identity; columns accumulate the rotations.
+    let mut v = vec![vec![0.0f64; n]; n];
+    for (i, r) in v.iter_mut().enumerate() {
+        r[i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        let off: f64 = (0..n)
+            .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
+            .map(|(i, j)| a[i][j] * a[i][j])
+            .sum();
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                if a[p][q].abs() < 1e-30 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k][p];
+                    let vkq = v[k][q];
+                    v[k][p] = c * vkp - s * vkq;
+                    v[k][q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eigenvalues: Vec<f64> = (0..n).map(|i| a[i][i]).collect();
+    // Transpose: eigenvector for eigenvalue i is column i of v.
+    let vectors: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..n).map(|k| v[k][i]).collect())
+        .collect();
+    (eigenvalues, vectors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShiftRng;
+
+    #[test]
+    fn identity_covariance_unit_eigenvalues() {
+        // Independent standardized features -> eigenvalues near 1 each.
+        let mut rng = XorShiftRng::new(5);
+        let data: Vec<Vec<f64>> = (0..4000)
+            .map(|_| vec![rng.gen_normal(), rng.gen_normal(), rng.gen_normal()])
+            .collect();
+        let p = Pca::fit(&data);
+        for &e in &p.eigenvalues {
+            assert!((e - 1.0).abs() < 0.15, "eigenvalue {e}");
+        }
+    }
+
+    #[test]
+    fn dominant_direction_recovered() {
+        // x1 = 2*x0 + tiny noise -> PC1 along (1,2)/sqrt(5) in raw space,
+        // (1,1)/sqrt(2) after standardization.
+        let mut rng = XorShiftRng::new(6);
+        let data: Vec<Vec<f64>> = (0..2000)
+            .map(|_| {
+                let t = rng.gen_normal();
+                vec![t, 2.0 * t + 0.01 * rng.gen_normal()]
+            })
+            .collect();
+        let p = Pca::fit(&data);
+        let ratio = p.explained_ratio();
+        assert!(ratio[0] > 0.99, "PC1 ratio {}", ratio[0]);
+        let c = &p.components[0];
+        assert!((c[0].abs() - (0.5f64).sqrt()).abs() < 0.02);
+        assert!((c[1].abs() - (0.5f64).sqrt()).abs() < 0.02);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let mut rng = XorShiftRng::new(7);
+        let data: Vec<Vec<f64>> = (0..500)
+            .map(|_| {
+                let a = rng.gen_normal();
+                let b = rng.gen_normal();
+                vec![a, b, a + 0.5 * b, rng.gen_normal()]
+            })
+            .collect();
+        let p = Pca::fit(&data);
+        let d = p.components.len();
+        for i in 0..d {
+            for j in 0..d {
+                let dot: f64 = p.components[i]
+                    .iter()
+                    .zip(&p.components[j])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-8, "({i},{j}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sum_to_trace() {
+        // Correlation matrix has trace d.
+        let mut rng = XorShiftRng::new(8);
+        let data: Vec<Vec<f64>> = (0..300)
+            .map(|_| vec![rng.gen_normal(), 3.0 * rng.gen_normal() + 1.0])
+            .collect();
+        let p = Pca::fit(&data);
+        let sum: f64 = p.eigenvalues.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-8, "sum={sum}");
+    }
+
+    #[test]
+    fn pc1_weights_normalized() {
+        let mut rng = XorShiftRng::new(9);
+        let data: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.gen_normal(), rng.gen_normal()])
+            .collect();
+        let w = Pca::fit(&data).pc1_weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transform_decorrelates() {
+        let mut rng = XorShiftRng::new(10);
+        let data: Vec<Vec<f64>> = (0..3000)
+            .map(|_| {
+                let t = rng.gen_normal();
+                vec![t + 0.3 * rng.gen_normal(), t]
+            })
+            .collect();
+        let p = Pca::fit(&data);
+        let proj: Vec<Vec<f64>> = data.iter().map(|r| p.transform(r)).collect();
+        let n = proj.len() as f64;
+        let m0 = proj.iter().map(|r| r[0]).sum::<f64>() / n;
+        let m1 = proj.iter().map(|r| r[1]).sum::<f64>() / n;
+        let cov01 = proj.iter().map(|r| (r[0] - m0) * (r[1] - m1)).sum::<f64>() / n;
+        assert!(cov01.abs() < 0.02, "cov={cov01}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn needs_two_samples() {
+        Pca::fit(&[vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Least-squares fits used when re-deriving the paper's empirical constants
+//! (`OpCount_critical`, the Eq. 5 α/β weights) from microbenchmark sweeps.
+
+/// Result of a simple linear fit `y = slope * x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Ordinary least squares on paired samples. Panics on < 2 points or
+/// degenerate x.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len(), "paired samples");
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    assert!(sxx > 0.0, "degenerate x (all equal)");
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| (y - (slope * x + intercept)).powi(2))
+        .sum();
+    let ss_tot: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LinearFit { slope, intercept, r2 }
+}
+
+/// Multiple linear regression `y = X·w + b` via normal equations with
+/// Gaussian elimination. Columns of `xs` are features; returns (weights, b).
+pub fn multi_linear_fit(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let d = xs[0].len();
+    // Augment with a constant-1 feature for the intercept.
+    let k = d + 1;
+    let mut ata = vec![vec![0.0f64; k]; k];
+    let mut atb = vec![0.0f64; k];
+    for (row, &y) in xs.iter().zip(ys) {
+        assert_eq!(row.len(), d, "ragged feature matrix");
+        let mut aug = row.clone();
+        aug.push(1.0);
+        for i in 0..k {
+            atb[i] += aug[i] * y;
+            for j in 0..k {
+                ata[i][j] += aug[i] * aug[j];
+            }
+        }
+    }
+    let w = solve(&mut ata, &mut atb);
+    let b = w[d];
+    (w[..d].to_vec(), b)
+}
+
+/// Solve `A x = b` in place by Gaussian elimination with partial pivoting.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        assert!(diag.abs() > 1e-12, "singular normal equations");
+        for row in (col + 1)..n {
+            let f = a[row][col] / diag;
+            for c in col..n {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for c in (row + 1)..n {
+            acc -= a[row][c] * x[c];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_r2_below_one() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + if *x as u64 % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let f = linear_fit(&xs, &ys);
+        assert!((f.slope - 3.0).abs() < 0.01);
+        assert!(f.r2 > 0.99 && f.r2 < 1.0);
+    }
+
+    #[test]
+    fn multi_fit_recovers_plane() {
+        // y = 2 x0 - 0.5 x1 + 4
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![(i % 5) as f64, (i / 5) as f64])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|r| 2.0 * r[0] - 0.5 * r[1] + 4.0).collect();
+        let (w, b) = multi_linear_fit(&xs, &ys);
+        assert!((w[0] - 2.0).abs() < 1e-9);
+        assert!((w[1] + 0.5).abs() < 1e-9);
+        assert!((b - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn degenerate_x_panics() {
+        linear_fit(&[1.0, 1.0], &[0.0, 1.0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Test-support utilities, including the property-testing mini-framework.
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

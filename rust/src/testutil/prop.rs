@@ -1,0 +1,166 @@
+//! A small seeded property-testing framework (proptest substitute).
+//!
+//! `forall(cases, gen, prop)` draws `cases` random inputs from `gen` and
+//! checks `prop` on each; on failure it reports the failing input, the seed
+//! to reproduce, and — when the input type supports it — a greedy shrink to
+//! a smaller counterexample. Deterministic: the seed derives from the
+//! `DLFUSION_PROP_SEED` env var (default 0xD1F051).
+
+use crate::util::XorShiftRng;
+
+/// Value generator used by [`forall`].
+pub struct Gen<'a, T> {
+    make: Box<dyn Fn(&mut XorShiftRng) -> T + 'a>,
+    shrink: Option<Box<dyn Fn(&T) -> Vec<T> + 'a>>,
+}
+
+impl<'a, T: std::fmt::Debug + Clone> Gen<'a, T> {
+    pub fn new(make: impl Fn(&mut XorShiftRng) -> T + 'a) -> Self {
+        Gen { make: Box::new(make), shrink: None }
+    }
+
+    /// Attach a shrinker: returns candidate *smaller* inputs.
+    pub fn with_shrink(mut self, shrink: impl Fn(&T) -> Vec<T> + 'a) -> Self {
+        self.shrink = Some(Box::new(shrink));
+        self
+    }
+}
+
+fn seed_from_env() -> u64 {
+    std::env::var("DLFUSION_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1F051)
+}
+
+/// Run `prop` on `cases` random inputs. Panics with a reproducible report on
+/// the first failure (after shrinking, if a shrinker is attached).
+pub fn forall<T: std::fmt::Debug + Clone>(
+    cases: usize,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let seed = seed_from_env();
+    let mut rng = XorShiftRng::new(seed);
+    for case in 0..cases {
+        let input = (gen.make)(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Try to shrink.
+            let (final_input, final_msg) = shrink_loop(gen, &prop, input, msg);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 input: {final_input:?}\n  reason: {final_msg}\n  \
+                 reproduce with DLFUSION_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: std::fmt::Debug + Clone>(
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> Result<(), String>,
+    mut input: T,
+    mut msg: String,
+) -> (T, String) {
+    let Some(shrinker) = &gen.shrink else {
+        return (input, msg);
+    };
+    // Greedy descent, bounded.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in shrinker(&input) {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (input, msg)
+}
+
+/// Common generators.
+pub mod gens {
+    use super::Gen;
+    use crate::util::XorShiftRng;
+
+    /// usize in `[lo, hi]` with shrinking toward `lo`.
+    pub fn usize_range<'a>(lo: usize, hi: usize) -> Gen<'a, usize> {
+        Gen::new(move |r: &mut XorShiftRng| r.gen_usize(lo, hi)).with_shrink(move |&v| {
+            let mut c = Vec::new();
+            if v > lo {
+                c.push(lo);
+                c.push(lo + (v - lo) / 2);
+                c.push(v - 1);
+            }
+            c.dedup();
+            c
+        })
+    }
+
+    /// Pair of independent draws.
+    pub fn pair<'a, A: std::fmt::Debug + Clone + 'a, B: std::fmt::Debug + Clone + 'a>(
+        a: Gen<'a, A>,
+        b: Gen<'a, B>,
+    ) -> Gen<'a, (A, B)> {
+        Gen::new(move |r: &mut XorShiftRng| ((a.make)(r), (b.make)(r)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = Gen::new(|r: &mut XorShiftRng| r.gen_usize(0, 100));
+        forall(200, &g, |&x| {
+            if x <= 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let g = gens::usize_range(0, 1000);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall(500, &g, |&x| {
+                if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) }
+            });
+        }));
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed"), "{msg}");
+        assert!(msg.contains("DLFUSION_PROP_SEED"), "{msg}");
+        // Shrinker walks down toward the boundary 50.
+        assert!(msg.contains("input: 50"), "shrink should reach 50: {msg}");
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        use std::cell::RefCell;
+        let g = Gen::new(|r: &mut XorShiftRng| r.next_u64());
+        let first: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+        forall(10, &g, |&x| {
+            first.borrow_mut().push(x);
+            Ok(())
+        });
+        let second: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+        forall(10, &g, |&x| {
+            second.borrow_mut().push(x);
+            Ok(())
+        });
+        assert_eq!(first.into_inner(), second.into_inner());
+    }
+
+    #[test]
+    fn pair_generator_works() {
+        let g = gens::pair(gens::usize_range(0, 5), gens::usize_range(10, 15));
+        forall(50, &g, |&(a, b)| {
+            if a <= 5 && (10..=15).contains(&b) { Ok(()) } else { Err("bad".into()) }
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny CSV writer for bench side-outputs (`bench_out/*.csv`).
+//!
+//! Each bench regenerating a paper figure also dumps its raw series as CSV
+//! so plots can be rebuilt outside this repo.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV document.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "CSV row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn row_display<T: std::fmt::Display>(&mut self, cells: &[T]) {
+        self.row(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join_escaped(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join_escaped(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `dir/name.csv`, creating the directory if needed.
+    pub fn write_to(&self, dir: &str, name: &str) -> io::Result<std::path::PathBuf> {
+        fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join(format!("{name}.csv"));
+        fs::write(&path, self.to_string())?;
+        Ok(path)
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+fn join_escaped(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_rows() {
+        let mut c = Csv::new(&["x", "y"]);
+        c.row_display(&[1.0, 2.5]);
+        assert_eq!(c.to_string(), "x,y\n1,2.5\n");
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut c = Csv::new(&["s"]);
+        c.row(vec!["a,b".into()]);
+        c.row(vec!["q\"q".into()]);
+        assert_eq!(c.to_string(), "s\n\"a,b\"\n\"q\"\"q\"\n");
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("dlfusion_csv_test");
+        let mut c = Csv::new(&["a"]);
+        c.row_display(&[7]);
+        let p = c.write_to(dir.to_str().unwrap(), "t").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a\n7\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_ragged() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities.
+//!
+//! The build environment resolves crates offline from a registry that only
+//! carries the `xla` dependency closure, so the conveniences a project would
+//! normally pull from crates.io (serde_json, rand, prettytable, csv) are
+//! implemented here from scratch. Each submodule is exercised by its own
+//! unit tests.
+
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod csv;
+pub mod units;
+
+pub use json::Json;
+pub use rng::XorShiftRng;
+pub use table::Table;

@@ -1,0 +1,169 @@
+//! ASCII table rendering for bench reports and the CLI.
+//!
+//! Produces the aligned, boxed tables the benches print next to the paper's
+//! figure/table numbers (see EXPERIMENTS.md).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header row + data rows, auto-sized columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            title: None,
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Right; header.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    /// First column left-aligned (the common "label | numbers..." layout).
+    pub fn label_first(mut self) -> Self {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(cells.iter().map(|s| s.to_string()).collect());
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.len();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(cell);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(cell);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncols]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["net", "fps"]).label_first();
+        t.row_strs(&["resnet18", "123.4"]);
+        t.row_strs(&["vgg", "9.1"]);
+        let s = t.render();
+        assert!(s.contains("| resnet18 | 123.4 |"));
+        assert!(s.contains("| vgg      |   9.1 |"));
+    }
+
+    #[test]
+    fn title_prepended() {
+        let t = Table::new(&["a"]).with_title("Fig. 10");
+        assert!(t.render().starts_with("Fig. 10\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn column_count_preserved() {
+        let mut t = Table::new(&["a", "b", "c"]);
+        t.row_strs(&["1", "2", "3"]);
+        let rendered = t.render();
+        let lines: Vec<&str> = rendered.lines().collect();
+        // sep, header, sep, row, sep
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[0].matches('+').count(), 4);
+    }
+}

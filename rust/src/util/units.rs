@@ -1,0 +1,82 @@
+//! Human-readable formatting of the quantities this project trades in:
+//! operation counts (GOPs), throughput (GFLOPS / FPS), bytes, and times.
+
+/// Format an operation count given in GOPs (1e9 ops).
+pub fn fmt_gops(gops: f64) -> String {
+    if gops >= 1000.0 {
+        format!("{:.2} TOPs", gops / 1000.0)
+    } else if gops >= 1.0 {
+        format!("{:.2} GOPs", gops)
+    } else if gops >= 1e-3 {
+        format!("{:.2} MOPs", gops * 1e3)
+    } else {
+        format!("{:.0} KOPs", gops * 1e6)
+    }
+}
+
+/// Format achieved compute throughput given in GFLOPS.
+pub fn fmt_gflops(gflops: f64) -> String {
+    if gflops >= 1000.0 {
+        format!("{:.2} TFLOPS", gflops / 1000.0)
+    } else {
+        format!("{:.1} GFLOPS", gflops)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const K: f64 = 1024.0;
+    if bytes >= K * K * K {
+        format!("{:.2} GiB", bytes / (K * K * K))
+    } else if bytes >= K * K {
+        format!("{:.2} MiB", bytes / (K * K))
+    } else if bytes >= K {
+        format!("{:.1} KiB", bytes / K)
+    } else {
+        format!("{:.0} B", bytes)
+    }
+}
+
+/// Format a duration given in milliseconds.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 1000.0 {
+        format!("{:.2} s", ms / 1000.0)
+    } else if ms >= 1.0 {
+        format!("{:.2} ms", ms)
+    } else {
+        format!("{:.1} µs", ms * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_scales() {
+        assert_eq!(fmt_gops(1500.0), "1.50 TOPs");
+        assert_eq!(fmt_gops(3.38), "3.38 GOPs");
+        assert_eq!(fmt_gops(0.169), "169.00 MOPs");
+        assert_eq!(fmt_gops(0.000001), "1 KOPs");
+    }
+
+    #[test]
+    fn gflops_scales() {
+        assert_eq!(fmt_gflops(64000.0), "64.00 TFLOPS");
+        assert_eq!(fmt_gflops(123.45), "123.5 GFLOPS");
+    }
+
+    #[test]
+    fn bytes_scales() {
+        assert_eq!(fmt_bytes(8.0 * 1024.0 * 1024.0 * 1024.0), "8.00 GiB");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KiB");
+        assert_eq!(fmt_bytes(12.0), "12 B");
+    }
+
+    #[test]
+    fn ms_scales() {
+        assert_eq!(fmt_ms(2500.0), "2.50 s");
+        assert_eq!(fmt_ms(3.25), "3.25 ms");
+        assert_eq!(fmt_ms(0.02), "20.0 µs");
+    }
+}

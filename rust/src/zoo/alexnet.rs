@@ -1,0 +1,66 @@
+//! AlexNet (Krizhevsky et al., NeurIPS 2012), the original two-tower
+//! configuration expressed with grouped convolutions (conv2/4/5 have
+//! groups=2). 5 conv layers — the small end of Table II (1.22 GOPs).
+
+use super::builder::NetBuilder;
+use crate::graph::Model;
+
+/// AlexNet for 227x227x3 input (the 227 convention makes conv1 emit 55x55).
+pub fn alexnet() -> Model {
+    let mut b = NetBuilder::new("alexnet", 227, 227, 3);
+    b.conv(96, 11, 4, 0, 1).relu();     // conv1 -> 55x55x96
+    b.pool(3, 2);                        // -> 27x27
+    b.conv(256, 5, 1, 2, 2).relu();     // conv2 (grouped) -> 27x27x256
+    b.pool(3, 2);                        // -> 13x13
+    b.conv(384, 3, 1, 1, 1).relu();     // conv3
+    b.conv(384, 3, 1, 1, 2).relu();     // conv4 (grouped)
+    b.conv(256, 3, 1, 1, 2).relu();     // conv5 (grouped)
+    b.pool(3, 2);                        // -> 6x6
+    b.fc(4096).relu().fc(4096).relu().fc(1000);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::LayerKind;
+
+    #[test]
+    fn conv_count_is_5() {
+        assert_eq!(alexnet().stats().num_conv, 5);
+    }
+
+    #[test]
+    fn total_ops_near_paper() {
+        // Paper Table II: 1.22 GOPs total, 0.244 avg.
+        let s = alexnet().stats();
+        assert!((s.total_conv_gops - 1.22).abs() / 1.22 < 0.15,
+                "total {}", s.total_conv_gops);
+    }
+
+    #[test]
+    fn conv1_output_is_55() {
+        let m = alexnet();
+        let c1 = &m.layers[0];
+        assert_eq!(c1.output_shape().h, 55);
+        assert_eq!(c1.channels(), 96);
+    }
+
+    #[test]
+    fn grouped_convs_present() {
+        let m = alexnet();
+        let grouped = m.layers.iter().filter(|l| match &l.kind {
+            LayerKind::Conv(c) => c.groups == 2,
+            _ => false,
+        }).count();
+        assert_eq!(grouped, 3);
+    }
+
+    #[test]
+    fn flatten_dim_into_fc() {
+        let m = alexnet();
+        let fc = m.layers.iter()
+            .find(|l| matches!(l.kind, LayerKind::Fc(_))).unwrap();
+        assert_eq!(fc.input_shape().c, 6 * 6 * 256);
+    }
+}

@@ -1,0 +1,149 @@
+//! Fluent network builder: tracks the flowing activation shape and appends
+//! conv/bn/relu/pool/add layers with auto-generated names, so the zoo models
+//! read like their original architecture tables.
+
+use crate::graph::layer::{ConvSpec, FcSpec, Layer, LayerKind, TensorShape};
+use crate::graph::Model;
+
+/// Incremental model builder.
+pub struct NetBuilder {
+    name: String,
+    input: TensorShape,
+    cur: TensorShape,
+    layers: Vec<Layer>,
+    counter: usize,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> Self {
+        let input = TensorShape::new(h, w, c);
+        NetBuilder { name: name.to_string(), input, cur: input, layers: Vec::new(), counter: 0 }
+    }
+
+    fn next_name(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("{prefix}{}", self.counter)
+    }
+
+    /// Current activation shape.
+    pub fn shape(&self) -> TensorShape {
+        self.cur
+    }
+
+    /// Raw convolution; updates the flowing shape.
+    pub fn conv(&mut self, c_out: usize, k: usize, stride: usize, pad: usize,
+                groups: usize) -> &mut Self {
+        let spec = ConvSpec {
+            c_in: self.cur.c, c_out,
+            h_in: self.cur.h, w_in: self.cur.w,
+            k, stride, pad, groups,
+        };
+        let name = self.next_name("conv");
+        self.layers.push(Layer::conv(name, spec));
+        self.cur = TensorShape::new(spec.h_out(), spec.w_out(), c_out);
+        self
+    }
+
+    /// 3x3 (or kxk) SAME conv, stride 1.
+    pub fn conv_same(&mut self, c_out: usize, k: usize) -> &mut Self {
+        self.conv(c_out, k, 1, k / 2, 1)
+    }
+
+    pub fn bn(&mut self) -> &mut Self {
+        let name = self.next_name("bn");
+        self.layers.push(Layer::new(name, LayerKind::BatchNorm { shape: self.cur }));
+        self
+    }
+
+    pub fn relu(&mut self) -> &mut Self {
+        let name = self.next_name("relu");
+        self.layers.push(Layer::new(name, LayerKind::ReLU { shape: self.cur }));
+        self
+    }
+
+    /// conv + BN + ReLU, the ubiquitous triple.
+    pub fn conv_bn_relu(&mut self, c_out: usize, k: usize, stride: usize,
+                        pad: usize, groups: usize) -> &mut Self {
+        self.conv(c_out, k, stride, pad, groups).bn().relu()
+    }
+
+    pub fn pool(&mut self, k: usize, stride: usize) -> &mut Self {
+        let name = self.next_name("pool");
+        self.layers.push(Layer::new(name, LayerKind::Pool { shape: self.cur, k, stride }));
+        self.cur = TensorShape::new(self.cur.h / stride, self.cur.w / stride, self.cur.c);
+        self
+    }
+
+    /// Residual elementwise add at the current shape.
+    pub fn add(&mut self) -> &mut Self {
+        let name = self.next_name("add");
+        self.layers.push(Layer::new(name, LayerKind::Add { shape: self.cur }));
+        self
+    }
+
+    pub fn fc(&mut self, n: usize) -> &mut Self {
+        let k = self.cur.elems();
+        let name = self.next_name("fc");
+        self.layers.push(Layer::new(name, LayerKind::Fc(FcSpec { k, n })));
+        self.cur = TensorShape::new(1, 1, n);
+        self
+    }
+
+    /// Global average pool to 1x1 spatial.
+    pub fn global_pool(&mut self) -> &mut Self {
+        let k = self.cur.h;
+        self.pool(k, k.max(1))
+    }
+
+    /// Finish, validating the chain.
+    pub fn build(self) -> Model {
+        let m = Model::new(self.name, self.input, self.layers);
+        m.validate().unwrap_or_else(|e| panic!("zoo builder produced invalid model: {e}"));
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_tracks_shapes() {
+        let mut b = NetBuilder::new("t", 32, 32, 3);
+        b.conv_bn_relu(16, 3, 1, 1, 1).pool(2, 2).conv_same(32, 3).relu();
+        assert_eq!(b.shape(), TensorShape::new(16, 16, 32));
+        let m = b.build();
+        assert_eq!(m.stats().num_conv, 2);
+        // conv+bn+relu, pool, conv, relu.
+        assert_eq!(m.num_layers(), 6);
+    }
+
+    #[test]
+    fn strided_conv_halves() {
+        let mut b = NetBuilder::new("t", 56, 56, 64);
+        b.conv(128, 3, 2, 1, 1);
+        assert_eq!(b.shape(), TensorShape::new(28, 28, 128));
+    }
+
+    #[test]
+    fn fc_flattens() {
+        let mut b = NetBuilder::new("t", 4, 4, 8);
+        b.fc(10);
+        let m = b.build();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.layers[0].output_shape().c, 10);
+    }
+
+    #[test]
+    fn global_pool_to_1x1() {
+        let mut b = NetBuilder::new("t", 7, 7, 32);
+        b.global_pool();
+        assert_eq!(b.shape(), TensorShape::new(1, 1, 32));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid model")]
+    fn build_panics_on_empty() {
+        NetBuilder::new("t", 4, 4, 4).build();
+    }
+}

@@ -1,0 +1,83 @@
+//! Built-in model zoo: the networks of the paper's evaluation (Table II) and
+//! the synthetic models of its characterization experiments.
+//!
+//! | network | paper Total Op (GOPs) | paper #CONV | builder |
+//! |---|---|---|---|
+//! | ResNet-18 | 3.38 | 20 | [`resnet18`] |
+//! | ResNet-50 | 7.61 | 53 | [`resnet50`] |
+//! | VGG-19 | 36.34 | 16 | [`vgg19`] |
+//! | AlexNet | 1.22 | 5 | [`alexnet`] |
+//! | MobileNetV2 | 10.33 | 52 | [`mobilenet_v2`] |
+//!
+//! All builders produce fully-specified per-layer shapes (validated), with
+//! the BatchNorm / ReLU / Pool / Add auxiliary layers the real networks
+//! carry; `rust/tests/paper_tables.rs` checks our Eq. 1 totals against the
+//! paper's Table II numbers.
+
+pub mod builder;
+pub mod resnet;
+pub mod vgg;
+pub mod alexnet;
+pub mod mobilenet;
+pub mod synthetic;
+
+pub use alexnet::alexnet;
+pub use mobilenet::mobilenet_v2;
+pub use resnet::{resnet18, resnet50};
+pub use synthetic::{identical_conv_model, mini_cnn, scaled_conv_layer};
+pub use vgg::vgg19;
+
+use crate::graph::Model;
+
+/// All Table II evaluation networks, in the paper's order.
+pub fn all_models() -> Vec<Model> {
+    vec![resnet18(), resnet50(), vgg19(), alexnet(), mobilenet_v2()]
+}
+
+/// Look a zoo model up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Model> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet18" | "resnet-18" => Some(resnet18()),
+        "resnet50" | "resnet-50" => Some(resnet50()),
+        "vgg19" | "vgg-19" => Some(vgg19()),
+        "alexnet" => Some(alexnet()),
+        "mobilenet" | "mobilenetv2" | "mobilenet-v2" => Some(mobilenet_v2()),
+        "mini" | "mini_cnn" => Some(mini_cnn()),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`by_name`], for CLI help.
+pub const MODEL_NAMES: &[&str] =
+    &["resnet18", "resnet50", "vgg19", "alexnet", "mobilenet", "mini_cnn"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_validate() {
+        for m in all_models() {
+            m.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+    }
+
+    #[test]
+    fn conv_counts_match_table2() {
+        let want = [("resnet18", 20), ("resnet50", 53), ("vgg19", 16),
+                    ("alexnet", 5), ("mobilenet_v2", 52)];
+        for (m, (name, count)) in all_models().iter().zip(want) {
+            assert_eq!(m.stats().num_conv, count, "{name}");
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_aliases() {
+        assert!(by_name("ResNet-18").is_some());
+        assert!(by_name("MOBILENETV2").is_some());
+        assert!(by_name("nope").is_none());
+        for n in MODEL_NAMES {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+    }
+}

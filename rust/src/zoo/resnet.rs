@@ -1,0 +1,139 @@
+//! ResNet-18 and ResNet-50 (He et al., CVPR 2016), ImageNet configuration.
+//!
+//! Layer execution order is linearized (the fusion partitioner walks layers
+//! in order, like the paper's Algorithm 1): each residual block emits its
+//! main-path convs, then the downsample conv when present, then the `Add`.
+//! ResNet-18 has 20 convs (16 basic-block + 1 stem + 3 downsample);
+//! ResNet-50 has 53 (48 bottleneck + 1 stem + 4 downsample) — the Table II
+//! counts.
+
+use super::builder::NetBuilder;
+use crate::graph::Model;
+
+/// Skip-path 1x1 projection, linearized after the main path.
+///
+/// The linear IR cannot fork, so the projection reads the main path's
+/// `c_out`-channel tensor instead of the block input's `c_in` channels; a
+/// `groups = c_out / c_in` setting makes its Eq. 1 cost (and weight bytes)
+/// exactly equal to the real `c_in -> c_out` projection while keeping the
+/// chain valid. Spatial downsampling already happened on the main path.
+fn downsample_proj(b: &mut NetBuilder, c_in_real: usize) {
+    let c_out = b.shape().c;
+    assert_eq!(c_out % c_in_real, 0);
+    b.conv(c_out, 1, 1, 0, c_out / c_in_real).bn();
+}
+
+/// One basic block (two 3x3 convs) with optional strided entry + downsample.
+fn basic_block(b: &mut NetBuilder, c_out: usize, stride: usize,
+               downsample_from: Option<usize>) {
+    b.conv_bn_relu(c_out, 3, stride, 1, 1);
+    b.conv(c_out, 3, 1, 1, 1).bn();
+    if let Some(c_in_real) = downsample_from {
+        downsample_proj(b, c_in_real);
+    }
+    b.add().relu();
+}
+
+/// One bottleneck block (1x1 reduce, 3x3, 1x1 expand); v1 strides the first
+/// 1x1 (the variant whose op count matches the paper's Table II row).
+fn bottleneck_block(b: &mut NetBuilder, c_mid: usize, c_out: usize,
+                    stride: usize, downsample_from: Option<usize>) {
+    b.conv_bn_relu(c_mid, 1, stride, 0, 1);
+    b.conv_bn_relu(c_mid, 3, 1, 1, 1);
+    b.conv(c_out, 1, 1, 0, 1).bn();
+    if let Some(c_in_real) = downsample_from {
+        downsample_proj(b, c_in_real);
+    }
+    b.add().relu();
+}
+
+/// ResNet-18 for 224x224x3 input.
+pub fn resnet18() -> Model {
+    let mut b = NetBuilder::new("resnet18", 224, 224, 3);
+    b.conv_bn_relu(64, 7, 2, 3, 1); // stem -> 112x112x64
+    b.pool(3, 2); // -> 56x56
+    // conv2_x: 2 blocks @64.
+    basic_block(&mut b, 64, 1, None);
+    basic_block(&mut b, 64, 1, None);
+    // conv3_x: 2 blocks @128, first strided + downsample (64 -> 128).
+    basic_block(&mut b, 128, 2, Some(64));
+    basic_block(&mut b, 128, 1, None);
+    // conv4_x: 2 blocks @256.
+    basic_block(&mut b, 256, 2, Some(128));
+    basic_block(&mut b, 256, 1, None);
+    // conv5_x: 2 blocks @512.
+    basic_block(&mut b, 512, 2, Some(256));
+    basic_block(&mut b, 512, 1, None);
+    b.global_pool().fc(1000);
+    b.build()
+}
+
+/// ResNet-50 for 224x224x3 input (v1.5 stride placement).
+pub fn resnet50() -> Model {
+    let mut b = NetBuilder::new("resnet50", 224, 224, 3);
+    b.conv_bn_relu(64, 7, 2, 3, 1);
+    b.pool(3, 2);
+    // (c_mid, c_out, blocks, first_stride) per stage.
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (64, 256, 3, 1),
+        (128, 512, 4, 2),
+        (256, 1024, 6, 2),
+        (512, 2048, 3, 2),
+    ];
+    for (c_mid, c_out, blocks, first_stride) in stages {
+        for i in 0..blocks {
+            let stride = if i == 0 { first_stride } else { 1 };
+            // First block of each stage changes channels -> projection from
+            // the stage's real input channel count.
+            let ds = if i == 0 {
+                Some(if c_out == 256 { 64 } else { c_out / 2 })
+            } else {
+                None
+            };
+            bottleneck_block(&mut b, c_mid, c_out, stride, ds);
+        }
+    }
+    b.global_pool().fc(1000);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_conv_count_and_ops() {
+        let m = resnet18();
+        let s = m.stats();
+        assert_eq!(s.num_conv, 20);
+        // Paper Table II: 3.38 GOPs total, 0.169 avg.
+        assert!((s.total_conv_gops - 3.38).abs() / 3.38 < 0.15,
+                "total {} vs paper 3.38", s.total_conv_gops);
+    }
+
+    #[test]
+    fn resnet50_conv_count_and_ops() {
+        let m = resnet50();
+        let s = m.stats();
+        assert_eq!(s.num_conv, 53);
+        // Paper Table II: 7.61 GOPs total, 0.144 avg.
+        assert!((s.total_conv_gops - 7.61).abs() / 7.61 < 0.15,
+                "total {} vs paper 7.61", s.total_conv_gops);
+    }
+
+    #[test]
+    fn final_shapes() {
+        for m in [resnet18(), resnet50()] {
+            let last = m.layers.last().unwrap();
+            assert_eq!(last.output_shape().c, 1000, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn stage_spatial_extents() {
+        let m = resnet18();
+        // First block conv after the stem operates at 56x56.
+        let c = m.layers.iter().filter(|l| l.is_compute()).nth(1).unwrap();
+        assert_eq!(c.input_shape().h, 56);
+    }
+}

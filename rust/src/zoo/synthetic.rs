@@ -1,0 +1,122 @@
+//! Synthetic models used by the paper's characterization experiments:
+//! stacks of identical conv layers (Section III.B builds three 16-layer
+//! CNNs from ResNet/VGG baseline convs), channel-scaled variants of the
+//! VGG-19 base layer (Section II.B.2), and a small real CNN for the
+//! end-to-end driver.
+
+use super::builder::NetBuilder;
+use crate::graph::layer::{ConvSpec, Layer};
+use crate::graph::Model;
+
+/// A CNN of `n` identical SAME conv layers (ReLU between), as used by the
+/// Fig. 5(b) / Fig. 7 fusion experiments. `spec` must have
+/// `c_in == c_out` so the chain composes.
+pub fn identical_conv_model(name: &str, spec: ConvSpec, n: usize) -> Model {
+    assert_eq!(spec.c_in, spec.c_out, "identical chain needs c_in == c_out");
+    assert_eq!(spec.stride, 1, "identical chain needs stride 1");
+    assert!(n >= 1);
+    let mut b = NetBuilder::new(name, spec.h_in, spec.w_in, spec.c_in);
+    for _ in 0..n {
+        b.conv(spec.c_out, spec.k, spec.stride, spec.pad, spec.groups).relu();
+    }
+    b.build()
+}
+
+/// The paper's Section II.B.2 methodology: take the VGG-19 base layer
+/// `{64, 64, 224x224, 3x3}` and scale its operation count by expanding the
+/// channel dimension by `factor`.
+pub fn scaled_conv_layer(factor: usize) -> Layer {
+    assert!(factor >= 1);
+    let c = 64 * factor;
+    Layer::conv(
+        format!("vgg_base_x{factor}"),
+        ConvSpec::same(c, c, 224, 3),
+    )
+}
+
+/// The three Fig. 5(b) baseline layers: `{64,64,56x56,3x3}`,
+/// `{256,256,56x56,3x3}`, `{512,512,28x28,3x3}`.
+pub fn fig5b_models(n_layers: usize) -> Vec<Model> {
+    vec![
+        identical_conv_model("stack_c64_s56", ConvSpec::same(64, 64, 56, 3), n_layers),
+        identical_conv_model("stack_c256_s56", ConvSpec::same(256, 256, 56, 3), n_layers),
+        identical_conv_model("stack_c512_s28", ConvSpec::same(512, 512, 28, 3), n_layers),
+    ]
+}
+
+/// The Fig. 7(b) pair: Conv1 `{128,128,112x112,3x3}`-scale layer with
+/// 1.72 GOPs, Conv2 with 0.43 GOPs.
+pub fn fig7_convs() -> (ConvSpec, ConvSpec) {
+    // 2*h*h*9*c*c = 1.72e9 -> c=128 @ h=76; use {128,128,76x76}: 1.70 GOPs.
+    let conv1 = ConvSpec::same(128, 128, 76, 3);
+    // 0.43 GOPs -> {128,128,38x38}: 0.426 GOPs.
+    let conv2 = ConvSpec::same(128, 128, 38, 3);
+    (conv1, conv2)
+}
+
+/// A small but real CNN for the end-to-end PJRT driver: three fusible
+/// stages whose fused blocks map onto the AOT artifact catalog
+/// (16x16 images, 8-channel 3x3 SAME convs).
+pub fn mini_cnn() -> Model {
+    let mut b = NetBuilder::new("mini_cnn", 16, 16, 8);
+    for _ in 0..6 {
+        b.conv_same(8, 3).relu();
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::LayerKind;
+
+    #[test]
+    fn identical_chain_validates() {
+        let m = identical_conv_model("t", ConvSpec::same(64, 64, 56, 3), 16);
+        assert!(m.validate().is_ok());
+        assert_eq!(m.stats().num_conv, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "c_in == c_out")]
+    fn rejects_channel_change() {
+        identical_conv_model("t", ConvSpec::same(64, 128, 56, 3), 4);
+    }
+
+    #[test]
+    fn scaled_layer_ops_grow_quadratically() {
+        let g1 = scaled_conv_layer(1).op_gops();
+        let g2 = scaled_conv_layer(2).op_gops();
+        assert!((g2 / g1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig7_op_counts_match_paper() {
+        let (c1, c2) = fig7_convs();
+        let g1 = ConvSpec::op_gops(&c1);
+        let g2 = ConvSpec::op_gops(&c2);
+        assert!((g1 - 1.72).abs() < 0.05, "conv1 {g1}");
+        assert!((g2 - 0.43).abs() < 0.02, "conv2 {g2}");
+    }
+
+    #[test]
+    fn fig5b_models_have_right_channels() {
+        let ms = fig5b_models(16);
+        let cs: Vec<usize> = ms.iter().map(|m| m.layers[0].channels()).collect();
+        assert_eq!(cs, vec![64, 256, 512]);
+        for m in &ms {
+            assert_eq!(m.stats().num_conv, 16);
+        }
+    }
+
+    #[test]
+    fn mini_cnn_is_artifact_compatible() {
+        let m = mini_cnn();
+        assert!(m.validate().is_ok());
+        for l in &m.layers {
+            if let LayerKind::Conv(c) = l.kind {
+                assert_eq!((c.c_in, c.c_out, c.h_in, c.k), (8, 8, 16, 3));
+            }
+        }
+    }
+}

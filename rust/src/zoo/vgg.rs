@@ -1,0 +1,70 @@
+//! VGG-19 (Simonyan & Zisserman, ICLR 2015), configuration E: 16 conv
+//! layers in five 3x3 stages with max-pools between, then three FC layers.
+//! The paper's Table II: 36.34 GOPs over 16 convs (2.27 avg) — the
+//! high-op-count-per-layer end of the evaluated spectrum.
+
+use super::builder::NetBuilder;
+use crate::graph::Model;
+
+/// VGG-19 for 224x224x3 input.
+pub fn vgg19() -> Model {
+    let mut b = NetBuilder::new("vgg19", 224, 224, 3);
+    // (channels, convs-in-stage); every conv is 3x3/s1/SAME + ReLU.
+    let stages: [(usize, usize); 5] =
+        [(64, 2), (128, 2), (256, 4), (512, 4), (512, 4)];
+    for (c, n) in stages {
+        for _ in 0..n {
+            b.conv_same(c, 3).relu();
+        }
+        b.pool(2, 2);
+    }
+    b.fc(4096).relu().fc(4096).relu().fc(1000);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_count_is_16() {
+        assert_eq!(vgg19().stats().num_conv, 16);
+    }
+
+    #[test]
+    fn total_ops_near_paper() {
+        // Paper Table II: 36.34 GOPs, avg 2.27.
+        let s = vgg19().stats();
+        assert!((s.total_conv_gops - 36.34).abs() / 36.34 < 0.15,
+                "total {}", s.total_conv_gops);
+        assert!((s.avg_conv_gops - 2.27).abs() / 2.27 < 0.15,
+                "avg {}", s.avg_conv_gops);
+    }
+
+    #[test]
+    fn first_conv_is_paper_microbench_layer() {
+        // {64, 64, 224x224, 3x3} — the Section II.B.2 base layer is VGG's
+        // conv1_2 (64 -> 64 at 224x224).
+        let m = vgg19();
+        let second_conv = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, crate::graph::LayerKind::Conv(_)))
+            .nth(1)
+            .unwrap();
+        assert_eq!(second_conv.input_shape().h, 224);
+        assert_eq!(second_conv.channels(), 64);
+        assert!((second_conv.op_gops() - 3.7).abs() < 0.05);
+    }
+
+    #[test]
+    fn fc_sizes() {
+        let m = vgg19();
+        let fcs: Vec<_> = m.layers.iter()
+            .filter(|l| matches!(l.kind, crate::graph::LayerKind::Fc(_)))
+            .collect();
+        assert_eq!(fcs.len(), 3);
+        assert_eq!(fcs[0].input_shape().c, 7 * 7 * 512);
+        assert_eq!(fcs[2].output_shape().c, 1000);
+    }
+}

@@ -1,0 +1,89 @@
+//! Integration: the CLI surface (arg parsing through command dispatch).
+//! Commands run in-process via `cli::commands::run`, so these double as
+//! smoke tests for the whole library stack.
+
+use dlfusion::cli::args::Args;
+use dlfusion::cli::commands;
+
+fn run(line: &str) -> i32 {
+    let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+    commands::run(&args)
+}
+
+#[test]
+fn help_succeeds() {
+    assert_eq!(run("help"), 0);
+}
+
+#[test]
+fn zoo_listing_succeeds() {
+    assert_eq!(run("zoo"), 0);
+    assert_eq!(run("zoo --spec"), 0);
+}
+
+#[test]
+fn optimize_each_known_model() {
+    for m in ["resnet18", "alexnet", "mini_cnn"] {
+        assert_eq!(run(&format!("optimize {m}")), 0, "{m}");
+    }
+}
+
+#[test]
+fn optimize_with_strategy_and_critical() {
+    assert_eq!(run("optimize alexnet --strategy 7"), 0);
+    assert_eq!(run("optimize alexnet --critical 2.5"), 0);
+}
+
+#[test]
+fn optimize_rejects_unknown_model_and_strategy() {
+    assert_eq!(run("optimize not_a_net"), 1);
+    assert_eq!(run("optimize alexnet --strategy 9"), 1);
+    assert_eq!(run("optimize alexnet --strategy abc"), 1);
+}
+
+#[test]
+fn simulate_prints_table() {
+    assert_eq!(run("simulate alexnet"), 0);
+}
+
+#[test]
+fn space_command() {
+    assert_eq!(run("space 50"), 0);
+    assert_eq!(run("space 1"), 1);
+    assert_eq!(run("space nope"), 1);
+}
+
+#[test]
+fn trace_command() {
+    assert_eq!(run("trace alexnet"), 0);
+    assert_eq!(run("trace alexnet --strategy 1"), 0);
+    assert_eq!(run("trace nope_net"), 1);
+}
+
+#[test]
+fn unknown_command_fails() {
+    assert_eq!(run("frobnicate"), 1);
+}
+
+#[test]
+fn codegen_writes_files() {
+    let out = std::env::temp_dir().join("dlfusion_cli_codegen");
+    let _ = std::fs::remove_dir_all(&out);
+    let code = run(&format!("codegen mini_cnn --out {}", out.display()));
+    assert_eq!(code, 0);
+    assert!(out.join("mini_cnn_inference.cpp").exists());
+    assert!(out.join("cnml_compat.h").exists());
+}
+
+#[test]
+fn optimize_dlm_file() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_dlm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = dlfusion::zoo::mini_cnn();
+    let path = dir.join("mini.dlm");
+    std::fs::write(&path, dlfusion::graph::format::to_dlm(&model)).unwrap();
+    assert_eq!(run(&format!("optimize {}", path.display())), 0);
+    // Corrupt file -> error.
+    std::fs::write(dir.join("bad.dlm"), "{nope").unwrap();
+    assert_eq!(run(&format!("optimize {}", dir.join("bad.dlm").display())), 1);
+}

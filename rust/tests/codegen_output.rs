@@ -1,0 +1,76 @@
+//! Integration: generated C++ structure across models and schedules, plus
+//! `.dlm` round-trips feeding codegen.
+
+use dlfusion::accel::Simulator;
+use dlfusion::codegen::{generate_cpp, generate_header};
+use dlfusion::graph::format::{from_dlm, to_dlm};
+use dlfusion::optimizer::{self, Schedule};
+use dlfusion::zoo;
+
+#[test]
+fn full_pipeline_dlm_to_cpp() {
+    let sim = Simulator::mlu100();
+    for m in zoo::all_models() {
+        // Round-trip through .dlm first (the paper's ONNX entry path).
+        let text = to_dlm(&m);
+        let model = from_dlm(&text).unwrap();
+        let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
+        let cpp = generate_cpp(&model, &sched);
+
+        // Every layer created exactly once.
+        assert_eq!(cpp.matches("cnmlCreateOperator(").count(), model.num_layers(),
+                   "{}", model.name);
+        // Every block compiled exactly once with its MP.
+        let compiles = cpp.matches("cnmlCompileOperator(").count()
+            + cpp.matches("cnmlCompileFusionOperator(").count();
+        assert_eq!(compiles, sched.num_blocks(), "{}", model.name);
+        // Forward calls match block count.
+        let forwards = cpp.matches("cnmlComputeOperatorForward(").count()
+            + cpp.matches("cnmlComputeFusionOperatorForward(").count();
+        assert_eq!(forwards, sched.num_blocks(), "{}", model.name);
+        // MP values surface in the emitted code.
+        for b in &sched.blocks {
+            assert!(cpp.contains(&format!("/*Model_Parallelism=*/{}", b.mp)),
+                    "{}: missing MP {}", model.name, b.mp);
+        }
+    }
+}
+
+#[test]
+fn header_is_self_contained_cpp() {
+    let h = generate_header();
+    assert!(h.contains("#pragma once"));
+    // No unresolved external symbols: all functions inline.
+    for line in h.lines() {
+        if line.contains("cnmlStatus_t cnml") {
+            assert!(line.trim_start().starts_with("inline"), "{line}");
+        }
+    }
+}
+
+#[test]
+fn schedule_variants_change_emission_shape() {
+    let m = zoo::mini_cnn();
+    let layerwise = generate_cpp(&m, &Schedule::layerwise(m.num_layers(), 1));
+    let fused = generate_cpp(&m, &Schedule::single_block(m.num_layers(), 32));
+    assert!(layerwise.len() < fused.len() + 4096); // both reasonable sizes
+    assert!(!layerwise.contains("FusionOperator"));
+    assert!(fused.contains("cnmlComputeFusionOperatorForward(fusion_0)"));
+    assert_eq!(fused.matches("cnmlFuseOperator(").count(), m.num_layers());
+}
+
+#[test]
+fn generated_files_via_cli_paths() {
+    // Mirror what `dlfusion codegen` writes, into a temp dir.
+    let dir = std::env::temp_dir().join("dlfusion_codegen_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let m = zoo::alexnet();
+    let sim = Simulator::mlu100();
+    let sched = optimizer::dlfusion_schedule(&m, &sim.spec);
+    let cpp_path = dir.join("alexnet_inference.cpp");
+    std::fs::write(&cpp_path, generate_cpp(&m, &sched)).unwrap();
+    std::fs::write(dir.join("cnml_compat.h"), generate_header()).unwrap();
+    let body = std::fs::read_to_string(&cpp_path).unwrap();
+    assert!(body.contains("#include \"cnml_compat.h\""));
+    assert!(body.contains("int main()"));
+}

@@ -1,0 +1,180 @@
+//! Integration: the optimize -> simulate pipeline across the zoo, plus
+//! property tests over the optimizer's invariants (proptest substitute —
+//! see `dlfusion::testutil::prop`).
+
+use dlfusion::accel::{AcceleratorSpec, Simulator};
+use dlfusion::graph::layer::ConvSpec;
+use dlfusion::graph::Model;
+use dlfusion::optimizer::{self, AlgorithmParams, Schedule, Strategy};
+use dlfusion::perfmodel::mp_select::MpModel;
+use dlfusion::search;
+use dlfusion::testutil::prop::{forall, Gen};
+use dlfusion::util::XorShiftRng;
+use dlfusion::zoo;
+
+fn random_model(rng: &mut XorShiftRng) -> Model {
+    let n = rng.gen_usize(1, 24);
+    let c = 1usize << rng.gen_usize(4, 9);
+    let hw = *rng.choose(&[14usize, 28, 56]);
+    zoo::identical_conv_model("prop", ConvSpec::same(c, c, hw, 3), n)
+}
+
+#[test]
+fn every_strategy_on_every_model_is_valid_and_consistent() {
+    let sim = Simulator::mlu100();
+    for m in zoo::all_models() {
+        for st in Strategy::ALL {
+            let (sched, rep) = optimizer::run_strategy(&sim, &m, st);
+            sched.validate(m.num_layers(), sim.spec.num_cores)
+                .unwrap_or_else(|e| panic!("{} {st}: {e}", m.name));
+            // Useful GOPs reported must equal the model total regardless of
+            // the schedule.
+            let total: f64 = m.layers.iter().map(|l| l.op_gops()).sum();
+            assert!((rep.total_gops - total).abs() < 1e-9, "{} {st}", m.name);
+        }
+    }
+}
+
+#[test]
+fn prop_dlfusion_partition_is_exact_cover() {
+    let spec = AcceleratorSpec::mlu100();
+    let g = Gen::new(random_model);
+    forall(60, &g, |m| {
+        let sched = optimizer::dlfusion_schedule(m, &spec);
+        sched.validate(m.num_layers(), spec.num_cores)?;
+        // Exact cover: every index in exactly one block.
+        let mut seen = vec![false; m.num_layers()];
+        for b in &sched.blocks {
+            for i in b.start..b.end {
+                if seen[i] {
+                    return Err(format!("layer {i} covered twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("uncovered layer".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_mps_are_pow2_in_range() {
+    let spec = AcceleratorSpec::mlu100();
+    let g = Gen::new(random_model);
+    forall(60, &g, |m| {
+        let sched = optimizer::dlfusion_schedule(m, &spec);
+        for b in &sched.blocks {
+            if !b.mp.is_power_of_two() || b.mp > spec.num_cores {
+                return Err(format!("block MP {} invalid", b.mp));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oracle_never_loses_to_dlfusion_modulo_quantization() {
+    // The DP oracle optimizes a superset-ish space (reduced MP set, size
+    // rule); allow the rule's quantization margin.
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let n = rng.gen_usize(2, 12);
+        let c = 1usize << rng.gen_usize(5, 9);
+        zoo::identical_conv_model("p", ConvSpec::same(c, c, 28, 3), n)
+    });
+    forall(12, &g, |m| {
+        let (oracle, _) = search::oracle_schedule(&sim, m);
+        let heuristic = optimizer::dlfusion_schedule(m, &sim.spec);
+        let t_o = sim.run_schedule(m, &oracle).total_ms;
+        let t_h = sim.run_schedule(m, &heuristic).total_ms;
+        if t_o > t_h * 1.05 {
+            return Err(format!("oracle {t_o} much worse than dlfusion {t_h}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_latency_monotone_in_depth() {
+    // Adding layers to a model can't make the optimized whole-model run
+    // faster.
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        (rng.gen_usize(1, 12), 1usize << rng.gen_usize(5, 8))
+    });
+    forall(20, &g, |&(n, c)| {
+        let small = zoo::identical_conv_model("s", ConvSpec::same(c, c, 28, 3), n);
+        let big = zoo::identical_conv_model("b", ConvSpec::same(c, c, 28, 3), n + 2);
+        let t_small = sim
+            .run_schedule(&small, &optimizer::dlfusion_schedule(&small, &sim.spec))
+            .total_ms;
+        let t_big = sim
+            .run_schedule(&big, &optimizer::dlfusion_schedule(&big, &sim.spec))
+            .total_ms;
+        if t_big < t_small * 0.999 {
+            return Err(format!("deeper model faster: {t_big} < {t_small}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_single_layer_equals_unfused() {
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let c = 1usize << rng.gen_usize(4, 9);
+        let hw = *rng.choose(&[7usize, 14, 28, 56]);
+        let mp = 1usize << rng.gen_usize(0, 5);
+        (c, hw, mp)
+    });
+    forall(50, &g, |&(c, hw, mp)| {
+        let m = zoo::identical_conv_model("x", ConvSpec::same(c, c, hw, 3), 1);
+        let lw = Schedule::layerwise(m.num_layers(), mp);
+        let sb: f64 = m
+            .layers
+            .iter()
+            .map(|l| sim.layer_latency_ms(l, mp))
+            .sum();
+        let t = sim.run_schedule(&m, &lw).total_ms;
+        if (t - sb).abs() > 1e-9 {
+            return Err(format!("layerwise {t} != sum {sb}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn critical_threshold_controls_block_count_monotonically() {
+    let spec = AcceleratorSpec::mlu100();
+    let m = zoo::identical_conv_model("t", ConvSpec::same(256, 256, 56, 3), 24);
+    let mut last_blocks = usize::MAX;
+    for crit in [0.1, 0.5, 2.0, 8.0, 1e6] {
+        let params = AlgorithmParams { opcount_critical: crit, mp_model: MpModel::default() };
+        let sched = optimizer::algorithm::dlfusion_schedule_with(&m, &spec, &params);
+        assert!(sched.num_blocks() <= last_blocks,
+                "blocks should shrink as critical grows");
+        last_blocks = sched.num_blocks();
+    }
+    assert_eq!(last_blocks, 1);
+}
+
+#[test]
+fn search_time_comparison_paper_claim() {
+    // Paper Section V: DLFusion is O(n) while even the reduced brute force
+    // is quadratic in evaluations. Verify the count relationship.
+    let sim = Simulator::mlu100();
+    let m = zoo::resnet50();
+    let (_, stats) = search::oracle_schedule(&sim, &m);
+    // n = 174 layers; oracle considers O(n^2/16 * 8) evaluations.
+    assert!(stats.evaluations > m.num_layers() * 8,
+            "oracle evals {} suspiciously low", stats.evaluations);
+    // Algorithm 1 performs exactly one pass (cannot observe directly here,
+    // but its runtime is bounded): time it generously.
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        let _ = optimizer::dlfusion_schedule(&m, &sim.spec);
+    }
+    assert!(t0.elapsed().as_millis() < 1000, "Algorithm 1 should be O(n)-fast");
+}

@@ -1,0 +1,128 @@
+//! Integration: pin the reproduction against the paper's printed numbers
+//! (Tables I–II, Eq. 4, and the Fig. 10 qualitative claims).
+
+use dlfusion::accel::{AcceleratorSpec, Simulator};
+use dlfusion::graph::LayerKind;
+use dlfusion::optimizer::{run_strategy, space, Strategy};
+use dlfusion::search;
+use dlfusion::zoo;
+
+#[test]
+fn table1_hardware_spec() {
+    let s = AcceleratorSpec::mlu100();
+    assert_eq!(s.core_freq_ghz, 1.0);
+    assert_eq!(s.peak_gflops(), 64_000.0); // 64 TFLOPS FP16
+    assert_eq!(s.mem_bw_gbps, 102.4);
+    assert_eq!(s.mem_bytes / (1u64 << 30) as f64, 8.0);
+    assert_eq!(s.num_cores, 32);
+}
+
+#[test]
+fn table2_network_statistics() {
+    // (name, paper total GOPs, paper avg GOPs, paper conv count, tolerance)
+    // MobileNet's total is checked under the dense-equivalent convention —
+    // see zoo::mobilenet docs and EXPERIMENTS.md.
+    let rows = [
+        ("resnet18", 3.38, 0.169, 20, 0.15),
+        ("resnet50", 7.61, 0.144, 53, 0.15),
+        ("vgg19", 36.34, 2.27, 16, 0.15),
+        ("alexnet", 1.22, 0.244, 5, 0.15),
+    ];
+    for (name, total, avg, count, tol) in rows {
+        let m = zoo::by_name(name).unwrap();
+        let s = m.stats();
+        assert_eq!(s.num_conv, count, "{name} conv count");
+        assert!((s.total_conv_gops - total).abs() / total < tol,
+                "{name}: total {} vs paper {total}", s.total_conv_gops);
+        assert!((s.avg_conv_gops - avg).abs() / avg < tol,
+                "{name}: avg {} vs paper {avg}", s.avg_conv_gops);
+    }
+    // MobileNet: count exact; total under dense-equivalent Eq. 1.
+    let m = zoo::mobilenet_v2();
+    assert_eq!(m.stats().num_conv, 52);
+    let dense: f64 = m.layers.iter().filter_map(|l| match &l.kind {
+        LayerKind::Conv(c) => Some(c.op_gops_dense_equiv()),
+        _ => None,
+    }).sum();
+    assert!((dense - 10.33).abs() / 10.33 < 0.25, "mobilenet dense-equiv {dense}");
+}
+
+#[test]
+fn eq4_search_space_magnitude() {
+    // "When n equals 50, there are 8.17 x 10^75 possible combinations."
+    let s = space::search_space(50, 32);
+    assert!(s.exp10 >= 75 && s.exp10 <= 76, "Space(50) = {s}");
+    // And the exact closed form matches enumeration for small n.
+    for n in 2..=8 {
+        assert_eq!(space::search_space_exact(n, 32), space::enumerate_space(n, 32));
+    }
+}
+
+#[test]
+fn fig10_speedup_claims() {
+    // Paper: DLFusion achieves 3.6x–7.9x over the non-optimized baseline
+    // and is close to the oracle. Our simulator reproduces the shape; the
+    // per-network values and documented deviations live in EXPERIMENTS.md.
+    let sim = Simulator::mlu100();
+    let mut speedups = Vec::new();
+    for m in zoo::all_models() {
+        let (_, base) = run_strategy(&sim, &m, Strategy::NonOptimization);
+        let (_, dlf) = run_strategy(&sim, &m, Strategy::DlFusion);
+        let (oracle_sched, _) = search::oracle_schedule(&sim, &m);
+        let t_oracle = sim.run_schedule(&m, &oracle_sched).total_ms;
+        let oracle_fps = 1000.0 / t_oracle;
+        let speedup = dlf.fps() / base.fps();
+        speedups.push((m.name.clone(), speedup, dlf.fps() / oracle_fps));
+    }
+    // Band: every model gains substantially; the best models land in the
+    // paper's 3.6–7.9 range.
+    let max = speedups.iter().map(|s| s.1).fold(0.0, f64::max);
+    let min = speedups.iter().map(|s| s.1).fold(f64::MAX, f64::min);
+    assert!(max > 6.0 && max < 10.0, "max speedup {max}");
+    assert!(min > 1.5, "min speedup {min}");
+    // Oracle proximity: geometric-mean ratio >= 0.80 (paper: >= 0.9 on
+    // their hardware; our oracle is an exact DP, strictly stronger than
+    // the paper's sampled brute force).
+    let gm = dlfusion::stats::descriptive::geomean(
+        &speedups.iter().map(|s| s.2).collect::<Vec<_>>());
+    assert!(gm >= 0.80, "oracle-proximity geomean {gm}: {speedups:?}");
+}
+
+#[test]
+fn fig10_vgg_benefits_most_from_mp_resnet_mobilenet_from_fusion() {
+    // The paper's two observations about model classes.
+    let sim = Simulator::mlu100();
+    let mp_gain = |name: &str| {
+        let m = zoo::by_name(name).unwrap();
+        let (_, base) = run_strategy(&sim, &m, Strategy::NonOptimization);
+        let (_, s3) = run_strategy(&sim, &m, Strategy::DynamicMp);
+        s3.fps() / base.fps()
+    };
+    let fusion_gain = |name: &str| {
+        let m = zoo::by_name(name).unwrap();
+        let (_, s3) = run_strategy(&sim, &m, Strategy::DynamicMp);
+        let (_, s6) = run_strategy(&sim, &m, Strategy::DlFusion);
+        s6.fps() / s3.fps()
+    };
+    // High-op-count-per-layer VGG gains more from MP than low-op ResNet.
+    assert!(mp_gain("vgg19") > mp_gain("resnet18"),
+            "vgg {} vs resnet {}", mp_gain("vgg19"), mp_gain("resnet18"));
+    // Low-op-count models gain more from fusion on top of MP.
+    assert!(fusion_gain("mobilenet") > fusion_gain("vgg19"),
+            "mobilenet {} vs vgg {}", fusion_gain("mobilenet"), fusion_gain("vgg19"));
+}
+
+#[test]
+fn oracle_within_reduced_space_definition() {
+    // Strategy 7 obeys both paper reductions on every model.
+    let sim = Simulator::mlu100();
+    for m in zoo::all_models() {
+        let (sched, _) = search::oracle_schedule(&sim, &m);
+        let allowed = sim.spec.reduced_mp_set();
+        for (i, b) in sched.blocks.iter().enumerate() {
+            assert!(allowed.contains(&b.mp), "{}: mp {}", m.name, b.mp);
+            let last = i == sched.blocks.len() - 1;
+            assert!(b.len() % 4 == 0 || last, "{}: block len {}", m.name, b.len());
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Integration: cost-model invariants of the accelerator simulator —
+//! the physics the optimizer's decisions rest on (DESIGN.md §6), checked
+//! with randomized property tests.
+
+use dlfusion::accel::Simulator;
+use dlfusion::graph::layer::{ConvSpec, Layer};
+use dlfusion::testutil::prop::{forall, Gen};
+use dlfusion::util::XorShiftRng;
+
+fn rand_conv(rng: &mut XorShiftRng) -> Layer {
+    let c = 1usize << rng.gen_usize(3, 9);
+    let hw = *rng.choose(&[7usize, 14, 28, 56, 112]);
+    let k = *rng.choose(&[1usize, 3, 5]);
+    Layer::conv("c", ConvSpec::same(c, c, hw, k))
+}
+
+#[test]
+fn prop_latency_positive_finite_everywhere() {
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| (rand_conv(rng), 1usize << rng.gen_usize(0, 5)));
+    forall(100, &g, |(l, mp)| {
+        let t = sim.layer_latency_ms(l, *mp);
+        if t.is_finite() && t > 0.0 { Ok(()) } else { Err(format!("latency {t}")) }
+    });
+}
+
+#[test]
+fn prop_latency_monotone_in_opcount_at_fixed_shape() {
+    // Scaling a layer's channels up (4x the ops) cannot reduce latency.
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let c = 1usize << rng.gen_usize(3, 8);
+        let hw = *rng.choose(&[14usize, 28, 56]);
+        let mp = 1usize << rng.gen_usize(0, 5);
+        (c, hw, mp)
+    });
+    forall(60, &g, |&(c, hw, mp)| {
+        let small = Layer::conv("s", ConvSpec::same(c, c, hw, 3));
+        let big = Layer::conv("b", ConvSpec::same(2 * c, 2 * c, hw, 3));
+        let ts = sim.layer_latency_ms(&small, mp);
+        let tb = sim.layer_latency_ms(&big, mp);
+        if tb >= ts { Ok(()) } else { Err(format!("bigger faster: {tb} < {ts}")) }
+    });
+}
+
+#[test]
+fn prop_gflops_never_exceed_roofline() {
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| (rand_conv(rng), 1usize << rng.gen_usize(0, 5)));
+    forall(100, &g, |(l, mp)| {
+        let achieved = sim.layer_gflops(l, *mp);
+        let bound = dlfusion::perfmodel::roofline::roofline_gflops(&sim.spec, l.intensity());
+        if achieved <= bound * (1.0 + 1e-9) {
+            Ok(())
+        } else {
+            Err(format!("achieved {achieved} > roofline {bound}"))
+        }
+    });
+}
+
+#[test]
+fn prop_fusing_two_small_layers_beats_unfused_at_same_mp() {
+    // The Fig. 7 benefit: for small layers fusion never loses at matched MP
+    // (launch + fill amortization dominates the halo cost at depth 2).
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let c = 1usize << rng.gen_usize(4, 7);
+        let hw = *rng.choose(&[28usize, 56]);
+        let mp = 1usize << rng.gen_usize(0, 3);
+        (c, hw, mp)
+    });
+    forall(40, &g, |&(c, hw, mp)| {
+        let l = Layer::conv("c", ConvSpec::same(c, c, hw, 3));
+        let layers = vec![l.clone(), l.clone()];
+        let fused = sim.block_latency_ms(&layers, mp);
+        let unfused = 2.0 * sim.layer_latency_ms(&l, mp);
+        if fused <= unfused {
+            Ok(())
+        } else {
+            Err(format!("fused {fused} > unfused {unfused}"))
+        }
+    });
+}
+
+#[test]
+fn prop_block_redundancy_grows_with_mp() {
+    use dlfusion::accel::fusion::block_redundant_gops;
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let n = rng.gen_usize(2, 8);
+        let c = 1usize << rng.gen_usize(4, 7);
+        let hw = *rng.choose(&[28usize, 56]);
+        (n, c, hw)
+    });
+    forall(40, &g, |&(n, c, hw)| {
+        let layers: Vec<Layer> = (0..n)
+            .map(|i| Layer::conv(format!("c{i}"), ConvSpec::same(c, c, hw, 3)))
+            .collect();
+        let mut last = 0.0;
+        for mp in [1usize, 2, 4, 8, 16, 32] {
+            let (total, _) = block_redundant_gops(&layers, mp);
+            if total < last - 1e-9 {
+                return Err(format!("redundant gops decreased at mp={mp}"));
+            }
+            last = total;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_fused_traffic_at_most_unfused() {
+    use dlfusion::accel::memory::{fused_block_traffic, unfused_layer_bytes};
+    let sim = Simulator::mlu100();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let n = rng.gen_usize(2, 6);
+        let c = 1usize << rng.gen_usize(4, 7);
+        let hw = *rng.choose(&[14usize, 28, 56]);
+        let mp = 1usize << rng.gen_usize(2, 5);
+        (n, c, hw, mp)
+    });
+    forall(40, &g, |&(n, c, hw, mp)| {
+        let layers: Vec<Layer> = (0..n)
+            .map(|i| Layer::conv(format!("c{i}"), ConvSpec::same(c, c, hw, 3)))
+            .collect();
+        let fused = fused_block_traffic(&sim.spec, &layers, mp).total();
+        let unfused: f64 = layers.iter().map(unfused_layer_bytes).sum();
+        // Even with spills, fused traffic can't exceed unfused (a spill
+        // round-trips once; unfused round-trips every boundary).
+        if fused <= unfused + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("fused {fused} > unfused {unfused}"))
+        }
+    });
+}
+
+#[test]
+fn best_mp_shifts_up_with_opcount() {
+    // Fig. 4(c) in property form: optimal MP is non-decreasing as op count
+    // scales through channel expansion (at fixed spatial size).
+    let sim = Simulator::mlu100();
+    let mut last = 1;
+    for factor in [1usize, 2, 4] {
+        let layer = dlfusion::zoo::scaled_conv_layer(factor);
+        let best = sim.best_layer_mp(&layer);
+        assert!(best >= last, "factor {factor}: best {best} < {last}");
+        last = best;
+    }
+}
+
+#[test]
+fn equal_ops_different_channels_different_best_mp() {
+    // Fig. 6(a) in integration form.
+    let sim = Simulator::mlu100();
+    let series = dlfusion::microbench::equal_ops_channel_series();
+    let bests: Vec<usize> = series.iter().map(|(_, l)| sim.best_layer_mp(l)).collect();
+    assert!(bests.iter().max() > bests.iter().min(),
+            "channel width must move the optimum: {bests:?}");
+}
