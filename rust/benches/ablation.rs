@@ -5,6 +5,7 @@
 
 use dlfusion::accel::{AcceleratorSpec, Simulator};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
+use dlfusion::cost::CostEngine;
 use dlfusion::optimizer::{algorithm, AlgorithmParams};
 use dlfusion::perfmodel::mp_select::MpModel;
 use dlfusion::search;
@@ -12,12 +13,15 @@ use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
 use dlfusion::zoo;
 
-fn geomean_fps(sim: &Simulator, params: &AlgorithmParams) -> f64 {
-    let fps: Vec<f64> = zoo::all_models()
-        .iter()
-        .map(|m| {
-            let s = algorithm::dlfusion_schedule_with(m, &sim.spec, params);
-            sim.run_schedule(m, &s).fps()
+/// Geomean FPS of DLFusion over the zoo, one memoized engine per network:
+/// parameter sweeps re-evaluate mostly-overlapping schedules, so nearly
+/// every block latency after the first sweep point is a cache hit.
+fn geomean_fps(engines: &mut [CostEngine], params: &AlgorithmParams) -> f64 {
+    let fps: Vec<f64> = engines
+        .iter_mut()
+        .map(|e| {
+            let s = algorithm::dlfusion_schedule_with(e.model(), &e.sim().spec, params);
+            e.run_schedule(&s).fps()
         })
         .collect();
     dlfusion::stats::descriptive::geomean(&fps)
@@ -26,8 +30,11 @@ fn geomean_fps(sim: &Simulator, params: &AlgorithmParams) -> f64 {
 fn main() {
     banner("Ablation", "sensitivity of DLFusion's constants (geomean FPS over the zoo)");
     let sim = Simulator::mlu100();
+    let models = zoo::all_models();
+    let mut engines: Vec<CostEngine> =
+        models.iter().map(|m| CostEngine::new(&sim, m)).collect();
     let base = AlgorithmParams::for_spec(&sim.spec);
-    let base_fps = geomean_fps(&sim, &base);
+    let base_fps = geomean_fps(&mut engines, &base);
 
     // ---- OpCount_critical ----
     let mut t = Table::new(&["OpCount_critical (GOPs/core)", "geomean FPS", "vs default"])
@@ -35,7 +42,7 @@ fn main() {
     let mut csv = Csv::new(&["knob", "value", "geomean_fps"]);
     for mult in [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 16.0] {
         let p = AlgorithmParams { opcount_critical: base.opcount_critical * mult, ..base };
-        let f = geomean_fps(&sim, &p);
+        let f = geomean_fps(&mut engines, &p);
         t.row(vec![format!("{:.2}", p.opcount_critical), format!("{f:.0}"),
                    format!("{:+.1}%", 100.0 * (f / base_fps - 1.0))]);
         csv.row_display(&["critical".to_string(), format!("{:.3}", p.opcount_critical),
@@ -51,7 +58,7 @@ fn main() {
         let p = AlgorithmParams {
             mp_model: MpModel { alpha: a, beta: b_, bias: c }, ..base
         };
-        let f = geomean_fps(&sim, &p);
+        let f = geomean_fps(&mut engines, &p);
         t.row(vec![format!("({a}, {b_}, {c})"), format!("{f:.0}"),
                    format!("{:+.1}%", 100.0 * (f / base_fps - 1.0))]);
         csv.row_display(&["eq5".to_string(), format!("{a}/{b_}/{c}"), format!("{f:.1}")]);
@@ -65,8 +72,11 @@ fn main() {
         let mut spec = AcceleratorSpec::mlu100();
         spec.channel_granularity = g;
         let sim_g = Simulator::new(spec);
+        // A different spec changes every latency: fresh engines required.
+        let mut engines_g: Vec<CostEngine> =
+            models.iter().map(|m| CostEngine::new(&sim_g, m)).collect();
         let p = AlgorithmParams::for_spec(&sim_g.spec);
-        let f = geomean_fps(&sim_g, &p);
+        let f = geomean_fps(&mut engines_g, &p);
         t.row(vec![g.to_string(), format!("{f:.0}")]);
         csv.row_display(&["granularity".to_string(), g.to_string(), format!("{f:.1}")]);
     }
@@ -78,16 +88,23 @@ fn main() {
         .label_first()
         .with_title("simulated annealing over the unreduced space");
     for m in [zoo::resnet18(), zoo::alexnet()] {
+        // Cold anneal, warm anneal, and DLFusion all share one engine.
+        let mut engine = CostEngine::new(&sim, &m);
         let dlf = algorithm::dlfusion_schedule_with(&m, &sim.spec, &base);
-        let f_dlf = sim.run_schedule(&m, &dlf).fps();
+        let f_dlf = engine.run_schedule(&dlf).fps();
         let cfg = search::annealing::AnnealConfig::default();
-        let (_, cold_ms) = search::annealing::anneal(&sim, &m, &cfg, None);
-        let (_, warm_ms) = search::annealing::anneal(&sim, &m, &cfg, Some(dlf));
+        let (_, cold_ms) = search::annealing::anneal_with(&mut engine, &cfg, None);
+        let (_, warm_ms) =
+            search::annealing::anneal_with(&mut engine, &cfg, Some(dlf));
         t.row(vec![m.name.clone(), format!("{f_dlf:.0}"),
                    format!("{:.0}", 1000.0 / cold_ms),
                    format!("{:.0}", 1000.0 / warm_ms)]);
         csv.row_display(&["annealing".to_string(), m.name.clone(),
                           format!("{:.3}", (1000.0 / cold_ms) / f_dlf)]);
+        let st = engine.stats();
+        println!("  {}: {} block queries, {} computed ({:.0}x fewer raw \
+                  evaluations than per-move re-simulation)",
+                 m.name, st.queries(), st.misses, st.block_eval_reduction());
     }
     println!("{t}");
 
@@ -95,10 +112,11 @@ fn main() {
     let mut t = Table::new(&["network", "reduced oracle FPS", "full-DP FPS", "reduction cost"])
         .label_first().with_title("what the paper's search-space reduction gives up");
     for m in [zoo::resnet18(), zoo::alexnet()] {
-        let (red, _) = search::oracle_schedule(&sim, &m);
-        let (full, _) = search::oracle_schedule_full(&sim, &m);
-        let f_red = sim.run_schedule(&m, &red).fps();
-        let f_full = sim.run_schedule(&m, &full).fps();
+        let mut engine = CostEngine::new(&sim, &m);
+        let (red, _) = search::oracle_schedule_with(&mut engine);
+        let (full, _) = search::brute::oracle_schedule_full_with(&mut engine);
+        let f_red = engine.run_schedule(&red).fps();
+        let f_full = engine.run_schedule(&full).fps();
         t.row(vec![m.name.clone(), format!("{f_red:.0}"), format!("{f_full:.0}"),
                    format!("{:.1}%", 100.0 * (1.0 - f_red / f_full))]);
         csv.row_display(&["oracle_reduction".to_string(), m.name.clone(),

@@ -4,7 +4,8 @@
 
 use dlfusion::accel::Simulator;
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
-use dlfusion::optimizer::{run_strategy, Strategy};
+use dlfusion::cost::CostEngine;
+use dlfusion::optimizer::{run_strategy_with, Strategy};
 use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
 use dlfusion::zoo;
@@ -25,15 +26,23 @@ fn main() {
 
     let mut speedups = Vec::new();
     let mut proximities = Vec::new();
+    let mut total_queries = 0u64;
+    let mut total_computed = 0u64;
     for m in zoo::all_models() {
+        // One memoized engine per network: the seven strategies (and the
+        // oracle's DP inside strategy 7) share every block evaluation.
+        let mut engine = CostEngine::new(&sim, &m);
         let mut fps = Vec::new();
         for st in Strategy::ALL {
-            let (_, rep) = run_strategy(&sim, &m, st);
+            let (_, rep) = run_strategy_with(&mut engine, st);
             fps.push(rep.fps());
             csv.row_display(&[m.name.clone(), st.index().to_string(),
                               st.name().to_string(), format!("{:.1}", rep.fps()),
                               format!("{:.3}", rep.fps() / fps[0])]);
         }
+        let st = engine.stats();
+        total_queries += st.queries();
+        total_computed += st.misses;
         let s6s1 = fps[5] / fps[0];
         let s6s7 = fps[5] / fps[6];
         speedups.push(s6s1);
@@ -46,6 +55,9 @@ fn main() {
     }
     println!("{t}");
     csv.write_to(BENCH_OUT_DIR, "fig10_strategies").unwrap();
+    println!("\ncost engine across all strategies: {total_queries} block \
+              queries, {total_computed} computed ({:.1}x fewer)",
+             total_queries as f64 / total_computed.max(1) as f64);
 
     let max = speedups.iter().cloned().fold(0.0, f64::max);
     let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
@@ -63,8 +75,18 @@ fn main() {
     b.time("dlfusion_algorithm1", || {
         dlfusion::optimizer::dlfusion_schedule(&m, &sim.spec)
     });
-    b.time("oracle_reduced_dp", || dlfusion::search::oracle_schedule(&sim, &m));
+    let mut last_stats = None;
+    b.time("oracle_reduced_dp", || {
+        let (sched, st) = dlfusion::search::oracle_schedule(&sim, &m);
+        last_stats = Some(st);
+        sched
+    });
     let results = b.finish();
     let ratio = results[1].mean_ms() / results[0].mean_ms().max(1e-9);
     println!("oracle search costs {ratio:.0}x DLFusion's O(n) pass on ResNet-50");
+    let ostats = last_stats.expect("oracle timed at least once");
+    println!("oracle DP detail: {} blocks considered, {} (block, MP) \
+              evaluations ({} computed / {} cached), {} us wall",
+             ostats.blocks_considered, ostats.evaluations,
+             ostats.cache_misses, ostats.cache_hits, ostats.wall_us);
 }

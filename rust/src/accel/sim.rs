@@ -65,7 +65,7 @@ impl PerfReport {
     }
 }
 
-/// The accelerator simulator (see module docs and DESIGN.md §6).
+/// The accelerator simulator (see module docs and rust/docs/DESIGN.md §6).
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub spec: AcceleratorSpec,
@@ -130,89 +130,21 @@ impl Simulator {
 
     /// Evaluate a fused block's latency for *many* MP settings at once.
     ///
-    /// Hot path of the brute-force oracle's DP (§Perf): the per-layer
-    /// quantities that don't depend on MP — downstream halos, op counts,
-    /// output geometry, weight bytes — are computed once per candidate
-    /// block instead of once per (block, MP) pair. Identical results to
-    /// calling [`Self::block_latency_ms`] per MP (pinned by a unit test).
+    /// Hot path of the brute-force oracle's DP (rust/docs/DESIGN.md §7): the
+    /// per-layer quantities that don't depend on MP — downstream halos, op
+    /// counts, output geometry, weight bytes — are derived once per candidate
+    /// block (via [`crate::cost::ModelFacts`], the single home of that math)
+    /// instead of once per (block, MP) pair. Identical results to calling
+    /// [`Self::block_latency_ms`] per MP (pinned by a unit test here and by
+    /// the property test in `rust/tests/cost_engine.rs`). Callers evaluating
+    /// many blocks of the *same* model should go through
+    /// [`crate::cost::CostEngine`], which derives the facts once per model
+    /// and memoizes each `(block, mp)` outcome.
     pub fn block_latency_ms_multi(&self, layers: &[Layer], mps: &[usize]) -> Vec<f64> {
         assert!(!layers.is_empty());
-        if layers.len() == 1 {
-            return mps.iter().map(|&m| self.layer_latency_ms(&layers[0], m)).collect();
-        }
-        let s = &self.spec;
-        let halos = fusion::downstream_halos(layers);
-        // Per-layer MP-independent facts.
-        struct LayerFacts {
-            gops: f64,
-            rows: f64,
-            halo: f64,
-            out_row_bytes: f64,
-            out_bytes: f64,
-            next_weights: f64,
-        }
-        let facts: Vec<LayerFacts> = layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| {
-                let out = l.output_shape();
-                LayerFacts {
-                    gops: l.op_gops(),
-                    rows: out.h.max(1) as f64,
-                    halo: halos[i] as f64,
-                    out_row_bytes: out.w as f64 * out.c as f64
-                        * crate::graph::layer::BYTES_PER_ELEM,
-                    out_bytes: out.bytes(),
-                    next_weights: layers.get(i + 1).map_or(0.0, |n| n.weight_bytes()),
-                }
-            })
-            .collect();
-        let boundary = layers[0].input_shape().bytes()
-            + layers.last().unwrap().output_shape().bytes();
-        let weight_bytes: f64 = layers.iter().map(|l| l.weight_bytes()).sum();
-        let barriers = layers
-            .iter()
-            .filter(|l| match &l.kind {
-                crate::graph::LayerKind::Conv(c) => c.stride > 1,
-                crate::graph::LayerKind::Pool { stride, .. } => *stride > 1,
-                _ => false,
-            })
-            .count() as f64;
-        let t_issue = s.fused_layer_us * layers.len() as f64 / 1e3;
-
+        let facts = crate::cost::ModelFacts::from_layers(layers);
         mps.iter()
-            .map(|&mp| {
-                let mpf = mp as f64;
-                let mut computed = 0.0;
-                let mut spill = 0.0;
-                for (i, f) in facts.iter().enumerate() {
-                    // Redundancy (fusion::layer_redundancy inlined on facts).
-                    let rho = if mp == 1 {
-                        1.0
-                    } else {
-                        let band = (f.rows / mpf).ceil();
-                        let per_core = (band + 2.0 * f.halo).min(f.rows);
-                        per_core * mpf / f.rows
-                    };
-                    computed += f.gops * rho;
-                    // Spill check (memory::fused_block_traffic inlined).
-                    if i + 1 < facts.len() {
-                        let band_rows =
-                            ((f.rows / mpf).ceil() + 2.0 * f.halo).min(f.rows);
-                        let working = 2.0 * band_rows * f.out_row_bytes
-                            + f.next_weights / mpf;
-                        if working > s.core_buffer_bytes {
-                            spill += 2.0 * f.out_bytes;
-                        }
-                    }
-                }
-                let t_compute =
-                    efficiency::core_compute_ms(s, computed / mpf) + t_issue;
-                let t_mem =
-                    memory::transfer_ms(s, boundary + weight_bytes + spill);
-                let t_retile = s.sync_us_per_core * mpf * barriers / 1e3;
-                t_compute.max(t_mem) + t_retile + self.overheads_ms(mp)
-            })
+            .map(|&mp| facts.block_latency_ms_batched(&self.spec, 0, layers.len(), mp))
             .collect()
     }
 

@@ -4,10 +4,12 @@ use super::args::Args;
 use crate::accel::Simulator;
 use crate::codegen;
 use crate::coordinator::{self, driver, equivalence, plan};
+use crate::cost::CostEngine;
 use crate::graph::{format as dlm, Model};
 use crate::optimizer::{self, Strategy};
 use crate::perfmodel;
 use crate::runtime::Runtime;
+use crate::search;
 use crate::util::units::{fmt_gops, fmt_ms};
 use crate::util::Table;
 use crate::zoo;
@@ -23,6 +25,8 @@ COMMANDS:
     optimize <model|file.dlm>    run Algorithm 1, print the schedule
         [--strategy 1..7] [--critical GOPS]
     simulate <model|file.dlm>    simulate all seven strategies (Fig. 10 row)
+    search <model|file.dlm>      compare search costs: Algorithm 1 vs oracle
+        [--iterations N]         DP vs simulated annealing (cache + wall time)
     codegen <model|file.dlm>     emit CNML-style C++ [--out DIR]
     characterize                 re-derive OpCount_critical / Eq.5 weights
     space <n>                    evaluate Eq. 4 search-space size
@@ -44,6 +48,7 @@ pub fn run(args: &Args) -> i32 {
         "zoo" => cmd_zoo(args),
         "optimize" => cmd_optimize(args),
         "simulate" => cmd_simulate(args),
+        "search" => cmd_search(args),
         "codegen" => cmd_codegen(args),
         "characterize" => cmd_characterize(),
         "space" => cmd_space(args),
@@ -117,8 +122,9 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
     if let Some(c) = args.flag_f64("critical").map_err(|e| e.to_string())? {
         params.opcount_critical = c;
     }
-    let sched = optimizer::strategies::strategy_schedule(&sim, &model, strategy, &params);
-    let report = sim.run_schedule(&model, &sched);
+    let mut engine = CostEngine::new(&sim, &model);
+    let sched = optimizer::strategies::strategy_schedule_with(&mut engine, strategy, &params);
+    let report = engine.run_schedule(&sched);
     println!("model:     {}", model.name);
     println!("strategy:  {} ({})", strategy.index(), strategy.name());
     println!("schedule:  {}", sched.summary());
@@ -131,13 +137,14 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
     let sim = Simulator::mlu100();
+    let mut engine = CostEngine::new(&sim, &model);
     let mut t = Table::new(&["#", "strategy", "blocks", "latency", "FPS", "speedup"])
         .label_first()
         .align(1, crate::util::table::Align::Left)
         .with_title(&format!("Fig. 10 row — {}", model.name));
     let mut base_fps = None;
     for st in Strategy::ALL {
-        let (sched, rep) = optimizer::run_strategy(&sim, &model, st);
+        let (sched, rep) = optimizer::run_strategy_with(&mut engine, st);
         let fps = rep.fps();
         let base = *base_fps.get_or_insert(fps);
         t.row(vec![
@@ -150,6 +157,61 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         ]);
     }
     println!("{t}");
+    let st = engine.stats();
+    println!("cost engine: {} block queries, {} computed ({} cached, \
+              {:.1}x fewer computations than unmemoized)",
+             st.queries(), st.misses, st.hits, st.block_eval_reduction());
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<(), String> {
+    let model = load_model(args)?;
+    let sim = Simulator::mlu100();
+    let iterations = args
+        .flag_usize("iterations")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(search::AnnealConfig::default().iterations);
+
+    // DLFusion's O(n) pass (no simulator evaluations at all).
+    let t0 = std::time::Instant::now();
+    let dlf = optimizer::dlfusion_schedule(&model, &sim.spec);
+    let dlf_us = t0.elapsed().as_micros() as u64;
+    let mut engine = CostEngine::new(&sim, &model);
+    let dlf_ms = engine.run_schedule(&dlf).total_ms;
+
+    // The reduced brute-force oracle (strategy 7) through the same engine.
+    let (oracle, ostats) = search::oracle_schedule_with(&mut engine);
+    let oracle_ms = engine.run_schedule(&oracle).total_ms;
+
+    // Simulated annealing over the unreduced space, same engine.
+    engine.reset_stats();
+    let t0 = std::time::Instant::now();
+    let cfg = search::AnnealConfig { iterations, ..Default::default() };
+    let (_, anneal_ms) = search::annealing::anneal_with(&mut engine, &cfg, None);
+    let anneal_us = t0.elapsed().as_micros() as u64;
+    let astats = engine.stats();
+
+    let mut t = Table::new(&["search", "latency", "block evals", "cache hits",
+                             "computed", "wall"])
+        .label_first()
+        .with_title(&format!("Search-time comparison — {} (paper Section V)",
+                             model.name));
+    t.row(vec!["DLFusion Algorithm 1".into(), fmt_ms(dlf_ms),
+               "0".into(), "-".into(), "-".into(), format!("{dlf_us} us")]);
+    t.row(vec!["oracle DP (reduced)".into(), fmt_ms(oracle_ms),
+               ostats.evaluations.to_string(), ostats.cache_hits.to_string(),
+               ostats.cache_misses.to_string(),
+               format!("{} us", ostats.wall_us)]);
+    t.row(vec![format!("annealing ({iterations} moves)"), fmt_ms(anneal_ms),
+               astats.queries().to_string(), astats.hits.to_string(),
+               astats.misses.to_string(), format!("{anneal_us} us")]);
+    println!("{t}");
+    println!("oracle search costs {:.0}x DLFusion's one-pass heuristic for a \
+              {:.1}% latency win; the annealer's memoized moves computed only \
+              {:.1}% of their block queries",
+             (ostats.wall_us.max(1)) as f64 / (dlf_us.max(1)) as f64,
+             100.0 * (dlf_ms / oracle_ms - 1.0),
+             100.0 * (1.0 - astats.hit_rate()));
     Ok(())
 }
 
@@ -256,13 +318,21 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         return Err("fused-vs-unfused equivalence failed".into());
     }
 
-    let ex_plan = plan::build_plan(&model, &sched, rt.manifest())?;
+    let mut ex_plan = plan::build_plan(&model, &sched, rt.manifest())?;
+    let mut cost_engine = CostEngine::new(&sim, &model);
+    plan::annotate_with_costs(&mut ex_plan, &mut cost_engine);
+    // Whole-schedule prediction (per-step annotations drop conv-free layers
+    // and re-charge per-launch overheads, so their sum is not the total).
+    let predicted_ms = cost_engine.run_schedule(&sched).total_ms;
     let mut engine =
         coordinator::Engine::new(rt, &model, ex_plan, 7).map_err(|e| e.to_string())?;
     let cfg = driver::DriverConfig { requests, verify_each: verify, ..Default::default() };
     let report = driver::serve(&mut engine, &cfg).map_err(|e| e.to_string())?;
     println!("served {} requests: {}", requests, report.latency.report());
     println!("throughput: {:.1} inferences/s (PJRT CPU wall-clock)", report.fps());
+    println!("simulator-predicted MLU100 latency: {} per inference \
+              (PJRT CPU measures numerics, not MLU100 speed)",
+             fmt_ms(predicted_ms));
     if verify {
         println!(
             "per-request equivalence: {} ok / {} failures",

@@ -65,6 +65,13 @@ impl Engine {
         &self.plan
     }
 
+    /// Simulator-predicted latency of one inference through this plan, ms
+    /// (0.0 unless the plan was annotated via
+    /// [`super::plan::annotate_with_costs`]).
+    pub fn predicted_total_ms(&self) -> f64 {
+        self.plan.predicted_total_ms()
+    }
+
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
     }

@@ -17,4 +17,4 @@ pub mod driver;
 pub use driver::{DriverConfig, DriverReport};
 pub use equivalence::EquivalenceReport;
 pub use executor::Engine;
-pub use plan::{ExecutionPlan, PlanStep};
+pub use plan::{annotate_with_costs, ExecutionPlan, PlanStep};

@@ -6,6 +6,7 @@
 //! available depths. The plan is the compiled form the request loop runs —
 //! the analogue of the generated CNML program, but executing through PJRT.
 
+use crate::cost::CostEngine;
 use crate::graph::{LayerKind, Model};
 use crate::optimizer::schedule::Schedule;
 use crate::runtime::manifest::Manifest;
@@ -19,6 +20,9 @@ pub struct PlanStep {
     /// The schedule block this step came from.
     pub block_index: usize,
     pub mp: usize,
+    /// Simulator-predicted latency of this step's layer range at `mp`, ms
+    /// (0.0 until [`annotate_with_costs`] runs).
+    pub predicted_ms: f64,
 }
 
 /// A fully resolved execution plan.
@@ -37,6 +41,29 @@ impl ExecutionPlan {
     /// Number of fused (depth > 1) steps.
     pub fn num_fused_steps(&self) -> usize {
         self.steps.iter().filter(|s| s.conv_indices.len() > 1).count()
+    }
+
+    /// Sum of the steps' simulator-predicted latencies (0.0 until
+    /// [`annotate_with_costs`] runs). A per-step breakdown aid, not the
+    /// schedule's total: steps cover only conv-bearing ranges and each one
+    /// is charged its own launch/sync overheads, so this differs from
+    /// `CostEngine::run_schedule(..).total_ms` — use that for whole-model
+    /// predictions.
+    pub fn predicted_total_ms(&self) -> f64 {
+        self.steps.iter().map(|s| s.predicted_ms).sum()
+    }
+}
+
+/// Fill in each step's `predicted_ms` from the shared cost engine: the
+/// simulator latency of the step's layer range (first through last conv it
+/// executes) at the step's MP. This is what lets the driver report
+/// predicted-vs-measured numbers per request loop (the paper's Table III
+/// numbers come from the same engine the optimizer searched with).
+pub fn annotate_with_costs(plan: &mut ExecutionPlan, engine: &mut CostEngine) {
+    for step in &mut plan.steps {
+        let first = *step.conv_indices.first().expect("plan steps are non-empty");
+        let last = *step.conv_indices.last().unwrap();
+        step.predicted_ms = engine.block_latency(first, last + 1, step.mp);
     }
 }
 
@@ -76,6 +103,7 @@ pub fn build_plan(model: &Model, schedule: &Schedule, manifest: &Manifest)
                 conv_indices: rest[..taken].to_vec(),
                 block_index: bi,
                 mp: block.mp,
+                predicted_ms: 0.0,
             });
             rest = &rest[taken..];
         }
@@ -195,5 +223,36 @@ mod tests {
         // Greedy: 2+2+2.
         assert_eq!(plan.steps.len(), 3);
         assert!(plan.steps.iter().all(|s| s.artifact == "a2"));
+    }
+
+    #[test]
+    fn annotate_fills_step_predictions() {
+        let text = r#"{
+          "format_version": 1, "interchange": "hlo-text",
+          "artifacts": [
+            {"name": "a1", "file": "a1.hlo.txt", "depth": 1, "batch": 1,
+             "height": 16, "width": 16, "channels": [8, 8],
+             "input_shapes": [[1,16,16,8],[3,3,8,8],[8]],
+             "output_shape": [1,16,16,8]}
+          ],
+          "fused_pairs": {}, "golden": {}
+        }"#;
+        let man = Manifest::parse(text, Path::new("/tmp")).unwrap();
+        let model = zoo::mini_cnn();
+        let sched = Schedule::single_block(model.num_layers(), 4);
+        let mut plan = build_plan(&model, &sched, &man).unwrap();
+        assert_eq!(plan.predicted_total_ms(), 0.0);
+        let sim = crate::accel::Simulator::mlu100();
+        let mut engine = crate::cost::CostEngine::new(&sim, &model);
+        annotate_with_costs(&mut plan, &mut engine);
+        assert!(plan.steps.iter().all(|s| s.predicted_ms > 0.0));
+        assert!(plan.predicted_total_ms() > 0.0);
+        // Each step's prediction is the engine's latency for its range.
+        let s0 = &plan.steps[0];
+        assert_eq!(
+            s0.predicted_ms,
+            engine.block_latency(s0.conv_indices[0],
+                                 s0.conv_indices.last().unwrap() + 1, s0.mp)
+        );
     }
 }

@@ -1,0 +1,367 @@
+//! The memoized cost-evaluation engine (rust/docs/DESIGN.md §7.2).
+
+use std::collections::HashMap;
+
+use super::facts::ModelFacts;
+use crate::accel::{BlockPerf, PerfReport, Simulator};
+use crate::graph::Model;
+use crate::optimizer::schedule::Schedule;
+
+/// Evaluation-throughput counters for a [`CostEngine`].
+///
+/// Two reductions are tracked, matching the two kinds of waste the seed
+/// evaluation paths paid per query:
+///
+/// - **block level** — `hits`/`misses` on the `(start, end, mp)` cache. The
+///   seed paths computed every request from scratch, so `queries()` is the
+///   seed-equivalent raw block-latency computation count and `misses` is what
+///   the engine actually computed.
+/// - **layer level** — `seed_layer_evals` accumulates, per uncacheable-in-seed
+///   request, the per-layer fact derivations the seed performed (one full
+///   derivation per layer per block evaluation; one per layer per *batched*
+///   MP-set call, which shared facts across the set). `layer_facts_built`
+///   counts the derivations the engine performed: exactly one per model
+///   layer, at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CostStats {
+    /// Block-latency queries served from the cache.
+    pub hits: u64,
+    /// Block-latency queries computed (fact-table walk + insert).
+    pub misses: u64,
+    /// Per-layer fact derivations the seed paths would have performed for
+    /// the same query stream.
+    pub seed_layer_evals: u64,
+    /// Per-layer fact derivations actually performed (once per layer).
+    pub layer_facts_built: u64,
+}
+
+impl CostStats {
+    /// Total block-latency requests — what the unmemoized seed paths
+    /// computed from scratch.
+    pub fn queries(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of queries served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.queries() as f64
+        }
+    }
+
+    /// Seed-path block computations per engine computation (>= 1.0 means
+    /// memoization is paying for itself).
+    pub fn block_eval_reduction(&self) -> f64 {
+        self.queries() as f64 / (self.misses.max(1)) as f64
+    }
+
+    /// Seed-path per-layer fact derivations per engine derivation.
+    pub fn layer_eval_reduction(&self) -> f64 {
+        self.seed_layer_evals as f64 / (self.layer_facts_built.max(1)) as f64
+    }
+}
+
+/// Cached outcome of one `(start, end, mp)` scalar-path evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockCost {
+    pub latency_ms: f64,
+    /// Redundancy-weighted op count actually computed, GOPs.
+    pub computed_gops: f64,
+}
+
+/// Memoized `(start, end, mp) -> latency` evaluation over one
+/// `(Simulator, Model)` pair.
+///
+/// Two caches are kept, one per float-operation ordering of the seed code
+/// (see [`crate::cost`] module docs): the *scalar* cache mirrors
+/// `Simulator::block_latency_ms` / `run_schedule`, the *batched* cache
+/// mirrors `Simulator::block_latency_ms_multi` (the oracle DP's path). They
+/// are never mixed, so every consumer sees exactly the bits the seed path
+/// produced.
+pub struct CostEngine<'a> {
+    sim: &'a Simulator,
+    model: &'a Model,
+    facts: ModelFacts,
+    scalar: HashMap<(usize, usize, usize), BlockCost>,
+    batched: HashMap<(usize, usize, usize), f64>,
+    stats: CostStats,
+}
+
+impl<'a> CostEngine<'a> {
+    /// Build an engine: derives the model's fact tables once.
+    pub fn new(sim: &'a Simulator, model: &'a Model) -> CostEngine<'a> {
+        let facts = ModelFacts::new(model);
+        let stats = CostStats {
+            layer_facts_built: facts.len() as u64,
+            ..Default::default()
+        };
+        CostEngine {
+            sim,
+            model,
+            facts,
+            scalar: HashMap::new(),
+            batched: HashMap::new(),
+            stats,
+        }
+    }
+
+    /// The simulator this engine evaluates against (returned at the
+    /// engine's outer lifetime, so holding it does not borrow the engine).
+    pub fn sim(&self) -> &'a Simulator {
+        self.sim
+    }
+
+    /// The model this engine evaluates.
+    pub fn model(&self) -> &'a Model {
+        self.model
+    }
+
+    /// The derived fact tables.
+    pub fn facts(&self) -> &ModelFacts {
+        &self.facts
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CostStats {
+        self.stats
+    }
+
+    /// Zero the query counters (the `layer_facts_built` baseline is kept —
+    /// the tables are not rebuilt).
+    pub fn reset_stats(&mut self) {
+        self.stats = CostStats {
+            layer_facts_built: self.stats.layer_facts_built,
+            ..Default::default()
+        };
+    }
+
+    /// Scalar-path latency + computed-GOPs of block `[start, end)` at `mp`,
+    /// bit-identical to `Simulator::{layer,block}_latency_ms`.
+    pub fn block_cost(&mut self, start: usize, end: usize, mp: usize) -> BlockCost {
+        self.stats.seed_layer_evals += (end - start) as u64;
+        if let Some(&c) = self.scalar.get(&(start, end, mp)) {
+            self.stats.hits += 1;
+            return c;
+        }
+        self.stats.misses += 1;
+        let spec = &self.sim().spec;
+        let gops = self.facts.block_gops(start, end);
+        let cost = if end - start == 1 {
+            BlockCost {
+                latency_ms: self.facts.layer_latency_ms(spec, start, mp),
+                computed_gops: gops,
+            }
+        } else {
+            BlockCost {
+                latency_ms: self.facts.block_latency_ms(spec, start, end, mp),
+                computed_gops: self.facts.block_computed_gops(start, end, mp),
+            }
+        };
+        self.scalar.insert((start, end, mp), cost);
+        cost
+    }
+
+    /// Scalar-path latency of block `[start, end)` at `mp`.
+    pub fn block_latency(&mut self, start: usize, end: usize, mp: usize) -> f64 {
+        self.block_cost(start, end, mp).latency_ms
+    }
+
+    /// Batched-path latencies of block `[start, end)` over an MP set —
+    /// bit-identical to `Simulator::block_latency_ms_multi`. Each `(block,
+    /// mp)` pair is cached individually (the per-MP values are independent).
+    pub fn block_latency_batched(&mut self, start: usize, end: usize,
+                                 mps: &[usize]) -> Vec<f64> {
+        // The seed derived the block's facts once per batched call.
+        self.stats.seed_layer_evals += (end - start) as u64;
+        let spec = &self.sim().spec;
+        mps.iter()
+            .map(|&mp| {
+                if let Some(&v) = self.batched.get(&(start, end, mp)) {
+                    self.stats.hits += 1;
+                    return v;
+                }
+                self.stats.misses += 1;
+                let v = self.facts.block_latency_ms_batched(spec, start, end, mp);
+                self.batched.insert((start, end, mp), v);
+                v
+            })
+            .collect()
+    }
+
+    /// Total latency of a schedule — the sequential per-block sum, bit-equal
+    /// to `Simulator::run_schedule(..).total_ms` for any valid schedule
+    /// (validation itself is skipped; use [`Self::run_schedule`] when the
+    /// schedule is untrusted).
+    pub fn schedule_cost(&mut self, schedule: &Schedule) -> f64 {
+        let mut total = 0.0;
+        for b in &schedule.blocks {
+            total += self.block_latency(b.start, b.end, b.mp);
+        }
+        total
+    }
+
+    /// Incremental re-evaluation after a local move that replaced the blocks
+    /// at `changed` (indices into `schedule.blocks`); every other block must
+    /// already be cached from evaluating the predecessor schedule, so the
+    /// move costs O(|changed|) raw block computations. The returned total is
+    /// still the full sequential sum — a float sum cannot be updated by
+    /// subtraction without changing bits, and bit-equality with
+    /// `run_schedule` is part of the engine's contract.
+    pub fn delta_cost(&mut self, schedule: &Schedule, changed: &[usize]) -> f64 {
+        debug_assert!(changed.iter().all(|&bi| bi < schedule.blocks.len()));
+        let misses_before = self.stats.misses;
+        let total = self.schedule_cost(schedule);
+        debug_assert!(
+            self.stats.misses - misses_before <= changed.len() as u64,
+            "delta_cost: {} misses for {} changed blocks — predecessor \
+             schedule was not evaluated through this engine",
+            self.stats.misses - misses_before,
+            changed.len()
+        );
+        total
+    }
+
+    /// Simulate a whole schedule — bit-identical (including the panic on an
+    /// invalid schedule) to `Simulator::run_schedule`, served from the
+    /// scalar cache.
+    pub fn run_schedule(&mut self, schedule: &Schedule) -> PerfReport {
+        schedule
+            .validate(self.model.num_layers(), self.sim.spec.num_cores)
+            .unwrap_or_else(|e| {
+                panic!("invalid schedule for '{}': {e}", self.model.name)
+            });
+        let mut blocks = Vec::with_capacity(schedule.blocks.len());
+        let mut total_ms = 0.0;
+        let mut total_gops = 0.0;
+        for b in &schedule.blocks {
+            let cost = self.block_cost(b.start, b.end, b.mp);
+            let gops = self.facts.block_gops(b.start, b.end);
+            total_ms += cost.latency_ms;
+            total_gops += gops;
+            blocks.push(BlockPerf {
+                start: b.start,
+                end: b.end,
+                mp: b.mp,
+                latency_ms: cost.latency_ms,
+                gops,
+                computed_gops: cost.computed_gops,
+                fused: b.end - b.start > 1,
+            });
+        }
+        PerfReport {
+            model_name: self.model.name.clone(),
+            total_ms,
+            total_gops,
+            blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::schedule::{Block, Schedule};
+    use crate::zoo;
+
+    fn sim() -> Simulator {
+        Simulator::mlu100()
+    }
+
+    #[test]
+    fn run_schedule_bit_identical_to_simulator() {
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::alexnet(), zoo::mini_cnn()] {
+            let mut engine = CostEngine::new(&s, &m);
+            for sched in [
+                Schedule::layerwise(m.num_layers(), 1),
+                Schedule::uniform_blocks(m.num_layers(), 4, 8),
+                Schedule::single_block(m.num_layers(), 32),
+            ] {
+                assert_eq!(engine.run_schedule(&sched), s.run_schedule(&m, &sched),
+                           "{} {}", m.name, sched.summary());
+            }
+        }
+    }
+
+    #[test]
+    fn batched_bit_identical_to_simulator_multi() {
+        let s = sim();
+        let m = zoo::vgg19();
+        let mut engine = CostEngine::new(&s, &m);
+        let mps = s.spec.reduced_mp_set();
+        for (start, end) in [(0usize, 1usize), (0, 6), (3, 11)] {
+            let fast = engine.block_latency_batched(start, end, &mps);
+            let reference = s.block_latency_ms_multi(&m.layers[start..end], &mps);
+            assert_eq!(fast, reference, "[{start}..{end}]");
+        }
+    }
+
+    #[test]
+    fn cache_hits_do_not_recompute() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut engine = CostEngine::new(&s, &m);
+        let sched = Schedule::uniform_blocks(m.num_layers(), 3, 4);
+        let a = engine.schedule_cost(&sched);
+        let st1 = engine.stats();
+        assert_eq!(st1.hits, 0);
+        assert_eq!(st1.misses as usize, sched.num_blocks());
+        let b = engine.schedule_cost(&sched);
+        let st2 = engine.stats();
+        assert_eq!(a, b);
+        assert_eq!(st2.misses, st1.misses, "second walk must be all hits");
+        assert_eq!(st2.hits as usize, sched.num_blocks());
+    }
+
+    #[test]
+    fn delta_cost_only_computes_changed_blocks() {
+        let s = sim();
+        let m = zoo::resnet18();
+        let mut engine = CostEngine::new(&s, &m);
+        let base = Schedule::layerwise(m.num_layers(), 1);
+        let base_cost = engine.schedule_cost(&base);
+        // Local move: bump block 3's MP.
+        let mut moved = base.clone();
+        moved.blocks[3] = Block { mp: 2, ..moved.blocks[3] };
+        let before = engine.stats().misses;
+        let moved_cost = engine.delta_cost(&moved, &[3]);
+        assert_eq!(engine.stats().misses - before, 1);
+        assert_ne!(moved_cost, base_cost);
+        // And the incremental total matches a fresh full evaluation.
+        let mut fresh = CostEngine::new(&s, &m);
+        assert_eq!(moved_cost, fresh.schedule_cost(&moved));
+    }
+
+    #[test]
+    fn stats_reductions_and_reset() {
+        let s = sim();
+        let m = zoo::mini_cnn();
+        let mut engine = CostEngine::new(&s, &m);
+        let sched = Schedule::layerwise(m.num_layers(), 2);
+        for _ in 0..20 {
+            engine.schedule_cost(&sched);
+        }
+        let st = engine.stats();
+        assert_eq!(st.layer_facts_built as usize, m.num_layers());
+        assert!(st.block_eval_reduction() >= 10.0, "{st:?}");
+        assert!(st.layer_eval_reduction() >= 10.0, "{st:?}");
+        assert!(st.hit_rate() > 0.9);
+        engine.reset_stats();
+        let st = engine.stats();
+        assert_eq!(st.queries(), 0);
+        assert_eq!(st.layer_facts_built as usize, m.num_layers());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid schedule")]
+    fn run_schedule_rejects_gap_like_simulator() {
+        let s = sim();
+        let m = zoo::mini_cnn();
+        let mut engine = CostEngine::new(&s, &m);
+        let mut sched = Schedule::uniform_blocks(m.num_layers(), 4, 2);
+        sched.blocks.pop();
+        engine.run_schedule(&sched);
+    }
+}

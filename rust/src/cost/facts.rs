@@ -1,0 +1,387 @@
+//! MP-independent per-layer fact tables (rust/docs/DESIGN.md §7.1).
+//!
+//! Everything the latency model needs from a [`Layer`] that does not depend
+//! on the MP setting or on which block the layer lands in: op counts, output
+//! geometry, boundary/weight bytes, halo radii, re-tile flags. Deriving these
+//! quantities is the expensive, branch-heavy part of a block evaluation (shape
+//! matches, Eq. 1/2 arithmetic); the tables below derive each layer **once
+//! per model** and make every later query a table walk.
+//!
+//! The only block-dependent quantity, the downstream halo of layer `i` in a
+//! block ending at `end` (see [`crate::accel::fusion::downstream_halos`]), is
+//! recovered in O(1) from two auxiliary tables: an integer prefix sum of halo
+//! radii and a next-re-tile index. Integer prefixes are exact, so the
+//! recovered halos are identical to the backward walk's — this is load-bearing
+//! for the bit-exactness contract in [`crate::cost`].
+
+use crate::accel::spec::AcceleratorSpec;
+use crate::accel::{efficiency, memory, partition};
+use crate::graph::layer::BYTES_PER_ELEM;
+use crate::graph::{Layer, LayerKind, Model};
+
+/// The MP-independent facts of one layer (all derived in
+/// [`ModelFacts::from_layers`]; field-by-field provenance in the docs there).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerFacts {
+    /// Eq. 1/2 operation count, GOPs.
+    pub gops: f64,
+    /// Output-channel count, clamped to >= 1 (the partitioning axis).
+    pub channels: usize,
+    /// Output rows `h`, clamped to >= 1, as f64 (band-partition denominator).
+    pub rows: f64,
+    /// Output width as f64.
+    pub out_w: f64,
+    /// Output channels as f64.
+    pub out_c: f64,
+    /// Input activation bytes.
+    pub in_bytes: f64,
+    /// Output activation bytes.
+    pub out_bytes: f64,
+    /// Parameter bytes.
+    pub weight_bytes: f64,
+    /// Off-chip bytes of the layer run unfused (input + output + weights).
+    pub unfused_bytes: f64,
+    /// Receptive-field radius added to a fusion block's halo.
+    pub halo_radius: usize,
+    /// Spatial-reduction layer (stride > 1 conv/pool): re-tiles the band
+    /// partition, resetting the halo pyramid and costing a barrier.
+    pub retile: bool,
+}
+
+/// Per-model fact tables + prefix structures for O(1) range queries.
+#[derive(Debug, Clone)]
+pub struct ModelFacts {
+    facts: Vec<LayerFacts>,
+    /// `radius_prefix[i]` = sum of `halo_radius` over layers `0..i`.
+    radius_prefix: Vec<usize>,
+    /// `retile_prefix[i]` = number of re-tile layers among `0..i`.
+    retile_prefix: Vec<usize>,
+    /// `next_retile[i]` = smallest `j >= i` with `facts[j].retile`, else `n`.
+    next_retile: Vec<usize>,
+}
+
+impl ModelFacts {
+    /// Derive the fact tables for a slice of layers (one pass, O(n)).
+    pub fn from_layers(layers: &[Layer]) -> ModelFacts {
+        let n = layers.len();
+        let facts: Vec<LayerFacts> = layers
+            .iter()
+            .map(|l| {
+                let out = l.output_shape();
+                let in_bytes = l.input_shape().bytes();
+                let out_bytes = out.bytes();
+                let weight_bytes = l.weight_bytes();
+                LayerFacts {
+                    gops: l.op_gops(),
+                    channels: l.channels().max(1),
+                    rows: out.h.max(1) as f64,
+                    out_w: out.w as f64,
+                    out_c: out.c as f64,
+                    in_bytes,
+                    out_bytes,
+                    weight_bytes,
+                    unfused_bytes: in_bytes + out_bytes + weight_bytes,
+                    halo_radius: l.halo_radius(),
+                    retile: match &l.kind {
+                        LayerKind::Conv(c) => c.stride > 1,
+                        LayerKind::Pool { stride, .. } => *stride > 1,
+                        _ => false,
+                    },
+                }
+            })
+            .collect();
+        let mut radius_prefix = vec![0usize; n + 1];
+        let mut retile_prefix = vec![0usize; n + 1];
+        for (i, f) in facts.iter().enumerate() {
+            radius_prefix[i + 1] = radius_prefix[i] + f.halo_radius;
+            retile_prefix[i + 1] = retile_prefix[i] + usize::from(f.retile);
+        }
+        let mut next_retile = vec![n; n + 1];
+        for i in (0..n).rev() {
+            next_retile[i] = if facts[i].retile { i } else { next_retile[i + 1] };
+        }
+        ModelFacts { facts, radius_prefix, retile_prefix, next_retile }
+    }
+
+    /// Derive the fact tables for a whole model.
+    pub fn new(model: &Model) -> ModelFacts {
+        ModelFacts::from_layers(&model.layers)
+    }
+
+    /// Number of layers covered.
+    pub fn len(&self) -> usize {
+        self.facts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.facts.is_empty()
+    }
+
+    /// Facts of one layer.
+    pub fn layer(&self, i: usize) -> &LayerFacts {
+        &self.facts[i]
+    }
+
+    /// Downstream halo (output rows) of layer `i` inside a block ending at
+    /// `end` — identical to `fusion::downstream_halos(&layers[start..end])[i -
+    /// start]` for any `start <= i`. The halo accumulates the radii of layers
+    /// `i+1..` up to and including the first re-tile layer, where the pyramid
+    /// resets.
+    pub fn halo(&self, i: usize, end: usize) -> usize {
+        debug_assert!(i < end && end <= self.len());
+        let j0 = self.next_retile[i + 1];
+        let upper = if j0 < end { j0 } else { end - 1 };
+        self.radius_prefix[upper + 1] - self.radius_prefix[i + 1]
+    }
+
+    /// Number of re-tile barrier layers in `[start, end)`.
+    pub fn barriers(&self, start: usize, end: usize) -> usize {
+        self.retile_prefix[end] - self.retile_prefix[start]
+    }
+
+    /// Useful op count (GOPs) of `[start, end)` — sequential sum, matching
+    /// `layers.iter().map(Layer::op_gops).sum()` bit for bit.
+    pub fn block_gops(&self, start: usize, end: usize) -> f64 {
+        self.facts[start..end].iter().map(|f| f.gops).sum()
+    }
+
+    /// Redundancy-weighted op count of block `[start, end)` at MP = `mp` —
+    /// bit-identical to [`crate::accel::fusion::block_redundant_gops`].
+    pub fn block_computed_gops(&self, start: usize, end: usize, mp: usize) -> f64 {
+        let mut total = 0.0;
+        for i in start..end {
+            let f = &self.facts[i];
+            total += f.gops * self.redundancy(i, end, mp);
+        }
+        total
+    }
+
+    /// `fusion::layer_redundancy` on the fact tables (same float ops, same
+    /// order).
+    fn redundancy(&self, i: usize, end: usize, mp: usize) -> f64 {
+        if mp == 1 {
+            return 1.0;
+        }
+        let f = &self.facts[i];
+        let halo = self.halo(i, end) as f64;
+        let band = (f.rows / mp as f64).ceil();
+        let per_core = (band + 2.0 * halo).min(f.rows);
+        (per_core * mp as f64) / f.rows
+    }
+
+    fn overheads_ms(&self, s: &AcceleratorSpec, mp: usize) -> f64 {
+        (s.launch_overhead_us + s.sync_us_per_core * mp as f64) / 1e3
+    }
+
+    /// Latency of layer `i` run unfused at MP = `mp` — bit-identical to
+    /// [`crate::accel::Simulator::layer_latency_ms`].
+    pub fn layer_latency_ms(&self, s: &AcceleratorSpec, i: usize, mp: usize) -> f64 {
+        let f = &self.facts[i];
+        let g_core = partition::per_core_gops(s, f.gops, f.channels, mp);
+        let t_compute = efficiency::core_compute_ms(s, g_core);
+        let t_mem = memory::transfer_ms(s, f.unfused_bytes);
+        t_compute.max(t_mem) + self.overheads_ms(s, mp)
+    }
+
+    /// Latency of fused block `[start, end)` at MP = `mp` — bit-identical to
+    /// [`crate::accel::Simulator::block_latency_ms`] (the reference scalar
+    /// path; every float operation is replayed in the same order).
+    pub fn block_latency_ms(&self, s: &AcceleratorSpec, start: usize, end: usize,
+                            mp: usize) -> f64 {
+        assert!(start < end && end <= self.len(), "empty or out-of-range block");
+        if end - start == 1 {
+            return self.layer_latency_ms(s, start, mp);
+        }
+        let computed = self.block_computed_gops(start, end, mp);
+        let g_core = computed / mp as f64;
+        let t_compute = efficiency::core_compute_ms(s, g_core)
+            + s.fused_layer_us * (end - start) as f64 / 1e3;
+        // memory::fused_block_traffic replayed on the tables.
+        let boundary = self.facts[start].in_bytes + self.facts[end - 1].out_bytes;
+        let weight: f64 = self.facts[start..end].iter().map(|f| f.weight_bytes).sum();
+        let mut spill = 0.0;
+        for l in start..end - 1 {
+            let f = &self.facts[l];
+            let band_rows = (f.rows / mp as f64).ceil() + 2.0 * self.halo(l, end) as f64;
+            let band_rows = band_rows.min(f.rows);
+            let band_bytes = band_rows * f.out_w * f.out_c * BYTES_PER_ELEM;
+            let next_weights = self.facts[l + 1].weight_bytes / mp as f64;
+            let working = 2.0 * band_bytes + next_weights;
+            if working > s.core_buffer_bytes {
+                spill += 2.0 * f.out_bytes;
+            }
+        }
+        let t_mem = memory::transfer_ms(s, boundary + weight + spill);
+        let barriers = self.barriers(start, end) as f64;
+        let t_retile = s.sync_us_per_core * mp as f64 * barriers / 1e3;
+        t_compute.max(t_mem) + t_retile + self.overheads_ms(s, mp)
+    }
+
+    /// One MP of the batched evaluation — bit-identical to the corresponding
+    /// element of [`crate::accel::Simulator::block_latency_ms_multi`] (whose
+    /// body now delegates here). The batched path multiplies the spill
+    /// working-set terms in a different association order than the scalar
+    /// path, so the two agree only to ~1e-12, exactly as in the seed code;
+    /// both orders are preserved so each consumer stays bit-stable.
+    pub fn block_latency_ms_batched(&self, s: &AcceleratorSpec, start: usize,
+                                    end: usize, mp: usize) -> f64 {
+        assert!(start < end && end <= self.len(), "empty or out-of-range block");
+        if end - start == 1 {
+            return self.layer_latency_ms(s, start, mp);
+        }
+        let mpf = mp as f64;
+        let mut computed = 0.0;
+        let mut spill = 0.0;
+        for i in start..end {
+            let f = &self.facts[i];
+            let halo = self.halo(i, end) as f64;
+            let rho = if mp == 1 {
+                1.0
+            } else {
+                let band = (f.rows / mpf).ceil();
+                let per_core = (band + 2.0 * halo).min(f.rows);
+                per_core * mpf / f.rows
+            };
+            computed += f.gops * rho;
+            if i + 1 < end {
+                let band_rows = ((f.rows / mpf).ceil() + 2.0 * halo).min(f.rows);
+                let out_row_bytes = f.out_w * f.out_c * BYTES_PER_ELEM;
+                let working = 2.0 * band_rows * out_row_bytes
+                    + self.facts[i + 1].weight_bytes / mpf;
+                if working > s.core_buffer_bytes {
+                    spill += 2.0 * f.out_bytes;
+                }
+            }
+        }
+        let t_issue = s.fused_layer_us * (end - start) as f64 / 1e3;
+        let t_compute = efficiency::core_compute_ms(s, computed / mpf) + t_issue;
+        let boundary = self.facts[start].in_bytes + self.facts[end - 1].out_bytes;
+        let weight_bytes: f64 = self.facts[start..end].iter().map(|f| f.weight_bytes).sum();
+        let t_mem = memory::transfer_ms(s, boundary + weight_bytes + spill);
+        let barriers = self.barriers(start, end) as f64;
+        let t_retile = s.sync_us_per_core * mpf * barriers / 1e3;
+        t_compute.max(t_mem) + t_retile + self.overheads_ms(s, mp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{fusion, Simulator};
+    use crate::graph::layer::{ConvSpec, TensorShape};
+    use crate::zoo;
+
+    fn sim() -> Simulator {
+        Simulator::mlu100()
+    }
+
+    #[test]
+    fn halos_match_backward_walk_on_all_ranges() {
+        for m in [zoo::resnet18(), zoo::alexnet(), zoo::mobilenet_v2()] {
+            let facts = ModelFacts::new(&m);
+            let n = m.num_layers();
+            for start in (0..n).step_by(3) {
+                for end in [start + 1, (start + 5).min(n), n] {
+                    if end <= start {
+                        continue;
+                    }
+                    let walk = fusion::downstream_halos(&m.layers[start..end]);
+                    for i in start..end {
+                        assert_eq!(facts.halo(i, end), walk[i - start],
+                                   "{} [{start}..{end}] layer {i}", m.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barriers_match_filter_count() {
+        let m = zoo::resnet50();
+        let facts = ModelFacts::new(&m);
+        let count = |s: usize, e: usize| {
+            m.layers[s..e]
+                .iter()
+                .filter(|l| match &l.kind {
+                    crate::graph::LayerKind::Conv(c) => c.stride > 1,
+                    crate::graph::LayerKind::Pool { stride, .. } => *stride > 1,
+                    _ => false,
+                })
+                .count()
+        };
+        let n = m.num_layers();
+        for (s, e) in [(0, n), (0, 5), (3, 17), (n - 4, n)] {
+            assert_eq!(facts.barriers(s, e), count(s, e));
+        }
+    }
+
+    #[test]
+    fn scalar_block_latency_bit_identical() {
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::vgg19(), zoo::mini_cnn()] {
+            let facts = ModelFacts::new(&m);
+            let n = m.num_layers();
+            for (start, end) in [(0usize, 1usize), (0, 3), (2, 9), (0, n)] {
+                let end = end.min(n);
+                if start >= end {
+                    continue;
+                }
+                for mp in [1usize, 2, 7, 12, 32] {
+                    let reference = s.block_latency_ms(&m.layers[start..end], mp);
+                    let fast = facts.block_latency_ms(&s.spec, start, end, mp);
+                    assert_eq!(fast, reference,
+                               "{} [{start}..{end}] mp={mp}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_latency_bit_identical() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let facts = ModelFacts::new(&m);
+        for i in 0..m.num_layers() {
+            for mp in [1usize, 3, 8, 32] {
+                assert_eq!(facts.layer_latency_ms(&s.spec, i, mp),
+                           s.layer_latency_ms(&m.layers[i], mp));
+            }
+        }
+    }
+
+    #[test]
+    fn computed_gops_bit_identical() {
+        let m = zoo::resnet18();
+        let facts = ModelFacts::new(&m);
+        for (start, end) in [(0usize, 4usize), (2, 10), (0, m.num_layers())] {
+            for mp in [1usize, 4, 32] {
+                let (reference, _) =
+                    fusion::block_redundant_gops(&m.layers[start..end], mp);
+                assert_eq!(facts.block_computed_gops(start, end, mp), reference);
+            }
+        }
+    }
+
+    #[test]
+    fn retile_flags_and_radii() {
+        let layers = vec![
+            Layer::conv("c0", ConvSpec::same(8, 8, 56, 3)),
+            Layer::conv("s2", ConvSpec {
+                c_in: 8, c_out: 8, h_in: 56, w_in: 56, k: 3, stride: 2,
+                pad: 1, groups: 1,
+            }),
+            Layer::new("p", LayerKind::Pool {
+                shape: TensorShape::new(28, 28, 8), k: 2, stride: 2,
+            }),
+            Layer::new("r", LayerKind::ReLU { shape: TensorShape::new(14, 14, 8) }),
+        ];
+        let facts = ModelFacts::from_layers(&layers);
+        assert!(!facts.layer(0).retile);
+        assert!(facts.layer(1).retile);
+        assert!(facts.layer(2).retile);
+        assert!(!facts.layer(3).retile);
+        assert_eq!(facts.barriers(0, 4), 2);
+        assert_eq!(facts.layer(0).halo_radius, 1);
+        assert_eq!(facts.layer(3).halo_radius, 0);
+    }
+}

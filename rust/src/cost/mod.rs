@@ -1,0 +1,34 @@
+//! The shared cost-evaluation engine (rust/docs/DESIGN.md §7).
+//!
+//! Every consumer of simulated latency — the Table III strategy sweeps, the
+//! brute-force oracle's DP, the annealer's Metropolis loop, the coordinator's
+//! predicted-vs-measured reporting, and the paper-figure benches — used to
+//! re-derive block costs from raw [`crate::graph::Layer`] structs on every
+//! query. This module centralizes that work:
+//!
+//! - [`ModelFacts`]: the MP-independent per-layer quantities the latency
+//!   model consumes (op counts, output geometry, weight/row/boundary bytes,
+//!   halo radii, re-tile flags), derived **once per model** into tables
+//!   indexable by layer range, plus a prefix-sum table for re-tile barrier
+//!   counts. This is the single home of the math that was previously
+//!   hand-inlined twice (in `Simulator::block_latency_ms` via the
+//!   `fusion`/`memory` modules and again inside `block_latency_ms_multi`).
+//! - [`CostEngine`]: a memoized `(start, end, mp) → latency` cache over a
+//!   `(Simulator, Model)` pair with hit/miss statistics, whole-schedule
+//!   evaluation, and incremental (`delta_cost`) evaluation for local-move
+//!   searches.
+//!
+//! **Exactness contract:** every number produced here is bit-identical to
+//! the corresponding `Simulator` method (`layer_latency_ms`,
+//! `block_latency_ms`, `run_schedule`). The float operations are kept in
+//! the exact order of the reference paths — which is also why aggregate
+//! float sums iterate over the fact tables instead of using prefix-sum
+//! differences (float prefix differences are not bit-equal to sequential
+//! sums; integer prefixes like the barrier counts are). The equality is
+//! pinned by property tests in `rust/tests/cost_engine.rs`.
+
+pub mod engine;
+pub mod facts;
+
+pub use engine::{BlockCost, CostEngine, CostStats};
+pub use facts::{LayerFacts, ModelFacts};

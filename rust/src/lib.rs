@@ -18,8 +18,9 @@
 //! | [`graph`] | layer-level IR, `.dlm` model format, op-count math (Eq. 1/2) |
 //! | [`zoo`] | built-in models: ResNet-18/50, VGG-19, AlexNet, MobileNetV2, synthetics |
 //! | [`microbench`] | synthesized layer sweeps (the paper's Section II methodology) |
-//! | [`accel`] | the MLU100 performance-simulator substrate (see DESIGN.md §6) |
+//! | [`accel`] | the MLU100 performance-simulator substrate (see rust/docs/DESIGN.md §6) |
 //! | [`perfmodel`] | roofline, `OpCount_critical`, the `MP(C, Op)` scorer (Eq. 5) |
+//! | [`cost`] | memoized cost-evaluation engine shared by every consumer (rust/docs/DESIGN.md §7) |
 //! | [`optimizer`] | Algorithm 1 and the seven evaluation strategies (Table III) |
 //! | [`search`] | the reduced brute-force oracle (strategy 7) |
 //! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
@@ -53,6 +54,7 @@ pub mod zoo;
 pub mod microbench;
 pub mod accel;
 pub mod perfmodel;
+pub mod cost;
 pub mod optimizer;
 pub mod search;
 pub mod codegen;
@@ -65,6 +67,7 @@ pub mod cli;
 /// Most-used types, for `use dlfusion::prelude::*`.
 pub mod prelude {
     pub use crate::accel::{AcceleratorSpec, Simulator, PerfReport};
+    pub use crate::cost::{CostEngine, CostStats};
     pub use crate::graph::{Layer, LayerKind, Model};
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;

@@ -16,4 +16,4 @@ pub mod space;
 
 pub use algorithm::{dlfusion_schedule, AlgorithmParams};
 pub use schedule::{Block, Schedule};
-pub use strategies::{run_strategy, Strategy};
+pub use strategies::{run_strategy, run_strategy_with, Strategy};

@@ -13,8 +13,9 @@
 use super::algorithm::{dlfusion_schedule_with, AlgorithmParams};
 use super::schedule::{Block, Schedule};
 use crate::accel::Simulator;
+use crate::cost::CostEngine;
 use crate::graph::Model;
-use crate::search::brute::oracle_schedule;
+use crate::search::brute::oracle_schedule_with;
 
 /// Table III strategy index.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -70,17 +71,29 @@ impl std::fmt::Display for Strategy {
 }
 
 /// Build the schedule a strategy produces for `model` (simulator needed for
-/// the sweep-based strategies 2/5 and the oracle).
+/// the sweep-based strategies 2/5 and the oracle). Constructs a throwaway
+/// [`CostEngine`]; callers evaluating several strategies on one model should
+/// use [`strategy_schedule_with`] over a shared engine instead.
 pub fn strategy_schedule(sim: &Simulator, model: &Model, strategy: Strategy,
                          params: &AlgorithmParams) -> Schedule {
+    let mut engine = CostEngine::new(sim, model);
+    strategy_schedule_with(&mut engine, strategy, params)
+}
+
+/// Build a strategy's schedule, evaluating every candidate through the
+/// given engine (the sweeps of strategies 2/5 and the oracle DP share its
+/// memoized `(block, mp)` cache).
+pub fn strategy_schedule_with(engine: &mut CostEngine, strategy: Strategy,
+                              params: &AlgorithmParams) -> Schedule {
+    let model = engine.model();
+    let spec = &engine.sim().spec;
     let n = model.num_layers();
-    let spec = &sim.spec;
     match strategy {
         Strategy::NonOptimization => Schedule::layerwise(n, 1),
         Strategy::FixedMp => {
             // Sweep a single shared MP across the layer-wise schedule and
             // keep the best — the Fig. 5(a) procedure.
-            best_over(spec.reduced_mp_set(), |mp| Schedule::layerwise(n, mp), sim, model)
+            best_over(engine, spec.reduced_mp_set(), |mp| Schedule::layerwise(n, mp))
         }
         Strategy::DynamicMp => Schedule::new(
             model
@@ -101,33 +114,31 @@ pub fn strategy_schedule(sim: &Simulator, model: &Model, strategy: Strategy,
         Strategy::AllFusionMaxMp => Schedule::single_block(n, spec.num_cores),
         Strategy::FusionFixedMp => {
             let base = dlfusion_schedule_with(model, spec, params);
-            best_over(
-                spec.reduced_mp_set(),
-                |mp| {
-                    Schedule::new(
-                        base.blocks
-                            .iter()
-                            .map(|b| Block { mp, ..*b })
-                            .collect(),
-                    )
-                },
-                sim,
-                model,
-            )
+            best_over(engine, spec.reduced_mp_set(), |mp| {
+                Schedule::new(
+                    base.blocks
+                        .iter()
+                        .map(|b| Block { mp, ..*b })
+                        .collect(),
+                )
+            })
         }
         Strategy::DlFusion => dlfusion_schedule_with(model, spec, params),
-        Strategy::BruteForce => oracle_schedule(sim, model).0,
+        Strategy::BruteForce => oracle_schedule_with(engine).0,
     }
 }
 
-fn best_over(mps: Vec<usize>, make: impl Fn(usize) -> Schedule,
-             sim: &Simulator, model: &Model) -> Schedule {
+/// Keep the sweep's seed shape — a lazy `min_by` over the candidates — but
+/// serve every evaluation from the engine's cache: the comparator's repeated
+/// looks at the running minimum cost nothing after the first.
+fn best_over(engine: &mut CostEngine, mps: Vec<usize>,
+             make: impl Fn(usize) -> Schedule) -> Schedule {
     mps.into_iter()
         .map(make)
         .min_by(|a, b| {
-            sim.run_schedule(model, a)
-                .total_ms
-                .total_cmp(&sim.run_schedule(model, b).total_ms)
+            let cost_a = engine.schedule_cost(a);
+            let cost_b = engine.schedule_cost(b);
+            cost_a.total_cmp(&cost_b)
         })
         .expect("non-empty MP set")
 }
@@ -135,9 +146,16 @@ fn best_over(mps: Vec<usize>, make: impl Fn(usize) -> Schedule,
 /// Convenience: schedule + simulated report for one strategy.
 pub fn run_strategy(sim: &Simulator, model: &Model, strategy: Strategy)
                     -> (Schedule, crate::accel::PerfReport) {
-    let params = AlgorithmParams::for_spec(&sim.spec);
-    let sched = strategy_schedule(sim, model, strategy, &params);
-    let report = sim.run_schedule(model, &sched);
+    let mut engine = CostEngine::new(sim, model);
+    run_strategy_with(&mut engine, strategy)
+}
+
+/// Schedule + report for one strategy over a shared engine.
+pub fn run_strategy_with(engine: &mut CostEngine, strategy: Strategy)
+                         -> (Schedule, crate::accel::PerfReport) {
+    let params = AlgorithmParams::for_spec(&engine.sim().spec);
+    let sched = strategy_schedule_with(engine, strategy, &params);
+    let report = engine.run_schedule(&sched);
     (sched, report)
 }
 
@@ -247,6 +265,74 @@ mod tests {
             let speedup = dlf.fps() / base.fps();
             assert!(speedup > 1.5 && speedup < 10.0,
                     "{}: speedup {speedup:.2} outside band", m.name);
+        }
+    }
+
+    #[test]
+    fn engine_routed_sweeps_match_seed_sweeps() {
+        // The seed `best_over` re-ran `Simulator::run_schedule` inside the
+        // `min_by` comparator; replay that reference verbatim and pin the
+        // engine-routed strategies 2 and 5 against it.
+        let s = sim();
+        for m in [zoo::resnet50(), zoo::alexnet()] {
+            let params = AlgorithmParams::for_spec(&s.spec);
+            let n = m.num_layers();
+            let seed_best = |cands: Vec<Schedule>| {
+                cands
+                    .into_iter()
+                    .min_by(|a, b| {
+                        s.run_schedule(&m, a)
+                            .total_ms
+                            .total_cmp(&s.run_schedule(&m, b).total_ms)
+                    })
+                    .unwrap()
+            };
+            let ref2 = seed_best(
+                s.spec.reduced_mp_set().into_iter()
+                    .map(|mp| Schedule::layerwise(n, mp))
+                    .collect(),
+            );
+            assert_eq!(strategy_schedule(&s, &m, Strategy::FixedMp, &params),
+                       ref2, "{} strategy 2", m.name);
+            let base = dlfusion_schedule_with(&m, &s.spec, &params);
+            let ref5 = seed_best(
+                s.spec.reduced_mp_set().into_iter()
+                    .map(|mp| Schedule::new(
+                        base.blocks.iter().map(|b| Block { mp, ..*b }).collect(),
+                    ))
+                    .collect(),
+            );
+            assert_eq!(strategy_schedule(&s, &m, Strategy::FusionFixedMp, &params),
+                       ref5, "{} strategy 5", m.name);
+        }
+    }
+
+    #[test]
+    fn engine_reports_match_simulator_reports() {
+        let s = sim();
+        let m = zoo::resnet18();
+        for st in Strategy::ALL {
+            let (sched, rep) = run_strategy(&s, &m, st);
+            assert_eq!(rep, s.run_schedule(&m, &sched), "{st}");
+        }
+    }
+
+    #[test]
+    fn sweeps_save_ten_x_layer_fact_derivations() {
+        // The acceptance claim for the MP sweeps: the seed derived every
+        // layer's facts on every schedule evaluation (15 full-model walks
+        // across the sweep); the engine derives them once per model.
+        let s = sim();
+        let m = zoo::resnet50();
+        let params = AlgorithmParams::for_spec(&s.spec);
+        for st in [Strategy::FixedMp, Strategy::FusionFixedMp] {
+            let mut engine = CostEngine::new(&s, &m);
+            let sched = strategy_schedule_with(&mut engine, st, &params);
+            let _ = engine.run_schedule(&sched);
+            let stats = engine.stats();
+            assert!(stats.seed_layer_evals >= 10 * stats.layer_facts_built,
+                    "{st}: layer-eval reduction only {:.1}x ({stats:?})",
+                    stats.layer_eval_reduction());
         }
     }
 

@@ -7,11 +7,18 @@
 //! Acceptance: Metropolis on simulated latency with geometric cooling.
 //! Deterministic under a fixed seed.
 //!
+//! Candidate costs go through [`crate::cost::CostEngine::delta_cost`]: a
+//! move touches at most two blocks, so each Metropolis step computes
+//! O(changed) raw block latencies instead of re-simulating the whole
+//! schedule (rust/docs/DESIGN.md §7.3). The accept/reject trajectory is
+//! bit-identical to full re-simulation (pinned by a unit test below).
+//!
 //! Used by `benches/ablation.rs` to show where DLFusion's O(n) heuristic
 //! sits between the oracle DP and a generic stochastic search given equal
 //! and much larger move budgets.
 
 use crate::accel::Simulator;
+use crate::cost::CostEngine;
 use crate::graph::Model;
 use crate::optimizer::schedule::{Block, Schedule};
 use crate::util::XorShiftRng;
@@ -37,20 +44,27 @@ impl Default for AnnealConfig {
 /// schedule). Returns the best schedule found and its latency.
 pub fn anneal(sim: &Simulator, model: &Model, cfg: &AnnealConfig,
               init: Option<Schedule>) -> (Schedule, f64) {
-    let n = model.num_layers();
-    let max_mp = sim.spec.num_cores;
+    let mut engine = CostEngine::new(sim, model);
+    anneal_with(&mut engine, cfg, init)
+}
+
+/// Anneal through a caller-provided engine (a warm cache carries over both
+/// across restarts and from other consumers of the same model).
+pub fn anneal_with(engine: &mut CostEngine, cfg: &AnnealConfig,
+                   init: Option<Schedule>) -> (Schedule, f64) {
+    let n = engine.model().num_layers();
+    let max_mp = engine.sim().spec.num_cores;
     let mut rng = XorShiftRng::new(cfg.seed);
     let mut cur = init.unwrap_or_else(|| Schedule::layerwise(n, 1));
     debug_assert!(cur.validate(n, max_mp).is_ok());
-    let cost = |s: &Schedule| sim.run_schedule(model, s).total_ms;
-    let mut cur_cost = cost(&cur);
+    let mut cur_cost = engine.schedule_cost(&cur);
     let mut best = cur.clone();
     let mut best_cost = cur_cost;
     let mut temp = cur_cost * cfg.t0_fraction;
 
     for _ in 0..cfg.iterations {
-        let cand = propose(&cur, &mut rng, max_mp);
-        let cand_cost = cost(&cand);
+        let (cand, changed) = propose(&cur, &mut rng, max_mp);
+        let cand_cost = engine.delta_cost(&cand, &changed);
         let accept = cand_cost < cur_cost
             || rng.next_f64() < (-(cand_cost - cur_cost) / temp.max(1e-12)).exp();
         if accept {
@@ -66,9 +80,14 @@ pub fn anneal(sim: &Simulator, model: &Model, cfg: &AnnealConfig,
     (best, best_cost)
 }
 
-/// One random neighbourhood move; always yields a valid schedule.
-fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize) -> Schedule {
+/// One random neighbourhood move; always yields a valid schedule. Returns
+/// the candidate plus the indices (into the *candidate's* block list) of the
+/// blocks the move created — every other block is carried over verbatim, so
+/// an engine that has costed the parent schedule re-computes only these.
+fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize)
+           -> (Schedule, Vec<usize>) {
     let mut blocks = s.blocks.clone();
+    let mut changed = Vec::with_capacity(2);
     match rng.gen_usize(0, 2) {
         // Split a random block at a random interior point (keeps both MPs).
         0 => {
@@ -78,6 +97,7 @@ fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize) -> Schedule {
                 let cut = b.start + rng.gen_usize(1, b.len() - 1);
                 blocks[bi] = Block { start: b.start, end: cut, mp: b.mp };
                 blocks.insert(bi + 1, Block { start: cut, end: b.end, mp: b.mp });
+                changed.extend([bi, bi + 1]);
             }
         }
         // Merge a random adjacent pair (MP of the larger half).
@@ -88,6 +108,7 @@ fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize) -> Schedule {
                 let mp = if a.len() >= b.len() { a.mp } else { b.mp };
                 blocks[bi] = Block { start: a.start, end: b.end, mp };
                 blocks.remove(bi + 1);
+                changed.push(bi);
             }
         }
         // Nudge one block's MP by a power-of-two step.
@@ -99,9 +120,10 @@ fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize) -> Schedule {
             } else {
                 b.mp = (b.mp / 2).max(1);
             }
+            changed.push(bi);
         }
     }
-    Schedule::new(blocks)
+    (Schedule::new(blocks), changed)
 }
 
 #[cfg(test)]
@@ -122,8 +144,10 @@ mod tests {
         let mut rng = XorShiftRng::new(1);
         let mut cur = Schedule::layerwise(m.num_layers(), 1);
         for _ in 0..500 {
-            cur = propose(&cur, &mut rng, s.spec.num_cores);
-            cur.validate(m.num_layers(), s.spec.num_cores).unwrap();
+            let (next, changed) = propose(&cur, &mut rng, s.spec.num_cores);
+            next.validate(m.num_layers(), s.spec.num_cores).unwrap();
+            assert!(changed.iter().all(|&bi| bi < next.blocks.len()));
+            cur = next;
         }
     }
 
@@ -149,6 +173,60 @@ mod tests {
         let (b, cb) = anneal(&s, &m, &cfg, None);
         assert_eq!(a, b);
         assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn engine_routed_anneal_matches_full_resimulation() {
+        // The seed annealer re-ran `Simulator::run_schedule` on every
+        // candidate. Replay that reference loop verbatim and pin the
+        // engine-routed trajectory against it, bit for bit.
+        let s = sim();
+        for m in [zoo::alexnet(), zoo::resnet18()] {
+            let cfg = AnnealConfig { iterations: 300, ..Default::default() };
+            let max_mp = s.spec.num_cores;
+            let mut rng = XorShiftRng::new(cfg.seed);
+            let mut cur = Schedule::layerwise(m.num_layers(), 1);
+            let cost = |sched: &Schedule| s.run_schedule(&m, sched).total_ms;
+            let mut cur_cost = cost(&cur);
+            let mut best = cur.clone();
+            let mut best_cost = cur_cost;
+            let mut temp = cur_cost * cfg.t0_fraction;
+            for _ in 0..cfg.iterations {
+                let (cand, _) = propose(&cur, &mut rng, max_mp);
+                let cand_cost = cost(&cand);
+                let accept = cand_cost < cur_cost
+                    || rng.next_f64()
+                        < (-(cand_cost - cur_cost) / temp.max(1e-12)).exp();
+                if accept {
+                    cur = cand;
+                    cur_cost = cand_cost;
+                    if cur_cost < best_cost {
+                        best = cur.clone();
+                        best_cost = cur_cost;
+                    }
+                }
+                temp *= cfg.cooling;
+            }
+            let (sched, got_cost) = anneal(&s, &m, &cfg, None);
+            assert_eq!(sched, best, "{}", m.name);
+            assert_eq!(got_cost, best_cost, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn anneal_saves_ten_x_block_evaluations() {
+        // The acceptance claim: at the default move budget the memoized
+        // engine computes >= 10x fewer raw block latencies than the seed's
+        // per-move full re-simulation (queries == what the seed computed).
+        let s = sim();
+        let m = zoo::resnet50();
+        let mut engine = CostEngine::new(&s, &m);
+        let cfg = AnnealConfig::default();
+        let _ = anneal_with(&mut engine, &cfg, None);
+        let st = engine.stats();
+        assert!(st.queries() >= 10 * st.misses,
+                "block-eval reduction only {:.1}x ({st:?})",
+                st.block_eval_reduction());
     }
 
     #[test]

@@ -10,36 +10,64 @@
 //! positions: `dp[j] = min over i of dp[i] + best_mp_cost(i..j)`. The DP
 //! visits every (block, MP) candidate exactly once — identical result to
 //! explicit enumeration (certified against [`super::exhaustive`] in tests)
-//! without the exponential blowup.
+//! without the exponential blowup. Block costs are served by
+//! [`crate::cost::CostEngine`] (rust/docs/DESIGN.md §7), which derives the
+//! per-layer facts once per model instead of once per overlapping candidate
+//! range, and memoizes every `(block, mp)` outcome.
+
+use std::time::Instant;
 
 use crate::accel::Simulator;
+use crate::cost::CostEngine;
 use crate::graph::Model;
 use crate::optimizer::schedule::{Block, Schedule};
 
 /// Bookkeeping from a search run (for the search-time comparison the paper
 /// makes: oracle O(n²) block evaluations vs DLFusion O(n)).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SearchStats {
-    /// Number of (block, mp) latency evaluations performed.
+    /// Number of (block, mp) latency evaluations requested.
     pub evaluations: usize,
     /// Number of candidate blocks considered.
     pub blocks_considered: usize,
+    /// Evaluations served from the cost engine's cache.
+    pub cache_hits: usize,
+    /// Evaluations the cost engine actually computed.
+    pub cache_misses: usize,
+    /// Wall-clock search time, microseconds.
+    pub wall_us: u64,
 }
 
 /// The paper's reduced oracle. Returns the optimal schedule in the reduced
 /// space plus search statistics.
 pub fn oracle_schedule(sim: &Simulator, model: &Model) -> (Schedule, SearchStats) {
-    let sizes = SizeRule::MultipleOfFour;
-    dp_search(sim, model, &sim.spec.reduced_mp_set(), sizes)
+    let mut engine = CostEngine::new(sim, model);
+    oracle_schedule_with(&mut engine)
+}
+
+/// The reduced oracle through a caller-provided engine (re-running a search
+/// over a warm cache computes nothing new).
+pub fn oracle_schedule_with(engine: &mut CostEngine) -> (Schedule, SearchStats) {
+    let mps = engine.sim().spec.reduced_mp_set();
+    dp_search(engine, &mps, SizeRule::MultipleOfFour)
 }
 
 /// Extension: the same DP over *all* block sizes and every power-of-two MP —
 /// a strictly larger space than the paper's reduced oracle (used by the
 /// ablation bench to quantify what the reduction costs).
 pub fn oracle_schedule_full(sim: &Simulator, model: &Model) -> (Schedule, SearchStats) {
-    let mps: Vec<usize> = (0..=5).map(|p| 1usize << p)
-        .filter(|&m| m <= sim.spec.num_cores).collect();
-    dp_search(sim, model, &mps, SizeRule::Any)
+    let mut engine = CostEngine::new(sim, model);
+    oracle_schedule_full_with(&mut engine)
+}
+
+/// Full-space DP through a caller-provided engine.
+pub fn oracle_schedule_full_with(engine: &mut CostEngine) -> (Schedule, SearchStats) {
+    let num_cores = engine.sim().spec.num_cores;
+    let mps: Vec<usize> = (0..=5)
+        .map(|p| 1usize << p)
+        .filter(|&m| m <= num_cores)
+        .collect();
+    dp_search(engine, &mps, SizeRule::Any)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,12 +87,14 @@ impl SizeRule {
     }
 }
 
-fn dp_search(sim: &Simulator, model: &Model, mp_set: &[usize], sizes: SizeRule)
+fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: SizeRule)
              -> (Schedule, SearchStats) {
-    let n = model.num_layers();
+    let n = engine.model().num_layers();
     assert!(n >= 1);
     assert!(!mp_set.is_empty());
-    let mut stats = SearchStats { evaluations: 0, blocks_considered: 0 };
+    let t0 = Instant::now();
+    let engine_stats0 = engine.stats();
+    let mut stats = SearchStats::default();
 
     // best_block[i][j-1]: (cost, mp) of the best single block over [i, j).
     // dp[j]: best cost covering [0, j); parent[j] = (i, mp) of last block.
@@ -82,11 +112,10 @@ fn dp_search(sim: &Simulator, model: &Model, mp_set: &[usize], sizes: SizeRule)
                 continue;
             }
             stats.blocks_considered += 1;
-            let layers = &model.layers[i..j];
-            // §Perf: one shared-precomputation call for the whole MP set
-            // (identical numbers to per-MP block_latency_ms; see
-            // EXPERIMENTS.md §Perf for the before/after).
-            let costs = sim.block_latency_ms_multi(layers, mp_set);
+            // One shared-precomputation call for the whole MP set —
+            // identical numbers to per-MP block_latency_ms_multi (the facts
+            // live in the engine, derived once per model).
+            let costs = engine.block_latency_batched(i, j, mp_set);
             stats.evaluations += mp_set.len();
             let (best_idx, best) = costs
                 .iter()
@@ -113,7 +142,11 @@ fn dp_search(sim: &Simulator, model: &Model, mp_set: &[usize], sizes: SizeRule)
     }
     blocks.reverse();
     let schedule = Schedule::new(blocks);
-    debug_assert!(schedule.validate(n, sim.spec.num_cores).is_ok());
+    debug_assert!(schedule.validate(n, engine.sim().spec.num_cores).is_ok());
+    let engine_stats = engine.stats();
+    stats.cache_hits = (engine_stats.hits - engine_stats0.hits) as usize;
+    stats.cache_misses = (engine_stats.misses - engine_stats0.misses) as usize;
+    stats.wall_us = t0.elapsed().as_micros() as u64;
     (schedule, stats)
 }
 
@@ -160,6 +193,51 @@ mod tests {
     }
 
     #[test]
+    fn engine_routed_dp_matches_seed_dp() {
+        // The seed DP called `Simulator::block_latency_ms_multi` per
+        // candidate range; replay that reference verbatim and pin the
+        // engine-routed result against it, bit for bit.
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::alexnet()] {
+            let mp_set = s.spec.reduced_mp_set();
+            let n = m.num_layers();
+            let mut dp = vec![f64::INFINITY; n + 1];
+            let mut parent: Vec<Option<(usize, usize)>> = vec![None; n + 1];
+            dp[0] = 0.0;
+            for j in 1..=n {
+                for i in 0..j {
+                    let len = j - i;
+                    if !(len % 4 == 0 || j == n) || dp[i].is_infinite() {
+                        continue;
+                    }
+                    let costs = s.block_latency_ms_multi(&m.layers[i..j], &mp_set);
+                    let (k, best) = costs
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(k, &c)| (k, c))
+                        .unwrap();
+                    if dp[i] + best < dp[j] {
+                        dp[j] = dp[i] + best;
+                        parent[j] = Some((i, mp_set[k]));
+                    }
+                }
+            }
+            let mut blocks = Vec::new();
+            let mut j = n;
+            while j > 0 {
+                let (i, mp) = parent[j].unwrap();
+                blocks.push(Block { start: i, end: j, mp });
+                j = i;
+            }
+            blocks.reverse();
+            let reference = Schedule::new(blocks);
+            let (sched, _) = oracle_schedule(&s, &m);
+            assert_eq!(sched, reference, "{}", m.name);
+        }
+    }
+
+    #[test]
     fn full_dp_at_least_as_good_as_reduced() {
         let s = sim();
         let m = zoo::alexnet();
@@ -179,6 +257,21 @@ mod tests {
         let (_, st2) = oracle_schedule(&s, &m2);
         assert!(st2.blocks_considered > st1.blocks_considered * 2);
         assert_eq!(st1.evaluations, st1.blocks_considered * 8);
+    }
+
+    #[test]
+    fn search_stats_carry_cache_and_wall_clock() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut engine = CostEngine::new(&s, &m);
+        let (_, st) = oracle_schedule_with(&mut engine);
+        // A fresh engine: every (block, mp) pair is computed exactly once.
+        assert_eq!(st.cache_hits + st.cache_misses, st.evaluations);
+        assert_eq!(st.cache_hits, 0);
+        // Re-running the same search over the warm engine computes nothing.
+        let (_, st2) = oracle_schedule_with(&mut engine);
+        assert_eq!(st2.cache_misses, 0);
+        assert_eq!(st2.cache_hits, st2.evaluations);
     }
 
     #[test]

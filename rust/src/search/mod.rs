@@ -8,10 +8,19 @@
 //!   enumeration would reach, at "acceptable search time".
 //! - [`exhaustive`]: true enumeration for tiny models, used by the tests to
 //!   certify the DP is exact.
+//! - [`annealing`]: simulated annealing over the unreduced space, a
+//!   beyond-paper stochastic comparator.
+//!
+//! All searches evaluate candidates through the shared
+//! [`crate::cost::CostEngine`] (rust/docs/DESIGN.md §7); [`SearchStats`]
+//! reports the evaluation counts, cache behaviour, and wall-clock time that
+//! back the paper's Section V search-time comparison.
 
 pub mod brute;
 pub mod exhaustive;
 pub mod annealing;
 
-pub use brute::{oracle_schedule, oracle_schedule_full, SearchStats};
+pub use annealing::{anneal, AnnealConfig};
+pub use brute::{oracle_schedule, oracle_schedule_full, oracle_schedule_with,
+                SearchStats};
 pub use exhaustive::exhaustive_schedule;

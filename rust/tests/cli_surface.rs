@@ -47,6 +47,13 @@ fn simulate_prints_table() {
 }
 
 #[test]
+fn search_command_reports_stats() {
+    assert_eq!(run("search alexnet --iterations 100"), 0);
+    assert_eq!(run("search nope_net"), 1);
+    assert_eq!(run("search alexnet --iterations abc"), 1);
+}
+
+#[test]
 fn space_command() {
     assert_eq!(run("space 50"), 0);
     assert_eq!(run("space 1"), 1);

@@ -1,0 +1,177 @@
+//! Integration: the cost-evaluation engine's exactness contract
+//! (rust/docs/DESIGN.md §7) and the regression pin for the simulator's
+//! batched fast path.
+//!
+//! The property tests here are the crate's guarantee that routing every
+//! consumer through `CostEngine` changed *nothing* numerically: the scalar
+//! engine path is bit-identical to `Simulator::{layer,block}_latency_ms` /
+//! `run_schedule`, the batched path is bit-identical to
+//! `Simulator::block_latency_ms_multi`, and the batched path agrees with the
+//! scalar reference to 1e-12 per MP (the seed relationship, kept as the pin
+//! now that both are fact-table walks).
+
+use dlfusion::accel::Simulator;
+use dlfusion::cost::CostEngine;
+use dlfusion::graph::Model;
+use dlfusion::optimizer::{Block, Schedule};
+use dlfusion::testutil::prop::{forall, Gen};
+use dlfusion::util::XorShiftRng;
+use dlfusion::zoo;
+
+fn models() -> Vec<Model> {
+    vec![zoo::resnet18(), zoo::resnet50(), zoo::vgg19(), zoo::alexnet(),
+         zoo::mobilenet_v2(), zoo::mini_cnn()]
+}
+
+/// Random (model, block range, MP set) — the satellite's randomized
+/// blocks/MP-set generator.
+fn block_case(models: &[Model])
+              -> Gen<'_, (usize, usize, usize, Vec<usize>)> {
+    Gen::new(move |rng: &mut XorShiftRng| {
+        let mi = rng.gen_usize(0, models.len() - 1);
+        let n = models[mi].num_layers();
+        let start = rng.gen_usize(0, n - 1);
+        let end = rng.gen_usize(start + 1, n);
+        let count = rng.gen_usize(1, 6);
+        let mps: Vec<usize> = (0..count).map(|_| rng.gen_usize(1, 32)).collect();
+        (mi, start, end, mps)
+    })
+}
+
+#[test]
+fn prop_multi_matches_per_mp_scalar() {
+    // The seed pin: `block_latency_ms_multi` ≡ per-MP `block_latency_ms`
+    // over randomized blocks and MP sets. `block_latency_ms_multi` is now a
+    // `ModelFacts` walk, so this transitively pins the engine's fast path
+    // against the untouched scalar reference.
+    let sim = Simulator::mlu100();
+    let models = models();
+    let g = block_case(&models);
+    forall(200, &g, |(mi, start, end, mps)| {
+        let m = &models[*mi];
+        let layers = &m.layers[*start..*end];
+        let multi = sim.block_latency_ms_multi(layers, mps);
+        for (&mp, &fast) in mps.iter().zip(&multi) {
+            let slow = sim.block_latency_ms(layers, mp);
+            if (fast - slow).abs() > 1e-12 {
+                return Err(format!(
+                    "{} [{start}..{end}] mp={mp}: batched {fast} vs scalar {slow}",
+                    m.name
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_paths_bit_identical_to_simulator() {
+    let sim = Simulator::mlu100();
+    let models = models();
+    let g = block_case(&models);
+    forall(120, &g, |(mi, start, end, mps)| {
+        let m = &models[*mi];
+        let layers = &m.layers[*start..*end];
+        let mut engine = CostEngine::new(&sim, m);
+        for &mp in mps {
+            let got = engine.block_latency(*start, *end, mp);
+            let want = sim.block_latency_ms(layers, mp);
+            if got != want {
+                return Err(format!(
+                    "scalar {} [{start}..{end}] mp={mp}: {got} != {want}", m.name
+                ));
+            }
+            // Cached re-query returns the same bits.
+            if engine.block_latency(*start, *end, mp) != got {
+                return Err("cache returned different bits".into());
+            }
+        }
+        let got = engine.block_latency_batched(*start, *end, mps);
+        let want = sim.block_latency_ms_multi(layers, mps);
+        if got != want {
+            return Err(format!(
+                "batched {} [{start}..{end}]: {got:?} != {want:?}", m.name
+            ));
+        }
+        Ok(())
+    });
+}
+
+fn random_schedule(rng: &mut XorShiftRng, n: usize, max_mp: usize) -> Schedule {
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let len = rng.gen_usize(1, (n - start).min(6));
+        let mp = (1usize << rng.gen_usize(0, 5)).min(max_mp);
+        blocks.push(Block { start, end: start + len, mp });
+        start += len;
+    }
+    Schedule::new(blocks)
+}
+
+#[test]
+fn prop_engine_run_schedule_bit_identical() {
+    let sim = Simulator::mlu100();
+    let models = models();
+    let g = Gen::new(|rng: &mut XorShiftRng| {
+        let mi = rng.gen_usize(0, models.len() - 1);
+        let seed = rng.next_u64();
+        (mi, seed)
+    });
+    forall(60, &g, |&(mi, seed)| {
+        let m = &models[mi];
+        let mut rng = XorShiftRng::new(seed);
+        let sched = random_schedule(&mut rng, m.num_layers(), sim.spec.num_cores);
+        let mut engine = CostEngine::new(&sim, m);
+        let got = engine.run_schedule(&sched);
+        let want = sim.run_schedule(m, &sched);
+        if got != want {
+            return Err(format!("{}: engine report diverged for {}",
+                               m.name, sched.summary()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delta_cost_matches_fresh_evaluation() {
+    let sim = Simulator::mlu100();
+    let m = zoo::resnet18();
+    let g = Gen::new(|rng: &mut XorShiftRng| rng.next_u64());
+    forall(40, &g, |&seed| {
+        let mut rng = XorShiftRng::new(seed);
+        let sched = random_schedule(&mut rng, m.num_layers(), sim.spec.num_cores);
+        let mut engine = CostEngine::new(&sim, &m);
+        let base = engine.schedule_cost(&sched);
+        if base != sim.run_schedule(&m, &sched).total_ms {
+            return Err("schedule_cost != run_schedule.total_ms".into());
+        }
+        // Local move: change one block's MP, evaluate incrementally.
+        let bi = rng.gen_usize(0, sched.blocks.len() - 1);
+        let mut moved = sched.clone();
+        moved.blocks[bi] = Block {
+            mp: if moved.blocks[bi].mp == 1 { 2 } else { 1 },
+            ..moved.blocks[bi]
+        };
+        let incremental = engine.delta_cost(&moved, &[bi]);
+        let fresh = sim.run_schedule(&m, &moved).total_ms;
+        if incremental != fresh {
+            return Err(format!("delta {incremental} != fresh {fresh}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_and_oracle_agree_with_seed_strategy_seven() {
+    // End-to-end: strategy 7 through the public API must equal the report
+    // the untouched simulator produces for the oracle's schedule.
+    let sim = Simulator::mlu100();
+    let m = zoo::resnet18();
+    let (sched, rep) = dlfusion::optimizer::run_strategy(
+        &sim, &m, dlfusion::optimizer::Strategy::BruteForce);
+    assert_eq!(rep, sim.run_schedule(&m, &sched));
+    let (oracle, stats) = dlfusion::search::oracle_schedule(&sim, &m);
+    assert_eq!(sched, oracle);
+    assert_eq!(stats.cache_hits + stats.cache_misses, stats.evaluations);
+}
