@@ -21,8 +21,9 @@
 
 use dlfusion::accel::Simulator;
 use dlfusion::coordinator::{driver, equivalence, plan, Engine};
-use dlfusion::optimizer::{self, Strategy};
+use dlfusion::optimizer::Strategy;
 use dlfusion::runtime::Runtime;
+use dlfusion::tuner::{Algorithm1, TableStrategy, Tuner, TuningRequest};
 use dlfusion::util::Table;
 use dlfusion::zoo;
 
@@ -30,9 +31,12 @@ fn main() {
     let model = zoo::mini_cnn();
     let sim = Simulator::mlu100();
 
-    // ---- (2) optimize ----
-    let schedule = optimizer::dlfusion_schedule(&model, &sim.spec);
-    println!("== DLFusion schedule for {} ==", model.name);
+    // ---- (2) optimize: Algorithm 1 through the unified tuner API ----
+    let request = TuningRequest::new(&sim, &model);
+    let outcome = request.run(&mut Algorithm1).expect("tuning");
+    let schedule = outcome.schedule.clone();
+    println!("== DLFusion schedule for {} (tuner {}) ==",
+             model.name, outcome.tuner);
     println!("   {}\n", schedule.summary());
 
     // ---- (3) codegen ----
@@ -77,25 +81,29 @@ fn main() {
     }
     let mut engine = Engine::new(rt, &model, ex_plan, 7).expect("engine");
     let cfg = driver::DriverConfig { requests: 64, warmup: 8, seed: 11, verify_each: true };
-    let rep = driver::serve(&mut engine, &cfg).expect("serve");
+    let tuned = driver::serve_tuned(&mut engine, &cfg, &outcome).expect("serve");
+    let rep = &tuned.report;
     println!("\n== request loop (PJRT CPU wall-clock) ==");
     println!("   {}", rep.latency.report());
     println!("   throughput: {:.1} inferences/s", rep.fps());
+    println!("   simulator-predicted MLU100 latency: {:.4} ms/inference",
+             tuned.predicted_ms);
     println!("   per-request equivalence: {} ok / {} failures",
              rep.counters.get("equivalence_ok"),
              rep.counters.get("equivalence_failures"));
     assert_eq!(rep.counters.get("equivalence_failures"), 0);
 
-    // ---- (6) simulated strategy comparison ----
+    // ---- (6) simulated strategy comparison, one shared tuning context ----
+    let mut cx = request.context();
     let mut t = Table::new(&["#", "strategy", "FPS (sim)", "speedup"])
         .label_first()
         .with_title("\nFig. 10-style row — mini_cnn on the MLU100 simulator");
     let mut base = None;
     for st in Strategy::ALL {
-        let (_, r) = optimizer::run_strategy(&sim, &model, st);
-        let b = *base.get_or_insert(r.fps());
+        let out = TableStrategy(st).tune(&mut cx).expect("tuning");
+        let b = *base.get_or_insert(out.fps());
         t.row(vec![st.index().to_string(), st.name().into(),
-                   format!("{:.0}", r.fps()), format!("{:.2}x", r.fps() / b)]);
+                   format!("{:.0}", out.fps()), format!("{:.2}x", out.fps() / b)]);
     }
     println!("{t}");
     println!("\ne2e OK");

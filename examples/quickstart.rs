@@ -1,7 +1,8 @@
 //! Quickstart: the 10-line DLFusion API tour.
 //!
-//! Loads a zoo model, runs Algorithm 1, and simulates the optimized
-//! schedule against the no-optimization baseline.
+//! Builds one declarative `TuningRequest`, runs Algorithm 1 through the
+//! unified tuner API, and compares against the no-optimization baseline
+//! (Table III strategy 1) through the same surface.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -10,22 +11,20 @@
 use dlfusion::prelude::*;
 
 fn main() {
-    let spec = AcceleratorSpec::mlu100();
-    let sim = Simulator::new(spec.clone());
+    let sim = Simulator::mlu100();
     let model = zoo::resnet18();
+    let request = TuningRequest::new(&sim, &model);
 
     // The paper's contribution: joint fusion + MP auto-tuning in O(n).
-    let schedule = optimizer::dlfusion_schedule(&model, &spec);
+    let outcome = request.run(&mut Algorithm1).expect("tuning");
     println!("model:    {} ({} layers, {} convs)",
              model.name, model.num_layers(), model.stats().num_conv);
-    println!("schedule: {}", schedule.summary());
+    println!("schedule: {}", outcome.schedule.summary());
 
-    let optimized = sim.run_schedule(&model, &schedule);
-    let baseline = sim.run_schedule(
-        &model,
-        &optimizer::Schedule::layerwise(model.num_layers(), 1),
-    );
+    let baseline = request
+        .run(&mut TableStrategy(Strategy::NonOptimization))
+        .expect("tuning");
     println!("baseline:  {:8.1} FPS", baseline.fps());
     println!("DLFusion:  {:8.1} FPS  ({:.1}x speedup)",
-             optimized.fps(), optimized.fps() / baseline.fps());
+             outcome.fps(), outcome.fps() / baseline.fps());
 }

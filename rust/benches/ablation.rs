@@ -9,6 +9,7 @@ use dlfusion::cost::CostEngine;
 use dlfusion::optimizer::{algorithm, AlgorithmParams};
 use dlfusion::perfmodel::mp_select::MpModel;
 use dlfusion::search;
+use dlfusion::tuner::{Algorithm1, Annealer, OracleDp, Tuner, TuningRequest};
 use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
 use dlfusion::zoo;
@@ -88,20 +89,23 @@ fn main() {
         .label_first()
         .with_title("simulated annealing over the unreduced space");
     for m in [zoo::resnet18(), zoo::alexnet()] {
-        // Cold anneal, warm anneal, and DLFusion all share one engine.
-        let mut engine = CostEngine::new(&sim, &m);
-        let dlf = algorithm::dlfusion_schedule_with(&m, &sim.spec, &base);
-        let f_dlf = engine.run_schedule(&dlf).fps();
-        let cfg = search::annealing::AnnealConfig::default();
-        let (_, cold_ms) = search::annealing::anneal_with(&mut engine, &cfg, None);
-        let (_, warm_ms) =
-            search::annealing::anneal_with(&mut engine, &cfg, Some(dlf));
+        // Cold anneal, warm anneal, and DLFusion all share one tuning
+        // context (and so one memoized engine).
+        let request = TuningRequest::new(&sim, &m)
+            .anneal_config(search::AnnealConfig::default());
+        let mut cx = request.context();
+        let dlf = Algorithm1.tune(&mut cx).expect("tuning");
+        let f_dlf = dlf.fps();
+        let cold = Annealer::new().tune(&mut cx).expect("tuning");
+        let warm = Annealer::from_schedule(dlf.schedule.clone())
+            .tune(&mut cx)
+            .expect("tuning");
         t.row(vec![m.name.clone(), format!("{f_dlf:.0}"),
-                   format!("{:.0}", 1000.0 / cold_ms),
-                   format!("{:.0}", 1000.0 / warm_ms)]);
+                   format!("{:.0}", cold.fps()),
+                   format!("{:.0}", warm.fps())]);
         csv.row_display(&["annealing".to_string(), m.name.clone(),
-                          format!("{:.3}", (1000.0 / cold_ms) / f_dlf)]);
-        let st = engine.stats();
+                          format!("{:.3}", cold.fps() / f_dlf)]);
+        let st = cx.engine_stats();
         println!("  {}: {} block queries, {} computed ({:.0}x fewer raw \
                   evaluations than per-move re-simulation)",
                  m.name, st.queries(), st.misses, st.block_eval_reduction());
@@ -112,11 +116,11 @@ fn main() {
     let mut t = Table::new(&["network", "reduced oracle FPS", "full-DP FPS", "reduction cost"])
         .label_first().with_title("what the paper's search-space reduction gives up");
     for m in [zoo::resnet18(), zoo::alexnet()] {
-        let mut engine = CostEngine::new(&sim, &m);
-        let (red, _) = search::oracle_schedule_with(&mut engine);
-        let (full, _) = search::brute::oracle_schedule_full_with(&mut engine);
-        let f_red = engine.run_schedule(&red).fps();
-        let f_full = engine.run_schedule(&full).fps();
+        let request = TuningRequest::new(&sim, &m);
+        let mut cx = request.context();
+        let red = OracleDp::reduced().tune(&mut cx).expect("tuning");
+        let full = OracleDp::full().tune(&mut cx).expect("tuning");
+        let (f_red, f_full) = (red.fps(), full.fps());
         t.row(vec![m.name.clone(), format!("{f_red:.0}"), format!("{f_full:.0}"),
                    format!("{:.1}%", 100.0 * (1.0 - f_red / f_full))]);
         csv.row_display(&["oracle_reduction".to_string(), m.name.clone(),

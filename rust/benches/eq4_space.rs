@@ -4,7 +4,7 @@
 use dlfusion::accel::Simulator;
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
 use dlfusion::optimizer::space;
-use dlfusion::search;
+use dlfusion::tuner::{OracleDp, TuningRequest};
 use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
 use dlfusion::zoo;
@@ -37,7 +37,10 @@ fn main() {
         .with_title("Eq. 4 space vs the oracle's real evaluation count");
     for m in [zoo::alexnet(), zoo::resnet18(), zoo::resnet50()] {
         let n = m.num_layers();
-        let (_, st) = search::oracle_schedule(&sim, &m);
+        let out = TuningRequest::new(&sim, &m)
+            .run(&mut OracleDp::reduced())
+            .expect("tuning");
+        let st = out.stats;
         t.row(vec![m.name.clone(), n.to_string(),
                    format!("{:.1}", space::search_space(n, 32).log10()),
                    st.evaluations.to_string(), st.cache_misses.to_string(),

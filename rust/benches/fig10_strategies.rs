@@ -4,8 +4,8 @@
 
 use dlfusion::accel::Simulator;
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
-use dlfusion::cost::CostEngine;
-use dlfusion::optimizer::{run_strategy_with, Strategy};
+use dlfusion::optimizer::Strategy;
+use dlfusion::tuner::{OracleDp, TableStrategy, Tuner, TuningRequest};
 use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
 use dlfusion::zoo;
@@ -29,18 +29,19 @@ fn main() {
     let mut total_queries = 0u64;
     let mut total_computed = 0u64;
     for m in zoo::all_models() {
-        // One memoized engine per network: the seven strategies (and the
+        // One tuning context per network: the seven strategies (and the
         // oracle's DP inside strategy 7) share every block evaluation.
-        let mut engine = CostEngine::new(&sim, &m);
+        let request = TuningRequest::new(&sim, &m);
+        let mut cx = request.context();
         let mut fps = Vec::new();
         for st in Strategy::ALL {
-            let (_, rep) = run_strategy_with(&mut engine, st);
-            fps.push(rep.fps());
+            let out = TableStrategy(st).tune(&mut cx).expect("tuning");
+            fps.push(out.fps());
             csv.row_display(&[m.name.clone(), st.index().to_string(),
-                              st.name().to_string(), format!("{:.1}", rep.fps()),
-                              format!("{:.3}", rep.fps() / fps[0])]);
+                              st.name().to_string(), format!("{:.1}", out.fps()),
+                              format!("{:.3}", out.fps() / fps[0])]);
         }
-        let st = engine.stats();
+        let st = cx.engine_stats();
         total_queries += st.queries();
         total_computed += st.misses;
         let s6s1 = fps[5] / fps[0];
@@ -75,11 +76,13 @@ fn main() {
     b.time("dlfusion_algorithm1", || {
         dlfusion::optimizer::dlfusion_schedule(&m, &sim.spec)
     });
+    let request = TuningRequest::new(&sim, &m);
     let mut last_stats = None;
     b.time("oracle_reduced_dp", || {
-        let (sched, st) = dlfusion::search::oracle_schedule(&sim, &m);
-        last_stats = Some(st);
-        sched
+        // A fresh context per timing iteration: cold-cache search time.
+        let out = request.run(&mut OracleDp::reduced()).expect("tuning");
+        last_stats = Some(out.stats);
+        out.schedule
     });
     let results = b.finish();
     let ratio = results[1].mean_ms() / results[0].mean_ms().max(1e-9);

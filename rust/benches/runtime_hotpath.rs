@@ -18,7 +18,12 @@ fn main() {
     b.time("algorithm1_resnet50", || optimizer::dlfusion_schedule(&resnet, &sim.spec));
     let sched = optimizer::dlfusion_schedule(&resnet, &sim.spec);
     b.time("simulate_resnet50", || sim.run_schedule(&resnet, &sched));
-    b.time("oracle_dp_resnet50", || dlfusion::search::oracle_schedule(&sim, &resnet));
+    b.time("oracle_dp_resnet50", || {
+        // Fresh engine per iteration: cold-cache DP time, as the old
+        // engine-less wrapper measured.
+        let mut engine = dlfusion::cost::CostEngine::new(&sim, &resnet);
+        dlfusion::search::oracle_schedule_with(&mut engine)
+    });
     b.time("codegen_resnet50", || dlfusion::codegen::generate_cpp(&resnet, &sched));
     b.finish();
 

@@ -9,7 +9,8 @@ use crate::graph::{format as dlm, Model};
 use crate::optimizer::{self, Strategy};
 use crate::perfmodel;
 use crate::runtime::Runtime;
-use crate::search;
+use crate::search::{AnnealConfig, BlockRule};
+use crate::tuner::{self, Tuner};
 use crate::util::units::{fmt_gops, fmt_ms};
 use crate::util::Table;
 use crate::zoo;
@@ -24,6 +25,12 @@ COMMANDS:
     zoo [--spec]                 list built-in models (Table II) / hardware spec
     optimize <model|file.dlm>    run Algorithm 1, print the schedule
         [--strategy 1..7] [--critical GOPS]
+    tune <model|file.dlm>        run one tuner backend, or --compare several,
+        [--tuner NAME]           through the unified tuner API
+        [--compare] [--iterations N] [--mps 1,2,4] [--granularity any|x4]
+        [--budget-evals N]       (NAME: algorithm1 strategy1..7 oracle
+                                  oracle-full oracle-constrained anneal
+                                  exhaustive)
     simulate <model|file.dlm>    simulate all seven strategies (Fig. 10 row)
     search <model|file.dlm>      compare search costs: Algorithm 1 vs oracle
         [--iterations N]         DP vs simulated annealing (cache + wall time)
@@ -47,6 +54,7 @@ pub fn run(args: &Args) -> i32 {
         }
         "zoo" => cmd_zoo(args),
         "optimize" => cmd_optimize(args),
+        "tune" => cmd_tune(args),
         "simulate" => cmd_simulate(args),
         "search" => cmd_search(args),
         "codegen" => cmd_codegen(args),
@@ -134,30 +142,139 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Resolve a `--tuner` name to a boxed backend.
+fn parse_tuner(name: &str) -> Result<Box<dyn Tuner>, String> {
+    match name {
+        "algorithm1" | "dlfusion" => Ok(Box::new(tuner::Algorithm1)),
+        "oracle" | "oracle-dp" => Ok(Box::new(tuner::OracleDp::reduced())),
+        "oracle-full" => Ok(Box::new(tuner::OracleDp::full())),
+        "oracle-constrained" => Ok(Box::new(tuner::OracleDp::constrained())),
+        "anneal" | "annealing" => Ok(Box::new(tuner::Annealer::new())),
+        "exhaustive" => Ok(Box::new(tuner::Exhaustive)),
+        s if s.starts_with("strategy") => {
+            let idx: usize = s["strategy".len()..]
+                .parse()
+                .map_err(|_| format!("bad strategy index in '{s}'"))?;
+            let st = Strategy::from_index(idx)
+                .ok_or(format!("strategy must be 1..=7, got {idx}"))?;
+            Ok(Box::new(tuner::TableStrategy(st)))
+        }
+        other => Err(format!(
+            "unknown tuner '{other}' (known: algorithm1, strategy1..7, \
+             oracle, oracle-full, oracle-constrained, anneal, exhaustive)"
+        )),
+    }
+}
+
+/// Build a `TuningRequest` from the shared tune/search flags.
+fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
+                     -> Result<tuner::TuningRequest<'a>, String> {
+    let mut request = tuner::TuningRequest::new(sim, model);
+    if let Some(iters) = args.flag_usize("iterations").map_err(|e| e.to_string())? {
+        request = request.anneal_config(AnnealConfig { iterations: iters, ..Default::default() });
+    }
+    if let Some(list) = args.flag("mps") {
+        let mps: Vec<usize> = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| format!("--mps expects comma-separated integers, got '{list}'"))?;
+        request = request.mp_candidates(mps);
+    }
+    match args.flag("granularity") {
+        None => {}
+        Some("any") => request = request.granularity(BlockRule::Any),
+        Some("x4") | Some("mult4") => {
+            request = request.granularity(BlockRule::MultipleOfFour)
+        }
+        Some(other) => {
+            return Err(format!("--granularity expects 'any' or 'x4', got '{other}'"))
+        }
+    }
+    if let Some(cap) = args.flag_usize("budget-evals").map_err(|e| e.to_string())? {
+        request = request.max_evaluations(cap as u64);
+    }
+    Ok(request)
+}
+
+/// The default comparison panel (Algorithm 1 vs oracle DP vs annealing),
+/// plus one extra backend when the user named it (skipped if it duplicates
+/// a default).
+fn compare_panel(extra: Option<&str>) -> Result<Vec<Box<dyn Tuner>>, String> {
+    let mut tuners: Vec<Box<dyn Tuner>> = vec![
+        Box::new(tuner::Algorithm1),
+        Box::new(tuner::OracleDp::reduced()),
+        Box::new(tuner::Annealer::new()),
+    ];
+    if let Some(name) = extra {
+        let t = parse_tuner(name)?;
+        if tuners.iter().all(|have| have.name() != t.name()) {
+            tuners.push(t);
+        }
+    }
+    Ok(tuners)
+}
+
+fn cmd_tune(args: &Args) -> Result<(), String> {
+    let model = load_model(args)?;
+    let sim = Simulator::mlu100();
+    let request = parse_request(args, &sim, &model)?;
+
+    if args.flag_bool("compare") {
+        // The Fig. 10-style side-by-side report over one shared engine; an
+        // explicit --tuner joins the default panel.
+        let mut tuners = compare_panel(args.flag("tuner"))?;
+        let cmp = request.compare(&mut tuners).map_err(|e| e.to_string())?;
+        print!("{}", cmp.render(&format!("tuner comparison — {}", model.name)));
+        return Ok(());
+    }
+
+    let mut backend = parse_tuner(args.flag("tuner").unwrap_or("algorithm1"))?;
+    let outcome = request.run(backend.as_mut()).map_err(|e| e.to_string())?;
+    println!("model:     {}", model.name);
+    println!("tuner:     {}", outcome.tuner);
+    println!("schedule:  {}", outcome.schedule.summary());
+    println!("blocks:    {}", outcome.schedule.num_blocks());
+    println!("latency:   {} predicted ({:.1} FPS)",
+             fmt_ms(outcome.predicted_ms), outcome.fps());
+    let st = outcome.stats;
+    println!("search:    {} evaluations ({} computed, {:.0}% cache hits), {} us{}",
+             st.evaluations, st.cache_misses, 100.0 * st.hit_rate(), st.wall_us,
+             if st.truncated { " — budget-truncated" } else { "" });
+    if st.space_visited > 0 {
+        println!("space:     {} joint (fusion, MP) candidates certified",
+                 st.space_visited);
+    }
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
     let sim = Simulator::mlu100();
-    let mut engine = CostEngine::new(&sim, &model);
+    // One request, one shared context: the seven strategies reuse every
+    // block evaluation.
+    let request = tuner::TuningRequest::new(&sim, &model);
+    let mut cx = request.context();
     let mut t = Table::new(&["#", "strategy", "blocks", "latency", "FPS", "speedup"])
         .label_first()
         .align(1, crate::util::table::Align::Left)
         .with_title(&format!("Fig. 10 row — {}", model.name));
     let mut base_fps = None;
     for st in Strategy::ALL {
-        let (sched, rep) = optimizer::run_strategy_with(&mut engine, st);
-        let fps = rep.fps();
+        let out = tuner::TableStrategy(st).tune(&mut cx).map_err(|e| e.to_string())?;
+        let fps = out.fps();
         let base = *base_fps.get_or_insert(fps);
         t.row(vec![
             st.index().to_string(),
             st.name().to_string(),
-            sched.num_blocks().to_string(),
-            fmt_ms(rep.total_ms),
+            out.schedule.num_blocks().to_string(),
+            fmt_ms(out.predicted_ms),
             format!("{fps:.1}"),
             format!("{:.2}x", fps / base),
         ]);
     }
     println!("{t}");
-    let st = engine.stats();
+    let st = cx.engine_stats();
     println!("cost engine: {} block queries, {} computed ({} cached, \
               {:.1}x fewer computations than unmemoized)",
              st.queries(), st.misses, st.hits, st.block_eval_reduction());
@@ -167,51 +284,30 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 fn cmd_search(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
     let sim = Simulator::mlu100();
+    let request = parse_request(args, &sim, &model)?;
     let iterations = args
         .flag_usize("iterations")
         .map_err(|e| e.to_string())?
-        .unwrap_or(search::AnnealConfig::default().iterations);
+        .unwrap_or(AnnealConfig::default().iterations);
 
-    // DLFusion's O(n) pass (no simulator evaluations at all).
-    let t0 = std::time::Instant::now();
-    let dlf = optimizer::dlfusion_schedule(&model, &sim.spec);
-    let dlf_us = t0.elapsed().as_micros() as u64;
-    let mut engine = CostEngine::new(&sim, &model);
-    let dlf_ms = engine.run_schedule(&dlf).total_ms;
-
-    // The reduced brute-force oracle (strategy 7) through the same engine.
-    let (oracle, ostats) = search::oracle_schedule_with(&mut engine);
-    let oracle_ms = engine.run_schedule(&oracle).total_ms;
-
-    // Simulated annealing over the unreduced space, same engine.
-    engine.reset_stats();
-    let t0 = std::time::Instant::now();
-    let cfg = search::AnnealConfig { iterations, ..Default::default() };
-    let (_, anneal_ms) = search::annealing::anneal_with(&mut engine, &cfg, None);
-    let anneal_us = t0.elapsed().as_micros() as u64;
-    let astats = engine.stats();
-
-    let mut t = Table::new(&["search", "latency", "block evals", "cache hits",
-                             "computed", "wall"])
-        .label_first()
-        .with_title(&format!("Search-time comparison — {} (paper Section V)",
-                             model.name));
-    t.row(vec!["DLFusion Algorithm 1".into(), fmt_ms(dlf_ms),
-               "0".into(), "-".into(), "-".into(), format!("{dlf_us} us")]);
-    t.row(vec!["oracle DP (reduced)".into(), fmt_ms(oracle_ms),
-               ostats.evaluations.to_string(), ostats.cache_hits.to_string(),
-               ostats.cache_misses.to_string(),
-               format!("{} us", ostats.wall_us)]);
-    t.row(vec![format!("annealing ({iterations} moves)"), fmt_ms(anneal_ms),
-               astats.queries().to_string(), astats.hits.to_string(),
-               astats.misses.to_string(), format!("{anneal_us} us")]);
-    println!("{t}");
-    println!("oracle search costs {:.0}x DLFusion's one-pass heuristic for a \
-              {:.1}% latency win; the annealer's memoized moves computed only \
-              {:.1}% of their block queries",
-             (ostats.wall_us.max(1)) as f64 / (dlf_us.max(1)) as f64,
-             100.0 * (dlf_ms / oracle_ms - 1.0),
-             100.0 * (1.0 - astats.hit_rate()));
+    // Declarative form of the old hand-rolled comparison: Algorithm 1, the
+    // reduced oracle DP, and the annealer over one shared engine.
+    let mut tuners = compare_panel(None)?;
+    let cmp = request.compare(&mut tuners).map_err(|e| e.to_string())?;
+    print!("{}", cmp.render(&format!(
+        "Search-time comparison — {} (paper Section V, annealer budget \
+         {iterations} moves)", model.name)));
+    // Algorithm 1's wall time here includes costing its schedule through
+    // the (cold) engine, so this ratio understates the pure O(n)-pass gap
+    // the paper quotes; name what is actually measured.
+    let o = &cmp.outcomes;
+    println!("oracle search costs {:.0}x the Algorithm 1 tuner's wall time \
+              (schedule + block costing) for a {:.1}% latency win; the \
+              annealer's memoized moves computed only {:.1}% of their block \
+              queries",
+             (o[1].stats.wall_us.max(1)) as f64 / (o[0].stats.wall_us.max(1)) as f64,
+             100.0 * (o[0].predicted_ms / o[1].predicted_ms - 1.0),
+             100.0 * (1.0 - o[2].stats.hit_rate()));
     Ok(())
 }
 
@@ -283,7 +379,8 @@ fn cmd_trace(args: &Args) -> Result<(), String> {
         Some(i) => Strategy::from_index(i).ok_or(format!("strategy must be 1..=7, got {i}"))?,
     };
     let params = optimizer::AlgorithmParams::for_spec(&sim.spec);
-    let sched = optimizer::strategies::strategy_schedule(&sim, &model, strategy, &params);
+    let mut engine = CostEngine::new(&sim, &model);
+    let sched = optimizer::strategies::strategy_schedule_with(&mut engine, strategy, &params);
     let trace = crate::accel::trace::Trace::capture(&sim, &model, &sched);
     println!("{}", trace.render());
     println!("redundant compute: {:.1}% of total;  chip utilization: {:.1}%",
@@ -300,8 +397,14 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let verify = args.flag_bool("verify");
     let model = zoo::mini_cnn();
     let sim = Simulator::mlu100();
-    let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
-    println!("model {} schedule {}", model.name, sched.summary());
+    // The serving path runs through the unified tuner API: one request, one
+    // shared cost engine for both the schedule and the plan annotations.
+    let request = tuner::TuningRequest::new(&sim, &model);
+    let mut cx = request.context();
+    let outcome = tuner::Algorithm1.tune(&mut cx).map_err(|e| e.to_string())?;
+    let sched = outcome.schedule.clone();
+    println!("model {} schedule {} (tuner {})",
+             model.name, sched.summary(), outcome.tuner);
 
     let mut rt = Runtime::open_default().map_err(|e| e.to_string())?;
     println!("PJRT platform: {}", rt.platform());
@@ -319,20 +422,19 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
 
     let mut ex_plan = plan::build_plan(&model, &sched, rt.manifest())?;
-    let mut cost_engine = CostEngine::new(&sim, &model);
-    plan::annotate_with_costs(&mut ex_plan, &mut cost_engine);
-    // Whole-schedule prediction (per-step annotations drop conv-free layers
-    // and re-charge per-launch overheads, so their sum is not the total).
-    let predicted_ms = cost_engine.run_schedule(&sched).total_ms;
+    plan::annotate_with_costs(&mut ex_plan, cx.engine_mut());
     let mut engine =
         coordinator::Engine::new(rt, &model, ex_plan, 7).map_err(|e| e.to_string())?;
     let cfg = driver::DriverConfig { requests, verify_each: verify, ..Default::default() };
-    let report = driver::serve(&mut engine, &cfg).map_err(|e| e.to_string())?;
+    let tuned = driver::serve_tuned(&mut engine, &cfg, &outcome).map_err(|e| e.to_string())?;
+    let report = &tuned.report;
     println!("served {} requests: {}", requests, report.latency.report());
     println!("throughput: {:.1} inferences/s (PJRT CPU wall-clock)", report.fps());
+    // Whole-schedule prediction (per-step annotations drop conv-free layers
+    // and re-charge per-launch overheads, so their sum is not the total).
     println!("simulator-predicted MLU100 latency: {} per inference \
               (PJRT CPU measures numerics, not MLU100 speed)",
-             fmt_ms(predicted_ms));
+             fmt_ms(tuned.predicted_ms));
     if verify {
         println!(
             "per-request equivalence: {} ok / {} failures",

@@ -7,6 +7,7 @@ use std::time::Instant;
 use super::executor::Engine;
 use super::metrics::{Counters, LatencyRecorder};
 use crate::runtime::RuntimeError;
+use crate::tuner::TuningOutcome;
 
 /// Request-loop configuration.
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +41,40 @@ impl DriverReport {
     pub fn fps(&self) -> f64 {
         self.counters.get("requests") as f64 / (self.wall_ms / 1e3)
     }
+}
+
+/// A request-loop report paired with the tuner outcome that produced the
+/// plan, so predicted-vs-measured reporting lives in one place.
+#[derive(Debug, Clone)]
+pub struct TunedDriverReport {
+    /// Name of the tuner backend whose schedule is being served.
+    pub tuner: String,
+    /// Simulator-predicted per-inference latency of that schedule, ms.
+    pub predicted_ms: f64,
+    pub report: DriverReport,
+}
+
+impl TunedDriverReport {
+    /// Mean measured wall-clock per request over the simulator prediction
+    /// (PJRT CPU measures numerics, not MLU100 speed, so this is a sanity
+    /// ratio, not an accuracy claim).
+    pub fn measured_over_predicted(&self) -> f64 {
+        let requests = self.report.counters.get("requests").max(1) as f64;
+        (self.report.wall_ms / requests) / self.predicted_ms
+    }
+}
+
+/// Serve a request loop for a tuned schedule: [`serve`] plus the tuner's
+/// prediction folded into the report (the unified-tuner-API path the CLI
+/// `run` command and the e2e example drive).
+pub fn serve_tuned(engine: &mut Engine, cfg: &DriverConfig,
+                   outcome: &TuningOutcome) -> Result<TunedDriverReport, RuntimeError> {
+    let report = serve(engine, cfg)?;
+    Ok(TunedDriverReport {
+        tuner: outcome.tuner.clone(),
+        predicted_ms: outcome.predicted_ms,
+        report,
+    })
 }
 
 /// Serve `cfg.requests` single-image requests through the engine.
@@ -85,6 +120,23 @@ mod tests {
         let c = DriverConfig::default();
         assert!(c.requests > 0);
         assert!(!c.verify_each);
+    }
+
+    #[test]
+    fn tuned_report_ratio_math() {
+        let mut counters = Counters::new();
+        counters.add("requests", 10);
+        let tuned = TunedDriverReport {
+            tuner: "algorithm1".into(),
+            predicted_ms: 2.0,
+            report: DriverReport {
+                latency: LatencyRecorder::new(),
+                counters,
+                wall_ms: 40.0,
+            },
+        };
+        // 40 ms / 10 requests = 4 ms measured vs 2 ms predicted.
+        assert!((tuned.measured_over_predicted() - 2.0).abs() < 1e-12);
     }
 
     #[test]

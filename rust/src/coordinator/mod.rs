@@ -14,7 +14,7 @@ pub mod equivalence;
 pub mod metrics;
 pub mod driver;
 
-pub use driver::{DriverConfig, DriverReport};
+pub use driver::{serve_tuned, DriverConfig, DriverReport, TunedDriverReport};
 pub use equivalence::EquivalenceReport;
 pub use executor::Engine;
 pub use plan::{annotate_with_costs, ExecutionPlan, PlanStep};

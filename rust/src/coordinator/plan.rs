@@ -61,8 +61,13 @@ impl ExecutionPlan {
 /// numbers come from the same engine the optimizer searched with).
 pub fn annotate_with_costs(plan: &mut ExecutionPlan, engine: &mut CostEngine) {
     for step in &mut plan.steps {
-        let first = *step.conv_indices.first().expect("plan steps are non-empty");
-        let last = *step.conv_indices.last().unwrap();
+        // `build_plan` never emits conv-less steps; a hand-built plan with
+        // one just keeps its 0.0 placeholder instead of panicking.
+        let (Some(&first), Some(&last)) =
+            (step.conv_indices.first(), step.conv_indices.last())
+        else {
+            continue;
+        };
         step.predicted_ms = engine.block_latency(first, last + 1, step.mp);
     }
 }
@@ -158,12 +163,9 @@ mod tests {
     use std::path::Path;
 
     fn manifest() -> Option<Manifest> {
-        let dir = crate::runtime::artifact_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Manifest::load(&dir).unwrap())
-        } else {
-            None
-        }
+        // A present-but-corrupt manifest skips these tests rather than
+        // panicking the whole suite.
+        Manifest::load(&crate::runtime::artifact_dir()).ok()
     }
 
     #[test]

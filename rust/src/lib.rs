@@ -22,7 +22,8 @@
 //! | [`perfmodel`] | roofline, `OpCount_critical`, the `MP(C, Op)` scorer (Eq. 5) |
 //! | [`cost`] | memoized cost-evaluation engine shared by every consumer (rust/docs/DESIGN.md §7) |
 //! | [`optimizer`] | Algorithm 1 and the seven evaluation strategies (Table III) |
-//! | [`search`] | the reduced brute-force oracle (strategy 7) |
+//! | [`search`] | the reduced brute-force oracle (strategy 7), annealing, exhaustive certification |
+//! | [`tuner`] | the unified tuning API: one request/outcome surface over every search backend (rust/docs/DESIGN.md §8) |
 //! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
 //! | [`runtime`] | PJRT client: load AOT HLO-text artifacts, execute |
 //! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
@@ -35,12 +36,14 @@
 //! ```no_run
 //! use dlfusion::prelude::*;
 //!
-//! let spec = AcceleratorSpec::mlu100();
+//! let sim = Simulator::mlu100();
 //! let model = zoo::resnet18();
-//! let schedule = optimizer::dlfusion_schedule(&model, &spec);
-//! let sim = Simulator::new(spec);
-//! let report = sim.run_schedule(&model, &schedule);
-//! println!("{}: {:.1} FPS", model.name, report.fps());
+//! // One declarative request; any backend (`Algorithm1`, `OracleDp`,
+//! // `Annealer`, `Exhaustive`, `TableStrategy`) runs against it.
+//! let request = TuningRequest::new(&sim, &model);
+//! let outcome = request.run(&mut Algorithm1).expect("tuning");
+//! println!("{}: {} blocks, {:.1} FPS predicted",
+//!          model.name, outcome.schedule.num_blocks(), outcome.fps());
 //! ```
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
@@ -57,6 +60,7 @@ pub mod perfmodel;
 pub mod cost;
 pub mod optimizer;
 pub mod search;
+pub mod tuner;
 pub mod codegen;
 pub mod runtime;
 pub mod coordinator;
@@ -67,10 +71,15 @@ pub mod cli;
 /// Most-used types, for `use dlfusion::prelude::*`.
 pub mod prelude {
     pub use crate::accel::{AcceleratorSpec, Simulator, PerfReport};
+    pub use crate::coordinator::{self, Engine};
     pub use crate::cost::{CostEngine, CostStats};
     pub use crate::graph::{Layer, LayerKind, Model};
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;
-    pub use crate::search;
+    pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};
+    pub use crate::tuner::{self, compare, Algorithm1, Annealer, Budget,
+                           Exhaustive, OracleDp, TableStrategy, Tuner,
+                           TuningContext, TuningError, TuningOutcome,
+                           TuningRequest, TuningStats};
     pub use crate::zoo;
 }

@@ -16,4 +16,6 @@ pub mod space;
 
 pub use algorithm::{dlfusion_schedule, AlgorithmParams};
 pub use schedule::{Block, Schedule};
-pub use strategies::{run_strategy, run_strategy_with, Strategy};
+pub use strategies::{run_strategy_with, strategy_schedule_with, Strategy};
+#[allow(deprecated)]
+pub use strategies::{run_strategy, strategy_schedule};

@@ -74,6 +74,8 @@ impl std::fmt::Display for Strategy {
 /// the sweep-based strategies 2/5 and the oracle). Constructs a throwaway
 /// [`CostEngine`]; callers evaluating several strategies on one model should
 /// use [`strategy_schedule_with`] over a shared engine instead.
+#[deprecated(note = "build a `CostEngine` and call `strategy_schedule_with`, \
+                     or use `tuner::TableStrategy` over a `TuningRequest`")]
 pub fn strategy_schedule(sim: &Simulator, model: &Model, strategy: Strategy,
                          params: &AlgorithmParams) -> Schedule {
     let mut engine = CostEngine::new(sim, model);
@@ -144,6 +146,8 @@ fn best_over(engine: &mut CostEngine, mps: Vec<usize>,
 }
 
 /// Convenience: schedule + simulated report for one strategy.
+#[deprecated(note = "build a `CostEngine` and call `run_strategy_with`, or \
+                     use `tuner::TableStrategy` over a `TuningRequest`")]
 pub fn run_strategy(sim: &Simulator, model: &Model, strategy: Strategy)
                     -> (Schedule, crate::accel::PerfReport) {
     let mut engine = CostEngine::new(sim, model);
@@ -160,6 +164,7 @@ pub fn run_strategy_with(engine: &mut CostEngine, strategy: Strategy)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::zoo;

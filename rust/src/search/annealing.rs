@@ -42,6 +42,8 @@ impl Default for AnnealConfig {
 
 /// Run the annealer from the layer-wise MP=1 baseline (or a provided seed
 /// schedule). Returns the best schedule found and its latency.
+#[deprecated(note = "build a `CostEngine` and call `anneal_with`, or use \
+                     `tuner::Annealer` over a `TuningRequest`")]
 pub fn anneal(sim: &Simulator, model: &Model, cfg: &AnnealConfig,
               init: Option<Schedule>) -> (Schedule, f64) {
     let mut engine = CostEngine::new(sim, model);
@@ -52,8 +54,23 @@ pub fn anneal(sim: &Simulator, model: &Model, cfg: &AnnealConfig,
 /// across restarts and from other consumers of the same model).
 pub fn anneal_with(engine: &mut CostEngine, cfg: &AnnealConfig,
                    init: Option<Schedule>) -> (Schedule, f64) {
+    let (best, best_cost, _) = anneal_budgeted(engine, cfg, init, None, None);
+    (best, best_cost)
+}
+
+/// The Metropolis walk under optional budgets (rust/docs/DESIGN.md §8):
+/// `max_evals` caps engine block queries, `max_wall_us` caps wall-clock
+/// time; both are checked at the top of every move, so a truncated walk
+/// still returns its best-so-far schedule. With no budgets the trajectory
+/// is the exact seed loop ([`anneal_with`] is this function with `None`s).
+/// Returns `(best, best_cost, truncated)`.
+pub fn anneal_budgeted(engine: &mut CostEngine, cfg: &AnnealConfig,
+                       init: Option<Schedule>, max_evals: Option<u64>,
+                       max_wall_us: Option<u64>) -> (Schedule, f64, bool) {
     let n = engine.model().num_layers();
     let max_mp = engine.sim().spec.num_cores;
+    let t0 = std::time::Instant::now();
+    let queries0 = engine.stats().queries();
     let mut rng = XorShiftRng::new(cfg.seed);
     let mut cur = init.unwrap_or_else(|| Schedule::layerwise(n, 1));
     debug_assert!(cur.validate(n, max_mp).is_ok());
@@ -61,8 +78,21 @@ pub fn anneal_with(engine: &mut CostEngine, cfg: &AnnealConfig,
     let mut best = cur.clone();
     let mut best_cost = cur_cost;
     let mut temp = cur_cost * cfg.t0_fraction;
+    let mut truncated = false;
 
     for _ in 0..cfg.iterations {
+        if let Some(cap) = max_evals {
+            if engine.stats().queries() - queries0 >= cap {
+                truncated = true;
+                break;
+            }
+        }
+        if let Some(cap) = max_wall_us {
+            if t0.elapsed().as_micros() as u64 >= cap {
+                truncated = true;
+                break;
+            }
+        }
         let (cand, changed) = propose(&cur, &mut rng, max_mp);
         let cand_cost = engine.delta_cost(&cand, &changed);
         let accept = cand_cost < cur_cost
@@ -77,7 +107,7 @@ pub fn anneal_with(engine: &mut CostEngine, cfg: &AnnealConfig,
         }
         temp *= cfg.cooling;
     }
-    (best, best_cost)
+    (best, best_cost, truncated)
 }
 
 /// One random neighbourhood move; always yields a valid schedule. Returns
@@ -127,6 +157,7 @@ fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize)
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy shim stays covered until it is removed
 mod tests {
     use super::*;
     use crate::graph::layer::ConvSpec;
@@ -135,6 +166,34 @@ mod tests {
 
     fn sim() -> Simulator {
         Simulator::mlu100()
+    }
+
+    #[test]
+    fn eval_budget_truncates_but_stays_valid() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut engine = CostEngine::new(&s, &m);
+        let cfg = AnnealConfig::default();
+        let cap = m.num_layers() as u64 + 8;
+        let (sched, cost, truncated) =
+            anneal_budgeted(&mut engine, &cfg, None, Some(cap), None);
+        assert!(truncated, "cap {cap} must bind before 2000 moves");
+        sched.validate(m.num_layers(), s.spec.num_cores).unwrap();
+        assert!(cost.is_finite() && cost > 0.0);
+    }
+
+    #[test]
+    fn unbudgeted_core_is_the_seed_trajectory() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let cfg = AnnealConfig { iterations: 200, ..Default::default() };
+        let mut e1 = CostEngine::new(&s, &m);
+        let mut e2 = CostEngine::new(&s, &m);
+        let (a, ca) = anneal_with(&mut e1, &cfg, None);
+        let (b, cb, truncated) = anneal_budgeted(&mut e2, &cfg, None, None, None);
+        assert!(!truncated);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct SearchStats {
     pub evaluations: usize,
     /// Number of candidate blocks considered.
     pub blocks_considered: usize,
+    /// Joint (fusion, MP) cross-product candidates certified — the DP never
+    /// enumerates the space, so nonzero only for
+    /// [`super::exhaustive::exhaustive_schedule_with`].
+    pub space_visited: u64,
     /// Evaluations served from the cost engine's cache.
     pub cache_hits: usize,
     /// Evaluations the cost engine actually computed.
@@ -38,8 +42,46 @@ pub struct SearchStats {
     pub wall_us: u64,
 }
 
+/// Block-size rule a DP or enumeration admits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockRule {
+    /// Paper rule: |block| ≡ 0 (mod 4), remainder allowed only at the end.
+    MultipleOfFour,
+    /// Any contiguous block.
+    Any,
+}
+
+impl BlockRule {
+    fn allowed(&self, len: usize, ends_at_model_end: bool) -> bool {
+        match self {
+            BlockRule::Any => len >= 1,
+            BlockRule::MultipleOfFour => len >= 1 && (len % 4 == 0 || ends_at_model_end),
+        }
+    }
+}
+
+/// An evaluation budget stopped the DP before it reached the optimum (a
+/// partial DP has no usable result, so the caller gets an error, not a
+/// schedule — see rust/docs/DESIGN.md §8 budget semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DpBudgetExceeded {
+    /// Evaluations spent when the budget bound.
+    pub evaluations: u64,
+    pub budget: u64,
+}
+
+/// The power-of-two MP set the full-space DP sweeps.
+pub fn full_mp_set(num_cores: usize) -> Vec<usize> {
+    (0..=5)
+        .map(|p| 1usize << p)
+        .filter(|&m| m <= num_cores)
+        .collect()
+}
+
 /// The paper's reduced oracle. Returns the optimal schedule in the reduced
 /// space plus search statistics.
+#[deprecated(note = "build a `CostEngine` and call `oracle_schedule_with`, \
+                     or use `tuner::OracleDp::reduced()` over a `TuningRequest`")]
 pub fn oracle_schedule(sim: &Simulator, model: &Model) -> (Schedule, SearchStats) {
     let mut engine = CostEngine::new(sim, model);
     oracle_schedule_with(&mut engine)
@@ -49,12 +91,14 @@ pub fn oracle_schedule(sim: &Simulator, model: &Model) -> (Schedule, SearchStats
 /// over a warm cache computes nothing new).
 pub fn oracle_schedule_with(engine: &mut CostEngine) -> (Schedule, SearchStats) {
     let mps = engine.sim().spec.reduced_mp_set();
-    dp_search(engine, &mps, SizeRule::MultipleOfFour)
+    oracle_schedule_constrained(engine, &mps, BlockRule::MultipleOfFour)
 }
 
 /// Extension: the same DP over *all* block sizes and every power-of-two MP —
 /// a strictly larger space than the paper's reduced oracle (used by the
 /// ablation bench to quantify what the reduction costs).
+#[deprecated(note = "build a `CostEngine` and call `oracle_schedule_full_with`, \
+                     or use `tuner::OracleDp::full()` over a `TuningRequest`")]
 pub fn oracle_schedule_full(sim: &Simulator, model: &Model) -> (Schedule, SearchStats) {
     let mut engine = CostEngine::new(sim, model);
     oracle_schedule_full_with(&mut engine)
@@ -62,33 +106,35 @@ pub fn oracle_schedule_full(sim: &Simulator, model: &Model) -> (Schedule, Search
 
 /// Full-space DP through a caller-provided engine.
 pub fn oracle_schedule_full_with(engine: &mut CostEngine) -> (Schedule, SearchStats) {
-    let num_cores = engine.sim().spec.num_cores;
-    let mps: Vec<usize> = (0..=5)
-        .map(|p| 1usize << p)
-        .filter(|&m| m <= num_cores)
-        .collect();
-    dp_search(engine, &mps, SizeRule::Any)
+    let mps = full_mp_set(engine.sim().spec.num_cores);
+    oracle_schedule_constrained(engine, &mps, BlockRule::Any)
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum SizeRule {
-    /// Paper rule: |block| ≡ 0 (mod 4), remainder allowed only at the end.
-    MultipleOfFour,
-    /// Any contiguous block.
-    Any,
-}
-
-impl SizeRule {
-    fn allowed(&self, len: usize, ends_at_model_end: bool) -> bool {
-        match self {
-            SizeRule::Any => len >= 1,
-            SizeRule::MultipleOfFour => len >= 1 && (len % 4 == 0 || ends_at_model_end),
-        }
+/// The DP over a caller-chosen MP candidate set and block-size rule (the
+/// tuner API's constrained oracle; the paper presets above are wrappers).
+///
+/// Panics if `mp_set` is empty or the model has no layers — callers on the
+/// fallible path should use [`oracle_schedule_budgeted`] behind
+/// [`crate::tuner::OracleDp`], which validates the request first.
+pub fn oracle_schedule_constrained(engine: &mut CostEngine, mp_set: &[usize],
+                                   rule: BlockRule) -> (Schedule, SearchStats) {
+    match dp_search(engine, mp_set, rule, None) {
+        Ok(r) => r,
+        Err(_) => unreachable!("unbudgeted DP cannot exhaust a budget"),
     }
 }
 
-fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: SizeRule)
-             -> (Schedule, SearchStats) {
+/// The constrained DP under an optional evaluation budget: checked before
+/// every candidate block's MP sweep; exceeding it aborts the search.
+pub fn oracle_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
+                                rule: BlockRule, max_evals: Option<u64>)
+                                -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
+    dp_search(engine, mp_set, rule, max_evals)
+}
+
+fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
+             max_evals: Option<u64>)
+             -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
     let n = engine.model().num_layers();
     assert!(n >= 1);
     assert!(!mp_set.is_empty());
@@ -110,6 +156,14 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: SizeRule)
             }
             if dp[i].is_infinite() {
                 continue;
+            }
+            if let Some(cap) = max_evals {
+                if stats.evaluations as u64 + mp_set.len() as u64 > cap {
+                    return Err(DpBudgetExceeded {
+                        evaluations: stats.evaluations as u64,
+                        budget: cap,
+                    });
+                }
             }
             stats.blocks_considered += 1;
             // One shared-precomputation call for the whole MP set —
@@ -147,10 +201,11 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: SizeRule)
     stats.cache_hits = (engine_stats.hits - engine_stats0.hits) as usize;
     stats.cache_misses = (engine_stats.misses - engine_stats0.misses) as usize;
     stats.wall_us = t0.elapsed().as_micros() as u64;
-    (schedule, stats)
+    Ok((schedule, stats))
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::graph::layer::ConvSpec;
@@ -159,6 +214,48 @@ mod tests {
 
     fn sim() -> Simulator {
         Simulator::mlu100()
+    }
+
+    #[test]
+    fn constrained_dp_generalizes_the_presets() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut e1 = CostEngine::new(&s, &m);
+        let mut e2 = CostEngine::new(&s, &m);
+        let mps = s.spec.reduced_mp_set();
+        let (a, _) = oracle_schedule_with(&mut e1);
+        let (b, _) = oracle_schedule_constrained(&mut e2, &mps,
+                                                 BlockRule::MultipleOfFour);
+        assert_eq!(a, b);
+        let mut e3 = CostEngine::new(&s, &m);
+        let mut e4 = CostEngine::new(&s, &m);
+        let (a, _) = oracle_schedule_full_with(&mut e3);
+        let (b, _) = oracle_schedule_constrained(
+            &mut e4, &full_mp_set(s.spec.num_cores), BlockRule::Any);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn budget_aborts_the_dp_deterministically() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mps = s.spec.reduced_mp_set();
+        let mut engine = CostEngine::new(&s, &m);
+        let err = oracle_schedule_budgeted(&mut engine, &mps,
+                                           BlockRule::MultipleOfFour, Some(4))
+            .unwrap_err();
+        assert_eq!(err.budget, 4);
+        assert!(err.evaluations <= 4);
+        // An unbudgeted run on the same engine still completes.
+        let (sched, st) = oracle_schedule_budgeted(
+            &mut engine, &mps, BlockRule::MultipleOfFour, None).unwrap();
+        sched.validate(m.num_layers(), s.spec.num_cores).unwrap();
+        // A budget exactly equal to the need also completes.
+        let mut fresh = CostEngine::new(&s, &m);
+        let (sched2, _) = oracle_schedule_budgeted(
+            &mut fresh, &mps, BlockRule::MultipleOfFour,
+            Some(st.evaluations as u64)).unwrap();
+        assert_eq!(sched, sched2);
     }
 
     #[test]

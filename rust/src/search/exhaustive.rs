@@ -1,22 +1,96 @@
 //! True exhaustive enumeration over the *full* joint space for tiny models:
 //! every contiguous partition (2^(n-1) cut masks) × every MP assignment.
-//! Exponential — guarded to n <= 12 — and used solely to certify that the
-//! DP oracle is exact and that Eq. 4 counts what we think it counts.
+//! Exponential — refused past [`MAX_EXHAUSTIVE_LAYERS`] layers — and used
+//! solely to certify that the DP oracle is exact and that Eq. 4 counts what
+//! we think it counts.
+//!
+//! Candidates are evaluated through the shared [`crate::cost::CostEngine`]
+//! (scalar path, bit-identical to the former direct
+//! `Simulator::block_latency_ms` calls): overlapping partitions share every
+//! `(block, mp)` evaluation instead of re-deriving per-layer facts per
+//! candidate, and the run reports [`SearchStats`] like every other backend.
+
+use std::time::Instant;
 
 use crate::accel::Simulator;
+use crate::cost::CostEngine;
 use crate::graph::Model;
 use crate::optimizer::schedule::{Block, Schedule};
+use crate::search::brute::SearchStats;
+
+/// Hard ceiling on model size: 2^(n-1) cut masks get out of hand fast.
+pub const MAX_EXHAUSTIVE_LAYERS: usize = 12;
+
+/// Why an enumeration could not run. Search-level, like
+/// [`super::brute::DpBudgetExceeded`]; the [`crate::tuner::Exhaustive`]
+/// backend maps these onto `TuningError`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExhaustiveError {
+    /// More than [`MAX_EXHAUSTIVE_LAYERS`] layers: exponential blowup.
+    ModelTooLarge { layers: usize, max: usize },
+    /// No MP candidates to assign.
+    EmptyMpSet,
+    /// The evaluation budget bound before the enumeration finished (a
+    /// partial enumeration certifies nothing).
+    BudgetExhausted { spent: u64, budget: u64 },
+}
+
+impl std::fmt::Display for ExhaustiveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExhaustiveError::ModelTooLarge { layers, max } => write!(
+                f, "exhaustive search is exponential: {layers} layers (max {max})"),
+            ExhaustiveError::EmptyMpSet => write!(f, "MP candidate set is empty"),
+            ExhaustiveError::BudgetExhausted { spent, budget } => write!(
+                f, "evaluation budget exhausted: {spent} of {budget} spent"),
+        }
+    }
+}
+
+impl std::error::Error for ExhaustiveError {}
 
 /// Enumerate everything; return the best schedule and the number of
 /// candidates visited.
+#[deprecated(note = "build a `CostEngine` and call `exhaustive_schedule_with`, \
+                     or use `tuner::Exhaustive` over a `TuningRequest`")]
 pub fn exhaustive_schedule(sim: &Simulator, model: &Model, mp_set: &[usize])
                            -> (Schedule, u64) {
     let n = model.num_layers();
-    assert!(n >= 1 && n <= 12, "exhaustive search is exponential (n={n})");
+    assert!(n >= 1 && n <= MAX_EXHAUSTIVE_LAYERS,
+            "exhaustive search is exponential (n={n})");
     assert!(!mp_set.is_empty());
+    let mut engine = CostEngine::new(sim, model);
+    let (sched, stats) = exhaustive_schedule_with(&mut engine, mp_set)
+        .expect("guards checked above");
+    (sched, stats.space_visited)
+}
+
+/// Engine-routed exhaustive enumeration: best schedule plus search stats
+/// (`space_visited` carries the Eq. 4 cross-product count; `evaluations`
+/// the block-latency queries actually requested).
+pub fn exhaustive_schedule_with(engine: &mut CostEngine, mp_set: &[usize])
+                                -> Result<(Schedule, SearchStats), ExhaustiveError> {
+    exhaustive_schedule_budgeted(engine, mp_set, None)
+}
+
+/// Exhaustive enumeration under an optional evaluation budget, checked
+/// before each block's MP sweep (a partial enumeration certifies nothing,
+/// so exceeding the budget is an error — rust/docs/DESIGN.md §8).
+pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
+                                    max_evals: Option<u64>)
+                                    -> Result<(Schedule, SearchStats), ExhaustiveError> {
+    let n = engine.model().num_layers();
+    if n < 1 || n > MAX_EXHAUSTIVE_LAYERS {
+        return Err(ExhaustiveError::ModelTooLarge { layers: n, max: MAX_EXHAUSTIVE_LAYERS });
+    }
+    if mp_set.is_empty() {
+        return Err(ExhaustiveError::EmptyMpSet);
+    }
+    let t0 = Instant::now();
+    let engine_stats0 = engine.stats();
+    let mut stats = SearchStats::default();
     let mut best_cost = f64::INFINITY;
     let mut best: Option<Schedule> = None;
-    let mut visited = 0u64;
 
     // Each mask bit k set = a cut after layer k.
     for mask in 0u32..(1 << (n - 1)) {
@@ -36,10 +110,20 @@ pub fn exhaustive_schedule(sim: &Simulator, model: &Model, mp_set: &[usize])
         let mut total = 0.0;
         let mut blocks = Vec::with_capacity(ranges.len());
         for &(i, j) in &ranges {
+            if let Some(cap) = max_evals {
+                if stats.evaluations as u64 + mp_set.len() as u64 > cap {
+                    return Err(ExhaustiveError::BudgetExhausted {
+                        spent: stats.evaluations as u64,
+                        budget: cap,
+                    });
+                }
+            }
+            stats.blocks_considered += 1;
             let mut best_mp = mp_set[0];
             let mut best_c = f64::INFINITY;
             for &mp in mp_set {
-                let c = sim.block_latency_ms(&model.layers[i..j], mp);
+                let c = engine.block_latency(i, j, mp);
+                stats.evaluations += 1;
                 if c < best_c {
                     best_c = c;
                     best_mp = mp;
@@ -48,13 +132,23 @@ pub fn exhaustive_schedule(sim: &Simulator, model: &Model, mp_set: &[usize])
             total += best_c;
             blocks.push(Block { start: i, end: j, mp: best_mp });
         }
-        visited += (mp_set.len() as u64).pow(ranges.len() as u32);
+        stats.space_visited += (mp_set.len() as u64).pow(ranges.len() as u32);
         if total < best_cost {
             best_cost = total;
             best = Some(Schedule::new(blocks));
         }
     }
-    (best.unwrap(), visited)
+    // The n >= 1 guard means mask 0 (the single-block partition) was
+    // always visited, so a best schedule exists.
+    let schedule = match best {
+        Some(s) => s,
+        None => unreachable!("n >= 1 guarantees at least one partition"),
+    };
+    let engine_stats = engine.stats();
+    stats.cache_hits = (engine_stats.hits - engine_stats0.hits) as usize;
+    stats.cache_misses = (engine_stats.misses - engine_stats0.misses) as usize;
+    stats.wall_us = t0.elapsed().as_micros() as u64;
+    Ok((schedule, stats))
 }
 
 #[cfg(test)]
@@ -62,24 +156,28 @@ mod tests {
     use super::*;
     use crate::graph::layer::ConvSpec;
     use crate::optimizer::space::enumerate_space;
-    use crate::search::brute::oracle_schedule_full;
+    use crate::search::brute::oracle_schedule_full_with;
     use crate::zoo;
+
+    fn conv_only(n: usize) -> Model {
+        let m = zoo::identical_conv_model("t", ConvSpec::same(64, 64, 28, 3), n);
+        // Strip the relus so n stays tiny and blocks equal convs.
+        Model::new(
+            "t",
+            m.input,
+            m.layers.into_iter().filter(|l| l.is_compute()).collect(),
+        )
+    }
 
     #[test]
     fn dp_matches_exhaustive_on_tiny_models() {
         let sim = Simulator::mlu100();
         let mp_set: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
         for n in [2usize, 3, 5, 8] {
-            let m = zoo::identical_conv_model(
-                "t", ConvSpec::same(64, 64, 28, 3), n);
-            // Strip the relus so n stays tiny and blocks equal convs.
-            let m = crate::graph::Model::new(
-                "t",
-                m.input,
-                m.layers.into_iter().filter(|l| l.is_compute()).collect(),
-            );
-            let (ex, _) = exhaustive_schedule(&sim, &m, &mp_set);
-            let (dp, _) = oracle_schedule_full(&sim, &m);
+            let m = conv_only(n);
+            let mut engine = CostEngine::new(&sim, &m);
+            let (ex, _) = exhaustive_schedule_with(&mut engine, &mp_set).unwrap();
+            let (dp, _) = oracle_schedule_full_with(&mut engine);
             let t_ex = sim.run_schedule(&m, &ex).total_ms;
             let t_dp = sim.run_schedule(&m, &dp).total_ms;
             assert!((t_ex - t_dp).abs() < 1e-9,
@@ -94,20 +192,131 @@ mod tests {
         let sim = Simulator::mlu100();
         let n = 6;
         let mp_set = vec![1, 2, 4, 8];
-        let m = zoo::identical_conv_model("t", ConvSpec::same(32, 32, 14, 3), n);
-        let m = crate::graph::Model::new(
-            "t",
-            m.input,
-            m.layers.into_iter().filter(|l| l.is_compute()).collect(),
-        );
-        let (_, visited) = exhaustive_schedule(&sim, &m, &mp_set);
+        let m = {
+            let m = zoo::identical_conv_model("t", ConvSpec::same(32, 32, 14, 3), n);
+            Model::new(
+                "t",
+                m.input,
+                m.layers.into_iter().filter(|l| l.is_compute()).collect(),
+            )
+        };
+        let mut engine = CostEngine::new(&sim, &m);
+        let (_, stats) = exhaustive_schedule_with(&mut engine, &mp_set).unwrap();
         let eq4 = enumerate_space(n, mp_set.len());
-        assert_eq!(visited as u128, eq4 + mp_set.len() as u128);
+        assert_eq!(stats.space_visited as u128, eq4 + mp_set.len() as u128);
+    }
+
+    #[test]
+    fn engine_routed_matches_seed_sim_direct_enumeration() {
+        // Replay the seed loop verbatim — `Simulator::block_latency_ms` per
+        // (range, mp), no engine — and pin the engine-routed result against
+        // it: same schedule, same visit count, bit for bit.
+        let sim = Simulator::mlu100();
+        let mp_set = vec![1usize, 2, 4, 8];
+        for n in [3usize, 6] {
+            let m = conv_only(n);
+            let mut best_cost = f64::INFINITY;
+            let mut best: Option<Schedule> = None;
+            let mut visited = 0u64;
+            for mask in 0u32..(1 << (n - 1)) {
+                let mut ranges = Vec::new();
+                let mut start = 0usize;
+                for k in 0..(n - 1) {
+                    if mask & (1 << k) != 0 {
+                        ranges.push((start, k + 1));
+                        start = k + 1;
+                    }
+                }
+                ranges.push((start, n));
+                let mut total = 0.0;
+                let mut blocks = Vec::with_capacity(ranges.len());
+                for &(i, j) in &ranges {
+                    let mut best_mp = mp_set[0];
+                    let mut best_c = f64::INFINITY;
+                    for &mp in &mp_set {
+                        let c = sim.block_latency_ms(&m.layers[i..j], mp);
+                        if c < best_c {
+                            best_c = c;
+                            best_mp = mp;
+                        }
+                    }
+                    total += best_c;
+                    blocks.push(Block { start: i, end: j, mp: best_mp });
+                }
+                visited += (mp_set.len() as u64).pow(ranges.len() as u32);
+                if total < best_cost {
+                    best_cost = total;
+                    best = Some(Schedule::new(blocks));
+                }
+            }
+            let reference = best.unwrap();
+            let mut engine = CostEngine::new(&sim, &m);
+            let (sched, stats) = exhaustive_schedule_with(&mut engine, &mp_set).unwrap();
+            assert_eq!(sched, reference, "n={n}");
+            assert_eq!(stats.space_visited, visited, "n={n}");
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shim_delegates_to_engine_path() {
+        let sim = Simulator::mlu100();
+        let mp_set = vec![1, 2, 4, 8];
+        let m = conv_only(4);
+        let (legacy, visited) = exhaustive_schedule(&sim, &m, &mp_set);
+        let mut engine = CostEngine::new(&sim, &m);
+        let (sched, stats) = exhaustive_schedule_with(&mut engine, &mp_set).unwrap();
+        assert_eq!(sched, legacy);
+        assert_eq!(stats.space_visited, visited);
+    }
+
+    #[test]
+    fn shared_engine_caches_overlapping_partitions() {
+        let sim = Simulator::mlu100();
+        let m = conv_only(6);
+        let mp_set = vec![1, 2, 4, 8];
+        let mut engine = CostEngine::new(&sim, &m);
+        let (_, stats) = exhaustive_schedule_with(&mut engine, &mp_set).unwrap();
+        // Distinct (block, mp) pairs: n(n+1)/2 ranges x |mp|.
+        let distinct = 6 * 7 / 2 * mp_set.len();
+        assert_eq!(stats.cache_misses, distinct);
+        assert!(stats.cache_hits > 0);
+        assert_eq!(stats.cache_hits + stats.cache_misses, stats.evaluations);
+    }
+
+    #[test]
+    fn large_model_is_an_error_not_a_panic() {
+        let sim = Simulator::mlu100();
+        let m = zoo::resnet18();
+        let mut engine = CostEngine::new(&sim, &m);
+        let err = exhaustive_schedule_with(&mut engine, &[1]).unwrap_err();
+        assert!(matches!(err, ExhaustiveError::ModelTooLarge { .. }), "{err}");
+    }
+
+    #[test]
+    fn empty_mp_set_is_an_error_not_a_panic() {
+        let sim = Simulator::mlu100();
+        let m = conv_only(3);
+        let mut engine = CostEngine::new(&sim, &m);
+        let err = exhaustive_schedule_with(&mut engine, &[]).unwrap_err();
+        assert_eq!(err, ExhaustiveError::EmptyMpSet);
+    }
+
+    #[test]
+    fn budget_aborts_enumeration() {
+        let sim = Simulator::mlu100();
+        let m = conv_only(6);
+        let mut engine = CostEngine::new(&sim, &m);
+        let err = exhaustive_schedule_budgeted(&mut engine, &[1, 2], Some(5))
+            .unwrap_err();
+        assert!(matches!(err, ExhaustiveError::BudgetExhausted { budget: 5, .. }),
+                "{err}");
     }
 
     #[test]
     #[should_panic(expected = "exponential")]
-    fn guards_large_n() {
+    #[allow(deprecated)]
+    fn legacy_shim_guards_large_n() {
         let sim = Simulator::mlu100();
         let m = zoo::resnet18();
         exhaustive_schedule(&sim, &m, &[1]);

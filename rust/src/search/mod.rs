@@ -15,12 +15,26 @@
 //! [`crate::cost::CostEngine`] (rust/docs/DESIGN.md §7); [`SearchStats`]
 //! reports the evaluation counts, cache behaviour, and wall-clock time that
 //! back the paper's Section V search-time comparison.
+//!
+//! Every backend here also implements the unified [`crate::tuner::Tuner`]
+//! trait (rust/docs/DESIGN.md §8) — prefer a
+//! [`crate::tuner::TuningRequest`] over the raw free functions; the
+//! engine-less wrappers (`oracle_schedule`, `anneal`, `exhaustive_schedule`)
+//! are deprecated shims kept for source compatibility.
 
 pub mod brute;
 pub mod exhaustive;
 pub mod annealing;
 
-pub use annealing::{anneal, AnnealConfig};
-pub use brute::{oracle_schedule, oracle_schedule_full, oracle_schedule_with,
-                SearchStats};
+pub use annealing::{anneal_budgeted, anneal_with, AnnealConfig};
+pub use brute::{full_mp_set, oracle_schedule_budgeted, oracle_schedule_constrained,
+                oracle_schedule_full_with, oracle_schedule_with, BlockRule,
+                DpBudgetExceeded, SearchStats};
+pub use exhaustive::{exhaustive_schedule_budgeted, exhaustive_schedule_with,
+                     ExhaustiveError, MAX_EXHAUSTIVE_LAYERS};
+#[allow(deprecated)]
+pub use annealing::anneal;
+#[allow(deprecated)]
+pub use brute::{oracle_schedule, oracle_schedule_full};
+#[allow(deprecated)]
 pub use exhaustive::exhaustive_schedule;

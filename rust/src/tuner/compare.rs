@@ -1,0 +1,73 @@
+//! Side-by-side tuner comparison over one shared context — the Fig. 10 /
+//! Section V "strategies and search costs" report as a first-class API.
+
+use crate::cost::CostStats;
+use crate::util::units::fmt_ms;
+use crate::util::Table;
+
+use super::outcome::{TuningError, TuningOutcome};
+use super::request::TuningContext;
+use super::Tuner;
+
+/// Outcomes of several tuners run sequentially over one shared context
+/// (later tuners see earlier tuners' block evaluations as cache hits).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// One outcome per tuner, in run order.
+    pub outcomes: Vec<TuningOutcome>,
+    /// Engine counters accumulated across the whole comparison.
+    pub engine_stats: CostStats,
+}
+
+/// Run every tuner over the shared context, in order. The first backend
+/// error aborts the comparison.
+pub fn compare(cx: &mut TuningContext<'_>, tuners: &mut [Box<dyn Tuner>])
+               -> Result<Comparison, TuningError> {
+    let mut outcomes = Vec::with_capacity(tuners.len());
+    for t in tuners.iter_mut() {
+        outcomes.push(t.tune(cx)?);
+    }
+    Ok(Comparison { outcomes, engine_stats: cx.engine.stats() })
+}
+
+impl Comparison {
+    /// The outcome with the lowest predicted latency.
+    pub fn best(&self) -> Option<&TuningOutcome> {
+        self.outcomes
+            .iter()
+            .min_by(|a, b| a.predicted_ms.total_cmp(&b.predicted_ms))
+    }
+
+    /// Render the side-by-side table plus a shared-cache summary line.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(&["tuner", "latency", "FPS", "vs best", "evals",
+                                 "computed", "hit rate", "wall"])
+            .label_first()
+            .with_title(title);
+        let best_ms = self.best().map(|o| o.predicted_ms).unwrap_or(f64::NAN);
+        for o in &self.outcomes {
+            t.row(vec![
+                o.tuner.clone(),
+                fmt_ms(o.predicted_ms),
+                format!("{:.1}", o.fps()),
+                format!("{:.2}x", o.predicted_ms / best_ms),
+                format!("{}{}", o.stats.evaluations,
+                        if o.stats.truncated { "*" } else { "" }),
+                o.stats.cache_misses.to_string(),
+                format!("{:.0}%", 100.0 * o.stats.hit_rate()),
+                format!("{} us", o.stats.wall_us),
+            ]);
+        }
+        let st = self.engine_stats;
+        let truncated = self.outcomes.iter().any(|o| o.stats.truncated);
+        format!(
+            "{t}\n{}shared cost engine: {} block queries, {} computed \
+             ({} cached, {:.1}x fewer computations than unmemoized)\n",
+            if truncated { "(* budget-truncated run)\n" } else { "" },
+            st.queries(),
+            st.misses,
+            st.hits,
+            st.block_eval_reduction()
+        )
+    }
+}

@@ -1,0 +1,72 @@
+//! The unified tuning API: one request/outcome surface over every search
+//! backend (rust/docs/DESIGN.md §8).
+//!
+//! The paper's contribution is a *joint* auto-tuning framework over the
+//! (fusion scheme, MP) space, but the crate historically exposed it as five
+//! differently-shaped entry points — Algorithm 1, the Table III strategies,
+//! the oracle DP, the annealer, and the exhaustive certifier — each with its
+//! own signature and stats reporting. This module folds them behind one
+//! abstraction:
+//!
+//! - [`TuningRequest`]: a builder describing *what* to tune — the
+//!   `(Simulator, Model)` pair, search-space constraints (MP candidate set,
+//!   block-size granularity), the annealing configuration, and
+//!   evaluation/wall-clock budgets;
+//! - [`TuningContext`]: the per-request execution state, owning one
+//!   [`crate::cost::CostEngine`] so every backend run against the same
+//!   request shares the memoized `(block, mp)` cache;
+//! - [`Tuner`]: the trait every search backend implements
+//!   (`tune(&mut TuningContext) -> Result<TuningOutcome, TuningError>`);
+//! - [`TuningOutcome`]: the uniform result — schedule, predicted latency,
+//!   and [`TuningStats`] folding the old `SearchStats`, the engine's cache
+//!   counters, and wall-clock time into one struct;
+//! - [`compare`]: run several boxed tuners over one shared context and
+//!   render the Fig. 10-style side-by-side report.
+//!
+//! The five backends are [`Algorithm1`], [`TableStrategy`], [`OracleDp`],
+//! [`Annealer`], and [`Exhaustive`]. Each is pinned bit-identical to the
+//! legacy free function it wraps (`rust/tests/tuner_parity.rs`); the legacy
+//! functions remain as `#[deprecated]` shims.
+//!
+//! ```no_run
+//! use dlfusion::prelude::*;
+//!
+//! let sim = Simulator::mlu100();
+//! let model = zoo::resnet18();
+//! let request = TuningRequest::new(&sim, &model);
+//! let outcome = request.run(&mut Algorithm1).expect("tuning");
+//! println!("{}: {} predicted FPS", model.name, outcome.fps());
+//! ```
+
+pub mod outcome;
+pub mod request;
+pub mod backends;
+pub mod compare;
+
+pub use backends::{Algorithm1, Annealer, Exhaustive, OracleDp, TableStrategy};
+pub use compare::{compare, Comparison};
+pub use outcome::{TuningError, TuningOutcome, TuningStats};
+pub use request::{Budget, TuningContext, TuningRequest};
+
+/// A search backend over the joint (fusion scheme, MP) space.
+///
+/// Contract (rust/docs/DESIGN.md §8):
+/// - the backend evaluates candidates **only** through the context's
+///   [`crate::cost::CostEngine`], so multi-tuner comparisons on one context
+///   reuse each other's block evaluations;
+/// - the returned [`TuningOutcome::predicted_ms`] is the scalar-path
+///   schedule cost — bit-identical to
+///   `Simulator::run_schedule(..).total_ms` for the returned schedule;
+/// - budget semantics: backends that can stop early and still hold a valid
+///   best-so-far result (the annealer) truncate and set
+///   [`TuningStats::truncated`]; backends whose partial state is not a
+///   usable result (the DP oracle, the exhaustive certifier) return
+///   [`TuningError::BudgetExhausted`] instead.
+pub trait Tuner {
+    /// Short backend name, used in reports and comparison tables.
+    fn name(&self) -> String;
+
+    /// Run the search through the shared context and return the uniform
+    /// outcome.
+    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError>;
+}

@@ -1,0 +1,115 @@
+//! The uniform result surface of a tuning run: outcome, stats, errors.
+
+use crate::optimizer::schedule::Schedule;
+use crate::search::brute::SearchStats;
+
+/// Unified run statistics — the old per-backend bookkeeping
+/// ([`SearchStats`], the cost engine's cache counters, ad-hoc wall-clock
+/// timers) folded into one struct every [`super::Tuner`] reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TuningStats {
+    /// Block-latency evaluations the backend requested from the engine.
+    pub evaluations: u64,
+    /// Candidate blocks examined (distinct `(start, end)` visits for the
+    /// DP/exhaustive backends; equals `evaluations` for the engine-delta
+    /// backends, where every query is one candidate block).
+    pub blocks_considered: u64,
+    /// Joint (fusion, MP) cross-product candidates certified — nonzero only
+    /// for the exhaustive backend (the Eq. 4 space comparison).
+    pub space_visited: u64,
+    /// Evaluations served from the shared engine's memoized cache.
+    pub cache_hits: u64,
+    /// Evaluations the engine actually computed.
+    pub cache_misses: u64,
+    /// Wall-clock time of the whole `tune()` call, microseconds.
+    pub wall_us: u64,
+    /// The run stopped early on a budget and returned its best-so-far
+    /// result (only backends that can: see the [`super::Tuner`] contract).
+    pub truncated: bool,
+}
+
+impl TuningStats {
+    /// Fraction of evaluations served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.evaluations == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.evaluations as f64
+        }
+    }
+
+    /// Fold a legacy [`SearchStats`] (the oracle DP / exhaustive bookkeeping
+    /// shape) into the unified form.
+    pub fn from_search(st: &SearchStats) -> TuningStats {
+        TuningStats {
+            evaluations: st.evaluations as u64,
+            blocks_considered: st.blocks_considered as u64,
+            space_visited: st.space_visited,
+            cache_hits: st.cache_hits as u64,
+            cache_misses: st.cache_misses as u64,
+            wall_us: st.wall_us,
+            truncated: false,
+        }
+    }
+}
+
+/// What a [`super::Tuner`] returns: the schedule it chose, its predicted
+/// latency, and the unified run statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningOutcome {
+    /// Name of the backend that produced this outcome.
+    pub tuner: String,
+    /// The chosen schedule.
+    pub schedule: Schedule,
+    /// Scalar-path predicted latency of `schedule`, ms — bit-identical to
+    /// `Simulator::run_schedule(..).total_ms`.
+    pub predicted_ms: f64,
+    pub stats: TuningStats,
+}
+
+impl TuningOutcome {
+    /// Predicted frames per second at batch 1 (the Fig. 10 metric).
+    pub fn fps(&self) -> f64 {
+        1000.0 / self.predicted_ms
+    }
+}
+
+/// Why a tuning run could not produce an outcome.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TuningError {
+    /// The request's MP candidate set is empty.
+    EmptyMpSet,
+    /// An MP candidate is zero or exceeds the accelerator's core count.
+    InvalidMp { mp: usize, num_cores: usize },
+    /// The exhaustive backend refuses exponential blowup past `max` layers.
+    ModelTooLarge { layers: usize, max: usize },
+    /// An evaluation budget ran out before the backend could complete (only
+    /// backends without a usable partial result report this; the annealer
+    /// truncates instead).
+    BudgetExhausted { spent: u64, budget: u64 },
+    /// The request is malformed in some other way.
+    InvalidRequest(String),
+}
+
+impl std::fmt::Display for TuningError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TuningError::EmptyMpSet => write!(f, "MP candidate set is empty"),
+            TuningError::InvalidMp { mp, num_cores } => {
+                write!(f, "MP candidate {mp} outside 1..={num_cores}")
+            }
+            TuningError::ModelTooLarge { layers, max } => write!(
+                f,
+                "exhaustive search is exponential: model has {layers} layers (max {max})"
+            ),
+            TuningError::BudgetExhausted { spent, budget } => write!(
+                f,
+                "evaluation budget exhausted: {spent} of {budget} evaluations \
+                 spent before the search could complete"
+            ),
+            TuningError::InvalidRequest(s) => write!(f, "invalid tuning request: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for TuningError {}

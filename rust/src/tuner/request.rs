@@ -1,0 +1,214 @@
+//! Building a tuning run: the declarative request and the shared context.
+
+use crate::accel::Simulator;
+use crate::cost::{CostEngine, CostStats};
+use crate::graph::Model;
+use crate::optimizer::algorithm::AlgorithmParams;
+use crate::search::annealing::AnnealConfig;
+use crate::search::brute::BlockRule;
+
+use super::compare::{compare, Comparison};
+use super::outcome::{TuningError, TuningOutcome};
+use super::Tuner;
+
+/// Evaluation / wall-clock budgets for a tuning run.
+///
+/// Semantics (rust/docs/DESIGN.md §8): `max_evaluations` caps the number of
+/// block-latency evaluations a backend may request from the shared engine
+/// (cache hits count — the budget bounds *search effort*, not compute). The
+/// annealer also honours `max_wall_us`, checked once per Metropolis move.
+/// Backends that cannot yield a valid partial result (DP, exhaustive —
+/// including Table III strategy 7, which *is* the reduced DP) return
+/// [`TuningError::BudgetExhausted`]; the annealer truncates and reports
+/// [`super::TuningStats::truncated`]. `Algorithm1` and strategies 1–6 are
+/// effectively free (O(n) walks plus a bounded sweep) and ignore budgets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Budget {
+    pub max_evaluations: Option<u64>,
+    pub max_wall_us: Option<u64>,
+}
+
+impl Budget {
+    pub fn unlimited() -> Budget {
+        Budget::default()
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.max_evaluations.is_none() && self.max_wall_us.is_none()
+    }
+}
+
+/// Declarative description of one tuning run over a `(Simulator, Model)`
+/// pair: search-space constraints, annealing configuration, Algorithm 1
+/// parameters, and budgets. Build with the fluent methods, then either
+/// [`TuningRequest::run`] one backend, [`TuningRequest::compare`] several,
+/// or take a [`TuningRequest::context`] and drive tuners by hand (every
+/// backend run against one context shares its memoized cost cache).
+#[derive(Debug, Clone)]
+pub struct TuningRequest<'a> {
+    sim: &'a Simulator,
+    model: &'a Model,
+    mp_candidates: Option<Vec<usize>>,
+    granularity: BlockRule,
+    anneal: AnnealConfig,
+    params: Option<AlgorithmParams>,
+    budget: Budget,
+}
+
+impl<'a> TuningRequest<'a> {
+    /// A request with the paper defaults: the spec's reduced MP set,
+    /// multiple-of-four block granularity, default annealing config,
+    /// `AlgorithmParams::for_spec`, and no budgets.
+    pub fn new(sim: &'a Simulator, model: &'a Model) -> TuningRequest<'a> {
+        TuningRequest {
+            sim,
+            model,
+            mp_candidates: None,
+            granularity: BlockRule::MultipleOfFour,
+            anneal: AnnealConfig::default(),
+            params: None,
+            budget: Budget::default(),
+        }
+    }
+
+    /// Constrain the MP candidate set (used by the constrained oracle DP
+    /// and the exhaustive backend). Defaults to `spec.reduced_mp_set()`.
+    pub fn mp_candidates(mut self, mps: Vec<usize>) -> Self {
+        self.mp_candidates = Some(mps);
+        self
+    }
+
+    /// Block-size granularity for the constrained oracle DP. Defaults to
+    /// the paper's multiple-of-four rule.
+    pub fn granularity(mut self, rule: BlockRule) -> Self {
+        self.granularity = rule;
+        self
+    }
+
+    /// Configuration for the [`super::Annealer`] backend.
+    pub fn anneal_config(mut self, cfg: AnnealConfig) -> Self {
+        self.anneal = cfg;
+        self
+    }
+
+    /// Override Algorithm 1's parameters (threshold, Eq. 5 weights).
+    pub fn params(mut self, params: AlgorithmParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    /// Cap block-latency evaluations (see [`Budget`]).
+    pub fn max_evaluations(mut self, n: u64) -> Self {
+        self.budget.max_evaluations = Some(n);
+        self
+    }
+
+    /// Cap wall-clock time, microseconds (see [`Budget`]).
+    pub fn max_wall_us(mut self, us: u64) -> Self {
+        self.budget.max_wall_us = Some(us);
+        self
+    }
+
+    pub fn sim(&self) -> &'a Simulator {
+        self.sim
+    }
+
+    pub fn model(&self) -> &'a Model {
+        self.model
+    }
+
+    /// Materialize the execution state: one fresh [`CostEngine`] plus the
+    /// resolved constraints. Cheap relative to any search; reuse one context
+    /// across backends to share the cache.
+    pub fn context(&self) -> TuningContext<'a> {
+        TuningContext {
+            engine: CostEngine::new(self.sim, self.model),
+            mp_candidates: self
+                .mp_candidates
+                .clone()
+                .unwrap_or_else(|| self.sim.spec.reduced_mp_set()),
+            granularity: self.granularity,
+            anneal: self.anneal,
+            params: self
+                .params
+                .unwrap_or_else(|| AlgorithmParams::for_spec(&self.sim.spec)),
+            budget: self.budget,
+        }
+    }
+
+    /// Run one backend over a fresh context.
+    pub fn run(&self, tuner: &mut dyn Tuner) -> Result<TuningOutcome, TuningError> {
+        tuner.tune(&mut self.context())
+    }
+
+    /// Run several backends over one shared context (see [`compare`]).
+    pub fn compare(&self, tuners: &mut [Box<dyn Tuner>]) -> Result<Comparison, TuningError> {
+        compare(&mut self.context(), tuners)
+    }
+}
+
+/// Per-request execution state shared by every backend run against it: the
+/// memoized cost engine plus the request's resolved constraints.
+pub struct TuningContext<'a> {
+    pub(crate) engine: CostEngine<'a>,
+    pub(crate) mp_candidates: Vec<usize>,
+    pub(crate) granularity: BlockRule,
+    pub(crate) anneal: AnnealConfig,
+    pub(crate) params: AlgorithmParams,
+    pub(crate) budget: Budget,
+}
+
+impl<'a> TuningContext<'a> {
+    /// The shared engine (e.g. to pre-warm the cache or annotate plans).
+    pub fn engine_mut(&mut self) -> &mut CostEngine<'a> {
+        &mut self.engine
+    }
+
+    /// Engine counter snapshot (accumulated across every backend run
+    /// against this context).
+    pub fn engine_stats(&self) -> CostStats {
+        self.engine.stats()
+    }
+
+    pub fn sim(&self) -> &'a Simulator {
+        self.engine.sim()
+    }
+
+    pub fn model(&self) -> &'a Model {
+        self.engine.model()
+    }
+
+    pub fn mp_candidates(&self) -> &[usize] {
+        &self.mp_candidates
+    }
+
+    pub fn granularity(&self) -> BlockRule {
+        self.granularity
+    }
+
+    pub fn anneal_config(&self) -> AnnealConfig {
+        self.anneal
+    }
+
+    pub fn params(&self) -> AlgorithmParams {
+        self.params
+    }
+
+    pub fn budget(&self) -> Budget {
+        self.budget
+    }
+
+    /// The MP candidate set, validated against the accelerator.
+    pub(crate) fn checked_mps(&self) -> Result<Vec<usize>, TuningError> {
+        if self.mp_candidates.is_empty() {
+            return Err(TuningError::EmptyMpSet);
+        }
+        let num_cores = self.engine.sim().spec.num_cores;
+        for &mp in &self.mp_candidates {
+            if mp == 0 || mp > num_cores {
+                return Err(TuningError::InvalidMp { mp, num_cores });
+            }
+        }
+        Ok(self.mp_candidates.clone())
+    }
+}

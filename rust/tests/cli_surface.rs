@@ -47,6 +47,38 @@ fn simulate_prints_table() {
 }
 
 #[test]
+fn tune_single_backends() {
+    assert_eq!(run("tune alexnet"), 0);
+    assert_eq!(run("tune alexnet --tuner oracle"), 0);
+    assert_eq!(run("tune alexnet --tuner strategy3"), 0);
+    assert_eq!(run("tune alexnet --tuner anneal --iterations 100"), 0);
+    assert_eq!(run("tune mini_cnn --tuner exhaustive"), 0);
+    assert_eq!(run("tune alexnet --tuner oracle-constrained --mps 1,2,4"), 0);
+}
+
+#[test]
+fn tune_compare_prints_side_by_side() {
+    assert_eq!(run("tune alexnet --compare --iterations 100"), 0);
+    // An explicit --tuner joins the default comparison panel.
+    assert_eq!(run("tune mini_cnn --compare --tuner exhaustive --iterations 100"), 0);
+    // Duplicating a default panel member is harmless.
+    assert_eq!(run("tune alexnet --compare --tuner anneal --iterations 100"), 0);
+}
+
+#[test]
+fn tune_rejects_bad_requests() {
+    assert_eq!(run("tune nope_net"), 1);
+    assert_eq!(run("tune alexnet --tuner bogus"), 1);
+    assert_eq!(run("tune alexnet --tuner strategy9"), 1);
+    assert_eq!(run("tune alexnet --mps abc"), 1);
+    assert_eq!(run("tune alexnet --granularity huge"), 1);
+    // Exhaustive on a large model is a clean error, not a panic.
+    assert_eq!(run("tune resnet18 --tuner exhaustive"), 1);
+    // A binding evaluation budget surfaces as an error for the DP.
+    assert_eq!(run("tune alexnet --tuner oracle --budget-evals 3"), 1);
+}
+
+#[test]
 fn search_command_reports_stats() {
     assert_eq!(run("search alexnet --iterations 100"), 0);
     assert_eq!(run("search nope_net"), 1);

@@ -9,6 +9,7 @@
 //! `Simulator::block_latency_ms_multi`, and the batched path agrees with the
 //! scalar reference to 1e-12 per MP (the seed relationship, kept as the pin
 //! now that both are fact-table walks).
+#![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
 use dlfusion::accel::Simulator;
 use dlfusion::cost::CostEngine;

@@ -1,6 +1,7 @@
 //! Integration: the optimize -> simulate pipeline across the zoo, plus
 //! property tests over the optimizer's invariants (proptest substitute —
 //! see `dlfusion::testutil::prop`).
+#![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
 use dlfusion::accel::{AcceleratorSpec, Simulator};
 use dlfusion::graph::layer::ConvSpec;

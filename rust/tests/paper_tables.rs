@@ -1,5 +1,6 @@
 //! Integration: pin the reproduction against the paper's printed numbers
 //! (Tables I–II, Eq. 4, and the Fig. 10 qualitative claims).
+#![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
 use dlfusion::accel::{AcceleratorSpec, Simulator};
 use dlfusion::graph::LayerKind;

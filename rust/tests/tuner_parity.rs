@@ -1,0 +1,215 @@
+//! Integration: the unified tuner API (rust/docs/DESIGN.md §8).
+//!
+//! Every `Tuner` backend is pinned bit-identical to the legacy free
+//! function it replaces — same schedule, same predicted latency — and the
+//! shared-context path is shown to reuse the memoized cache across
+//! backends. The deprecated shims are exercised deliberately: they are the
+//! replay references.
+#![allow(deprecated)]
+
+use dlfusion::accel::Simulator;
+use dlfusion::optimizer::{self, Strategy};
+use dlfusion::search::{self, AnnealConfig};
+use dlfusion::tuner::{Algorithm1, Annealer, Exhaustive, OracleDp, TableStrategy,
+                      Tuner, TuningError, TuningRequest};
+use dlfusion::zoo;
+
+fn sim() -> Simulator {
+    Simulator::mlu100()
+}
+
+/// A conv-only model small enough for exhaustive enumeration.
+fn tiny_model(n: usize) -> dlfusion::graph::Model {
+    let m = zoo::identical_conv_model(
+        "tiny", dlfusion::graph::ConvSpec::same(64, 64, 28, 3), n);
+    dlfusion::graph::Model::new(
+        "tiny",
+        m.input,
+        m.layers.into_iter().filter(|l| l.is_compute()).collect(),
+    )
+}
+
+#[test]
+fn algorithm1_matches_legacy_dlfusion_schedule() {
+    let s = sim();
+    for m in [zoo::resnet18(), zoo::alexnet(), zoo::vgg19()] {
+        let out = TuningRequest::new(&s, &m).run(&mut Algorithm1).unwrap();
+        let legacy = optimizer::dlfusion_schedule(&m, &s.spec);
+        assert_eq!(out.schedule, legacy, "{}", m.name);
+        assert_eq!(out.predicted_ms, s.run_schedule(&m, &legacy).total_ms,
+                   "{}", m.name);
+        assert_eq!(out.tuner, "algorithm1");
+    }
+}
+
+#[test]
+fn table_strategies_match_legacy_run_strategy() {
+    let s = sim();
+    for m in [zoo::alexnet(), zoo::resnet18()] {
+        for st in Strategy::ALL {
+            let out = TuningRequest::new(&s, &m)
+                .run(&mut TableStrategy(st))
+                .unwrap();
+            let (sched, rep) = optimizer::run_strategy(&s, &m, st);
+            assert_eq!(out.schedule, sched, "{} {st}", m.name);
+            assert_eq!(out.predicted_ms, rep.total_ms, "{} {st}", m.name);
+        }
+    }
+}
+
+#[test]
+fn oracle_dp_matches_legacy_oracle_schedule() {
+    let s = sim();
+    for m in [zoo::alexnet(), zoo::resnet18()] {
+        let out = TuningRequest::new(&s, &m).run(&mut OracleDp::reduced()).unwrap();
+        let (sched, st) = search::oracle_schedule(&s, &m);
+        assert_eq!(out.schedule, sched, "{}", m.name);
+        assert_eq!(out.predicted_ms, s.run_schedule(&m, &sched).total_ms,
+                   "{}", m.name);
+        // The unified stats carry the DP's SearchStats counters verbatim.
+        assert_eq!(out.stats.evaluations, st.evaluations as u64);
+        assert_eq!(out.stats.blocks_considered, st.blocks_considered as u64);
+        assert_eq!(out.stats.cache_hits + out.stats.cache_misses,
+                   out.stats.evaluations);
+    }
+}
+
+#[test]
+fn oracle_dp_full_matches_legacy_full_oracle() {
+    let s = sim();
+    let m = zoo::alexnet();
+    let out = TuningRequest::new(&s, &m).run(&mut OracleDp::full()).unwrap();
+    let (sched, _) = search::oracle_schedule_full(&s, &m);
+    assert_eq!(out.schedule, sched);
+}
+
+#[test]
+fn annealer_matches_legacy_anneal_under_fixed_seed() {
+    let s = sim();
+    let cfg = AnnealConfig { iterations: 300, ..Default::default() };
+    for m in [zoo::alexnet(), zoo::resnet18()] {
+        let out = TuningRequest::new(&s, &m)
+            .anneal_config(cfg)
+            .run(&mut Annealer::new())
+            .unwrap();
+        let (sched, cost) = search::anneal(&s, &m, &cfg, None);
+        assert_eq!(out.schedule, sched, "{}", m.name);
+        assert_eq!(out.predicted_ms, cost, "{}", m.name);
+        assert!(!out.stats.truncated);
+    }
+}
+
+#[test]
+fn warm_started_annealer_matches_legacy_warm_start() {
+    let s = sim();
+    let m = zoo::resnet18();
+    let cfg = AnnealConfig { iterations: 200, ..Default::default() };
+    let dlf = optimizer::dlfusion_schedule(&m, &s.spec);
+    let out = TuningRequest::new(&s, &m)
+        .anneal_config(cfg)
+        .run(&mut Annealer::from_schedule(dlf.clone()))
+        .unwrap();
+    let (sched, cost) = search::anneal(&s, &m, &cfg, Some(dlf));
+    assert_eq!(out.schedule, sched);
+    assert_eq!(out.predicted_ms, cost);
+}
+
+#[test]
+fn exhaustive_matches_legacy_enumeration() {
+    let s = sim();
+    let mp_set = vec![1, 2, 4, 8];
+    for n in [3usize, 6] {
+        let m = tiny_model(n);
+        let out = TuningRequest::new(&s, &m)
+            .mp_candidates(mp_set.clone())
+            .run(&mut Exhaustive)
+            .unwrap();
+        let (sched, visited) = search::exhaustive_schedule(&s, &m, &mp_set);
+        assert_eq!(out.schedule, sched, "n={n}");
+        assert_eq!(out.stats.space_visited, visited, "n={n}");
+        assert_eq!(out.predicted_ms, s.run_schedule(&m, &sched).total_ms,
+                   "n={n}");
+    }
+}
+
+#[test]
+fn constrained_oracle_honours_request_mps() {
+    let s = sim();
+    let m = zoo::resnet18();
+    let out = TuningRequest::new(&s, &m)
+        .mp_candidates(vec![1, 4])
+        .run(&mut OracleDp::constrained())
+        .unwrap();
+    assert!(out.schedule.blocks.iter().all(|b| b.mp == 1 || b.mp == 4),
+            "{}", out.schedule.summary());
+}
+
+#[test]
+fn compare_shares_one_engine_across_tuners() {
+    let s = sim();
+    let m = zoo::alexnet();
+    let request = TuningRequest::new(&s, &m);
+    let mut tuners: Vec<Box<dyn Tuner>> = vec![
+        Box::new(TableStrategy(Strategy::BruteForce)),
+        Box::new(OracleDp::reduced()),
+        Box::new(Algorithm1),
+    ];
+    let cmp = request.compare(&mut tuners).unwrap();
+    assert_eq!(cmp.outcomes.len(), 3);
+    // Strategy 7 *is* the reduced oracle: the second run replays the same
+    // DP over a warm cache and computes nothing new.
+    assert_eq!(cmp.outcomes[0].schedule, cmp.outcomes[1].schedule);
+    assert_eq!(cmp.outcomes[1].stats.cache_misses, 0);
+    assert!(cmp.outcomes[1].stats.cache_hits > 0);
+    // The report renders without panicking and names every tuner.
+    let report = cmp.render("parity");
+    for o in &cmp.outcomes {
+        assert!(report.contains(&o.tuner), "{report}");
+    }
+    assert!(cmp.best().unwrap().predicted_ms
+            <= cmp.outcomes[2].predicted_ms + 1e-12);
+}
+
+#[test]
+fn budget_errors_and_truncation() {
+    let s = sim();
+    let m = zoo::alexnet();
+    // The DP cannot return a partial result: budget exhaustion is an error.
+    let err = TuningRequest::new(&s, &m)
+        .max_evaluations(4)
+        .run(&mut OracleDp::reduced())
+        .unwrap_err();
+    assert!(matches!(err, TuningError::BudgetExhausted { budget: 4, .. }), "{err}");
+    // Strategy 7 is the same DP and honours the budget identically.
+    let err = TuningRequest::new(&s, &m)
+        .max_evaluations(4)
+        .run(&mut TableStrategy(Strategy::BruteForce))
+        .unwrap_err();
+    assert!(matches!(err, TuningError::BudgetExhausted { budget: 4, .. }), "{err}");
+    // The annealer truncates and still returns a valid best-so-far.
+    let out = TuningRequest::new(&s, &m)
+        .max_evaluations(m.num_layers() as u64 + 8)
+        .run(&mut Annealer::new())
+        .unwrap();
+    assert!(out.stats.truncated);
+    out.schedule.validate(m.num_layers(), s.spec.num_cores).unwrap();
+    // Exhaustive refuses large models with an error, not a panic.
+    let err = TuningRequest::new(&s, &m).run(&mut Exhaustive).unwrap_err();
+    assert!(matches!(err, TuningError::ModelTooLarge { .. }), "{err}");
+}
+
+#[test]
+fn invalid_mp_requests_are_rejected() {
+    let s = sim();
+    let m = tiny_model(3);
+    let err = TuningRequest::new(&s, &m)
+        .mp_candidates(vec![])
+        .run(&mut OracleDp::constrained())
+        .unwrap_err();
+    assert_eq!(err, TuningError::EmptyMpSet);
+    let err = TuningRequest::new(&s, &m)
+        .mp_candidates(vec![1, 64])
+        .run(&mut Exhaustive)
+        .unwrap_err();
+    assert!(matches!(err, TuningError::InvalidMp { mp: 64, .. }), "{err}");
+}
