@@ -1,0 +1,46 @@
+//! Serve a multi-model traffic mix on the simulated 32-core pool.
+//!
+//! Walks the whole serving path: allocate per-model MP under load, generate
+//! a seeded Poisson trace, run the deterministic event-driven simulation,
+//! and print the SLO report — the serving-level counterpart of the
+//! per-inference `quickstart` example.
+//!
+//! ```bash
+//! cargo run --release --example serve_mix
+//! ```
+
+use dlfusion::accel::Simulator;
+use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
+                        ModelMix, SloReport};
+use dlfusion::zoo;
+
+fn main() {
+    let sim = Simulator::mlu100();
+    // 3:1 ResNet-18 : VGG-19 traffic, a 40 ms end-to-end SLO.
+    let mix = ModelMix::weighted(vec![zoo::resnet18(), zoo::vgg19()],
+                                 vec![3.0, 1.0]);
+    let slo_ms = Some(40.0);
+
+    let plan = serving::plan_allocations(&sim, &mix, slo_ms).expect("allocation");
+    print!("{}", plan.render());
+    println!("predicted capacity on {} cores: {:.0} req/s load-aware vs \
+              {:.0} req/s single-request",
+             sim.spec.num_cores,
+             plan.predicted_capacity_rps(sim.spec.num_cores, true),
+             plan.predicted_capacity_rps(sim.spec.num_cores, false));
+
+    // Offer 80% of the load-aware capacity as Poisson traffic.
+    let rate = 0.8 * plan.predicted_capacity_rps(sim.spec.num_cores, true);
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: rate }, 2000, 7);
+    let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
+                              policy: DispatchPolicy::Fifo };
+
+    for (label, load_aware) in [("single-request", false), ("load-aware", true)] {
+        let result = serving::simulate(&cfg, &plan.services(load_aware), &trace,
+                                       None)
+            .expect("simulate");
+        println!("\n--- {label} allocation, {:.0} req/s offered ---", rate);
+        print!("{}", SloReport::from_sim(&result, slo_ms).render());
+    }
+}

@@ -1,0 +1,80 @@
+//! Serving-simulator throughput: the cost of the allocator's MP-cap sweep,
+//! the event loop's processing rate, and the capacity gap between the
+//! single-request-optimal and load-aware allocations.
+
+use dlfusion::accel::Simulator;
+use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
+use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
+                        ModelMix};
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    banner("serving", "multi-tenant serving: allocation sweep + event loop");
+    let sim = Simulator::mlu100();
+    let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
+
+    let mut b = Bench::new("serving_throughput");
+    b.time("plan_allocations_2_models", || {
+        serving::plan_allocations(&sim, &mix, Some(50.0)).expect("allocation")
+    });
+
+    let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("allocation");
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: 800.0 }, 2000, 7);
+    for policy in [DispatchPolicy::Fifo, DispatchPolicy::ShortestJobFirst] {
+        let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
+        b.time(&format!("simulate_2k_requests_{}", policy.name()), || {
+            serving::simulate(&cfg, &plan.services(true), &trace, None)
+                .expect("simulate")
+        });
+    }
+    let results = b.finish();
+    let sim_ms = results[1].mean_ms();
+    println!("\nevent loop: {:.0}k requests/s of simulator wall time",
+             2000.0 / sim_ms);
+
+    // Capacity gap: predicted and simulated, per allocation objective.
+    let mut t = Table::new(&["allocation", "capacity (pred)", "throughput (sim)",
+                             "p99 e2e", "utilization"])
+        .label_first()
+        .with_title("single-request vs load-aware allocation under load");
+    let mut csv = Csv::new(&["allocation", "predicted_capacity_rps",
+                             "sim_throughput_rps", "p99_ms", "utilization"]);
+    let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
+                              policy: DispatchPolicy::Fifo };
+    let saturating = serving::generate_trace(
+        &mix, ArrivalProcess::ClosedLoop { concurrency: 64 }, 1000, 7);
+    for (label, load_aware) in [("single-request", false), ("load-aware", true)] {
+        let r = serving::simulate(&cfg, &plan.services(load_aware), &saturating,
+                                  Some(64))
+            .expect("simulate");
+        let rep = serving::SloReport::from_sim(&r, None);
+        let p99 = rep.e2e.percentiles(&[99.0]).map_or(0.0, |p| p[0]);
+        let cap = plan.predicted_capacity_rps(sim.spec.num_cores, load_aware);
+        t.row(vec![
+            label.to_string(),
+            format!("{cap:.0} req/s"),
+            format!("{:.0} req/s", rep.throughput_rps),
+            format!("{p99:.2} ms"),
+            format!("{:.1}%", 100.0 * rep.utilization),
+        ]);
+        csv.row_display(&[
+            label.to_string(),
+            format!("{cap:.1}"),
+            format!("{:.1}", rep.throughput_rps),
+            format!("{p99:.3}"),
+            format!("{:.4}", rep.utilization),
+        ]);
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "serving_throughput").unwrap();
+
+    for m in plan.models.iter().filter(|m| m.diverged()) {
+        println!("{}: load-aware MP {} ({:.3} ms) vs single-request MP {} \
+                  ({:.3} ms)",
+                 m.name, m.load_aware.cores, m.load_aware.service_ms,
+                 m.single.cores, m.single.service_ms);
+    }
+}

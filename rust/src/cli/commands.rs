@@ -10,6 +10,7 @@ use crate::optimizer::{self, Strategy};
 use crate::perfmodel;
 use crate::runtime::Runtime;
 use crate::search::{AnnealConfig, BlockRule};
+use crate::serving;
 use crate::tuner::{self, Tuner};
 use crate::util::units::{fmt_gops, fmt_ms};
 use crate::util::Table;
@@ -40,6 +41,11 @@ COMMANDS:
     trace <model|file.dlm>       per-block timeline + utilization breakdown
         [--strategy 1..7]
     run [--requests N] [--verify] end-to-end PJRT inference on mini_cnn
+    serve-sim                    multi-tenant serving simulation: load-aware
+        [--models a,b,..]        MP co-allocation over the 32-core pool, then
+        [--arrivals poisson|closed|bursty] [--rate RPS] [--requests N]
+        [--policy fifo|sjf] [--slo-ms MS] [--seed S] [--concurrency K]
+        [--allocator load|single] a deterministic event-driven SLO report
     help                         this text
 
 MODELS: resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file)
@@ -62,6 +68,7 @@ pub fn run(args: &Args) -> i32 {
         "space" => cmd_space(args),
         "trace" => cmd_trace(args),
         "run" => cmd_run(args),
+        "serve-sim" => cmd_serve_sim(args),
         other => Err(format!("unknown command '{other}' (try 'help')")),
     };
     match result {
@@ -386,6 +393,97 @@ fn cmd_trace(args: &Args) -> Result<(), String> {
     println!("redundant compute: {:.1}% of total;  chip utilization: {:.1}%",
              100.0 * trace.redundancy_ratio(),
              100.0 * trace.utilization(&sim));
+    Ok(())
+}
+
+fn cmd_serve_sim(args: &Args) -> Result<(), String> {
+    let sim = Simulator::mlu100();
+
+    // ---- validate every flag before any tuning work ----
+    let models = zoo::by_names(args.flag("models").unwrap_or("resnet18,alexnet"))?;
+    let mix = serving::ModelMix::uniform(models);
+    let rate = args.flag_f64("rate").map_err(|e| e.to_string())?.unwrap_or(200.0);
+    let requests = args
+        .flag_usize("requests")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(256);
+    let seed = args.flag_usize("seed").map_err(|e| e.to_string())?.unwrap_or(7) as u64;
+    let slo_ms = args.flag_f64("slo-ms").map_err(|e| e.to_string())?;
+    if let Some(slo) = slo_ms {
+        if !(slo > 0.0) {
+            return Err(format!("--slo-ms must be positive, got {slo}"));
+        }
+    }
+    let policy = serving::DispatchPolicy::parse(args.flag("policy").unwrap_or("fifo"))?;
+    let concurrency = args.flag_usize("concurrency").map_err(|e| e.to_string())?;
+    if concurrency == Some(0) {
+        return Err("--concurrency must be at least 1".into());
+    }
+    let arrivals = args.flag("arrivals").unwrap_or("poisson");
+    // --rate only drives the open-loop modes, so it is validated there and
+    // merely reported as inert under closed-loop arrivals.
+    let open_rate = || -> Result<f64, String> {
+        if rate > 0.0 {
+            Ok(rate)
+        } else {
+            Err(format!("--rate must be positive, got {rate}"))
+        }
+    };
+    let process = match arrivals {
+        "poisson" => serving::ArrivalProcess::OpenPoisson { rate_rps: open_rate()? },
+        "bursty" => {
+            serving::ArrivalProcess::Bursty { rate_rps: open_rate()?, burst: 8 }
+        }
+        "closed" | "closed-loop" => serving::ArrivalProcess::ClosedLoop {
+            concurrency: concurrency.unwrap_or(2 * sim.spec.num_cores),
+        },
+        other => {
+            return Err(format!(
+                "--arrivals expects 'poisson', 'bursty' or 'closed', got '{other}'"))
+        }
+    };
+    // Warn about knobs the chosen arrival mode ignores instead of silently
+    // accepting a sweep over an inert flag.
+    let closed = matches!(process, serving::ArrivalProcess::ClosedLoop { .. });
+    if closed && args.flag("rate").is_some() {
+        println!("note: --rate is ignored for closed-loop arrivals \
+                  (population is fixed by --concurrency)");
+    } else if !closed && args.flag("concurrency").is_some() {
+        println!("note: --concurrency only applies to --arrivals closed");
+    }
+    let load_aware = match args.flag("allocator").unwrap_or("load") {
+        "load" | "load-aware" => true,
+        "single" | "single-request" => false,
+        other => {
+            return Err(format!(
+                "--allocator expects 'load' or 'single', got '{other}'"))
+        }
+    };
+
+    // ---- allocate, generate, simulate, report ----
+    let plan = serving::plan_allocations(&sim, &mix, slo_ms).map_err(|e| e.to_string())?;
+    print!("{}", plan.render());
+    println!(
+        "predicted capacity on {} cores: {:.1} req/s load-aware vs {:.1} req/s \
+         at the single-request optima",
+        sim.spec.num_cores,
+        plan.predicted_capacity_rps(sim.spec.num_cores, true),
+        plan.predicted_capacity_rps(sim.spec.num_cores, false));
+    for m in plan.models.iter().filter(|m| m.diverged()) {
+        println!(
+            "note: {} serves at MP {} under load (single-request optimum MP {})",
+            m.name, m.load_aware.cores, m.single.cores);
+    }
+
+    let trace = serving::generate_trace(&mix, process, requests, seed);
+    let cfg = serving::ClusterConfig { num_cores: sim.spec.num_cores, policy };
+    let result = serving::simulate(&cfg, &plan.services(load_aware), &trace,
+                                   process.closed_loop_population())?;
+    println!(
+        "\nsimulated {} requests ({} events, policy {}, seed {seed}, {} allocation)",
+        result.completed.len(), result.events.len(), policy.name(),
+        if load_aware { "load-aware" } else { "single-request" });
+    print!("{}", serving::SloReport::from_sim(&result, slo_ms).render());
     Ok(())
 }
 

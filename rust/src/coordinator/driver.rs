@@ -37,9 +37,14 @@ pub struct DriverReport {
 }
 
 impl DriverReport {
-    /// Measured throughput (requests / wall-clock second).
+    /// Measured throughput (requests / wall-clock second); 0.0 for an empty
+    /// or zero-duration run instead of NaN/inf.
     pub fn fps(&self) -> f64 {
-        self.counters.get("requests") as f64 / (self.wall_ms / 1e3)
+        let requests = self.counters.get("requests") as f64;
+        if requests == 0.0 || self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        requests / (self.wall_ms / 1e3)
     }
 }
 
@@ -57,9 +62,13 @@ pub struct TunedDriverReport {
 impl TunedDriverReport {
     /// Mean measured wall-clock per request over the simulator prediction
     /// (PJRT CPU measures numerics, not MLU100 speed, so this is a sanity
-    /// ratio, not an accuracy claim).
+    /// ratio, not an accuracy claim). 0.0 — never NaN/inf — when the run
+    /// served no requests or the prediction is degenerate.
     pub fn measured_over_predicted(&self) -> f64 {
-        let requests = self.report.counters.get("requests").max(1) as f64;
+        let requests = self.report.counters.get("requests") as f64;
+        if requests == 0.0 || self.predicted_ms <= 0.0 {
+            return 0.0;
+        }
         (self.report.wall_ms / requests) / self.predicted_ms
     }
 }
@@ -147,5 +156,57 @@ mod tests {
         counters.add("requests", 100);
         let r = DriverReport { latency, counters, wall_ms: 2000.0 };
         assert!((r.fps() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fps_is_zero_not_nan_for_degenerate_runs() {
+        // No requests served.
+        let empty = DriverReport {
+            latency: LatencyRecorder::new(),
+            counters: Counters::new(),
+            wall_ms: 100.0,
+        };
+        assert_eq!(empty.fps(), 0.0);
+        // Zero wall-clock (e.g. a mocked run).
+        let mut counters = Counters::new();
+        counters.add("requests", 10);
+        let instant = DriverReport {
+            latency: LatencyRecorder::new(),
+            counters,
+            wall_ms: 0.0,
+        };
+        assert_eq!(instant.fps(), 0.0);
+        assert!(instant.fps().is_finite());
+    }
+
+    #[test]
+    fn measured_over_predicted_guards_zero_denominators() {
+        let report = |requests: u64, wall_ms: f64| {
+            let mut counters = Counters::new();
+            counters.add("requests", requests);
+            DriverReport { latency: LatencyRecorder::new(), counters, wall_ms }
+        };
+        // Zero requests: no mean per request exists.
+        let t = TunedDriverReport {
+            tuner: "algorithm1".into(),
+            predicted_ms: 2.0,
+            report: report(0, 40.0),
+        };
+        assert_eq!(t.measured_over_predicted(), 0.0);
+        // Zero (or negative) prediction: ratio undefined.
+        let t = TunedDriverReport {
+            tuner: "algorithm1".into(),
+            predicted_ms: 0.0,
+            report: report(10, 40.0),
+        };
+        assert_eq!(t.measured_over_predicted(), 0.0);
+        assert!(t.measured_over_predicted().is_finite());
+        // Zero wall-clock is a 0.0 ratio, not a NaN.
+        let t = TunedDriverReport {
+            tuner: "algorithm1".into(),
+            predicted_ms: 2.0,
+            report: report(10, 0.0),
+        };
+        assert_eq!(t.measured_over_predicted(), 0.0);
     }
 }

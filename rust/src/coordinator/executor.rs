@@ -39,19 +39,38 @@ impl Engine {
                 weights.insert(i, (w, b));
             }
         }
+        // Validate the plan up front so every later lookup is infallible:
+        // a malformed plan surfaces here as a RuntimeError, not a panic on
+        // the request path.
+        let (Some(first_step), Some(last_step)) =
+            (plan.steps.first(), plan.steps.last())
+        else {
+            return Err(RuntimeError::InvalidPlan(format!(
+                "plan for '{}' has no steps", plan.model_name)));
+        };
         for step in &plan.steps {
-            runtime.prepare(&step.artifact)?;
+            for &ci in &step.conv_indices {
+                if !weights.contains_key(&ci) {
+                    return Err(RuntimeError::InvalidPlan(format!(
+                        "step '{}' of plan '{}' references conv layer {ci}, \
+                         but model '{}' has no conv there",
+                        step.artifact, plan.model_name, model.name)));
+                }
+            }
         }
         let first = runtime
             .manifest()
-            .get(&plan.steps[0].artifact)
-            .expect("plan references manifest artifacts")
+            .get(&first_step.artifact)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(first_step.artifact.clone()))?
             .clone();
         let last = runtime
             .manifest()
-            .get(&plan.steps.last().unwrap().artifact)
-            .unwrap()
+            .get(&last_step.artifact)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(last_step.artifact.clone()))?
             .clone();
+        for step in &plan.steps {
+            runtime.prepare(&step.artifact)?;
+        }
         Ok(Engine {
             runtime,
             plan,
@@ -85,27 +104,29 @@ impl Engine {
     }
 
     /// Assemble the artifact inputs for one plan step given the flowing
-    /// activation.
-    fn step_inputs(&self, step_idx: usize, activation: Tensor) -> Vec<Tensor> {
+    /// activation. `Engine::new` validated every step's conv indices, so
+    /// the error path only fires for plans mutated behind the engine's back.
+    fn step_inputs(&self, step_idx: usize, activation: Tensor)
+                   -> Result<Vec<Tensor>, RuntimeError> {
         let step = &self.plan.steps[step_idx];
         let mut inputs = Vec::with_capacity(1 + 2 * step.conv_indices.len());
         inputs.push(activation);
         for &ci in &step.conv_indices {
-            let (w, b) = self
-                .weights
-                .get(&ci)
-                .unwrap_or_else(|| panic!("no weights for conv layer {ci}"));
+            let (w, b) = self.weights.get(&ci).ok_or_else(|| {
+                RuntimeError::InvalidPlan(format!(
+                    "no weights for conv layer {ci} (step '{}')", step.artifact))
+            })?;
             inputs.push(w.clone());
             inputs.push(b.clone());
         }
-        inputs
+        Ok(inputs)
     }
 
     /// Run one inference through the *fused* plan.
     pub fn infer(&mut self, x: Tensor) -> Result<Tensor, RuntimeError> {
         let mut cur = x;
         for si in 0..self.plan.steps.len() {
-            let inputs = self.step_inputs(si, cur);
+            let inputs = self.step_inputs(si, cur)?;
             let name = self.plan.steps[si].artifact.clone();
             cur = self.runtime.execute(&name, &inputs)?;
         }
@@ -120,7 +141,7 @@ impl Engine {
         for si in 0..self.plan.steps.len() {
             let name = self.plan.steps[si].artifact.clone();
             let fused = self.plan.steps[si].conv_indices.len() > 1;
-            let inputs = self.step_inputs(si, cur);
+            let inputs = self.step_inputs(si, cur)?;
             cur = if fused {
                 self.runtime.execute_stagewise(&name, &inputs)?
             } else {

@@ -1,6 +1,6 @@
 //! Request-loop metrics: counters and latency histograms.
 
-use crate::stats::descriptive::{percentile, Summary};
+use crate::stats::descriptive::{percentile, percentile_sorted, Summary};
 
 /// Online latency recorder with percentile reporting.
 #[derive(Debug, Clone, Default)]
@@ -37,19 +37,31 @@ impl LatencyRecorder {
         }
     }
 
+    /// Batch percentile accessor: sorts the sample buffer once for the
+    /// whole list (three separate [`Self::percentile`] calls re-sort three
+    /// times). Used by [`Self::report`] and the serving SLO report.
+    pub fn percentiles(&self, ps: &[f64]) -> Option<Vec<f64>> {
+        if self.samples_ms.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(ps.iter().map(|&p| percentile_sorted(&sorted, p)).collect())
+    }
+
     /// "p50/p95/p99 mean" one-liner.
     pub fn report(&self) -> String {
         match self.summary() {
             None => "no samples".to_string(),
-            Some(s) => format!(
-                "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
-                s.n,
-                s.mean,
-                self.percentile(50.0).unwrap(),
-                self.percentile(95.0).unwrap(),
-                self.percentile(99.0).unwrap(),
-                s.max
-            ),
+            Some(s) => {
+                let ps = self
+                    .percentiles(&[50.0, 95.0, 99.0])
+                    .expect("summary implies samples");
+                format!(
+                    "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+                    s.n, s.mean, ps[0], ps[1], ps[2], s.max
+                )
+            }
         }
     }
 }
@@ -102,7 +114,23 @@ mod tests {
     fn empty_recorder() {
         let r = LatencyRecorder::new();
         assert!(r.summary().is_none());
+        assert!(r.percentiles(&[50.0]).is_none());
         assert_eq!(r.report(), "no samples");
+    }
+
+    #[test]
+    fn batch_percentiles_match_single_calls() {
+        let mut r = LatencyRecorder::new();
+        // Deliberately unsorted insertion order.
+        for v in [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0] {
+            r.record(v);
+        }
+        let ps = [0.0, 25.0, 50.0, 95.0, 99.0, 100.0];
+        let batch = r.percentiles(&ps).unwrap();
+        for (&p, &b) in ps.iter().zip(&batch) {
+            assert_eq!(b, r.percentile(p).unwrap(), "p{p}");
+        }
+        assert_eq!(r.percentiles(&[]).unwrap(), Vec::<f64>::new());
     }
 
     #[test]

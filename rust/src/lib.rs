@@ -27,6 +27,7 @@
 //! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
 //! | [`runtime`] | PJRT client: load AOT HLO-text artifacts, execute |
 //! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
+//! | [`serving`] | multi-tenant serving simulator + load-aware core allocation (rust/docs/DESIGN.md §9) |
 //! | [`stats`] | descriptive stats, regression, PCA (used for characterization) |
 //! | [`util`] | JSON, RNG, tables, CSV (offline-environment substitutes) |
 //! | [`bench_harness`] | criterion-replacement used by `rust/benches/` |
@@ -64,6 +65,7 @@ pub mod tuner;
 pub mod codegen;
 pub mod runtime;
 pub mod coordinator;
+pub mod serving;
 pub mod bench_harness;
 pub mod testutil;
 pub mod cli;
@@ -77,6 +79,8 @@ pub mod prelude {
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;
     pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};
+    pub use crate::serving::{self, AllocationPlan, ArrivalProcess, ClusterConfig,
+                             DispatchPolicy, ModelMix, SloReport};
     pub use crate::tuner::{self, compare, Algorithm1, Annealer, Budget,
                            Exhaustive, OracleDp, TableStrategy, Tuner,
                            TuningContext, TuningError, TuningOutcome,

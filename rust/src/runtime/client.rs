@@ -19,6 +19,9 @@ pub enum RuntimeError {
     Xla(String),
     Shape(String),
     UnknownArtifact(String),
+    /// An execution plan is internally inconsistent with its model or
+    /// manifest (empty step list, conv indices without weights, ...).
+    InvalidPlan(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -28,6 +31,7 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Xla(m) => write!(f, "XLA error: {m}"),
             RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
             RuntimeError::UnknownArtifact(m) => write!(f, "unknown artifact: {m}"),
+            RuntimeError::InvalidPlan(m) => write!(f, "invalid plan: {m}"),
         }
     }
 }

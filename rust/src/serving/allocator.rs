@@ -1,0 +1,302 @@
+//! Load-aware core allocation (rust/docs/DESIGN.md §9.3).
+//!
+//! The paper tunes MP and fusion for *one* inference; under heavy traffic
+//! that objective is generally wrong. Parallel efficiency is below 1 (sync
+//! and launch overheads grow with MP), so several concurrent requests at a
+//! smaller MP can beat full-MP sequential execution in aggregate
+//! throughput. The allocator sweeps MP caps per model — reusing the
+//! constrained oracle DP through one shared [`crate::cost::CostEngine`]
+//! cache per model — and exposes two operating points:
+//!
+//! - **single-request-optimal**: minimizes predicted per-request latency
+//!   (the paper's objective);
+//! - **load-aware**: minimizes *core-milliseconds per request* (`cores ×
+//!   service_ms`, the reciprocal of per-core throughput density) subject to
+//!   a per-request service SLO, which maximizes the SLO-feasible aggregate
+//!   throughput of the shared pool.
+
+use crate::accel::Simulator;
+use crate::tuner::{OracleDp, Tuner, TuningError, TuningRequest};
+use crate::util::Table;
+
+use super::cluster::ModelService;
+use super::workload::ModelMix;
+
+/// One candidate operating point for a model: every request reserves
+/// `cores` cores for the tuned schedule's predicted `service_ms`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OperatingPoint {
+    /// Cores a request occupies — the max per-block MP of the schedule the
+    /// constrained oracle tuned under this cap.
+    pub cores: usize,
+    /// Predicted per-request latency of that schedule, ms.
+    pub service_ms: f64,
+    /// The tuned schedule (summary form, for reports).
+    pub schedule: String,
+}
+
+impl OperatingPoint {
+    /// Core-milliseconds one request consumes: the allocator's load-aware
+    /// objective (smaller = more requests per core-second).
+    pub fn core_ms(&self) -> f64 {
+        self.cores as f64 * self.service_ms
+    }
+}
+
+/// A model's operating-point sweep plus the two chosen points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelAllocation {
+    pub name: String,
+    /// The model's normalized share of the offered load, captured from the
+    /// mix at planning time (so capacity math cannot be zipped against a
+    /// different mix later).
+    pub share: f64,
+    /// One point per distinct core occupancy, best service time each.
+    pub points: Vec<OperatingPoint>,
+    /// Minimum-latency point (the paper's single-request objective).
+    pub single: OperatingPoint,
+    /// Minimum core-ms point among SLO-feasible candidates.
+    pub load_aware: OperatingPoint,
+}
+
+impl ModelAllocation {
+    /// The load-aware choice differs from the single-request optimum.
+    pub fn diverged(&self) -> bool {
+        self.single.cores != self.load_aware.cores
+    }
+}
+
+/// The allocator's output across a model mix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllocationPlan {
+    pub models: Vec<ModelAllocation>,
+    pub slo_ms: Option<f64>,
+}
+
+impl AllocationPlan {
+    /// The per-model services the cluster simulates: load-aware points when
+    /// `load_aware`, single-request-optimal points otherwise.
+    pub fn services(&self, load_aware: bool) -> Vec<ModelService> {
+        self.models
+            .iter()
+            .map(|m| {
+                let p = if load_aware { &m.load_aware } else { &m.single };
+                ModelService {
+                    name: m.name.clone(),
+                    cores: p.cores,
+                    service_ms: p.service_ms,
+                }
+            })
+            .collect()
+    }
+
+    /// Predicted maximum sustainable aggregate rate, requests/second: the
+    /// pool's core-milliseconds per second divided by the mix-weighted
+    /// core-milliseconds per request (0 when the plan is empty). Shares are
+    /// the ones captured from the planning-time mix.
+    pub fn predicted_capacity_rps(&self, num_cores: usize,
+                                  load_aware: bool) -> f64 {
+        let mut core_ms_per_req = 0.0;
+        for m in &self.models {
+            let p = if load_aware { &m.load_aware } else { &m.single };
+            core_ms_per_req += m.share * p.core_ms();
+        }
+        if core_ms_per_req <= 0.0 {
+            return 0.0;
+        }
+        num_cores as f64 * 1000.0 / core_ms_per_req
+    }
+
+    /// Render the per-model comparison table.
+    pub fn render(&self) -> String {
+        let title = match self.slo_ms {
+            Some(slo) => format!(
+                "core allocation — single-request vs load-aware (SLO {slo} ms)"),
+            None => "core allocation — single-request vs load-aware".to_string(),
+        };
+        let mut t = Table::new(&["model", "MP*", "lat*", "MP", "lat",
+                                 "core-ms*", "core-ms", "diverged"])
+            .label_first()
+            .with_title(&title);
+        for m in &self.models {
+            t.row(vec![
+                m.name.clone(),
+                m.single.cores.to_string(),
+                format!("{:.3}", m.single.service_ms),
+                m.load_aware.cores.to_string(),
+                format!("{:.3}", m.load_aware.service_ms),
+                format!("{:.2}", m.single.core_ms()),
+                format!("{:.2}", m.load_aware.core_ms()),
+                if m.diverged() { "yes".into() } else { "-".to_string() },
+            ]);
+        }
+        let mut out = format!("{t}\n(* = single-request-optimal; lat in ms)\n");
+        for m in &self.models {
+            out.push_str(&format!("{}: serves {}\n", m.name,
+                                  m.load_aware.schedule));
+        }
+        out
+    }
+}
+
+/// Sweep each model's MP caps through the constrained oracle DP and pick
+/// both operating points. One `TuningRequest` context per model: the caps
+/// share the memoized `(block, mp)` cache, so the whole sweep costs barely
+/// more than one uncapped search.
+pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
+                        slo_ms: Option<f64>) -> Result<AllocationPlan, TuningError> {
+    let caps = sim.spec.reduced_mp_set();
+    let mut models = Vec::new();
+    for (mi, model) in mix.models.iter().enumerate() {
+        let request = TuningRequest::new(sim, model);
+        let mut cx = request.context();
+        let mut points: Vec<OperatingPoint> = Vec::new();
+        for &cap in &caps {
+            let mps: Vec<usize> =
+                caps.iter().copied().filter(|&m| m <= cap).collect();
+            cx.set_mp_candidates(mps);
+            let out = OracleDp::constrained().tune(&mut cx)?;
+            // The request reserves only the cores its schedule ever uses.
+            let cores = out
+                .schedule
+                .blocks
+                .iter()
+                .map(|b| b.mp)
+                .max()
+                .unwrap_or(1);
+            let point = OperatingPoint {
+                cores,
+                service_ms: out.predicted_ms,
+                schedule: out.schedule.summary(),
+            };
+            match points.iter().position(|p| p.cores == cores) {
+                Some(i) => {
+                    if point.service_ms < points[i].service_ms {
+                        points[i] = point;
+                    }
+                }
+                None => points.push(point),
+            }
+        }
+
+        let mut single: Option<&OperatingPoint> = None;
+        for p in &points {
+            let better = match single {
+                None => true,
+                Some(b) => (p.service_ms, p.cores) < (b.service_ms, b.cores),
+            };
+            if better {
+                single = Some(p);
+            }
+        }
+        let single = single.expect("cap sweep yields at least one point").clone();
+
+        let mut load_aware: Option<&OperatingPoint> = None;
+        for p in &points {
+            if let Some(slo) = slo_ms {
+                if p.service_ms > slo {
+                    continue;
+                }
+            }
+            let better = match load_aware {
+                None => true,
+                Some(b) => (p.core_ms(), p.service_ms) < (b.core_ms(), b.service_ms),
+            };
+            if better {
+                load_aware = Some(p);
+            }
+        }
+        // No point meets the SLO at all: fall back to the fastest point.
+        let load_aware = load_aware.cloned().unwrap_or_else(|| single.clone());
+
+        models.push(ModelAllocation {
+            name: model.name.clone(),
+            share: mix.share(mi),
+            points,
+            single,
+            load_aware,
+        });
+    }
+    Ok(AllocationPlan { models, slo_ms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn sweep_points_are_consistent() {
+        let sim = Simulator::mlu100();
+        let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+        let plan = plan_allocations(&sim, &mix, None).unwrap();
+        assert_eq!(plan.models.len(), 1);
+        let m = &plan.models[0];
+        assert!(!m.points.is_empty());
+        // Occupancies are distinct and within the pool.
+        for (i, p) in m.points.iter().enumerate() {
+            assert!(p.cores >= 1 && p.cores <= sim.spec.num_cores);
+            assert!(p.service_ms > 0.0);
+            assert!(m.points[i + 1..].iter().all(|q| q.cores != p.cores));
+        }
+        // The chosen points obey their objectives over the sweep.
+        for p in &m.points {
+            assert!(m.single.service_ms <= p.service_ms);
+            assert!(m.load_aware.core_ms() <= p.core_ms() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn load_aware_never_costs_more_core_ms() {
+        let sim = Simulator::mlu100();
+        let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+        let plan = plan_allocations(&sim, &mix, None).unwrap();
+        for m in &plan.models {
+            assert!(m.load_aware.core_ms() <= m.single.core_ms() + 1e-12,
+                    "{}: {} vs {}", m.name, m.load_aware.core_ms(),
+                    m.single.core_ms());
+        }
+        // Capacity at the load-aware points is at least the single-request
+        // capacity (equal only when nothing diverged).
+        let cap_load = plan.predicted_capacity_rps(sim.spec.num_cores, true);
+        let cap_single = plan.predicted_capacity_rps(sim.spec.num_cores, false);
+        assert!(cap_load >= cap_single);
+        assert!(cap_load > 0.0);
+    }
+
+    #[test]
+    fn slo_constrains_the_load_aware_point() {
+        let sim = Simulator::mlu100();
+        let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+        let free = plan_allocations(&sim, &mix, None).unwrap();
+        let m = &free.models[0];
+        // A deliberately tight SLO — halfway between the fastest and the
+        // unconstrained load-aware point — must push the choice to a faster
+        // (more-cores) point when those differ.
+        if m.load_aware.service_ms > m.single.service_ms {
+            let slo = (m.single.service_ms + m.load_aware.service_ms) / 2.0;
+            let tight = plan_allocations(&sim, &mix, Some(slo)).unwrap();
+            let tm = &tight.models[0];
+            assert!(tm.load_aware.service_ms <= slo);
+            assert!(tm.load_aware.core_ms() >= m.load_aware.core_ms() - 1e-12);
+        }
+        // An impossible SLO falls back to the fastest point.
+        let impossible = plan_allocations(&sim, &mix, Some(1e-9)).unwrap();
+        assert_eq!(impossible.models[0].load_aware,
+                   impossible.models[0].single);
+    }
+
+    #[test]
+    fn services_and_render() {
+        let sim = Simulator::mlu100();
+        let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+        let plan = plan_allocations(&sim, &mix, Some(100.0)).unwrap();
+        let svcs = plan.services(true);
+        assert_eq!(svcs.len(), 2);
+        assert_eq!(svcs[0].name, "alexnet");
+        assert!(svcs.iter().all(|s| s.cores >= 1 && s.service_ms > 0.0));
+        let text = plan.render();
+        assert!(text.contains("alexnet"), "{text}");
+        assert!(text.contains("SLO 100"), "{text}");
+    }
+}

@@ -1,0 +1,407 @@
+//! The event-driven core-pool simulator (rust/docs/DESIGN.md §9.2).
+//!
+//! A pool of `num_cores` identical cores serves a request trace: each
+//! request occupies its model's allocated core count for the allocated
+//! operating point's predicted service time (the `CostEngine`-tuned latency
+//! — see [`super::allocator`]). Two event kinds drive the clock — arrivals
+//! (from the seeded trace) and completions (a deterministic min-heap keyed
+//! by `(finish time, start sequence)`). The whole simulation is a pure
+//! function of its inputs: no wall clock, no global RNG, ties broken by
+//! explicit sequence numbers.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::queue::{DispatchPolicy, QueueSet, QueuedRequest};
+use super::workload::Request;
+
+/// The per-model operating point the cluster serves: every request for the
+/// model occupies `cores` cores for `service_ms` milliseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelService {
+    pub name: String,
+    pub cores: usize,
+    pub service_ms: f64,
+}
+
+/// Scenario configuration for one simulation run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    pub num_cores: usize,
+    pub policy: DispatchPolicy,
+}
+
+/// What happened at one simulated instant (the pinned determinism surface:
+/// two runs with the same inputs produce identical event vectors).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimEvent {
+    pub time_ms: f64,
+    pub kind: SimEventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEventKind {
+    Arrive { id: u64, model: usize },
+    Start { id: u64, cores: usize },
+    Finish { id: u64, free_cores: usize },
+}
+
+/// Per-request completion record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub model: usize,
+    pub arrival_ms: f64,
+    pub start_ms: f64,
+    pub finish_ms: f64,
+    pub cores: usize,
+}
+
+impl CompletedRequest {
+    /// End-to-end latency: arrival to finish.
+    pub fn e2e_ms(&self) -> f64 {
+        self.finish_ms - self.arrival_ms
+    }
+
+    /// Time spent waiting for cores.
+    pub fn queue_ms(&self) -> f64 {
+        self.start_ms - self.arrival_ms
+    }
+
+    /// Time spent running.
+    pub fn service_ms(&self) -> f64 {
+        self.finish_ms - self.start_ms
+    }
+}
+
+/// Outcome of one run: the event trace in simulated-time order plus the
+/// completion records in finish order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    pub events: Vec<SimEvent>,
+    pub completed: Vec<CompletedRequest>,
+    pub num_cores: usize,
+}
+
+impl SimResult {
+    /// Simulated span from t=0 to the last completion.
+    pub fn makespan_ms(&self) -> f64 {
+        self.completed.iter().map(|c| c.finish_ms).fold(0.0, f64::max)
+    }
+
+    /// Core-milliseconds actually occupied by running requests.
+    pub fn busy_core_ms(&self) -> f64 {
+        self.completed
+            .iter()
+            .map(|c| c.service_ms() * c.cores as f64)
+            .sum()
+    }
+
+    /// Fraction of the pool's core-time spent serving (0 when nothing ran).
+    pub fn utilization(&self) -> f64 {
+        let span = self.makespan_ms();
+        if span <= 0.0 || self.num_cores == 0 {
+            return 0.0;
+        }
+        self.busy_core_ms() / (span * self.num_cores as f64)
+    }
+
+    /// Aggregate completions per second of simulated time (0 when nothing
+    /// completed).
+    pub fn throughput_rps(&self) -> f64 {
+        let span = self.makespan_ms();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.completed.len() as f64 / (span / 1000.0)
+    }
+}
+
+/// A running request on the completion heap. `BinaryHeap` is a max-heap, so
+/// `Ord` is reversed to pop the *earliest* `(finish_ms, seq)` first; `seq`
+/// is the start order, making equal-time pops deterministic.
+#[derive(Debug, Clone, Copy)]
+struct Completion {
+    finish_ms: f64,
+    seq: u64,
+    start_ms: f64,
+    req: QueuedRequest,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Completion {}
+
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .finish_ms
+            .total_cmp(&self.finish_ms)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Run the discrete-event simulation of `trace` over the core pool.
+///
+/// `closed_loop`: when `Some(k)`, only the first `k` trace entries arrive up
+/// front; each completion injects the next backlogged entry at the
+/// completion instant (a fixed-population closed loop). Completions at the
+/// same instant as an arrival are processed first, so freed cores are
+/// visible to the arrival's dispatch.
+pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
+                trace: &[Request], closed_loop: Option<usize>)
+                -> Result<SimResult, String> {
+    if cfg.num_cores == 0 {
+        return Err("cluster has no cores".into());
+    }
+    for s in services {
+        if s.cores == 0 || s.cores > cfg.num_cores {
+            return Err(format!(
+                "model '{}' allocated {} cores outside 1..={}",
+                s.name, s.cores, cfg.num_cores));
+        }
+        if !(s.service_ms > 0.0) {
+            return Err(format!(
+                "model '{}' has non-positive service time {} ms",
+                s.name, s.service_ms));
+        }
+    }
+    for w in trace.windows(2) {
+        if w[1].arrival_ms < w[0].arrival_ms {
+            return Err("trace is not sorted by arrival time".into());
+        }
+    }
+    if let Some(r) = trace.iter().find(|r| r.model >= services.len()) {
+        return Err(format!(
+            "request {} references model {} but only {} are allocated",
+            r.id, r.model, services.len()));
+    }
+    // Closed-loop injections append at completion instants, which stay
+    // ordered only because every closed-loop trace arrives at one instant
+    // (what `generate_trace` emits for `ArrivalProcess::ClosedLoop`).
+    if closed_loop.is_some()
+        && trace.windows(2).any(|w| w[1].arrival_ms != w[0].arrival_ms)
+    {
+        return Err("closed-loop simulation expects a simultaneous-arrival \
+                    trace (generate with ArrivalProcess::ClosedLoop)"
+            .into());
+    }
+
+    let mut arrivals: VecDeque<Request> = trace.iter().copied().collect();
+    let mut backlog: VecDeque<Request> = VecDeque::new();
+    if let Some(k) = closed_loop {
+        let k = k.max(1);
+        if arrivals.len() > k {
+            backlog = arrivals.split_off(k);
+        }
+    }
+
+    let mut events = Vec::new();
+    let mut completed = Vec::new();
+    let mut queues = QueueSet::new(services.len());
+    let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
+    let mut free = cfg.num_cores;
+    let mut seq: u64 = 0;
+
+    loop {
+        let next_arrival = arrivals.front().map(|r| r.arrival_ms);
+        let next_finish = heap.peek().map(|c| c.finish_ms);
+        // Completions first on ties: free cores before dispatching.
+        let take_finish = match (next_arrival, next_finish) {
+            (None, None) => break,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some(a), Some(f)) => f <= a,
+        };
+        let now = if take_finish {
+            let c = heap.pop().unwrap();
+            free += c.req.cores;
+            events.push(SimEvent {
+                time_ms: c.finish_ms,
+                kind: SimEventKind::Finish { id: c.req.id, free_cores: free },
+            });
+            completed.push(CompletedRequest {
+                id: c.req.id,
+                model: c.req.model,
+                arrival_ms: c.req.arrival_ms,
+                start_ms: c.start_ms,
+                finish_ms: c.finish_ms,
+                cores: c.req.cores,
+            });
+            if closed_loop.is_some() {
+                if let Some(mut nxt) = backlog.pop_front() {
+                    nxt.arrival_ms = c.finish_ms;
+                    arrivals.push_back(nxt);
+                }
+            }
+            c.finish_ms
+        } else {
+            let r = arrivals.pop_front().unwrap();
+            events.push(SimEvent {
+                time_ms: r.arrival_ms,
+                kind: SimEventKind::Arrive { id: r.id, model: r.model },
+            });
+            let svc = &services[r.model];
+            queues.push(QueuedRequest {
+                id: r.id,
+                model: r.model,
+                arrival_ms: r.arrival_ms,
+                cores: svc.cores,
+                service_ms: svc.service_ms,
+            });
+            r.arrival_ms
+        };
+
+        // Work-conserving dispatch at the current instant.
+        while let Some(q) = queues.pop_fitting(cfg.policy, free) {
+            free -= q.cores;
+            events.push(SimEvent {
+                time_ms: now,
+                kind: SimEventKind::Start { id: q.id, cores: q.cores },
+            });
+            seq += 1;
+            heap.push(Completion {
+                finish_ms: now + q.service_ms,
+                seq,
+                start_ms: now,
+                req: q,
+            });
+        }
+    }
+
+    debug_assert!(queues.is_empty(), "validated requests cannot strand");
+    debug_assert_eq!(free, cfg.num_cores);
+    Ok(SimResult { events, completed, num_cores: cfg.num_cores })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc(name: &str, cores: usize, ms: f64) -> ModelService {
+        ModelService { name: name.into(), cores, service_ms: ms }
+    }
+
+    fn req(id: u64, model: usize, arrival: f64) -> Request {
+        Request { id, model, arrival_ms: arrival }
+    }
+
+    #[test]
+    fn two_core_pool_runs_pair_then_queues_third() {
+        let cfg = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
+        let services = [svc("m", 1, 10.0)];
+        let trace = [req(0, 0, 0.0), req(1, 0, 0.0), req(2, 0, 0.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r.completed.len(), 3);
+        // 0 and 1 run immediately; 2 waits for the first finish at 10 ms.
+        assert_eq!(r.completed[2].id, 2);
+        assert_eq!(r.completed[2].start_ms, 10.0);
+        assert_eq!(r.completed[2].finish_ms, 20.0);
+        assert_eq!(r.completed[2].queue_ms(), 10.0);
+        assert_eq!(r.makespan_ms(), 20.0);
+        // 30 core-ms busy over 2 cores * 20 ms.
+        assert!((r.utilization() - 0.75).abs() < 1e-12);
+        assert!((r.throughput_rps() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn event_trace_is_ordered_and_deterministic() {
+        let cfg = ClusterConfig { num_cores: 4, policy: DispatchPolicy::Fifo };
+        let services = [svc("a", 2, 7.0), svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 1.0), req(2, 0, 1.0),
+                     req(3, 1, 2.0)];
+        let r1 = simulate(&cfg, &services, &trace, None).unwrap();
+        let r2 = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r1, r2);
+        for w in r1.events.windows(2) {
+            assert!(w[1].time_ms >= w[0].time_ms, "{:?}", r1.events);
+        }
+        // Every request arrives, starts, and finishes exactly once.
+        let count = |f: &dyn Fn(&SimEventKind) -> bool| {
+            r1.events.iter().filter(|e| f(&e.kind)).count()
+        };
+        assert_eq!(count(&|k| matches!(k, SimEventKind::Arrive { .. })), 4);
+        assert_eq!(count(&|k| matches!(k, SimEventKind::Start { .. })), 4);
+        assert_eq!(count(&|k| matches!(k, SimEventKind::Finish { .. })), 4);
+    }
+
+    #[test]
+    fn completion_frees_cores_before_simultaneous_arrival() {
+        let cfg = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
+        let services = [svc("m", 2, 10.0)];
+        // Second request arrives exactly when the first finishes: it must
+        // start immediately (cores freed first), not queue.
+        let trace = [req(0, 0, 0.0), req(1, 0, 10.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r.completed[1].queue_ms(), 0.0);
+        assert_eq!(r.completed[1].finish_ms, 20.0);
+    }
+
+    #[test]
+    fn narrow_requests_overtake_a_blocked_wide_head() {
+        let cfg = ClusterConfig { num_cores: 4, policy: DispatchPolicy::Fifo };
+        let services = [svc("wide", 3, 10.0), svc("narrow", 1, 10.0)];
+        // While request 0 runs (3 cores), wide request 1 can't fit in the
+        // one free core but narrow request 2 can.
+        let trace = [req(0, 0, 0.0), req(1, 0, 1.0), req(2, 1, 2.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        let by_id = |id: u64| *r.completed.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(by_id(2).start_ms, 2.0, "narrow dispatches on arrival");
+        assert_eq!(by_id(1).start_ms, 10.0, "wide waits for request 0");
+    }
+
+    #[test]
+    fn closed_loop_keeps_population_and_injects_on_completion() {
+        let cfg = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
+        let services = [svc("m", 1, 5.0)];
+        let trace: Vec<Request> = (0..6).map(|i| req(i, 0, 0.0)).collect();
+        let r = simulate(&cfg, &services, &trace, Some(2)).unwrap();
+        assert_eq!(r.completed.len(), 6);
+        // Population 2 on 2 cores: perfectly pipelined, zero queueing.
+        assert!(r.completed.iter().all(|c| c.queue_ms() == 0.0), "{r:?}");
+        assert_eq!(r.makespan_ms(), 15.0);
+        assert!((r.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_invalid_inputs() {
+        let cfg = ClusterConfig { num_cores: 4, policy: DispatchPolicy::Fifo };
+        let err = simulate(&cfg, &[svc("m", 8, 1.0)], &[req(0, 0, 0.0)], None)
+            .unwrap_err();
+        assert!(err.contains("outside"), "{err}");
+        let err = simulate(&cfg, &[svc("m", 1, 0.0)], &[req(0, 0, 0.0)], None)
+            .unwrap_err();
+        assert!(err.contains("non-positive"), "{err}");
+        let err = simulate(&cfg, &[svc("m", 1, 1.0)], &[req(0, 3, 0.0)], None)
+            .unwrap_err();
+        assert!(err.contains("references model"), "{err}");
+        let err = simulate(&cfg, &[svc("m", 1, 1.0)],
+                           &[req(0, 0, 5.0), req(1, 0, 1.0)], None)
+            .unwrap_err();
+        assert!(err.contains("sorted"), "{err}");
+        // A closed loop over a spread-out trace is rejected (injection
+        // order would not be time-ordered).
+        let err = simulate(&cfg, &[svc("m", 1, 1.0)],
+                           &[req(0, 0, 0.0), req(1, 0, 5.0)], Some(1))
+            .unwrap_err();
+        assert!(err.contains("simultaneous"), "{err}");
+    }
+
+    #[test]
+    fn empty_trace_is_an_empty_result() {
+        let cfg = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
+        let r = simulate(&cfg, &[svc("m", 1, 1.0)], &[], None).unwrap();
+        assert!(r.events.is_empty());
+        assert_eq!(r.throughput_rps(), 0.0);
+        assert_eq!(r.utilization(), 0.0);
+    }
+}

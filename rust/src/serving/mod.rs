@@ -1,0 +1,57 @@
+//! Multi-tenant serving: a deterministic discrete-event simulator over the
+//! MLU core pool plus a load-aware core allocator (rust/docs/DESIGN.md §9).
+//!
+//! The paper's tuner optimizes *one* inference; the ROADMAP's north star is
+//! serving heavy traffic. This module closes that gap:
+//!
+//! - [`workload`]: seeded arrival traces (closed-loop, open-loop Poisson,
+//!   bursty) over weighted multi-model request mixes from the zoo;
+//! - [`queue`] + [`cluster`]: an event-driven pool of
+//!   [`crate::accel::AcceleratorSpec::num_cores`] cores where each request
+//!   occupies its model's allocated MP for the `CostEngine`-predicted
+//!   latency of its tuned schedule, under pluggable dispatch policies
+//!   (FIFO, shortest-job-first) with per-model queues;
+//! - [`allocator`]: sweeps MP caps per model through the constrained
+//!   oracle DP (one shared cost-engine cache per model) and picks the
+//!   throughput-optimal operating point under the offered load, reporting
+//!   when it diverges from the single-request optimum;
+//! - [`report`]: the SLO report — p50/p95/p99 end-to-end latency split
+//!   into queueing vs service time, core utilization, and goodput under a
+//!   deadline — built on the coordinator's [`crate::coordinator::metrics`]
+//!   primitives.
+//!
+//! Everything is a pure function of `(mix, process, seed, allocation)`:
+//! same seed ⇒ identical event trace and report. The CLI front-end is
+//! `dlfusion serve-sim`.
+//!
+//! ```no_run
+//! use dlfusion::accel::Simulator;
+//! use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
+//!                         ModelMix, SloReport};
+//! use dlfusion::zoo;
+//!
+//! let sim = Simulator::mlu100();
+//! let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
+//! let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("plan");
+//! let trace = serving::generate_trace(
+//!     &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 1000, 7);
+//! let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
+//!                           policy: DispatchPolicy::Fifo };
+//! let result = serving::simulate(&cfg, &plan.services(true), &trace, None)
+//!     .expect("simulate");
+//! println!("{}", SloReport::from_sim(&result, Some(50.0)).render());
+//! ```
+
+pub mod workload;
+pub mod queue;
+pub mod cluster;
+pub mod allocator;
+pub mod report;
+
+pub use allocator::{plan_allocations, AllocationPlan, ModelAllocation,
+                    OperatingPoint};
+pub use cluster::{simulate, ClusterConfig, CompletedRequest, ModelService,
+                  SimEvent, SimEventKind, SimResult};
+pub use queue::{DispatchPolicy, QueueSet, QueuedRequest};
+pub use report::SloReport;
+pub use workload::{generate_trace, ArrivalProcess, ModelMix, Request};

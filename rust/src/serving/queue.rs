@@ -1,0 +1,190 @@
+//! Per-model request queues and the dispatch policies over them
+//! (rust/docs/DESIGN.md §9.2).
+
+use std::collections::VecDeque;
+
+/// A request waiting for cores, with its resolved operating point (cores to
+/// occupy and the predicted service time at that core count).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub model: usize,
+    pub arrival_ms: f64,
+    /// Cores this request occupies while running.
+    pub cores: usize,
+    /// Predicted service time at that core count, ms.
+    pub service_ms: f64,
+}
+
+/// Which queued request runs next when cores free up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Earliest arrival first (across all model queues).
+    Fifo,
+    /// Smallest predicted service time first.
+    ShortestJobFirst,
+}
+
+impl DispatchPolicy {
+    /// Parse a CLI policy name.
+    pub fn parse(name: &str) -> Result<DispatchPolicy, String> {
+        match name {
+            "fifo" => Ok(DispatchPolicy::Fifo),
+            "sjf" | "shortest-job-first" => Ok(DispatchPolicy::ShortestJobFirst),
+            other => Err(format!(
+                "unknown dispatch policy '{other}' (known: fifo, sjf)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::Fifo => "fifo",
+            DispatchPolicy::ShortestJobFirst => "sjf",
+        }
+    }
+}
+
+/// Per-model FIFO queues with a policy-driven cross-queue head pick.
+///
+/// Within a model, requests always dispatch in arrival order; across models
+/// the policy ranks the queue *heads* — FIFO by earliest arrival, SJF by
+/// shortest predicted service — with `(arrival, id)` as the deterministic
+/// tie-break. A head needing more cores than are currently free is skipped
+/// so the pool stays work-conserving (documented as fit-filtered dispatch;
+/// a blocked wide request does not idle cores a narrow one could use).
+#[derive(Debug, Clone, Default)]
+pub struct QueueSet {
+    queues: Vec<VecDeque<QueuedRequest>>,
+}
+
+impl QueueSet {
+    pub fn new(num_models: usize) -> QueueSet {
+        QueueSet { queues: (0..num_models).map(|_| VecDeque::new()).collect() }
+    }
+
+    pub fn push(&mut self, r: QueuedRequest) {
+        self.queues[r.model].push_back(r);
+    }
+
+    /// Total queued requests across every model.
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Queued requests for one model.
+    pub fn len_for(&self, model: usize) -> usize {
+        self.queues[model].len()
+    }
+
+    /// Pop the best-ranked queue head that fits in `free_cores`, or `None`
+    /// if every nonempty queue's head needs more cores than are free.
+    pub fn pop_fitting(&mut self, policy: DispatchPolicy,
+                       free_cores: usize) -> Option<QueuedRequest> {
+        // (model, rank key) of the best fitting head; keys are copies so no
+        // borrow outlives the scan.
+        let mut best: Option<(usize, (f64, f64, u64))> = None;
+        for (m, q) in self.queues.iter().enumerate() {
+            let Some(head) = q.front() else { continue };
+            if head.cores > free_cores {
+                continue;
+            }
+            let key = match policy {
+                DispatchPolicy::Fifo => (head.arrival_ms, 0.0, head.id),
+                DispatchPolicy::ShortestJobFirst => {
+                    (head.service_ms, head.arrival_ms, head.id)
+                }
+            };
+            let better = match best {
+                None => true,
+                Some((_, best_key)) => key < best_key,
+            };
+            if better {
+                best = Some((m, key));
+            }
+        }
+        let (m, _) = best?;
+        self.queues[m].pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: usize, arrival: f64, cores: usize,
+           service: f64) -> QueuedRequest {
+        QueuedRequest { id, model, arrival_ms: arrival, cores, service_ms: service }
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(DispatchPolicy::parse("fifo").unwrap(), DispatchPolicy::Fifo);
+        assert_eq!(DispatchPolicy::parse("sjf").unwrap(),
+                   DispatchPolicy::ShortestJobFirst);
+        assert_eq!(DispatchPolicy::parse("shortest-job-first").unwrap(),
+                   DispatchPolicy::ShortestJobFirst);
+        assert!(DispatchPolicy::parse("lifo").is_err());
+        assert_eq!(DispatchPolicy::Fifo.name(), "fifo");
+    }
+
+    #[test]
+    fn fifo_picks_earliest_arrival_across_models() {
+        let mut qs = QueueSet::new(2);
+        qs.push(req(0, 0, 5.0, 1, 10.0));
+        qs.push(req(1, 1, 3.0, 1, 50.0));
+        let p = qs.pop_fitting(DispatchPolicy::Fifo, 32).unwrap();
+        assert_eq!(p.id, 1);
+        assert_eq!(qs.len(), 1);
+    }
+
+    #[test]
+    fn sjf_picks_shortest_service() {
+        let mut qs = QueueSet::new(2);
+        qs.push(req(0, 0, 1.0, 1, 50.0));
+        qs.push(req(1, 1, 2.0, 1, 10.0));
+        let p = qs.pop_fitting(DispatchPolicy::ShortestJobFirst, 32).unwrap();
+        assert_eq!(p.id, 1);
+    }
+
+    #[test]
+    fn ties_break_on_arrival_then_id() {
+        let mut qs = QueueSet::new(2);
+        qs.push(req(7, 0, 1.0, 1, 10.0));
+        qs.push(req(3, 1, 1.0, 1, 10.0));
+        let p = qs.pop_fitting(DispatchPolicy::ShortestJobFirst, 32).unwrap();
+        assert_eq!(p.id, 3);
+    }
+
+    #[test]
+    fn oversized_head_is_skipped_not_blocking() {
+        let mut qs = QueueSet::new(2);
+        qs.push(req(0, 0, 1.0, 16, 10.0)); // earliest, but too wide
+        qs.push(req(1, 1, 2.0, 2, 10.0));
+        let p = qs.pop_fitting(DispatchPolicy::Fifo, 4).unwrap();
+        assert_eq!(p.id, 1);
+        // Nothing fits in 1 free core.
+        assert!(qs.pop_fitting(DispatchPolicy::Fifo, 1).is_none());
+        assert_eq!(qs.len(), 1);
+    }
+
+    #[test]
+    fn per_model_order_is_fifo_even_under_sjf() {
+        let mut qs = QueueSet::new(1);
+        qs.push(req(0, 0, 1.0, 1, 50.0));
+        qs.push(req(1, 0, 2.0, 1, 5.0)); // shorter but behind in its queue
+        let p = qs.pop_fitting(DispatchPolicy::ShortestJobFirst, 32).unwrap();
+        assert_eq!(p.id, 0, "only queue heads are candidates");
+    }
+
+    #[test]
+    fn empty_set_pops_none() {
+        let mut qs = QueueSet::new(3);
+        assert!(qs.is_empty());
+        assert_eq!(qs.len_for(1), 0);
+        assert!(qs.pop_fitting(DispatchPolicy::Fifo, 32).is_none());
+    }
+}

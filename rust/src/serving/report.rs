@@ -1,0 +1,189 @@
+//! The SLO report over one simulation run (rust/docs/DESIGN.md §9.4).
+//!
+//! Reuses the coordinator's metric primitives — [`LatencyRecorder`] (its
+//! batch [`LatencyRecorder::percentiles`] accessor sorts once for all three
+//! tail points) and [`Counters`] — to split end-to-end latency into
+//! queueing vs service time and report utilization, throughput, and goodput
+//! under a deadline.
+
+use crate::coordinator::metrics::{Counters, LatencyRecorder};
+use crate::util::Table;
+
+use super::cluster::SimResult;
+
+/// SLO-oriented summary of a [`SimResult`].
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub slo_ms: Option<f64>,
+    /// End-to-end latency samples (arrival → finish), ms.
+    pub e2e: LatencyRecorder,
+    /// Queueing-delay samples (arrival → start), ms.
+    pub queueing: LatencyRecorder,
+    /// Service-time samples (start → finish), ms.
+    pub service: LatencyRecorder,
+    pub counters: Counters,
+    /// Core-time fraction spent serving.
+    pub utilization: f64,
+    /// Completions per second of simulated time.
+    pub throughput_rps: f64,
+    /// SLO-met completions per second of simulated time (equals
+    /// `throughput_rps` when no SLO is set).
+    pub goodput_rps: f64,
+    pub makespan_ms: f64,
+}
+
+impl SloReport {
+    /// Fold a simulation run into the report.
+    pub fn from_sim(result: &SimResult, slo_ms: Option<f64>) -> SloReport {
+        let mut e2e = LatencyRecorder::new();
+        let mut queueing = LatencyRecorder::new();
+        let mut service = LatencyRecorder::new();
+        let mut counters = Counters::new();
+        let mut within = 0u64;
+        for c in &result.completed {
+            e2e.record(c.e2e_ms());
+            queueing.record(c.queue_ms());
+            service.record(c.service_ms());
+            counters.inc("requests");
+            counters.add("core_launches", c.cores as u64);
+            if let Some(slo) = slo_ms {
+                if c.e2e_ms() <= slo {
+                    within += 1;
+                    counters.inc("slo_ok");
+                } else {
+                    counters.inc("slo_violations");
+                }
+            }
+        }
+        let makespan_ms = result.makespan_ms();
+        let throughput_rps = result.throughput_rps();
+        let goodput_rps = match slo_ms {
+            None => throughput_rps,
+            Some(_) if makespan_ms > 0.0 => within as f64 / (makespan_ms / 1000.0),
+            Some(_) => 0.0,
+        };
+        SloReport {
+            slo_ms,
+            e2e,
+            queueing,
+            service,
+            counters,
+            utilization: result.utilization(),
+            throughput_rps,
+            goodput_rps,
+            makespan_ms,
+        }
+    }
+
+    /// Fraction of completed requests that met the SLO (1.0 with no SLO).
+    pub fn slo_attainment(&self) -> f64 {
+        let total = self.counters.get("requests");
+        if self.slo_ms.is_none() || total == 0 {
+            return 1.0;
+        }
+        self.counters.get("slo_ok") as f64 / total as f64
+    }
+
+    /// Render the report table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["metric", "value"])
+            .label_first()
+            .with_title("serving SLO report");
+        let n = self.e2e.count();
+        t.row(vec!["requests completed".into(), n.to_string()]);
+        t.row(vec!["makespan".into(), format!("{:.2} ms", self.makespan_ms)]);
+        t.row(vec!["throughput".into(),
+                   format!("{:.1} req/s", self.throughput_rps)]);
+        match self.slo_ms {
+            Some(slo) => {
+                t.row(vec![format!("goodput (SLO {slo} ms)"),
+                           format!("{:.1} req/s", self.goodput_rps)]);
+                t.row(vec!["SLO attainment".into(),
+                           format!("{:.1}%", 100.0 * self.slo_attainment())]);
+            }
+            None => {
+                t.row(vec!["goodput".into(),
+                           format!("{:.1} req/s (no SLO)", self.goodput_rps)]);
+            }
+        }
+        t.row(vec!["core utilization".into(),
+                   format!("{:.1}%", 100.0 * self.utilization)]);
+        if let Some(ps) = self.e2e.percentiles(&[50.0, 95.0, 99.0]) {
+            t.row(vec!["e2e p50/p95/p99".into(),
+                       format!("{:.2} / {:.2} / {:.2} ms", ps[0], ps[1], ps[2])]);
+        }
+        if let (Some(q), Some(s)) = (self.queueing.summary(), self.service.summary()) {
+            t.row(vec!["mean queueing".into(), format!("{:.2} ms", q.mean)]);
+            t.row(vec!["mean service".into(), format!("{:.2} ms", s.mean)]);
+            t.row(vec!["max queueing".into(), format!("{:.2} ms", q.max)]);
+        }
+        format!("{t}\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::cluster::{CompletedRequest, SimResult};
+
+    fn result() -> SimResult {
+        let completed = vec![
+            CompletedRequest { id: 0, model: 0, arrival_ms: 0.0, start_ms: 0.0,
+                               finish_ms: 10.0, cores: 2 },
+            CompletedRequest { id: 1, model: 0, arrival_ms: 0.0, start_ms: 10.0,
+                               finish_ms: 20.0, cores: 2 },
+            CompletedRequest { id: 2, model: 0, arrival_ms: 5.0, start_ms: 20.0,
+                               finish_ms: 30.0, cores: 2 },
+        ];
+        SimResult { events: Vec::new(), completed, num_cores: 2 }
+    }
+
+    #[test]
+    fn splits_queueing_from_service() {
+        let rep = SloReport::from_sim(&result(), None);
+        assert_eq!(rep.e2e.count(), 3);
+        let q = rep.queueing.summary().unwrap();
+        let s = rep.service.summary().unwrap();
+        assert!((q.mean - (0.0 + 10.0 + 15.0) / 3.0).abs() < 1e-12);
+        assert!((s.mean - 10.0).abs() < 1e-12);
+        // 60 busy core-ms on a 2-core pool over 30 ms.
+        assert!((rep.utilization - 1.0).abs() < 1e-12);
+        assert!((rep.throughput_rps - 100.0).abs() < 1e-9);
+        assert_eq!(rep.goodput_rps, rep.throughput_rps);
+        assert_eq!(rep.slo_attainment(), 1.0);
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_met_requests() {
+        // e2e latencies: 10, 20, 25 ms. SLO 15 ms -> 1 of 3 within.
+        let rep = SloReport::from_sim(&result(), Some(15.0));
+        assert_eq!(rep.counters.get("slo_ok"), 1);
+        assert_eq!(rep.counters.get("slo_violations"), 2);
+        assert!((rep.slo_attainment() - 1.0 / 3.0).abs() < 1e-12);
+        // 1 good request over 30 ms.
+        assert!((rep.goodput_rps - 1000.0 / 30.0).abs() < 1e-9);
+        assert!(rep.goodput_rps < rep.throughput_rps);
+    }
+
+    #[test]
+    fn render_contains_the_headline_metrics() {
+        let rep = SloReport::from_sim(&result(), Some(15.0));
+        let text = rep.render();
+        for needle in ["throughput", "goodput", "SLO attainment",
+                       "e2e p50/p95/p99", "core utilization"] {
+            assert!(text.contains(needle), "missing {needle}: {text}");
+        }
+    }
+
+    #[test]
+    fn empty_run_reports_zeroes() {
+        let empty = SimResult { events: Vec::new(), completed: Vec::new(),
+                                num_cores: 4 };
+        let rep = SloReport::from_sim(&empty, Some(10.0));
+        assert_eq!(rep.e2e.count(), 0);
+        assert_eq!(rep.throughput_rps, 0.0);
+        assert_eq!(rep.goodput_rps, 0.0);
+        assert_eq!(rep.slo_attainment(), 1.0);
+        assert!(rep.render().contains("requests completed"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Seeded arrival-trace generation: weighted multi-model request mixes over
+//! the zoo plus the three arrival processes the serving simulator drives
+//! (rust/docs/DESIGN.md §9.1).
+//!
+//! Everything here is a pure function of `(mix, process, n, seed)` — the
+//! trace is the deterministic input the event loop replays, so two runs
+//! with the same seed produce bit-identical simulations.
+
+use crate::graph::Model;
+use crate::util::XorShiftRng;
+
+/// One serving request: which model it asks for (an index into the mix's
+/// model list) and when it arrives on the simulated clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub model: usize,
+    pub arrival_ms: f64,
+}
+
+/// How requests arrive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// A fixed population of `concurrency` outstanding requests: the first
+    /// `concurrency` trace entries arrive at t=0 and the cluster injects one
+    /// replacement per completion (saturation-throughput measurement).
+    ClosedLoop { concurrency: usize },
+    /// Open-loop Poisson arrivals at `rate_rps` requests/second.
+    OpenPoisson { rate_rps: f64 },
+    /// Bursts of `burst` simultaneous requests whose burst interarrivals are
+    /// Poisson at `rate_rps / burst`, so the long-run offered rate is still
+    /// `rate_rps` (tail-latency stressor).
+    Bursty { rate_rps: f64, burst: usize },
+}
+
+impl ArrivalProcess {
+    /// The closed-loop population size, if this is a closed-loop process
+    /// (what [`super::cluster::simulate`] takes as its injection limit).
+    pub fn closed_loop_population(&self) -> Option<usize> {
+        match *self {
+            ArrivalProcess::ClosedLoop { concurrency } => Some(concurrency.max(1)),
+            _ => None,
+        }
+    }
+}
+
+/// A weighted multi-model request mix.
+#[derive(Debug, Clone)]
+pub struct ModelMix {
+    pub models: Vec<Model>,
+    /// Relative (unnormalized, positive) traffic weights, one per model.
+    pub weights: Vec<f64>,
+}
+
+impl ModelMix {
+    /// Equal traffic share for every model.
+    pub fn uniform(models: Vec<Model>) -> ModelMix {
+        let n = models.len();
+        ModelMix { models, weights: vec![1.0; n] }
+    }
+
+    /// Explicit traffic weights (must be positive, one per model).
+    pub fn weighted(models: Vec<Model>, weights: Vec<f64>) -> ModelMix {
+        assert_eq!(models.len(), weights.len(), "one weight per model");
+        assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
+        ModelMix { models, weights }
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Model `i`'s normalized share of the offered load.
+    pub fn share(&self, i: usize) -> f64 {
+        let total: f64 = self.weights.iter().sum();
+        if total <= 0.0 { 0.0 } else { self.weights[i] / total }
+    }
+
+    /// Draw a model index with probability proportional to its weight.
+    /// `total` is the precomputed weight sum (hoisted out of the per-request
+    /// loop by [`generate_trace`]).
+    fn sample(&self, rng: &mut XorShiftRng, total: f64) -> usize {
+        let mut x = rng.next_f64() * total;
+        for (i, &w) in self.weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        self.weights.len() - 1
+    }
+}
+
+/// Generate a seeded trace of `n` requests, nondecreasing in arrival time.
+pub fn generate_trace(mix: &ModelMix, process: ArrivalProcess, n: usize,
+                      seed: u64) -> Vec<Request> {
+    assert!(!mix.models.is_empty(), "trace needs at least one model");
+    let mut rng = XorShiftRng::new(seed);
+    let total_weight: f64 = mix.weights.iter().sum();
+    let mut t = 0.0_f64;
+    let mut reqs = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        let arrival_ms = match process {
+            ArrivalProcess::ClosedLoop { .. } => 0.0,
+            ArrivalProcess::OpenPoisson { rate_rps } => {
+                t += exp_interarrival_ms(&mut rng, rate_rps);
+                t
+            }
+            ArrivalProcess::Bursty { rate_rps, burst } => {
+                let burst = burst.max(1) as u64;
+                if id % burst == 0 {
+                    t += exp_interarrival_ms(&mut rng, rate_rps / burst as f64);
+                }
+                t
+            }
+        };
+        reqs.push(Request { id, model: mix.sample(&mut rng, total_weight),
+                            arrival_ms });
+    }
+    reqs
+}
+
+/// Exponential interarrival time in ms for a rate in requests/second.
+fn exp_interarrival_ms(rng: &mut XorShiftRng, rate_rps: f64) -> f64 {
+    assert!(rate_rps > 0.0, "arrival rate must be positive, got {rate_rps}");
+    // next_f64 is in [0, 1); flip to (0, 1] so ln never sees 0.
+    let u = 1.0 - rng.next_f64();
+    -u.ln() / rate_rps * 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    fn mix() -> ModelMix {
+        ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()])
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let m = mix();
+        let p = ArrivalProcess::OpenPoisson { rate_rps: 100.0 };
+        assert_eq!(generate_trace(&m, p, 64, 9), generate_trace(&m, p, 64, 9));
+        assert_ne!(generate_trace(&m, p, 64, 9), generate_trace(&m, p, 64, 10));
+    }
+
+    #[test]
+    fn poisson_arrivals_increase_at_roughly_the_rate() {
+        let m = mix();
+        let n = 4000;
+        let trace = generate_trace(
+            &m, ArrivalProcess::OpenPoisson { rate_rps: 250.0 }, n, 3);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        // n arrivals at 250/s should span about n/250 seconds.
+        let span_s = trace.last().unwrap().arrival_ms / 1000.0;
+        let expect_s = n as f64 / 250.0;
+        assert!((span_s - expect_s).abs() < 0.25 * expect_s,
+                "span {span_s} vs {expect_s}");
+    }
+
+    #[test]
+    fn bursty_groups_share_an_arrival_time() {
+        let m = mix();
+        let trace = generate_trace(
+            &m, ArrivalProcess::Bursty { rate_rps: 100.0, burst: 4 }, 16, 5);
+        for chunk in trace.chunks(4) {
+            assert!(chunk.iter().all(|r| r.arrival_ms == chunk[0].arrival_ms));
+        }
+        assert!(trace[4].arrival_ms > trace[0].arrival_ms);
+    }
+
+    #[test]
+    fn closed_loop_arrives_at_zero() {
+        let m = mix();
+        let p = ArrivalProcess::ClosedLoop { concurrency: 8 };
+        let trace = generate_trace(&m, p, 32, 1);
+        assert!(trace.iter().all(|r| r.arrival_ms == 0.0));
+        assert_eq!(p.closed_loop_population(), Some(8));
+        assert_eq!(ArrivalProcess::OpenPoisson { rate_rps: 1.0 }
+                       .closed_loop_population(),
+                   None);
+    }
+
+    #[test]
+    fn mix_samples_follow_weights() {
+        let m = ModelMix::weighted(vec![zoo::alexnet(), zoo::mini_cnn()],
+                                   vec![3.0, 1.0]);
+        assert!((m.share(0) - 0.75).abs() < 1e-12);
+        let trace = generate_trace(
+            &m, ArrivalProcess::OpenPoisson { rate_rps: 100.0 }, 4000, 11);
+        let first = trace.iter().filter(|r| r.model == 0).count();
+        let frac = first as f64 / trace.len() as f64;
+        assert!((frac - 0.75).abs() < 0.05, "share {frac}");
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let m = mix();
+        let trace = generate_trace(
+            &m, ArrivalProcess::OpenPoisson { rate_rps: 10.0 }, 10, 2);
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+}

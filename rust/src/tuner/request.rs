@@ -164,6 +164,14 @@ impl<'a> TuningContext<'a> {
         &mut self.engine
     }
 
+    /// Re-constrain the MP candidate set without rebuilding the context.
+    /// The serving allocator sweeps MP caps this way: every sweep step
+    /// shares the engine's memoized `(block, mp)` cache, so capping the set
+    /// costs only the candidates the cache has not seen yet.
+    pub fn set_mp_candidates(&mut self, mps: Vec<usize>) {
+        self.mp_candidates = mps;
+    }
+
     /// Engine counter snapshot (accumulated across every backend run
     /// against this context).
     pub fn engine_stats(&self) -> CostStats {

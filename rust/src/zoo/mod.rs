@@ -47,6 +47,19 @@ pub fn by_name(name: &str) -> Option<Model> {
     }
 }
 
+/// Resolve a comma-separated list of zoo names (the CLI's `--models` form,
+/// e.g. `"resnet18,alexnet"`); whitespace around names is ignored.
+pub fn by_names(list: &str) -> Result<Vec<Model>, String> {
+    let mut models = Vec::new();
+    for name in list.split(',') {
+        let name = name.trim();
+        models.push(by_name(name).ok_or_else(|| {
+            format!("unknown model '{name}' (known: {})", MODEL_NAMES.join(", "))
+        })?);
+    }
+    Ok(models)
+}
+
 /// Names accepted by [`by_name`], for CLI help.
 pub const MODEL_NAMES: &[&str] =
     &["resnet18", "resnet50", "vgg19", "alexnet", "mobilenet", "mini_cnn"];
@@ -79,5 +92,15 @@ mod tests {
         for n in MODEL_NAMES {
             assert!(by_name(n).is_some(), "{n}");
         }
+    }
+
+    #[test]
+    fn by_names_parses_comma_lists() {
+        let ms = by_names("resnet18, alexnet").unwrap();
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].name, "resnet18");
+        assert_eq!(ms[1].name, "alexnet");
+        assert!(by_names("alexnet,nope").unwrap_err().contains("nope"));
+        assert!(by_names("").is_err());
     }
 }

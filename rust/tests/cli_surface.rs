@@ -100,6 +100,35 @@ fn trace_command() {
 }
 
 #[test]
+fn serve_sim_happy_paths() {
+    assert_eq!(
+        run("serve-sim --models alexnet,mini_cnn --requests 48 --rate 500 \
+             --slo-ms 50 --seed 3"),
+        0);
+    assert_eq!(
+        run("serve-sim --models mini_cnn --arrivals closed --concurrency 16 \
+             --requests 32 --policy sjf"),
+        0);
+    assert_eq!(
+        run("serve-sim --models alexnet --arrivals bursty --rate 300 \
+             --requests 40 --allocator single"),
+        0);
+}
+
+#[test]
+fn serve_sim_rejects_bad_flags() {
+    assert_eq!(run("serve-sim --models nope_net"), 1);
+    assert_eq!(run("serve-sim --models alexnet --policy lifo"), 1);
+    assert_eq!(run("serve-sim --models alexnet --rate 0"), 1);
+    assert_eq!(run("serve-sim --models alexnet --rate -5"), 1);
+    assert_eq!(run("serve-sim --models alexnet --rate abc"), 1);
+    assert_eq!(run("serve-sim --models alexnet --arrivals sometimes"), 1);
+    assert_eq!(run("serve-sim --models alexnet --slo-ms 0"), 1);
+    assert_eq!(run("serve-sim --models alexnet --allocator psychic"), 1);
+    assert_eq!(run("serve-sim --models alexnet --arrivals closed --concurrency 0"), 1);
+}
+
+#[test]
 fn unknown_command_fails() {
     assert_eq!(run("frobnicate"), 1);
 }

@@ -115,6 +115,46 @@ fn unknown_artifact_rejected() {
 }
 
 #[test]
+fn engine_construction_rejects_malformed_plans() {
+    use dlfusion::coordinator::ExecutionPlan;
+    use dlfusion::runtime::RuntimeError;
+
+    let model = zoo::mini_cnn();
+
+    // An empty plan is a RuntimeError at construction, not a panic.
+    let Some(rt) = runtime_or_skip() else { return };
+    let empty = ExecutionPlan { model_name: model.name.clone(), steps: Vec::new() };
+    match Engine::new(rt, &model, empty, 7) {
+        Err(RuntimeError::InvalidPlan(msg)) => {
+            assert!(msg.contains("no steps"), "{msg}")
+        }
+        other => panic!("expected InvalidPlan, got {:?}",
+                        other.err().map(|e| e.to_string())),
+    }
+
+    // A step pointing at a non-conv layer index has no weights: also a
+    // clean construction error.
+    let Some(rt) = runtime_or_skip() else { return };
+    let sched = Schedule::single_block(model.num_layers(), 4);
+    let mut bad = plan::build_plan(&model, &sched, rt.manifest()).unwrap();
+    bad.steps[0].conv_indices.push(model.num_layers() + 100);
+    match Engine::new(rt, &model, bad, 7) {
+        Err(RuntimeError::InvalidPlan(msg)) => {
+            assert!(msg.contains("references conv layer"), "{msg}")
+        }
+        other => panic!("expected InvalidPlan, got {:?}",
+                        other.err().map(|e| e.to_string())),
+    }
+
+    // A step naming an artifact the manifest does not carry.
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut unknown = plan::build_plan(&model, &sched, rt.manifest()).unwrap();
+    unknown.steps[0].artifact = "no_such_artifact".to_string();
+    assert!(matches!(Engine::new(rt, &model, unknown, 7),
+                     Err(RuntimeError::UnknownArtifact(_))));
+}
+
+#[test]
 fn engine_infer_matches_unfused_and_serves() {
     let Some(rt) = runtime_or_skip() else { return };
     let model = zoo::mini_cnn();
