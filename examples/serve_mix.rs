@@ -43,4 +43,26 @@ fn main() {
         println!("\n--- {label} allocation, {:.0} req/s offered ---", rate);
         print!("{}", SloReport::from_sim(&result, slo_ms).render());
     }
+
+    // Third knob: dynamic batching. The (mp_cap, batch) sweep prices each
+    // tuned schedule at every batch, and the `batch` dispatch policy forms
+    // per-model batches whose invocations amortize the weight fetch.
+    let max_batch = serving::DEFAULT_MAX_BATCH;
+    let batched = serving::plan_allocations_batched(&sim, &mix, slo_ms, max_batch)
+        .expect("allocation");
+    println!("\npredicted batched capacity: {:.0} req/s at the load-aware \
+              batches (vs {:.0} req/s one-at-a-time)",
+             batched.predicted_batched_capacity_rps(sim.spec.num_cores),
+             batched.predicted_capacity_rps(sim.spec.num_cores, true));
+    let cfg = ClusterConfig {
+        num_cores: sim.spec.num_cores,
+        policy: DispatchPolicy::Batch {
+            max_batch,
+            max_wait_ms: serving::DEFAULT_BATCH_WAIT_MS,
+        },
+    };
+    let result = serving::simulate(&cfg, &batched.services(true), &trace, None)
+        .expect("simulate");
+    println!("\n--- load-aware allocation, batch dispatch ---");
+    print!("{}", SloReport::from_sim(&result, slo_ms).render());
 }

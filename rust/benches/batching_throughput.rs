@@ -1,0 +1,117 @@
+//! Dynamic batching: the per-sample amortization curve of the batch-aware
+//! latency model, and the serving-level payoff of the `batch` dispatch
+//! policy over one-request-at-a-time FIFO under overload.
+
+use dlfusion::accel::{efficiency, Simulator};
+use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
+use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
+                        ModelMix};
+use dlfusion::tuner::{Algorithm1, Tuner, TuningRequest};
+use dlfusion::util::csv::Csv;
+use dlfusion::util::Table;
+use dlfusion::zoo;
+
+fn main() {
+    banner("batching", "batch-aware cost model + dynamic-batching dispatch");
+    let sim = Simulator::mlu100();
+
+    // ---- the amortization curve: one tuned schedule priced per batch ----
+    let batches = [1usize, 2, 4, 8, 16, 32];
+    let mut t = Table::new(&["model", "batch", "invocation", "per-sample",
+                             "vs batch-1", "eta/core"])
+        .label_first()
+        .with_title("batched invocation latency (weights fetched once)");
+    let mut csv = Csv::new(&["model", "batch", "invocation_ms", "per_sample_ms",
+                             "core_efficiency"]);
+    for model in [zoo::vgg19(), zoo::resnet50()] {
+        let request = TuningRequest::new(&sim, &model);
+        let mut cx = request.context();
+        let outcome = Algorithm1.tune(&mut cx).expect("tuning");
+        let t1 = outcome.predicted_ms;
+        // Mean per-core op count of one block launch: the compute-side
+        // amortization (pipeline fill paid once per launch) in isolation.
+        let n = model.num_layers();
+        let g_core = cx.engine_mut().facts().block_gops(0, n)
+            / (outcome.schedule.num_blocks() * sim.spec.num_cores) as f64;
+        for &b in &batches {
+            let tb = cx.engine_mut().schedule_cost_at(&outcome.schedule, b);
+            let per_sample = tb / b as f64;
+            let eta = efficiency::core_efficiency_at_batch(&sim.spec, g_core, b);
+            t.row(vec![
+                model.name.clone(),
+                b.to_string(),
+                format!("{tb:.3} ms"),
+                format!("{per_sample:.3} ms"),
+                format!("{:.2}x", t1 / per_sample),
+                format!("{:.1}%", 100.0 * eta),
+            ]);
+            csv.row_display(&[
+                model.name.clone(),
+                b.to_string(),
+                format!("{tb:.4}"),
+                format!("{per_sample:.4}"),
+                format!("{eta:.4}"),
+            ]);
+        }
+    }
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "batching_amortization").unwrap();
+
+    // ---- serving: batch policy vs FIFO under 2x-capacity overload ----
+    let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
+    let max_batch = serving::DEFAULT_MAX_BATCH;
+    let plan = serving::plan_allocations_batched(&sim, &mix, None, max_batch)
+        .expect("allocation");
+    let services = plan.services(true);
+    let rate = 2.0 * plan.predicted_capacity_rps(sim.spec.num_cores, true);
+    let slo = 3.0 * services
+        .iter()
+        .map(|s| s.service_at(max_batch))
+        .fold(0.0, f64::max);
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: rate }, 2000, 11);
+    println!("offered {rate:.0} req/s (2x batch-1 capacity), SLO {slo:.1} ms, \
+              predicted batched capacity {:.0} req/s",
+             plan.predicted_batched_capacity_rps(sim.spec.num_cores));
+
+    let mut b = Bench::new("batching_throughput");
+    let mut t = Table::new(&["policy", "throughput", "goodput", "p99 e2e",
+                             "utilization"])
+        .label_first()
+        .with_title("dynamic batching vs FIFO under overload");
+    let mut csv = Csv::new(&["policy", "throughput_rps", "goodput_rps", "p99_ms",
+                             "utilization"]);
+    for (label, policy) in [
+        ("fifo", DispatchPolicy::Fifo),
+        ("batch", DispatchPolicy::Batch {
+            max_batch,
+            max_wait_ms: serving::DEFAULT_BATCH_WAIT_MS,
+        }),
+    ] {
+        let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
+        b.time(&format!("simulate_2k_requests_{label}"), || {
+            serving::simulate(&cfg, &services, &trace, None).expect("simulate")
+        });
+        let result = serving::simulate(&cfg, &services, &trace, None)
+            .expect("simulate");
+        let rep = serving::SloReport::from_sim(&result, Some(slo));
+        let p99 = rep.e2e.percentiles(&[99.0]).map_or(0.0, |p| p[0]);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.0} req/s", rep.throughput_rps),
+            format!("{:.0} req/s", rep.goodput_rps),
+            format!("{p99:.2} ms"),
+            format!("{:.1}%", 100.0 * rep.utilization),
+        ]);
+        csv.row_display(&[
+            label.to_string(),
+            format!("{:.1}", rep.throughput_rps),
+            format!("{:.1}", rep.goodput_rps),
+            format!("{p99:.3}"),
+            format!("{:.4}", rep.utilization),
+        ]);
+    }
+    b.finish();
+    println!("{t}");
+    csv.write_to(BENCH_OUT_DIR, "batching_throughput").unwrap();
+}

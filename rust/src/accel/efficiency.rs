@@ -35,6 +35,16 @@ pub fn core_achieved_gflops(spec: &AcceleratorSpec, gops: f64) -> f64 {
     core_efficiency(spec, gops) * spec.peak_gflops_per_core
 }
 
+/// Fraction of per-core peak achieved when one launch carries `batch`
+/// samples of `gops` each. The pipeline-fill cost is paid once per launch,
+/// not once per sample, so efficiency rises monotonically with batch —
+/// the compute side of the amortization the batch-aware latency model
+/// charges (rust/docs/DESIGN.md §10).
+pub fn core_efficiency_at_batch(spec: &AcceleratorSpec, gops: f64, batch: usize) -> f64 {
+    assert!(batch >= 1, "batch must be at least 1");
+    core_efficiency(spec, batch as f64 * gops)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +97,21 @@ mod tests {
     #[test]
     fn zero_work_zero_efficiency() {
         assert_eq!(core_efficiency(&spec(), 0.0), 0.0);
+    }
+
+    #[test]
+    fn batching_amortizes_the_fill_cost() {
+        let s = spec();
+        let g = 0.05;
+        // Batch 1 is exactly the unbatched curve.
+        assert_eq!(core_efficiency_at_batch(&s, g, 1), core_efficiency(&s, g));
+        // Efficiency is strictly monotone in batch (fill paid once).
+        let mut last = 0.0;
+        for b in [1usize, 2, 4, 8, 16] {
+            let e = core_efficiency_at_batch(&s, g, b);
+            assert!(e > last, "eta not monotone at batch {b}");
+            last = e;
+        }
+        assert!(last < 1.0);
     }
 }

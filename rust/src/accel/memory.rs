@@ -68,6 +68,41 @@ pub fn fused_block_traffic(spec: &AcceleratorSpec, layers: &[Layer], mp: usize) 
     BlockTraffic { boundary_bytes, weight_bytes, spill_bytes }
 }
 
+/// Off-chip traffic of a fused block serving a batched invocation of
+/// `batch` samples at MP = `mp`.
+///
+/// The amortization at the heart of the batch-aware model
+/// (rust/docs/DESIGN.md §10): weights are fetched **once per invocation**
+/// regardless of batch, while the boundary activations and any spilled
+/// intermediates move **once per sample**. Samples stream through the fused
+/// block one at a time, so the per-core working set — and therefore which
+/// boundaries spill — is exactly the batch-1 computation.
+pub fn fused_block_traffic_batch(spec: &AcceleratorSpec, layers: &[Layer],
+                                 mp: usize, batch: usize) -> BlockTraffic {
+    assert!(batch >= 1, "batch must be at least 1");
+    let per_sample = fused_block_traffic(spec, layers, mp);
+    if batch == 1 {
+        return per_sample;
+    }
+    let bf = batch as f64;
+    BlockTraffic {
+        boundary_bytes: bf * per_sample.boundary_bytes,
+        weight_bytes: per_sample.weight_bytes,
+        spill_bytes: bf * per_sample.spill_bytes,
+    }
+}
+
+/// Off-chip bytes moved by one *unfused* layer serving `batch` samples in
+/// one invocation: activations per sample, weights once.
+pub fn unfused_layer_bytes_batch(layer: &Layer, batch: usize) -> f64 {
+    assert!(batch >= 1, "batch must be at least 1");
+    if batch == 1 {
+        return unfused_layer_bytes(layer);
+    }
+    batch as f64 * (layer.input_shape().bytes() + layer.output_shape().bytes())
+        + layer.weight_bytes()
+}
+
 /// Transfer time in milliseconds for `bytes` at the spec's bandwidth.
 pub fn transfer_ms(spec: &AcceleratorSpec, bytes: f64) -> f64 {
     bytes / (spec.mem_bw_gbps * 1e9) * 1e3
@@ -129,6 +164,29 @@ mod tests {
         let t = fused_block_traffic(&s, &chain, 4);
         assert_eq!(t.spill_bytes, 0.0);
         assert!((t.total() - unfused_layer_bytes(&chain[0])).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_traffic_amortizes_weights_only() {
+        let s = spec();
+        let chain = small_chain(4);
+        let b1 = fused_block_traffic_batch(&s, &chain, 4, 1);
+        assert_eq!(b1, fused_block_traffic(&s, &chain, 4), "batch 1 is the seed path");
+        let b8 = fused_block_traffic_batch(&s, &chain, 4, 8);
+        // Weights once; boundary scales with batch; total strictly sub-linear.
+        assert_eq!(b8.weight_bytes, b1.weight_bytes);
+        assert!((b8.boundary_bytes - 8.0 * b1.boundary_bytes).abs() < 1e-9);
+        assert!(b8.total() < 8.0 * b1.total());
+    }
+
+    #[test]
+    fn batched_unfused_layer_amortizes_weights() {
+        let chain = small_chain(1);
+        let l = &chain[0];
+        assert_eq!(unfused_layer_bytes_batch(l, 1), unfused_layer_bytes(l));
+        let b4 = unfused_layer_bytes_batch(l, 4);
+        assert!(b4 < 4.0 * unfused_layer_bytes(l));
+        assert!(b4 > unfused_layer_bytes(l));
     }
 
     #[test]

@@ -144,8 +144,47 @@ impl Simulator {
         assert!(!layers.is_empty());
         let facts = crate::cost::ModelFacts::from_layers(layers);
         mps.iter()
-            .map(|&mp| facts.block_latency_ms_batched(&self.spec, 0, layers.len(), mp))
+            .map(|&mp| facts.block_latency_ms_sweep(&self.spec, 0, layers.len(), mp))
             .collect()
+    }
+
+    /// Latency (ms) of one *unfused* operator serving a batched invocation
+    /// of `batch` samples at MP = `mp`. `batch == 1` **is**
+    /// [`Self::layer_latency_ms`], bit for bit; larger batches charge
+    /// compute and activation movement per sample and the weight fetch plus
+    /// launch/sync overheads once per invocation (rust/docs/DESIGN.md §10).
+    /// This is the reference path [`crate::cost::ModelFacts::layer_latency_ms_at`]
+    /// replays on the fact tables (pinned bit-identical there).
+    pub fn layer_latency_ms_batch(&self, layer: &Layer, mp: usize, batch: usize) -> f64 {
+        assert!(batch >= 1, "batch must be at least 1");
+        if batch == 1 {
+            return self.layer_latency_ms(layer, mp);
+        }
+        let s = &self.spec;
+        let channels = layer.channels().max(1);
+        let g_core = batch as f64
+            * partition::per_core_gops(s, layer.op_gops(), channels, mp);
+        let t_compute = efficiency::core_compute_ms(s, g_core);
+        let t_mem =
+            memory::transfer_ms(s, memory::unfused_layer_bytes_batch(layer, batch));
+        t_compute.max(t_mem) + self.overheads_ms(mp)
+    }
+
+    /// Latency (ms) of a fused block serving a batched invocation of
+    /// `batch` samples at MP = `mp`. `batch == 1` **is**
+    /// [`Self::block_latency_ms`], bit for bit. Like
+    /// [`Self::block_latency_ms_multi`], the batch math has a single home in
+    /// [`crate::cost::ModelFacts`]; callers evaluating many blocks of the
+    /// same model should go through [`crate::cost::CostEngine`], whose cache
+    /// is keyed by `(start, end, mp, batch)`.
+    pub fn block_latency_ms_batch(&self, layers: &[Layer], mp: usize, batch: usize) -> f64 {
+        assert!(!layers.is_empty(), "empty fusion block");
+        assert!(batch >= 1, "batch must be at least 1");
+        if batch == 1 {
+            return self.block_latency_ms(layers, mp);
+        }
+        let facts = crate::cost::ModelFacts::from_layers(layers);
+        facts.block_latency_ms_at(&self.spec, 0, layers.len(), mp, batch)
     }
 
     /// Achieved GFLOPS of one unfused operator at MP = `mp` (useful ops only)
@@ -311,6 +350,36 @@ mod tests {
                     assert!((f - slow).abs() < 1e-12,
                             "{} [{start}..{end}] mp={mp}: {f} vs {slow}", m.name);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_one_matches_unbatched_bit_for_bit() {
+        let s = sim();
+        let layers: Vec<Layer> = (0..4).map(|_| conv(64, 56)).collect();
+        for mp in [1usize, 4, 32] {
+            assert_eq!(s.block_latency_ms_batch(&layers, mp, 1),
+                       s.block_latency_ms(&layers, mp));
+            assert_eq!(s.layer_latency_ms_batch(&layers[0], mp, 1),
+                       s.layer_latency_ms(&layers[0], mp));
+        }
+    }
+
+    #[test]
+    fn batched_block_amortizes_weight_movement() {
+        // The tentpole invariant: a batch-b invocation is strictly cheaper
+        // than b batch-1 invocations (weights, fill, launch paid once), but
+        // never cheaper than one batch-1 invocation.
+        let s = sim();
+        let layers: Vec<Layer> = (0..4).map(|_| conv(128, 56)).collect();
+        for mp in [1usize, 8, 32] {
+            let t1 = s.block_latency_ms_batch(&layers, mp, 1);
+            for b in [2usize, 4, 8] {
+                let tb = s.block_latency_ms_batch(&layers, mp, b);
+                assert!(tb > t1, "mp={mp} b={b}");
+                assert!(tb < b as f64 * t1, "mp={mp} b={b}: {tb} vs {}",
+                        b as f64 * t1);
             }
         }
     }

@@ -27,9 +27,11 @@ COMMANDS:
     optimize <model|file.dlm>    run Algorithm 1, print the schedule
         [--strategy 1..7] [--critical GOPS]
     tune <model|file.dlm>        run one tuner backend, or --compare several,
-        [--tuner NAME]           through the unified tuner API
+        [--tuner NAME]           through the unified tuner API; --batch makes
         [--compare] [--iterations N] [--mps 1,2,4] [--granularity any|x4]
-        [--budget-evals N]       (NAME: algorithm1 strategy1..7 oracle
+        [--budget-evals N]       every backend co-optimize (MP, batch) and
+        [--batch 1,2,4,8]        serve the per-sample-fastest point
+                                 (NAME: algorithm1 strategy1..7 oracle
                                   oracle-full oracle-constrained anneal
                                   exhaustive)
     simulate <model|file.dlm>    simulate all seven strategies (Fig. 10 row)
@@ -42,10 +44,18 @@ COMMANDS:
         [--strategy 1..7]
     run [--requests N] [--verify] end-to-end PJRT inference on mini_cnn
     serve-sim                    multi-tenant serving simulation: load-aware
-        [--models a,b,..]        MP co-allocation over the 32-core pool, then
+        [--models a,b,..]        (MP, batch) co-allocation over the 32-core
         [--arrivals poisson|closed|bursty] [--rate RPS] [--requests N]
-        [--policy fifo|sjf] [--slo-ms MS] [--seed S] [--concurrency K]
-        [--allocator load|single] a deterministic event-driven SLO report
+        [--policy fifo|sjf|batch] [--slo-ms MS] [--seed S] [--concurrency K]
+        [--max-batch N] [--batch-wait-ms MS] pool, then a deterministic
+        [--allocator load|single] event-driven SLO report; --policy batch
+                                 forms per-model batches of up to N requests,
+                                 holding partial batches at most MS ms
+    perf-smoke                   deterministic perf metrics (simulated
+        [--out FILE.json]        latencies only, no wall clock): tuned
+        [--baseline FILE.json]   latencies + serving/batching throughput,
+        [--write-baseline]       written as JSON and diffed against the
+                                 checked-in baseline (advisory; CI artifact)
     help                         this text
 
 MODELS: resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file)
@@ -69,6 +79,7 @@ pub fn run(args: &Args) -> i32 {
         "trace" => cmd_trace(args),
         "run" => cmd_run(args),
         "serve-sim" => cmd_serve_sim(args),
+        "perf-smoke" => cmd_perf_smoke(args),
         other => Err(format!("unknown command '{other}' (try 'help')")),
     };
     match result {
@@ -173,6 +184,19 @@ fn parse_tuner(name: &str) -> Result<Box<dyn Tuner>, String> {
     }
 }
 
+/// Parse a `--flag 1,2,4`-style comma-separated integer list.
+fn parse_usize_list(args: &Args, name: &str) -> Result<Option<Vec<usize>>, String> {
+    match args.flag(name) {
+        None => Ok(None),
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .map(Some)
+            .map_err(|_| format!("--{name} expects comma-separated integers, got '{list}'")),
+    }
+}
+
 /// Build a `TuningRequest` from the shared tune/search flags.
 fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
                      -> Result<tuner::TuningRequest<'a>, String> {
@@ -180,13 +204,11 @@ fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
     if let Some(iters) = args.flag_usize("iterations").map_err(|e| e.to_string())? {
         request = request.anneal_config(AnnealConfig { iterations: iters, ..Default::default() });
     }
-    if let Some(list) = args.flag("mps") {
-        let mps: Vec<usize> = list
-            .split(',')
-            .map(|s| s.trim().parse::<usize>())
-            .collect::<Result<_, _>>()
-            .map_err(|_| format!("--mps expects comma-separated integers, got '{list}'"))?;
+    if let Some(mps) = parse_usize_list(args, "mps")? {
         request = request.mp_candidates(mps);
+    }
+    if let Some(batches) = parse_usize_list(args, "batch")? {
+        request = request.batch_candidates(batches);
     }
     match args.flag("granularity") {
         None => {}
@@ -242,8 +264,17 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
     println!("tuner:     {}", outcome.tuner);
     println!("schedule:  {}", outcome.schedule.summary());
     println!("blocks:    {}", outcome.schedule.num_blocks());
-    println!("latency:   {} predicted ({:.1} FPS)",
-             fmt_ms(outcome.predicted_ms), outcome.fps());
+    if outcome.batch > 1 {
+        println!("batch:     {} (per-sample winner of the candidate set)",
+                 outcome.batch);
+        println!("latency:   {} predicted per invocation, {} per sample \
+                  ({:.1} FPS)",
+                 fmt_ms(outcome.predicted_ms), fmt_ms(outcome.per_sample_ms()),
+                 outcome.fps());
+    } else {
+        println!("latency:   {} predicted ({:.1} FPS)",
+                 fmt_ms(outcome.predicted_ms), outcome.fps());
+    }
     let st = outcome.stats;
     println!("search:    {} evaluations ({} computed, {:.0}% cache hits), {} us{}",
              st.evaluations, st.cache_misses, 100.0 * st.hit_rate(), st.wall_us,
@@ -306,14 +337,16 @@ fn cmd_search(args: &Args) -> Result<(), String> {
          {iterations} moves)", model.name)));
     // Algorithm 1's wall time here includes costing its schedule through
     // the (cold) engine, so this ratio understates the pure O(n)-pass gap
-    // the paper quotes; name what is actually measured.
+    // the paper quotes; name what is actually measured. Latencies compare
+    // per sample so the line stays meaningful when --batch lets the
+    // backends land on different batch sizes.
     let o = &cmp.outcomes;
     println!("oracle search costs {:.0}x the Algorithm 1 tuner's wall time \
-              (schedule + block costing) for a {:.1}% latency win; the \
-              annealer's memoized moves computed only {:.1}% of their block \
-              queries",
+              (schedule + block costing) for a {:.1}% per-sample latency \
+              win; the annealer's memoized moves computed only {:.1}% of \
+              their block queries",
              (o[1].stats.wall_us.max(1)) as f64 / (o[0].stats.wall_us.max(1)) as f64,
-             100.0 * (o[0].predicted_ms / o[1].predicted_ms - 1.0),
+             100.0 * (o[0].per_sample_ms() / o[1].per_sample_ms() - 1.0),
              100.0 * (1.0 - o[2].stats.hit_rate()));
     Ok(())
 }
@@ -414,7 +447,23 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
             return Err(format!("--slo-ms must be positive, got {slo}"));
         }
     }
-    let policy = serving::DispatchPolicy::parse(args.flag("policy").unwrap_or("fifo"))?;
+    let mut policy = serving::DispatchPolicy::parse(args.flag("policy").unwrap_or("fifo"))?;
+    let max_batch_flag = args.flag_usize("max-batch").map_err(|e| e.to_string())?;
+    let batch_wait_flag = args.flag_f64("batch-wait-ms").map_err(|e| e.to_string())?;
+    if let serving::DispatchPolicy::Batch { .. } = policy {
+        let max_batch = max_batch_flag.unwrap_or(serving::DEFAULT_MAX_BATCH);
+        if max_batch == 0 {
+            return Err("--max-batch must be at least 1".into());
+        }
+        let max_wait_ms = batch_wait_flag.unwrap_or(serving::DEFAULT_BATCH_WAIT_MS);
+        if !(max_wait_ms >= 0.0) {
+            return Err(format!(
+                "--batch-wait-ms must be non-negative, got {max_wait_ms}"));
+        }
+        policy = serving::DispatchPolicy::Batch { max_batch, max_wait_ms };
+    } else if max_batch_flag.is_some() || batch_wait_flag.is_some() {
+        println!("note: --max-batch/--batch-wait-ms only apply to --policy batch");
+    }
     let concurrency = args.flag_usize("concurrency").map_err(|e| e.to_string())?;
     if concurrency == Some(0) {
         return Err("--concurrency must be at least 1".into());
@@ -461,14 +510,38 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     };
 
     // ---- allocate, generate, simulate, report ----
-    let plan = serving::plan_allocations(&sim, &mix, slo_ms).map_err(|e| e.to_string())?;
+    // Under the batch policy the allocator sweeps (mp_cap, batch) so the
+    // services carry engine-predicted batched latencies; otherwise the
+    // batch-1 sweep (identical to the pre-batch allocator).
+    let plan = match policy {
+        serving::DispatchPolicy::Batch { max_batch, .. } => {
+            serving::plan_allocations_batched(&sim, &mix, slo_ms, max_batch)
+        }
+        _ => serving::plan_allocations(&sim, &mix, slo_ms),
+    }
+    .map_err(|e| e.to_string())?;
     print!("{}", plan.render());
-    println!(
-        "predicted capacity on {} cores: {:.1} req/s load-aware vs {:.1} req/s \
-         at the single-request optima",
-        sim.spec.num_cores,
-        plan.predicted_capacity_rps(sim.spec.num_cores, true),
-        plan.predicted_capacity_rps(sim.spec.num_cores, false));
+    if let serving::DispatchPolicy::Batch { .. } = policy {
+        // The batched plan's load-aware points win at their chosen batch,
+        // not necessarily at batch 1, so the headline is the batched
+        // capacity (the batch-1 capacity of the same points is what the
+        // pool sustains if batches never form).
+        println!(
+            "predicted capacity on {} cores: {:.1} req/s batched load-aware \
+             ({:.1} req/s if no batches form) vs {:.1} req/s at the \
+             single-request optima",
+            sim.spec.num_cores,
+            plan.predicted_batched_capacity_rps(sim.spec.num_cores),
+            plan.predicted_capacity_rps(sim.spec.num_cores, true),
+            plan.predicted_capacity_rps(sim.spec.num_cores, false));
+    } else {
+        println!(
+            "predicted capacity on {} cores: {:.1} req/s load-aware vs {:.1} \
+             req/s at the single-request optima",
+            sim.spec.num_cores,
+            plan.predicted_capacity_rps(sim.spec.num_cores, true),
+            plan.predicted_capacity_rps(sim.spec.num_cores, false));
+    }
     for m in plan.models.iter().filter(|m| m.diverged()) {
         println!(
             "note: {} serves at MP {} under load (single-request optimum MP {})",
@@ -484,6 +557,136 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         result.completed.len(), result.events.len(), policy.name(),
         if load_aware { "load-aware" } else { "single-request" });
     print!("{}", serving::SloReport::from_sim(&result, slo_ms).render());
+    Ok(())
+}
+
+/// The perf-smoke metric sweep (CI's `perf-smoke` job): every number is a
+/// *simulated* quantity — tuned latencies and event-clock serving rates —
+/// so the output is a pure function of the code, reproducible on any
+/// machine, and safe to diff across commits. No wall-clock time is
+/// measured or gated.
+fn perf_smoke_metrics(sim: &Simulator) -> Result<Vec<(String, f64)>, String> {
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    // Tuned single-inference latencies, heuristic vs oracle.
+    for model in [zoo::resnet50(), zoo::vgg19()] {
+        let request = tuner::TuningRequest::new(sim, &model);
+        let mut cx = request.context();
+        let a1 = tuner::Algorithm1.tune(&mut cx).map_err(|e| e.to_string())?;
+        let dp = tuner::OracleDp::reduced().tune(&mut cx).map_err(|e| e.to_string())?;
+        metrics.push((format!("{}_algorithm1_ms", model.name), a1.predicted_ms));
+        metrics.push((format!("{}_oracle_ms", model.name), dp.predicted_ms));
+    }
+
+    // Serving throughput/goodput on the pinned light mix.
+    let mix = serving::ModelMix::uniform(zoo::by_names("resnet18,alexnet")?);
+    let plan = serving::plan_allocations(sim, &mix, Some(50.0))
+        .map_err(|e| e.to_string())?;
+    let trace = serving::generate_trace(
+        &mix, serving::ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 256, 7);
+    let cfg = serving::ClusterConfig { num_cores: sim.spec.num_cores,
+                                       policy: serving::DispatchPolicy::Fifo };
+    let result = serving::simulate(&cfg, &plan.services(true), &trace, None)?;
+    let rep = serving::SloReport::from_sim(&result, Some(50.0));
+    metrics.push(("serving_fifo_throughput_rps".into(), rep.throughput_rps));
+    metrics.push(("serving_fifo_goodput_rps".into(), rep.goodput_rps));
+
+    // Dynamic batching vs FIFO goodput on the heavy mix, under overload at
+    // twice the batch-1 capacity and an SLO generous to both policies.
+    let mix = serving::ModelMix::uniform(zoo::by_names("vgg19,resnet18")?);
+    let max_batch = serving::DEFAULT_MAX_BATCH;
+    let plan = serving::plan_allocations_batched(sim, &mix, None, max_batch)
+        .map_err(|e| e.to_string())?;
+    let services = plan.services(true);
+    let rate = 2.0 * plan.predicted_capacity_rps(sim.spec.num_cores, true);
+    let slo = 3.0 * services
+        .iter()
+        .map(|s| s.service_at(max_batch))
+        .fold(0.0, f64::max);
+    let trace = serving::generate_trace(
+        &mix, serving::ArrivalProcess::OpenPoisson { rate_rps: rate }, 400, 11);
+    for (label, policy) in [
+        ("fifo", serving::DispatchPolicy::Fifo),
+        ("batch", serving::DispatchPolicy::Batch {
+            max_batch,
+            max_wait_ms: serving::DEFAULT_BATCH_WAIT_MS,
+        }),
+    ] {
+        let cfg = serving::ClusterConfig { num_cores: sim.spec.num_cores, policy };
+        let result = serving::simulate(&cfg, &services, &trace, None)?;
+        let rep = serving::SloReport::from_sim(&result, Some(slo));
+        metrics.push((format!("batching_{label}_goodput_rps"), rep.goodput_rps));
+    }
+    Ok(metrics)
+}
+
+fn cmd_perf_smoke(args: &Args) -> Result<(), String> {
+    use crate::util::json::Json;
+
+    let out_path = args.flag("out").unwrap_or("BENCH_ci.json");
+    let baseline_path = args.flag("baseline").unwrap_or("ci/perf_baseline.json");
+    let sim = Simulator::mlu100();
+    let metrics = perf_smoke_metrics(&sim)?;
+
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("metrics", Json::Obj(
+            metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())),
+    ]);
+    let write = |path: &str| -> Result<(), String> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{path}: {e}"))?;
+            }
+        }
+        std::fs::write(path, doc.to_pretty()).map_err(|e| format!("{path}: {e}"))
+    };
+    write(out_path)?;
+    println!("wrote {out_path} ({} metrics, simulated latencies only)",
+             metrics.len());
+    if args.flag_bool("write-baseline") {
+        write(baseline_path)?;
+        println!("wrote baseline {baseline_path}");
+        return Ok(());
+    }
+
+    // Advisory diff: drift is reported, never a failure — refresh the
+    // baseline from the CI artifact when a change is intentional.
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(text) => text,
+        Err(_) => {
+            println!("no baseline at {baseline_path}; rerun with \
+                      --write-baseline (or copy {out_path} there) to start \
+                      tracking drift");
+            return Ok(());
+        }
+    };
+    let base = Json::parse(&text).map_err(|e| format!("{baseline_path}: {e}"))?;
+    let mut t = Table::new(&["metric", "current", "baseline", "drift"])
+        .label_first()
+        .with_title("perf smoke vs baseline (advisory)");
+    let mut drifted = 0usize;
+    for (name, value) in &metrics {
+        let (base_text, drift_text) = match base.get("metrics").get(name).as_f64() {
+            None => ("(unrecorded)".to_string(), "-".to_string()),
+            Some(b) if b == 0.0 => (format!("{b:.4}"), "-".to_string()),
+            Some(b) => {
+                let drift = 100.0 * (value / b - 1.0);
+                if drift.abs() > 2.0 {
+                    drifted += 1;
+                }
+                (format!("{b:.4}"), format!("{drift:+.2}%"))
+            }
+        };
+        t.row(vec![name.clone(), format!("{value:.4}"), base_text, drift_text]);
+    }
+    println!("{t}");
+    if drifted > 0 {
+        println!("{drifted} metric(s) drifted more than 2% from the baseline \
+                  (advisory — refresh ci/perf_baseline.json if intentional)");
+    } else {
+        println!("all recorded metrics within 2% of the baseline");
+    }
     Ok(())
 }
 

@@ -76,8 +76,18 @@ impl TunedDriverReport {
 /// Serve a request loop for a tuned schedule: [`serve`] plus the tuner's
 /// prediction folded into the report (the unified-tuner-API path the CLI
 /// `run` command and the e2e example drive).
+///
+/// This loop serves **one image per request**, so it expects a batch-1
+/// outcome (the default tuning request): a batch-tuned outcome prices
+/// whole invocations, and its per-sample number assumes weight/fill/launch
+/// amortization that single-image serving never receives — re-price the
+/// schedule at batch 1 (`CostEngine::schedule_cost_at(.., 1)`) before
+/// serving it here.
 pub fn serve_tuned(engine: &mut Engine, cfg: &DriverConfig,
                    outcome: &TuningOutcome) -> Result<TunedDriverReport, RuntimeError> {
+    debug_assert_eq!(outcome.batch, 1,
+                     "serve_tuned drives one-image requests; re-price the \
+                      schedule at batch 1 first");
     let report = serve(engine, cfg)?;
     Ok(TunedDriverReport {
         tuner: outcome.tuner.clone(),

@@ -63,29 +63,42 @@ impl CostStats {
     }
 }
 
-/// Cached outcome of one `(start, end, mp)` scalar-path evaluation.
+/// Cached outcome of one `(start, end, mp, batch)` scalar-path evaluation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BlockCost {
     pub latency_ms: f64,
-    /// Redundancy-weighted op count actually computed, GOPs.
+    /// Redundancy-weighted op count actually computed, GOPs (summed across
+    /// the invocation's batch).
     pub computed_gops: f64,
 }
 
-/// Memoized `(start, end, mp) -> latency` evaluation over one
+/// Memoized `(start, end, mp, batch) -> latency` evaluation over one
 /// `(Simulator, Model)` pair.
 ///
 /// Two caches are kept, one per float-operation ordering of the seed code
 /// (see [`crate::cost`] module docs): the *scalar* cache mirrors
-/// `Simulator::block_latency_ms` / `run_schedule`, the *batched* cache
-/// mirrors `Simulator::block_latency_ms_multi` (the oracle DP's path). They
-/// are never mixed, so every consumer sees exactly the bits the seed path
-/// produced.
+/// `Simulator::block_latency_ms` / `run_schedule`, the *sweep* cache
+/// mirrors `Simulator::block_latency_ms_multi` (the oracle DP's MP-sweep
+/// path). They are never mixed, so every consumer sees exactly the bits
+/// the seed path produced. At `batch == 1` — the default — every result is
+/// bit-identical to the pre-batch engine; see rust/docs/DESIGN.md §10.
+///
+/// **Active batch.** The engine carries an *active batch size* (default 1)
+/// that the implicit-batch methods ([`Self::block_cost`],
+/// [`Self::schedule_cost`], [`Self::block_latency_sweep`], …) evaluate
+/// at. Search backends are written against those methods, so setting the
+/// active batch ([`Self::set_batch`]) re-targets a whole search — the DP,
+/// the annealer's Metropolis walk, the strategy sweeps — at a batch size
+/// without touching the search code; the cache key keeps every batch's
+/// results separate.
 pub struct CostEngine<'a> {
     sim: &'a Simulator,
     model: &'a Model,
     facts: ModelFacts,
-    scalar: HashMap<(usize, usize, usize), BlockCost>,
-    batched: HashMap<(usize, usize, usize), f64>,
+    /// Active batch size for the implicit-batch evaluation methods.
+    batch: usize,
+    scalar: HashMap<(usize, usize, usize, usize), BlockCost>,
+    sweep: HashMap<(usize, usize, usize, usize), f64>,
     stats: CostStats,
 }
 
@@ -101,10 +114,24 @@ impl<'a> CostEngine<'a> {
             sim,
             model,
             facts,
+            batch: 1,
             scalar: HashMap::new(),
-            batched: HashMap::new(),
+            sweep: HashMap::new(),
             stats,
         }
+    }
+
+    /// The active batch size the implicit-batch methods evaluate at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Re-target the implicit-batch evaluation methods at `batch` samples
+    /// per invocation. Cached results are keyed by batch, so switching back
+    /// and forth costs nothing beyond the first computation per key.
+    pub fn set_batch(&mut self, batch: usize) {
+        assert!(batch >= 1, "batch must be at least 1");
+        self.batch = batch;
     }
 
     /// The simulator this engine evaluates against (returned at the
@@ -137,67 +164,104 @@ impl<'a> CostEngine<'a> {
         };
     }
 
-    /// Scalar-path latency + computed-GOPs of block `[start, end)` at `mp`,
-    /// bit-identical to `Simulator::{layer,block}_latency_ms`.
-    pub fn block_cost(&mut self, start: usize, end: usize, mp: usize) -> BlockCost {
+    /// Scalar-path latency + computed-GOPs of block `[start, end)` at `mp`
+    /// and an explicit batch size. At `batch == 1` this is bit-identical to
+    /// `Simulator::{layer,block}_latency_ms`; larger batches evaluate the
+    /// batch-aware model ([`ModelFacts::block_latency_ms_at`]).
+    pub fn block_cost_at(&mut self, start: usize, end: usize, mp: usize,
+                         batch: usize) -> BlockCost {
         self.stats.seed_layer_evals += (end - start) as u64;
-        if let Some(&c) = self.scalar.get(&(start, end, mp)) {
+        if let Some(&c) = self.scalar.get(&(start, end, mp, batch)) {
             self.stats.hits += 1;
             return c;
         }
         self.stats.misses += 1;
         let spec = &self.sim().spec;
         let gops = self.facts.block_gops(start, end);
-        let cost = if end - start == 1 {
+        let cost = if batch == 1 && end - start == 1 {
             BlockCost {
                 latency_ms: self.facts.layer_latency_ms(spec, start, mp),
                 computed_gops: gops,
             }
-        } else {
+        } else if batch == 1 {
             BlockCost {
                 latency_ms: self.facts.block_latency_ms(spec, start, end, mp),
                 computed_gops: self.facts.block_computed_gops(start, end, mp),
             }
+        } else {
+            // Per-sample computed work mirrors the batch-1 accounting: a
+            // single-layer block is channel-partitioned (no band-halo
+            // redundancy), matching the latency path it is paired with.
+            let per_sample = if end - start == 1 {
+                gops
+            } else {
+                self.facts.block_computed_gops(start, end, mp)
+            };
+            BlockCost {
+                latency_ms: self.facts.block_latency_ms_at(spec, start, end, mp, batch),
+                computed_gops: batch as f64 * per_sample,
+            }
         };
-        self.scalar.insert((start, end, mp), cost);
+        self.scalar.insert((start, end, mp, batch), cost);
         cost
     }
 
-    /// Scalar-path latency of block `[start, end)` at `mp`.
+    /// Scalar-path latency + computed-GOPs at the **active batch** (1 by
+    /// default, so this is the pre-batch `block_cost`, bit for bit).
+    pub fn block_cost(&mut self, start: usize, end: usize, mp: usize) -> BlockCost {
+        self.block_cost_at(start, end, mp, self.batch)
+    }
+
+    /// Scalar-path latency of block `[start, end)` at `mp` and the active
+    /// batch.
     pub fn block_latency(&mut self, start: usize, end: usize, mp: usize) -> f64 {
         self.block_cost(start, end, mp).latency_ms
     }
 
-    /// Batched-path latencies of block `[start, end)` over an MP set —
-    /// bit-identical to `Simulator::block_latency_ms_multi`. Each `(block,
-    /// mp)` pair is cached individually (the per-MP values are independent).
-    pub fn block_latency_batched(&mut self, start: usize, end: usize,
+    /// MP-sweep-path latencies of block `[start, end)` over an MP set at
+    /// the active batch — at batch 1 bit-identical to
+    /// `Simulator::block_latency_ms_multi`. Each `(block, mp, batch)`
+    /// triple is cached individually (the per-MP values are independent).
+    pub fn block_latency_sweep(&mut self, start: usize, end: usize,
                                  mps: &[usize]) -> Vec<f64> {
-        // The seed derived the block's facts once per batched call.
+        // The seed derived the block's facts once per MP-sweep call.
         self.stats.seed_layer_evals += (end - start) as u64;
         let spec = &self.sim().spec;
+        let batch = self.batch;
         mps.iter()
             .map(|&mp| {
-                if let Some(&v) = self.batched.get(&(start, end, mp)) {
+                if let Some(&v) = self.sweep.get(&(start, end, mp, batch)) {
                     self.stats.hits += 1;
                     return v;
                 }
                 self.stats.misses += 1;
-                let v = self.facts.block_latency_ms_batched(spec, start, end, mp);
-                self.batched.insert((start, end, mp), v);
+                let v = self.facts.block_latency_ms_sweep_at(spec, start, end, mp, batch);
+                self.sweep.insert((start, end, mp, batch), v);
                 v
             })
             .collect()
     }
 
-    /// Total latency of a schedule — the sequential per-block sum, bit-equal
-    /// to `Simulator::run_schedule(..).total_ms` for any valid schedule
+    /// Total latency of a schedule at the active batch — the sequential
+    /// per-block sum, at batch 1 bit-equal to
+    /// `Simulator::run_schedule(..).total_ms` for any valid schedule
     /// (validation itself is skipped; use [`Self::run_schedule`] when the
     /// schedule is untrusted).
     pub fn schedule_cost(&mut self, schedule: &Schedule) -> f64 {
         let mut total = 0.0;
         for b in &schedule.blocks {
             total += self.block_latency(b.start, b.end, b.mp);
+        }
+        total
+    }
+
+    /// Total latency of one batched invocation of a schedule at an explicit
+    /// batch size, independent of the active batch. The serving allocator
+    /// uses this to derive a tuned schedule's batch table.
+    pub fn schedule_cost_at(&mut self, schedule: &Schedule, batch: usize) -> f64 {
+        let mut total = 0.0;
+        for b in &schedule.blocks {
+            total += self.block_cost_at(b.start, b.end, b.mp, batch).latency_ms;
         }
         total
     }
@@ -225,7 +289,9 @@ impl<'a> CostEngine<'a> {
 
     /// Simulate a whole schedule — bit-identical (including the panic on an
     /// invalid schedule) to `Simulator::run_schedule`, served from the
-    /// scalar cache.
+    /// scalar cache. Always a per-inference (batch-1) report, regardless of
+    /// the active batch: [`crate::accel::PerfReport`] is the paper's batch-1
+    /// Fig. 10 surface.
     pub fn run_schedule(&mut self, schedule: &Schedule) -> PerfReport {
         schedule
             .validate(self.model.num_layers(), self.sim.spec.num_cores)
@@ -236,7 +302,7 @@ impl<'a> CostEngine<'a> {
         let mut total_ms = 0.0;
         let mut total_gops = 0.0;
         for b in &schedule.blocks {
-            let cost = self.block_cost(b.start, b.end, b.mp);
+            let cost = self.block_cost_at(b.start, b.end, b.mp, 1);
             let gops = self.facts.block_gops(b.start, b.end);
             total_ms += cost.latency_ms;
             total_gops += gops;
@@ -292,7 +358,7 @@ mod tests {
         let mut engine = CostEngine::new(&s, &m);
         let mps = s.spec.reduced_mp_set();
         for (start, end) in [(0usize, 1usize), (0, 6), (3, 11)] {
-            let fast = engine.block_latency_batched(start, end, &mps);
+            let fast = engine.block_latency_sweep(start, end, &mps);
             let reference = s.block_latency_ms_multi(&m.layers[start..end], &mps);
             assert_eq!(fast, reference, "[{start}..{end}]");
         }
@@ -352,6 +418,68 @@ mod tests {
         let st = engine.stats();
         assert_eq!(st.queries(), 0);
         assert_eq!(st.layer_facts_built as usize, m.num_layers());
+    }
+
+    #[test]
+    fn active_batch_defaults_to_one_and_is_bit_identical() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut engine = CostEngine::new(&s, &m);
+        assert_eq!(engine.batch(), 1);
+        let sched = Schedule::uniform_blocks(m.num_layers(), 4, 8);
+        let base = engine.schedule_cost(&sched);
+        assert_eq!(base, s.run_schedule(&m, &sched).total_ms);
+        // Explicit batch 1 hits the same cache entries.
+        assert_eq!(engine.schedule_cost_at(&sched, 1), base);
+        // set_batch(1) changes nothing.
+        engine.set_batch(1);
+        assert_eq!(engine.schedule_cost(&sched), base);
+    }
+
+    #[test]
+    fn batch_keys_do_not_collide_across_batches() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let mut engine = CostEngine::new(&s, &m);
+        let sched = Schedule::uniform_blocks(m.num_layers(), 4, 8);
+        let b1 = engine.schedule_cost(&sched);
+        engine.set_batch(4);
+        let b4 = engine.schedule_cost(&sched);
+        assert!(b4 > b1 && b4 < 4.0 * b1, "{b4} vs {b1}");
+        // Returning to batch 1 serves the original bits from cache.
+        engine.set_batch(1);
+        let misses = engine.stats().misses;
+        assert_eq!(engine.schedule_cost(&sched), b1);
+        assert_eq!(engine.stats().misses, misses, "batch-1 walk must be all hits");
+        // And the explicit-batch accessor agrees with the active-batch one.
+        assert_eq!(engine.schedule_cost_at(&sched, 4), b4);
+    }
+
+    #[test]
+    fn batched_block_cost_matches_simulator_batch_path() {
+        let s = sim();
+        let m = zoo::vgg19();
+        let mut engine = CostEngine::new(&s, &m);
+        for (start, end, mp, b) in [(0usize, 6usize, 8usize, 4usize), (3, 11, 4, 8)] {
+            let got = engine.block_cost_at(start, end, mp, b);
+            let want = s.block_latency_ms_batch(&m.layers[start..end], mp, b);
+            assert_eq!(got.latency_ms, want, "[{start}..{end}] mp={mp} b={b}");
+            assert!(got.computed_gops > 0.0);
+        }
+        // The MP-sweep path agrees with the scalar path at batch > 1 (one
+        // shared implementation; only batch 1 keeps two float orderings).
+        engine.set_batch(4);
+        let sweep = engine.block_latency_sweep(0, 6, &[8]);
+        assert_eq!(sweep[0], engine.block_cost_at(0, 6, 8, 4).latency_ms);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch must be at least 1")]
+    fn zero_batch_is_rejected() {
+        let s = sim();
+        let m = zoo::mini_cnn();
+        let mut engine = CostEngine::new(&s, &m);
+        engine.set_batch(0);
     }
 
     #[test]

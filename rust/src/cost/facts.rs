@@ -173,6 +173,30 @@ impl ModelFacts {
         (s.launch_overhead_us + s.sync_us_per_core * mp as f64) / 1e3
     }
 
+    /// Per-sample spilled bytes of block `[start, end)` at MP = `mp` — the
+    /// scalar-path replay of `memory::fused_block_traffic`'s working-set
+    /// walk, shared by the batch-1 and batch-aware scalar paths (samples
+    /// stream through the block one at a time, so which boundaries spill
+    /// is batch-independent). The MP-sweep path keeps its own interleaved
+    /// loop: its float-operation order is part of the §7 bit-exactness
+    /// contract.
+    fn spill_bytes(&self, s: &AcceleratorSpec, start: usize, end: usize,
+                   mp: usize) -> f64 {
+        let mut spill = 0.0;
+        for l in start..end - 1 {
+            let f = &self.facts[l];
+            let band_rows = (f.rows / mp as f64).ceil() + 2.0 * self.halo(l, end) as f64;
+            let band_rows = band_rows.min(f.rows);
+            let band_bytes = band_rows * f.out_w * f.out_c * BYTES_PER_ELEM;
+            let next_weights = self.facts[l + 1].weight_bytes / mp as f64;
+            let working = 2.0 * band_bytes + next_weights;
+            if working > s.core_buffer_bytes {
+                spill += 2.0 * f.out_bytes;
+            }
+        }
+        spill
+    }
+
     /// Latency of layer `i` run unfused at MP = `mp` — bit-identical to
     /// [`crate::accel::Simulator::layer_latency_ms`].
     pub fn layer_latency_ms(&self, s: &AcceleratorSpec, i: usize, mp: usize) -> f64 {
@@ -199,32 +223,82 @@ impl ModelFacts {
         // memory::fused_block_traffic replayed on the tables.
         let boundary = self.facts[start].in_bytes + self.facts[end - 1].out_bytes;
         let weight: f64 = self.facts[start..end].iter().map(|f| f.weight_bytes).sum();
-        let mut spill = 0.0;
-        for l in start..end - 1 {
-            let f = &self.facts[l];
-            let band_rows = (f.rows / mp as f64).ceil() + 2.0 * self.halo(l, end) as f64;
-            let band_rows = band_rows.min(f.rows);
-            let band_bytes = band_rows * f.out_w * f.out_c * BYTES_PER_ELEM;
-            let next_weights = self.facts[l + 1].weight_bytes / mp as f64;
-            let working = 2.0 * band_bytes + next_weights;
-            if working > s.core_buffer_bytes {
-                spill += 2.0 * f.out_bytes;
-            }
-        }
+        let spill = self.spill_bytes(s, start, end, mp);
         let t_mem = memory::transfer_ms(s, boundary + weight + spill);
         let barriers = self.barriers(start, end) as f64;
         let t_retile = s.sync_us_per_core * mp as f64 * barriers / 1e3;
         t_compute.max(t_mem) + t_retile + self.overheads_ms(s, mp)
     }
 
-    /// One MP of the batched evaluation — bit-identical to the corresponding
-    /// element of [`crate::accel::Simulator::block_latency_ms_multi`] (whose
-    /// body now delegates here). The batched path multiplies the spill
-    /// working-set terms in a different association order than the scalar
-    /// path, so the two agree only to ~1e-12, exactly as in the seed code;
-    /// both orders are preserved so each consumer stays bit-stable.
-    pub fn block_latency_ms_batched(&self, s: &AcceleratorSpec, start: usize,
-                                    end: usize, mp: usize) -> f64 {
+    /// Latency of layer `i` run unfused at MP = `mp` serving a batched
+    /// invocation of `batch` samples. `batch == 1` **is**
+    /// [`Self::layer_latency_ms`], bit for bit; larger batches charge
+    /// compute and activation movement per sample while the weight fetch,
+    /// pipeline fill, and launch/sync overheads are paid once per
+    /// invocation (rust/docs/DESIGN.md §10).
+    pub fn layer_latency_ms_at(&self, s: &AcceleratorSpec, i: usize, mp: usize,
+                               batch: usize) -> f64 {
+        assert!(batch >= 1, "batch must be at least 1");
+        if batch == 1 {
+            return self.layer_latency_ms(s, i, mp);
+        }
+        let bf = batch as f64;
+        let f = &self.facts[i];
+        let g_core = bf * partition::per_core_gops(s, f.gops, f.channels, mp);
+        let t_compute = efficiency::core_compute_ms(s, g_core);
+        let t_mem = memory::transfer_ms(
+            s, bf * (f.in_bytes + f.out_bytes) + f.weight_bytes);
+        t_compute.max(t_mem) + self.overheads_ms(s, mp)
+    }
+
+    /// Latency of fused block `[start, end)` at MP = `mp` serving a batched
+    /// invocation of `batch` samples. `batch == 1` **is**
+    /// [`Self::block_latency_ms`], bit for bit. For larger batches the
+    /// block charges, per the batch-aware model (rust/docs/DESIGN.md §10):
+    ///
+    /// - compute (with the per-sample halo redundancy of the batch-1 model)
+    ///   `batch` times, against a single pipeline fill per invocation;
+    /// - boundary activations and spilled intermediates `batch` times —
+    ///   samples stream through the block one at a time, so the per-core
+    ///   working set (and therefore which boundaries spill) is the batch-1
+    ///   computation — while **weights move once per invocation**;
+    /// - re-tile barriers per sample (the band repartition redistributes
+    ///   every sample's feature maps) and launch/sync overheads once.
+    pub fn block_latency_ms_at(&self, s: &AcceleratorSpec, start: usize,
+                               end: usize, mp: usize, batch: usize) -> f64 {
+        assert!(batch >= 1, "batch must be at least 1");
+        if batch == 1 {
+            return self.block_latency_ms(s, start, end, mp);
+        }
+        assert!(start < end && end <= self.len(), "empty or out-of-range block");
+        if end - start == 1 {
+            return self.layer_latency_ms_at(s, start, mp, batch);
+        }
+        let bf = batch as f64;
+        let computed = self.block_computed_gops(start, end, mp);
+        let g_core = bf * computed / mp as f64;
+        let t_compute = efficiency::core_compute_ms(s, g_core)
+            + s.fused_layer_us * (end - start) as f64 / 1e3;
+        // Same traffic decomposition as memory::fused_block_traffic_batch:
+        // boundary and spill per sample, weights once.
+        let boundary = self.facts[start].in_bytes + self.facts[end - 1].out_bytes;
+        let weight: f64 = self.facts[start..end].iter().map(|f| f.weight_bytes).sum();
+        let spill = self.spill_bytes(s, start, end, mp);
+        let t_mem = memory::transfer_ms(s, bf * boundary + weight + bf * spill);
+        let barriers = self.barriers(start, end) as f64;
+        let t_retile = s.sync_us_per_core * mp as f64 * barriers * bf / 1e3;
+        t_compute.max(t_mem) + t_retile + self.overheads_ms(s, mp)
+    }
+
+    /// One MP of the MP-sweep evaluation — bit-identical to the
+    /// corresponding element of
+    /// [`crate::accel::Simulator::block_latency_ms_multi`] (whose body now
+    /// delegates here). The sweep path multiplies the spill working-set
+    /// terms in a different association order than the scalar path, so the
+    /// two agree only to ~1e-12, exactly as in the seed code; both orders
+    /// are preserved so each consumer stays bit-stable.
+    pub fn block_latency_ms_sweep(&self, s: &AcceleratorSpec, start: usize,
+                                  end: usize, mp: usize) -> f64 {
         assert!(start < end && end <= self.len(), "empty or out-of-range block");
         if end - start == 1 {
             return self.layer_latency_ms(s, start, mp);
@@ -261,6 +335,22 @@ impl ModelFacts {
         let barriers = self.barriers(start, end) as f64;
         let t_retile = s.sync_us_per_core * mpf * barriers / 1e3;
         t_compute.max(t_mem) + t_retile + self.overheads_ms(s, mp)
+    }
+
+    /// The MP-sweep evaluation path at a batch size. `batch == 1` **is**
+    /// [`Self::block_latency_ms_sweep`], bit for bit — the seed's
+    /// distinct float-operation ordering exists only there. Larger batches
+    /// have no seed reference, so both evaluation paths share one
+    /// implementation ([`Self::block_latency_ms_at`]) and the DP's sweep
+    /// agrees with the scalar path exactly.
+    pub fn block_latency_ms_sweep_at(&self, s: &AcceleratorSpec, start: usize,
+                                     end: usize, mp: usize, batch: usize) -> f64 {
+        assert!(batch >= 1, "batch must be at least 1");
+        if batch == 1 {
+            self.block_latency_ms_sweep(s, start, end, mp)
+        } else {
+            self.block_latency_ms_at(s, start, end, mp, batch)
+        }
     }
 }
 
@@ -359,6 +449,97 @@ mod tests {
                     fusion::block_redundant_gops(&m.layers[start..end], mp);
                 assert_eq!(facts.block_computed_gops(start, end, mp), reference);
             }
+        }
+    }
+
+    #[test]
+    fn batch_one_is_the_scalar_path_bit_for_bit() {
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::vgg19()] {
+            let facts = ModelFacts::new(&m);
+            let n = m.num_layers();
+            for (start, end) in [(0usize, 1usize), (0, 4), (2, 9), (0, n)] {
+                let end = end.min(n);
+                for mp in [1usize, 4, 32] {
+                    assert_eq!(
+                        facts.block_latency_ms_at(&s.spec, start, end, mp, 1),
+                        facts.block_latency_ms(&s.spec, start, end, mp),
+                        "{} [{start}..{end}] mp={mp}", m.name);
+                    assert_eq!(
+                        facts.block_latency_ms_sweep_at(&s.spec, start, end, mp, 1),
+                        facts.block_latency_ms_sweep(&s.spec, start, end, mp),
+                        "{} [{start}..{end}] mp={mp}", m.name);
+                }
+            }
+            for i in [0usize, n / 2] {
+                assert_eq!(facts.layer_latency_ms_at(&s.spec, i, 8, 1),
+                           facts.layer_latency_ms(&s.spec, i, 8));
+                // At batch > 1 the fact-table walk replays the Simulator's
+                // reference path (which charges via unfused_layer_bytes_batch)
+                // bit for bit.
+                for b in [2usize, 8] {
+                    assert_eq!(facts.layer_latency_ms_at(&s.spec, i, 8, b),
+                               s.layer_latency_ms_batch(&m.layers[i], 8, b),
+                               "{} layer {i} batch {b}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_strictly_sublinearly() {
+        // t(b) < b * t(1): fill, weights, and launch/sync amortize; and the
+        // per-sample latency t(b)/b strictly decreases in b for weighted
+        // blocks.
+        let s = sim();
+        let m = zoo::vgg19();
+        let facts = ModelFacts::new(&m);
+        let n = m.num_layers();
+        for (start, end) in [(0usize, 1usize), (0, 6), (3, 11), (0, n)] {
+            for mp in [1usize, 8, 32] {
+                let t1 = facts.block_latency_ms_at(&s.spec, start, end, mp, 1);
+                let mut last_per_sample = f64::INFINITY;
+                for b in [1usize, 2, 4, 8, 16] {
+                    let tb = facts.block_latency_ms_at(&s.spec, start, end, mp, b);
+                    assert!(tb >= t1, "[{start}..{end}] mp={mp} b={b}");
+                    assert!(tb < b as f64 * t1 + 1e-15,
+                            "[{start}..{end}] mp={mp} b={b}: {tb} vs {}",
+                            b as f64 * t1);
+                    let per_sample = tb / b as f64;
+                    assert!(per_sample < last_per_sample + 1e-15,
+                            "[{start}..{end}] mp={mp} b={b}: per-sample not \
+                             decreasing ({per_sample} vs {last_per_sample})");
+                    last_per_sample = per_sample;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_traffic_matches_memory_decomposition() {
+        // The facts walk charges exactly what fused_block_traffic_batch
+        // decomposes: boundary and spill per sample, weights once.
+        let s = sim();
+        let m = zoo::vgg19();
+        let facts = ModelFacts::new(&m);
+        for (start, end, mp, b) in [(0usize, 6usize, 4usize, 8usize), (3, 11, 8, 4)] {
+            let traffic = crate::accel::memory::fused_block_traffic_batch(
+                &s.spec, &m.layers[start..end], mp, b);
+            let t_mem = crate::accel::memory::transfer_ms(&s.spec, traffic.total());
+            // Reconstruct the memory term the scalar batch walk computed.
+            let computed = facts.block_computed_gops(start, end, mp);
+            let g_core = b as f64 * computed / mp as f64;
+            let t_compute = crate::accel::efficiency::core_compute_ms(&s.spec, g_core)
+                + s.spec.fused_layer_us * (end - start) as f64 / 1e3;
+            let barriers = facts.barriers(start, end) as f64;
+            let t_retile =
+                s.spec.sync_us_per_core * mp as f64 * barriers * b as f64 / 1e3;
+            let overheads = (s.spec.launch_overhead_us
+                + s.spec.sync_us_per_core * mp as f64) / 1e3;
+            let reference = t_compute.max(t_mem) + t_retile + overheads;
+            let got = facts.block_latency_ms_at(&s.spec, start, end, mp, b);
+            assert!((got - reference).abs() < 1e-12,
+                    "[{start}..{end}] mp={mp} b={b}: {got} vs {reference}");
         }
     }
 

@@ -13,19 +13,24 @@
 //!   counts. This is the single home of the math that was previously
 //!   hand-inlined twice (in `Simulator::block_latency_ms` via the
 //!   `fusion`/`memory` modules and again inside `block_latency_ms_multi`).
-//! - [`CostEngine`]: a memoized `(start, end, mp) → latency` cache over a
-//!   `(Simulator, Model)` pair with hit/miss statistics, whole-schedule
-//!   evaluation, and incremental (`delta_cost`) evaluation for local-move
-//!   searches.
+//! - [`CostEngine`]: a memoized `(start, end, mp, batch) → latency` cache
+//!   over a `(Simulator, Model)` pair with hit/miss statistics,
+//!   whole-schedule evaluation, incremental (`delta_cost`) evaluation for
+//!   local-move searches, and an *active batch size* that re-targets every
+//!   implicit-batch query (so a search written against the engine
+//!   co-optimizes at any batch — rust/docs/DESIGN.md §10).
 //!
-//! **Exactness contract:** every number produced here is bit-identical to
-//! the corresponding `Simulator` method (`layer_latency_ms`,
-//! `block_latency_ms`, `run_schedule`). The float operations are kept in
-//! the exact order of the reference paths — which is also why aggregate
-//! float sums iterate over the fact tables instead of using prefix-sum
-//! differences (float prefix differences are not bit-equal to sequential
-//! sums; integer prefixes like the barrier counts are). The equality is
-//! pinned by property tests in `rust/tests/cost_engine.rs`.
+//! **Exactness contract:** at batch 1 — the default — every number produced
+//! here is bit-identical to the corresponding `Simulator` method
+//! (`layer_latency_ms`, `block_latency_ms`, `run_schedule`). The float
+//! operations are kept in the exact order of the reference paths — which is
+//! also why aggregate float sums iterate over the fact tables instead of
+//! using prefix-sum differences (float prefix differences are not bit-equal
+//! to sequential sums; integer prefixes like the barrier counts are). The
+//! equality is pinned by property tests in `rust/tests/cost_engine.rs`.
+//! Batches above 1 evaluate the batch-aware model
+//! ([`ModelFacts::block_latency_ms_at`]): weights move once per invocation,
+//! compute and activation movement are charged per sample.
 
 pub mod engine;
 pub mod facts;

@@ -20,14 +20,14 @@
 //! | [`microbench`] | synthesized layer sweeps (the paper's Section II methodology) |
 //! | [`accel`] | the MLU100 performance-simulator substrate (see rust/docs/DESIGN.md §6) |
 //! | [`perfmodel`] | roofline, `OpCount_critical`, the `MP(C, Op)` scorer (Eq. 5) |
-//! | [`cost`] | memoized cost-evaluation engine shared by every consumer (rust/docs/DESIGN.md §7) |
+//! | [`cost`] | memoized, batch-aware cost-evaluation engine shared by every consumer (rust/docs/DESIGN.md §7, §10) |
 //! | [`optimizer`] | Algorithm 1 and the seven evaluation strategies (Table III) |
 //! | [`search`] | the reduced brute-force oracle (strategy 7), annealing, exhaustive certification |
 //! | [`tuner`] | the unified tuning API: one request/outcome surface over every search backend (rust/docs/DESIGN.md §8) |
 //! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
 //! | [`runtime`] | PJRT client: load AOT HLO-text artifacts, execute |
 //! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
-//! | [`serving`] | multi-tenant serving simulator + load-aware core allocation (rust/docs/DESIGN.md §9) |
+//! | [`serving`] | multi-tenant serving simulator + load-aware (MP, batch) allocation (rust/docs/DESIGN.md §9, §10) |
 //! | [`stats`] | descriptive stats, regression, PCA (used for characterization) |
 //! | [`util`] | JSON, RNG, tables, CSV (offline-environment substitutes) |
 //! | [`bench_harness`] | criterion-replacement used by `rust/benches/` |

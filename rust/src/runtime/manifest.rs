@@ -84,7 +84,10 @@ impl Manifest {
                     k.clone(),
                     GoldenSpec {
                         dir: g.get("dir").as_str().ok_or("golden missing dir")?.to_string(),
-                        num_inputs: g.get("num_inputs").as_usize().ok_or("golden missing num_inputs")?,
+                        num_inputs: g
+                            .get("num_inputs")
+                            .as_usize()
+                            .ok_or("golden missing num_inputs")?,
                         sha256: g.get("sha256").as_str().unwrap_or("").to_string(),
                     },
                 );

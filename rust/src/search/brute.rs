@@ -169,7 +169,7 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
             // One shared-precomputation call for the whole MP set —
             // identical numbers to per-MP block_latency_ms_multi (the facts
             // live in the engine, derived once per model).
-            let costs = engine.block_latency_batched(i, j, mp_set);
+            let costs = engine.block_latency_sweep(i, j, mp_set);
             stats.evaluations += mp_set.len();
             let (best_idx, best) = costs
                 .iter()

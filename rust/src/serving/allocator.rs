@@ -19,27 +19,47 @@ use crate::accel::Simulator;
 use crate::tuner::{OracleDp, Tuner, TuningError, TuningRequest};
 use crate::util::Table;
 
-use super::cluster::ModelService;
+use super::cluster::{batched_service_ms, ModelService};
 use super::workload::ModelMix;
 
-/// One candidate operating point for a model: every request reserves
-/// `cores` cores for the tuned schedule's predicted `service_ms`.
+/// One candidate operating point for a model: a batch of `b` requests
+/// reserves `cores` cores for the tuned schedule's predicted batched
+/// latency `service_at(b)` (`service_ms` is the single-request time).
 #[derive(Debug, Clone, PartialEq)]
 pub struct OperatingPoint {
-    /// Cores a request occupies — the max per-block MP of the schedule the
+    /// Cores a request reserves — the max per-block MP of the schedule the
     /// constrained oracle tuned under this cap.
     pub cores: usize,
-    /// Predicted per-request latency of that schedule, ms.
+    /// Predicted per-request (batch-1) latency of that schedule, ms.
     pub service_ms: f64,
+    /// Predicted latency of one batched invocation at batch `index + 1`,
+    /// ms (`[0]` equals `service_ms`); derived from the tuned schedule
+    /// through the shared engine's batch-aware model.
+    pub batch_service_ms: Vec<f64>,
     /// The tuned schedule (summary form, for reports).
     pub schedule: String,
 }
 
 impl OperatingPoint {
-    /// Core-milliseconds one request consumes: the allocator's load-aware
-    /// objective (smaller = more requests per core-second).
+    /// Predicted invocation latency at `batch` — the same pricing rule the
+    /// cluster's [`ModelService::service_at`] applies (one shared
+    /// implementation, so the allocator's feasibility/capacity math and the
+    /// simulator's invocation pricing cannot drift apart).
+    pub fn service_at(&self, batch: usize) -> f64 {
+        batched_service_ms(&self.batch_service_ms, self.service_ms, batch)
+    }
+
+    /// Core-milliseconds one request consumes at batch 1: the allocator's
+    /// load-aware objective (smaller = more requests per core-second).
     pub fn core_ms(&self) -> f64 {
         self.cores as f64 * self.service_ms
+    }
+
+    /// Core-milliseconds *per request* when requests ride batch-`b`
+    /// invocations: `cores * service_at(b) / b` — the batched load-aware
+    /// objective (rust/docs/DESIGN.md §10).
+    pub fn core_ms_at(&self, batch: usize) -> f64 {
+        self.cores as f64 * self.service_at(batch) / batch as f64
     }
 }
 
@@ -55,8 +75,12 @@ pub struct ModelAllocation {
     pub points: Vec<OperatingPoint>,
     /// Minimum-latency point (the paper's single-request objective).
     pub single: OperatingPoint,
-    /// Minimum core-ms point among SLO-feasible candidates.
+    /// Minimum per-request core-ms point among SLO-feasible `(point,
+    /// batch)` candidates.
     pub load_aware: OperatingPoint,
+    /// The batch size at which `load_aware` minimizes per-request core-ms
+    /// (1 unless the plan swept batches — see `plan_allocations_batched`).
+    pub load_aware_batch: usize,
 }
 
 impl ModelAllocation {
@@ -75,17 +99,16 @@ pub struct AllocationPlan {
 
 impl AllocationPlan {
     /// The per-model services the cluster simulates: load-aware points when
-    /// `load_aware`, single-request-optimal points otherwise.
+    /// `load_aware`, single-request-optimal points otherwise. Each service
+    /// carries its point's batched-latency table, so the `batch` dispatch
+    /// policy prices batched invocations with the engine-predicted numbers.
     pub fn services(&self, load_aware: bool) -> Vec<ModelService> {
         self.models
             .iter()
             .map(|m| {
                 let p = if load_aware { &m.load_aware } else { &m.single };
-                ModelService {
-                    name: m.name.clone(),
-                    cores: p.cores,
-                    service_ms: p.service_ms,
-                }
+                ModelService::new(m.name.clone(), p.cores, p.service_ms)
+                    .with_batch_table(p.batch_service_ms.clone())
             })
             .collect()
     }
@@ -100,6 +123,21 @@ impl AllocationPlan {
         for m in &self.models {
             let p = if load_aware { &m.load_aware } else { &m.single };
             core_ms_per_req += m.share * p.core_ms();
+        }
+        if core_ms_per_req <= 0.0 {
+            return 0.0;
+        }
+        num_cores as f64 * 1000.0 / core_ms_per_req
+    }
+
+    /// Predicted maximum sustainable aggregate rate when every model serves
+    /// batch-formed invocations at its load-aware batch: the batched
+    /// counterpart of [`Self::predicted_capacity_rps`] (identical when no
+    /// model batches above 1).
+    pub fn predicted_batched_capacity_rps(&self, num_cores: usize) -> f64 {
+        let mut core_ms_per_req = 0.0;
+        for m in &self.models {
+            core_ms_per_req += m.share * m.load_aware.core_ms_at(m.load_aware_batch);
         }
         if core_ms_per_req <= 0.0 {
             return 0.0;
@@ -132,8 +170,15 @@ impl AllocationPlan {
         }
         let mut out = format!("{t}\n(* = single-request-optimal; lat in ms)\n");
         for m in &self.models {
-            out.push_str(&format!("{}: serves {}\n", m.name,
-                                  m.load_aware.schedule));
+            if m.load_aware_batch > 1 {
+                out.push_str(&format!(
+                    "{}: serves {} (batch {}, {:.3} ms/invocation)\n",
+                    m.name, m.load_aware.schedule, m.load_aware_batch,
+                    m.load_aware.service_at(m.load_aware_batch)));
+            } else {
+                out.push_str(&format!("{}: serves {}\n", m.name,
+                                      m.load_aware.schedule));
+            }
         }
         out
     }
@@ -142,15 +187,42 @@ impl AllocationPlan {
 /// Sweep each model's MP caps through the constrained oracle DP and pick
 /// both operating points. One `TuningRequest` context per model: the caps
 /// share the memoized `(block, mp)` cache, so the whole sweep costs barely
-/// more than one uncapped search.
+/// more than one uncapped search. Equivalent to
+/// [`plan_allocations_batched`] with `max_batch = 1`.
 pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
                         slo_ms: Option<f64>) -> Result<AllocationPlan, TuningError> {
+    plan_allocations_batched(sim, mix, slo_ms, 1)
+}
+
+/// The `(mp_cap, batch)` operating-point sweep (rust/docs/DESIGN.md §10).
+///
+/// Per model, each MP cap runs the constrained oracle DP at batch 1 —
+/// exactly the [`plan_allocations`] sweep, so the batch-1 points are
+/// unchanged — and the tuned schedule is then priced at every batch
+/// `1..=max_batch` through the same engine's batch-aware model, giving each
+/// point a batched-latency table. The **load-aware** choice minimizes
+/// per-request core-milliseconds `cores * service_at(b) / b` over the full
+/// `(point, batch)` grid, subject to the invocation latency `service_at(b)`
+/// meeting the SLO (a request's end-to-end latency is at least its
+/// invocation's); the **single-request** choice stays the paper's batch-1
+/// minimum-latency point.
+pub fn plan_allocations_batched(sim: &Simulator, mix: &ModelMix,
+                                slo_ms: Option<f64>, max_batch: usize)
+                                -> Result<AllocationPlan, TuningError> {
+    if max_batch == 0 {
+        return Err(TuningError::InvalidBatch { batch: 0 });
+    }
     let caps = sim.spec.reduced_mp_set();
     let mut models = Vec::new();
     for (mi, model) in mix.models.iter().enumerate() {
         let request = TuningRequest::new(sim, model);
         let mut cx = request.context();
-        let mut points: Vec<OperatingPoint> = Vec::new();
+        // Every cap outcome, pre-dedup: same-cores schedules from different
+        // caps can have different fusion structures, and a structure that is
+        // marginally slower at batch 1 can still win the batched grid (its
+        // weights amortize differently), so the load-aware scan must see
+        // them all.
+        let mut candidates: Vec<OperatingPoint> = Vec::new();
         for &cap in &caps {
             let mps: Vec<usize> =
                 caps.iter().copied().filter(|&m| m <= cap).collect();
@@ -164,18 +236,29 @@ pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
                 .map(|b| b.mp)
                 .max()
                 .unwrap_or(1);
-            let point = OperatingPoint {
+            // Price the tuned schedule at every batch the policy may form
+            // (all served from the shared (block, mp, batch) cache).
+            let batch_service_ms: Vec<f64> = (1..=max_batch)
+                .map(|b| cx.engine_mut().schedule_cost_at(&out.schedule, b))
+                .collect();
+            candidates.push(OperatingPoint {
                 cores,
                 service_ms: out.predicted_ms,
+                batch_service_ms,
                 schedule: out.schedule.summary(),
-            };
-            match points.iter().position(|p| p.cores == cores) {
+            });
+        }
+        // The reported sweep keeps one point per distinct core occupancy,
+        // best batch-1 service each (the pre-batch surface).
+        let mut points: Vec<OperatingPoint> = Vec::new();
+        for point in &candidates {
+            match points.iter().position(|p| p.cores == point.cores) {
                 Some(i) => {
                     if point.service_ms < points[i].service_ms {
-                        points[i] = point;
+                        points[i] = point.clone();
                     }
                 }
-                None => points.push(point),
+                None => points.push(point.clone()),
             }
         }
 
@@ -191,23 +274,37 @@ pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
         }
         let single = single.expect("cap sweep yields at least one point").clone();
 
-        let mut load_aware: Option<&OperatingPoint> = None;
-        for p in &points {
-            if let Some(slo) = slo_ms {
-                if p.service_ms > slo {
-                    continue;
+        // Load-aware: minimum per-request core-ms over the full
+        // (candidate, batch) grid — every cap outcome, not just the
+        // deduped points — SLO-feasible invocations only. At max_batch = 1
+        // this picks exactly the pre-batch objective's point (a dropped
+        // duplicate has strictly worse batch-1 service at the same cores,
+        // so it can never win the batch-1 grid).
+        let mut load_aware: Option<(&OperatingPoint, usize)> = None;
+        for p in &candidates {
+            for batch in 1..=max_batch {
+                let service = p.service_at(batch);
+                if let Some(slo) = slo_ms {
+                    if service > slo {
+                        continue;
+                    }
+                }
+                let key = (p.core_ms_at(batch), service);
+                let better = match load_aware {
+                    None => true,
+                    Some((b, bb)) => key < (b.core_ms_at(bb), b.service_at(bb)),
+                };
+                if better {
+                    load_aware = Some((p, batch));
                 }
             }
-            let better = match load_aware {
-                None => true,
-                Some(b) => (p.core_ms(), p.service_ms) < (b.core_ms(), b.service_ms),
-            };
-            if better {
-                load_aware = Some(p);
-            }
         }
-        // No point meets the SLO at all: fall back to the fastest point.
-        let load_aware = load_aware.cloned().unwrap_or_else(|| single.clone());
+        // No (point, batch) meets the SLO at all: fall back to the fastest
+        // single-request point.
+        let (load_aware, load_aware_batch) = match load_aware {
+            Some((p, b)) => (p.clone(), b),
+            None => (single.clone(), 1),
+        };
 
         models.push(ModelAllocation {
             name: model.name.clone(),
@@ -215,6 +312,7 @@ pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
             points,
             single,
             load_aware,
+            load_aware_batch,
         });
     }
     Ok(AllocationPlan { models, slo_ms })
@@ -284,6 +382,65 @@ mod tests {
         let impossible = plan_allocations(&sim, &mix, Some(1e-9)).unwrap();
         assert_eq!(impossible.models[0].load_aware,
                    impossible.models[0].single);
+    }
+
+    #[test]
+    fn batched_sweep_keeps_batch_one_points_and_amortizes() {
+        let sim = Simulator::mlu100();
+        let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+        let base = plan_allocations(&sim, &mix, None).unwrap();
+        let plan = plan_allocations_batched(&sim, &mix, None, 8).unwrap();
+        let m = &plan.models[0];
+        let b0 = &base.models[0];
+        // The batch sweep does not move the batch-1 geometry.
+        assert_eq!(m.single.cores, b0.single.cores);
+        assert_eq!(m.single.service_ms, b0.single.service_ms);
+        assert_eq!(base.models[0].load_aware_batch, 1);
+        for p in &m.points {
+            assert_eq!(p.batch_service_ms.len(), 8);
+            assert_eq!(p.batch_service_ms[0], p.service_ms);
+            for b in 2..=8usize {
+                // Invocations get longer with batch, but sub-linearly
+                // (weights and overheads amortize).
+                assert!(p.service_at(b) >= p.service_at(b - 1), "batch {b}");
+                assert!(p.service_at(b) < b as f64 * p.service_ms, "batch {b}");
+            }
+        }
+        // With no SLO the per-sample amortization always pushes the
+        // load-aware choice to the largest batch.
+        assert_eq!(m.load_aware_batch, 8);
+        assert!(m.load_aware.core_ms_at(8) < m.load_aware.core_ms());
+        assert!(plan.predicted_batched_capacity_rps(sim.spec.num_cores)
+                > plan.predicted_capacity_rps(sim.spec.num_cores, true));
+        // And the services carry the table for the batch dispatch policy.
+        let svcs = plan.services(true);
+        assert_eq!(svcs[0].batch_service_ms.len(), 8);
+        assert_eq!(svcs[0].service_at(8), m.load_aware.service_at(8));
+    }
+
+    #[test]
+    fn slo_constrains_the_batched_choice() {
+        let sim = Simulator::mlu100();
+        let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+        let free = plan_allocations_batched(&sim, &mix, None, 8).unwrap();
+        let single_ms = free.models[0].single.service_ms;
+        // An SLO exactly at the fastest single-request time: every batch-2+
+        // invocation is strictly slower, so only the single-request optimum
+        // at batch 1 is feasible.
+        let tight = plan_allocations_batched(&sim, &mix, Some(single_ms), 8)
+            .unwrap();
+        let m = &tight.models[0];
+        assert_eq!(m.load_aware_batch, 1);
+        assert_eq!(m.load_aware.cores, m.single.cores);
+        // A looser SLO admits batches, and the chosen invocation meets it.
+        let slo = 4.0 * single_ms;
+        let loose = plan_allocations_batched(&sim, &mix, Some(slo), 8).unwrap();
+        let m = &loose.models[0];
+        assert!(m.load_aware.service_at(m.load_aware_batch) <= slo);
+        assert!(m.load_aware.core_ms_at(m.load_aware_batch)
+                <= m.single.core_ms() + 1e-12);
+        // Zero max_batch is rejected, not clamped.
+        assert!(plan_allocations_batched(&sim, &mix, None, 0).is_err());
     }
 
     #[test]

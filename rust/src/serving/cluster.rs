@@ -14,13 +14,53 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::queue::{DispatchPolicy, QueueSet, QueuedRequest};
 use super::workload::Request;
 
-/// The per-model operating point the cluster serves: every request for the
-/// model occupies `cores` cores for `service_ms` milliseconds.
+/// The per-model operating point the cluster serves: a batch of `b`
+/// requests for the model occupies `cores` cores for `service_at(b)`
+/// milliseconds (`service_ms` is the single-request time, `b = 1`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelService {
     pub name: String,
     pub cores: usize,
     pub service_ms: f64,
+    /// Predicted service time of one batched invocation at batch
+    /// `index + 1`, ms — the allocator derives it from the tuned schedule
+    /// through the cost engine (rust/docs/DESIGN.md §10). May be empty (or
+    /// shorter than a requested batch): [`Self::service_at`] then
+    /// extrapolates linearly from `service_ms`, i.e. assumes no
+    /// amortization for unplanned batch sizes.
+    pub batch_service_ms: Vec<f64>,
+}
+
+impl ModelService {
+    /// An operating point with no batch table (single-request serving, or
+    /// linear scaling under the `batch` policy).
+    pub fn new(name: impl Into<String>, cores: usize, service_ms: f64) -> ModelService {
+        ModelService { name: name.into(), cores, service_ms, batch_service_ms: Vec::new() }
+    }
+
+    /// Attach the engine-predicted batched service times (entry `b - 1` is
+    /// the invocation latency at batch `b`).
+    pub fn with_batch_table(mut self, table: Vec<f64>) -> ModelService {
+        self.batch_service_ms = table;
+        self
+    }
+
+    /// Predicted service time of one invocation carrying `batch` requests.
+    pub fn service_at(&self, batch: usize) -> f64 {
+        batched_service_ms(&self.batch_service_ms, self.service_ms, batch)
+    }
+}
+
+/// The one batched-invocation pricing rule, shared by [`ModelService`] and
+/// the allocator's operating points: prefer the planned table (entry
+/// `batch - 1`), extrapolate linearly from the single-request time past it
+/// (no amortization assumed for unplanned batch sizes).
+pub(crate) fn batched_service_ms(table: &[f64], single_ms: f64, batch: usize) -> f64 {
+    assert!(batch >= 1, "batch must be at least 1");
+    match table.get(batch - 1) {
+        Some(&t) => t,
+        None => batch as f64 * single_ms,
+    }
 }
 
 /// Scenario configuration for one simulation run.
@@ -54,6 +94,9 @@ pub struct CompletedRequest {
     pub start_ms: f64,
     pub finish_ms: f64,
     pub cores: usize,
+    /// Size of the batched invocation this request rode in (1 under the
+    /// single-request policies).
+    pub batch: usize,
 }
 
 impl CompletedRequest {
@@ -88,11 +131,14 @@ impl SimResult {
         self.completed.iter().map(|c| c.finish_ms).fold(0.0, f64::max)
     }
 
-    /// Core-milliseconds actually occupied by running requests.
+    /// Core-milliseconds actually occupied by running invocations. A
+    /// batched invocation occupies its cores once for the whole batch, so
+    /// each rider request contributes its `1/batch` share (exact for
+    /// batch 1, where every request is its own invocation).
     pub fn busy_core_ms(&self) -> f64 {
         self.completed
             .iter()
-            .map(|c| c.service_ms() * c.cores as f64)
+            .map(|c| c.service_ms() * c.cores as f64 / c.batch as f64)
             .sum()
     }
 
@@ -116,15 +162,21 @@ impl SimResult {
     }
 }
 
-/// A running request on the completion heap. `BinaryHeap` is a max-heap, so
-/// `Ord` is reversed to pop the *earliest* `(finish_ms, seq)` first; `seq`
-/// is the start order, making equal-time pops deterministic.
-#[derive(Debug, Clone, Copy)]
+/// A running invocation on the completion heap — one request under the
+/// single-request policies, up to `max_batch` same-model requests under the
+/// `batch` policy. `BinaryHeap` is a max-heap, so `Ord` is reversed to pop
+/// the *earliest* `(finish_ms, seq)` first; `seq` is the start order,
+/// making equal-time pops deterministic.
+#[derive(Debug, Clone)]
 struct Completion {
     finish_ms: f64,
     seq: u64,
     start_ms: f64,
-    req: QueuedRequest,
+    /// Cores the invocation occupies (the model's allocation, once for the
+    /// whole batch).
+    cores: usize,
+    /// The requests riding the invocation, in arrival order.
+    reqs: Vec<QueuedRequest>,
 }
 
 impl PartialEq for Completion {
@@ -157,12 +209,32 @@ impl Ord for Completion {
 /// completion instant (a fixed-population closed loop). Completions at the
 /// same instant as an arrival are processed first, so freed cores are
 /// visible to the arrival's dispatch.
+///
+/// Under [`DispatchPolicy::Batch`] a third event kind joins arrivals and
+/// completions: the *flush deadline* of a held partial batch
+/// (`oldest arrival + max_wait_ms`), processed after any completion or
+/// arrival at the same instant so a just-freed core or a just-arrived
+/// request is visible to the flush. The simulation stays a pure function of
+/// its inputs.
 pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
                 trace: &[Request], closed_loop: Option<usize>)
                 -> Result<SimResult, String> {
     if cfg.num_cores == 0 {
         return Err("cluster has no cores".into());
     }
+    let batch_knobs = match cfg.policy {
+        DispatchPolicy::Batch { max_batch, max_wait_ms } => {
+            if max_batch == 0 {
+                return Err("batch policy needs max_batch >= 1".into());
+            }
+            if !(max_wait_ms >= 0.0) {
+                return Err(format!(
+                    "batch policy needs a non-negative max_wait_ms, got {max_wait_ms}"));
+            }
+            Some((max_batch, max_wait_ms))
+        }
+        _ => None,
+    };
     for s in services {
         if s.cores == 0 || s.cores > cfg.num_cores {
             return Err(format!(
@@ -173,6 +245,11 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
             return Err(format!(
                 "model '{}' has non-positive service time {} ms",
                 s.name, s.service_ms));
+        }
+        if let Some(&bad) = s.batch_service_ms.iter().find(|&&t| !(t > 0.0)) {
+            return Err(format!(
+                "model '{}' has a non-positive batched service time {bad} ms",
+                s.name));
         }
     }
     for w in trace.windows(2) {
@@ -215,66 +292,161 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
     loop {
         let next_arrival = arrivals.front().map(|r| r.arrival_ms);
         let next_finish = heap.peek().map(|c| c.finish_ms);
-        // Completions first on ties: free cores before dispatching.
-        let take_finish = match (next_arrival, next_finish) {
-            (None, None) => break,
-            (None, Some(_)) => true,
-            (Some(_), None) => false,
-            (Some(a), Some(f)) => f <= a,
-        };
-        let now = if take_finish {
-            let c = heap.pop().unwrap();
-            free += c.req.cores;
-            events.push(SimEvent {
-                time_ms: c.finish_ms,
-                kind: SimEventKind::Finish { id: c.req.id, free_cores: free },
-            });
-            completed.push(CompletedRequest {
-                id: c.req.id,
-                model: c.req.model,
-                arrival_ms: c.req.arrival_ms,
-                start_ms: c.start_ms,
-                finish_ms: c.finish_ms,
-                cores: c.req.cores,
-            });
-            if closed_loop.is_some() {
-                if let Some(mut nxt) = backlog.pop_front() {
-                    nxt.arrival_ms = c.finish_ms;
-                    arrivals.push_back(nxt);
+        // The earliest flush deadline among held partial batches that could
+        // dispatch right now (batch policy only). Anything not dispatchable
+        // now — cores busy, or already a full batch — needs no timer: the
+        // completion or arrival that changes that re-runs the dispatch pass.
+        let next_deadline = batch_knobs.and_then(|(max_batch, max_wait_ms)| {
+            let mut deadline: Option<f64> = None;
+            for (m, svc) in services.iter().enumerate() {
+                let Some(head) = queues.head(m) else { continue };
+                if svc.cores > free || queues.len_for(m) >= max_batch {
+                    continue;
+                }
+                let d = head.arrival_ms + max_wait_ms;
+                let sooner = match deadline {
+                    None => true,
+                    Some(cur) => d < cur,
+                };
+                if sooner {
+                    deadline = Some(d);
                 }
             }
-            c.finish_ms
-        } else {
-            let r = arrivals.pop_front().unwrap();
-            events.push(SimEvent {
-                time_ms: r.arrival_ms,
-                kind: SimEventKind::Arrive { id: r.id, model: r.model },
-            });
-            let svc = &services[r.model];
-            queues.push(QueuedRequest {
-                id: r.id,
-                model: r.model,
-                arrival_ms: r.arrival_ms,
-                cores: svc.cores,
-                service_ms: svc.service_ms,
-            });
-            r.arrival_ms
+            deadline
+        });
+        // Tie order at one instant: completions first (free cores before
+        // dispatching), then arrivals (a request arriving exactly at a
+        // flush deadline joins the batch), then deadlines.
+        let mut choice: Option<(f64, u8)> = None;
+        for (t, rank) in [(next_finish, 0u8), (next_arrival, 1), (next_deadline, 2)] {
+            if let Some(t) = t {
+                let better = match choice {
+                    None => true,
+                    Some(best) => (t, rank) < best,
+                };
+                if better {
+                    choice = Some((t, rank));
+                }
+            }
+        }
+        let Some((event_ms, rank)) = choice else { break };
+        let now = match rank {
+            0 => {
+                let c = heap.pop().unwrap();
+                free += c.cores;
+                let batch = c.reqs.len();
+                for r in &c.reqs {
+                    events.push(SimEvent {
+                        time_ms: c.finish_ms,
+                        kind: SimEventKind::Finish { id: r.id, free_cores: free },
+                    });
+                    completed.push(CompletedRequest {
+                        id: r.id,
+                        model: r.model,
+                        arrival_ms: r.arrival_ms,
+                        start_ms: c.start_ms,
+                        finish_ms: c.finish_ms,
+                        cores: c.cores,
+                        batch,
+                    });
+                }
+                if closed_loop.is_some() {
+                    for _ in 0..batch {
+                        if let Some(mut nxt) = backlog.pop_front() {
+                            nxt.arrival_ms = c.finish_ms;
+                            arrivals.push_back(nxt);
+                        }
+                    }
+                }
+                c.finish_ms
+            }
+            1 => {
+                let r = arrivals.pop_front().unwrap();
+                events.push(SimEvent {
+                    time_ms: r.arrival_ms,
+                    kind: SimEventKind::Arrive { id: r.id, model: r.model },
+                });
+                let svc = &services[r.model];
+                queues.push(QueuedRequest {
+                    id: r.id,
+                    model: r.model,
+                    arrival_ms: r.arrival_ms,
+                    cores: svc.cores,
+                    service_ms: svc.service_ms,
+                });
+                r.arrival_ms
+            }
+            // Flush deadline: only the clock advances; the dispatch pass
+            // below releases every matured batch.
+            _ => event_ms,
         };
 
-        // Work-conserving dispatch at the current instant.
-        while let Some(q) = queues.pop_fitting(cfg.policy, free) {
-            free -= q.cores;
-            events.push(SimEvent {
-                time_ms: now,
-                kind: SimEventKind::Start { id: q.id, cores: q.cores },
-            });
-            seq += 1;
-            heap.push(Completion {
-                finish_ms: now + q.service_ms,
-                seq,
-                start_ms: now,
-                req: q,
-            });
+        // Dispatch at the current instant.
+        match batch_knobs {
+            None => {
+                // Single-request policies: work-conserving fit-filtered pops.
+                while let Some(q) = queues.pop_fitting(cfg.policy, free) {
+                    free -= q.cores;
+                    events.push(SimEvent {
+                        time_ms: now,
+                        kind: SimEventKind::Start { id: q.id, cores: q.cores },
+                    });
+                    seq += 1;
+                    heap.push(Completion {
+                        finish_ms: now + q.service_ms,
+                        seq,
+                        start_ms: now,
+                        cores: q.cores,
+                        reqs: vec![q],
+                    });
+                }
+            }
+            Some((max_batch, max_wait_ms)) => {
+                // Batch former: release every model whose queue holds a full
+                // batch or whose oldest request has hit the wait deadline,
+                // longest-waiting model first (ties by request id).
+                loop {
+                    let mut pick: Option<(usize, (f64, u64))> = None;
+                    for (m, svc) in services.iter().enumerate() {
+                        let Some(head) = queues.head(m) else { continue };
+                        if svc.cores > free {
+                            continue;
+                        }
+                        let mature = queues.len_for(m) >= max_batch
+                            || now >= head.arrival_ms + max_wait_ms;
+                        if !mature {
+                            continue;
+                        }
+                        let key = (head.arrival_ms, head.id);
+                        let better = match pick {
+                            None => true,
+                            Some((_, best)) => key < best,
+                        };
+                        if better {
+                            pick = Some((m, key));
+                        }
+                    }
+                    let Some((m, _)) = pick else { break };
+                    let reqs = queues.pop_front_n(m, max_batch);
+                    let cores = services[m].cores;
+                    let service = services[m].service_at(reqs.len());
+                    free -= cores;
+                    for r in &reqs {
+                        events.push(SimEvent {
+                            time_ms: now,
+                            kind: SimEventKind::Start { id: r.id, cores },
+                        });
+                    }
+                    seq += 1;
+                    heap.push(Completion {
+                        finish_ms: now + service,
+                        seq,
+                        start_ms: now,
+                        cores,
+                        reqs,
+                    });
+                }
+            }
         }
     }
 
@@ -288,7 +460,7 @@ mod tests {
     use super::*;
 
     fn svc(name: &str, cores: usize, ms: f64) -> ModelService {
-        ModelService { name: name.into(), cores, service_ms: ms }
+        ModelService::new(name, cores, ms)
     }
 
     fn req(id: u64, model: usize, arrival: f64) -> Request {
@@ -370,6 +542,144 @@ mod tests {
         assert!(r.completed.iter().all(|c| c.queue_ms() == 0.0), "{r:?}");
         assert_eq!(r.makespan_ms(), 15.0);
         assert!((r.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn service_at_prefers_the_table_and_extrapolates_linearly() {
+        let s = svc("m", 2, 10.0).with_batch_table(vec![10.0, 14.0, 17.0]);
+        assert_eq!(s.service_at(1), 10.0);
+        assert_eq!(s.service_at(3), 17.0);
+        // Past the table: linear in the single-request time.
+        assert_eq!(s.service_at(5), 50.0);
+        // No table at all: pure linear scaling.
+        assert_eq!(svc("m", 2, 10.0).service_at(4), 40.0);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately_and_remainder_flushes_on_wait() {
+        let cfg = ClusterConfig {
+            num_cores: 2,
+            policy: DispatchPolicy::Batch { max_batch: 2, max_wait_ms: 5.0 },
+        };
+        let services = [svc("m", 2, 10.0).with_batch_table(vec![10.0, 12.0])];
+        let trace = [req(0, 0, 0.0), req(1, 0, 0.0), req(2, 0, 0.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r.completed.len(), 3);
+        let by_id = |id: u64| *r.completed.iter().find(|c| c.id == id).unwrap();
+        // Requests 0 and 1 ride one batch-2 invocation: 12 ms, not 20.
+        assert_eq!(by_id(0).batch, 2);
+        assert_eq!(by_id(1).finish_ms, 12.0);
+        assert_eq!(by_id(0).finish_ms, by_id(1).finish_ms);
+        // Request 2 is a held partial batch; when the cores free at 12 ms
+        // its 5 ms wait has long matured, so it flushes alone.
+        assert_eq!(by_id(2).batch, 1);
+        assert_eq!(by_id(2).start_ms, 12.0);
+        assert_eq!(by_id(2).finish_ms, 22.0);
+        assert_eq!(r.makespan_ms(), 22.0);
+        // Core-time accounting charges each invocation once, not once per
+        // rider: the pool was busy the whole 22 ms (24 + 20 core-ms on 2
+        // cores), never 200% busy.
+        assert!((r.busy_core_ms() - 44.0).abs() < 1e-12, "{}", r.busy_core_ms());
+        assert!((r.utilization() - 1.0).abs() < 1e-12, "{}", r.utilization());
+    }
+
+    #[test]
+    fn partial_batch_flushes_at_the_wait_deadline() {
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 4, max_wait_ms: 3.0 },
+        };
+        let services = [svc("m", 2, 10.0)];
+        // A lone request on an idle pool: batching holds it exactly
+        // max_wait_ms, then gives up on a fuller batch.
+        let trace = [req(0, 0, 1.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r.completed[0].start_ms, 4.0);
+        assert_eq!(r.completed[0].queue_ms(), 3.0);
+        assert_eq!(r.completed[0].batch, 1);
+    }
+
+    #[test]
+    fn arrival_completes_a_held_batch_before_its_deadline() {
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 2, max_wait_ms: 5.0 },
+        };
+        let services = [svc("m", 2, 10.0).with_batch_table(vec![10.0, 13.0])];
+        let trace = [req(0, 0, 0.0), req(1, 0, 1.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        // The second arrival fills the batch at t=1; nobody waits to t=5.
+        let by_id = |id: u64| *r.completed.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(by_id(0).start_ms, 1.0);
+        assert_eq!(by_id(0).batch, 2);
+        assert_eq!(by_id(0).finish_ms, 14.0);
+        assert_eq!(by_id(1).finish_ms, 14.0);
+    }
+
+    #[test]
+    fn max_batch_one_reproduces_fifo_exactly() {
+        let services = [svc("a", 2, 7.0), svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 1.0), req(2, 0, 1.0),
+                     req(3, 1, 2.0)];
+        let fifo = simulate(
+            &ClusterConfig { num_cores: 4, policy: DispatchPolicy::Fifo },
+            &services, &trace, None).unwrap();
+        let batch1 = simulate(
+            &ClusterConfig {
+                num_cores: 4,
+                policy: DispatchPolicy::Batch { max_batch: 1, max_wait_ms: 9.0 },
+            },
+            &services, &trace, None).unwrap();
+        assert_eq!(fifo.events, batch1.events);
+        // Completion records differ only in the (all-ones) batch field.
+        for (f, b) in fifo.completed.iter().zip(&batch1.completed) {
+            assert_eq!((f.id, f.start_ms, f.finish_ms), (b.id, b.start_ms, b.finish_ms));
+            assert_eq!(b.batch, 1);
+        }
+    }
+
+    #[test]
+    fn batch_policy_is_deterministic() {
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 3, max_wait_ms: 2.0 },
+        };
+        let services = [svc("a", 2, 7.0).with_batch_table(vec![7.0, 9.0, 10.0]),
+                        svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 0.5), req(2, 0, 1.0),
+                     req(3, 0, 1.5), req(4, 1, 6.0)];
+        let r1 = simulate(&cfg, &services, &trace, None).unwrap();
+        let r2 = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r1.completed.len(), 5);
+        for w in r1.events.windows(2) {
+            assert!(w[1].time_ms >= w[0].time_ms, "{:?}", r1.events);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_batch_knobs_and_tables() {
+        let services = [svc("m", 1, 1.0)];
+        let trace = [req(0, 0, 0.0)];
+        let err = simulate(
+            &ClusterConfig {
+                num_cores: 2,
+                policy: DispatchPolicy::Batch { max_batch: 0, max_wait_ms: 1.0 },
+            },
+            &services, &trace, None).unwrap_err();
+        assert!(err.contains("max_batch"), "{err}");
+        let err = simulate(
+            &ClusterConfig {
+                num_cores: 2,
+                policy: DispatchPolicy::Batch { max_batch: 2, max_wait_ms: -1.0 },
+            },
+            &services, &trace, None).unwrap_err();
+        assert!(err.contains("max_wait_ms"), "{err}");
+        let bad = [svc("m", 1, 1.0).with_batch_table(vec![1.0, 0.0])];
+        let err = simulate(
+            &ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo },
+            &bad, &trace, None).unwrap_err();
+        assert!(err.contains("batched service time"), "{err}");
     }
 
     #[test]

@@ -10,11 +10,14 @@
 //!   [`crate::accel::AcceleratorSpec::num_cores`] cores where each request
 //!   occupies its model's allocated MP for the `CostEngine`-predicted
 //!   latency of its tuned schedule, under pluggable dispatch policies
-//!   (FIFO, shortest-job-first) with per-model queues;
-//! - [`allocator`]: sweeps MP caps per model through the constrained
-//!   oracle DP (one shared cost-engine cache per model) and picks the
-//!   throughput-optimal operating point under the offered load, reporting
-//!   when it diverges from the single-request optimum;
+//!   (FIFO, shortest-job-first, and dynamic batching — up to `max_batch`
+//!   same-model requests ride one invocation priced by the engine's
+//!   batch-aware model, held at most `max_wait_ms`; rust/docs/DESIGN.md
+//!   §10) with per-model queues;
+//! - [`allocator`]: sweeps `(mp_cap, batch)` operating points per model
+//!   through the constrained oracle DP (one shared cost-engine cache per
+//!   model) and picks the throughput-optimal point under the offered load,
+//!   reporting when it diverges from the single-request optimum;
 //! - [`report`]: the SLO report — p50/p95/p99 end-to-end latency split
 //!   into queueing vs service time, core utilization, and goodput under a
 //!   deadline — built on the coordinator's [`crate::coordinator::metrics`]
@@ -48,10 +51,11 @@ pub mod cluster;
 pub mod allocator;
 pub mod report;
 
-pub use allocator::{plan_allocations, AllocationPlan, ModelAllocation,
-                    OperatingPoint};
+pub use allocator::{plan_allocations, plan_allocations_batched, AllocationPlan,
+                    ModelAllocation, OperatingPoint};
 pub use cluster::{simulate, ClusterConfig, CompletedRequest, ModelService,
                   SimEvent, SimEventKind, SimResult};
-pub use queue::{DispatchPolicy, QueueSet, QueuedRequest};
+pub use queue::{DispatchPolicy, QueueSet, QueuedRequest, DEFAULT_BATCH_WAIT_MS,
+                DEFAULT_MAX_BATCH};
 pub use report::SloReport;
 pub use workload::{generate_trace, ArrivalProcess, ModelMix, Request};

@@ -16,23 +16,48 @@ pub struct QueuedRequest {
     pub service_ms: f64,
 }
 
+/// Default `max_batch` for the `batch` dispatch policy (CLI `--max-batch`).
+pub const DEFAULT_MAX_BATCH: usize = 8;
+
+/// Default `max_wait_ms` for the `batch` dispatch policy (CLI
+/// `--batch-wait-ms`).
+pub const DEFAULT_BATCH_WAIT_MS: f64 = 2.0;
+
 /// Which queued request runs next when cores free up.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum DispatchPolicy {
     /// Earliest arrival first (across all model queues).
     Fifo,
     /// Smallest predicted service time first.
     ShortestJobFirst,
+    /// Dynamic batching (rust/docs/DESIGN.md §10): per model, up to
+    /// `max_batch` queued requests dispatch as **one** batched invocation
+    /// occupying the model's cores for the engine-predicted batched
+    /// latency. A partial batch is held for at most `max_wait_ms` after its
+    /// oldest request arrived, then flushes at whatever size it reached —
+    /// so the policy trades a bounded queueing delay for the weight-fetch
+    /// amortization of larger batches. Deliberately not work-conserving.
+    Batch { max_batch: usize, max_wait_ms: f64 },
 }
 
 impl DispatchPolicy {
-    /// Parse a CLI policy name.
+    /// The `batch` policy with the default knobs.
+    pub fn batching() -> DispatchPolicy {
+        DispatchPolicy::Batch {
+            max_batch: DEFAULT_MAX_BATCH,
+            max_wait_ms: DEFAULT_BATCH_WAIT_MS,
+        }
+    }
+
+    /// Parse a CLI policy name (`batch` takes the default knobs; the CLI
+    /// overrides them from `--max-batch` / `--batch-wait-ms`).
     pub fn parse(name: &str) -> Result<DispatchPolicy, String> {
         match name {
             "fifo" => Ok(DispatchPolicy::Fifo),
             "sjf" | "shortest-job-first" => Ok(DispatchPolicy::ShortestJobFirst),
+            "batch" | "batching" => Ok(DispatchPolicy::batching()),
             other => Err(format!(
-                "unknown dispatch policy '{other}' (known: fifo, sjf)")),
+                "unknown dispatch policy '{other}' (known: fifo, sjf, batch)")),
         }
     }
 
@@ -40,6 +65,7 @@ impl DispatchPolicy {
         match self {
             DispatchPolicy::Fifo => "fifo",
             DispatchPolicy::ShortestJobFirst => "sjf",
+            DispatchPolicy::Batch { .. } => "batch",
         }
     }
 }
@@ -80,6 +106,18 @@ impl QueueSet {
         self.queues[model].len()
     }
 
+    /// The oldest queued request for one model (its queue head).
+    pub fn head(&self, model: usize) -> Option<&QueuedRequest> {
+        self.queues[model].front()
+    }
+
+    /// Pop up to `n` requests from one model's queue, in arrival order —
+    /// the batch former of the `batch` dispatch policy.
+    pub fn pop_front_n(&mut self, model: usize, n: usize) -> Vec<QueuedRequest> {
+        let take = n.min(self.queues[model].len());
+        self.queues[model].drain(..take).collect()
+    }
+
     /// Pop the best-ranked queue head that fits in `free_cores`, or `None`
     /// if every nonempty queue's head needs more cores than are free.
     pub fn pop_fitting(&mut self, policy: DispatchPolicy,
@@ -97,6 +135,10 @@ impl QueueSet {
                 DispatchPolicy::ShortestJobFirst => {
                     (head.service_ms, head.arrival_ms, head.id)
                 }
+                // The batching policy dispatches through the cluster's batch
+                // former, not this single-request pop; rank by arrival so
+                // the fallback stays total and deterministic.
+                DispatchPolicy::Batch { .. } => (head.arrival_ms, 0.0, head.id),
             };
             let better = match best {
                 None => true,
@@ -127,8 +169,30 @@ mod tests {
                    DispatchPolicy::ShortestJobFirst);
         assert_eq!(DispatchPolicy::parse("shortest-job-first").unwrap(),
                    DispatchPolicy::ShortestJobFirst);
+        assert_eq!(DispatchPolicy::parse("batch").unwrap(),
+                   DispatchPolicy::Batch { max_batch: DEFAULT_MAX_BATCH,
+                                           max_wait_ms: DEFAULT_BATCH_WAIT_MS });
         assert!(DispatchPolicy::parse("lifo").is_err());
         assert_eq!(DispatchPolicy::Fifo.name(), "fifo");
+        assert_eq!(DispatchPolicy::batching().name(), "batch");
+    }
+
+    #[test]
+    fn head_and_pop_front_n_keep_arrival_order() {
+        let mut qs = QueueSet::new(2);
+        for (id, arrival) in [(0u64, 1.0), (1, 2.0), (2, 3.0)] {
+            qs.push(req(id, 0, arrival, 2, 10.0));
+        }
+        qs.push(req(9, 1, 0.5, 1, 5.0));
+        assert_eq!(qs.head(0).unwrap().id, 0);
+        assert_eq!(qs.head(1).unwrap().id, 9);
+        // Pop is capped at the queue length and preserves order.
+        let batch = qs.pop_front_n(0, 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let rest = qs.pop_front_n(0, 99);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert!(qs.head(0).is_none());
+        assert_eq!(qs.len(), 1);
     }
 
     #[test]

@@ -40,12 +40,17 @@ impl SloReport {
         let mut service = LatencyRecorder::new();
         let mut counters = Counters::new();
         let mut within = 0u64;
+        // Core reservations: a batched invocation reserves its cores once
+        // for the whole batch, so each rider contributes its 1/batch share
+        // (integral — and identical to the pre-batch count — when every
+        // batch is 1).
+        let mut core_launches = 0.0;
         for c in &result.completed {
             e2e.record(c.e2e_ms());
             queueing.record(c.queue_ms());
             service.record(c.service_ms());
             counters.inc("requests");
-            counters.add("core_launches", c.cores as u64);
+            core_launches += c.cores as f64 / c.batch as f64;
             if let Some(slo) = slo_ms {
                 if c.e2e_ms() <= slo {
                     within += 1;
@@ -55,6 +60,7 @@ impl SloReport {
                 }
             }
         }
+        counters.add("core_launches", core_launches.round() as u64);
         let makespan_ms = result.makespan_ms();
         let throughput_rps = result.throughput_rps();
         let goodput_rps = match slo_ms {
@@ -129,11 +135,11 @@ mod tests {
     fn result() -> SimResult {
         let completed = vec![
             CompletedRequest { id: 0, model: 0, arrival_ms: 0.0, start_ms: 0.0,
-                               finish_ms: 10.0, cores: 2 },
+                               finish_ms: 10.0, cores: 2, batch: 1 },
             CompletedRequest { id: 1, model: 0, arrival_ms: 0.0, start_ms: 10.0,
-                               finish_ms: 20.0, cores: 2 },
+                               finish_ms: 20.0, cores: 2, batch: 1 },
             CompletedRequest { id: 2, model: 0, arrival_ms: 5.0, start_ms: 20.0,
-                               finish_ms: 30.0, cores: 2 },
+                               finish_ms: 30.0, cores: 2, batch: 1 },
         ];
         SimResult { events: Vec::new(), completed, num_cores: 2 }
     }

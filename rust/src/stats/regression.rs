@@ -107,7 +107,10 @@ mod tests {
     #[test]
     fn noisy_line_r2_below_one() {
         let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
-        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + if *x as u64 % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 3.0 * x + if *x as u64 % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
         let f = linear_fit(&xs, &ys);
         assert!((f.slope - 3.0).abs() < 0.01);
         assert!(f.r2 > 0.99 && f.r2 < 1.0);

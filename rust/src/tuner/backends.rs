@@ -2,7 +2,12 @@
 //!
 //! Each wraps the corresponding engine-level search function and is pinned
 //! bit-identical to it (`rust/tests/tuner_parity.rs`): same schedule, same
-//! predicted latency, for the same request defaults.
+//! predicted latency, for the same request defaults. Every backend
+//! co-optimizes over the request's batch candidates through one shared
+//! loop (`tune_over_batches`): the search body runs once per batch with
+//! the engine's active batch set, and the per-sample-fastest outcome wins
+//! (rust/docs/DESIGN.md §10). The default `[1]` set keeps the pre-batch
+//! behaviour exactly.
 
 use std::time::Instant;
 
@@ -34,11 +39,78 @@ fn delta_stats(before: CostStats, after: CostStats, wall_us: u64, truncated: boo
     }
 }
 
+/// Run a backend's single-batch search at every batch candidate of the
+/// request and keep the outcome with the lowest predicted *per-sample*
+/// latency (ties prefer the earlier candidate). Each run sets the shared
+/// engine's active batch, so the body's block evaluations — the DP's
+/// sweeps, the annealer's moves, the strategy sweeps — are batch-aware
+/// without any change to the search code; the engine's cache keys keep the
+/// batches separate. The returned [`TuningStats`] aggregate the whole
+/// joint search (every candidate's evaluations, cache counters, and wall
+/// time — not just the winner's), so tune/compare reports state the true
+/// search cost. With the default `[1]` candidate set this is exactly one
+/// batch-1 run, bit-identical to the pre-batch backends. Budgets bound
+/// each candidate's search independently; the first failing candidate
+/// aborts the whole run.
+fn tune_over_batches<F>(cx: &mut TuningContext<'_>,
+                        mut body: F) -> Result<TuningOutcome, TuningError>
+where
+    F: FnMut(&mut TuningContext<'_>) -> Result<TuningOutcome, TuningError>,
+{
+    let batches = cx.checked_batches()?;
+    let mut best: Option<TuningOutcome> = None;
+    let mut total = TuningStats::default();
+    for &batch in &batches {
+        cx.engine_mut().set_batch(batch);
+        let result = body(cx);
+        // Leave the context at the default batch whether or not the body
+        // succeeded, so later consumers of the shared engine start clean.
+        cx.engine_mut().set_batch(1);
+        let out = result?;
+        debug_assert_eq!(out.batch, batch, "backend must report its batch");
+        total.evaluations += out.stats.evaluations;
+        total.blocks_considered += out.stats.blocks_considered;
+        total.space_visited += out.stats.space_visited;
+        total.cache_hits += out.stats.cache_hits;
+        total.cache_misses += out.stats.cache_misses;
+        total.wall_us += out.stats.wall_us;
+        total.truncated |= out.stats.truncated;
+        let better = match &best {
+            None => true,
+            Some(b) => out.per_sample_ms() < b.per_sample_ms(),
+        };
+        if better {
+            best = Some(out);
+        }
+    }
+    let mut best = best.expect("checked_batches is non-empty");
+    best.stats = total;
+    Ok(best)
+}
+
 /// The paper's Algorithm 1: the O(n) joint fusion + MP heuristic. Uses the
 /// context's [`crate::optimizer::AlgorithmParams`]; its only engine queries
-/// are the final schedule costing, so budgets never bind.
+/// are the final schedule costing, so budgets never bind. The heuristic's
+/// partition is batch-independent; over a multi-batch request the batch
+/// loop prices the same schedule per candidate and serves the per-sample
+/// winner.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Algorithm1;
+
+impl Algorithm1 {
+    fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
+                     -> Result<TuningOutcome, TuningError> {
+        let t0 = Instant::now();
+        let before = cx.engine.stats();
+        let batch = cx.engine.batch();
+        let params = cx.params;
+        let schedule = dlfusion_schedule_with(cx.engine.model(), &cx.engine.sim().spec, &params);
+        let predicted_ms = cx.engine.schedule_cost(&schedule);
+        let stats = delta_stats(before, cx.engine.stats(),
+                                t0.elapsed().as_micros() as u64, false);
+        Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
+    }
+}
 
 impl Tuner for Algorithm1 {
     fn name(&self) -> String {
@@ -46,14 +118,7 @@ impl Tuner for Algorithm1 {
     }
 
     fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
-        let t0 = Instant::now();
-        let before = cx.engine.stats();
-        let params = cx.params;
-        let schedule = dlfusion_schedule_with(cx.engine.model(), &cx.engine.sim().spec, &params);
-        let predicted_ms = cx.engine.schedule_cost(&schedule);
-        let stats = delta_stats(before, cx.engine.stats(),
-                                t0.elapsed().as_micros() as u64, false);
-        Ok(TuningOutcome { tuner: self.name(), schedule, predicted_ms, stats })
+        tune_over_batches(cx, |cx| self.tune_at_batch(cx))
     }
 }
 
@@ -67,14 +132,12 @@ impl Tuner for Algorithm1 {
 #[derive(Debug, Clone, Copy)]
 pub struct TableStrategy(pub Strategy);
 
-impl Tuner for TableStrategy {
-    fn name(&self) -> String {
-        format!("strategy{} ({})", self.0.index(), self.0.name())
-    }
-
-    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+impl TableStrategy {
+    fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
+                     -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
         let before = cx.engine.stats();
+        let batch = cx.engine.batch();
         let params = cx.params;
         let schedule = if self.0 == Strategy::BruteForce {
             // Same search `strategy_schedule_with` delegates to
@@ -95,7 +158,17 @@ impl Tuner for TableStrategy {
         let predicted_ms = cx.engine.schedule_cost(&schedule);
         let stats = delta_stats(before, cx.engine.stats(),
                                 t0.elapsed().as_micros() as u64, false);
-        Ok(TuningOutcome { tuner: self.name(), schedule, predicted_ms, stats })
+        Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
+    }
+}
+
+impl Tuner for TableStrategy {
+    fn name(&self) -> String {
+        format!("strategy{} ({})", self.0.index(), self.0.name())
+    }
+
+    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+        tune_over_batches(cx, |cx| self.tune_at_batch(cx))
     }
 }
 
@@ -134,17 +207,11 @@ impl OracleDp {
     }
 }
 
-impl Tuner for OracleDp {
-    fn name(&self) -> String {
-        match self.space {
-            OracleSpace::Reduced => "oracle-dp (reduced)".into(),
-            OracleSpace::Full => "oracle-dp (full)".into(),
-            OracleSpace::Constrained => "oracle-dp (constrained)".into(),
-        }
-    }
-
-    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+impl OracleDp {
+    fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
+                     -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
+        let batch = cx.engine.batch();
         let spec = &cx.engine.sim().spec;
         let (mps, rule) = match self.space {
             OracleSpace::Reduced => (spec.reduced_mp_set(), BlockRule::MultipleOfFour),
@@ -164,7 +231,21 @@ impl Tuner for OracleDp {
         let predicted_ms = cx.engine.schedule_cost(&schedule);
         let mut stats = TuningStats::from_search(&st);
         stats.wall_us = t0.elapsed().as_micros() as u64;
-        Ok(TuningOutcome { tuner: self.name(), schedule, predicted_ms, stats })
+        Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
+    }
+}
+
+impl Tuner for OracleDp {
+    fn name(&self) -> String {
+        match self.space {
+            OracleSpace::Reduced => "oracle-dp (reduced)".into(),
+            OracleSpace::Full => "oracle-dp (full)".into(),
+            OracleSpace::Constrained => "oracle-dp (constrained)".into(),
+        }
+    }
+
+    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+        tune_over_batches(cx, |cx| self.tune_at_batch(cx))
     }
 }
 
@@ -190,14 +271,12 @@ impl Annealer {
     }
 }
 
-impl Tuner for Annealer {
-    fn name(&self) -> String {
-        "annealing".into()
-    }
-
-    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+impl Annealer {
+    fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
+                     -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
         let before = cx.engine.stats();
+        let batch = cx.engine.batch();
         let cfg = cx.anneal;
         let (schedule, best_cost, truncated) = annealing::anneal_budgeted(
             &mut cx.engine,
@@ -211,12 +290,23 @@ impl Tuner for Annealer {
         Ok(TuningOutcome {
             tuner: self.name(),
             schedule,
+            batch,
             // The trajectory's best cost is the scalar-path schedule cost of
             // `schedule` (same cache entries), so the predicted-latency
             // contract holds without re-walking the schedule.
             predicted_ms: best_cost,
             stats,
         })
+    }
+}
+
+impl Tuner for Annealer {
+    fn name(&self) -> String {
+        "annealing".into()
+    }
+
+    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+        tune_over_batches(cx, |cx| self.tune_at_batch(cx))
     }
 }
 
@@ -227,13 +317,11 @@ impl Tuner for Annealer {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Exhaustive;
 
-impl Tuner for Exhaustive {
-    fn name(&self) -> String {
-        "exhaustive".into()
-    }
-
-    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+impl Exhaustive {
+    fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
+                     -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
+        let batch = cx.engine.batch();
         let mps = cx.checked_mps()?;
         let (schedule, st) = exhaustive::exhaustive_schedule_budgeted(
             &mut cx.engine, &mps, cx.budget.max_evaluations)
@@ -249,6 +337,16 @@ impl Tuner for Exhaustive {
         let predicted_ms = cx.engine.schedule_cost(&schedule);
         let mut stats = TuningStats::from_search(&st);
         stats.wall_us = t0.elapsed().as_micros() as u64;
-        Ok(TuningOutcome { tuner: self.name(), schedule, predicted_ms, stats })
+        Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
+    }
+}
+
+impl Tuner for Exhaustive {
+    fn name(&self) -> String {
+        "exhaustive".into()
+    }
+
+    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+        tune_over_batches(cx, |cx| self.tune_at_batch(cx))
     }
 }

@@ -31,26 +31,29 @@ pub fn compare(cx: &mut TuningContext<'_>, tuners: &mut [Box<dyn Tuner>])
 }
 
 impl Comparison {
-    /// The outcome with the lowest predicted latency.
+    /// The outcome with the lowest predicted *per-sample* latency (the
+    /// joint `(mp, batch)` objective; identical to lowest invocation
+    /// latency when every outcome is batch 1).
     pub fn best(&self) -> Option<&TuningOutcome> {
         self.outcomes
             .iter()
-            .min_by(|a, b| a.predicted_ms.total_cmp(&b.predicted_ms))
+            .min_by(|a, b| a.per_sample_ms().total_cmp(&b.per_sample_ms()))
     }
 
     /// Render the side-by-side table plus a shared-cache summary line.
     pub fn render(&self, title: &str) -> String {
-        let mut t = Table::new(&["tuner", "latency", "FPS", "vs best", "evals",
-                                 "computed", "hit rate", "wall"])
+        let mut t = Table::new(&["tuner", "batch", "latency", "FPS", "vs best",
+                                 "evals", "computed", "hit rate", "wall"])
             .label_first()
             .with_title(title);
-        let best_ms = self.best().map(|o| o.predicted_ms).unwrap_or(f64::NAN);
+        let best_ms = self.best().map(|o| o.per_sample_ms()).unwrap_or(f64::NAN);
         for o in &self.outcomes {
             t.row(vec![
                 o.tuner.clone(),
+                o.batch.to_string(),
                 fmt_ms(o.predicted_ms),
                 format!("{:.1}", o.fps()),
-                format!("{:.2}x", o.predicted_ms / best_ms),
+                format!("{:.2}x", o.per_sample_ms() / best_ms),
                 format!("{}{}", o.stats.evaluations,
                         if o.stats.truncated { "*" } else { "" }),
                 o.stats.cache_misses.to_string(),

@@ -50,12 +50,14 @@ pub use request::{Budget, TuningContext, TuningRequest};
 
 /// A search backend over the joint (fusion scheme, MP) space.
 ///
-/// Contract (rust/docs/DESIGN.md §8):
+/// Contract (rust/docs/DESIGN.md §8, batch semantics §10):
 /// - the backend evaluates candidates **only** through the context's
 ///   [`crate::cost::CostEngine`], so multi-tuner comparisons on one context
 ///   reuse each other's block evaluations;
-/// - the returned [`TuningOutcome::predicted_ms`] is the scalar-path
-///   schedule cost — bit-identical to
+/// - the backend co-optimizes over the request's batch candidates and the
+///   returned [`TuningOutcome::predicted_ms`] is the scalar-path cost of
+///   one invocation of the schedule at [`TuningOutcome::batch`] — for the
+///   default batch set `[1]`, bit-identical to
 ///   `Simulator::run_schedule(..).total_ms` for the returned schedule;
 /// - budget semantics: backends that can stop early and still hold a valid
 ///   best-so-far result (the annealer) truncate and set

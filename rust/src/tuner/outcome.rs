@@ -53,24 +53,35 @@ impl TuningStats {
     }
 }
 
-/// What a [`super::Tuner`] returns: the schedule it chose, its predicted
-/// latency, and the unified run statistics.
+/// What a [`super::Tuner`] returns: the schedule it chose, the batch size
+/// it chose it for, its predicted latency, and the unified run statistics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TuningOutcome {
     /// Name of the backend that produced this outcome.
     pub tuner: String,
     /// The chosen schedule.
     pub schedule: Schedule,
-    /// Scalar-path predicted latency of `schedule`, ms — bit-identical to
-    /// `Simulator::run_schedule(..).total_ms`.
+    /// The batch size the schedule was tuned for — the winning candidate of
+    /// the request's batch set (always 1 for the default `[1]` request,
+    /// where every result is bit-identical to the pre-batch tuners).
+    pub batch: usize,
+    /// Predicted latency of one invocation of `schedule` at `batch`, ms —
+    /// at batch 1 bit-identical to `Simulator::run_schedule(..).total_ms`.
     pub predicted_ms: f64,
     pub stats: TuningStats,
 }
 
 impl TuningOutcome {
-    /// Predicted frames per second at batch 1 (the Fig. 10 metric).
+    /// Predicted frames (samples) per second: a batch-`b` invocation
+    /// retires `b` samples. At batch 1 this is the paper's Fig. 10 metric.
     pub fn fps(&self) -> f64 {
-        1000.0 / self.predicted_ms
+        self.batch as f64 * 1000.0 / self.predicted_ms
+    }
+
+    /// Predicted per-sample latency, ms — the joint `(mp, batch)` search's
+    /// objective (equals `predicted_ms` at batch 1).
+    pub fn per_sample_ms(&self) -> f64 {
+        self.predicted_ms / self.batch as f64
     }
 }
 
@@ -81,6 +92,10 @@ pub enum TuningError {
     EmptyMpSet,
     /// An MP candidate is zero or exceeds the accelerator's core count.
     InvalidMp { mp: usize, num_cores: usize },
+    /// The request's batch candidate set is empty.
+    EmptyBatchSet,
+    /// A batch candidate is zero (a batched invocation carries >= 1 sample).
+    InvalidBatch { batch: usize },
     /// The exhaustive backend refuses exponential blowup past `max` layers.
     ModelTooLarge { layers: usize, max: usize },
     /// An evaluation budget ran out before the backend could complete (only
@@ -97,6 +112,10 @@ impl std::fmt::Display for TuningError {
             TuningError::EmptyMpSet => write!(f, "MP candidate set is empty"),
             TuningError::InvalidMp { mp, num_cores } => {
                 write!(f, "MP candidate {mp} outside 1..={num_cores}")
+            }
+            TuningError::EmptyBatchSet => write!(f, "batch candidate set is empty"),
+            TuningError::InvalidBatch { batch } => {
+                write!(f, "batch candidate {batch} must be at least 1")
             }
             TuningError::ModelTooLarge { layers, max } => write!(
                 f,

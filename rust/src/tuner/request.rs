@@ -49,6 +49,7 @@ pub struct TuningRequest<'a> {
     sim: &'a Simulator,
     model: &'a Model,
     mp_candidates: Option<Vec<usize>>,
+    batch_candidates: Option<Vec<usize>>,
     granularity: BlockRule,
     anneal: AnnealConfig,
     params: Option<AlgorithmParams>,
@@ -56,14 +57,15 @@ pub struct TuningRequest<'a> {
 }
 
 impl<'a> TuningRequest<'a> {
-    /// A request with the paper defaults: the spec's reduced MP set,
-    /// multiple-of-four block granularity, default annealing config,
-    /// `AlgorithmParams::for_spec`, and no budgets.
+    /// A request with the paper defaults: the spec's reduced MP set, batch
+    /// candidates `[1]`, multiple-of-four block granularity, default
+    /// annealing config, `AlgorithmParams::for_spec`, and no budgets.
     pub fn new(sim: &'a Simulator, model: &'a Model) -> TuningRequest<'a> {
         TuningRequest {
             sim,
             model,
             mp_candidates: None,
+            batch_candidates: None,
             granularity: BlockRule::MultipleOfFour,
             anneal: AnnealConfig::default(),
             params: None,
@@ -75,6 +77,17 @@ impl<'a> TuningRequest<'a> {
     /// and the exhaustive backend). Defaults to `spec.reduced_mp_set()`.
     pub fn mp_candidates(mut self, mps: Vec<usize>) -> Self {
         self.mp_candidates = Some(mps);
+        self
+    }
+
+    /// The batch sizes every backend co-optimizes over: the search runs
+    /// once per candidate (each run batch-aware through the shared engine's
+    /// active batch) and the outcome with the lowest predicted *per-sample*
+    /// latency wins, ties preferring the earlier candidate. Defaults to
+    /// `[1]`, where every backend is bit-identical to its pre-batch self
+    /// (rust/docs/DESIGN.md §10).
+    pub fn batch_candidates(mut self, batches: Vec<usize>) -> Self {
+        self.batch_candidates = Some(batches);
         self
     }
 
@@ -127,6 +140,10 @@ impl<'a> TuningRequest<'a> {
                 .mp_candidates
                 .clone()
                 .unwrap_or_else(|| self.sim.spec.reduced_mp_set()),
+            batch_candidates: self
+                .batch_candidates
+                .clone()
+                .unwrap_or_else(|| vec![1]),
             granularity: self.granularity,
             anneal: self.anneal,
             params: self
@@ -152,6 +169,7 @@ impl<'a> TuningRequest<'a> {
 pub struct TuningContext<'a> {
     pub(crate) engine: CostEngine<'a>,
     pub(crate) mp_candidates: Vec<usize>,
+    pub(crate) batch_candidates: Vec<usize>,
     pub(crate) granularity: BlockRule,
     pub(crate) anneal: AnnealConfig,
     pub(crate) params: AlgorithmParams,
@@ -172,6 +190,12 @@ impl<'a> TuningContext<'a> {
         self.mp_candidates = mps;
     }
 
+    /// Re-constrain the batch candidate set without rebuilding the context
+    /// (the engine's cache is keyed by batch, so nothing is invalidated).
+    pub fn set_batch_candidates(&mut self, batches: Vec<usize>) {
+        self.batch_candidates = batches;
+    }
+
     /// Engine counter snapshot (accumulated across every backend run
     /// against this context).
     pub fn engine_stats(&self) -> CostStats {
@@ -188,6 +212,10 @@ impl<'a> TuningContext<'a> {
 
     pub fn mp_candidates(&self) -> &[usize] {
         &self.mp_candidates
+    }
+
+    pub fn batch_candidates(&self) -> &[usize] {
+        &self.batch_candidates
     }
 
     pub fn granularity(&self) -> BlockRule {
@@ -218,5 +246,18 @@ impl<'a> TuningContext<'a> {
             }
         }
         Ok(self.mp_candidates.clone())
+    }
+
+    /// The batch candidate set, validated (non-empty, every batch >= 1).
+    pub(crate) fn checked_batches(&self) -> Result<Vec<usize>, TuningError> {
+        if self.batch_candidates.is_empty() {
+            return Err(TuningError::EmptyBatchSet);
+        }
+        for &batch in &self.batch_candidates {
+            if batch == 0 {
+                return Err(TuningError::InvalidBatch { batch });
+            }
+        }
+        Ok(self.batch_candidates.clone())
     }
 }

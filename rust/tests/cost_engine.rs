@@ -5,10 +5,11 @@
 //! The property tests here are the crate's guarantee that routing every
 //! consumer through `CostEngine` changed *nothing* numerically: the scalar
 //! engine path is bit-identical to `Simulator::{layer,block}_latency_ms` /
-//! `run_schedule`, the batched path is bit-identical to
-//! `Simulator::block_latency_ms_multi`, and the batched path agrees with the
+//! `run_schedule`, the MP-sweep path is bit-identical to
+//! `Simulator::block_latency_ms_multi`, the sweep path agrees with the
 //! scalar reference to 1e-12 per MP (the seed relationship, kept as the pin
-//! now that both are fact-table walks).
+//! now that both are fact-table walks), and the batch-keyed cache pins
+//! `batch = 1` to the pre-batch bits.
 #![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
 use dlfusion::accel::Simulator;
@@ -87,12 +88,57 @@ fn prop_engine_paths_bit_identical_to_simulator() {
                 return Err("cache returned different bits".into());
             }
         }
-        let got = engine.block_latency_batched(*start, *end, mps);
+        let got = engine.block_latency_sweep(*start, *end, mps);
         let want = sim.block_latency_ms_multi(layers, mps);
         if got != want {
             return Err(format!(
                 "batched {} [{start}..{end}]: {got:?} != {want:?}", m.name
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_one_engine_bit_identical_to_prebatch_scalar_path() {
+    // The PR 4 pin: keying the cache by (start, end, mp, batch) with the
+    // default batch 1 changed *nothing* — every engine query still returns
+    // exactly the bits of the untouched Simulator scalar/multi paths, via
+    // the explicit-batch accessor, the active-batch accessor, and after
+    // visiting other batches.
+    let sim = Simulator::mlu100();
+    let models = models();
+    let g = block_case(&models);
+    forall(120, &g, |(mi, start, end, mps)| {
+        let m = &models[*mi];
+        let layers = &m.layers[*start..*end];
+        let mut engine = CostEngine::new(&sim, m);
+        for &mp in mps {
+            let want = sim.block_latency_ms(layers, mp);
+            if engine.block_cost_at(*start, *end, mp, 1).latency_ms != want {
+                return Err(format!(
+                    "explicit batch-1 {} [{start}..{end}] mp={mp}", m.name));
+            }
+            // Evaluate a larger batch in between: the batch-keyed cache
+            // must not perturb the batch-1 entry.
+            let b4 = engine.block_cost_at(*start, *end, mp, 4).latency_ms;
+            if !(b4 >= want) {
+                return Err(format!(
+                    "batch-4 cheaper than batch-1 {} [{start}..{end}] mp={mp}",
+                    m.name));
+            }
+            if b4 >= 4.0 * want {
+                return Err(format!(
+                    "batch-4 not sub-linear {} [{start}..{end}] mp={mp}", m.name));
+            }
+            if engine.block_latency(*start, *end, mp) != want {
+                return Err(format!(
+                    "active batch-1 {} [{start}..{end}] mp={mp}", m.name));
+            }
+        }
+        let multi = engine.block_latency_sweep(*start, *end, mps);
+        if multi != sim.block_latency_ms_multi(layers, mps) {
+            return Err(format!("multi path {} [{start}..{end}]", m.name));
         }
         Ok(())
     });

@@ -199,6 +199,106 @@ fn budget_errors_and_truncation() {
 }
 
 #[test]
+fn explicit_batch_one_is_the_default_request_bit_for_bit() {
+    // The acceptance pin: with batch candidates [1] — explicit or default —
+    // every backend returns exactly its pre-batch result (schedule and
+    // predicted latency), for strategies 1-7, the oracle DP, and the
+    // seeded annealer.
+    let s = sim();
+    let m = zoo::alexnet();
+    let cfg = AnnealConfig { iterations: 200, ..Default::default() };
+    let mut backends: Vec<Box<dyn Tuner>> = vec![
+        Box::new(Algorithm1),
+        Box::new(OracleDp::reduced()),
+        Box::new(Annealer::new()),
+    ];
+    for st in Strategy::ALL {
+        backends.push(Box::new(TableStrategy(st)));
+    }
+    for backend in &mut backends {
+        let default_out = TuningRequest::new(&s, &m)
+            .anneal_config(cfg)
+            .run(backend.as_mut())
+            .unwrap();
+        let explicit_out = TuningRequest::new(&s, &m)
+            .anneal_config(cfg)
+            .batch_candidates(vec![1])
+            .run(backend.as_mut())
+            .unwrap();
+        assert_eq!(default_out.batch, 1, "{}", default_out.tuner);
+        assert_eq!(default_out.schedule, explicit_out.schedule, "{}", default_out.tuner);
+        assert_eq!(default_out.predicted_ms, explicit_out.predicted_ms,
+                   "{}", default_out.tuner);
+        // And the per-sample view is the invocation view at batch 1.
+        assert_eq!(default_out.per_sample_ms(), default_out.predicted_ms);
+    }
+}
+
+#[test]
+fn batch_candidates_co_optimize_per_sample_latency() {
+    let s = sim();
+    let m = zoo::vgg19();
+    for backend in [&mut OracleDp::reduced() as &mut dyn Tuner,
+                    &mut Algorithm1 as &mut dyn Tuner] {
+        let base = TuningRequest::new(&s, &m).run(backend).unwrap();
+        let joint = TuningRequest::new(&s, &m)
+            .batch_candidates(vec![1, 2, 4, 8])
+            .run(backend)
+            .unwrap();
+        // Weight amortization makes some batch > 1 strictly better per
+        // sample, so the joint search must leave batch 1.
+        assert!(joint.batch > 1, "{}: stayed at batch {}", joint.tuner, joint.batch);
+        assert!(joint.per_sample_ms() < base.predicted_ms,
+                "{}: {} per sample vs {} at batch 1",
+                joint.tuner, joint.per_sample_ms(), base.predicted_ms);
+        // The invocation is slower than one batch-1 inference — that's the
+        // trade — and FPS accounts for the whole batch.
+        assert!(joint.predicted_ms > base.predicted_ms);
+        assert!(joint.fps() > base.fps());
+        // Stats aggregate the whole joint search, not just the winning
+        // candidate's run.
+        assert!(joint.stats.evaluations > base.stats.evaluations,
+                "{}: joint {} evals vs single-batch {}",
+                joint.tuner, joint.stats.evaluations, base.stats.evaluations);
+    }
+}
+
+#[test]
+fn annealer_batch_runs_are_deterministic() {
+    let s = sim();
+    let m = zoo::alexnet();
+    let cfg = AnnealConfig { iterations: 150, ..Default::default() };
+    let run = || {
+        TuningRequest::new(&s, &m)
+            .anneal_config(cfg)
+            .batch_candidates(vec![1, 4])
+            .run(&mut Annealer::new())
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.schedule, b.schedule);
+    assert_eq!(a.batch, b.batch);
+    assert_eq!(a.predicted_ms, b.predicted_ms);
+}
+
+#[test]
+fn invalid_batch_requests_are_rejected() {
+    let s = sim();
+    let m = tiny_model(3);
+    let err = TuningRequest::new(&s, &m)
+        .batch_candidates(vec![])
+        .run(&mut Algorithm1)
+        .unwrap_err();
+    assert_eq!(err, TuningError::EmptyBatchSet);
+    let err = TuningRequest::new(&s, &m)
+        .batch_candidates(vec![1, 0])
+        .run(&mut OracleDp::reduced())
+        .unwrap_err();
+    assert!(matches!(err, TuningError::InvalidBatch { batch: 0 }), "{err}");
+}
+
+#[test]
 fn invalid_mp_requests_are_rejected() {
     let s = sim();
     let m = tiny_model(3);
