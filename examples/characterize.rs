@@ -12,14 +12,14 @@
 //! cargo run --release --example characterize
 //! ```
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::microbench;
 use dlfusion::perfmodel::{critical, features, mp_select::MpModel};
 use dlfusion::util::units::fmt_gops;
 use dlfusion::util::Table;
 
 fn main() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     println!("characterizing {} via synthesized microbenchmarks\n", sim.spec.name);
 
     // ---- step 1: single-core saturation (Fig. 3(b) / 4(a)) ----

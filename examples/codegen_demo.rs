@@ -6,7 +6,7 @@
 //! cargo run --release --example codegen_demo
 //! ```
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::graph::format::{from_dlm, to_dlm};
 use dlfusion::optimizer;
 use dlfusion::zoo;
@@ -38,7 +38,7 @@ fn main() {
              model.stats().total_conv_gops);
 
     // Optimize and generate.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
     println!("schedule: {}", sched.summary());
     let report = sim.run_schedule(&model, &sched);

@@ -19,7 +19,7 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::coordinator::{driver, equivalence, plan, Engine};
 use dlfusion::optimizer::Strategy;
 use dlfusion::runtime::Runtime;
@@ -29,7 +29,7 @@ use dlfusion::zoo;
 
 fn main() {
     let model = zoo::mini_cnn();
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
 
     // ---- (2) optimize: Algorithm 1 through the unified tuner API ----
     let request = TuningRequest::new(&sim, &model);

@@ -11,7 +11,10 @@
 use dlfusion::prelude::*;
 
 fn main() {
-    let sim = Simulator::mlu100();
+    // Every run is for an explicit hardware target; `mlu100` is the paper's
+    // Table I point (`dlfusion targets` lists the registry).
+    let target = Target::by_name("mlu100").expect("registry target");
+    let sim = Simulator::new(target);
     let model = zoo::resnet18();
     let request = TuningRequest::new(&sim, &model);
 

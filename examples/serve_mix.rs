@@ -9,13 +9,13 @@
 //! cargo run --release --example serve_mix
 //! ```
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
                         ModelMix, SloReport};
 use dlfusion::zoo;
 
 fn main() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     // 3:1 ResNet-18 : VGG-19 traffic, a 40 ms end-to-end SLO.
     let mix = ModelMix::weighted(vec![zoo::resnet18(), zoo::vgg19()],
                                  vec![3.0, 1.0]);

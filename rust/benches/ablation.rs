@@ -3,7 +3,7 @@
 //! granularity — plus the cost of the oracle's search-space reduction.
 //! (Beyond-paper analysis; DESIGN.md §4 "additional benches".)
 
-use dlfusion::accel::{AcceleratorSpec, Simulator};
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::cost::CostEngine;
 use dlfusion::optimizer::{algorithm, AlgorithmParams};
@@ -30,7 +30,7 @@ fn geomean_fps(engines: &mut [CostEngine], params: &AlgorithmParams) -> f64 {
 
 fn main() {
     banner("Ablation", "sensitivity of DLFusion's constants (geomean FPS over the zoo)");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let models = zoo::all_models();
     let mut engines: Vec<CostEngine> =
         models.iter().map(|m| CostEngine::new(&sim, m)).collect();
@@ -70,9 +70,9 @@ fn main() {
     let mut t = Table::new(&["granularity", "geomean FPS (DLFusion)"])
         .label_first().with_title("channel partition granularity");
     for g in [1usize, 4, 16, 64] {
-        let mut spec = AcceleratorSpec::mlu100();
+        let mut spec = Target::mlu100().into_spec();
         spec.channel_granularity = g;
-        let sim_g = Simulator::new(spec);
+        let sim_g = Simulator::from_spec(spec).expect("granularity sweep spec");
         // A different spec changes every latency: fresh engines required.
         let mut engines_g: Vec<CostEngine> =
             models.iter().map(|m| CostEngine::new(&sim_g, m)).collect();

@@ -2,7 +2,7 @@
 //! latency model, and the serving-level payoff of the `batch` dispatch
 //! policy over one-request-at-a-time FIFO under overload.
 
-use dlfusion::accel::{efficiency, Simulator};
+use dlfusion::accel::{efficiency, Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
 use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
                         ModelMix};
@@ -13,7 +13,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("batching", "batch-aware cost model + dynamic-batching dispatch");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
 
     // ---- the amortization curve: one tuned schedule priced per batch ----
     let batches = [1usize, 2, 4, 8, 16, 32];

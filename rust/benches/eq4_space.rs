@@ -1,7 +1,7 @@
 //! Eq. 4 — joint search-space size, and why brute force is infeasible,
 //! grounded against what the engine-backed DP oracle actually evaluates.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
 use dlfusion::optimizer::space;
 use dlfusion::tuner::{OracleDp, TuningRequest};
@@ -30,7 +30,7 @@ fn main() {
               O(n^2/16 * 8) block evaluations for the same reduced-space optimum.");
 
     // Ground the asymptotic claim: what the engine-backed DP actually does.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mut t = Table::new(&["network", "n", "log10 Space(n)", "DP (block,MP) evals",
                              "computed", "DP wall (us)"])
         .label_first()

@@ -2,7 +2,7 @@
 //! the five evaluated networks, plus DLFusion's speedup over the baseline
 //! and its proximity to the brute-force oracle.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
 use dlfusion::optimizer::Strategy;
 use dlfusion::tuner::{OracleDp, TableStrategy, Tuner, TuningRequest};
@@ -12,7 +12,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("Fig. 10", "FPS of strategies 1-7 across the Table II networks");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
 
     let mut header = vec!["network".to_string()];
     header.extend(Strategy::ALL.iter().map(|s| format!("S{}", s.index())));

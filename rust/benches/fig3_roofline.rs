@@ -5,7 +5,7 @@
 //! GFLOPS and achieved GFLOPS, quantifying the gap that motivates going
 //! beyond the roofline model.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
 use dlfusion::microbench;
 use dlfusion::perfmodel::roofline;
@@ -14,7 +14,7 @@ use dlfusion::util::Table;
 
 fn main() {
     banner("Fig. 3", "roofline vs actual performance (conv + FC microbenchmarks)");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mut layers = microbench::conv_sweep();
     layers.extend(microbench::fc_sweep());
 

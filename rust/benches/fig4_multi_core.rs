@@ -4,7 +4,7 @@
 //! with its channel dimension expanded by factors, swept over core counts.
 //! Large-op-count layers prefer many cores; small ones prefer few.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::microbench;
 use dlfusion::util::csv::Csv;
@@ -12,7 +12,7 @@ use dlfusion::util::Table;
 
 fn main() {
     banner("Fig. 4(c)", "multi-core GFLOPS vs op count (channel-scaled VGG base conv)");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let factors = [1usize, 2, 4, 8];
     let layers = microbench::channel_scaled_series(&factors);
     let mps = [1usize, 2, 4, 8, 16, 32];

@@ -5,7 +5,7 @@
 //! (b) one-factor sweeps: channel vs kernel size vs feature size influence
 //!     with the other parameters fixed.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::graph::layer::ConvSpec;
 use dlfusion::graph::Layer;
@@ -16,7 +16,7 @@ use dlfusion::util::Table;
 
 fn main() {
     banner("Fig. 4(a)(b)", "single-core GFLOPS vs op count; per-parameter influence");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
 
     // ---- (a): bucket the sweep by log10(op count) ----
     let layers = microbench::conv_sweep();

@@ -4,7 +4,7 @@
 //! fusion blocks (redundant halo computation overtakes the launch/fill
 //! amortization sooner).
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::optimizer::Schedule;
 use dlfusion::util::csv::Csv;
@@ -13,7 +13,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("Fig. 5(b)", "optimal fusion block size, three 16-conv stacks");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let models = zoo::synthetic::fig5b_models(16);
     let sizes = [1usize, 2, 4, 8, 16];
 

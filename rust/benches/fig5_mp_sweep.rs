@@ -2,7 +2,7 @@
 //! no fusion). Paper: ResNet-18 peaks at a small MP (4), VGG-19 at a
 //! large one (16).
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::optimizer::Schedule;
 use dlfusion::util::csv::Csv;
@@ -11,7 +11,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("Fig. 5(a)", "optimal uniform MP per network (no fusion)");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mps = [1usize, 2, 4, 8, 12, 16, 24, 32];
 
     let mut header = vec!["network".to_string()];

@@ -3,7 +3,7 @@
 //! (a) same op count, different channel widths -> different optimal MP;
 //! (b) same channels, different op counts -> different optimal MP.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::microbench;
 use dlfusion::perfmodel::mp_select::MpModel;
@@ -12,7 +12,7 @@ use dlfusion::util::Table;
 
 fn main() {
     banner("Fig. 6", "optimal MP: fixed op count vs fixed channel sweeps");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let model = MpModel::default();
 
     // ---- (a) fixed op count ----

@@ -5,7 +5,7 @@
 //! (c) speed-up ratio vs cores used for fused blocks, with the critical
 //!     op count shifting down as cores increase.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::graph::Layer;
 use dlfusion::optimizer::Schedule;
@@ -15,7 +15,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("Fig. 7(b)(c)", "fusion depth and core count trade-off");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let (conv1, conv2) = zoo::synthetic::fig7_convs();
 
     // ---- (b) 4-layer vs 16-layer fusion, MP=16 ----

@@ -5,7 +5,7 @@
 //! (b) fusing layers with divergent optimal MPs underperforms fusing
 //!     layers that agree.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, BENCH_OUT_DIR};
 use dlfusion::graph::layer::ConvSpec;
 use dlfusion::graph::{Layer, LayerKind};
@@ -16,7 +16,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("Fig. 8", "per-layer optimal MP and mixed-MP fusion penalty");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let model = MpModel::default();
 
     // ---- (a) per-layer MP distribution ----

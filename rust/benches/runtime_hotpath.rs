@@ -2,7 +2,7 @@
 //! request path — schedule construction, simulation, plan building, PJRT
 //! execution, and coordinator overhead vs raw execute.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench};
 use dlfusion::coordinator::{plan, Engine};
 use dlfusion::optimizer;
@@ -11,7 +11,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("§Perf", "L3 hot-path microbenchmarks");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let resnet = zoo::resnet50();
 
     let mut b = Bench::new("optimizer").with_iters(3, 30);

@@ -2,7 +2,7 @@
 //! the event loop's processing rate, and the capacity gap between the
 //! single-request-optimal and load-aware allocations.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
 use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
                         ModelMix};
@@ -12,7 +12,7 @@ use dlfusion::zoo;
 
 fn main() {
     banner("serving", "multi-tenant serving: allocation sweep + event loop");
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
 
     let mut b = Bench::new("serving_throughput");

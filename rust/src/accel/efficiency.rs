@@ -50,7 +50,7 @@ mod tests {
     use super::*;
 
     fn spec() -> AcceleratorSpec {
-        AcceleratorSpec::mlu100()
+        crate::accel::Target::mlu100().into_spec()
     }
 
     #[test]

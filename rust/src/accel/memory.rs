@@ -114,7 +114,7 @@ mod tests {
     use crate::graph::layer::ConvSpec;
 
     fn spec() -> AcceleratorSpec {
-        AcceleratorSpec::mlu100()
+        crate::accel::Target::mlu100().into_spec()
     }
 
     fn small_chain(n: usize) -> Vec<Layer> {

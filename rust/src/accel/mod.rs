@@ -9,6 +9,8 @@
 //! [`Simulator`], the same interface a real board would give them.
 //!
 //! - [`spec`]: Table I hardware parameters + the calibration constants;
+//! - [`target`]: named, validated hardware targets + the built-in registry
+//!   (`mlu100`, `mlu270`, `edge4`, `hbm32`) — the explicit-hardware API;
 //! - [`efficiency`]: the per-core op-count→efficiency saturation curve;
 //! - [`partition`]: channel-granular model-parallel tensor partitioning;
 //! - [`fusion`]: halo-redundancy accounting for fused blocks (Fig. 7(a));
@@ -16,6 +18,7 @@
 //! - [`sim`]: the latency model combining the above, [`Simulator`].
 
 pub mod spec;
+pub mod target;
 pub mod efficiency;
 pub mod partition;
 pub mod fusion;
@@ -25,3 +28,4 @@ pub mod trace;
 
 pub use sim::{BlockPerf, PerfReport, Simulator};
 pub use spec::AcceleratorSpec;
+pub use target::{SpecBuilder, Target, TargetError};

@@ -18,6 +18,7 @@ use super::fusion;
 use super::memory;
 use super::partition;
 use super::spec::AcceleratorSpec;
+use super::target::Target;
 use crate::graph::{Layer, Model};
 use crate::optimizer::schedule::Schedule;
 
@@ -66,20 +67,68 @@ impl PerfReport {
 }
 
 /// The accelerator simulator (see module docs and rust/docs/DESIGN.md §6).
+///
+/// A simulator models one explicit hardware [`Target`] (rust/docs/DESIGN.md
+/// §11) and records which one, so everything derived from it — tuning
+/// outcomes, serving plans — can name the hardware it was planned for.
 #[derive(Debug, Clone)]
 pub struct Simulator {
     pub spec: AcceleratorSpec,
+    /// Registry name of the simulated target (`custom:<spec name>#<hash>`
+    /// when built from a raw spec — see [`Simulator::from_spec`]).
+    target: String,
 }
 
 impl Simulator {
-    pub fn new(spec: AcceleratorSpec) -> Self {
-        Simulator { spec }
+    /// Simulate an explicit hardware target (the canonical constructor).
+    pub fn new(target: Target) -> Self {
+        let (name, spec) = target.into_parts();
+        Simulator { spec, target: name }
     }
 
+    /// Simulate a raw spec outside the registry (spec-level experiments).
+    /// The spec passes the same [`super::target::validate_spec`] gate as a
+    /// [`Target`], so garbage hardware (zero cores, zero granularity) is a
+    /// typed error here too, not a panic in the model layers. The recorded
+    /// target name is `custom:<spec name>#<field fingerprint>` — the
+    /// fingerprint keeps two *different* raw-spec chips from ever carrying
+    /// the same label (the serving cluster refuses to co-schedule plans
+    /// whose labels differ). Mutating `Simulator::spec` *after*
+    /// construction bypasses both guarantees; that pub field stays mutable
+    /// for experiments on the understanding that derived plans are then on
+    /// the experimenter.
+    pub fn from_spec(spec: AcceleratorSpec) -> Result<Self, super::target::TargetError> {
+        super::target::validate_spec(&spec)?;
+        let target = format!("{}:{}#{:016x}", Target::CUSTOM, spec.name,
+                             spec_fingerprint(&spec));
+        Ok(Simulator { spec, target })
+    }
+
+    /// The MLU100 default target.
+    #[deprecated(note = "use Simulator::new(Target::mlu100()) — or --target on the CLI")]
     pub fn mlu100() -> Self {
-        Simulator::new(AcceleratorSpec::mlu100())
+        Simulator::new(Target::mlu100())
     }
 
+    /// Registry name of the target this simulator models.
+    pub fn target(&self) -> &str {
+        &self.target
+    }
+}
+
+/// FNV-1a over the spec's `Debug` rendering: a cheap, deterministic digest
+/// of every field's bits, so equal specs share a `custom:` label and any
+/// field difference changes it.
+fn spec_fingerprint(spec: &AcceleratorSpec) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in format!("{spec:?}").bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Simulator {
     /// Latency (ms) of one *unfused* operator at MP = `mp`
     /// (channel-partitioned, Section IV.A).
     pub fn layer_latency_ms(&self, layer: &Layer, mp: usize) -> f64 {
@@ -247,11 +296,19 @@ mod tests {
     use crate::zoo;
 
     fn sim() -> Simulator {
-        Simulator::mlu100()
+        Simulator::new(Target::mlu100())
     }
 
     fn conv(c: usize, hw: usize) -> Layer {
         Layer::conv("c", ConvSpec::same(c, c, hw, 3))
+    }
+
+    #[test]
+    fn deprecated_mlu100_wrapper_is_the_registry_target() {
+        #[allow(deprecated)]
+        let legacy = Simulator::mlu100();
+        assert_eq!(legacy.spec, sim().spec);
+        assert_eq!(legacy.target(), "mlu100");
     }
 
     #[test]

@@ -49,23 +49,12 @@ pub struct AcceleratorSpec {
 
 impl AcceleratorSpec {
     /// The Cambricon MLU100 (Table I) with the paper-derived calibration.
+    /// The values live in the target registry
+    /// ([`crate::accel::Target::mlu100`]); this wrapper remains for the
+    /// pre-target API.
+    #[deprecated(note = "use Target::mlu100().into_spec() (or keep the Target)")]
     pub fn mlu100() -> Self {
-        AcceleratorSpec {
-            name: "MLU100-C3".to_string(),
-            num_cores: 32,
-            peak_gflops_per_core: 2000.0, // 64 TFLOPS FP16 total
-            mem_bw_gbps: 102.4,
-            mem_bytes: 8.0 * 1024.0 * 1024.0 * 1024.0,
-            core_freq_ghz: 1.0,
-            // Chip-wide OpCount_critical = 10^1.25 = 17.78 GOPs
-            //   = 9 * fill * num_cores.
-            fill_gops: 10f64.powf(1.25) / 9.0 / 32.0,
-            channel_granularity: 4,
-            launch_overhead_us: 20.0,
-            sync_us_per_core: 5.0,
-            fused_layer_us: 4.0,
-            core_buffer_bytes: 2.0 * 1024.0 * 1024.0,
-        }
+        super::target::Target::mlu100().into_spec()
     }
 
     /// Total chip peak, GFLOPS.
@@ -90,31 +79,54 @@ impl AcceleratorSpec {
         1..=self.num_cores
     }
 
-    /// The reduced MP choice set of the brute-force oracle (Section V.3).
+    /// The reduced MP choice set of the brute-force oracle (Section V.3),
+    /// derived from the core count: every power of two up to `num_cores`,
+    /// the `3·2^k` mid-points from 12 up (the paper's 12 and 24), and the
+    /// full chip. For the 32-core MLU100 this is exactly the paper's
+    /// `[1, 2, 4, 8, 12, 16, 24, 32]`; a 64-core target extends to 48 and
+    /// 64 instead of silently capping at 32, and a non-power-of-two core
+    /// count (e.g. 6) still offers the whole chip.
     pub fn reduced_mp_set(&self) -> Vec<usize> {
-        [1usize, 2, 4, 8, 12, 16, 24, 32]
-            .into_iter()
-            .filter(|&m| m <= self.num_cores)
-            .collect()
+        let n = self.num_cores;
+        let mut set: Vec<usize> = Vec::new();
+        let mut p = 1usize;
+        while p <= n {
+            set.push(p);
+            p *= 2;
+        }
+        let mut mid = 12usize;
+        while mid <= n {
+            set.push(mid);
+            mid *= 2;
+        }
+        set.push(n);
+        set.sort_unstable();
+        set.dedup();
+        set
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::Target;
 
     #[test]
     fn table1_values() {
-        let s = AcceleratorSpec::mlu100();
+        let s = Target::mlu100().into_spec();
         assert_eq!(s.num_cores, 32);
         assert_eq!(s.peak_gflops(), 64_000.0); // 64 TFLOPS FP16
         assert_eq!(s.mem_bw_gbps, 102.4);
         assert_eq!(s.mem_bytes, 8.0 * (1u64 << 30) as f64);
+        // The deprecated wrapper is the registry point, bit for bit.
+        #[allow(deprecated)]
+        let legacy = AcceleratorSpec::mlu100();
+        assert_eq!(legacy, s);
     }
 
     #[test]
     fn opcount_critical_matches_paper() {
-        let s = AcceleratorSpec::mlu100();
+        let s = Target::mlu100().into_spec();
         let crit = s.opcount_critical();
         assert!((crit - 10f64.powf(1.25)).abs() < 1e-9, "{crit}");
         assert!((crit - 17.78).abs() < 0.01);
@@ -123,14 +135,34 @@ mod tests {
 
     #[test]
     fn reduced_mp_set_is_paper_list() {
-        let s = AcceleratorSpec::mlu100();
+        let s = Target::mlu100().into_spec();
         assert_eq!(s.reduced_mp_set(), vec![1, 2, 4, 8, 12, 16, 24, 32]);
     }
 
     #[test]
     fn reduced_mp_set_respects_core_count() {
-        let mut s = AcceleratorSpec::mlu100();
+        let mut s = Target::mlu100().into_spec();
         s.num_cores = 8;
         assert_eq!(s.reduced_mp_set(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn reduced_mp_set_derives_from_the_core_count() {
+        // A 64-core chip extends past 32 instead of capping there …
+        let mut s = Target::mlu100().into_spec();
+        s.num_cores = 64;
+        assert_eq!(s.reduced_mp_set(), vec![1, 2, 4, 8, 12, 16, 24, 32, 48, 64]);
+        // … and a non-power-of-two chip still offers its full core count.
+        s.num_cores = 6;
+        assert_eq!(s.reduced_mp_set(), vec![1, 2, 4, 6]);
+        s.num_cores = 1;
+        assert_eq!(s.reduced_mp_set(), vec![1]);
+        // Every set is sorted, deduplicated, and caps at num_cores.
+        for n in 1..=96usize {
+            s.num_cores = n;
+            let set = s.reduced_mp_set();
+            assert!(set.windows(2).all(|w| w[0] < w[1]), "n={n}: {set:?}");
+            assert_eq!(*set.last().unwrap(), n);
+        }
     }
 }

@@ -1,0 +1,646 @@
+//! Explicit hardware targets: a named, validated [`AcceleratorSpec`] plus
+//! the registry of built-in hardware points (rust/docs/DESIGN.md §11).
+//!
+//! The paper's whole premise is that the optimal (MP, fusion) point is a
+//! function of the *hardware* — `OpCount_critical`, bandwidth, buffer size
+//! (Table I, Figs. 3–7). Historically the crate baked the MLU100 in as an
+//! implicit global (a `mlu100()` constructor at every entry point); this module
+//! makes the hardware point a first-class, explicit API:
+//!
+//! - [`Target`]: a registry name + description wrapping a spec that has
+//!   passed [`SpecBuilder`]-level validation. Constructing a `Target` is the
+//!   only sanctioned way to get a spec into a [`super::Simulator`]
+//!   (`Simulator::new(Target)`); raw-spec construction remains available as
+//!   `Simulator::from_spec` for experiments but carries the `custom` name.
+//! - [`SpecBuilder`]: field-level validated construction replacing struct
+//!   literals. Invalid hardware (zero cores, zero bandwidth, a per-core
+//!   buffer smaller than one tile, …) is a typed [`TargetError`], not a NaN
+//!   three layers later.
+//! - The registry: [`Target::by_name`] / [`Target::all`] over the built-in
+//!   points below. `mlu100` keeps the exact paper-calibrated values, so
+//!   every pre-redesign result is bit-identical on the default target.
+//!
+//! | name | chip | cores | peak | BW | role |
+//! |---|---|---|---|---|---|
+//! | `mlu100` | MLU100-C3 | 32 | 64 TFLOPS | 102.4 GB/s | the paper's Table I point (default) |
+//! | `mlu270` | MLU270-S4 | 64 | 128 TFLOPS | 153.6 GB/s | bigger-chip point |
+//! | `edge4`  | Edge-4    | 4  | 2 TFLOPS   | 25.6 GB/s  | edge-class part |
+//! | `hbm32`  | HBM-32    | 32 | 64 TFLOPS  | 1024 GB/s  | bandwidth-rich hypothetical |
+
+use super::sim::Simulator;
+use super::spec::AcceleratorSpec;
+
+/// Why a hardware target could not be constructed or combined.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TargetError {
+    /// [`Target::by_name`] was given a name not in the registry.
+    UnknownTarget { name: String },
+    /// A spec field failed [`SpecBuilder`] validation.
+    InvalidSpec { field: &'static str, reason: String },
+    /// A serving cluster was asked to co-schedule plans made for different
+    /// hardware targets (one pool is one chip).
+    MixedTargets { first: String, second: String },
+}
+
+impl std::fmt::Display for TargetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TargetError::UnknownTarget { name } => write!(
+                f,
+                "unknown target '{name}' (known: {})",
+                Target::NAMES.join(", ")
+            ),
+            TargetError::InvalidSpec { field, reason } => {
+                write!(f, "invalid accelerator spec: {field}: {reason}")
+            }
+            TargetError::MixedTargets { first, second } => write!(
+                f,
+                "cluster mixes hardware targets '{first}' and '{second}' \
+                 (every service in one pool must be planned for one target)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TargetError {}
+
+/// A named, validated hardware point: what every tuning run, serving plan,
+/// and CLI invocation is explicitly *for*.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Target {
+    name: String,
+    description: String,
+    spec: AcceleratorSpec,
+}
+
+impl Target {
+    /// Registry names, in [`Target::all`] order (`mlu100` is the default).
+    pub const NAMES: &'static [&'static str] = &["mlu100", "mlu270", "edge4", "hbm32"];
+
+    /// Prefix of the target name a [`Simulator::from_spec`] simulator
+    /// reports (`custom:<spec name>`).
+    pub const CUSTOM: &'static str = "custom";
+
+    /// Look a built-in target up by registry name.
+    pub fn by_name(name: &str) -> Result<Target, TargetError> {
+        match name {
+            "mlu100" => Ok(Target::mlu100()),
+            "mlu270" => Ok(Target::mlu270()),
+            "edge4" => Ok(Target::edge4()),
+            "hbm32" => Ok(Target::hbm32()),
+            other => Err(TargetError::UnknownTarget { name: other.to_string() }),
+        }
+    }
+
+    /// Every built-in target, default first.
+    pub fn all() -> Vec<Target> {
+        Target::NAMES
+            .iter()
+            .map(|n| Target::by_name(n).expect("registry names resolve"))
+            .collect()
+    }
+
+    /// A user-defined target: any registry-reserved or empty name is
+    /// rejected, and the spec passes the same validation as the builder.
+    pub fn custom(name: impl Into<String>, description: impl Into<String>,
+                  spec: AcceleratorSpec) -> Result<Target, TargetError> {
+        let name = name.into();
+        if name.is_empty() {
+            return Err(TargetError::InvalidSpec {
+                field: "name",
+                reason: "target name must be non-empty".to_string(),
+            });
+        }
+        if Target::NAMES.contains(&name.as_str()) {
+            return Err(TargetError::InvalidSpec {
+                field: "name",
+                reason: format!("'{name}' is a built-in registry name"),
+            });
+        }
+        if name == Target::CUSTOM || name.starts_with("custom:") {
+            return Err(TargetError::InvalidSpec {
+                field: "name",
+                reason: format!(
+                    "'{name}' is reserved for Simulator::from_spec labels"),
+            });
+        }
+        validate_spec(&spec)?;
+        Ok(Target { name, description: description.into(), spec })
+    }
+
+    /// The Cambricon MLU100 (paper Table I) with the paper-derived
+    /// calibration — the default target. The values are exactly the
+    /// pre-redesign `AcceleratorSpec::mlu100()` literals, pinned by
+    /// `rust/tests/target_api.rs`, so every result on this target is
+    /// bit-identical to HEAD.
+    pub fn mlu100() -> Target {
+        Target {
+            name: "mlu100".to_string(),
+            description: "Cambricon MLU100 (paper Table I) — the calibrated default"
+                .to_string(),
+            spec: AcceleratorSpec {
+                name: "MLU100-C3".to_string(),
+                num_cores: 32,
+                peak_gflops_per_core: 2000.0, // 64 TFLOPS FP16 total
+                mem_bw_gbps: 102.4,
+                mem_bytes: 8.0 * 1024.0 * 1024.0 * 1024.0,
+                core_freq_ghz: 1.0,
+                // Chip-wide OpCount_critical = 10^1.25 = 17.78 GOPs
+                //   = 9 * fill * num_cores.
+                fill_gops: 10f64.powf(1.25) / 9.0 / 32.0,
+                channel_granularity: 4,
+                launch_overhead_us: 20.0,
+                sync_us_per_core: 5.0,
+                fused_layer_us: 4.0,
+                core_buffer_bytes: 2.0 * 1024.0 * 1024.0,
+            },
+        }
+    }
+
+    /// An MLU270-class bigger chip: twice the cores behind 1.5x the
+    /// bandwidth. The per-core pipeline ramp (`fill_gops`) matches the
+    /// MLU100's, so its chip-wide `OpCount_critical` is 2x the paper's —
+    /// bigger chips need deeper fusion to saturate.
+    pub fn mlu270() -> Target {
+        Target {
+            name: "mlu270".to_string(),
+            description: "MLU270-class bigger chip: 64 cores, 128 TFLOPS, 153.6 GB/s"
+                .to_string(),
+            spec: AcceleratorSpec {
+                name: "MLU270-S4".to_string(),
+                num_cores: 64,
+                peak_gflops_per_core: 2000.0, // 128 TFLOPS FP16 total
+                mem_bw_gbps: 153.6,
+                mem_bytes: 16.0 * 1024.0 * 1024.0 * 1024.0,
+                core_freq_ghz: 1.0,
+                // Same ~31 us per-core ramp as the MLU100.
+                fill_gops: 10f64.powf(1.25) / 9.0 / 32.0,
+                channel_granularity: 4,
+                launch_overhead_us: 20.0,
+                sync_us_per_core: 5.0,
+                fused_layer_us: 4.0,
+                core_buffer_bytes: 2.0 * 1024.0 * 1024.0,
+            },
+        }
+    }
+
+    /// An edge-class 4-core part: a quarter of the MLU100's per-core peak
+    /// at a quarter of its bandwidth, smaller buffers, cheaper launches.
+    /// The per-core ramp time matches the MLU100's ~31 us, which at a
+    /// quarter of the per-core peak is a quarter of the fill GOPs.
+    pub fn edge4() -> Target {
+        Target {
+            name: "edge4".to_string(),
+            description: "edge-class 4-core part: 2 TFLOPS, 25.6 GB/s".to_string(),
+            spec: AcceleratorSpec {
+                name: "Edge-4".to_string(),
+                num_cores: 4,
+                peak_gflops_per_core: 500.0, // 2 TFLOPS FP16 total
+                mem_bw_gbps: 25.6,
+                mem_bytes: 2.0 * 1024.0 * 1024.0 * 1024.0,
+                core_freq_ghz: 0.8,
+                fill_gops: 10f64.powf(1.25) / 9.0 / 32.0 / 4.0,
+                channel_granularity: 4,
+                launch_overhead_us: 10.0,
+                sync_us_per_core: 2.0,
+                fused_layer_us: 4.0,
+                core_buffer_bytes: 1.0 * 1024.0 * 1024.0,
+            },
+        }
+    }
+
+    /// A bandwidth-rich hypothetical: the MLU100's compute behind 1 TB/s of
+    /// HBM-class bandwidth. Fusion's traffic savings matter far less here,
+    /// so the optimal schedules shift toward shallower blocks — the
+    /// hardware-sensitivity scenario the explicit-target API exists for.
+    pub fn hbm32() -> Target {
+        let mut spec = Target::mlu100().spec;
+        spec.name = "HBM-32".to_string();
+        spec.mem_bw_gbps = 1024.0;
+        spec.mem_bytes = 16.0 * 1024.0 * 1024.0 * 1024.0;
+        Target {
+            name: "hbm32".to_string(),
+            description: "bandwidth-rich hypothetical: MLU100 compute behind 1 TB/s HBM"
+                .to_string(),
+            spec,
+        }
+    }
+
+    /// The registry name (`mlu100`, `edge4`, …, or a custom name).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// One-line description for listings.
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    /// The validated hardware spec.
+    pub fn spec(&self) -> &AcceleratorSpec {
+        &self.spec
+    }
+
+    /// Unwrap into the raw spec (e.g. for spec-level experiments).
+    pub fn into_spec(self) -> AcceleratorSpec {
+        self.spec
+    }
+
+    /// Split into `(registry name, spec)` — what [`Simulator::new`] records.
+    pub fn into_parts(self) -> (String, AcceleratorSpec) {
+        (self.name, self.spec)
+    }
+
+    /// A simulator of this target (`Simulator::new(self)`).
+    pub fn simulator(&self) -> Simulator {
+        Simulator::new(self.clone())
+    }
+}
+
+impl Default for Target {
+    /// The default target is the paper's MLU100.
+    fn default() -> Target {
+        Target::mlu100()
+    }
+}
+
+impl std::fmt::Display for Target {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({})", self.name, self.spec.name)
+    }
+}
+
+/// The smallest per-core buffer that holds one tile: one channel-granularity
+/// chunk of a 32x32 fp16 spatial band. Anything smaller cannot stage even a
+/// single fused intermediate, so the fusion model's buffer accounting would
+/// be meaningless.
+pub fn min_tile_bytes(channel_granularity: usize) -> f64 {
+    (channel_granularity * 32 * 32 * 2) as f64
+}
+
+/// Widest channel-granularity the partitioner meaningfully supports: a
+/// granularity beyond any real layer's channel count degenerates every
+/// partition into one padded chunk.
+pub const MAX_CHANNEL_GRANULARITY: usize = 256;
+
+/// Field-level validation shared by [`SpecBuilder::build`] and
+/// [`Target::custom`].
+pub fn validate_spec(spec: &AcceleratorSpec) -> Result<(), TargetError> {
+    fn invalid(field: &'static str, reason: String) -> TargetError {
+        TargetError::InvalidSpec { field, reason }
+    }
+    fn positive(field: &'static str, v: f64) -> Result<(), TargetError> {
+        if v.is_finite() && v > 0.0 {
+            Ok(())
+        } else {
+            Err(invalid(field, format!("must be positive and finite, got {v}")))
+        }
+    }
+    fn non_negative(field: &'static str, v: f64) -> Result<(), TargetError> {
+        if v.is_finite() && v >= 0.0 {
+            Ok(())
+        } else {
+            Err(invalid(field, format!("must be non-negative and finite, got {v}")))
+        }
+    }
+    if spec.name.is_empty() {
+        return Err(invalid("name", "spec name must be non-empty".to_string()));
+    }
+    if spec.num_cores == 0 {
+        return Err(invalid("num_cores", "an accelerator has at least one core".to_string()));
+    }
+    positive("peak_gflops_per_core", spec.peak_gflops_per_core)?;
+    positive("mem_bw_gbps", spec.mem_bw_gbps)?;
+    positive("mem_bytes", spec.mem_bytes)?;
+    positive("core_freq_ghz", spec.core_freq_ghz)?;
+    positive("fill_gops", spec.fill_gops)?;
+    if spec.channel_granularity == 0 {
+        return Err(invalid(
+            "channel_granularity",
+            "channel partitions are at least one channel wide".to_string(),
+        ));
+    }
+    if spec.channel_granularity > MAX_CHANNEL_GRANULARITY {
+        return Err(invalid(
+            "channel_granularity",
+            format!(
+                "{} exceeds the widest supported channel block ({})",
+                spec.channel_granularity, MAX_CHANNEL_GRANULARITY
+            ),
+        ));
+    }
+    non_negative("launch_overhead_us", spec.launch_overhead_us)?;
+    non_negative("sync_us_per_core", spec.sync_us_per_core)?;
+    non_negative("fused_layer_us", spec.fused_layer_us)?;
+    let min_tile = min_tile_bytes(spec.channel_granularity);
+    let buffer_ok =
+        spec.core_buffer_bytes.is_finite() && spec.core_buffer_bytes >= min_tile;
+    if !buffer_ok {
+        return Err(invalid(
+            "core_buffer_bytes",
+            format!(
+                "per-core buffer {} B holds less than one tile ({} B at \
+                 granularity {})",
+                spec.core_buffer_bytes, min_tile, spec.channel_granularity
+            ),
+        ));
+    }
+    if spec.mem_bytes < spec.core_buffer_bytes {
+        return Err(invalid(
+            "mem_bytes",
+            format!(
+                "device memory {} B is smaller than one core's buffer {} B",
+                spec.mem_bytes, spec.core_buffer_bytes
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Validated, field-by-field [`AcceleratorSpec`] construction — the
+/// replacement for struct-literal specs. Starts from the MLU100's
+/// calibration so a builder only has to name what differs:
+///
+/// ```
+/// use dlfusion::accel::{SpecBuilder, Target};
+///
+/// let spec = SpecBuilder::new("TwoCore-Lab")
+///     .num_cores(2)
+///     .mem_bw_gbps(51.2)
+///     .build()
+///     .expect("valid spec");
+/// let target = Target::custom("lab2", "bring-up board", spec).expect("target");
+/// assert_eq!(target.spec().num_cores, 2);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SpecBuilder {
+    spec: AcceleratorSpec,
+    /// Chip-wide `OpCount_critical` override; resolved into `fill_gops` at
+    /// build time so the setter order never matters.
+    opcount_critical: Option<f64>,
+}
+
+impl SpecBuilder {
+    /// A builder seeded with the MLU100 calibration under `name`.
+    pub fn new(name: impl Into<String>) -> SpecBuilder {
+        let mut spec = Target::mlu100().into_spec();
+        spec.name = name.into();
+        SpecBuilder { spec, opcount_critical: None }
+    }
+
+    /// A builder seeded from an existing spec (e.g. a registry target's).
+    pub fn from_spec(spec: AcceleratorSpec) -> SpecBuilder {
+        SpecBuilder { spec, opcount_critical: None }
+    }
+
+    pub fn num_cores(mut self, n: usize) -> Self {
+        self.spec.num_cores = n;
+        self
+    }
+
+    pub fn peak_gflops_per_core(mut self, gflops: f64) -> Self {
+        self.spec.peak_gflops_per_core = gflops;
+        self
+    }
+
+    pub fn mem_bw_gbps(mut self, gbps: f64) -> Self {
+        self.spec.mem_bw_gbps = gbps;
+        self
+    }
+
+    pub fn mem_bytes(mut self, bytes: f64) -> Self {
+        self.spec.mem_bytes = bytes;
+        self
+    }
+
+    pub fn core_freq_ghz(mut self, ghz: f64) -> Self {
+        self.spec.core_freq_ghz = ghz;
+        self
+    }
+
+    /// Set the per-core pipeline-fill cost directly (GOPs per dispatch).
+    pub fn fill_gops(mut self, gops: f64) -> Self {
+        self.spec.fill_gops = gops;
+        self.opcount_critical = None;
+        self
+    }
+
+    /// Set the chip-wide `OpCount_critical` (GOPs) instead of `fill_gops`;
+    /// `fill = critical / (9 * num_cores)` is derived at [`Self::build`],
+    /// after every other setter, so it composes with [`Self::num_cores`] in
+    /// any order.
+    pub fn opcount_critical(mut self, gops: f64) -> Self {
+        self.opcount_critical = Some(gops);
+        self
+    }
+
+    pub fn channel_granularity(mut self, channels: usize) -> Self {
+        self.spec.channel_granularity = channels;
+        self
+    }
+
+    pub fn launch_overhead_us(mut self, us: f64) -> Self {
+        self.spec.launch_overhead_us = us;
+        self
+    }
+
+    pub fn sync_us_per_core(mut self, us: f64) -> Self {
+        self.spec.sync_us_per_core = us;
+        self
+    }
+
+    pub fn fused_layer_us(mut self, us: f64) -> Self {
+        self.spec.fused_layer_us = us;
+        self
+    }
+
+    pub fn core_buffer_bytes(mut self, bytes: f64) -> Self {
+        self.spec.core_buffer_bytes = bytes;
+        self
+    }
+
+    /// Validate every field and produce the spec.
+    pub fn build(mut self) -> Result<AcceleratorSpec, TargetError> {
+        if let Some(crit) = self.opcount_critical {
+            let crit_ok = crit.is_finite() && crit > 0.0;
+            if !crit_ok {
+                return Err(TargetError::InvalidSpec {
+                    field: "opcount_critical",
+                    reason: format!("must be positive and finite, got {crit}"),
+                });
+            }
+            if self.spec.num_cores > 0 {
+                self.spec.fill_gops = crit / 9.0 / self.spec.num_cores as f64;
+            }
+        }
+        validate_spec(&self.spec)?;
+        Ok(self.spec)
+    }
+
+    /// Validate and wrap straight into a custom [`Target`].
+    pub fn build_target(self, registry_name: impl Into<String>,
+                        description: impl Into<String>) -> Result<Target, TargetError> {
+        Target::custom(registry_name, description, self.build()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_every_name() {
+        for &name in Target::NAMES {
+            let t = Target::by_name(name).unwrap();
+            assert_eq!(t.name(), name);
+            validate_spec(t.spec()).unwrap();
+        }
+        assert_eq!(Target::all().len(), Target::NAMES.len());
+        assert_eq!(Target::all()[0].name(), "mlu100");
+        assert_eq!(Target::default().name(), "mlu100");
+    }
+
+    #[test]
+    fn unknown_name_is_a_typed_error() {
+        let err = Target::by_name("mlu9000").unwrap_err();
+        assert_eq!(err, TargetError::UnknownTarget { name: "mlu9000".to_string() });
+        assert!(err.to_string().contains("mlu100"), "{err}");
+    }
+
+    #[test]
+    fn mlu100_spec_is_the_paper_point() {
+        let s = Target::mlu100().into_spec();
+        assert_eq!(s.num_cores, 32);
+        assert_eq!(s.peak_gflops(), 64_000.0);
+        assert_eq!(s.mem_bw_gbps, 102.4);
+        assert!((s.opcount_critical() - 10f64.powf(1.25)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_points_differ_where_they_should() {
+        let mlu100 = Target::mlu100();
+        let mlu270 = Target::mlu270();
+        let edge = Target::edge4();
+        let hbm = Target::hbm32();
+        assert_eq!(mlu270.spec().num_cores, 2 * mlu100.spec().num_cores);
+        assert_eq!(edge.spec().num_cores, 4);
+        assert!(edge.spec().peak_gflops() < mlu100.spec().peak_gflops());
+        // hbm32 is the mlu100 compute point behind fatter memory.
+        assert_eq!(hbm.spec().peak_gflops(), mlu100.spec().peak_gflops());
+        assert_eq!(hbm.spec().num_cores, mlu100.spec().num_cores);
+        assert!(hbm.spec().mem_bw_gbps >= 10.0 * mlu100.spec().mem_bw_gbps);
+        // The same per-core ramp means the bigger chip's chip-wide critical
+        // op count doubles.
+        assert!((mlu270.spec().opcount_critical()
+                 - 2.0 * mlu100.spec().opcount_critical())
+                    .abs()
+                    < 1e-9);
+    }
+
+    #[test]
+    fn builder_accepts_the_registry_points() {
+        for t in Target::all() {
+            let rebuilt = SpecBuilder::from_spec(t.spec().clone()).build().unwrap();
+            assert_eq!(&rebuilt, t.spec());
+        }
+    }
+
+    #[test]
+    fn builder_rejects_each_invalid_field() {
+        fn field_of(err: TargetError) -> &'static str {
+            match err {
+                TargetError::InvalidSpec { field, .. } => field,
+                other => panic!("expected InvalidSpec, got {other:?}"),
+            }
+        }
+        let bad = [
+            (SpecBuilder::new("x").num_cores(0), "num_cores"),
+            (SpecBuilder::new("x").peak_gflops_per_core(0.0), "peak_gflops_per_core"),
+            (SpecBuilder::new("x").mem_bw_gbps(0.0), "mem_bw_gbps"),
+            (SpecBuilder::new("x").mem_bw_gbps(-102.4), "mem_bw_gbps"),
+            (SpecBuilder::new("x").mem_bytes(f64::NAN), "mem_bytes"),
+            (SpecBuilder::new("x").core_freq_ghz(0.0), "core_freq_ghz"),
+            (SpecBuilder::new("x").fill_gops(0.0), "fill_gops"),
+            (SpecBuilder::new("x").opcount_critical(-1.0), "opcount_critical"),
+            (SpecBuilder::new("x").channel_granularity(0), "channel_granularity"),
+            (
+                SpecBuilder::new("x").channel_granularity(MAX_CHANNEL_GRANULARITY + 1),
+                "channel_granularity",
+            ),
+            (SpecBuilder::new("x").launch_overhead_us(-1.0), "launch_overhead_us"),
+            (SpecBuilder::new("x").sync_us_per_core(f64::INFINITY), "sync_us_per_core"),
+            (SpecBuilder::new("x").fused_layer_us(-0.5), "fused_layer_us"),
+            (SpecBuilder::new("x").core_buffer_bytes(16.0), "core_buffer_bytes"),
+            (SpecBuilder::new("x").mem_bytes(1024.0), "mem_bytes"),
+            (SpecBuilder::new(""), "name"),
+        ];
+        for (builder, field) in bad {
+            let err = builder.build().unwrap_err();
+            assert_eq!(field_of(err), field);
+        }
+    }
+
+    #[test]
+    fn buffer_must_hold_one_tile() {
+        let min = min_tile_bytes(4);
+        assert!(SpecBuilder::new("x").core_buffer_bytes(min).build().is_ok());
+        assert!(SpecBuilder::new("x").core_buffer_bytes(min - 1.0).build().is_err());
+    }
+
+    #[test]
+    fn opcount_critical_setter_is_order_insensitive() {
+        let a = SpecBuilder::new("x")
+            .opcount_critical(40.0)
+            .num_cores(64)
+            .build()
+            .unwrap();
+        let b = SpecBuilder::new("x")
+            .num_cores(64)
+            .opcount_critical(40.0)
+            .build()
+            .unwrap();
+        assert_eq!(a, b);
+        assert!((a.opcount_critical() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn custom_targets_validate_and_reject_registry_names() {
+        let spec = SpecBuilder::new("Lab").num_cores(2).build().unwrap();
+        let t = Target::custom("lab2", "bring-up", spec.clone()).unwrap();
+        assert_eq!(t.name(), "lab2");
+        assert_eq!(t.to_string(), "lab2 (Lab)");
+        assert!(Target::custom("mlu100", "imposter", spec.clone()).is_err());
+        assert!(Target::custom("", "anonymous", spec.clone()).is_err());
+        let mut broken = spec;
+        broken.num_cores = 0;
+        assert!(matches!(Target::custom("lab0", "broken", broken),
+                         Err(TargetError::InvalidSpec { field: "num_cores", .. })));
+    }
+
+    #[test]
+    fn simulator_records_the_target_name() {
+        let sim = Target::edge4().simulator();
+        assert_eq!(sim.target(), "edge4");
+        assert_eq!(sim.spec.num_cores, 4);
+        // Raw specs carry a name + field-fingerprint label, so two
+        // different custom chips never alias each other in the serving
+        // guard — even when their spec *names* collide.
+        let raw = Simulator::from_spec(Target::edge4().into_spec()).unwrap();
+        assert!(raw.target().starts_with("custom:Edge-4#"), "{}", raw.target());
+        let same = Simulator::from_spec(Target::edge4().into_spec()).unwrap();
+        assert_eq!(raw.target(), same.target());
+        let mut renamed = Target::mlu270().into_spec();
+        renamed.name = "Edge-4".to_string();
+        let impostor = Simulator::from_spec(renamed).unwrap();
+        assert_ne!(raw.target(), impostor.target());
+        // And from_spec validates like the builder does.
+        let mut broken = Target::edge4().into_spec();
+        broken.channel_granularity = 0;
+        assert!(matches!(Simulator::from_spec(broken),
+                         Err(TargetError::InvalidSpec { field: "channel_granularity", .. })));
+        // … and the label space is reserved against registry impersonation.
+        let spec = Target::edge4().into_spec();
+        assert!(Target::custom("custom", "imposter", spec.clone()).is_err());
+        assert!(Target::custom("custom:Edge-4", "imposter", spec).is_err());
+    }
+}

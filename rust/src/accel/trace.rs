@@ -102,7 +102,7 @@ mod tests {
 
     #[test]
     fn trace_covers_makespan_contiguously() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = zoo::resnet18();
         let sched = optimizer::dlfusion_schedule(&m, &sim.spec);
         let trace = Trace::capture(&sim, &m, &sched);
@@ -118,7 +118,7 @@ mod tests {
 
     #[test]
     fn redundancy_zero_for_layerwise() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = zoo::alexnet();
         let sched = optimizer::Schedule::layerwise(m.num_layers(), 1);
         let trace = Trace::capture(&sim, &m, &sched);
@@ -127,7 +127,7 @@ mod tests {
 
     #[test]
     fn fused_trace_reports_redundancy_and_utilization() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = zoo::vgg19();
         let sched = optimizer::dlfusion_schedule(&m, &sim.spec);
         let trace = Trace::capture(&sim, &m, &sched);
@@ -141,7 +141,7 @@ mod tests {
 
     #[test]
     fn better_schedules_have_higher_utilization() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = zoo::vgg19();
         let base = Trace::capture(&sim, &m,
                                   &optimizer::Schedule::layerwise(m.num_layers(), 1));

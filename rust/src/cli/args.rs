@@ -1,8 +1,14 @@
 //! Minimal subcommand + flag parser.
 //!
 //! Grammar: `dlfusion <command> [positionals...] [--flag[=value]|--flag value]`.
+//!
+//! A flag with no following value parses as the boolean `"true"` and is
+//! *remembered as bare*: commands that need a value read it through
+//! [`Args::flag_value`] / [`Args::flag_usize`] / [`Args::flag_f64`], which
+//! turn a trailing `--target` into a "--target expects a value" usage error
+//! instead of silently treating `"true"` as the value.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -10,6 +16,9 @@ pub struct Args {
     pub command: String,
     pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// Flags given with no value (`--name` at the end of the line or before
+    /// another flag) — booleans until a command asks for a value.
+    bare: BTreeSet<String>,
 }
 
 /// Parse failure.
@@ -38,10 +47,21 @@ impl Args {
                     return Err(ParseError("bare '--' not supported".into()));
                 }
                 if let Some((k, v)) = flag.split_once('=') {
+                    if k.is_empty() {
+                        return Err(ParseError("empty flag name in '--='".into()));
+                    }
+                    args.bare.remove(k);
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                    args.flags.insert(flag.to_string(), it.next().unwrap());
+                } else if matches!(it.peek(), Some(n) if !n.starts_with("--")) {
+                    if let Some(v) = it.next() {
+                        args.bare.remove(flag);
+                        args.flags.insert(flag.to_string(), v);
+                    }
                 } else {
+                    // Trailing flag, or a flag directly followed by another
+                    // flag: boolean for now, but remembered as bare so
+                    // value-flag accessors can reject it cleanly.
+                    args.bare.insert(flag.to_string());
                     args.flags.insert(flag.to_string(), "true".to_string());
                 }
             } else {
@@ -59,8 +79,18 @@ impl Args {
         matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Value of a flag that *requires* one: a bare `--name` (no value
+    /// before the end of the line / the next flag) is a usage error rather
+    /// than the implicit boolean `"true"`.
+    pub fn flag_value(&self, name: &str) -> Result<Option<&str>, ParseError> {
+        if self.bare.contains(name) {
+            return Err(ParseError(format!("--{name} expects a value")));
+        }
+        Ok(self.flag(name))
+    }
+
     pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, ParseError> {
-        match self.flag(name) {
+        match self.flag_value(name)? {
             None => Ok(None),
             Some(v) => v
                 .parse()
@@ -70,7 +100,7 @@ impl Args {
     }
 
     pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, ParseError> {
-        match self.flag(name) {
+        match self.flag_value(name)? {
             None => Ok(None),
             Some(v) => v
                 .parse()
@@ -120,6 +150,34 @@ mod tests {
     fn trailing_boolean_flag() {
         let a = parse("zoo --spec");
         assert!(a.flag_bool("spec"));
+    }
+
+    #[test]
+    fn bare_value_flag_is_a_usage_error_not_a_panic() {
+        // A trailing flag that should carry a value parses (it may be a
+        // boolean) but value accessors reject it with a usage message.
+        let a = parse("tune resnet18 --target");
+        assert!(a.flag_bool("target"));
+        let err = a.flag_value("target").unwrap_err();
+        assert_eq!(err.to_string(), "--target expects a value");
+        assert!(a.flag_usize("target").is_err());
+        assert!(a.flag_f64("target").is_err());
+        // Same for a bare flag in the middle of the line.
+        let a = parse("serve-sim --models --rate 10");
+        assert!(a.flag_value("models").is_err());
+        assert_eq!(a.flag_f64("rate").unwrap(), Some(10.0));
+        // An explicit value is never bare, even the literal string "true".
+        let a = parse("tune x --target mlu100 --flagged=true");
+        assert_eq!(a.flag_value("target").unwrap(), Some("mlu100"));
+        assert_eq!(a.flag_value("flagged").unwrap(), Some("true"));
+        // A later explicit value clears an earlier bare occurrence.
+        let a = parse("tune x --target --target edge4");
+        assert_eq!(a.flag_value("target").unwrap(), Some("edge4"));
+    }
+
+    #[test]
+    fn empty_assignment_flag_errors() {
+        assert!(Args::parse(["x".to_string(), "--=v".to_string()]).is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! CLI command implementations.
 
 use super::args::Args;
-use crate::accel::Simulator;
+use crate::accel::{Simulator, Target};
 use crate::codegen;
 use crate::coordinator::{self, driver, equivalence, plan};
 use crate::cost::CostEngine;
@@ -24,6 +24,7 @@ USAGE:
 
 COMMANDS:
     zoo [--spec]                 list built-in models (Table II) / hardware spec
+    targets                      list the hardware-target registry
     optimize <model|file.dlm>    run Algorithm 1, print the schedule
         [--strategy 1..7] [--critical GOPS]
     tune <model|file.dlm>        run one tuner backend, or --compare several,
@@ -31,9 +32,12 @@ COMMANDS:
         [--compare] [--iterations N] [--mps 1,2,4] [--granularity any|x4]
         [--budget-evals N]       every backend co-optimize (MP, batch) and
         [--batch 1,2,4,8]        serve the per-sample-fastest point
-                                 (NAME: algorithm1 strategy1..7 oracle
+        [--compare-targets]      (NAME: algorithm1 strategy1..7 oracle
                                   oracle-full oracle-constrained anneal
-                                  exhaustive)
+                                  exhaustive);
+                                 --compare-targets runs the one backend on
+                                 every registry target instead (the cross-
+                                 target analog of --compare)
     simulate <model|file.dlm>    simulate all seven strategies (Fig. 10 row)
     search <model|file.dlm>      compare search costs: Algorithm 1 vs oracle
         [--iterations N]         DP vs simulated annealing (cache + wall time)
@@ -44,21 +48,25 @@ COMMANDS:
         [--strategy 1..7]
     run [--requests N] [--verify] end-to-end PJRT inference on mini_cnn
     serve-sim                    multi-tenant serving simulation: load-aware
-        [--models a,b,..]        (MP, batch) co-allocation over the 32-core
+        [--models a,b,..]        (MP, batch) co-allocation over the target's
         [--arrivals poisson|closed|bursty] [--rate RPS] [--requests N]
         [--policy fifo|sjf|batch] [--slo-ms MS] [--seed S] [--concurrency K]
-        [--max-batch N] [--batch-wait-ms MS] pool, then a deterministic
+        [--max-batch N] [--batch-wait-ms MS] core pool, then a deterministic
         [--allocator load|single] event-driven SLO report; --policy batch
                                  forms per-model batches of up to N requests,
                                  holding partial batches at most MS ms
     perf-smoke                   deterministic perf metrics (simulated
         [--out FILE.json]        latencies only, no wall clock): tuned
-        [--baseline FILE.json]   latencies + serving/batching throughput,
-        [--write-baseline]       written as JSON and diffed against the
-                                 checked-in baseline (advisory; CI artifact)
+        [--baseline FILE.json]   latencies on the target + the mlu100/edge4
+        [--write-baseline]       cross-target points + serving/batching
+                                 throughput, written as JSON and diffed
+                                 against the checked-in baseline (advisory)
     help                         this text
 
-MODELS: resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file)
+MODELS:  resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file)
+TARGETS: every hardware-touching command takes --target NAME (default
+         mlu100; see 'targets'): zoo optimize tune simulate search codegen
+         characterize trace run serve-sim perf-smoke
 ";
 
 /// Execute a parsed command line; returns the process exit code.
@@ -69,12 +77,13 @@ pub fn run(args: &Args) -> i32 {
             Ok(())
         }
         "zoo" => cmd_zoo(args),
+        "targets" => cmd_targets(),
         "optimize" => cmd_optimize(args),
         "tune" => cmd_tune(args),
         "simulate" => cmd_simulate(args),
         "search" => cmd_search(args),
         "codegen" => cmd_codegen(args),
-        "characterize" => cmd_characterize(),
+        "characterize" => cmd_characterize(args),
         "space" => cmd_space(args),
         "trace" => cmd_trace(args),
         "run" => cmd_run(args),
@@ -89,6 +98,19 @@ pub fn run(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Resolve `--target` against the registry (default: `mlu100`).
+fn parse_target(args: &Args) -> Result<Target, String> {
+    match args.flag_value("target").map_err(|e| e.to_string())? {
+        None => Ok(Target::mlu100()),
+        Some(name) => Target::by_name(name).map_err(|e| e.to_string()),
+    }
+}
+
+/// The simulator for the command's `--target`.
+fn parse_sim(args: &Args) -> Result<Simulator, String> {
+    Ok(Simulator::new(parse_target(args)?))
 }
 
 fn load_model(args: &Args) -> Result<Model, String> {
@@ -107,9 +129,12 @@ fn load_model(args: &Args) -> Result<Model, String> {
 
 fn cmd_zoo(args: &Args) -> Result<(), String> {
     if args.flag_bool("spec") {
-        let s = crate::accel::AcceleratorSpec::mlu100();
+        let target = parse_target(args)?;
+        let s = target.spec();
         let mut t = Table::new(&["item", "value"]).label_first()
-            .with_title("Table I — hardware specification (simulated)");
+            .with_title(&format!(
+                "Table I — hardware specification (simulated target '{}')",
+                target.name()));
         t.row(vec!["name".into(), s.name.clone()]);
         t.row(vec!["cores".into(), s.num_cores.to_string()]);
         t.row(vec!["peak FP16".into(),
@@ -137,9 +162,35 @@ fn cmd_zoo(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_targets() -> Result<(), String> {
+    let mut t = Table::new(&["target", "chip", "cores", "peak", "BW",
+                             "mem", "OpCount_crit", "buffer/core"])
+        .label_first()
+        .align(1, crate::util::table::Align::Left)
+        .with_title("hardware-target registry (use --target NAME; default mlu100)");
+    for target in Target::all() {
+        let s = target.spec();
+        t.row(vec![
+            target.name().to_string(),
+            s.name.clone(),
+            s.num_cores.to_string(),
+            format!("{:.0} TFLOPS", s.peak_gflops() / 1000.0),
+            format!("{:.1} GB/s", s.mem_bw_gbps),
+            format!("{:.0} GiB", s.mem_bytes / (1u64 << 30) as f64),
+            fmt_gops(s.opcount_critical()),
+            format!("{:.1} MiB", s.core_buffer_bytes / (1u64 << 20) as f64),
+        ]);
+    }
+    println!("{t}");
+    for target in Target::all() {
+        println!("{}: {}", target.name(), target.description());
+    }
+    Ok(())
+}
+
 fn cmd_optimize(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
     let strategy = match args.flag_usize("strategy").map_err(|e| e.to_string())? {
         None => Strategy::DlFusion,
         Some(i) => Strategy::from_index(i).ok_or(format!("strategy must be 1..=7, got {i}"))?,
@@ -152,6 +203,7 @@ fn cmd_optimize(args: &Args) -> Result<(), String> {
     let sched = optimizer::strategies::strategy_schedule_with(&mut engine, strategy, &params);
     let report = engine.run_schedule(&sched);
     println!("model:     {}", model.name);
+    println!("target:    {}", sim.target());
     println!("strategy:  {} ({})", strategy.index(), strategy.name());
     println!("schedule:  {}", sched.summary());
     println!("blocks:    {}", sched.num_blocks());
@@ -186,7 +238,7 @@ fn parse_tuner(name: &str) -> Result<Box<dyn Tuner>, String> {
 
 /// Parse a `--flag 1,2,4`-style comma-separated integer list.
 fn parse_usize_list(args: &Args, name: &str) -> Result<Option<Vec<usize>>, String> {
-    match args.flag(name) {
+    match args.flag_value(name).map_err(|e| e.to_string())? {
         None => Ok(None),
         Some(list) => list
             .split(',')
@@ -197,10 +249,9 @@ fn parse_usize_list(args: &Args, name: &str) -> Result<Option<Vec<usize>>, Strin
     }
 }
 
-/// Build a `TuningRequest` from the shared tune/search flags.
-fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
-                     -> Result<tuner::TuningRequest<'a>, String> {
-    let mut request = tuner::TuningRequest::new(sim, model);
+/// Apply the shared tune/search flags to a request (any target's).
+fn apply_request_flags<'a>(args: &Args, mut request: tuner::TuningRequest<'a>)
+                           -> Result<tuner::TuningRequest<'a>, String> {
     if let Some(iters) = args.flag_usize("iterations").map_err(|e| e.to_string())? {
         request = request.anneal_config(AnnealConfig { iterations: iters, ..Default::default() });
     }
@@ -210,7 +261,7 @@ fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
     if let Some(batches) = parse_usize_list(args, "batch")? {
         request = request.batch_candidates(batches);
     }
-    match args.flag("granularity") {
+    match args.flag_value("granularity").map_err(|e| e.to_string())? {
         None => {}
         Some("any") => request = request.granularity(BlockRule::Any),
         Some("x4") | Some("mult4") => {
@@ -224,6 +275,12 @@ fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
         request = request.max_evaluations(cap as u64);
     }
     Ok(request)
+}
+
+/// Build a `TuningRequest` from the shared tune/search flags.
+fn parse_request<'a>(args: &Args, sim: &'a Simulator, model: &'a Model)
+                     -> Result<tuner::TuningRequest<'a>, String> {
+    apply_request_flags(args, tuner::TuningRequest::new(sim, model))
 }
 
 /// The default comparison panel (Algorithm 1 vs oracle DP vs annealing),
@@ -246,21 +303,47 @@ fn compare_panel(extra: Option<&str>) -> Result<Vec<Box<dyn Tuner>>, String> {
 
 fn cmd_tune(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
-    let sim = Simulator::mlu100();
+    let tuner_flag = args.flag_value("tuner").map_err(|e| e.to_string())?;
+
+    if args.flag_bool("compare-targets") {
+        if args.flag_bool("compare") {
+            return Err("--compare and --compare-targets are mutually \
+                        exclusive (one compares backends on one target, the \
+                        other one backend across targets)".into());
+        }
+        // The cross-target analog of --compare: one backend, every registry
+        // hardware point, the same request knobs applied to each (the
+        // template's --target, if any, only anchors flag validation).
+        let mut backend = parse_tuner(tuner_flag.unwrap_or("algorithm1"))?;
+        let sim = parse_sim(args)?;
+        let template = parse_request(args, &sim, &model)?;
+        let targets = Target::all();
+        let cmp =
+            tuner::compare_targets(&model, &targets, backend.as_mut(), &template)
+                .map_err(|e| e.to_string())?;
+        print!("{}", cmp.render(&format!(
+            "cross-target comparison — {} (tuner {})",
+            model.name, backend.name())));
+        return Ok(());
+    }
+
+    let sim = parse_sim(args)?;
     let request = parse_request(args, &sim, &model)?;
 
     if args.flag_bool("compare") {
         // The Fig. 10-style side-by-side report over one shared engine; an
         // explicit --tuner joins the default panel.
-        let mut tuners = compare_panel(args.flag("tuner"))?;
+        let mut tuners = compare_panel(tuner_flag)?;
         let cmp = request.compare(&mut tuners).map_err(|e| e.to_string())?;
-        print!("{}", cmp.render(&format!("tuner comparison — {}", model.name)));
+        print!("{}", cmp.render(&format!(
+            "tuner comparison — {} on {}", model.name, request.target())));
         return Ok(());
     }
 
-    let mut backend = parse_tuner(args.flag("tuner").unwrap_or("algorithm1"))?;
+    let mut backend = parse_tuner(tuner_flag.unwrap_or("algorithm1"))?;
     let outcome = request.run(backend.as_mut()).map_err(|e| e.to_string())?;
     println!("model:     {}", model.name);
+    println!("target:    {}", sim.target());
     println!("tuner:     {}", outcome.tuner);
     println!("schedule:  {}", outcome.schedule.summary());
     println!("blocks:    {}", outcome.schedule.num_blocks());
@@ -288,7 +371,7 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
     // One request, one shared context: the seven strategies reuse every
     // block evaluation.
     let request = tuner::TuningRequest::new(&sim, &model);
@@ -296,7 +379,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     let mut t = Table::new(&["#", "strategy", "blocks", "latency", "FPS", "speedup"])
         .label_first()
         .align(1, crate::util::table::Align::Left)
-        .with_title(&format!("Fig. 10 row — {}", model.name));
+        .with_title(&format!("Fig. 10 row — {} on {}", model.name, sim.target()));
     let mut base_fps = None;
     for st in Strategy::ALL {
         let out = tuner::TableStrategy(st).tune(&mut cx).map_err(|e| e.to_string())?;
@@ -321,7 +404,7 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 
 fn cmd_search(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
     let request = parse_request(args, &sim, &model)?;
     let iterations = args
         .flag_usize("iterations")
@@ -333,8 +416,8 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     let mut tuners = compare_panel(None)?;
     let cmp = request.compare(&mut tuners).map_err(|e| e.to_string())?;
     print!("{}", cmp.render(&format!(
-        "Search-time comparison — {} (paper Section V, annealer budget \
-         {iterations} moves)", model.name)));
+        "Search-time comparison — {} on {} (paper Section V, annealer budget \
+         {iterations} moves)", model.name, request.target())));
     // Algorithm 1's wall time here includes costing its schedule through
     // the (cold) engine, so this ratio understates the pure O(n)-pass gap
     // the paper quotes; name what is actually measured. Latencies compare
@@ -353,9 +436,9 @@ fn cmd_search(args: &Args) -> Result<(), String> {
 
 fn cmd_codegen(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
     let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
-    let out = args.flag("out").unwrap_or("generated");
+    let out = args.flag_value("out").map_err(|e| e.to_string())?.unwrap_or("generated");
     std::fs::create_dir_all(out).map_err(|e| e.to_string())?;
     let cpp_path = format!("{out}/{}_inference.cpp", model.name);
     std::fs::write(&cpp_path, codegen::generate_cpp(&model, &sched))
@@ -368,8 +451,8 @@ fn cmd_codegen(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_characterize() -> Result<(), String> {
-    let sim = Simulator::mlu100();
+fn cmd_characterize(args: &Args) -> Result<(), String> {
+    let sim = parse_sim(args)?;
     println!("running microbenchmark characterization on {} ...", sim.spec.name);
     let sweep = perfmodel::critical::single_core_sweep(&sim, 48);
     let crit = perfmodel::critical::fit_opcount_critical(&sweep, 0.9);
@@ -413,7 +496,7 @@ fn cmd_space(args: &Args) -> Result<(), String> {
 
 fn cmd_trace(args: &Args) -> Result<(), String> {
     let model = load_model(args)?;
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
     let strategy = match args.flag_usize("strategy").map_err(|e| e.to_string())? {
         None => Strategy::DlFusion,
         Some(i) => Strategy::from_index(i).ok_or(format!("strategy must be 1..=7, got {i}"))?,
@@ -430,10 +513,12 @@ fn cmd_trace(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve_sim(args: &Args) -> Result<(), String> {
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
 
     // ---- validate every flag before any tuning work ----
-    let models = zoo::by_names(args.flag("models").unwrap_or("resnet18,alexnet"))?;
+    let models = zoo::by_names(
+        args.flag_value("models").map_err(|e| e.to_string())?
+            .unwrap_or("resnet18,alexnet"))?;
     let mix = serving::ModelMix::uniform(models);
     let rate = args.flag_f64("rate").map_err(|e| e.to_string())?.unwrap_or(200.0);
     let requests = args
@@ -447,7 +532,8 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
             return Err(format!("--slo-ms must be positive, got {slo}"));
         }
     }
-    let mut policy = serving::DispatchPolicy::parse(args.flag("policy").unwrap_or("fifo"))?;
+    let mut policy = serving::DispatchPolicy::parse(
+        args.flag_value("policy").map_err(|e| e.to_string())?.unwrap_or("fifo"))?;
     let max_batch_flag = args.flag_usize("max-batch").map_err(|e| e.to_string())?;
     let batch_wait_flag = args.flag_f64("batch-wait-ms").map_err(|e| e.to_string())?;
     if let serving::DispatchPolicy::Batch { .. } = policy {
@@ -468,7 +554,8 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     if concurrency == Some(0) {
         return Err("--concurrency must be at least 1".into());
     }
-    let arrivals = args.flag("arrivals").unwrap_or("poisson");
+    let arrivals = args.flag_value("arrivals").map_err(|e| e.to_string())?
+        .unwrap_or("poisson");
     // --rate only drives the open-loop modes, so it is validated there and
     // merely reported as inert under closed-loop arrivals.
     let open_rate = || -> Result<f64, String> {
@@ -500,7 +587,9 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     } else if !closed && args.flag("concurrency").is_some() {
         println!("note: --concurrency only applies to --arrivals closed");
     }
-    let load_aware = match args.flag("allocator").unwrap_or("load") {
+    let load_aware = match args.flag_value("allocator").map_err(|e| e.to_string())?
+        .unwrap_or("load")
+    {
         "load" | "load-aware" => true,
         "single" | "single-request" => false,
         other => {
@@ -617,15 +706,47 @@ fn perf_smoke_metrics(sim: &Simulator) -> Result<Vec<(String, f64)>, String> {
         let rep = serving::SloReport::from_sim(&result, Some(slo));
         metrics.push((format!("batching_{label}_goodput_rps"), rep.goodput_rps));
     }
+
+    // Cross-target tuned latencies (rust/docs/DESIGN.md §11): the same
+    // model tuned for the default chip and the edge-class point, so CI
+    // tracks drift in the hardware-sensitivity surface too — a regression
+    // that only shows up off the default target still moves a metric.
+    for target in [Target::mlu100(), Target::edge4()] {
+        let target_sim = Simulator::new(target);
+        let model = zoo::resnet18();
+        let request = tuner::TuningRequest::new(&target_sim, &model);
+        let mut cx = request.context();
+        let a1 = tuner::Algorithm1.tune(&mut cx).map_err(|e| e.to_string())?;
+        let dp = tuner::OracleDp::reduced().tune(&mut cx).map_err(|e| e.to_string())?;
+        metrics.push((format!("{}_{}_algorithm1_ms", target_sim.target(), model.name),
+                      a1.predicted_ms));
+        metrics.push((format!("{}_{}_oracle_ms", target_sim.target(), model.name),
+                      dp.predicted_ms));
+    }
     Ok(metrics)
 }
 
 fn cmd_perf_smoke(args: &Args) -> Result<(), String> {
     use crate::util::json::Json;
 
-    let out_path = args.flag("out").unwrap_or("BENCH_ci.json");
-    let baseline_path = args.flag("baseline").unwrap_or("ci/perf_baseline.json");
-    let sim = Simulator::mlu100();
+    let out_path = args.flag_value("out").map_err(|e| e.to_string())?
+        .unwrap_or("BENCH_ci.json");
+    let baseline_path = args.flag_value("baseline").map_err(|e| e.to_string())?
+        .unwrap_or("ci/perf_baseline.json");
+    let sim = parse_sim(args)?;
+    if sim.target() != "mlu100" {
+        // The main-suite keys (resnet50_algorithm1_ms, …) carry mlu100
+        // semantics in the checked-in baseline, so recording another
+        // target's numbers under them would poison every later CI diff.
+        if args.flag_bool("write-baseline") {
+            return Err(format!(
+                "--write-baseline records the mlu100 baseline; rerun without \
+                 '--target {}' (its main-suite keys would overwrite the \
+                 mlu100 numbers CI diffs against)", sim.target()));
+        }
+        println!("note: main-suite metrics run on --target {} (the checked-in \
+                  baseline records the mlu100 default)", sim.target());
+    }
     let metrics = perf_smoke_metrics(&sim)?;
 
     let doc = Json::obj(vec![
@@ -697,7 +818,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         .unwrap_or(32);
     let verify = args.flag_bool("verify");
     let model = zoo::mini_cnn();
-    let sim = Simulator::mlu100();
+    let sim = parse_sim(args)?;
     // The serving path runs through the unified tuner API: one request, one
     // shared cost engine for both the schedule and the plan annotations.
     let request = tuner::TuningRequest::new(&sim, &model);
@@ -733,9 +854,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     println!("throughput: {:.1} inferences/s (PJRT CPU wall-clock)", report.fps());
     // Whole-schedule prediction (per-step annotations drop conv-free layers
     // and re-charge per-launch overheads, so their sum is not the total).
-    println!("simulator-predicted MLU100 latency: {} per inference \
-              (PJRT CPU measures numerics, not MLU100 speed)",
-             fmt_ms(tuned.predicted_ms));
+    println!("simulator-predicted {} latency: {} per inference \
+              (PJRT CPU measures numerics, not accelerator speed)",
+             sim.target(), fmt_ms(tuned.predicted_ms));
     if verify {
         println!(
             "per-request equivalence: {} ok / {} failures",

@@ -244,7 +244,7 @@ mod tests {
         let sched = Schedule::single_block(model.num_layers(), 4);
         let mut plan = build_plan(&model, &sched, &man).unwrap();
         assert_eq!(plan.predicted_total_ms(), 0.0);
-        let sim = crate::accel::Simulator::mlu100();
+        let sim = crate::accel::Simulator::new(crate::accel::Target::mlu100());
         let mut engine = crate::cost::CostEngine::new(&sim, &model);
         annotate_with_costs(&mut plan, &mut engine);
         assert!(plan.steps.iter().all(|s| s.predicted_ms > 0.0));

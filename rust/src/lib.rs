@@ -18,7 +18,7 @@
 //! | [`graph`] | layer-level IR, `.dlm` model format, op-count math (Eq. 1/2) |
 //! | [`zoo`] | built-in models: ResNet-18/50, VGG-19, AlexNet, MobileNetV2, synthetics |
 //! | [`microbench`] | synthesized layer sweeps (the paper's Section II methodology) |
-//! | [`accel`] | the MLU100 performance-simulator substrate (see rust/docs/DESIGN.md §6) |
+//! | [`accel`] | the accelerator performance-simulator substrate + the hardware-target registry (rust/docs/DESIGN.md §6, §11) |
 //! | [`perfmodel`] | roofline, `OpCount_critical`, the `MP(C, Op)` scorer (Eq. 5) |
 //! | [`cost`] | memoized, batch-aware cost-evaluation engine shared by every consumer (rust/docs/DESIGN.md §7, §10) |
 //! | [`optimizer`] | Algorithm 1 and the seven evaluation strategies (Table III) |
@@ -37,7 +37,11 @@
 //! ```no_run
 //! use dlfusion::prelude::*;
 //!
-//! let sim = Simulator::mlu100();
+//! // Every run is *for* an explicit hardware target (rust/docs/DESIGN.md
+//! // §11): look one up in the registry (`mlu100`, `mlu270`, `edge4`,
+//! // `hbm32`) or build your own with `SpecBuilder` + `Target::custom`.
+//! let target = Target::by_name("mlu100").expect("registry target");
+//! let sim = Simulator::new(target);
 //! let model = zoo::resnet18();
 //! // One declarative request; any backend (`Algorithm1`, `OracleDp`,
 //! // `Annealer`, `Exhaustive`, `TableStrategy`) runs against it.
@@ -72,7 +76,8 @@ pub mod cli;
 
 /// Most-used types, for `use dlfusion::prelude::*`.
 pub mod prelude {
-    pub use crate::accel::{AcceleratorSpec, Simulator, PerfReport};
+    pub use crate::accel::{AcceleratorSpec, PerfReport, Simulator, SpecBuilder,
+                           Target, TargetError};
     pub use crate::coordinator::{self, Engine};
     pub use crate::cost::{CostEngine, CostStats};
     pub use crate::graph::{Layer, LayerKind, Model};
@@ -81,9 +86,9 @@ pub mod prelude {
     pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};
     pub use crate::serving::{self, AllocationPlan, ArrivalProcess, ClusterConfig,
                              DispatchPolicy, ModelMix, SloReport};
-    pub use crate::tuner::{self, compare, Algorithm1, Annealer, Budget,
-                           Exhaustive, OracleDp, TableStrategy, Tuner,
-                           TuningContext, TuningError, TuningOutcome,
-                           TuningRequest, TuningStats};
+    pub use crate::tuner::{self, compare, compare_targets, Algorithm1, Annealer,
+                           Budget, Exhaustive, OracleDp, TableStrategy,
+                           TargetComparison, Tuner, TuningContext, TuningError,
+                           TuningOutcome, TuningRequest, TuningStats};
     pub use crate::zoo;
 }

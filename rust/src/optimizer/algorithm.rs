@@ -40,12 +40,15 @@ impl AlgorithmParams {
     /// critical op count. `sum_Op` counts *useful* ops while the cores
     /// additionally compute the halo-redundant rows (~2–4x inside typical
     /// blocks), so the default threshold is 4x the per-core saturation
-    /// point — the block's computed work lands at saturation. The ablation
-    /// bench sweeps this constant.
+    /// point — the block's computed work lands at saturation. Both inputs
+    /// are target-derived: the threshold from the spec's per-core
+    /// `OpCount_critical`, and the Eq. 5 weights re-anchored to its core
+    /// count ([`MpModel::for_spec`] — bit-identical to the MLU100 defaults
+    /// on 32-core targets). The ablation bench sweeps this constant.
     pub fn for_spec(spec: &AcceleratorSpec) -> Self {
         AlgorithmParams {
             opcount_critical: 4.0 * spec.opcount_critical_per_core(),
-            mp_model: MpModel::default(),
+            mp_model: MpModel::for_spec(spec),
         }
     }
 }
@@ -121,7 +124,7 @@ mod tests {
     use crate::zoo;
 
     fn spec() -> AcceleratorSpec {
-        AcceleratorSpec::mlu100()
+        crate::accel::Target::mlu100().into_spec()
     }
 
     #[test]

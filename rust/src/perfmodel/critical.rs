@@ -70,7 +70,7 @@ mod tests {
 
     #[test]
     fn sweep_is_monotone_in_gflops() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let sweep = single_core_sweep(&sim, 24);
         for w in sweep.windows(2) {
             assert!(w[1].gflops >= w[0].gflops * 0.98,
@@ -86,7 +86,7 @@ mod tests {
         // chip-wide OpCount_critical.) Launch/sync overheads shift the
         // measured 90% point slightly right of the pure-eta value, hence
         // the log-space tolerance.
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let sweep = single_core_sweep(&sim, 64);
         let crit = fit_opcount_critical(&sweep, 0.9);
         let want = sim.spec.opcount_critical_per_core();
@@ -98,7 +98,7 @@ mod tests {
 
     #[test]
     fn threshold_moves_estimate() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let sweep = single_core_sweep(&sim, 48);
         let lo = fit_opcount_critical(&sweep, 0.5);
         let hi = fit_opcount_critical(&sweep, 0.9);

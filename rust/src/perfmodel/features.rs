@@ -97,7 +97,7 @@ mod tests {
         // The paper's key PCA finding, reproduced on the simulator: op count
         // associates with performance more strongly than kernel size or
         // feature size, and channel is material.
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let layers = microbench::conv_sweep();
         let ch = characterize(&sim, &layers, 1);
         let [op, chan, kernel, fsize] = ch.perf_association;
@@ -107,7 +107,7 @@ mod tests {
 
     #[test]
     fn pca_explains_most_variance_in_two_components() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let layers = microbench::conv_sweep();
         let ch = characterize(&sim, &layers, 1);
         let ratio = ch.pca.explained_ratio();

@@ -35,6 +35,18 @@ impl Default for MpModel {
 }
 
 impl MpModel {
+    /// The default weights re-anchored to a hardware target: α and β are
+    /// the paper's PCA weights (properties of conv workloads, not of the
+    /// chip), while the proportionality constant shifts by
+    /// `log2(num_cores / 32)` so the layer that lands mid-range on the
+    /// 32-core MLU100 lands mid-range on any core count. For a 32-core
+    /// target this is bit-identical to [`MpModel::default`]
+    /// (`log2(1) == 0`), which keeps every pinned MLU100 result unchanged.
+    pub fn for_spec(spec: &AcceleratorSpec) -> MpModel {
+        let d = MpModel::default();
+        MpModel { bias: d.bias + (spec.num_cores as f64 / 32.0).log2(), ..d }
+    }
+
     /// Select the MP for a layer with `channels` output channels and `gops`
     /// operation count.
     pub fn select(&self, spec: &AcceleratorSpec, channels: usize, gops: f64) -> usize {
@@ -86,9 +98,10 @@ fn round_pow2(x: usize) -> usize {
     p
 }
 
-/// Convenience: Eq. 5 with the paper's default weights.
+/// Convenience: Eq. 5 with the target-derived default weights
+/// (bit-identical to [`MpModel::default`] on 32-core targets).
 pub fn select_mp(spec: &AcceleratorSpec, layer: &Layer) -> usize {
-    MpModel::default().select_layer(spec, layer)
+    MpModel::for_spec(spec).select_layer(spec, layer)
 }
 
 #[cfg(test)]
@@ -97,7 +110,7 @@ mod tests {
     use crate::graph::layer::ConvSpec;
 
     fn spec() -> AcceleratorSpec {
-        AcceleratorSpec::mlu100()
+        crate::accel::Target::mlu100().into_spec()
     }
 
     #[test]
@@ -146,6 +159,24 @@ mod tests {
     }
 
     #[test]
+    fn for_spec_is_bit_identical_on_32_cores_and_scales_elsewhere() {
+        let s = spec();
+        assert_eq!(MpModel::for_spec(&s), MpModel::default());
+        // Twice the cores shifts the proportionality constant by one
+        // power-of-two step; a quarter shifts it down two.
+        let mut big = s.clone();
+        big.num_cores = 64;
+        assert!((MpModel::for_spec(&big).bias - 4.0).abs() < 1e-12);
+        let mut small = s.clone();
+        small.num_cores = 8;
+        assert!((MpModel::for_spec(&small).bias - 1.0).abs() < 1e-12);
+        // A mid-size layer therefore gets a larger MP on the bigger chip.
+        let l = Layer::conv("c", ConvSpec::same(256, 256, 56, 3));
+        assert!(MpModel::for_spec(&big).select_layer(&big, &l)
+                >= MpModel::for_spec(&s).select_layer(&s, &l));
+    }
+
+    #[test]
     fn vgg_like_layer_gets_big_mp_resnet_tail_small() {
         let s = spec();
         let m = MpModel::default();
@@ -157,7 +188,7 @@ mod tests {
 
     #[test]
     fn fit_recovers_positive_weights() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mut layers = Vec::new();
         for c in [32usize, 64, 128, 256, 512] {
             for hw in [14usize, 28, 56, 112] {
@@ -173,7 +204,7 @@ mod tests {
 
     #[test]
     fn fitted_model_tracks_simulator_optimum() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mut layers = Vec::new();
         for c in [32usize, 64, 128, 256, 512] {
             for hw in [14usize, 28, 56, 112] {

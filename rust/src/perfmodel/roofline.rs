@@ -33,20 +33,20 @@ mod tests {
 
     #[test]
     fn memory_bound_region_linear() {
-        let s = AcceleratorSpec::mlu100();
+        let s = crate::accel::Target::mlu100().into_spec();
         assert!((roofline_gflops(&s, 10.0) - 1024.0).abs() < 1e-9);
         assert!((roofline_gflops(&s, 100.0) - 10240.0).abs() < 1e-9);
     }
 
     #[test]
     fn compute_bound_region_flat() {
-        let s = AcceleratorSpec::mlu100();
+        let s = crate::accel::Target::mlu100().into_spec();
         assert_eq!(roofline_gflops(&s, 1e6), s.peak_gflops());
     }
 
     #[test]
     fn ridge_point() {
-        let s = AcceleratorSpec::mlu100();
+        let s = crate::accel::Target::mlu100().into_spec();
         // 64000 / 102.4 = 625 ops/byte.
         assert!((ridge_intensity(&s) - 625.0).abs() < 1e-9);
     }
@@ -55,7 +55,7 @@ mod tests {
     fn measured_gap_exists() {
         // The Fig. 3 observation: actual performance sits well below the
         // roofline for real layers.
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let layer = crate::graph::Layer::conv("c", ConvSpec::same(64, 64, 56, 3));
         let measured = sim.layer_gflops(&layer, 32);
         let bound = roofline_gflops(&sim.spec, intensity(&layer));

@@ -213,7 +213,7 @@ mod tests {
     use crate::zoo;
 
     fn sim() -> Simulator {
-        Simulator::mlu100()
+        Simulator::new(crate::accel::Target::mlu100())
     }
 
     #[test]

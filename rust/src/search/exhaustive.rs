@@ -171,7 +171,7 @@ mod tests {
 
     #[test]
     fn dp_matches_exhaustive_on_tiny_models() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mp_set: Vec<usize> = vec![1, 2, 4, 8, 16, 32];
         for n in [2usize, 3, 5, 8] {
             let m = conv_only(n);
@@ -189,7 +189,7 @@ mod tests {
     fn visited_count_matches_eq4_including_single_block() {
         // Eq. 4 counts partitions with >= 2 blocks; exhaustive also visits
         // the single-block case, so visited = Eq4(n, m) + m.
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let n = 6;
         let mp_set = vec![1, 2, 4, 8];
         let m = {
@@ -211,7 +211,7 @@ mod tests {
         // Replay the seed loop verbatim — `Simulator::block_latency_ms` per
         // (range, mp), no engine — and pin the engine-routed result against
         // it: same schedule, same visit count, bit for bit.
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mp_set = vec![1usize, 2, 4, 8];
         for n in [3usize, 6] {
             let m = conv_only(n);
@@ -260,7 +260,7 @@ mod tests {
     #[test]
     #[allow(deprecated)]
     fn legacy_shim_delegates_to_engine_path() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mp_set = vec![1, 2, 4, 8];
         let m = conv_only(4);
         let (legacy, visited) = exhaustive_schedule(&sim, &m, &mp_set);
@@ -272,7 +272,7 @@ mod tests {
 
     #[test]
     fn shared_engine_caches_overlapping_partitions() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = conv_only(6);
         let mp_set = vec![1, 2, 4, 8];
         let mut engine = CostEngine::new(&sim, &m);
@@ -286,7 +286,7 @@ mod tests {
 
     #[test]
     fn large_model_is_an_error_not_a_panic() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = zoo::resnet18();
         let mut engine = CostEngine::new(&sim, &m);
         let err = exhaustive_schedule_with(&mut engine, &[1]).unwrap_err();
@@ -295,7 +295,7 @@ mod tests {
 
     #[test]
     fn empty_mp_set_is_an_error_not_a_panic() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = conv_only(3);
         let mut engine = CostEngine::new(&sim, &m);
         let err = exhaustive_schedule_with(&mut engine, &[]).unwrap_err();
@@ -304,7 +304,7 @@ mod tests {
 
     #[test]
     fn budget_aborts_enumeration() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = conv_only(6);
         let mut engine = CostEngine::new(&sim, &m);
         let err = exhaustive_schedule_budgeted(&mut engine, &[1, 2], Some(5))
@@ -317,7 +317,7 @@ mod tests {
     #[should_panic(expected = "exponential")]
     #[allow(deprecated)]
     fn legacy_shim_guards_large_n() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let m = zoo::resnet18();
         exhaustive_schedule(&sim, &m, &[1]);
     }

@@ -95,6 +95,9 @@ impl ModelAllocation {
 pub struct AllocationPlan {
     pub models: Vec<ModelAllocation>,
     pub slo_ms: Option<f64>,
+    /// Registry name of the hardware target every operating point was
+    /// priced for (the planning simulator's — rust/docs/DESIGN.md §11).
+    pub target: String,
 }
 
 impl AllocationPlan {
@@ -109,6 +112,7 @@ impl AllocationPlan {
                 let p = if load_aware { &m.load_aware } else { &m.single };
                 ModelService::new(m.name.clone(), p.cores, p.service_ms)
                     .with_batch_table(p.batch_service_ms.clone())
+                    .with_target(self.target.clone())
             })
             .collect()
     }
@@ -147,10 +151,15 @@ impl AllocationPlan {
 
     /// Render the per-model comparison table.
     pub fn render(&self) -> String {
+        let target = if self.target.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", self.target)
+        };
         let title = match self.slo_ms {
             Some(slo) => format!(
-                "core allocation — single-request vs load-aware (SLO {slo} ms)"),
-            None => "core allocation — single-request vs load-aware".to_string(),
+                "core allocation — single-request vs load-aware (SLO {slo} ms){target}"),
+            None => format!("core allocation — single-request vs load-aware{target}"),
         };
         let mut t = Table::new(&["model", "MP*", "lat*", "MP", "lat",
                                  "core-ms*", "core-ms", "diverged"])
@@ -315,7 +324,7 @@ pub fn plan_allocations_batched(sim: &Simulator, mix: &ModelMix,
             load_aware_batch,
         });
     }
-    Ok(AllocationPlan { models, slo_ms })
+    Ok(AllocationPlan { models, slo_ms, target: sim.target().to_string() })
 }
 
 #[cfg(test)]
@@ -325,7 +334,7 @@ mod tests {
 
     #[test]
     fn sweep_points_are_consistent() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mix = ModelMix::uniform(vec![zoo::alexnet()]);
         let plan = plan_allocations(&sim, &mix, None).unwrap();
         assert_eq!(plan.models.len(), 1);
@@ -346,7 +355,7 @@ mod tests {
 
     #[test]
     fn load_aware_never_costs_more_core_ms() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
         let plan = plan_allocations(&sim, &mix, None).unwrap();
         for m in &plan.models {
@@ -364,7 +373,7 @@ mod tests {
 
     #[test]
     fn slo_constrains_the_load_aware_point() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mix = ModelMix::uniform(vec![zoo::alexnet()]);
         let free = plan_allocations(&sim, &mix, None).unwrap();
         let m = &free.models[0];
@@ -386,7 +395,7 @@ mod tests {
 
     #[test]
     fn batched_sweep_keeps_batch_one_points_and_amortizes() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mix = ModelMix::uniform(vec![zoo::alexnet()]);
         let base = plan_allocations(&sim, &mix, None).unwrap();
         let plan = plan_allocations_batched(&sim, &mix, None, 8).unwrap();
@@ -420,7 +429,7 @@ mod tests {
 
     #[test]
     fn slo_constrains_the_batched_choice() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mix = ModelMix::uniform(vec![zoo::alexnet()]);
         let free = plan_allocations_batched(&sim, &mix, None, 8).unwrap();
         let single_ms = free.models[0].single.service_ms;
@@ -445,7 +454,7 @@ mod tests {
 
     #[test]
     fn services_and_render() {
-        let sim = Simulator::mlu100();
+        let sim = Simulator::new(crate::accel::Target::mlu100());
         let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
         let plan = plan_allocations(&sim, &mix, Some(100.0)).unwrap();
         let svcs = plan.services(true);

@@ -29,19 +29,36 @@ pub struct ModelService {
     /// extrapolates linearly from `service_ms`, i.e. assumes no
     /// amortization for unplanned batch sizes.
     pub batch_service_ms: Vec<f64>,
+    /// Registry name of the hardware target the service times were planned
+    /// for (rust/docs/DESIGN.md §11); empty when hand-built outside a plan.
+    /// [`simulate`] refuses to co-schedule services planned for different
+    /// targets — a pool is one chip.
+    pub target: String,
 }
 
 impl ModelService {
     /// An operating point with no batch table (single-request serving, or
-    /// linear scaling under the `batch` policy).
+    /// linear scaling under the `batch` policy) and no recorded target.
     pub fn new(name: impl Into<String>, cores: usize, service_ms: f64) -> ModelService {
-        ModelService { name: name.into(), cores, service_ms, batch_service_ms: Vec::new() }
+        ModelService {
+            name: name.into(),
+            cores,
+            service_ms,
+            batch_service_ms: Vec::new(),
+            target: String::new(),
+        }
     }
 
     /// Attach the engine-predicted batched service times (entry `b - 1` is
     /// the invocation latency at batch `b`).
     pub fn with_batch_table(mut self, table: Vec<f64>) -> ModelService {
         self.batch_service_ms = table;
+        self
+    }
+
+    /// Record the hardware target the service times were planned for.
+    pub fn with_target(mut self, target: impl Into<String>) -> ModelService {
+        self.target = target.into();
         self
     }
 
@@ -235,6 +252,25 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
         }
         _ => None,
     };
+    // One pool is one chip: services planned for different hardware targets
+    // cannot share it (their service times are in different "units").
+    let mut planned_target: Option<&str> = None;
+    for s in services {
+        if s.target.is_empty() {
+            continue;
+        }
+        match planned_target {
+            None => planned_target = Some(s.target.as_str()),
+            Some(first) if first != s.target => {
+                return Err(crate::accel::TargetError::MixedTargets {
+                    first: first.to_string(),
+                    second: s.target.clone(),
+                }
+                .to_string());
+            }
+            Some(_) => {}
+        }
+    }
     for s in services {
         if s.cores == 0 || s.cores > cfg.num_cores {
             return Err(format!(

@@ -28,12 +28,12 @@
 //! `dlfusion serve-sim`.
 //!
 //! ```no_run
-//! use dlfusion::accel::Simulator;
+//! use dlfusion::accel::{Simulator, Target};
 //! use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
 //!                         ModelMix, SloReport};
 //! use dlfusion::zoo;
 //!
-//! let sim = Simulator::mlu100();
+//! let sim = Simulator::new(Target::mlu100());
 //! let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
 //! let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("plan");
 //! let trace = serving::generate_trace(

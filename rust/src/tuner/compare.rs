@@ -1,12 +1,16 @@
 //! Side-by-side tuner comparison over one shared context — the Fig. 10 /
-//! Section V "strategies and search costs" report as a first-class API.
+//! Section V "strategies and search costs" report as a first-class API —
+//! plus its cross-target analog: one backend, one model, many hardware
+//! points ([`compare_targets`], rust/docs/DESIGN.md §11).
 
+use crate::accel::{Simulator, Target};
 use crate::cost::CostStats;
+use crate::graph::Model;
 use crate::util::units::fmt_ms;
 use crate::util::Table;
 
 use super::outcome::{TuningError, TuningOutcome};
-use super::request::TuningContext;
+use super::request::{TuningContext, TuningRequest};
 use super::Tuner;
 
 /// Outcomes of several tuners run sequentially over one shared context
@@ -72,5 +76,110 @@ impl Comparison {
             st.hits,
             st.block_eval_reduction()
         )
+    }
+}
+
+/// One row of a [`TargetComparison`]: the tuning outcome on one hardware
+/// point.
+#[derive(Debug, Clone)]
+pub struct TargetOutcome {
+    pub target: Target,
+    pub outcome: TuningOutcome,
+}
+
+/// Outcomes of one backend tuning one model across several hardware
+/// targets — the cross-target analog of [`Comparison`]. Unlike the
+/// same-target comparison there is no shared cost cache: every hardware
+/// point prices blocks differently, so each target gets its own engine.
+#[derive(Debug, Clone)]
+pub struct TargetComparison {
+    /// One row per *successfully tuned* target, in the order given to
+    /// [`compare_targets`].
+    pub rows: Vec<TargetOutcome>,
+    /// Targets the backend could not tune (e.g. an explicit `--mps` value
+    /// above a small chip's core count), with the per-target error. The
+    /// comparison proceeds without them.
+    pub skipped: Vec<(Target, TuningError)>,
+}
+
+/// Tune `model` with one backend on every target. `template` carries the
+/// request knobs (MP/batch candidates, granularity, annealing config,
+/// budgets) applied to every hardware point via
+/// [`TuningRequest::for_sim`] — pass `&TuningRequest::new(&sim, &model)`
+/// for the paper defaults. A template with no explicit MP candidate set
+/// lets every target derive its own reduced MP set.
+///
+/// A target the backend cannot tune — say `--mps 8` on the 4-core edge
+/// part — is *skipped* (recorded in [`TargetComparison::skipped`]) rather
+/// than aborting the whole comparison; only when every target fails does
+/// this return an error, naming the first failing target.
+pub fn compare_targets(model: &Model, targets: &[Target], tuner: &mut dyn Tuner,
+                       template: &TuningRequest<'_>)
+                       -> Result<TargetComparison, TuningError> {
+    let mut rows = Vec::with_capacity(targets.len());
+    let mut skipped = Vec::new();
+    for target in targets {
+        let sim = Simulator::new(target.clone());
+        let request = template.for_sim(&sim, model);
+        match tuner.tune(&mut request.context()) {
+            Ok(outcome) => rows.push(TargetOutcome { target: target.clone(), outcome }),
+            Err(e) => skipped.push((target.clone(), e)),
+        }
+    }
+    if rows.is_empty() {
+        if let Some((target, e)) = skipped.into_iter().next() {
+            return Err(TuningError::InvalidRequest(format!(
+                "no target could be tuned; first failure on '{}': {e}",
+                target.name())));
+        }
+        return Err(TuningError::InvalidRequest("no targets given".to_string()));
+    }
+    Ok(TargetComparison { rows, skipped })
+}
+
+impl TargetComparison {
+    /// The row with the lowest predicted per-sample latency (which hardware
+    /// point serves this model fastest).
+    pub fn best(&self) -> Option<&TargetOutcome> {
+        self.rows
+            .iter()
+            .min_by(|a, b| a.outcome.per_sample_ms().total_cmp(&b.outcome.per_sample_ms()))
+    }
+
+    /// Render the per-target table plus one schedule line per target.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(&["target", "cores", "peak", "BW", "max MP",
+                                 "blocks", "latency", "FPS"])
+            .label_first()
+            .with_title(title);
+        for row in &self.rows {
+            let spec = row.target.spec();
+            let o = &row.outcome;
+            let max_mp = o.schedule.blocks.iter().map(|b| b.mp).max().unwrap_or(1);
+            t.row(vec![
+                row.target.name().to_string(),
+                spec.num_cores.to_string(),
+                format!("{:.1}T", spec.peak_gflops() / 1000.0),
+                format!("{:.1}", spec.mem_bw_gbps),
+                max_mp.to_string(),
+                o.schedule.num_blocks().to_string(),
+                fmt_ms(o.predicted_ms),
+                format!("{:.1}", o.fps()),
+            ]);
+        }
+        let mut out = format!("{t}\n");
+        for row in &self.rows {
+            out.push_str(&format!("{}: {}\n", row.target.name(),
+                                  row.outcome.schedule.summary()));
+        }
+        for (target, e) in &self.skipped {
+            out.push_str(&format!("{}: skipped — {e}\n", target.name()));
+        }
+        if let Some(best) = self.best() {
+            out.push_str(&format!(
+                "fastest hardware point: {} ({} per sample)\n",
+                best.target.name(), fmt_ms(best.outcome.per_sample_ms())));
+        }
+        out
     }
 }

@@ -31,7 +31,7 @@
 //! ```no_run
 //! use dlfusion::prelude::*;
 //!
-//! let sim = Simulator::mlu100();
+//! let sim = Simulator::new(Target::mlu100());
 //! let model = zoo::resnet18();
 //! let request = TuningRequest::new(&sim, &model);
 //! let outcome = request.run(&mut Algorithm1).expect("tuning");
@@ -44,7 +44,8 @@ pub mod backends;
 pub mod compare;
 
 pub use backends::{Algorithm1, Annealer, Exhaustive, OracleDp, TableStrategy};
-pub use compare::{compare, Comparison};
+pub use compare::{compare, compare_targets, Comparison, TargetComparison,
+                  TargetOutcome};
 pub use outcome::{TuningError, TuningOutcome, TuningStats};
 pub use request::{Budget, TuningContext, TuningRequest};
 

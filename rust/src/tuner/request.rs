@@ -126,6 +126,12 @@ impl<'a> TuningRequest<'a> {
         self.sim
     }
 
+    /// Registry name of the hardware target this request tunes for (the
+    /// simulator's — every outcome of the request is *for* that hardware).
+    pub fn target(&self) -> &'a str {
+        self.sim.target()
+    }
+
     pub fn model(&self) -> &'a Model {
         self.model
     }
@@ -161,6 +167,23 @@ impl<'a> TuningRequest<'a> {
     /// Run several backends over one shared context (see [`compare`]).
     pub fn compare(&self, tuners: &mut [Box<dyn Tuner>]) -> Result<Comparison, TuningError> {
         compare(&mut self.context(), tuners)
+    }
+
+    /// Re-point this request's constraints at another `(sim, model)` pair.
+    /// The cross-target comparison ([`super::compare_targets`]) uses this to
+    /// apply one set of knobs to every hardware point; an unset MP candidate
+    /// set stays unset, so each target derives its own reduced MP set.
+    pub fn for_sim<'b>(&self, sim: &'b Simulator, model: &'b Model) -> TuningRequest<'b> {
+        TuningRequest {
+            sim,
+            model,
+            mp_candidates: self.mp_candidates.clone(),
+            batch_candidates: self.batch_candidates.clone(),
+            granularity: self.granularity,
+            anneal: self.anneal,
+            params: self.params,
+            budget: self.budget,
+        }
     }
 }
 
@@ -204,6 +227,11 @@ impl<'a> TuningContext<'a> {
 
     pub fn sim(&self) -> &'a Simulator {
         self.engine.sim()
+    }
+
+    /// Registry name of the hardware target this context tunes for.
+    pub fn target(&self) -> &'a str {
+        self.engine.sim().target()
     }
 
     pub fn model(&self) -> &'a Model {

@@ -19,6 +19,60 @@ fn help_succeeds() {
 fn zoo_listing_succeeds() {
     assert_eq!(run("zoo"), 0);
     assert_eq!(run("zoo --spec"), 0);
+    assert_eq!(run("zoo --spec --target edge4"), 0);
+}
+
+#[test]
+fn targets_command_lists_the_registry() {
+    assert_eq!(run("targets"), 0);
+}
+
+#[test]
+fn target_flag_selects_registry_hardware() {
+    assert_eq!(run("tune alexnet --target edge4"), 0);
+    assert_eq!(run("tune alexnet --target hbm32 --tuner oracle"), 0);
+    assert_eq!(run("simulate alexnet --target mlu270"), 0);
+    assert_eq!(run("search alexnet --target edge4 --iterations 100"), 0);
+    assert_eq!(run("optimize alexnet --target mlu270"), 0);
+    assert_eq!(run("trace alexnet --target edge4"), 0);
+}
+
+#[test]
+fn target_flag_rejects_unknown_and_bare_forms() {
+    // Unknown registry name → usage error on every threaded command.
+    assert_eq!(run("tune alexnet --target tpu9"), 1);
+    assert_eq!(run("simulate alexnet --target tpu9"), 1);
+    assert_eq!(run("serve-sim --models alexnet --target tpu9"), 1);
+    assert_eq!(run("perf-smoke --target tpu9"), 1);
+    // Recording a non-default target's numbers under the mlu100 baseline
+    // keys is refused, not advisory.
+    assert_eq!(run("perf-smoke --target edge4 --write-baseline \
+                    --out /tmp/dlfusion_cli_edge_smoke.json"), 1);
+    // A trailing --target with no value is a parse error, not a panic and
+    // not a lookup of the literal string "true".
+    assert_eq!(run("tune alexnet --target"), 1);
+    assert_eq!(run("serve-sim --models"), 1);
+    assert_eq!(run("tune alexnet --target --tuner oracle"), 1);
+}
+
+#[test]
+fn tune_compare_targets_renders_the_cross_target_table() {
+    assert_eq!(run("tune alexnet --compare-targets"), 0);
+    assert_eq!(run("tune resnet18 --compare-targets --tuner oracle"), 0);
+    assert_eq!(run("tune alexnet --compare-targets --mps 1,2,4"), 0);
+    // A knob invalid on one chip (MP 8 on the 4-core edge part) skips that
+    // target instead of aborting the whole comparison.
+    assert_eq!(
+        run("tune alexnet --compare-targets --tuner oracle-constrained --mps 8"),
+        0);
+    // Backend and flag errors still surface cleanly.
+    assert_eq!(run("tune alexnet --compare-targets --tuner bogus"), 1);
+    assert_eq!(run("tune alexnet --compare-targets --mps abc"), 1);
+    // The two comparison modes answer different questions; asking for both
+    // at once is an explicit error rather than a silent pick.
+    assert_eq!(run("tune alexnet --compare --compare-targets"), 1);
+    // Exhaustive on a big model errors on the first target, cleanly.
+    assert_eq!(run("tune resnet18 --compare-targets --tuner exhaustive"), 1);
 }
 
 #[test]
@@ -113,6 +167,12 @@ fn serve_sim_happy_paths() {
         run("serve-sim --models alexnet --arrivals bursty --rate 300 \
              --requests 40 --allocator single"),
         0);
+    // The whole pipeline (allocator, pool size, SLO report) follows the
+    // explicit hardware target.
+    assert_eq!(
+        run("serve-sim --models alexnet --target edge4 --requests 24 \
+             --rate 100 --seed 5"),
+        0);
 }
 
 #[test]
@@ -172,7 +232,9 @@ fn perf_smoke_emits_json_and_compares_against_baseline() {
     for key in ["resnet50_algorithm1_ms", "resnet50_oracle_ms",
                 "vgg19_algorithm1_ms", "vgg19_oracle_ms",
                 "serving_fifo_throughput_rps", "serving_fifo_goodput_rps",
-                "batching_fifo_goodput_rps", "batching_batch_goodput_rps"] {
+                "batching_fifo_goodput_rps", "batching_batch_goodput_rps",
+                "mlu100_resnet18_algorithm1_ms", "mlu100_resnet18_oracle_ms",
+                "edge4_resnet18_algorithm1_ms", "edge4_resnet18_oracle_ms"] {
         let v = metrics.get(key).and_then(|m| m.as_f64());
         assert!(v.is_some_and(|v| v.is_finite() && v > 0.0), "metric {key}: {v:?}");
     }

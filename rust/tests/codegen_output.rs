@@ -1,7 +1,7 @@
 //! Integration: generated C++ structure across models and schedules, plus
 //! `.dlm` round-trips feeding codegen.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::codegen::{generate_cpp, generate_header};
 use dlfusion::graph::format::{from_dlm, to_dlm};
 use dlfusion::optimizer::{self, Schedule};
@@ -9,7 +9,7 @@ use dlfusion::zoo;
 
 #[test]
 fn full_pipeline_dlm_to_cpp() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     for m in zoo::all_models() {
         // Round-trip through .dlm first (the paper's ONNX entry path).
         let text = to_dlm(&m);
@@ -65,7 +65,7 @@ fn generated_files_via_cli_paths() {
     let dir = std::env::temp_dir().join("dlfusion_codegen_test");
     std::fs::create_dir_all(&dir).unwrap();
     let m = zoo::alexnet();
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let sched = optimizer::dlfusion_schedule(&m, &sim.spec);
     let cpp_path = dir.join("alexnet_inference.cpp");
     std::fs::write(&cpp_path, generate_cpp(&m, &sched)).unwrap();

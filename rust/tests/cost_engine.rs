@@ -12,7 +12,7 @@
 //! `batch = 1` to the pre-batch bits.
 #![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::cost::CostEngine;
 use dlfusion::graph::Model;
 use dlfusion::optimizer::{Block, Schedule};
@@ -46,7 +46,7 @@ fn prop_multi_matches_per_mp_scalar() {
     // over randomized blocks and MP sets. `block_latency_ms_multi` is now a
     // `ModelFacts` walk, so this transitively pins the engine's fast path
     // against the untouched scalar reference.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let models = models();
     let g = block_case(&models);
     forall(200, &g, |(mi, start, end, mps)| {
@@ -68,7 +68,7 @@ fn prop_multi_matches_per_mp_scalar() {
 
 #[test]
 fn prop_engine_paths_bit_identical_to_simulator() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let models = models();
     let g = block_case(&models);
     forall(120, &g, |(mi, start, end, mps)| {
@@ -106,7 +106,7 @@ fn prop_batch_one_engine_bit_identical_to_prebatch_scalar_path() {
     // exactly the bits of the untouched Simulator scalar/multi paths, via
     // the explicit-batch accessor, the active-batch accessor, and after
     // visiting other batches.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let models = models();
     let g = block_case(&models);
     forall(120, &g, |(mi, start, end, mps)| {
@@ -158,7 +158,7 @@ fn random_schedule(rng: &mut XorShiftRng, n: usize, max_mp: usize) -> Schedule {
 
 #[test]
 fn prop_engine_run_schedule_bit_identical() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let models = models();
     let g = Gen::new(|rng: &mut XorShiftRng| {
         let mi = rng.gen_usize(0, models.len() - 1);
@@ -182,7 +182,7 @@ fn prop_engine_run_schedule_bit_identical() {
 
 #[test]
 fn prop_delta_cost_matches_fresh_evaluation() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let m = zoo::resnet18();
     let g = Gen::new(|rng: &mut XorShiftRng| rng.next_u64());
     forall(40, &g, |&seed| {
@@ -213,7 +213,7 @@ fn prop_delta_cost_matches_fresh_evaluation() {
 fn engine_and_oracle_agree_with_seed_strategy_seven() {
     // End-to-end: strategy 7 through the public API must equal the report
     // the untouched simulator produces for the oracle's schedule.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let m = zoo::resnet18();
     let (sched, rep) = dlfusion::optimizer::run_strategy(
         &sim, &m, dlfusion::optimizer::Strategy::BruteForce);

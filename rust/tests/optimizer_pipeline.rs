@@ -3,7 +3,7 @@
 //! see `dlfusion::testutil::prop`).
 #![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
-use dlfusion::accel::{AcceleratorSpec, Simulator};
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::graph::layer::ConvSpec;
 use dlfusion::graph::Model;
 use dlfusion::optimizer::{self, AlgorithmParams, Schedule, Strategy};
@@ -22,7 +22,7 @@ fn random_model(rng: &mut XorShiftRng) -> Model {
 
 #[test]
 fn every_strategy_on_every_model_is_valid_and_consistent() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     for m in zoo::all_models() {
         for st in Strategy::ALL {
             let (sched, rep) = optimizer::run_strategy(&sim, &m, st);
@@ -38,7 +38,7 @@ fn every_strategy_on_every_model_is_valid_and_consistent() {
 
 #[test]
 fn prop_dlfusion_partition_is_exact_cover() {
-    let spec = AcceleratorSpec::mlu100();
+    let spec = Target::mlu100().into_spec();
     let g = Gen::new(random_model);
     forall(60, &g, |m| {
         let sched = optimizer::dlfusion_schedule(m, &spec);
@@ -62,7 +62,7 @@ fn prop_dlfusion_partition_is_exact_cover() {
 
 #[test]
 fn prop_block_mps_are_pow2_in_range() {
-    let spec = AcceleratorSpec::mlu100();
+    let spec = Target::mlu100().into_spec();
     let g = Gen::new(random_model);
     forall(60, &g, |m| {
         let sched = optimizer::dlfusion_schedule(m, &spec);
@@ -79,7 +79,7 @@ fn prop_block_mps_are_pow2_in_range() {
 fn prop_oracle_never_loses_to_dlfusion_modulo_quantization() {
     // The DP oracle optimizes a superset-ish space (reduced MP set, size
     // rule); allow the rule's quantization margin.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| {
         let n = rng.gen_usize(2, 12);
         let c = 1usize << rng.gen_usize(5, 9);
@@ -101,7 +101,7 @@ fn prop_oracle_never_loses_to_dlfusion_modulo_quantization() {
 fn prop_simulator_latency_monotone_in_depth() {
     // Adding layers to a model can't make the optimized whole-model run
     // faster.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| {
         (rng.gen_usize(1, 12), 1usize << rng.gen_usize(5, 8))
     });
@@ -123,7 +123,7 @@ fn prop_simulator_latency_monotone_in_depth() {
 
 #[test]
 fn prop_fused_single_layer_equals_unfused() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| {
         let c = 1usize << rng.gen_usize(4, 9);
         let hw = *rng.choose(&[7usize, 14, 28, 56]);
@@ -148,7 +148,7 @@ fn prop_fused_single_layer_equals_unfused() {
 
 #[test]
 fn critical_threshold_controls_block_count_monotonically() {
-    let spec = AcceleratorSpec::mlu100();
+    let spec = Target::mlu100().into_spec();
     let m = zoo::identical_conv_model("t", ConvSpec::same(256, 256, 56, 3), 24);
     let mut last_blocks = usize::MAX;
     for crit in [0.1, 0.5, 2.0, 8.0, 1e6] {
@@ -165,7 +165,7 @@ fn critical_threshold_controls_block_count_monotonically() {
 fn search_time_comparison_paper_claim() {
     // Paper Section V: DLFusion is O(n) while even the reduced brute force
     // is quadratic in evaluations. Verify the count relationship.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let m = zoo::resnet50();
     let (_, stats) = search::oracle_schedule(&sim, &m);
     // n = 174 layers; oracle considers O(n^2/16 * 8) evaluations.

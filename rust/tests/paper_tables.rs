@@ -2,7 +2,7 @@
 //! (Tables I–II, Eq. 4, and the Fig. 10 qualitative claims).
 #![allow(deprecated)] // exercises the legacy shims alongside the tuner API
 
-use dlfusion::accel::{AcceleratorSpec, Simulator};
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::graph::LayerKind;
 use dlfusion::optimizer::{run_strategy, space, Strategy};
 use dlfusion::search;
@@ -10,7 +10,7 @@ use dlfusion::zoo;
 
 #[test]
 fn table1_hardware_spec() {
-    let s = AcceleratorSpec::mlu100();
+    let s = Target::mlu100().into_spec();
     assert_eq!(s.core_freq_ghz, 1.0);
     assert_eq!(s.peak_gflops(), 64_000.0); // 64 TFLOPS FP16
     assert_eq!(s.mem_bw_gbps, 102.4);
@@ -64,7 +64,7 @@ fn fig10_speedup_claims() {
     // Paper: DLFusion achieves 3.6x–7.9x over the non-optimized baseline
     // and is close to the oracle. Our simulator reproduces the shape; the
     // per-network values and documented deviations live in EXPERIMENTS.md.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mut speedups = Vec::new();
     for m in zoo::all_models() {
         let (_, base) = run_strategy(&sim, &m, Strategy::NonOptimization);
@@ -92,7 +92,7 @@ fn fig10_speedup_claims() {
 #[test]
 fn fig10_vgg_benefits_most_from_mp_resnet_mobilenet_from_fusion() {
     // The paper's two observations about model classes.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mp_gain = |name: &str| {
         let m = zoo::by_name(name).unwrap();
         let (_, base) = run_strategy(&sim, &m, Strategy::NonOptimization);
@@ -116,7 +116,7 @@ fn fig10_vgg_benefits_most_from_mp_resnet_mobilenet_from_fusion() {
 #[test]
 fn oracle_within_reduced_space_definition() {
     // Strategy 7 obeys both paper reductions on every model.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     for m in zoo::all_models() {
         let (sched, _) = search::oracle_schedule(&sim, &m);
         let allowed = sim.spec.reduced_mp_set();

@@ -6,6 +6,7 @@
 //! execution, with fusion numerically equivalent to layer-wise execution.
 
 use dlfusion::coordinator::{driver, equivalence, plan, Engine};
+use dlfusion::accel::Target;
 use dlfusion::optimizer::{self, Schedule};
 use dlfusion::runtime::{artifact_dir, Runtime, Tensor};
 use dlfusion::zoo;
@@ -158,7 +159,7 @@ fn engine_construction_rejects_malformed_plans() {
 fn engine_infer_matches_unfused_and_serves() {
     let Some(rt) = runtime_or_skip() else { return };
     let model = zoo::mini_cnn();
-    let sim = dlfusion::accel::Simulator::mlu100();
+    let sim = dlfusion::accel::Simulator::new(Target::mlu100());
     let sched = optimizer::dlfusion_schedule(&model, &sim.spec);
     let ex_plan = plan::build_plan(&model, &sched, rt.manifest()).unwrap();
     assert_eq!(ex_plan.num_convs(), 6);

@@ -2,7 +2,7 @@
 //! load-aware allocator's divergence from the single-request optimum, and
 //! end-to-end SLO accounting (ISSUE acceptance criteria).
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
                         ModelMix, SimEventKind, SloReport};
 use dlfusion::zoo;
@@ -11,7 +11,7 @@ use dlfusion::zoo;
 /// seed diverges. No wall clock enters simulated results.
 #[test]
 fn same_seed_pins_the_event_trace_and_report() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
     let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).unwrap();
     let run = |seed: u64| {
@@ -39,7 +39,7 @@ fn same_seed_pins_the_event_trace_and_report() {
 /// throughput under saturating load.
 #[test]
 fn load_aware_mp_diverges_and_wins_aggregate_throughput() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
     let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
 
@@ -83,7 +83,7 @@ fn load_aware_mp_diverges_and_wins_aggregate_throughput() {
 /// consistent order, under both dispatch policies and a bursty trace.
 #[test]
 fn event_trace_is_causally_consistent_under_both_policies() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
     let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
     let trace = serving::generate_trace(
@@ -114,7 +114,7 @@ fn event_trace_is_causally_consistent_under_both_policies() {
 /// while serving the same request set.
 #[test]
 fn sjf_improves_mean_latency_on_a_skewed_mix() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::mini_cnn()]);
     let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
     // Pin every request to one core: with equal widths the comparison is
@@ -145,7 +145,7 @@ fn sjf_improves_mean_latency_on_a_skewed_mix() {
 /// nondeterminism (PR 4 acceptance).
 #[test]
 fn same_seed_pins_the_batched_serving_trace() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
     let max_batch = serving::DEFAULT_MAX_BATCH;
     let plan = serving::plan_allocations_batched(&sim, &mix, None, max_batch)
@@ -184,7 +184,7 @@ fn same_seed_pins_the_batched_serving_trace() {
 /// both more SLO-met completions and a shorter makespan.
 #[test]
 fn dynamic_batching_beats_fifo_goodput_on_the_poisson_mix() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
     let max_batch = serving::DEFAULT_MAX_BATCH;
     let plan = serving::plan_allocations_batched(&sim, &mix, None, max_batch)
@@ -225,7 +225,7 @@ fn dynamic_batching_beats_fifo_goodput_on_the_poisson_mix() {
 /// reflects the deadline.
 #[test]
 fn slo_report_accounts_goodput_under_deadline() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::alexnet()]);
     let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
     // Overload: arrivals at ~4x the pool's capacity at the load-aware point.

@@ -2,7 +2,7 @@
 //! the physics the optimizer's decisions rest on (DESIGN.md §6), checked
 //! with randomized property tests.
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::graph::layer::{ConvSpec, Layer};
 use dlfusion::testutil::prop::{forall, Gen};
 use dlfusion::util::XorShiftRng;
@@ -16,7 +16,7 @@ fn rand_conv(rng: &mut XorShiftRng) -> Layer {
 
 #[test]
 fn prop_latency_positive_finite_everywhere() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| (rand_conv(rng), 1usize << rng.gen_usize(0, 5)));
     forall(100, &g, |(l, mp)| {
         let t = sim.layer_latency_ms(l, *mp);
@@ -27,7 +27,7 @@ fn prop_latency_positive_finite_everywhere() {
 #[test]
 fn prop_latency_monotone_in_opcount_at_fixed_shape() {
     // Scaling a layer's channels up (4x the ops) cannot reduce latency.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| {
         let c = 1usize << rng.gen_usize(3, 8);
         let hw = *rng.choose(&[14usize, 28, 56]);
@@ -45,7 +45,7 @@ fn prop_latency_monotone_in_opcount_at_fixed_shape() {
 
 #[test]
 fn prop_gflops_never_exceed_roofline() {
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| (rand_conv(rng), 1usize << rng.gen_usize(0, 5)));
     forall(100, &g, |(l, mp)| {
         let achieved = sim.layer_gflops(l, *mp);
@@ -62,7 +62,7 @@ fn prop_gflops_never_exceed_roofline() {
 fn prop_fusing_two_small_layers_beats_unfused_at_same_mp() {
     // The Fig. 7 benefit: for small layers fusion never loses at matched MP
     // (launch + fill amortization dominates the halo cost at depth 2).
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| {
         let c = 1usize << rng.gen_usize(4, 7);
         let hw = *rng.choose(&[28usize, 56]);
@@ -110,7 +110,7 @@ fn prop_block_redundancy_grows_with_mp() {
 #[test]
 fn prop_memory_fused_traffic_at_most_unfused() {
     use dlfusion::accel::memory::{fused_block_traffic, unfused_layer_bytes};
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let g = Gen::new(|rng: &mut XorShiftRng| {
         let n = rng.gen_usize(2, 6);
         let c = 1usize << rng.gen_usize(4, 7);
@@ -138,7 +138,7 @@ fn prop_memory_fused_traffic_at_most_unfused() {
 fn best_mp_shifts_up_with_opcount() {
     // Fig. 4(c) in property form: optimal MP is non-decreasing as op count
     // scales through channel expansion (at fixed spatial size).
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let mut last = 1;
     for factor in [1usize, 2, 4] {
         let layer = dlfusion::zoo::scaled_conv_layer(factor);
@@ -151,7 +151,7 @@ fn best_mp_shifts_up_with_opcount() {
 #[test]
 fn equal_ops_different_channels_different_best_mp() {
     // Fig. 6(a) in integration form.
-    let sim = Simulator::mlu100();
+    let sim = Simulator::new(Target::mlu100());
     let series = dlfusion::microbench::equal_ops_channel_series();
     let bests: Vec<usize> = series.iter().map(|(_, l)| sim.best_layer_mp(l)).collect();
     assert!(bests.iter().max() > bests.iter().min(),

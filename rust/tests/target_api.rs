@@ -1,0 +1,281 @@
+//! Integration: the explicit hardware-target API (rust/docs/DESIGN.md §11).
+//!
+//! Four surfaces are pinned: the registry + builder validation, bit-exact
+//! default-target parity (the `mlu100` registry entry must reproduce the
+//! pre-redesign spec literal, and every tuner backend must return identical
+//! results through the `Target` construction path), cross-target divergence
+//! (the optimal (MP, fusion) point really is a function of the hardware),
+//! and the serving-side mixed-target guard.
+
+use dlfusion::accel::{AcceleratorSpec, Simulator, SpecBuilder, Target, TargetError};
+use dlfusion::serving::{self, ClusterConfig, DispatchPolicy, ModelMix, ModelService};
+use dlfusion::tuner::{compare_targets, Algorithm1, Annealer, OracleDp,
+                      TableStrategy, Tuner, TuningError, TuningRequest};
+use dlfusion::optimizer::Strategy;
+use dlfusion::zoo;
+
+/// The pre-redesign `AcceleratorSpec::mlu100()` literal, written out in
+/// full: the registry's default target must never drift from it, because
+/// every pinned result in the repo (tuner parity, paper tables, serving
+/// traces) is calibrated against these numbers.
+fn mlu100_literal() -> AcceleratorSpec {
+    AcceleratorSpec {
+        name: "MLU100-C3".to_string(),
+        num_cores: 32,
+        peak_gflops_per_core: 2000.0,
+        mem_bw_gbps: 102.4,
+        mem_bytes: 8.0 * 1024.0 * 1024.0 * 1024.0,
+        core_freq_ghz: 1.0,
+        fill_gops: 10f64.powf(1.25) / 9.0 / 32.0,
+        channel_granularity: 4,
+        launch_overhead_us: 20.0,
+        sync_us_per_core: 5.0,
+        fused_layer_us: 4.0,
+        core_buffer_bytes: 2.0 * 1024.0 * 1024.0,
+    }
+}
+
+#[test]
+fn registry_lookup_and_unknown_name_error() {
+    assert_eq!(Target::NAMES, &["mlu100", "mlu270", "edge4", "hbm32"]);
+    for &name in Target::NAMES {
+        assert_eq!(Target::by_name(name).unwrap().name(), name);
+    }
+    let err = Target::by_name("tpu-v9").unwrap_err();
+    match &err {
+        TargetError::UnknownTarget { name } => assert_eq!(name, "tpu-v9"),
+        other => panic!("expected UnknownTarget, got {other:?}"),
+    }
+    // The error message teaches the registry.
+    let msg = err.to_string();
+    for &name in Target::NAMES {
+        assert!(msg.contains(name), "{msg}");
+    }
+    let all = Target::all();
+    assert!(all.len() >= 4);
+    assert_eq!(all[0].name(), "mlu100", "the default target leads the registry");
+}
+
+#[test]
+fn builder_validation_error_paths() {
+    let cases: Vec<(SpecBuilder, &str)> = vec![
+        (SpecBuilder::new("x").num_cores(0), "num_cores"),
+        (SpecBuilder::new("x").mem_bw_gbps(0.0), "mem_bw_gbps"),
+        (SpecBuilder::new("x").peak_gflops_per_core(-1.0), "peak_gflops_per_core"),
+        (SpecBuilder::new("x").channel_granularity(0), "channel_granularity"),
+        (SpecBuilder::new("x").channel_granularity(100_000), "channel_granularity"),
+        (SpecBuilder::new("x").core_buffer_bytes(1.0), "core_buffer_bytes"),
+        (SpecBuilder::new("x").fill_gops(f64::NAN), "fill_gops"),
+        (SpecBuilder::new("x").launch_overhead_us(-3.0), "launch_overhead_us"),
+    ];
+    for (builder, expect_field) in cases {
+        match builder.build() {
+            Err(TargetError::InvalidSpec { field, .. }) => {
+                assert_eq!(field, expect_field)
+            }
+            other => panic!("expected InvalidSpec({expect_field}), got {other:?}"),
+        }
+    }
+    // The happy path: only named fields differ from the mlu100 calibration.
+    let spec = SpecBuilder::new("TwoCore")
+        .num_cores(2)
+        .mem_bw_gbps(51.2)
+        .build()
+        .unwrap();
+    assert_eq!(spec.num_cores, 2);
+    assert_eq!(spec.mem_bw_gbps, 51.2);
+    assert_eq!(spec.channel_granularity, mlu100_literal().channel_granularity);
+    // And it wraps into a custom target usable everywhere a registry one is.
+    let target = Target::custom("two", "test point", spec).unwrap();
+    assert_eq!(Simulator::new(target).target(), "two");
+}
+
+#[test]
+fn default_target_spec_is_bit_identical_to_the_pre_redesign_literal() {
+    assert_eq!(*Target::mlu100().spec(), mlu100_literal());
+}
+
+/// Every backend must produce bit-identical outcomes whether the simulator
+/// came from the registry or from the raw pre-redesign spec literal — the
+/// redesign changed how hardware is named, not what any number is.
+#[test]
+fn default_target_tuner_parity_across_construction_paths() {
+    let via_target = Simulator::new(Target::mlu100());
+    let via_spec = Simulator::from_spec(mlu100_literal()).expect("literal validates");
+    let mut backends: Vec<Box<dyn Tuner>> = vec![
+        Box::new(Algorithm1),
+        Box::new(OracleDp::reduced()),
+        Box::new(Annealer::new()),
+    ];
+    for st in Strategy::ALL {
+        backends.push(Box::new(TableStrategy(st)));
+    }
+    for model in [zoo::resnet18(), zoo::alexnet()] {
+        for backend in backends.iter_mut() {
+            let a = TuningRequest::new(&via_target, &model)
+                .run(backend.as_mut())
+                .unwrap();
+            let b = TuningRequest::new(&via_spec, &model)
+                .run(backend.as_mut())
+                .unwrap();
+            assert_eq!(a.schedule, b.schedule, "{} {}", model.name, a.tuner);
+            assert_eq!(a.predicted_ms, b.predicted_ms, "{} {}", model.name, a.tuner);
+        }
+    }
+}
+
+/// The paper's premise, pinned: the oracle's optimal (MP, fusion) point for
+/// resnet18 differs between the edge-class target and the MLU100.
+#[test]
+fn optimal_schedule_diverges_across_targets() {
+    let model = zoo::resnet18();
+    let tune_on = |target: Target| {
+        let sim = Simulator::new(target);
+        TuningRequest::new(&sim, &model)
+            .run(&mut OracleDp::reduced())
+            .unwrap()
+    };
+    let mlu100 = tune_on(Target::mlu100());
+    let edge = tune_on(Target::edge4());
+    assert_ne!(mlu100.schedule, edge.schedule,
+               "hardware changed but the optimal schedule did not");
+    // The edge part can never schedule past its 4 cores, while the MLU100
+    // optimum uses more than 4 somewhere on resnet18.
+    let max_mp = |s: &dlfusion::optimizer::Schedule| {
+        s.blocks.iter().map(|b| b.mp).max().unwrap()
+    };
+    assert!(max_mp(&edge.schedule) <= 4);
+    assert!(max_mp(&mlu100.schedule) > 4);
+    // Same model, weaker chip: predicted latency is strictly worse.
+    assert!(edge.predicted_ms > mlu100.predicted_ms);
+}
+
+#[test]
+fn compare_targets_runs_the_registry_and_ranks_hardware() {
+    let model = zoo::alexnet();
+    let sim = Simulator::new(Target::mlu100());
+    let template = TuningRequest::new(&sim, &model);
+    let targets = Target::all();
+    let cmp = compare_targets(&model, &targets, &mut Algorithm1, &template).unwrap();
+    assert_eq!(cmp.rows.len(), targets.len());
+    assert!(cmp.rows.len() >= 3);
+    assert!(cmp.skipped.is_empty());
+    for (row, target) in cmp.rows.iter().zip(&targets) {
+        assert_eq!(row.target.name(), target.name());
+        assert!(row.outcome.predicted_ms > 0.0);
+        let max_mp = row.outcome.schedule.blocks.iter().map(|b| b.mp).max().unwrap();
+        assert!(max_mp <= target.spec().num_cores);
+    }
+    // The edge part is the slowest hardware point for a conv net.
+    let best = cmp.best().unwrap();
+    assert_ne!(best.target.name(), "edge4");
+    let rendered = cmp.render("cross-target");
+    for &name in Target::NAMES {
+        assert!(rendered.contains(name), "{rendered}");
+    }
+}
+
+/// A knob that is invalid on one chip (MP 8 on the 4-core edge part) must
+/// not abort the whole cross-target run: the bad target is skipped with a
+/// per-target error and the rest still compare.
+#[test]
+fn compare_targets_skips_targets_the_knobs_do_not_fit() {
+    let model = zoo::alexnet();
+    let sim = Simulator::new(Target::mlu100());
+    let template = TuningRequest::new(&sim, &model).mp_candidates(vec![8]);
+    let targets = Target::all();
+    let cmp = compare_targets(&model, &targets, &mut OracleDp::constrained(),
+                              &template)
+        .unwrap();
+    let skipped: Vec<&str> = cmp.skipped.iter().map(|(t, _)| t.name()).collect();
+    assert_eq!(skipped, vec!["edge4"], "{skipped:?}");
+    assert_eq!(cmp.rows.len(), targets.len() - 1);
+    assert!(matches!(&cmp.skipped[0].1,
+                     TuningError::InvalidMp { mp: 8, num_cores: 4 }));
+    let rendered = cmp.render("partial");
+    assert!(rendered.contains("edge4: skipped"), "{rendered}");
+
+    // Only when *every* target fails does the comparison error, and the
+    // error names the first failing target.
+    let template = TuningRequest::new(&sim, &model).mp_candidates(vec![999]);
+    let err = compare_targets(&model, &targets, &mut OracleDp::constrained(),
+                              &template)
+        .unwrap_err();
+    assert!(err.to_string().contains("mlu100"), "{err}");
+}
+
+#[test]
+fn reduced_mp_set_follows_the_target() {
+    assert_eq!(Target::mlu100().spec().reduced_mp_set(),
+               vec![1, 2, 4, 8, 12, 16, 24, 32]);
+    assert_eq!(Target::mlu270().spec().reduced_mp_set(),
+               vec![1, 2, 4, 8, 12, 16, 24, 32, 48, 64]);
+    assert_eq!(Target::edge4().spec().reduced_mp_set(), vec![1, 2, 4]);
+}
+
+#[test]
+fn tuning_request_and_serving_plan_record_their_target() {
+    let sim = Simulator::new(Target::edge4());
+    let model = zoo::alexnet();
+    let request = TuningRequest::new(&sim, &model);
+    assert_eq!(request.target(), "edge4");
+    assert_eq!(request.context().target(), "edge4");
+
+    let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+    let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
+    assert_eq!(plan.target, "edge4");
+    assert!(plan.render().contains("edge4"));
+    for svc in plan.services(true) {
+        assert_eq!(svc.target, "edge4");
+    }
+}
+
+#[test]
+fn cluster_rejects_services_planned_for_different_targets() {
+    let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+    let trace = serving::generate_trace(
+        &mix, serving::ArrivalProcess::OpenPoisson { rate_rps: 100.0 }, 16, 7);
+
+    let sim_a = Simulator::new(Target::mlu100());
+    let sim_b = Simulator::new(Target::edge4());
+    let plan_a = serving::plan_allocations(&sim_a, &mix, None).unwrap();
+    let plan_b = serving::plan_allocations(&sim_b, &mix, None).unwrap();
+    let mut services = plan_a.services(true);
+    let mut foreign = plan_b.services(true);
+    foreign[0].name = "alexnet_edge".to_string();
+    services.append(&mut foreign);
+
+    let cfg = ClusterConfig { num_cores: sim_a.spec.num_cores,
+                              policy: DispatchPolicy::Fifo };
+    let err = serving::simulate(&cfg, &services, &trace, None).unwrap_err();
+    assert!(err.contains("mixes hardware targets"), "{err}");
+    assert!(err.contains("mlu100") && err.contains("edge4"), "{err}");
+
+    // Homogeneous plans still simulate, and hand-built services with no
+    // recorded target stay compatible with planned ones.
+    let ok = serving::simulate(&cfg, &plan_a.services(true), &trace, None);
+    assert!(ok.is_ok());
+    let mut services = plan_a.services(true);
+    services.push(ModelService::new("adhoc", 1, 1.0));
+    // A second model index is required for the extra service to be valid
+    // in a trace, so just validate the target check by reusing the trace
+    // over model index 0 only.
+    let ok = serving::simulate(&cfg, &services, &trace, None);
+    assert!(ok.is_ok(), "{ok:?}");
+}
+
+/// The bandwidth-rich hypothetical exists to expose hardware sensitivity:
+/// with ~10x the bandwidth, memory-bound blocks get cheaper, so the chip
+/// serves the same tuned model strictly faster.
+#[test]
+fn bandwidth_rich_target_is_strictly_faster_on_vgg() {
+    let model = zoo::vgg19();
+    let on = |target: Target| {
+        let sim = Simulator::new(target);
+        TuningRequest::new(&sim, &model)
+            .run(&mut OracleDp::reduced())
+            .unwrap()
+            .predicted_ms
+    };
+    assert!(on(Target::hbm32()) < on(Target::mlu100()));
+}

@@ -7,7 +7,7 @@
 //! replay references.
 #![allow(deprecated)]
 
-use dlfusion::accel::Simulator;
+use dlfusion::accel::{Simulator, Target};
 use dlfusion::optimizer::{self, Strategy};
 use dlfusion::search::{self, AnnealConfig};
 use dlfusion::tuner::{Algorithm1, Annealer, Exhaustive, OracleDp, TableStrategy,
@@ -15,7 +15,7 @@ use dlfusion::tuner::{Algorithm1, Annealer, Exhaustive, OracleDp, TableStrategy,
 use dlfusion::zoo;
 
 fn sim() -> Simulator {
-    Simulator::mlu100()
+    Simulator::new(Target::mlu100())
 }
 
 /// A conv-only model small enough for exhaustive enumeration.
