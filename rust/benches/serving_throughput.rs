@@ -30,10 +30,27 @@ fn main() {
                 .expect("simulate")
         });
     }
+    // The hot path: same trace, event recording off (rust/docs/DESIGN.md
+    // §12). `events_processed` is counted either way, so the rate is
+    // events actually handled per second of wall time, not trace size.
+    let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
+                              policy: DispatchPolicy::Fifo };
+    b.time("simulate_2k_requests_fifo_no_trace", || {
+        serving::simulate_with(&cfg, &plan.services(true), &trace, None, false)
+            .expect("simulate")
+    });
     let results = b.finish();
     let sim_ms = results[1].mean_ms();
     println!("\nevent loop: {:.0}k requests/s of simulator wall time",
              2000.0 / sim_ms);
+    let hot = serving::simulate_with(&cfg, &plan.services(true), &trace, None,
+                                     false)
+        .expect("simulate");
+    let hot_ms = results[3].mean_ms();
+    println!("hot path (trace off): {:.0}k events/s \
+              ({} events in {hot_ms:.2} ms)",
+             hot.events_processed as f64 / hot_ms,
+             hot.events_processed);
 
     // Capacity gap: predicted and simulated, per allocation objective.
     let mut t = Table::new(&["allocation", "capacity (pred)", "throughput (sim)",

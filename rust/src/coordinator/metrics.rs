@@ -1,11 +1,23 @@
 //! Request-loop metrics: counters and latency histograms.
 
-use crate::stats::descriptive::{percentile, percentile_sorted, Summary};
+use std::cell::RefCell;
+
+use crate::stats::descriptive::{percentile_sorted, Summary};
 
 /// Online latency recorder with percentile reporting.
+///
+/// Percentile queries go through a lazily maintained sorted view of the
+/// sample buffer: the first query after a batch of [`Self::record`] calls
+/// sorts once into a cache, and every further query — single or batch — is
+/// a binary-interpolation read. The old clone-and-sort-per-call path did
+/// O(n log n) work on *every* query, which dominated the serving report on
+/// large traces. Samples only ever append, so cache validity is exactly
+/// "lengths match"; results are pinned identical to the eager path by
+/// `cached_percentiles_track_new_samples`.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {
     samples_ms: Vec<f64>,
+    sorted_cache: RefCell<Vec<f64>>,
 }
 
 impl LatencyRecorder {
@@ -21,6 +33,17 @@ impl LatencyRecorder {
         self.samples_ms.len()
     }
 
+    /// Run `f` over the sorted sample view, (re)building the cache only
+    /// when samples arrived since the last query.
+    fn with_sorted<R>(&self, f: impl FnOnce(&[f64]) -> R) -> R {
+        let mut cache = self.sorted_cache.borrow_mut();
+        if cache.len() != self.samples_ms.len() {
+            cache.clone_from(&self.samples_ms);
+            cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        f(&cache)
+    }
+
     pub fn summary(&self) -> Option<Summary> {
         if self.samples_ms.is_empty() {
             None
@@ -33,20 +56,19 @@ impl LatencyRecorder {
         if self.samples_ms.is_empty() {
             None
         } else {
-            Some(percentile(&self.samples_ms, p))
+            Some(self.with_sorted(|sorted| percentile_sorted(sorted, p)))
         }
     }
 
-    /// Batch percentile accessor: sorts the sample buffer once for the
-    /// whole list (three separate [`Self::percentile`] calls re-sort three
-    /// times). Used by [`Self::report`] and the serving SLO report.
+    /// Batch percentile accessor, one cached-sort read for the whole list.
+    /// Used by [`Self::report`] and the serving SLO report.
     pub fn percentiles(&self, ps: &[f64]) -> Option<Vec<f64>> {
         if self.samples_ms.is_empty() {
             return None;
         }
-        let mut sorted = self.samples_ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Some(ps.iter().map(|&p| percentile_sorted(&sorted, p)).collect())
+        Some(self.with_sorted(|sorted| {
+            ps.iter().map(|&p| percentile_sorted(sorted, p)).collect()
+        }))
     }
 
     /// "p50/p95/p99 mean" one-liner.
@@ -131,6 +153,35 @@ mod tests {
             assert_eq!(b, r.percentile(p).unwrap(), "p{p}");
         }
         assert_eq!(r.percentiles(&[]).unwrap(), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn cached_percentiles_track_new_samples() {
+        // Interleave queries (which build the sorted cache) with appends
+        // (which stale it) and pin every answer to an eagerly re-sorted
+        // recorder over the same samples.
+        let values = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0];
+        let mut cached = LatencyRecorder::new();
+        for (i, &v) in values.iter().enumerate() {
+            cached.record(v);
+            let mut eager = LatencyRecorder::new();
+            for &w in &values[..=i] {
+                eager.record(w);
+            }
+            for p in [0.0, 50.0, 90.0, 100.0] {
+                assert_eq!(cached.percentile(p), eager.percentile(p),
+                           "p{p} after {} samples", i + 1);
+            }
+            assert_eq!(cached.percentiles(&[25.0, 75.0]),
+                       eager.percentiles(&[25.0, 75.0]));
+            // A second query against the warm cache answers the same.
+            assert_eq!(cached.percentile(50.0), eager.percentile(50.0));
+        }
+        assert_eq!(cached.report(), {
+            let mut eager = LatencyRecorder::new();
+            values.iter().for_each(|&v| eager.record(v));
+            eager.report()
+        });
     }
 
     #[test]

@@ -86,8 +86,10 @@ pub mod prelude {
     pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};
     pub use crate::serving::{self, AllocationPlan, ArrivalProcess, ClusterConfig,
                              DispatchPolicy, ModelMix, SloReport};
-    pub use crate::tuner::{self, compare, compare_targets, Algorithm1, Annealer,
-                           Budget, Exhaustive, OracleDp, TableStrategy,
+    pub use crate::tuner::{self, backend_by_name, compare, compare_targets,
+                           compare_targets_with, compare_threaded, run_sweep,
+                           Algorithm1, Annealer, Budget, Exhaustive, OracleDp,
+                           SweepJob, SweepOutcome, TableStrategy,
                            TargetComparison, Tuner, TuningContext, TuningError,
                            TuningOutcome, TuningRequest, TuningStats};
     pub use crate::zoo;

@@ -70,7 +70,7 @@ pub fn anneal_budgeted(engine: &mut CostEngine, cfg: &AnnealConfig,
     let n = engine.model().num_layers();
     let max_mp = engine.sim().spec.num_cores;
     let t0 = std::time::Instant::now();
-    let queries0 = engine.stats().queries();
+    let queries0 = engine.local_stats().queries();
     let mut rng = XorShiftRng::new(cfg.seed);
     let mut cur = init.unwrap_or_else(|| Schedule::layerwise(n, 1));
     debug_assert!(cur.validate(n, max_mp).is_ok());
@@ -82,7 +82,7 @@ pub fn anneal_budgeted(engine: &mut CostEngine, cfg: &AnnealConfig,
 
     for _ in 0..cfg.iterations {
         if let Some(cap) = max_evals {
-            if engine.stats().queries() - queries0 >= cap {
+            if engine.local_stats().queries() - queries0 >= cap {
                 truncated = true;
                 break;
             }

@@ -15,12 +15,14 @@
 //! per-layer facts once per model instead of once per overlapping candidate
 //! range, and memoizes every `(block, mp)` outcome.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::accel::Simulator;
 use crate::cost::CostEngine;
 use crate::graph::Model;
 use crate::optimizer::schedule::{Block, Schedule};
+use crate::util::ParallelMap;
 
 /// Bookkeeping from a search run (for the search-time comparison the paper
 /// makes: oracle O(n²) block evaluations vs DLFusion O(n)).
@@ -118,7 +120,7 @@ pub fn oracle_schedule_full_with(engine: &mut CostEngine) -> (Schedule, SearchSt
 /// [`crate::tuner::OracleDp`], which validates the request first.
 pub fn oracle_schedule_constrained(engine: &mut CostEngine, mp_set: &[usize],
                                    rule: BlockRule) -> (Schedule, SearchStats) {
-    match dp_search(engine, mp_set, rule, None) {
+    match dp_search(engine, mp_set, rule, None, 1) {
         Ok(r) => r,
         Err(_) => unreachable!("unbudgeted DP cannot exhaust a budget"),
     }
@@ -129,18 +131,67 @@ pub fn oracle_schedule_constrained(engine: &mut CostEngine, mp_set: &[usize],
 pub fn oracle_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
                                 rule: BlockRule, max_evals: Option<u64>)
                                 -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
-    dp_search(engine, mp_set, rule, max_evals)
+    dp_search(engine, mp_set, rule, max_evals, 1)
+}
+
+/// The budgeted DP with intra-search parallelism: with `threads > 1` and no
+/// evaluation budget, the candidate-block MP sweeps — the entirety of the
+/// DP's evaluation cost — are precomputed by a worker pool before the
+/// (cheap, inherently sequential) recurrence runs over them. The prewarm
+/// issues exactly the sweep calls the sequential loop would, once each, so
+/// schedules, latencies, and every counter (search stats *and* the engine's
+/// merged hit/miss totals) are bit-identical to `threads == 1`
+/// (rust/docs/DESIGN.md §12). Budgeted runs stay sequential: the budget's
+/// abort point is defined by the sequential visit order.
+pub fn oracle_schedule_threaded(engine: &mut CostEngine, mp_set: &[usize],
+                                rule: BlockRule, max_evals: Option<u64>,
+                                threads: usize)
+                                -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
+    dp_search(engine, mp_set, rule, max_evals, threads)
+}
+
+/// Cut positions the DP can reach from layer 0 under `rule` — exactly the
+/// `dp[i].is_infinite()` skips of the recurrence, derivable up front
+/// because block costs are finite.
+fn reachable_cuts(n: usize, rule: BlockRule) -> Vec<bool> {
+    let mut reach = vec![false; n + 1];
+    reach[0] = true;
+    for j in 1..=n {
+        reach[j] = (0..j).any(|i| reach[i] && rule.allowed(j - i, j == n));
+    }
+    reach
 }
 
 fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
-             max_evals: Option<u64>)
+             max_evals: Option<u64>, threads: usize)
              -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
     let n = engine.model().num_layers();
     assert!(n >= 1);
     assert!(!mp_set.is_empty());
     let t0 = Instant::now();
-    let engine_stats0 = engine.stats();
+    let engine_stats0 = engine.local_stats();
     let mut stats = SearchStats::default();
+
+    // Intra-search parallelism: precompute every admissible candidate
+    // block's MP sweep on a worker pool sharing this engine's cache, then
+    // let the recurrence consume the rows instead of re-querying. One sweep
+    // call per admissible block either way.
+    let mut rows: HashMap<(usize, usize), Vec<f64>> = HashMap::new();
+    if threads > 1 && max_evals.is_none() {
+        let reach = reachable_cuts(n, sizes);
+        let mut pairs = Vec::new();
+        for j in 1..=n {
+            for i in 0..j {
+                if reach[i] && sizes.allowed(j - i, j == n) {
+                    pairs.push((i, j));
+                }
+            }
+        }
+        let shared: &CostEngine = engine;
+        let costs = ParallelMap::new(threads)
+            .map(&pairs, |_, &(i, j)| shared.block_latency_sweep(i, j, mp_set));
+        rows = pairs.into_iter().zip(costs).collect();
+    }
 
     // best_block[i][j-1]: (cost, mp) of the best single block over [i, j).
     // dp[j]: best cost covering [0, j); parent[j] = (i, mp) of last block.
@@ -168,8 +219,11 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
             stats.blocks_considered += 1;
             // One shared-precomputation call for the whole MP set —
             // identical numbers to per-MP block_latency_ms_multi (the facts
-            // live in the engine, derived once per model).
-            let costs = engine.block_latency_sweep(i, j, mp_set);
+            // live in the engine, derived once per model). A threaded run
+            // already holds the row from the prewarm pool.
+            let costs = rows
+                .remove(&(i, j))
+                .unwrap_or_else(|| engine.block_latency_sweep(i, j, mp_set));
             stats.evaluations += mp_set.len();
             let (best_idx, best) = costs
                 .iter()
@@ -197,7 +251,7 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
     blocks.reverse();
     let schedule = Schedule::new(blocks);
     debug_assert!(schedule.validate(n, engine.sim().spec.num_cores).is_ok());
-    let engine_stats = engine.stats();
+    let engine_stats = engine.local_stats();
     stats.cache_hits = (engine_stats.hits - engine_stats0.hits) as usize;
     stats.cache_misses = (engine_stats.misses - engine_stats0.misses) as usize;
     stats.wall_us = t0.elapsed().as_micros() as u64;
@@ -369,6 +423,28 @@ mod tests {
         let (_, st2) = oracle_schedule_with(&mut engine);
         assert_eq!(st2.cache_misses, 0);
         assert_eq!(st2.cache_hits, st2.evaluations);
+    }
+
+    #[test]
+    fn threaded_dp_is_bit_identical_to_sequential() {
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::alexnet()] {
+            let mps = s.spec.reduced_mp_set();
+            let mut seq = CostEngine::new(&s, &m);
+            let (sched_seq, st_seq) = oracle_schedule_threaded(
+                &mut seq, &mps, BlockRule::MultipleOfFour, None, 1).unwrap();
+            let mut par = CostEngine::new(&s, &m);
+            let (sched_par, st_par) = oracle_schedule_threaded(
+                &mut par, &mps, BlockRule::MultipleOfFour, None, 4).unwrap();
+            assert_eq!(sched_seq, sched_par, "{}", m.name);
+            assert_eq!(st_seq.evaluations, st_par.evaluations);
+            assert_eq!(st_seq.blocks_considered, st_par.blocks_considered);
+            assert_eq!(st_seq.cache_hits, st_par.cache_hits);
+            assert_eq!(st_seq.cache_misses, st_par.cache_misses);
+            // The prewarm issues exactly the sequential query stream, so
+            // even the engines' merged counters agree.
+            assert_eq!(seq.stats(), par.stats(), "{}", m.name);
+        }
     }
 
     #[test]

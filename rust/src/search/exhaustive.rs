@@ -10,6 +10,7 @@
 //! `(block, mp)` evaluation instead of re-deriving per-layer facts per
 //! candidate, and the run reports [`SearchStats`] like every other backend.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::accel::Simulator;
@@ -17,6 +18,7 @@ use crate::cost::CostEngine;
 use crate::graph::Model;
 use crate::optimizer::schedule::{Block, Schedule};
 use crate::search::brute::SearchStats;
+use crate::util::ParallelMap;
 
 /// Hard ceiling on model size: 2^(n-1) cut masks get out of hand fast.
 pub const MAX_EXHAUSTIVE_LAYERS: usize = 12;
@@ -79,6 +81,26 @@ pub fn exhaustive_schedule_with(engine: &mut CostEngine, mp_set: &[usize])
 pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
                                     max_evals: Option<u64>)
                                     -> Result<(Schedule, SearchStats), ExhaustiveError> {
+    enumerate(engine, mp_set, max_evals, 1)
+}
+
+/// Exhaustive enumeration with intra-search parallelism: with `threads > 1`
+/// and no budget, the `n(n+1)/2 × |mp|` distinct block latencies — the
+/// entirety of the enumeration's evaluation cost — are precomputed by a
+/// worker pool, and the partition loop reads the table instead of the
+/// engine. Schedules and every `SearchStats` counter are bit-identical to
+/// sequential; the engine's own counters see each distinct key once rather
+/// than once per partition (rust/docs/DESIGN.md §12). Budgeted runs stay
+/// sequential to preserve the exact abort point.
+pub fn exhaustive_schedule_threaded(engine: &mut CostEngine, mp_set: &[usize],
+                                    max_evals: Option<u64>, threads: usize)
+                                    -> Result<(Schedule, SearchStats), ExhaustiveError> {
+    enumerate(engine, mp_set, max_evals, threads)
+}
+
+fn enumerate(engine: &mut CostEngine, mp_set: &[usize], max_evals: Option<u64>,
+             threads: usize)
+             -> Result<(Schedule, SearchStats), ExhaustiveError> {
     let n = engine.model().num_layers();
     if n < 1 || n > MAX_EXHAUSTIVE_LAYERS {
         return Err(ExhaustiveError::ModelTooLarge { layers: n, max: MAX_EXHAUSTIVE_LAYERS });
@@ -87,10 +109,27 @@ pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
         return Err(ExhaustiveError::EmptyMpSet);
     }
     let t0 = Instant::now();
-    let engine_stats0 = engine.stats();
+    let engine_stats0 = engine.local_stats();
     let mut stats = SearchStats::default();
     let mut best_cost = f64::INFINITY;
     let mut best: Option<Schedule> = None;
+
+    // Intra-search parallelism: precompute every distinct block's per-MP
+    // latencies once (overlapping partitions re-read the table for free).
+    let mut table: Option<HashMap<(usize, usize), Vec<f64>>> = None;
+    if threads > 1 && max_evals.is_none() {
+        let mut pairs = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..=n {
+                pairs.push((i, j));
+            }
+        }
+        let shared: &CostEngine = engine;
+        let rows = ParallelMap::new(threads).map(&pairs, |_, &(i, j)| {
+            mp_set.iter().map(|&mp| shared.block_latency(i, j, mp)).collect::<Vec<f64>>()
+        });
+        table = Some(pairs.into_iter().zip(rows).collect());
+    }
 
     // Each mask bit k set = a cut after layer k.
     for mask in 0u32..(1 << (n - 1)) {
@@ -121,8 +160,11 @@ pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
             stats.blocks_considered += 1;
             let mut best_mp = mp_set[0];
             let mut best_c = f64::INFINITY;
-            for &mp in mp_set {
-                let c = engine.block_latency(i, j, mp);
+            for (k, &mp) in mp_set.iter().enumerate() {
+                let c = match &table {
+                    Some(t) => t[&(i, j)][k],
+                    None => engine.block_latency(i, j, mp),
+                };
                 stats.evaluations += 1;
                 if c < best_c {
                     best_c = c;
@@ -144,9 +186,13 @@ pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
         Some(s) => s,
         None => unreachable!("n >= 1 guarantees at least one partition"),
     };
-    let engine_stats = engine.stats();
-    stats.cache_hits = (engine_stats.hits - engine_stats0.hits) as usize;
+    let engine_stats = engine.local_stats();
     stats.cache_misses = (engine_stats.misses - engine_stats0.misses) as usize;
+    // Every loop evaluation not computed by the engine was served from a
+    // cache — the engine's or the prewarm table's. In a sequential run this
+    // equals the engine's hit delta bit for bit; in a threaded run it keeps
+    // the per-search stats identical to sequential.
+    stats.cache_hits = stats.evaluations - stats.cache_misses;
     stats.wall_us = t0.elapsed().as_micros() as u64;
     Ok((schedule, stats))
 }
@@ -282,6 +328,25 @@ mod tests {
         assert_eq!(stats.cache_misses, distinct);
         assert!(stats.cache_hits > 0);
         assert_eq!(stats.cache_hits + stats.cache_misses, stats.evaluations);
+    }
+
+    #[test]
+    fn threaded_enumeration_is_bit_identical_to_sequential() {
+        let sim = Simulator::new(crate::accel::Target::mlu100());
+        let m = conv_only(7);
+        let mp_set = vec![1, 2, 4, 8];
+        let mut seq = CostEngine::new(&sim, &m);
+        let (sched_seq, st_seq) =
+            exhaustive_schedule_threaded(&mut seq, &mp_set, None, 1).unwrap();
+        let mut par = CostEngine::new(&sim, &m);
+        let (sched_par, st_par) =
+            exhaustive_schedule_threaded(&mut par, &mp_set, None, 4).unwrap();
+        assert_eq!(sched_seq, sched_par);
+        assert_eq!(st_seq.evaluations, st_par.evaluations);
+        assert_eq!(st_seq.blocks_considered, st_par.blocks_considered);
+        assert_eq!(st_seq.space_visited, st_par.space_visited);
+        assert_eq!(st_seq.cache_hits, st_par.cache_hits);
+        assert_eq!(st_seq.cache_misses, st_par.cache_misses);
     }
 
     #[test]

@@ -137,9 +137,16 @@ impl CompletedRequest {
 /// completion records in finish order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
+    /// The full event trace — empty when the run disabled recording
+    /// ([`simulate_with`]); [`SimResult::events_processed`] still counts.
     pub events: Vec<SimEvent>,
     pub completed: Vec<CompletedRequest>,
     pub num_cores: usize,
+    /// Events the simulation processed (arrivals, starts, finishes) —
+    /// counted whether or not the trace was recorded, so `events/sec`
+    /// throughput is measurable on trace-free hot-path runs. Equals
+    /// `events.len()` when the trace is on.
+    pub events_processed: u64,
 }
 
 impl SimResult {
@@ -179,44 +186,54 @@ impl SimResult {
     }
 }
 
-/// A running invocation on the completion heap — one request under the
-/// single-request policies, up to `max_batch` same-model requests under the
-/// `batch` policy. `BinaryHeap` is a max-heap, so `Ord` is reversed to pop
+/// A running invocation's key on the completion heap. The invocation body
+/// (its riding requests) lives in a slab slot; the heap holds only this
+/// `Copy` triple, so every sift moves a few words instead of a whole
+/// request batch. `BinaryHeap` is a max-heap, so `Ord` is reversed to pop
 /// the *earliest* `(finish_ms, seq)` first; `seq` is the start order,
-/// making equal-time pops deterministic.
-#[derive(Debug, Clone)]
-struct Completion {
+/// making equal-time pops deterministic (`slot` never orders).
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
     finish_ms: f64,
     seq: u64,
-    start_ms: f64,
-    /// Cores the invocation occupies (the model's allocation, once for the
-    /// whole batch).
-    cores: usize,
-    /// The requests riding the invocation, in arrival order.
-    reqs: Vec<QueuedRequest>,
+    slot: usize,
 }
 
-impl PartialEq for Completion {
+impl PartialEq for HeapEntry {
     fn eq(&self, other: &Self) -> bool {
         self.cmp(other) == std::cmp::Ordering::Equal
     }
 }
 
-impl Eq for Completion {}
+impl Eq for HeapEntry {}
 
-impl PartialOrd for Completion {
+impl PartialOrd for HeapEntry {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for Completion {
+impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         other
             .finish_ms
             .total_cmp(&self.finish_ms)
             .then(other.seq.cmp(&self.seq))
     }
+}
+
+/// The slab-resident body of a running invocation — one request under the
+/// single-request policies, up to `max_batch` same-model requests under
+/// the `batch` policy. Slots are recycled LIFO, so a long run reuses a
+/// bounded working set instead of reallocating per dispatch.
+#[derive(Debug)]
+struct RunningBatch {
+    start_ms: f64,
+    /// Cores the invocation occupies (the model's allocation, once for the
+    /// whole batch).
+    cores: usize,
+    /// The requests riding the invocation, in arrival order.
+    reqs: Vec<QueuedRequest>,
 }
 
 /// Run the discrete-event simulation of `trace` over the core pool.
@@ -236,6 +253,19 @@ impl Ord for Completion {
 pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
                 trace: &[Request], closed_loop: Option<usize>)
                 -> Result<SimResult, String> {
+    simulate_with(cfg, services, trace, closed_loop, true)
+}
+
+/// [`simulate`], with the [`SimEvent`] trace recording made optional. The
+/// trace exists for inspection and determinism pinning; on throughput runs
+/// it is pure overhead (three records per request). `record_events: false`
+/// skips it — the simulation is otherwise bit-identical (completions,
+/// makespan, [`SimResult::events_processed`]) and `SimResult::events`
+/// comes back empty.
+pub fn simulate_with(cfg: &ClusterConfig, services: &[ModelService],
+                     trace: &[Request], closed_loop: Option<usize>,
+                     record_events: bool)
+                     -> Result<SimResult, String> {
     if cfg.num_cores == 0 {
         return Err("cluster has no cores".into());
     }
@@ -318,10 +348,20 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
         }
     }
 
-    let mut events = Vec::new();
-    let mut completed = Vec::new();
+    // Every request arrives, starts, and finishes exactly once (closed-loop
+    // runs replay the same trace entries), so the recorded trace is exactly
+    // three events per request: pre-size it once.
+    let mut events = if record_events {
+        Vec::with_capacity(trace.len() * 3)
+    } else {
+        Vec::new()
+    };
+    let mut events_processed: u64 = 0;
+    let mut completed = Vec::with_capacity(trace.len());
     let mut queues = QueueSet::new(services.len());
-    let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+    let mut slab: Vec<Option<RunningBatch>> = Vec::new();
+    let mut free_slots: Vec<usize> = Vec::new();
     let mut free = cfg.num_cores;
     let mut seq: u64 = 0;
 
@@ -368,20 +408,25 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
         let Some((event_ms, rank)) = choice else { break };
         let now = match rank {
             0 => {
-                let c = heap.pop().unwrap();
+                let entry = heap.pop().unwrap();
+                let c = slab[entry.slot].take().expect("heap entry has a live slot");
+                free_slots.push(entry.slot);
                 free += c.cores;
                 let batch = c.reqs.len();
                 for r in &c.reqs {
-                    events.push(SimEvent {
-                        time_ms: c.finish_ms,
-                        kind: SimEventKind::Finish { id: r.id, free_cores: free },
-                    });
+                    events_processed += 1;
+                    if record_events {
+                        events.push(SimEvent {
+                            time_ms: entry.finish_ms,
+                            kind: SimEventKind::Finish { id: r.id, free_cores: free },
+                        });
+                    }
                     completed.push(CompletedRequest {
                         id: r.id,
                         model: r.model,
                         arrival_ms: r.arrival_ms,
                         start_ms: c.start_ms,
-                        finish_ms: c.finish_ms,
+                        finish_ms: entry.finish_ms,
                         cores: c.cores,
                         batch,
                     });
@@ -389,19 +434,22 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
                 if closed_loop.is_some() {
                     for _ in 0..batch {
                         if let Some(mut nxt) = backlog.pop_front() {
-                            nxt.arrival_ms = c.finish_ms;
+                            nxt.arrival_ms = entry.finish_ms;
                             arrivals.push_back(nxt);
                         }
                     }
                 }
-                c.finish_ms
+                entry.finish_ms
             }
             1 => {
                 let r = arrivals.pop_front().unwrap();
-                events.push(SimEvent {
-                    time_ms: r.arrival_ms,
-                    kind: SimEventKind::Arrive { id: r.id, model: r.model },
-                });
+                events_processed += 1;
+                if record_events {
+                    events.push(SimEvent {
+                        time_ms: r.arrival_ms,
+                        kind: SimEventKind::Arrive { id: r.id, model: r.model },
+                    });
+                }
                 let svc = &services[r.model];
                 queues.push(QueuedRequest {
                     id: r.id,
@@ -423,18 +471,28 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
                 // Single-request policies: work-conserving fit-filtered pops.
                 while let Some(q) = queues.pop_fitting(cfg.policy, free) {
                     free -= q.cores;
-                    events.push(SimEvent {
-                        time_ms: now,
-                        kind: SimEventKind::Start { id: q.id, cores: q.cores },
-                    });
+                    events_processed += 1;
+                    if record_events {
+                        events.push(SimEvent {
+                            time_ms: now,
+                            kind: SimEventKind::Start { id: q.id, cores: q.cores },
+                        });
+                    }
                     seq += 1;
-                    heap.push(Completion {
-                        finish_ms: now + q.service_ms,
-                        seq,
-                        start_ms: now,
-                        cores: q.cores,
-                        reqs: vec![q],
-                    });
+                    let finish_ms = now + q.service_ms;
+                    let cores = q.cores;
+                    let body = RunningBatch { start_ms: now, cores, reqs: vec![q] };
+                    let slot = match free_slots.pop() {
+                        Some(s) => {
+                            slab[s] = Some(body);
+                            s
+                        }
+                        None => {
+                            slab.push(Some(body));
+                            slab.len() - 1
+                        }
+                    };
+                    heap.push(HeapEntry { finish_ms, seq, slot });
                 }
             }
             Some((max_batch, max_wait_ms)) => {
@@ -468,19 +526,27 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
                     let service = services[m].service_at(reqs.len());
                     free -= cores;
                     for r in &reqs {
-                        events.push(SimEvent {
-                            time_ms: now,
-                            kind: SimEventKind::Start { id: r.id, cores },
-                        });
+                        events_processed += 1;
+                        if record_events {
+                            events.push(SimEvent {
+                                time_ms: now,
+                                kind: SimEventKind::Start { id: r.id, cores },
+                            });
+                        }
                     }
                     seq += 1;
-                    heap.push(Completion {
-                        finish_ms: now + service,
-                        seq,
-                        start_ms: now,
-                        cores,
-                        reqs,
-                    });
+                    let body = RunningBatch { start_ms: now, cores, reqs };
+                    let slot = match free_slots.pop() {
+                        Some(s) => {
+                            slab[s] = Some(body);
+                            s
+                        }
+                        None => {
+                            slab.push(Some(body));
+                            slab.len() - 1
+                        }
+                    };
+                    heap.push(HeapEntry { finish_ms: now + service, seq, slot });
                 }
             }
         }
@@ -488,7 +554,8 @@ pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
 
     debug_assert!(queues.is_empty(), "validated requests cannot strand");
     debug_assert_eq!(free, cfg.num_cores);
-    Ok(SimResult { events, completed, num_cores: cfg.num_cores })
+    debug_assert!(slab.iter().all(Option::is_none), "no invocation left running");
+    Ok(SimResult { events, completed, num_cores: cfg.num_cores, events_processed })
 }
 
 #[cfg(test)]
@@ -747,7 +814,41 @@ mod tests {
         let cfg = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
         let r = simulate(&cfg, &[svc("m", 1, 1.0)], &[], None).unwrap();
         assert!(r.events.is_empty());
+        assert_eq!(r.events_processed, 0);
         assert_eq!(r.throughput_rps(), 0.0);
         assert_eq!(r.utilization(), 0.0);
+    }
+
+    #[test]
+    fn trace_counts_three_events_per_request() {
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 3, max_wait_ms: 2.0 },
+        };
+        let services = [svc("a", 2, 7.0).with_batch_table(vec![7.0, 9.0, 10.0]),
+                        svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 0.5), req(2, 0, 1.0),
+                     req(3, 0, 1.5), req(4, 1, 6.0)];
+        let r = simulate(&cfg, &services, &trace, None).unwrap();
+        assert_eq!(r.events_processed, 3 * trace.len() as u64);
+        assert_eq!(r.events.len() as u64, r.events_processed);
+    }
+
+    #[test]
+    fn disabling_the_trace_changes_nothing_else() {
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 3, max_wait_ms: 2.0 },
+        };
+        let services = [svc("a", 2, 7.0).with_batch_table(vec![7.0, 9.0, 10.0]),
+                        svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 0.5), req(2, 0, 1.0),
+                     req(3, 0, 1.5), req(4, 1, 6.0)];
+        let on = simulate(&cfg, &services, &trace, None).unwrap();
+        let off = simulate_with(&cfg, &services, &trace, None, false).unwrap();
+        assert!(off.events.is_empty());
+        assert_eq!(off.completed, on.completed);
+        assert_eq!(off.events_processed, on.events_processed);
+        assert_eq!(off.makespan_ms(), on.makespan_ms());
     }
 }

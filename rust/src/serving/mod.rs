@@ -53,8 +53,8 @@ pub mod report;
 
 pub use allocator::{plan_allocations, plan_allocations_batched, AllocationPlan,
                     ModelAllocation, OperatingPoint};
-pub use cluster::{simulate, ClusterConfig, CompletedRequest, ModelService,
-                  SimEvent, SimEventKind, SimResult};
+pub use cluster::{simulate, simulate_with, ClusterConfig, CompletedRequest,
+                  ModelService, SimEvent, SimEventKind, SimResult};
 pub use queue::{DispatchPolicy, QueueSet, QueuedRequest, DEFAULT_BATCH_WAIT_MS,
                 DEFAULT_MAX_BATCH};
 pub use report::SloReport;

@@ -1,7 +1,7 @@
 //! Per-model request queues and the dispatch policies over them
 //! (rust/docs/DESIGN.md §9.2).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 /// A request waiting for cores, with its resolved operating point (cores to
 /// occupy and the predicted service time at that core count).
@@ -70,6 +70,58 @@ impl DispatchPolicy {
     }
 }
 
+/// An `f64` with the total order (`f64::total_cmp`) so head keys can live
+/// in a `BTreeSet`. Queue keys are validated-positive times, where the
+/// total order agrees with the plain `<` the scan-based dispatch used.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// One queue head's position in a dispatch index. Lexicographic by field
+/// order; `id` is unique, so `model`/`cores` (carried for the pop and the
+/// fit filter) never decide the order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct HeadKey {
+    primary: OrdF64,
+    secondary: OrdF64,
+    id: u64,
+    model: usize,
+    cores: usize,
+}
+
+/// Both indexes' keys for one head: FIFO ranks by `(arrival, id)`, SJF by
+/// `(service, arrival, id)` — the same keys the old linear scan compared.
+fn head_keys(r: &QueuedRequest) -> (HeadKey, HeadKey) {
+    let fifo = HeadKey {
+        primary: OrdF64(r.arrival_ms),
+        secondary: OrdF64(0.0),
+        id: r.id,
+        model: r.model,
+        cores: r.cores,
+    };
+    let sjf = HeadKey {
+        primary: OrdF64(r.service_ms),
+        secondary: OrdF64(r.arrival_ms),
+        id: r.id,
+        model: r.model,
+        cores: r.cores,
+    };
+    (fifo, sjf)
+}
+
 /// Per-model FIFO queues with a policy-driven cross-queue head pick.
 ///
 /// Within a model, requests always dispatch in arrival order; across models
@@ -78,27 +130,68 @@ impl DispatchPolicy {
 /// tie-break. A head needing more cores than are currently free is skipped
 /// so the pool stays work-conserving (documented as fit-filtered dispatch;
 /// a blocked wide request does not idle cores a narrow one could use).
+///
+/// The heads are held in two ordered indexes (one per ranking), so a
+/// dispatch pop walks the index from the best head and stops at the first
+/// fit instead of re-scanning and re-keying every model queue per pop: the
+/// common everything-fits pop touches only the front of one index, and the
+/// total count is tracked so [`QueueSet::len`] is O(1). Pinned to the
+/// scan-based dispatch order by `dispatch_order_matches_reference_scan`.
 #[derive(Debug, Clone, Default)]
 pub struct QueueSet {
     queues: Vec<VecDeque<QueuedRequest>>,
+    fifo_heads: BTreeSet<HeadKey>,
+    sjf_heads: BTreeSet<HeadKey>,
+    total: usize,
 }
 
 impl QueueSet {
     pub fn new(num_models: usize) -> QueueSet {
-        QueueSet { queues: (0..num_models).map(|_| VecDeque::new()).collect() }
+        QueueSet {
+            queues: (0..num_models).map(|_| VecDeque::new()).collect(),
+            fifo_heads: BTreeSet::new(),
+            sjf_heads: BTreeSet::new(),
+            total: 0,
+        }
+    }
+
+    /// Drop the current head of `model` from both indexes (no-op when the
+    /// queue is empty). Every mutation of a queue front is bracketed by
+    /// this and [`QueueSet::index_head`].
+    fn unindex_head(&mut self, model: usize) {
+        if let Some(head) = self.queues[model].front() {
+            let (fifo, sjf) = head_keys(head);
+            self.fifo_heads.remove(&fifo);
+            self.sjf_heads.remove(&sjf);
+        }
+    }
+
+    /// Enter the current head of `model` into both indexes (no-op when the
+    /// queue is empty).
+    fn index_head(&mut self, model: usize) {
+        if let Some(head) = self.queues[model].front() {
+            let (fifo, sjf) = head_keys(head);
+            self.fifo_heads.insert(fifo);
+            self.sjf_heads.insert(sjf);
+        }
     }
 
     pub fn push(&mut self, r: QueuedRequest) {
+        let was_empty = self.queues[r.model].is_empty();
         self.queues[r.model].push_back(r);
+        self.total += 1;
+        if was_empty {
+            self.index_head(r.model);
+        }
     }
 
     /// Total queued requests across every model.
     pub fn len(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.total
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queues.iter().all(|q| q.is_empty())
+        self.total == 0
     }
 
     /// Queued requests for one model.
@@ -114,42 +207,34 @@ impl QueueSet {
     /// Pop up to `n` requests from one model's queue, in arrival order —
     /// the batch former of the `batch` dispatch policy.
     pub fn pop_front_n(&mut self, model: usize, n: usize) -> Vec<QueuedRequest> {
+        self.unindex_head(model);
         let take = n.min(self.queues[model].len());
-        self.queues[model].drain(..take).collect()
+        let out: Vec<QueuedRequest> = self.queues[model].drain(..take).collect();
+        self.total -= out.len();
+        self.index_head(model);
+        out
     }
 
     /// Pop the best-ranked queue head that fits in `free_cores`, or `None`
     /// if every nonempty queue's head needs more cores than are free.
     pub fn pop_fitting(&mut self, policy: DispatchPolicy,
                        free_cores: usize) -> Option<QueuedRequest> {
-        // (model, rank key) of the best fitting head; keys are copies so no
-        // borrow outlives the scan.
-        let mut best: Option<(usize, (f64, f64, u64))> = None;
-        for (m, q) in self.queues.iter().enumerate() {
-            let Some(head) = q.front() else { continue };
-            if head.cores > free_cores {
-                continue;
-            }
-            let key = match policy {
-                DispatchPolicy::Fifo => (head.arrival_ms, 0.0, head.id),
-                DispatchPolicy::ShortestJobFirst => {
-                    (head.service_ms, head.arrival_ms, head.id)
-                }
-                // The batching policy dispatches through the cluster's batch
-                // former, not this single-request pop; rank by arrival so
-                // the fallback stays total and deterministic.
-                DispatchPolicy::Batch { .. } => (head.arrival_ms, 0.0, head.id),
-            };
-            let better = match best {
-                None => true,
-                Some((_, best_key)) => key < best_key,
-            };
-            if better {
-                best = Some((m, key));
-            }
-        }
-        let (m, _) = best?;
-        self.queues[m].pop_front()
+        // The batching policy dispatches through the cluster's batch
+        // former, not this single-request pop; rank by arrival so the
+        // fallback stays total and deterministic.
+        let index = match policy {
+            DispatchPolicy::ShortestJobFirst => &self.sjf_heads,
+            DispatchPolicy::Fifo | DispatchPolicy::Batch { .. } => &self.fifo_heads,
+        };
+        let model = index
+            .iter()
+            .find(|key| key.cores <= free_cores)
+            .map(|key| key.model)?;
+        self.unindex_head(model);
+        let r = self.queues[model].pop_front().expect("indexed heads exist");
+        self.total -= 1;
+        self.index_head(model);
+        Some(r)
     }
 }
 
@@ -250,5 +335,70 @@ mod tests {
         assert!(qs.is_empty());
         assert_eq!(qs.len_for(1), 0);
         assert!(qs.pop_fitting(DispatchPolicy::Fifo, 32).is_none());
+    }
+
+    /// The pre-index dispatch: scan every queue head, keep the best
+    /// `(primary, secondary, id)` key that fits. The indexed pop is pinned
+    /// to produce exactly this order.
+    fn reference_pop(queues: &mut [VecDeque<QueuedRequest>],
+                     policy: DispatchPolicy,
+                     free_cores: usize) -> Option<QueuedRequest> {
+        let mut best: Option<(usize, (f64, f64, u64))> = None;
+        for (m, q) in queues.iter().enumerate() {
+            let Some(head) = q.front() else { continue };
+            if head.cores > free_cores {
+                continue;
+            }
+            let key = match policy {
+                DispatchPolicy::ShortestJobFirst => {
+                    (head.service_ms, head.arrival_ms, head.id)
+                }
+                _ => (head.arrival_ms, 0.0, head.id),
+            };
+            let better = match best {
+                None => true,
+                Some((_, best_key)) => key < best_key,
+            };
+            if better {
+                best = Some((m, key));
+            }
+        }
+        let (m, _) = best?;
+        queues[m].pop_front()
+    }
+
+    #[test]
+    fn dispatch_order_matches_reference_scan() {
+        for policy in [DispatchPolicy::Fifo, DispatchPolicy::ShortestJobFirst,
+                       DispatchPolicy::batching()] {
+            let mut qs = QueueSet::new(5);
+            let mut reference: Vec<VecDeque<QueuedRequest>> =
+                (0..5).map(|_| VecDeque::new()).collect();
+            // A deterministic pseudo-random workload with duplicate arrival
+            // and service times to exercise every tie-break level.
+            let mut state: u64 = 0x9e37_79b9_7f4a_7c15;
+            let mut rand = move |n: u64| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 33) % n
+            };
+            for id in 0..200u64 {
+                let r = req(id, rand(5) as usize, rand(7) as f64,
+                            1 + rand(4) as usize, 1.0 + rand(6) as f64);
+                qs.push(r);
+                reference[r.model].push_back(r);
+            }
+            // Drain with a cycling core budget so fit-filtering kicks in.
+            let mut free = 1usize;
+            loop {
+                let want = reference_pop(&mut reference, policy, free);
+                let got = qs.pop_fitting(policy, free);
+                assert_eq!(got, want, "policy {policy:?}, free {free}");
+                if got.is_none() && qs.is_empty() {
+                    break;
+                }
+                free = free % 4 + 1;
+            }
+            assert!(reference.iter().all(|q| q.is_empty()));
+        }
     }
 }

@@ -141,7 +141,8 @@ mod tests {
             CompletedRequest { id: 2, model: 0, arrival_ms: 5.0, start_ms: 20.0,
                                finish_ms: 30.0, cores: 2, batch: 1 },
         ];
-        SimResult { events: Vec::new(), completed, num_cores: 2 }
+        SimResult { events: Vec::new(), completed, num_cores: 2,
+                    events_processed: 0 }
     }
 
     #[test]
@@ -184,7 +185,7 @@ mod tests {
     #[test]
     fn empty_run_reports_zeroes() {
         let empty = SimResult { events: Vec::new(), completed: Vec::new(),
-                                num_cores: 4 };
+                                num_cores: 4, events_processed: 0 };
         let rep = SloReport::from_sim(&empty, Some(10.0));
         assert_eq!(rep.e2e.count(), 0);
         assert_eq!(rep.throughput_rps, 0.0);

@@ -101,12 +101,12 @@ impl Algorithm1 {
     fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
                      -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
-        let before = cx.engine.stats();
+        let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
         let params = cx.params;
         let schedule = dlfusion_schedule_with(cx.engine.model(), &cx.engine.sim().spec, &params);
         let predicted_ms = cx.engine.schedule_cost(&schedule);
-        let stats = delta_stats(before, cx.engine.stats(),
+        let stats = delta_stats(before, cx.engine.local_stats(),
                                 t0.elapsed().as_micros() as u64, false);
         Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
     }
@@ -136,7 +136,7 @@ impl TableStrategy {
     fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
                      -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
-        let before = cx.engine.stats();
+        let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
         let params = cx.params;
         let schedule = if self.0 == Strategy::BruteForce {
@@ -144,9 +144,9 @@ impl TableStrategy {
             // (`oracle_schedule_with`: reduced MP set, blocks % 4), but
             // budget-checked like every other DP run.
             let mps = cx.engine.sim().spec.reduced_mp_set();
-            brute::oracle_schedule_budgeted(&mut cx.engine, &mps,
+            brute::oracle_schedule_threaded(&mut cx.engine, &mps,
                                             BlockRule::MultipleOfFour,
-                                            cx.budget.max_evaluations)
+                                            cx.budget.max_evaluations, cx.threads)
                 .map_err(|e| TuningError::BudgetExhausted {
                     spent: e.evaluations,
                     budget: e.budget,
@@ -156,7 +156,7 @@ impl TableStrategy {
             strategy_schedule_with(&mut cx.engine, self.0, &params)
         };
         let predicted_ms = cx.engine.schedule_cost(&schedule);
-        let stats = delta_stats(before, cx.engine.stats(),
+        let stats = delta_stats(before, cx.engine.local_stats(),
                                 t0.elapsed().as_micros() as u64, false);
         Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
     }
@@ -222,8 +222,8 @@ impl OracleDp {
             return Err(TuningError::EmptyMpSet);
         }
         let (schedule, st) =
-            brute::oracle_schedule_budgeted(&mut cx.engine, &mps, rule,
-                                            cx.budget.max_evaluations)
+            brute::oracle_schedule_threaded(&mut cx.engine, &mps, rule,
+                                            cx.budget.max_evaluations, cx.threads)
                 .map_err(|e| TuningError::BudgetExhausted {
                     spent: e.evaluations,
                     budget: e.budget,
@@ -275,7 +275,7 @@ impl Annealer {
     fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
                      -> Result<TuningOutcome, TuningError> {
         let t0 = Instant::now();
-        let before = cx.engine.stats();
+        let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
         let cfg = cx.anneal;
         let (schedule, best_cost, truncated) = annealing::anneal_budgeted(
@@ -285,7 +285,7 @@ impl Annealer {
             cx.budget.max_evaluations,
             cx.budget.max_wall_us,
         );
-        let stats = delta_stats(before, cx.engine.stats(),
+        let stats = delta_stats(before, cx.engine.local_stats(),
                                 t0.elapsed().as_micros() as u64, truncated);
         Ok(TuningOutcome {
             tuner: self.name(),
@@ -323,8 +323,8 @@ impl Exhaustive {
         let t0 = Instant::now();
         let batch = cx.engine.batch();
         let mps = cx.checked_mps()?;
-        let (schedule, st) = exhaustive::exhaustive_schedule_budgeted(
-            &mut cx.engine, &mps, cx.budget.max_evaluations)
+        let (schedule, st) = exhaustive::exhaustive_schedule_threaded(
+            &mut cx.engine, &mps, cx.budget.max_evaluations, cx.threads)
             .map_err(|e| match e {
                 ExhaustiveError::ModelTooLarge { layers, max } => {
                     TuningError::ModelTooLarge { layers, max }
@@ -348,5 +348,34 @@ impl Tuner for Exhaustive {
 
     fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
         tune_over_batches(cx, |cx| self.tune_at_batch(cx))
+    }
+}
+
+/// Construct a backend from its CLI name — the one registry behind
+/// `dlfusion tune --tuner ...` and the tuner-factory paths (the threaded
+/// cross-target comparison builds one backend per worker from the name).
+/// Known names: `algorithm1`/`dlfusion`, `strategy1..7`, `oracle`/
+/// `oracle-dp`, `oracle-full`, `oracle-constrained`, `anneal`/`annealing`,
+/// `exhaustive`.
+pub fn backend_by_name(name: &str) -> Result<Box<dyn Tuner>, String> {
+    match name {
+        "algorithm1" | "dlfusion" => Ok(Box::new(Algorithm1)),
+        "oracle" | "oracle-dp" => Ok(Box::new(OracleDp::reduced())),
+        "oracle-full" => Ok(Box::new(OracleDp::full())),
+        "oracle-constrained" => Ok(Box::new(OracleDp::constrained())),
+        "anneal" | "annealing" => Ok(Box::new(Annealer::new())),
+        "exhaustive" => Ok(Box::new(Exhaustive)),
+        s if s.starts_with("strategy") => {
+            let idx: usize = s["strategy".len()..]
+                .parse()
+                .map_err(|_| format!("bad strategy index in '{s}'"))?;
+            let st = Strategy::from_index(idx)
+                .ok_or_else(|| format!("strategy must be 1..=7, got {idx}"))?;
+            Ok(Box::new(TableStrategy(st)))
+        }
+        other => Err(format!(
+            "unknown tuner '{other}' (known: algorithm1, strategy1..7, \
+             oracle, oracle-full, oracle-constrained, anneal, exhaustive)"
+        )),
     }
 }

@@ -3,11 +3,13 @@
 //! plus its cross-target analog: one backend, one model, many hardware
 //! points ([`compare_targets`], rust/docs/DESIGN.md §11).
 
+use std::sync::Mutex;
+
 use crate::accel::{Simulator, Target};
 use crate::cost::CostStats;
 use crate::graph::Model;
 use crate::util::units::fmt_ms;
-use crate::util::Table;
+use crate::util::{ParallelMap, Table};
 
 use super::outcome::{TuningError, TuningOutcome};
 use super::request::{TuningContext, TuningRequest};
@@ -30,6 +32,41 @@ pub fn compare(cx: &mut TuningContext<'_>, tuners: &mut [Box<dyn Tuner>])
     let mut outcomes = Vec::with_capacity(tuners.len());
     for t in tuners.iter_mut() {
         outcomes.push(t.tune(cx)?);
+    }
+    Ok(Comparison { outcomes, engine_stats: cx.engine.stats() })
+}
+
+/// [`compare`], fanned across `threads` workers. Every tuner runs on a
+/// [`TuningContext::fork`] of the shared context, so all workers feed one
+/// concurrent cost cache; each distinct block evaluation is still computed
+/// exactly once (the shard lock is held across the miss computation), so
+/// the schedules, predicted latencies, per-tuner evaluation counts, and the
+/// *merged* engine counters are bit-identical to the sequential run. Only
+/// the per-tuner hit/miss attribution can shift: which worker pays the one
+/// compute for a block both tuners visit depends on arrival order
+/// (rust/docs/DESIGN.md §12). `threads <= 1` is exactly [`compare`].
+pub fn compare_threaded(cx: &mut TuningContext<'_>, tuners: &mut [Box<dyn Tuner>],
+                        threads: usize)
+                        -> Result<Comparison, TuningError> {
+    if threads <= 1 || tuners.len() <= 1 {
+        return compare(cx, tuners);
+    }
+    struct Job<'t, 'a> {
+        tuner: &'t mut Box<dyn Tuner>,
+        cx: TuningContext<'a>,
+    }
+    let jobs: Vec<Mutex<Job<'_, '_>>> = tuners
+        .iter_mut()
+        .map(|t| Mutex::new(Job { tuner: t, cx: cx.fork() }))
+        .collect();
+    let results = ParallelMap::new(threads).map(&jobs, |_, job| {
+        let mut job = job.lock().expect("comparison worker panicked");
+        let Job { tuner, cx } = &mut *job;
+        tuner.tune(cx)
+    });
+    let mut outcomes = Vec::with_capacity(results.len());
+    for result in results {
+        outcomes.push(result?);
     }
     Ok(Comparison { outcomes, engine_stats: cx.engine.stats() })
 }
@@ -122,6 +159,43 @@ pub fn compare_targets(model: &Model, targets: &[Target], tuner: &mut dyn Tuner,
         let sim = Simulator::new(target.clone());
         let request = template.for_sim(&sim, model);
         match tuner.tune(&mut request.context()) {
+            Ok(outcome) => rows.push(TargetOutcome { target: target.clone(), outcome }),
+            Err(e) => skipped.push((target.clone(), e)),
+        }
+    }
+    if rows.is_empty() {
+        if let Some((target, e)) = skipped.into_iter().next() {
+            return Err(TuningError::InvalidRequest(format!(
+                "no target could be tuned; first failure on '{}': {e}",
+                target.name())));
+        }
+        return Err(TuningError::InvalidRequest("no targets given".to_string()));
+    }
+    Ok(TargetComparison { rows, skipped })
+}
+
+/// [`compare_targets`], fanned across `threads` workers with a tuner
+/// *factory* instead of one mutable backend (each worker needs its own).
+/// Hardware points are independent — each gets its own simulator, engine,
+/// and freshly made tuner — so every row is bit-identical to the
+/// sequential comparison regardless of thread count; only wall-clock
+/// changes. Skip-on-error semantics match [`compare_targets`].
+pub fn compare_targets_with<F>(model: &Model, targets: &[Target], make_tuner: F,
+                               template: &TuningRequest<'_>, threads: usize)
+                               -> Result<TargetComparison, TuningError>
+where
+    F: Fn() -> Box<dyn Tuner> + Sync,
+{
+    let results = ParallelMap::new(threads).map(targets, |_, target| {
+        let sim = Simulator::new(target.clone());
+        let request = template.for_sim(&sim, model);
+        let mut tuner = make_tuner();
+        tuner.tune(&mut request.context())
+    });
+    let mut rows = Vec::with_capacity(targets.len());
+    let mut skipped = Vec::new();
+    for (target, result) in targets.iter().zip(results) {
+        match result {
             Ok(outcome) => rows.push(TargetOutcome { target: target.clone(), outcome }),
             Err(e) => skipped.push((target.clone(), e)),
         }

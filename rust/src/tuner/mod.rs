@@ -42,11 +42,15 @@ pub mod outcome;
 pub mod request;
 pub mod backends;
 pub mod compare;
+pub mod parallel;
 
-pub use backends::{Algorithm1, Annealer, Exhaustive, OracleDp, TableStrategy};
-pub use compare::{compare, compare_targets, Comparison, TargetComparison,
+pub use backends::{backend_by_name, Algorithm1, Annealer, Exhaustive, OracleDp,
+                   TableStrategy};
+pub use compare::{compare, compare_targets, compare_targets_with,
+                  compare_threaded, Comparison, TargetComparison,
                   TargetOutcome};
 pub use outcome::{TuningError, TuningOutcome, TuningStats};
+pub use parallel::{run_sweep, SweepJob, SweepOutcome};
 pub use request::{Budget, TuningContext, TuningRequest};
 
 /// A search backend over the joint (fusion scheme, MP) space.
@@ -65,7 +69,11 @@ pub use request::{Budget, TuningContext, TuningRequest};
 ///   [`TuningStats::truncated`]; backends whose partial state is not a
 ///   usable result (the DP oracle, the exhaustive certifier) return
 ///   [`TuningError::BudgetExhausted`] instead.
-pub trait Tuner {
+///
+/// `Send` is a supertrait so boxed backends can move into worker threads
+/// (the parallel comparison and sweep drivers, rust/docs/DESIGN.md §12);
+/// every backend is plain data, so this costs implementors nothing.
+pub trait Tuner: Send {
     /// Short backend name, used in reports and comparison tables.
     fn name(&self) -> String;
 

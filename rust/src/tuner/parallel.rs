@@ -1,0 +1,112 @@
+//! The parallel sweep driver: fan independent `(model, target, backend,
+//! batches)` tuning jobs across a worker pool (rust/docs/DESIGN.md §12).
+//!
+//! Jobs share nothing — each worker builds its own simulator, cost engine,
+//! and backend — so the result of every job is bit-identical to running it
+//! alone, regardless of thread count or completion order. This is the
+//! coarse-grained layer of the concurrency model (the CLI's `tune`,
+//! `perf-smoke`, and the zoo parity suite drive it); the fine-grained layer
+//! is the shared-cache fork in [`super::compare_threaded`] and the
+//! intra-search prewarm inside the DP/exhaustive backends.
+
+use crate::accel::{Simulator, Target};
+use crate::graph::Model;
+use crate::util::ParallelMap;
+
+use super::backends::backend_by_name;
+use super::outcome::{TuningError, TuningOutcome};
+use super::request::TuningRequest;
+
+/// One independent unit of a tuning sweep: tune `model` on `target` with
+/// the backend named as in the CLI (`super::backend_by_name`), co-optimized
+/// over `batches` (empty means the default `[1]`).
+#[derive(Debug, Clone)]
+pub struct SweepJob<'a> {
+    pub model: &'a Model,
+    pub target: Target,
+    pub backend: String,
+    pub batches: Vec<usize>,
+}
+
+impl<'a> SweepJob<'a> {
+    pub fn new(model: &'a Model, target: Target, backend: &str) -> SweepJob<'a> {
+        SweepJob { model, target, backend: backend.to_string(), batches: Vec::new() }
+    }
+
+    pub fn batches(mut self, batches: Vec<usize>) -> Self {
+        self.batches = batches;
+        self
+    }
+}
+
+/// One finished sweep job: the job description paired with its result.
+#[derive(Debug)]
+pub struct SweepOutcome<'a> {
+    pub job: SweepJob<'a>,
+    pub result: Result<TuningOutcome, TuningError>,
+}
+
+/// Run every job across `threads` workers (1 = plain sequential loop) and
+/// return the outcomes in job order. A failing job — unknown backend name,
+/// invalid MP/batch for its target — yields an `Err` row without touching
+/// its neighbours.
+pub fn run_sweep<'a>(jobs: &[SweepJob<'a>], threads: usize) -> Vec<SweepOutcome<'a>> {
+    let results = ParallelMap::new(threads).map(jobs, |_, job| {
+        let sim = Simulator::new(job.target.clone());
+        let mut request = TuningRequest::new(&sim, job.model);
+        if !job.batches.is_empty() {
+            request = request.batch_candidates(job.batches.clone());
+        }
+        let mut tuner = backend_by_name(&job.backend).map_err(TuningError::InvalidRequest)?;
+        tuner.tune(&mut request.context())
+    });
+    jobs.iter()
+        .cloned()
+        .zip(results)
+        .map(|(job, result)| SweepOutcome { job, result })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn sweep_outcomes_are_thread_count_invariant() {
+        let models = [zoo::by_name("alexnet").unwrap(), zoo::by_name("resnet18").unwrap()];
+        let jobs: Vec<SweepJob<'_>> = models
+            .iter()
+            .flat_map(|m| {
+                [Target::mlu100(), Target::edge4()].into_iter().flat_map(move |t| {
+                    ["algorithm1", "oracle"]
+                        .into_iter()
+                        .map(move |b| SweepJob::new(m, t.clone(), b))
+                })
+            })
+            .collect();
+        let seq = run_sweep(&jobs, 1);
+        let par = run_sweep(&jobs, 4);
+        assert_eq!(seq.len(), par.len());
+        for (s, p) in seq.iter().zip(&par) {
+            let (s, p) = (s.result.as_ref().unwrap(), p.result.as_ref().unwrap());
+            assert_eq!(s.schedule, p.schedule);
+            assert_eq!(s.predicted_ms.to_bits(), p.predicted_ms.to_bits());
+            assert_eq!(s.batch, p.batch);
+            assert_eq!(s.stats.evaluations, p.stats.evaluations);
+            assert_eq!(s.stats.cache_misses, p.stats.cache_misses);
+        }
+    }
+
+    #[test]
+    fn unknown_backend_fails_only_its_job() {
+        let model = zoo::by_name("alexnet").unwrap();
+        let jobs = vec![
+            SweepJob::new(&model, Target::mlu100(), "no-such-backend"),
+            SweepJob::new(&model, Target::mlu100(), "algorithm1"),
+        ];
+        let out = run_sweep(&jobs, 2);
+        assert!(out[0].result.is_err());
+        assert!(out[1].result.is_ok());
+    }
+}

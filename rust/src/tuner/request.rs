@@ -7,7 +7,7 @@ use crate::optimizer::algorithm::AlgorithmParams;
 use crate::search::annealing::AnnealConfig;
 use crate::search::brute::BlockRule;
 
-use super::compare::{compare, Comparison};
+use super::compare::{compare_threaded, Comparison};
 use super::outcome::{TuningError, TuningOutcome};
 use super::Tuner;
 
@@ -54,12 +54,14 @@ pub struct TuningRequest<'a> {
     anneal: AnnealConfig,
     params: Option<AlgorithmParams>,
     budget: Budget,
+    threads: usize,
 }
 
 impl<'a> TuningRequest<'a> {
     /// A request with the paper defaults: the spec's reduced MP set, batch
     /// candidates `[1]`, multiple-of-four block granularity, default
-    /// annealing config, `AlgorithmParams::for_spec`, and no budgets.
+    /// annealing config, `AlgorithmParams::for_spec`, no budgets, and one
+    /// worker thread.
     pub fn new(sim: &'a Simulator, model: &'a Model) -> TuningRequest<'a> {
         TuningRequest {
             sim,
@@ -70,6 +72,7 @@ impl<'a> TuningRequest<'a> {
             anneal: AnnealConfig::default(),
             params: None,
             budget: Budget::default(),
+            threads: 1,
         }
     }
 
@@ -122,6 +125,19 @@ impl<'a> TuningRequest<'a> {
         self
     }
 
+    /// Fan the run across `threads` workers (clamped to at least 1; the
+    /// default 1 is the plain sequential path with no thread machinery).
+    /// [`TuningRequest::run`] gives the DP/exhaustive backends intra-search
+    /// parallelism; [`TuningRequest::compare`] additionally fans the
+    /// backends themselves across workers sharing one concurrent cache.
+    /// Results are bit-identical to sequential either way
+    /// (rust/docs/DESIGN.md §12). Budgeted searches ignore the knob — the
+    /// budget's abort point is defined by the sequential visit order.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
     pub fn sim(&self) -> &'a Simulator {
         self.sim
     }
@@ -156,6 +172,7 @@ impl<'a> TuningRequest<'a> {
                 .params
                 .unwrap_or_else(|| AlgorithmParams::for_spec(&self.sim.spec)),
             budget: self.budget,
+            threads: self.threads,
         }
     }
 
@@ -164,9 +181,12 @@ impl<'a> TuningRequest<'a> {
         tuner.tune(&mut self.context())
     }
 
-    /// Run several backends over one shared context (see [`compare`]).
+    /// Run several backends over one shared context (see
+    /// [`super::compare`]); with [`TuningRequest::threads`] > 1 the
+    /// backends are fanned across workers sharing the context's concurrent
+    /// cache, bit-identical to the sequential run.
     pub fn compare(&self, tuners: &mut [Box<dyn Tuner>]) -> Result<Comparison, TuningError> {
-        compare(&mut self.context(), tuners)
+        compare_threaded(&mut self.context(), tuners, self.threads)
     }
 
     /// Re-point this request's constraints at another `(sim, model)` pair.
@@ -183,6 +203,7 @@ impl<'a> TuningRequest<'a> {
             anneal: self.anneal,
             params: self.params,
             budget: self.budget,
+            threads: self.threads,
         }
     }
 }
@@ -197,12 +218,42 @@ pub struct TuningContext<'a> {
     pub(crate) anneal: AnnealConfig,
     pub(crate) params: AlgorithmParams,
     pub(crate) budget: Budget,
+    pub(crate) threads: usize,
 }
 
 impl<'a> TuningContext<'a> {
-    /// The shared engine (e.g. to pre-warm the cache or annotate plans).
+    /// The shared engine — evaluation methods take `&self`, so this is all
+    /// a read-only consumer (plan annotation, cache prewarming) needs.
+    pub fn engine(&self) -> &CostEngine<'a> {
+        &self.engine
+    }
+
+    /// The shared engine, mutably (to re-target its active batch or reset
+    /// its counters; plain evaluation only needs [`TuningContext::engine`]).
     pub fn engine_mut(&mut self) -> &mut CostEngine<'a> {
         &mut self.engine
+    }
+
+    /// A second context onto the same request state for a concurrent
+    /// worker: same resolved constraints, an engine handle sharing the
+    /// cache ([`CostEngine::worker`]), `threads` pinned to 1 (the fork *is*
+    /// the unit of parallelism).
+    pub fn fork(&self) -> TuningContext<'a> {
+        TuningContext {
+            engine: self.engine.worker(),
+            mp_candidates: self.mp_candidates.clone(),
+            batch_candidates: self.batch_candidates.clone(),
+            granularity: self.granularity,
+            anneal: self.anneal,
+            params: self.params,
+            budget: self.budget,
+            threads: 1,
+        }
+    }
+
+    /// Worker threads the request asked for (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Re-constrain the MP candidate set without rebuilding the context.

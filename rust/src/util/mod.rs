@@ -7,11 +7,13 @@
 //! unit tests.
 
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod table;
 pub mod csv;
 pub mod units;
 
 pub use json::Json;
+pub use parallel::ParallelMap;
 pub use rng::XorShiftRng;
 pub use table::Table;

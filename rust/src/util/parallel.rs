@@ -1,0 +1,95 @@
+//! A zero-dependency deterministic parallel map over `std::thread::scope`.
+//!
+//! The driver behind every `--threads N` surface (rust/docs/DESIGN.md §12):
+//! jobs are pulled off a shared atomic cursor by a fixed-size worker pool
+//! and results land in their input slot, so the output order — and, for
+//! pure jobs, every output bit — is independent of thread scheduling.
+//! `threads <= 1` (or a single item) short-circuits to a plain sequential
+//! loop with no thread machinery at all, which keeps the sequential path
+//! bit-identical to the pre-parallel code.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-width worker pool that maps a function over a slice, preserving
+/// input order in the output.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelMap {
+    threads: usize,
+}
+
+impl ParallelMap {
+    /// A pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ParallelMap {
+        ParallelMap { threads: threads.max(1) }
+    }
+
+    /// The worker count this pool fans out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f(index, &item)` to every item, returning results in input
+    /// order. With one worker (or zero/one items) this is a plain `for`
+    /// loop on the calling thread; otherwise scoped workers race over an
+    /// atomic cursor — a panic in any job propagates when the scope joins.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        if self.threads <= 1 || items.len() <= 1 {
+            return items.iter().enumerate().map(|(i, item)| f(i, item)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> =
+            (0..items.len()).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(items.len()) {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap()
+                    .expect("every job slot is filled once the scope joins")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let seq = ParallelMap::new(1).map(&items, |i, &x| (i, x * x));
+        let par = ParallelMap::new(4).map(&items, |i, &x| (i, x * x));
+        assert_eq!(seq, par);
+        assert_eq!(par[13], (13, 169));
+    }
+
+    #[test]
+    fn single_item_and_empty_slices() {
+        let par = ParallelMap::new(8);
+        assert_eq!(par.map(&[] as &[u8], |_, &x| x), Vec::<u8>::new());
+        assert_eq!(par.map(&[7u8], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(ParallelMap::new(0).threads(), 1);
+    }
+}

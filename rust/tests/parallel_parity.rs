@@ -1,0 +1,101 @@
+//! Bit-identical parallelism (rust/docs/DESIGN.md §12): the parallel sweep
+//! driver and the threaded comparison must return exactly what their
+//! sequential counterparts return — same schedules, same f64 bits, same
+//! evaluation and cache-miss counts — for the full zoo across the target
+//! registry. Threads buy wall time, never a different answer.
+
+use dlfusion::accel::{Simulator, Target};
+use dlfusion::tuner::{self, SweepJob, Tuner};
+use dlfusion::zoo;
+
+#[test]
+fn full_zoo_sweep_is_bit_identical_across_thread_counts() {
+    let models = zoo::all_models();
+    let targets = [Target::mlu100(), Target::edge4(), Target::hbm32()];
+    let backends = ["algorithm1", "oracle"];
+    let jobs: Vec<SweepJob<'_>> = models
+        .iter()
+        .flat_map(|m| {
+            targets.iter().flat_map(move |t| {
+                backends
+                    .iter()
+                    .map(move |b| SweepJob::new(m, t.clone(), b))
+            })
+        })
+        .collect();
+    assert_eq!(jobs.len(), models.len() * targets.len() * backends.len());
+
+    let seq = tuner::run_sweep(&jobs, 1);
+    let par = tuner::run_sweep(&jobs, 4);
+    assert_eq!(seq.len(), par.len());
+    for (s, p) in seq.iter().zip(&par) {
+        let label = format!("{} on {} via {}",
+                            s.job.model.name, s.job.target.name(), s.job.backend);
+        let s = s.result.as_ref().unwrap_or_else(|e| panic!("{label}: {e}"));
+        let p = p.result.as_ref().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(s.schedule, p.schedule, "{label}: schedule");
+        assert_eq!(s.predicted_ms.to_bits(), p.predicted_ms.to_bits(),
+                   "{label}: predicted_ms");
+        assert_eq!(s.batch, p.batch, "{label}: batch");
+        assert_eq!(s.stats.evaluations, p.stats.evaluations,
+                   "{label}: evaluations");
+        assert_eq!(s.stats.cache_misses, p.stats.cache_misses,
+                   "{label}: cache_misses");
+    }
+}
+
+#[test]
+fn batched_sweep_is_bit_identical_across_thread_counts() {
+    let model = zoo::resnet18();
+    let jobs: Vec<SweepJob<'_>> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&b| {
+            SweepJob::new(&model, Target::mlu100(), "oracle").batches(vec![b])
+        })
+        .collect();
+    let seq = tuner::run_sweep(&jobs, 1);
+    let par = tuner::run_sweep(&jobs, 4);
+    for (s, p) in seq.iter().zip(&par) {
+        let s = s.result.as_ref().unwrap();
+        let p = p.result.as_ref().unwrap();
+        assert_eq!(s.batch, p.batch);
+        assert_eq!(s.schedule, p.schedule);
+        assert_eq!(s.predicted_ms.to_bits(), p.predicted_ms.to_bits());
+    }
+}
+
+#[test]
+fn threaded_comparison_matches_sequential_outcomes_and_engine_totals() {
+    let sim = Simulator::new(Target::mlu100());
+    let model = zoo::resnet18();
+
+    let run = |threads: usize| {
+        let request = tuner::TuningRequest::new(&sim, &model).threads(threads);
+        let mut tuners: Vec<Box<dyn Tuner>> = vec![
+            Box::new(tuner::Algorithm1),
+            Box::new(tuner::OracleDp::reduced()),
+            Box::new(tuner::OracleDp::constrained()),
+            Box::new(tuner::Annealer::new()),
+        ];
+        request.compare(&mut tuners).expect("comparison")
+    };
+    let seq = run(1);
+    let par = run(4);
+
+    assert_eq!(seq.outcomes.len(), par.outcomes.len());
+    for (s, p) in seq.outcomes.iter().zip(&par.outcomes) {
+        assert_eq!(s.tuner, p.tuner);
+        assert_eq!(s.schedule, p.schedule, "{}: schedule", s.tuner);
+        assert_eq!(s.predicted_ms.to_bits(), p.predicted_ms.to_bits(),
+                   "{}: predicted_ms", s.tuner);
+        assert_eq!(s.stats.evaluations, p.stats.evaluations,
+                   "{}: evaluations", s.tuner);
+    }
+    // Merged engine totals: the shard-locked cache computes every distinct
+    // key exactly once no matter which worker gets there first, so the
+    // whole-comparison hit/miss totals are identical too (only the
+    // per-tuner *attribution* of a shared first-miss may move).
+    assert_eq!(seq.engine_stats.misses, par.engine_stats.misses);
+    assert_eq!(seq.engine_stats.hits + seq.engine_stats.misses,
+               par.engine_stats.hits + par.engine_stats.misses);
+}
