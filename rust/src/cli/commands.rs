@@ -5,7 +5,8 @@ use crate::accel::{Simulator, Target};
 use crate::codegen;
 use crate::coordinator::{self, driver, equivalence, plan};
 use crate::cost::CostEngine;
-use crate::graph::{format as dlm, Model};
+use crate::graph::dag::{self, DagModel, LoadedModel};
+use crate::graph::{format as dlm, LayerKind, Model};
 use crate::optimizer::{self, Strategy};
 use crate::perfmodel;
 use crate::runtime::Runtime;
@@ -34,12 +35,19 @@ COMMANDS:
         [--batch 1,2,4,8]        serve the per-sample-fastest point
         [--compare-targets]      (NAME: algorithm1 strategy1..7 oracle
         [--threads N]             oracle-full oracle-constrained anneal
-                                  exhaustive);
+        [--model-file F.dlm]      exhaustive);
+                                 --model-file reads a .dlm v1/v2 document;
+                                 v2 dags tune with fusion constrained to
+                                 the graph's legal cut set;
                                  --compare-targets runs the one backend on
                                  every registry target instead (the cross-
                                  target analog of --compare); --threads fans
                                  the search/comparison across N workers,
                                  bit-identical to the sequential run
+    model import <file.dlm>      parse + validate a .dlm v1/v2 document
+    model export <model>         write a zoo model as .dlm (v2 for dags)
+        [--out FILE]
+    model show <model|file.dlm>  node table, shapes, fusion-legal cuts
     simulate <model|file.dlm>    simulate all seven strategies (Fig. 10 row)
     search <model|file.dlm>      compare search costs: Algorithm 1 vs oracle
         [--iterations N]         DP vs simulated annealing (cache + wall time)
@@ -69,7 +77,8 @@ COMMANDS:
                                  checked-in baseline
     help                         this text
 
-MODELS:  resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file)
+MODELS:  resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file);
+         branching dag variants (tune/model only): resnet18-dag resnet50-dag
 TARGETS: every hardware-touching command takes --target NAME (default
          mlu100; see 'targets'): zoo optimize tune simulate search codegen
          characterize trace run serve-sim perf-smoke
@@ -86,6 +95,7 @@ pub fn run(args: &Args) -> i32 {
         "targets" => cmd_targets(),
         "optimize" => cmd_optimize(args),
         "tune" => cmd_tune(args),
+        "model" => cmd_model(args),
         "simulate" => cmd_simulate(args),
         "search" => cmd_search(args),
         "codegen" => cmd_codegen(args),
@@ -119,18 +129,77 @@ fn parse_sim(args: &Args) -> Result<Simulator, String> {
     Ok(Simulator::new(parse_target(args)?))
 }
 
-fn load_model(args: &Args) -> Result<Model, String> {
+/// A resolved tuning workload: the range-based model the cost stack
+/// consumes, plus the DAG-derived cut constraint (and the source graph)
+/// when the workload came from a branching `.dlm` v2 document or a DAG zoo
+/// variant. `cuts: None` means every boundary is fusion-legal — the plain
+/// linear-chain path.
+struct LoadedWorkload {
+    model: Model,
+    cuts: Option<Vec<usize>>,
+    dag: Option<DagModel>,
+}
+
+fn workload_from_dag(d: DagModel) -> Result<LoadedWorkload, String> {
+    let lin = dag::linearize(&d).map_err(|e| format!("{}: {e}", d.name))?;
+    Ok(LoadedWorkload { model: lin.model, cuts: lin.cuts, dag: Some(d) })
+}
+
+fn workload_from_loaded(loaded: LoadedModel) -> Result<LoadedWorkload, String> {
+    match loaded {
+        LoadedModel::Linear(model) => Ok(LoadedWorkload { model, cuts: None, dag: None }),
+        LoadedModel::Dag(d) => workload_from_dag(d),
+    }
+}
+
+fn workload_from_file(path: &str) -> Result<LoadedWorkload, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    workload_from_loaded(dag::load_dlm(&text).map_err(|e| format!("{path}: {e}"))?)
+}
+
+fn unknown_model(name: &str) -> String {
+    format!(
+        "unknown model '{name}' (known: {}; dag variants: {})",
+        zoo::MODEL_NAMES.join(", "),
+        zoo::DAG_MODEL_NAMES.join(", ")
+    )
+}
+
+/// Resolve a workload from `--model-file PATH` or the first positional
+/// (zoo name, DAG zoo name, or `*.dlm` path).
+fn load_workload(args: &Args) -> Result<LoadedWorkload, String> {
+    if let Some(path) = args.flag_value("model-file").map_err(|e| e.to_string())? {
+        return workload_from_file(path);
+    }
     let name = args
         .positional(0)
         .ok_or("missing model name or .dlm path")?;
     if name.ends_with(".dlm") {
-        let text = std::fs::read_to_string(name).map_err(|e| format!("{name}: {e}"))?;
-        dlm::from_dlm(&text)
+        workload_from_file(name)
+    } else if let Some(model) = zoo::by_name(name) {
+        Ok(LoadedWorkload { model, cuts: None, dag: None })
+    } else if let Some(d) = zoo::dag_by_name(name) {
+        workload_from_dag(d)
     } else {
-        zoo::by_name(name).ok_or_else(|| {
-            format!("unknown model '{name}' (known: {})", zoo::MODEL_NAMES.join(", "))
-        })
+        Err(unknown_model(name))
     }
+}
+
+/// Workload loader for the linear-only commands (optimize, simulate,
+/// search, codegen, trace): accepts anything [`load_workload`] accepts,
+/// but rejects branching dags — their fusion spaces are cut-constrained
+/// and only the tuner stack honors that.
+fn load_model(args: &Args) -> Result<Model, String> {
+    let w = load_workload(args)?;
+    if w.cuts.is_some() {
+        return Err(format!(
+            "'{}' is a branching dag; this command runs over linear layer \
+             chains — tune it with 'dlfusion tune', which constrains fusion \
+             to the dag's legal cut set",
+            w.model.name
+        ));
+    }
+    Ok(w.model)
 }
 
 fn cmd_zoo(args: &Args) -> Result<(), String> {
@@ -300,8 +369,20 @@ fn compare_panel(extra: Option<&str>) -> Result<Vec<Box<dyn Tuner>>, String> {
     Ok(tuners)
 }
 
+/// Constrain a request to the workload's fusion-legal cut set, if any.
+fn with_workload_cuts<'a>(
+    req: tuner::TuningRequest<'a>,
+    w: &LoadedWorkload,
+) -> tuner::TuningRequest<'a> {
+    match &w.cuts {
+        Some(c) => req.allowed_cuts(c.clone()),
+        None => req,
+    }
+}
+
 fn cmd_tune(args: &Args) -> Result<(), String> {
-    let model = load_model(args)?;
+    let workload = load_workload(args)?;
+    let model = &workload.model;
     let tuner_flag = args.flag_value("tuner").map_err(|e| e.to_string())?;
 
     if args.flag_bool("compare-targets") {
@@ -318,11 +399,11 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
         let name = tuner_flag.unwrap_or("algorithm1");
         let backend = parse_tuner(name)?;
         let sim = parse_sim(args)?;
-        let template = parse_request(args, &sim, &model)?;
+        let template = with_workload_cuts(parse_request(args, &sim, model)?, &workload);
         let targets = Target::all();
         let threads = parse_threads(args, 1)?;
         let cmp = tuner::compare_targets_with(
-            &model, &targets,
+            model, &targets,
             || tuner::backend_by_name(name).expect("name validated above"),
             &template, threads)
             .map_err(|e| e.to_string())?;
@@ -333,21 +414,32 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
     }
 
     let sim = parse_sim(args)?;
-    let request = parse_request(args, &sim, &model)?;
+    let request = with_workload_cuts(parse_request(args, &sim, model)?, &workload);
 
     if args.flag_bool("compare") {
         // The Fig. 10-style side-by-side report over one shared engine; an
         // explicit --tuner joins the default panel.
         let mut tuners = compare_panel(tuner_flag)?;
         let cmp = request.compare(&mut tuners).map_err(|e| e.to_string())?;
+        let constraint = if workload.cuts.is_some() {
+            " (dag-constrained fusion)"
+        } else {
+            ""
+        };
         print!("{}", cmp.render(&format!(
-            "tuner comparison — {} on {}", model.name, request.target())));
+            "tuner comparison — {} on {}{constraint}",
+            model.name, request.target())));
         return Ok(());
     }
 
     let mut backend = parse_tuner(tuner_flag.unwrap_or("algorithm1"))?;
     let outcome = request.run(backend.as_mut()).map_err(|e| e.to_string())?;
     println!("model:     {}", model.name);
+    if let Some(cuts) = &workload.cuts {
+        println!("graph:     branching dag — fusion constrained to {} of {} \
+                  legal boundaries",
+                 cuts.len(), model.num_layers() + 1);
+    }
     println!("target:    {}", sim.target());
     println!("tuner:     {}", outcome.tuner);
     println!("schedule:  {}", outcome.schedule.summary());
@@ -370,6 +462,146 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
     if st.space_visited > 0 {
         println!("space:     {} joint (fusion, MP) candidates certified",
                  st.space_visited);
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<(), String> {
+    let verb = args
+        .positional(0)
+        .ok_or("usage: model <import|export|show> <model|file.dlm>")?;
+    match verb {
+        "import" => cmd_model_import(args),
+        "export" => cmd_model_export(args),
+        "show" => cmd_model_show(args),
+        other => Err(format!("unknown model verb '{other}' (import, export, show)")),
+    }
+}
+
+fn cmd_model_import(args: &Args) -> Result<(), String> {
+    let path = args.positional(1).ok_or("usage: model import <file.dlm>")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    match dag::load_dlm(&text).map_err(|e| format!("{path}: {e}"))? {
+        LoadedModel::Linear(m) => {
+            let s = m.stats();
+            println!("{path}: .dlm v1 (linear chain)");
+            println!("model:    {}", m.name);
+            println!("layers:   {} ({} convs, {} conv work)",
+                     m.num_layers(), s.num_conv, fmt_gops(s.total_conv_gops));
+        }
+        LoadedModel::Dag(d) => {
+            let lin = dag::linearize(&d).map_err(|e| format!("{path}: {e}"))?;
+            let n = lin.model.num_layers();
+            println!("{path}: .dlm v2 (dag)");
+            println!("model:    {}", d.name);
+            println!("nodes:    {} ({} graph inputs, {} outputs)",
+                     d.num_nodes(), d.inputs.len(), d.outputs.len());
+            match &lin.cuts {
+                None => println!("shape:    pure chain — every boundary fusion-legal"),
+                Some(c) => println!("shape:    branching — {} of {} boundaries fusion-legal",
+                                    c.len(), n + 1),
+            }
+        }
+    }
+    println!("ok: valid and tunable ('tune --model-file {path}')");
+    Ok(())
+}
+
+fn cmd_model_export(args: &Args) -> Result<(), String> {
+    let name = args
+        .positional(1)
+        .ok_or("usage: model export <zoo-model> [--out FILE]")?;
+    let (text, what) = if let Some(m) = zoo::by_name(name) {
+        (dlm::to_dlm(&m), format!("{} (.dlm v1)", m.name))
+    } else if let Some(d) = zoo::dag_by_name(name) {
+        (dag::to_dlm_v2(&d), format!("{} (.dlm v2)", d.name))
+    } else {
+        return Err(unknown_model(name));
+    };
+    match args.flag_value("out").map_err(|e| e.to_string())? {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?;
+            println!("wrote {what} to {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn layer_op(kind: &LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Conv(_) => "conv",
+        LayerKind::Fc(_) => "fc",
+        LayerKind::ReLU { .. } => "relu",
+        LayerKind::BatchNorm { .. } => "batchnorm",
+        LayerKind::Pool { .. } => "pool",
+        LayerKind::Add { .. } => "add",
+    }
+}
+
+fn cmd_model_show(args: &Args) -> Result<(), String> {
+    let name = args
+        .positional(1)
+        .ok_or("usage: model show <model|file.dlm>")?;
+    let w = if name.ends_with(".dlm") {
+        workload_from_file(name)?
+    } else if let Some(model) = zoo::by_name(name) {
+        LoadedWorkload { model, cuts: None, dag: None }
+    } else if let Some(d) = zoo::dag_by_name(name) {
+        workload_from_dag(d)?
+    } else {
+        return Err(unknown_model(name));
+    };
+    match &w.dag {
+        None => {
+            let mut t = Table::new(&["#", "layer", "op", "out shape"])
+                .label_first()
+                .align(1, crate::util::table::Align::Left)
+                .align(2, crate::util::table::Align::Left)
+                .with_title(&format!("{} — linear chain, {} layers",
+                                     w.model.name, w.model.num_layers()));
+            for (i, l) in w.model.layers.iter().enumerate() {
+                let sh = l.output_shape();
+                t.row(vec![
+                    i.to_string(),
+                    l.name.clone(),
+                    layer_op(&l.kind).to_string(),
+                    format!("{}x{}x{}", sh.c, sh.h, sh.w),
+                ]);
+            }
+            println!("{t}");
+            println!("fusion: every layer boundary is legal (pure chain)");
+        }
+        Some(d) => {
+            let shapes = d.value_shapes();
+            let mut t = Table::new(&["node", "op", "inputs", "out shape"])
+                .label_first()
+                .align(0, crate::util::table::Align::Left)
+                .align(1, crate::util::table::Align::Left)
+                .align(2, crate::util::table::Align::Left)
+                .with_title(&format!("{} — dag, {} nodes", d.name, d.num_nodes()));
+            for node in &d.nodes {
+                let sh = shapes[&node.name];
+                t.row(vec![
+                    node.name.clone(),
+                    node.op.mnemonic().to_string(),
+                    node.inputs.join(", "),
+                    format!("{}x{}x{}", sh.c, sh.h, sh.w),
+                ]);
+            }
+            println!("{t}");
+            println!("graph inputs:  {}",
+                     d.inputs.iter().map(|i| i.name.as_str())
+                         .collect::<Vec<_>>().join(", "));
+            println!("graph outputs: {}", d.outputs.join(", "));
+            let n = w.model.num_layers();
+            match &w.cuts {
+                None => println!("fusion: every boundary of the {n}-layer \
+                                  linearization is legal (pure chain)"),
+                Some(c) => println!("fusion: {} legal boundaries of {} — {:?}",
+                                    c.len(), n + 1, c),
+            }
+        }
     }
     Ok(())
 }

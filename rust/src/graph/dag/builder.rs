@@ -1,0 +1,219 @@
+//! Fluent construction of [`DagModel`]s with explicit value handles.
+//!
+//! The linear zoo uses `NetBuilder`, whose implicit "current tensor" cannot
+//! express branches. `DagBuilder` returns a [`ValueRef`] from every op;
+//! branching is just using the same handle twice:
+//!
+//! ```
+//! use dlfusion::graph::dag::DagBuilder;
+//!
+//! let mut b = DagBuilder::new("residual");
+//! let x = b.input("image", 56, 56, 64);
+//! let y = b.conv_bn_relu(&x, 64, 3, 1, 1, 1);
+//! let y = b.conv(&y, 64, 3, 1, 1, 1);
+//! let y = b.bn(&y);
+//! let j = b.add(&[&x, &y]);
+//! let j = b.relu(&j);
+//! b.output(&j);
+//! let dag = b.build();
+//! assert!(!dag.is_linear());
+//! ```
+
+use super::model::{DagModel, DagNode, DagOp, GraphInput};
+use crate::graph::{ConvSpec, FcSpec, LayerKind, TensorShape};
+
+/// Handle to a value in the graph under construction: its name plus the
+/// shape it will have, so downstream ops can size themselves.
+#[derive(Debug, Clone)]
+pub struct ValueRef {
+    name: String,
+    shape: TensorShape,
+}
+
+impl ValueRef {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn shape(&self) -> TensorShape {
+        self.shape
+    }
+}
+
+/// Builder for [`DagModel`]. Ops are named `conv1`, `bn2`, ... from a
+/// shared counter, the same scheme as the linear zoo builder.
+#[derive(Debug)]
+pub struct DagBuilder {
+    name: String,
+    inputs: Vec<GraphInput>,
+    outputs: Vec<String>,
+    nodes: Vec<DagNode>,
+    counter: usize,
+}
+
+impl DagBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        DagBuilder {
+            name: name.into(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            nodes: Vec::new(),
+            counter: 0,
+        }
+    }
+
+    fn next_name(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("{prefix}{}", self.counter)
+    }
+
+    fn push(&mut self, prefix: &str, op: DagOp, inputs: Vec<&ValueRef>) -> ValueRef {
+        let name = self.next_name(prefix);
+        let shape = op.output_shape();
+        self.nodes.push(DagNode {
+            name: name.clone(),
+            op,
+            inputs: inputs.iter().map(|v| v.name.clone()).collect(),
+        });
+        ValueRef { name, shape }
+    }
+
+    /// Declare a named graph input.
+    pub fn input(&mut self, name: impl Into<String>, h: usize, w: usize, c: usize) -> ValueRef {
+        let name = name.into();
+        let shape = TensorShape::new(h, w, c);
+        self.inputs.push(GraphInput { name: name.clone(), shape });
+        ValueRef { name, shape }
+    }
+
+    pub fn conv(
+        &mut self,
+        from: &ValueRef,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> ValueRef {
+        let s = from.shape;
+        let spec = ConvSpec {
+            c_in: s.c,
+            c_out,
+            h_in: s.h,
+            w_in: s.w,
+            k,
+            stride,
+            pad,
+            groups,
+        };
+        self.push("conv", DagOp::Layer(LayerKind::Conv(spec)), vec![from])
+    }
+
+    pub fn bn(&mut self, from: &ValueRef) -> ValueRef {
+        self.push("bn", DagOp::Layer(LayerKind::BatchNorm { shape: from.shape }), vec![from])
+    }
+
+    pub fn relu(&mut self, from: &ValueRef) -> ValueRef {
+        self.push("relu", DagOp::Layer(LayerKind::ReLU { shape: from.shape }), vec![from])
+    }
+
+    pub fn conv_bn_relu(
+        &mut self,
+        from: &ValueRef,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> ValueRef {
+        let c = self.conv(from, c_out, k, stride, pad, groups);
+        let b = self.bn(&c);
+        self.relu(&b)
+    }
+
+    pub fn pool(&mut self, from: &ValueRef, k: usize, stride: usize) -> ValueRef {
+        let op = DagOp::Layer(LayerKind::Pool { shape: from.shape, k, stride });
+        self.push("pool", op, vec![from])
+    }
+
+    /// Global average pool: kernel = the full spatial extent.
+    pub fn global_pool(&mut self, from: &ValueRef) -> ValueRef {
+        let k = from.shape.h;
+        self.pool(from, k, k.max(1))
+    }
+
+    pub fn fc(&mut self, from: &ValueRef, n: usize) -> ValueRef {
+        let spec = FcSpec { k: from.shape.elems(), n };
+        self.push("fc", DagOp::Layer(LayerKind::Fc(spec)), vec![from])
+    }
+
+    /// Elementwise sum join. All inputs must share a shape.
+    pub fn add(&mut self, from: &[&ValueRef]) -> ValueRef {
+        let shape = from[0].shape;
+        self.push("add", DagOp::Add { shape }, from.to_vec())
+    }
+
+    /// Channel-concatenation join. Inputs share spatial dims; channels sum.
+    pub fn concat(&mut self, from: &[&ValueRef]) -> ValueRef {
+        let first = from[0].shape;
+        let c: usize = from.iter().map(|v| v.shape.c).sum();
+        let shape = TensorShape::new(first.h, first.w, c);
+        self.push("concat", DagOp::Concat { shape }, from.to_vec())
+    }
+
+    /// Mark a value as a graph output.
+    pub fn output(&mut self, v: &ValueRef) {
+        self.outputs.push(v.name.clone());
+    }
+
+    /// Validate and finish. Panics on an invalid graph — builder misuse is
+    /// a programming error, matching the linear zoo builder's contract.
+    pub fn build(self) -> DagModel {
+        DagModel::new(self.name, self.inputs, self.outputs, self.nodes)
+            .unwrap_or_else(|e| panic!("dag builder produced invalid model: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_names_follow_shared_counter() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 3);
+        let c = b.conv(&x, 8, 3, 1, 1, 1);
+        let r = b.relu(&c);
+        b.output(&r);
+        let d = b.build();
+        assert_eq!(d.nodes[0].name, "conv1");
+        assert_eq!(d.nodes[1].name, "relu2");
+        assert!(d.is_linear());
+    }
+
+    #[test]
+    fn branch_and_join() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 8);
+        let a = b.conv(&x, 8, 3, 1, 1, 1);
+        let j = b.add(&[&x, &a]);
+        let cat = b.concat(&[&j, &a]);
+        b.output(&cat);
+        let d = b.build();
+        assert_eq!(cat.shape(), TensorShape::new(8, 8, 16));
+        assert!(!d.is_linear());
+        assert_eq!(d.consumer_count("conv1"), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid model")]
+    fn build_panics_on_shape_break() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 3);
+        let a = b.conv(&x, 8, 3, 1, 1, 1);
+        let y = b.input("y", 4, 4, 8);
+        let j = b.add(&[&a, &y]);
+        b.output(&j);
+        b.build();
+    }
+}

@@ -1,0 +1,261 @@
+//! `.dlm` version 2: the DAG interchange grammar, plus the version
+//! dispatcher [`load_dlm`] that accepts both format versions.
+//!
+//! v2 extends v1 with named dataflow: a `version: 2` marker, named graph
+//! `inputs`/`outputs`, and a per-layer `inputs` list of value names (a
+//! layer's output value is named after the layer). The per-layer op fields
+//! are exactly the v1 grammar, plus the v2-only multi-input ops `add` and
+//! `concat`. v1 documents (no `version` field) parse unchanged through the
+//! original linear path.
+//!
+//! Example:
+//! ```json
+//! {
+//!   "name": "residual",
+//!   "version": 2,
+//!   "inputs": [{"name": "image", "shape": [56, 56, 64]}],
+//!   "outputs": ["relu2"],
+//!   "layers": [
+//!     {"name": "conv1", "op": "conv", "inputs": ["image"], "c_in": 64,
+//!      "c_out": 64, "h_in": 56, "w_in": 56, "k": 3, "stride": 1,
+//!      "pad": 1, "groups": 1},
+//!     {"name": "add1", "op": "add", "inputs": ["image", "conv1"],
+//!      "shape": [56, 56, 64]},
+//!     {"name": "relu2", "op": "relu", "inputs": ["add1"],
+//!      "shape": [56, 56, 64]}
+//!   ]
+//! }
+//! ```
+
+use super::model::{DagModel, DagNode, DagOp, GraphInput};
+use crate::graph::format::{
+    self, layer_from_json, layer_to_json, shape_from_json, shape_to_json, DlmError,
+};
+use crate::graph::{Layer, Model};
+use crate::util::json::Json;
+
+/// A parsed `.dlm` document of either version.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoadedModel {
+    /// v1: a linear layer chain.
+    Linear(Model),
+    /// v2: a dag (which may still happen to be a pure chain).
+    Dag(DagModel),
+}
+
+impl LoadedModel {
+    pub fn name(&self) -> &str {
+        match self {
+            LoadedModel::Linear(m) => &m.name,
+            LoadedModel::Dag(d) => &d.name,
+        }
+    }
+}
+
+/// Parse `.dlm` text of either version, dispatching on the `version` field
+/// (absent means 1).
+pub fn load_dlm(text: &str) -> Result<LoadedModel, DlmError> {
+    let v = Json::parse(text).map_err(DlmError::Json)?;
+    match format::document_version(&v)? {
+        1 => format::model_from_json(&v).map(LoadedModel::Linear),
+        2 => dag_from_json(&v).map(LoadedModel::Dag),
+        other => Err(DlmError::UnsupportedVersion(other)),
+    }
+}
+
+/// Serialize a DAG to `.dlm` v2 JSON text (pretty-printed).
+pub fn to_dlm_v2(d: &DagModel) -> String {
+    let inputs: Vec<Json> = d
+        .inputs
+        .iter()
+        .map(|i| {
+            Json::obj(vec![
+                ("name", Json::Str(i.name.clone())),
+                ("shape", shape_to_json(i.shape)),
+            ])
+        })
+        .collect();
+    let outputs: Vec<Json> = d.outputs.iter().map(|o| Json::Str(o.clone())).collect();
+    let layers: Vec<Json> = d.nodes.iter().map(node_to_json).collect();
+    Json::obj(vec![
+        ("name", Json::Str(d.name.clone())),
+        ("version", Json::Num(2.0)),
+        ("inputs", Json::Arr(inputs)),
+        ("outputs", Json::Arr(outputs)),
+        ("layers", Json::Arr(layers)),
+    ])
+    .to_pretty()
+}
+
+fn node_to_json(n: &DagNode) -> Json {
+    let mut obj = match n.op {
+        // Unary ops reuse the v1 field grammar verbatim.
+        DagOp::Layer(kind) => layer_to_json(&Layer::new(n.name.clone(), kind)),
+        DagOp::Add { shape } => Json::obj(vec![
+            ("name", Json::Str(n.name.clone())),
+            ("op", Json::Str("add".into())),
+            ("shape", shape_to_json(shape)),
+        ]),
+        DagOp::Concat { shape } => Json::obj(vec![
+            ("name", Json::Str(n.name.clone())),
+            ("op", Json::Str("concat".into())),
+            ("shape", shape_to_json(shape)),
+        ]),
+    };
+    if let Json::Obj(map) = &mut obj {
+        let vals = n.inputs.iter().map(|v| Json::Str(v.clone())).collect();
+        map.insert("inputs".into(), Json::Arr(vals));
+    }
+    obj
+}
+
+fn dag_from_json(v: &Json) -> Result<DagModel, DlmError> {
+    let name = v
+        .get("name")
+        .as_str()
+        .ok_or_else(|| DlmError::Document("missing model 'name'".into()))?
+        .to_string();
+    let inputs_json = v
+        .get("inputs")
+        .as_arr()
+        .ok_or_else(|| DlmError::Document("missing 'inputs' array".into()))?;
+    let mut inputs = Vec::with_capacity(inputs_json.len());
+    for (i, ij) in inputs_json.iter().enumerate() {
+        let iname = ij
+            .get("name")
+            .as_str()
+            .ok_or_else(|| DlmError::Document(format!("input {i}: missing 'name'")))?
+            .to_string();
+        let shape = shape_from_json(ij.get("shape"))
+            .ok_or_else(|| DlmError::Document(format!("input {i}: bad 'shape'")))?;
+        inputs.push(GraphInput { name: iname, shape });
+    }
+    let outputs_json = v
+        .get("outputs")
+        .as_arr()
+        .ok_or_else(|| DlmError::Document("missing 'outputs' array".into()))?;
+    let mut outputs = Vec::with_capacity(outputs_json.len());
+    for (i, oj) in outputs_json.iter().enumerate() {
+        let o = oj
+            .as_str()
+            .ok_or_else(|| DlmError::Document(format!("output {i}: not a value name")))?;
+        outputs.push(o.to_string());
+    }
+    let layers_json = v
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| DlmError::Document("missing 'layers' array".into()))?;
+    let mut nodes = Vec::with_capacity(layers_json.len());
+    for (i, lj) in layers_json.iter().enumerate() {
+        let node =
+            node_from_json(lj).map_err(|message| DlmError::Layer { index: i, message })?;
+        nodes.push(node);
+    }
+    // DagModel::new validates: unique names, dangling references, cycles,
+    // shape agreement — all surfaced as structured DlmErrors.
+    DagModel::new(name, inputs, outputs, nodes).map_err(DlmError::from)
+}
+
+fn node_from_json(v: &Json) -> Result<DagNode, String> {
+    let name = v.get("name").as_str().ok_or("missing 'name'")?.to_string();
+    let inputs_json = v.get("inputs").as_arr().ok_or("missing 'inputs' array")?;
+    let mut inputs = Vec::with_capacity(inputs_json.len());
+    for x in inputs_json {
+        inputs.push(x.as_str().ok_or("bad value name in 'inputs'")?.to_string());
+    }
+    let op_tag = v.get("op").as_str().ok_or("missing 'op'")?;
+    let op = match op_tag {
+        "add" => DagOp::Add {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+        },
+        "concat" => DagOp::Concat {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+        },
+        _ => DagOp::Layer(layer_from_json(v)?.kind),
+    };
+    Ok(DagNode { name, op, inputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::format::{from_dlm, to_dlm};
+    use crate::zoo;
+
+    #[test]
+    fn v1_documents_dispatch_to_the_linear_path() {
+        for m in zoo::all_models() {
+            let text = to_dlm(&m);
+            match load_dlm(&text).expect(&m.name) {
+                LoadedModel::Linear(back) => assert_eq!(back, m),
+                LoadedModel::Dag(_) => panic!("{} is a v1 document", m.name),
+            }
+            // And the v1-only entry agrees.
+            assert_eq!(from_dlm(&text).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_is_identity() {
+        for d in [zoo::resnet18_dag(), zoo::resnet50_dag()] {
+            let text = to_dlm_v2(&d);
+            match load_dlm(&text).expect(&d.name) {
+                LoadedModel::Dag(back) => assert_eq!(back, d, "roundtrip {}", d.name),
+                LoadedModel::Linear(_) => panic!("{} is a v2 document", d.name),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_rejects_duplicate_layer_names() {
+        let text = r#"{"name":"g","version":2,
+            "inputs":[{"name":"x","shape":[4,4,2]}],
+            "outputs":["r"],
+            "layers":[
+              {"name":"r","op":"relu","inputs":["x"],"shape":[4,4,2]},
+              {"name":"r","op":"relu","inputs":["x"],"shape":[4,4,2]}]}"#;
+        assert_eq!(load_dlm(text).unwrap_err(), DlmError::DuplicateLayerName("r".into()));
+    }
+
+    #[test]
+    fn v2_rejects_dangling_references() {
+        let text = r#"{"name":"g","version":2,
+            "inputs":[{"name":"x","shape":[4,4,2]}],
+            "outputs":["r"],
+            "layers":[
+              {"name":"r","op":"relu","inputs":["ghost"],"shape":[4,4,2]}]}"#;
+        let err = load_dlm(text).unwrap_err();
+        assert_eq!(
+            err,
+            DlmError::DanglingReference { layer: "r".into(), value: "ghost".into() }
+        );
+        assert!(err.to_string().contains("dangling reference"), "{err}");
+    }
+
+    #[test]
+    fn v2_rejects_unknown_op_via_v1_grammar() {
+        let text = r#"{"name":"g","version":2,
+            "inputs":[{"name":"x","shape":[4,4,2]}],
+            "outputs":["y"],
+            "layers":[
+              {"name":"y","op":"softmax9000","inputs":["x"]}]}"#;
+        let err = load_dlm(text).unwrap_err().to_string();
+        assert!(err.contains("unknown op"), "{err}");
+    }
+
+    #[test]
+    fn v2_node_without_inputs_is_rejected() {
+        let text = r#"{"name":"g","version":2,
+            "inputs":[{"name":"x","shape":[4,4,2]}],
+            "outputs":["y"],
+            "layers":[{"name":"y","op":"relu","shape":[4,4,2]}]}"#;
+        let err = load_dlm(text).unwrap_err();
+        assert!(matches!(err, DlmError::Layer { index: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn unsupported_version_is_rejected() {
+        let text = r#"{"name":"g","version":7,"layers":[]}"#;
+        assert_eq!(load_dlm(text).unwrap_err(), DlmError::UnsupportedVersion(7));
+    }
+}

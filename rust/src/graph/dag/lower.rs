@@ -1,0 +1,203 @@
+//! Lowering the DAG onto the range-based scheduling stack.
+//!
+//! The cost engine, Algorithm 1, the oracle DP, the annealer, and the
+//! exhaustive search all partition a *linear* layer sequence into `(start,
+//! end)` blocks. The DAG joins them through two artifacts:
+//!
+//! 1. a **linearization** — the nodes in deterministic topological order,
+//!    lowered to legacy [`Layer`]s (joins become `LayerKind::Add` at the
+//!    join's output shape: identical elementwise GOPs, zero weights, zero
+//!    halo — the same approximation the faked-sequential zoo chains always
+//!    made); and
+//! 2. the **fusion-legal cut set** — a boundary in that order is a legal
+//!    block edge iff exactly **one** live value crosses it. A fusion block
+//!    hands exactly one tensor to its successor (the Fig. 7 pipeline), so a
+//!    residual skip that is still live mid-block makes every interior
+//!    boundary of that block illegal.
+//!
+//! A pure chain has exactly one live value at every boundary, so its cut
+//! set is `None` ("everything legal") and the tuner stack runs its
+//! untouched, bit-identical legacy path — the parity discipline pinned in
+//! `tests/dag_parity.rs`.
+//!
+//! Note the lowered `Model` of a *branching* DAG is not a flowing-shape
+//! chain (a skip consumer reads an earlier value), so `Model::validate`
+//! would reject it. That is fine: the cost stack only reads per-layer
+//! shapes from `layers[i..j]` slices and never re-validates.
+
+use std::collections::BTreeMap;
+
+use super::model::{DagError, DagModel, DagOp};
+use crate::graph::{Layer, LayerKind, Model};
+
+/// A DAG lowered for the range-based tuner stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Linearization {
+    /// Nodes in topological order as legacy layers.
+    pub model: Model,
+    /// Ascending fusion-legal cut positions in `0..=n` (0 and `n` always
+    /// present), or `None` when every boundary is legal — i.e. the DAG is a
+    /// pure chain and the unconstrained legacy path applies.
+    pub cuts: Option<Vec<usize>>,
+}
+
+/// Lower a validated DAG: topological order + legal cut set.
+pub fn linearize(d: &DagModel) -> Result<Linearization, DagError> {
+    let order = d.topo_order()?;
+    let layers: Vec<Layer> = order
+        .iter()
+        .map(|&ni| {
+            let node = &d.nodes[ni];
+            let kind = match node.op {
+                DagOp::Layer(kind) => kind,
+                DagOp::Add { shape } | DagOp::Concat { shape } => LayerKind::Add { shape },
+            };
+            Layer::new(node.name.clone(), kind)
+        })
+        .collect();
+    let model = Model::new(d.name.clone(), d.inputs[0].shape, layers);
+    Ok(Linearization { model, cuts: legal_cuts(d)? })
+}
+
+/// The fusion-legal cut positions of `d`'s deterministic linearization, or
+/// `None` when every boundary is legal (see the module docs).
+pub fn legal_cuts(d: &DagModel) -> Result<Option<Vec<usize>>, DagError> {
+    let order = d.topo_order()?;
+    let n = order.len();
+    // Topological position of each node, by name.
+    let pos: BTreeMap<&str, usize> = order
+        .iter()
+        .enumerate()
+        .map(|(p, &ni)| (d.nodes[ni].name.as_str(), p))
+        .collect();
+    // For every value: position after which it exists (graph inputs exist
+    // from the start) and last position that needs it (graph outputs stay
+    // live to the end).
+    let mut produced_before: BTreeMap<&str, usize> =
+        d.inputs.iter().map(|i| (i.name.as_str(), 0)).collect();
+    let mut live_until: BTreeMap<&str, usize> = BTreeMap::new();
+    for (&name, &p) in &pos {
+        produced_before.insert(name, p + 1);
+    }
+    for &ni in &order {
+        let node = &d.nodes[ni];
+        let p = pos[node.name.as_str()];
+        for v in &node.inputs {
+            let e = live_until.entry(v.as_str()).or_insert(p);
+            *e = (*e).max(p);
+        }
+    }
+    for out in &d.outputs {
+        live_until.insert(out.as_str(), n);
+    }
+    // A boundary p is legal iff exactly one value crosses it: produced at a
+    // position < p, still needed at a position >= p.
+    let crossing = |p: usize| {
+        live_until
+            .iter()
+            .filter(|(v, &until)| produced_before[*v] <= p && until >= p)
+            .count()
+    };
+    let legal: Vec<usize> = (1..n).filter(|&p| crossing(p) == 1).collect();
+    if legal.len() == n.saturating_sub(1) {
+        return Ok(None);
+    }
+    let mut cuts = Vec::with_capacity(legal.len() + 2);
+    cuts.push(0);
+    cuts.extend(legal);
+    cuts.push(n);
+    Ok(Some(cuts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dag::{DagNode, GraphInput};
+    use crate::graph::{ConvSpec, TensorShape};
+    use crate::zoo;
+
+    #[test]
+    fn chain_lowering_reproduces_model_with_no_cut_constraint() {
+        for m in zoo::all_models() {
+            let lin = linearize(&DagModel::from_model(&m)).unwrap();
+            assert_eq!(lin.model, m, "{} chain roundtrip", m.name);
+            assert_eq!(lin.cuts, None, "{} should have no cut constraint", m.name);
+        }
+    }
+
+    #[test]
+    fn residual_block_interior_cuts_are_illegal() {
+        // x -> c1 -> c2 -> j(add c1, c2) -> r. The skip from c1 keeps two
+        // values live across the c2|j boundary.
+        let s = TensorShape::new(8, 8, 8);
+        let d = DagModel::new(
+            "res",
+            vec![GraphInput { name: "x".into(), shape: TensorShape::new(8, 8, 3) }],
+            vec!["r".into()],
+            vec![
+                DagNode {
+                    name: "c1".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(3, 8, 8, 3))),
+                    inputs: vec!["x".into()],
+                },
+                DagNode {
+                    name: "c2".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(8, 8, 8, 3))),
+                    inputs: vec!["c1".into()],
+                },
+                DagNode {
+                    name: "j".into(),
+                    op: DagOp::Add { shape: s },
+                    inputs: vec!["c1".into(), "c2".into()],
+                },
+                DagNode {
+                    name: "r".into(),
+                    op: DagOp::Layer(LayerKind::ReLU { shape: s }),
+                    inputs: vec!["j".into()],
+                },
+            ],
+        )
+        .unwrap();
+        let lin = linearize(&d).unwrap();
+        // c1|c2 is legal (one value crosses even though it has two
+        // consumers); c2|j is not (skip + main path both live).
+        assert_eq!(lin.cuts, Some(vec![0, 1, 3, 4]));
+        assert_eq!(lin.model.num_layers(), 4);
+        // The join lowers to an Add layer at the join's output shape.
+        assert_eq!(lin.model.layers[2].kind, LayerKind::Add { shape: s });
+    }
+
+    #[test]
+    fn concat_lowers_to_add_at_output_shape() {
+        let d = DagModel::new(
+            "cat",
+            vec![GraphInput { name: "x".into(), shape: TensorShape::new(8, 8, 4) }],
+            vec!["cat".into()],
+            vec![
+                DagNode {
+                    name: "a".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(4, 8, 8, 3))),
+                    inputs: vec!["x".into()],
+                },
+                DagNode {
+                    name: "b".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(4, 8, 8, 3))),
+                    inputs: vec!["x".into()],
+                },
+                DagNode {
+                    name: "cat".into(),
+                    op: DagOp::Concat { shape: TensorShape::new(8, 8, 16) },
+                    inputs: vec!["a".into(), "b".into()],
+                },
+            ],
+        )
+        .unwrap();
+        let lin = linearize(&d).unwrap();
+        assert_eq!(
+            lin.model.layers[2].kind,
+            LayerKind::Add { shape: TensorShape::new(8, 8, 16) }
+        );
+        // Both interior boundaries carry two live values (x + a, then a + b).
+        assert_eq!(lin.cuts, Some(vec![0, 3]));
+    }
+}

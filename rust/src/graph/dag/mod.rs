@@ -1,0 +1,25 @@
+//! True DAG graph IR: nodes, named value edges, subgraph fusion legality,
+//! declarative rewrites, and the `.dlm` v2 interchange format.
+//!
+//! Layout (DESIGN.md §13):
+//! - [`model`] — [`DagModel`]/[`DagNode`]/[`DagOp`]: the validated IR.
+//! - [`builder`] — [`DagBuilder`]: fluent construction with value handles.
+//! - [`lower`] — [`linearize`]: topological order + fusion-legal cut set,
+//!   the bridge onto the range-based `CostEngine`/`Tuner` stack.
+//! - [`rewrite`] — [`DagPatch`] and the built-in legalization passes.
+//! - [`format`] — `.dlm` v2 parse/serialize and the [`load_dlm`] version
+//!   dispatcher.
+
+pub mod builder;
+pub mod format;
+pub mod lower;
+pub mod model;
+pub mod rewrite;
+
+pub use builder::{DagBuilder, ValueRef};
+pub use format::{load_dlm, to_dlm_v2, LoadedModel};
+pub use lower::{legal_cuts, linearize, Linearization};
+pub use model::{DagError, DagModel, DagNode, DagOp, GraphInput};
+pub use rewrite::{
+    canonicalize_residual_joins, eliminate_dead_nodes, fold_inert_ops, legalize, DagPatch,
+};

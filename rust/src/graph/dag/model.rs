@@ -1,0 +1,493 @@
+//! The DAG IR: nodes, named value edges, and multi-input joins.
+//!
+//! The linear [`Model`](crate::graph::Model) mirrors the paper's Algorithm 1,
+//! which walks `0..num_of_layer`: residual topologies are *faked* as
+//! sequential layers. `DagModel` is the real thing — every node consumes
+//! named values (graph inputs or other nodes' outputs) and produces one
+//! value named after itself, so ResNet skip connections and Inception-style
+//! concats are expressible directly.
+//!
+//! A `DagModel` is always kept valid: names are unique, references resolve,
+//! the graph is acyclic, and shapes agree at every join. Construction goes
+//! through [`DagModel::new`] (or the
+//! [`DagBuilder`](crate::graph::dag::DagBuilder)), which runs
+//! [`DagModel::validate`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use crate::graph::{Layer, LayerKind, Model, TensorShape};
+
+/// A named graph input: a value the model consumes from outside.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphInput {
+    pub name: String,
+    pub shape: TensorShape,
+}
+
+/// Operation carried by a DAG node.
+///
+/// Unary layer ops reuse [`LayerKind`] unchanged; the joins (`Add`,
+/// `Concat`) are native DAG ops because the linear IR cannot express their
+/// arity. `LayerKind::Add` is *not* allowed inside `DagOp::Layer` — the DAG
+/// canonical form for an elementwise sum is always [`DagOp::Add`], which
+/// keeps "is this a join?" a structural question.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DagOp {
+    /// A unary op from the linear IR: conv, FC, ReLU, batch-norm, pool.
+    Layer(LayerKind),
+    /// Elementwise sum of all inputs; every input must have shape `shape`.
+    Add { shape: TensorShape },
+    /// Channel concatenation: inputs share `shape`'s spatial dims and their
+    /// channels sum to `shape.c`. Lowered to `LayerKind::Add { shape }` for
+    /// costing (same elementwise GOPs, zero weights, zero halo) — see
+    /// `lower.rs`.
+    Concat { shape: TensorShape },
+}
+
+impl DagOp {
+    /// Shape of the value this op produces.
+    pub fn output_shape(&self) -> TensorShape {
+        match self {
+            DagOp::Layer(kind) => Layer::new("", *kind).output_shape(),
+            DagOp::Add { shape } | DagOp::Concat { shape } => *shape,
+        }
+    }
+
+    /// Short op mnemonic for tables and summaries.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            DagOp::Layer(LayerKind::Conv(_)) => "conv",
+            DagOp::Layer(LayerKind::Fc(_)) => "fc",
+            DagOp::Layer(LayerKind::ReLU { .. }) => "relu",
+            DagOp::Layer(LayerKind::BatchNorm { .. }) => "batchnorm",
+            DagOp::Layer(LayerKind::Pool { .. }) => "pool",
+            DagOp::Layer(LayerKind::Add { .. }) | DagOp::Add { .. } => "add",
+            DagOp::Concat { .. } => "concat",
+        }
+    }
+}
+
+/// One node: a named op consuming named values. The node's output value is
+/// named after the node itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagNode {
+    pub name: String,
+    pub op: DagOp,
+    /// Value names consumed, in order: graph input names or other nodes'
+    /// names. Unary ops take exactly one; joins take one or more.
+    pub inputs: Vec<String>,
+}
+
+/// Structured validation error for [`DagModel`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum DagError {
+    /// The graph has no nodes.
+    Empty,
+    /// The graph declares no inputs / no outputs.
+    NoGraphInputs,
+    NoGraphOutputs,
+    /// Two values (graph inputs or nodes) share a name.
+    DuplicateName(String),
+    /// A node consumes a value no input or node produces.
+    DanglingReference { node: String, value: String },
+    /// A declared graph output names an unknown value.
+    UnknownOutput(String),
+    /// The graph has a cycle through this node.
+    Cycle(String),
+    /// Wrong input count for the op (or a join expressed as a unary layer).
+    BadArity { node: String, message: String },
+    /// Shapes disagree at this node.
+    ShapeMismatch { node: String, message: String },
+}
+
+impl fmt::Display for DagError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DagError::Empty => write!(f, "dag has no nodes"),
+            DagError::NoGraphInputs => write!(f, "dag declares no graph inputs"),
+            DagError::NoGraphOutputs => write!(f, "dag declares no graph outputs"),
+            DagError::DuplicateName(n) => write!(f, "duplicate layer name '{n}'"),
+            DagError::DanglingReference { node, value } => {
+                write!(f, "layer '{node}': dangling reference to unknown value '{value}'")
+            }
+            DagError::UnknownOutput(n) => {
+                write!(f, "graph output '{n}' names no input or layer")
+            }
+            DagError::Cycle(n) => write!(f, "cycle through layer '{n}'"),
+            DagError::BadArity { node, message } => write!(f, "layer '{node}': {message}"),
+            DagError::ShapeMismatch { node, message } => {
+                write!(f, "layer '{node}': expects input {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
+
+/// A directed acyclic graph of named ops. See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagModel {
+    pub name: String,
+    pub inputs: Vec<GraphInput>,
+    /// Value names the graph exposes; they stay live to the end of any
+    /// linearization.
+    pub outputs: Vec<String>,
+    /// Nodes in insertion order. Insertion order need not be topological —
+    /// [`DagModel::topo_order`] computes a deterministic schedule.
+    pub nodes: Vec<DagNode>,
+}
+
+impl DagModel {
+    /// Build and validate.
+    pub fn new(
+        name: impl Into<String>,
+        inputs: Vec<GraphInput>,
+        outputs: Vec<String>,
+        nodes: Vec<DagNode>,
+    ) -> Result<DagModel, DagError> {
+        let m = DagModel { name: name.into(), inputs, outputs, nodes };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Full structural + shape validation. Every constructor routes through
+    /// this; rewrites re-run it after applying a patch.
+    pub fn validate(&self) -> Result<(), DagError> {
+        if self.nodes.is_empty() {
+            return Err(DagError::Empty);
+        }
+        if self.inputs.is_empty() {
+            return Err(DagError::NoGraphInputs);
+        }
+        if self.outputs.is_empty() {
+            return Err(DagError::NoGraphOutputs);
+        }
+        // Unique names across the whole value namespace (inputs + nodes).
+        let mut names: BTreeSet<&str> = BTreeSet::new();
+        for name in self
+            .inputs
+            .iter()
+            .map(|i| i.name.as_str())
+            .chain(self.nodes.iter().map(|n| n.name.as_str()))
+        {
+            if !names.insert(name) {
+                return Err(DagError::DuplicateName(name.to_string()));
+            }
+        }
+        // References resolve.
+        for node in &self.nodes {
+            if node.inputs.is_empty() {
+                return Err(DagError::BadArity {
+                    node: node.name.clone(),
+                    message: "consumes no inputs".into(),
+                });
+            }
+            for v in &node.inputs {
+                if !names.contains(v.as_str()) {
+                    return Err(DagError::DanglingReference {
+                        node: node.name.clone(),
+                        value: v.clone(),
+                    });
+                }
+            }
+        }
+        for out in &self.outputs {
+            if !names.contains(out.as_str()) {
+                return Err(DagError::UnknownOutput(out.clone()));
+            }
+        }
+        // Acyclicity (topo_order errs on cycles) + shape agreement.
+        let order = self.topo_order()?;
+        let mut shapes: BTreeMap<&str, TensorShape> =
+            self.inputs.iter().map(|i| (i.name.as_str(), i.shape)).collect();
+        for &ni in &order {
+            let node = &self.nodes[ni];
+            let got: Vec<TensorShape> =
+                node.inputs.iter().map(|v| shapes[v.as_str()]).collect();
+            check_node_shapes(node, &got)?;
+            shapes.insert(node.name.as_str(), node.op.output_shape());
+        }
+        Ok(())
+    }
+
+    /// Deterministic topological order of node indices: Kahn's algorithm,
+    /// always dispatching the ready node with the smallest insertion index.
+    /// When insertion order is already topological (builder output, chain
+    /// imports) this returns `0..n` exactly.
+    pub fn topo_order(&self) -> Result<Vec<usize>, DagError> {
+        let n = self.nodes.len();
+        let producer: BTreeMap<&str, usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| (node.name.as_str(), i))
+            .collect();
+        // Pending dependency count per node; graph inputs are always ready.
+        let mut pending: Vec<usize> = vec![0; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            pending[i] = node
+                .inputs
+                .iter()
+                .filter(|v| producer.contains_key(v.as_str()))
+                .count();
+        }
+        let mut done = vec![false; n];
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            // O(n^2) min-scan: models are tens of nodes; determinism beats
+            // asymptotics here.
+            let Some(next) = (0..n).find(|&i| !done[i] && pending[i] == 0) else {
+                let stuck = (0..n).find(|&i| !done[i]).unwrap();
+                return Err(DagError::Cycle(self.nodes[stuck].name.clone()));
+            };
+            done[next] = true;
+            order.push(next);
+            let name = self.nodes[next].name.as_str();
+            for (i, node) in self.nodes.iter().enumerate() {
+                if !done[i] {
+                    pending[i] -= node.inputs.iter().filter(|v| v == &name).count();
+                }
+            }
+        }
+        Ok(order)
+    }
+
+    /// Shape of every value (graph inputs + node outputs), for display and
+    /// rewrite passes. Assumes a valid graph.
+    pub fn value_shapes(&self) -> BTreeMap<String, TensorShape> {
+        let mut shapes: BTreeMap<String, TensorShape> =
+            self.inputs.iter().map(|i| (i.name.clone(), i.shape)).collect();
+        for node in &self.nodes {
+            shapes.insert(node.name.clone(), node.op.output_shape());
+        }
+        shapes
+    }
+
+    /// Number of consumers of a value (node fan-in references plus graph
+    /// outputs naming it).
+    pub fn consumer_count(&self, value: &str) -> usize {
+        let from_nodes: usize = self
+            .nodes
+            .iter()
+            .map(|n| n.inputs.iter().filter(|v| v.as_str() == value).count())
+            .sum();
+        from_nodes + self.outputs.iter().filter(|o| o.as_str() == value).count()
+    }
+
+    /// True when the graph is a single-input single-output chain: every
+    /// topological boundary is crossed by exactly one live value. Such a
+    /// graph lowers to the legacy range-based path bit-identically.
+    pub fn is_linear(&self) -> bool {
+        matches!(super::lower::legal_cuts(self), Ok(None))
+    }
+
+    /// Import a legacy linear [`Model`] as a chain DAG. Lowering the result
+    /// reproduces `m` layer-for-layer (pinned in `tests/dag_parity.rs`).
+    pub fn from_model(m: &Model) -> DagModel {
+        let taken: Vec<&str> = m.layers.iter().map(|l| l.name.as_str()).collect();
+        let mut input_name = String::from("input");
+        let mut salt = 0usize;
+        while taken.contains(&input_name.as_str()) {
+            input_name = format!("input{salt}");
+            salt += 1;
+        }
+        let mut nodes = Vec::with_capacity(m.layers.len());
+        let mut prev = input_name.clone();
+        for layer in &m.layers {
+            let op = match layer.kind {
+                LayerKind::Add { shape } => DagOp::Add { shape },
+                other => DagOp::Layer(other),
+            };
+            nodes.push(DagNode { name: layer.name.clone(), op, inputs: vec![prev] });
+            prev = layer.name.clone();
+        }
+        DagModel {
+            name: m.name.clone(),
+            inputs: vec![GraphInput { name: input_name, shape: m.input }],
+            outputs: vec![prev],
+            nodes,
+        }
+    }
+}
+
+/// Per-node arity + shape rules (the DAG analogue of `Model::validate`'s
+/// flowing-shape check, including the FC flatten exception).
+fn check_node_shapes(node: &DagNode, got: &[TensorShape]) -> Result<(), DagError> {
+    let fmt_shape = |s: TensorShape| format!("{}x{}x{}", s.h, s.w, s.c);
+    match node.op {
+        DagOp::Layer(LayerKind::Add { .. }) => Err(DagError::BadArity {
+            node: node.name.clone(),
+            message: "elementwise add must use the dag 'add' op, not a unary layer".into(),
+        }),
+        DagOp::Layer(kind) => {
+            if got.len() != 1 {
+                return Err(DagError::BadArity {
+                    node: node.name.clone(),
+                    message: format!("unary op takes 1 input, got {}", got.len()),
+                });
+            }
+            let expect = Layer::new("", kind).input_shape();
+            let flatten_ok = matches!(kind, LayerKind::Fc(f) if f.k == got[0].elems());
+            if expect != got[0] && !flatten_ok {
+                return Err(DagError::ShapeMismatch {
+                    node: node.name.clone(),
+                    message: format!("{}, got {}", fmt_shape(expect), fmt_shape(got[0])),
+                });
+            }
+            Ok(())
+        }
+        DagOp::Add { shape } => {
+            for s in got {
+                if *s != shape {
+                    return Err(DagError::ShapeMismatch {
+                        node: node.name.clone(),
+                        message: format!("{}, got {}", fmt_shape(shape), fmt_shape(*s)),
+                    });
+                }
+            }
+            Ok(())
+        }
+        DagOp::Concat { shape } => {
+            let mut c_sum = 0usize;
+            for s in got {
+                if s.h != shape.h || s.w != shape.w {
+                    return Err(DagError::ShapeMismatch {
+                        node: node.name.clone(),
+                        message: format!(
+                            "spatial {}x{}, got {}x{}",
+                            shape.h, shape.w, s.h, s.w
+                        ),
+                    });
+                }
+                c_sum += s.c;
+            }
+            if c_sum != shape.c {
+                return Err(DagError::ShapeMismatch {
+                    node: node.name.clone(),
+                    message: format!("{} total channels, got {}", shape.c, c_sum),
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ConvSpec;
+    use crate::zoo;
+
+    fn diamond() -> DagModel {
+        // input -> c1 -> {c2a, c2b} -> add -> relu
+        let s = TensorShape::new(8, 8, 8);
+        DagModel::new(
+            "diamond",
+            vec![GraphInput { name: "x".into(), shape: TensorShape::new(8, 8, 3) }],
+            vec!["r".into()],
+            vec![
+                DagNode {
+                    name: "c1".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(3, 8, 8, 3))),
+                    inputs: vec!["x".into()],
+                },
+                DagNode {
+                    name: "c2a".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(8, 8, 8, 3))),
+                    inputs: vec!["c1".into()],
+                },
+                DagNode {
+                    name: "c2b".into(),
+                    op: DagOp::Layer(LayerKind::Conv(ConvSpec::same(8, 8, 8, 3))),
+                    inputs: vec!["c1".into()],
+                },
+                DagNode {
+                    name: "j".into(),
+                    op: DagOp::Add { shape: s },
+                    inputs: vec!["c2a".into(), "c2b".into()],
+                },
+                DagNode {
+                    name: "r".into(),
+                    op: DagOp::Layer(LayerKind::ReLU { shape: s }),
+                    inputs: vec!["j".into()],
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn diamond_validates_and_orders() {
+        let d = diamond();
+        assert_eq!(d.topo_order().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert!(!d.is_linear());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut d = diamond();
+        d.nodes[2].name = "c2a".into();
+        assert!(matches!(d.validate(), Err(DagError::DuplicateName(n)) if n == "c2a"));
+    }
+
+    #[test]
+    fn dangling_reference_rejected() {
+        let mut d = diamond();
+        d.nodes[4].inputs = vec!["ghost".into()];
+        assert!(matches!(
+            d.validate(),
+            Err(DagError::DanglingReference { value, .. }) if value == "ghost"
+        ));
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let mut d = diamond();
+        d.nodes[1].inputs = vec!["r".into()];
+        assert!(matches!(d.validate(), Err(DagError::Cycle(_))));
+    }
+
+    #[test]
+    fn join_shape_mismatch_rejected() {
+        let mut d = diamond();
+        d.nodes[3].op = DagOp::Add { shape: TensorShape::new(4, 4, 8) };
+        assert!(matches!(d.validate(), Err(DagError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn unary_layer_add_rejected() {
+        let mut d = diamond();
+        d.nodes[4].op = DagOp::Layer(LayerKind::Add { shape: TensorShape::new(8, 8, 8) });
+        assert!(matches!(d.validate(), Err(DagError::BadArity { .. })));
+    }
+
+    #[test]
+    fn unknown_output_rejected() {
+        let mut d = diamond();
+        d.outputs = vec!["nope".into()];
+        assert!(matches!(d.validate(), Err(DagError::UnknownOutput(_))));
+    }
+
+    #[test]
+    fn chain_import_is_linear() {
+        for m in zoo::all_models() {
+            let d = DagModel::from_model(&m);
+            d.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(d.is_linear(), "{} should import as a linear chain", m.name);
+            assert_eq!(d.topo_order().unwrap(), (0..m.num_layers()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn topo_order_handles_out_of_order_insertion() {
+        let mut d = diamond();
+        d.nodes.swap(1, 3); // join now inserted before its producers
+        d.validate().unwrap();
+        assert_eq!(d.topo_order().unwrap(), vec![0, 2, 3, 1, 4]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Declarative graph rewrites: match, build a [`DagPatch`], apply.
+//!
+//! Rewrites are two-phase in the `ModelPatch` spirit: a *matcher* walks an
+//! immutable [`DagModel`] and records edits into a patch; [`DagPatch::apply`]
+//! then produces a new, re-validated model. Nothing mutates in place, a
+//! patch is inspectable before it runs, and an empty patch means "nothing
+//! matched" — which is how the fixpoint driver [`legalize`] terminates.
+//!
+//! Rewrites are always explicit passes. Import (`.dlm`) and chain
+//! conversion never run them implicitly: a legacy chain must lower back
+//! bit-identically, and e.g. [`canonicalize_residual_joins`] would fold the
+//! single-input `Add` layers such a chain contains.
+
+use super::model::{DagModel, DagNode, DagOp};
+use crate::graph::LayerKind;
+
+/// One edit recorded by a matcher.
+#[derive(Debug, Clone, PartialEq)]
+enum DagEdit {
+    /// Remove `node`, rewiring every consumer of its value (and any graph
+    /// output naming it) to the value `to`.
+    Bypass { node: String, to: String },
+    /// Delete `node`; it must have no consumers left when applied.
+    Delete { node: String },
+    /// Replace `node`'s op and inputs in place.
+    Retype { node: String, op: DagOp, inputs: Vec<String> },
+}
+
+/// An ordered batch of edits against a [`DagModel`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagPatch {
+    description: String,
+    edits: Vec<DagEdit>,
+}
+
+impl DagPatch {
+    pub fn new(description: impl Into<String>) -> Self {
+        DagPatch { description: description.into(), edits: Vec::new() }
+    }
+
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edits.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.edits.len()
+    }
+
+    /// Record: remove `node` and route its consumers to `to`.
+    pub fn bypass(&mut self, node: impl Into<String>, to: impl Into<String>) -> &mut Self {
+        self.edits.push(DagEdit::Bypass { node: node.into(), to: to.into() });
+        self
+    }
+
+    /// Record: delete the consumer-less `node`.
+    pub fn delete(&mut self, node: impl Into<String>) -> &mut Self {
+        self.edits.push(DagEdit::Delete { node: node.into() });
+        self
+    }
+
+    /// Record: replace `node`'s op and inputs.
+    pub fn retype(
+        &mut self,
+        node: impl Into<String>,
+        op: DagOp,
+        inputs: Vec<String>,
+    ) -> &mut Self {
+        self.edits.push(DagEdit::Retype { node: node.into(), op, inputs });
+        self
+    }
+
+    /// Apply the edits in order and re-validate. The input model is
+    /// untouched; errors leave no partial state behind.
+    pub fn apply(&self, m: &DagModel) -> Result<DagModel, String> {
+        let mut out = m.clone();
+        for edit in &self.edits {
+            match edit {
+                DagEdit::Bypass { node, to } => {
+                    let idx = find_node(&out, node)
+                        .ok_or_else(|| format!("patch bypasses unknown node '{node}'"))?;
+                    let known = out.inputs.iter().any(|i| &i.name == to)
+                        || out.nodes.iter().any(|n| &n.name == to);
+                    if !known {
+                        return Err(format!(
+                            "patch bypasses '{node}' to unknown value '{to}'"
+                        ));
+                    }
+                    out.nodes.remove(idx);
+                    for n in &mut out.nodes {
+                        for v in &mut n.inputs {
+                            if v == node {
+                                *v = to.clone();
+                            }
+                        }
+                    }
+                    for o in &mut out.outputs {
+                        if o == node {
+                            *o = to.clone();
+                        }
+                    }
+                }
+                DagEdit::Delete { node } => {
+                    let idx = find_node(&out, node)
+                        .ok_or_else(|| format!("patch deletes unknown node '{node}'"))?;
+                    if out.consumer_count(node) != 0 {
+                        return Err(format!(
+                            "patch deletes '{node}', which still has consumers"
+                        ));
+                    }
+                    out.nodes.remove(idx);
+                }
+                DagEdit::Retype { node, op, inputs } => {
+                    let idx = find_node(&out, node)
+                        .ok_or_else(|| format!("patch retypes unknown node '{node}'"))?;
+                    out.nodes[idx].op = *op;
+                    out.nodes[idx].inputs = inputs.clone();
+                }
+            }
+        }
+        out.validate().map_err(|e| format!("patch '{}': {e}", self.description))?;
+        Ok(out)
+    }
+}
+
+fn find_node(m: &DagModel, name: &str) -> Option<usize> {
+    m.nodes.iter().position(|n| n.name == name)
+}
+
+/// Match ops that compute the identity: `Pool` with `k == 1, stride == 1`
+/// (a 1x1 window moves nothing) and single-input `Concat`.
+pub fn fold_inert_ops(m: &DagModel) -> DagPatch {
+    let mut p = DagPatch::new("fold inert ops");
+    for node in &m.nodes {
+        let inert = match node.op {
+            DagOp::Layer(LayerKind::Pool { k: 1, stride: 1, .. }) => true,
+            DagOp::Concat { .. } => node.inputs.len() == 1,
+            _ => false,
+        };
+        if inert {
+            p.bypass(node.name.clone(), node.inputs[0].clone());
+        }
+    }
+    p
+}
+
+/// Match degenerate residual joins: an `Add` with a single input sums one
+/// tensor, i.e. the identity. Chain imports of legacy models contain one
+/// per faked residual — this pass is how such a chain is *explicitly*
+/// promoted to canonical DAG form.
+pub fn canonicalize_residual_joins(m: &DagModel) -> DagPatch {
+    let mut p = DagPatch::new("canonicalize residual joins");
+    for node in &m.nodes {
+        if matches!(node.op, DagOp::Add { .. }) && node.inputs.len() == 1 {
+            p.bypass(node.name.clone(), node.inputs[0].clone());
+        }
+    }
+    p
+}
+
+/// Match nodes whose value nobody consumes and no graph output names.
+pub fn eliminate_dead_nodes(m: &DagModel) -> DagPatch {
+    let mut p = DagPatch::new("eliminate dead nodes");
+    for node in &m.nodes {
+        if m.consumer_count(&node.name) == 0 {
+            p.delete(node.name.clone());
+        }
+    }
+    p
+}
+
+/// Run the built-in legalization passes to fixpoint. Returns the legalized
+/// model plus a log line per applied (non-empty) patch.
+pub fn legalize(m: &DagModel) -> Result<(DagModel, Vec<String>), String> {
+    let passes: &[fn(&DagModel) -> DagPatch] =
+        &[fold_inert_ops, canonicalize_residual_joins, eliminate_dead_nodes];
+    let mut cur = m.clone();
+    let mut log = Vec::new();
+    for _round in 0..64 {
+        let mut changed = false;
+        for pass in passes {
+            let patch = pass(&cur);
+            if !patch.is_empty() {
+                log.push(format!("{} ({} edits)", patch.description(), patch.len()));
+                cur = patch.apply(&cur)?;
+                changed = true;
+            }
+        }
+        if !changed {
+            return Ok((cur, log));
+        }
+    }
+    Err("legalize did not converge in 64 rounds".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dag::DagBuilder;
+    use crate::graph::dag::DagModel;
+    use crate::graph::TensorShape;
+    use crate::zoo;
+
+    #[test]
+    fn folds_inert_pool() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 3);
+        let c = b.conv(&x, 8, 3, 1, 1, 1);
+        let p = b.pool(&c, 1, 1);
+        let r = b.relu(&p);
+        b.output(&r);
+        let d = b.build();
+        let patch = fold_inert_ops(&d);
+        assert_eq!(patch.len(), 1);
+        let out = patch.apply(&d).unwrap();
+        assert_eq!(out.num_nodes(), 2);
+        // The relu now reads the conv directly.
+        assert_eq!(out.nodes[1].inputs, vec!["conv1".to_string()]);
+    }
+
+    #[test]
+    fn canonicalizes_imported_chain_joins() {
+        // Legacy resnet18 fakes residuals as single-input Add layers; the
+        // pass removes every one of them, explicitly.
+        let m = zoo::resnet18();
+        let adds = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, crate::graph::LayerKind::Add { .. }))
+            .count();
+        assert!(adds > 0);
+        let d = DagModel::from_model(&m);
+        let (out, log) = legalize(&d).unwrap();
+        assert_eq!(out.num_nodes(), m.num_layers() - adds);
+        assert!(!log.is_empty());
+        out.validate().unwrap();
+    }
+
+    #[test]
+    fn real_joins_survive_legalization() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 8);
+        let c = b.conv(&x, 8, 3, 1, 1, 1);
+        let j = b.add(&[&x, &c]);
+        b.output(&j);
+        let d = b.build();
+        let (out, log) = legalize(&d).unwrap();
+        assert_eq!(out, d);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn deletes_dead_branch() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 3);
+        let live = b.conv(&x, 8, 3, 1, 1, 1);
+        let _dead = b.conv(&x, 16, 3, 1, 1, 1);
+        b.output(&live);
+        let d = b.build();
+        let (out, _log) = legalize(&d).unwrap();
+        assert_eq!(out.num_nodes(), 1);
+    }
+
+    #[test]
+    fn patch_rejects_unknown_node() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 3);
+        let c = b.conv(&x, 8, 3, 1, 1, 1);
+        b.output(&c);
+        let d = b.build();
+        let mut p = DagPatch::new("bad");
+        p.bypass("ghost", "x");
+        assert!(p.apply(&d).unwrap_err().contains("unknown node"));
+    }
+
+    #[test]
+    fn patch_result_is_revalidated() {
+        let mut b = DagBuilder::new("t");
+        let x = b.input("x", 8, 8, 3);
+        let c = b.conv(&x, 8, 3, 1, 1, 1);
+        let r = b.relu(&c);
+        b.output(&r);
+        let d = b.build();
+        let mut p = DagPatch::new("break shapes");
+        p.retype(
+            "relu2",
+            DagOp::Add { shape: TensorShape::new(1, 1, 1) },
+            vec!["conv1".into()],
+        );
+        assert!(p.apply(&d).is_err());
+    }
+}

@@ -19,11 +19,67 @@
 //! }
 //! ```
 
+use std::collections::BTreeSet;
+use std::fmt;
+
+use super::dag::DagError;
 use super::layer::{ConvSpec, FcSpec, Layer, LayerKind, TensorShape};
 use super::model::Model;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonError};
 
-/// Serialize a model to `.dlm` JSON text (pretty-printed).
+/// Structured `.dlm` parse/validation error (both format versions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DlmError {
+    /// The document text is not JSON.
+    Json(JsonError),
+    /// Top-level structure problems: missing fields, bad shapes, a v2
+    /// document handed to the v1-only entry point.
+    Document(String),
+    /// A layer entry failed to parse.
+    Layer { index: usize, message: String },
+    /// Two layers share a name.
+    DuplicateLayerName(String),
+    /// A layer consumes a value no input or layer produces (v2).
+    DanglingReference { layer: String, value: String },
+    /// The `version` field is neither 1 nor 2.
+    UnsupportedVersion(usize),
+    /// Parsed fine but semantically invalid (shape chain / dag rules).
+    Validation(String),
+}
+
+impl fmt::Display for DlmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DlmError::Json(e) => write!(f, "{e}"),
+            DlmError::Document(m) => write!(f, "{m}"),
+            DlmError::Layer { index, message } => write!(f, "layer {index}: {message}"),
+            DlmError::DuplicateLayerName(n) => write!(f, "duplicate layer name '{n}'"),
+            DlmError::DanglingReference { layer, value } => {
+                write!(f, "layer '{layer}': dangling reference to unknown value '{value}'")
+            }
+            DlmError::UnsupportedVersion(v) => {
+                write!(f, "unsupported .dlm version {v} (known versions: 1, 2)")
+            }
+            DlmError::Validation(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for DlmError {}
+
+impl From<DagError> for DlmError {
+    fn from(e: DagError) -> Self {
+        match e {
+            DagError::DuplicateName(n) => DlmError::DuplicateLayerName(n),
+            DagError::DanglingReference { node, value } => {
+                DlmError::DanglingReference { layer: node, value }
+            }
+            other => DlmError::Validation(other.to_string()),
+        }
+    }
+}
+
+/// Serialize a model to `.dlm` JSON text (pretty-printed, v1).
 pub fn to_dlm(model: &Model) -> String {
     let layers: Vec<Json> = model.layers.iter().map(layer_to_json).collect();
     Json::obj(vec![
@@ -34,30 +90,79 @@ pub fn to_dlm(model: &Model) -> String {
     .to_pretty()
 }
 
-/// Parse `.dlm` JSON text into a [`Model`] (validated).
+/// Parse `.dlm` JSON text into a [`Model`] (validated), with the historical
+/// stringly-typed error. See [`from_dlm_checked`] for the structured form
+/// and [`crate::graph::dag::load_dlm`] for the version dispatcher that also
+/// accepts v2 (DAG) documents.
 pub fn from_dlm(text: &str) -> Result<Model, String> {
-    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    from_dlm_checked(text).map_err(|e| e.to_string())
+}
+
+/// Parse a v1 `.dlm` document with structured errors.
+pub fn from_dlm_checked(text: &str) -> Result<Model, DlmError> {
+    let v = Json::parse(text).map_err(DlmError::Json)?;
+    model_from_json(&v)
+}
+
+/// v1 (linear chain) parse of an already-parsed document.
+pub(crate) fn model_from_json(v: &Json) -> Result<Model, DlmError> {
+    match document_version(v)? {
+        1 => {}
+        2 => {
+            return Err(DlmError::Document(
+                "version 2 documents describe a dag; load them with graph::dag::load_dlm"
+                    .into(),
+            ));
+        }
+        other => return Err(DlmError::UnsupportedVersion(other)),
+    }
     let name = v
         .get("name")
         .as_str()
-        .ok_or("missing model 'name'")?
+        .ok_or_else(|| DlmError::Document("missing model 'name'".into()))?
         .to_string();
-    let input = shape_from_json(v.get("input")).ok_or("bad 'input' shape")?;
-    let layers_json = v.get("layers").as_arr().ok_or("missing 'layers' array")?;
+    let input = shape_from_json(v.get("input"))
+        .ok_or_else(|| DlmError::Document("bad 'input' shape".into()))?;
+    let layers_json = v
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| DlmError::Document("missing 'layers' array".into()))?;
     let mut layers = Vec::with_capacity(layers_json.len());
+    let mut seen: BTreeSet<String> = BTreeSet::new();
     for (i, lj) in layers_json.iter().enumerate() {
-        layers.push(layer_from_json(lj).map_err(|e| format!("layer {i}: {e}"))?);
+        if !lj.get("inputs").is_null() {
+            return Err(DlmError::Layer {
+                index: i,
+                message: "per-layer 'inputs' require .dlm version 2".into(),
+            });
+        }
+        let layer =
+            layer_from_json(lj).map_err(|message| DlmError::Layer { index: i, message })?;
+        if !seen.insert(layer.name.clone()) {
+            return Err(DlmError::DuplicateLayerName(layer.name.clone()));
+        }
+        layers.push(layer);
     }
     let model = Model::new(name, input, layers);
-    model.validate()?;
+    model.validate().map_err(DlmError::Validation)?;
     Ok(model)
 }
 
-fn shape_to_json(s: TensorShape) -> Json {
+/// The declared format version: absent means 1 (every pre-v2 document).
+pub(crate) fn document_version(v: &Json) -> Result<usize, DlmError> {
+    let ver = v.get("version");
+    if ver.is_null() {
+        return Ok(1);
+    }
+    ver.as_usize()
+        .ok_or_else(|| DlmError::Document("bad 'version' field".into()))
+}
+
+pub(crate) fn shape_to_json(s: TensorShape) -> Json {
     Json::arr_usize(&[s.h, s.w, s.c])
 }
 
-fn shape_from_json(v: &Json) -> Option<TensorShape> {
+pub(crate) fn shape_from_json(v: &Json) -> Option<TensorShape> {
     let a = v.as_arr()?;
     if a.len() != 3 {
         return None;
@@ -69,7 +174,7 @@ fn shape_from_json(v: &Json) -> Option<TensorShape> {
     ))
 }
 
-fn layer_to_json(l: &Layer) -> Json {
+pub(crate) fn layer_to_json(l: &Layer) -> Json {
     let mut pairs: Vec<(&str, Json)> = vec![("name", Json::Str(l.name.clone()))];
     match &l.kind {
         LayerKind::Conv(c) => {
@@ -110,7 +215,7 @@ fn layer_to_json(l: &Layer) -> Json {
     Json::obj(pairs)
 }
 
-fn layer_from_json(v: &Json) -> Result<Layer, String> {
+pub(crate) fn layer_from_json(v: &Json) -> Result<Layer, String> {
     let name = v.get("name").as_str().ok_or("missing 'name'")?.to_string();
     let op = v.get("op").as_str().ok_or("missing 'op'")?;
     let usize_field = |key: &str| -> Result<usize, String> {
@@ -211,5 +316,40 @@ mod tests {
     #[test]
     fn rejects_bad_json() {
         assert!(from_dlm("{not json").is_err());
+        assert!(matches!(from_dlm_checked("{not json"), Err(DlmError::Json(_))));
+    }
+
+    #[test]
+    fn rejects_duplicate_layer_names() {
+        let text = r#"{"name":"g","input":[4,4,2],"layers":[
+            {"name":"r","op":"relu","shape":[4,4,2]},
+            {"name":"r","op":"relu","shape":[4,4,2]}]}"#;
+        let err = from_dlm_checked(text).unwrap_err();
+        assert_eq!(err, DlmError::DuplicateLayerName("r".into()));
+        assert!(err.to_string().contains("duplicate layer name 'r'"));
+    }
+
+    #[test]
+    fn rejects_v2_feature_in_v1_document() {
+        // No "version" field makes this a v1 document; per-layer inputs are
+        // a v2 feature and must be called out, not silently ignored.
+        let text = r#"{"name":"g","input":[4,4,2],"layers":[
+            {"name":"r","op":"relu","shape":[4,4,2],"inputs":["x"]}]}"#;
+        let err = from_dlm_checked(text).unwrap_err();
+        assert!(matches!(err, DlmError::Layer { index: 0, .. }));
+        assert!(err.to_string().contains("version 2"), "{err}");
+    }
+
+    #[test]
+    fn v1_entry_rejects_v2_documents_with_pointer() {
+        let text = r#"{"name":"g","version":2,"inputs":[],"outputs":[],"layers":[]}"#;
+        let err = from_dlm(text).unwrap_err();
+        assert!(err.contains("load_dlm"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unsupported_version() {
+        let text = r#"{"name":"g","version":3,"input":[4,4,2],"layers":[]}"#;
+        assert_eq!(from_dlm_checked(text).unwrap_err(), DlmError::UnsupportedVersion(3));
     }
 }

@@ -10,11 +10,17 @@
 //! - [`model`]: a model as an ordered layer sequence with validation and the
 //!   Table II statistics;
 //! - [`format`]: the `.dlm` JSON model-description format (our ONNX
-//!   substitute — see DESIGN.md §2) with parser and serializer.
+//!   substitute — see DESIGN.md §2) with parser and serializer;
+//! - [`dag`]: the true DAG IR (named value edges, multi-input `Add`/
+//!   `Concat`, subgraph fusion legality, declarative rewrites, `.dlm` v2) —
+//!   DESIGN.md §13. Linear chains remain first-class: a pure-chain DAG
+//!   lowers back onto [`Model`] bit-identically.
 
+pub mod dag;
 pub mod layer;
 pub mod model;
 pub mod format;
 
+pub use format::DlmError;
 pub use layer::{ConvSpec, FcSpec, Layer, LayerKind, TensorShape};
 pub use model::{Model, ModelStats};

@@ -15,8 +15,8 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`graph`] | layer-level IR, `.dlm` model format, op-count math (Eq. 1/2) |
-//! | [`zoo`] | built-in models: ResNet-18/50, VGG-19, AlexNet, MobileNetV2, synthetics |
+//! | [`graph`] | layer-level IR, the branching DAG IR + graph rewrites, `.dlm` v1/v2 model format, op-count math (Eq. 1/2) (rust/docs/DESIGN.md §13) |
+//! | [`zoo`] | built-in models: ResNet-18/50, VGG-19, AlexNet, MobileNetV2, synthetics, plus true-DAG ResNet variants |
 //! | [`microbench`] | synthesized layer sweeps (the paper's Section II methodology) |
 //! | [`accel`] | the accelerator performance-simulator substrate + the hardware-target registry (rust/docs/DESIGN.md §6, §11) |
 //! | [`perfmodel`] | roofline, `OpCount_critical`, the `MP(C, Op)` scorer (Eq. 5) |
@@ -49,6 +49,19 @@
 //! let outcome = request.run(&mut Algorithm1).expect("tuning");
 //! println!("{}: {} blocks, {:.1} FPS predicted",
 //!          model.name, outcome.schedule.num_blocks(), outcome.fps());
+//!
+//! // Branching models are first-class: a DAG workload linearizes to a
+//! // topological layer order plus the set of fusion-legal cut points, and
+//! // every backend honors the constraint (rust/docs/DESIGN.md §13).
+//! let dag = zoo::resnet18_dag();
+//! let lin = linearize(&dag).expect("valid dag");
+//! let request = TuningRequest::new(&sim, &lin.model);
+//! let request = match lin.cuts {
+//!     Some(cuts) => request.allowed_cuts(cuts),
+//!     None => request, // pure chain: the unconstrained path, bit-identical
+//! };
+//! let outcome = request.run(&mut Algorithm1).expect("tuning");
+//! println!("{}: {} blocks", dag.name, outcome.schedule.num_blocks());
 //! ```
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
@@ -80,7 +93,10 @@ pub mod prelude {
                            Target, TargetError};
     pub use crate::coordinator::{self, Engine};
     pub use crate::cost::{CostEngine, CostStats};
-    pub use crate::graph::{Layer, LayerKind, Model};
+    pub use crate::graph::dag::{linearize, load_dlm, to_dlm_v2, DagBuilder,
+                                DagModel, DagNode, DagOp, Linearization,
+                                LoadedModel};
+    pub use crate::graph::{DlmError, Layer, LayerKind, Model};
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;
     pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};

@@ -107,6 +107,66 @@ pub fn dlfusion_schedule(model: &Model, spec: &AcceleratorSpec) -> Schedule {
     dlfusion_schedule_with(model, spec, &AlgorithmParams::for_spec(spec))
 }
 
+/// Algorithm 1 restricted to a set of legal block boundaries. `allowed`
+/// has length `n + 1`; `allowed[p]` answers "may a block end before layer
+/// `p`" (positions 0 and `n` must be legal). The walk is the same greedy
+/// accumulation, but a block only closes at a boundary that is both past
+/// the op-count threshold *and* legal — at an illegal boundary the block
+/// keeps extending and the threshold is re-checked one layer later. This
+/// is how DAG workloads run the heuristic: the linearizer's fusion-legal
+/// cut set keeps every block from straddling a branching region. With an
+/// all-`true` mask the walk is statement-for-statement
+/// [`dlfusion_schedule_with`] — bit-identical schedules.
+pub fn dlfusion_schedule_masked(model: &Model, spec: &AcceleratorSpec,
+                                params: &AlgorithmParams,
+                                allowed: &[bool]) -> Schedule {
+    let n = model.num_layers();
+    assert!(n > 0, "empty model");
+    assert_eq!(allowed.len(), n + 1, "mask covers every boundary");
+    assert!(allowed[0] && allowed[n], "model ends must be legal cuts");
+    let mut blocks: Vec<Block> = Vec::new();
+    let mut block_start = 0usize;
+    let mut sum_op = 0.0f64;
+    let mut mp_acc = 0.0f64;
+    let mut block_size = 0usize;
+
+    for i in 0..n {
+        let layer = &model.layers[i];
+        if layer.is_compute() {
+            let current_mp = params.mp_model.select_layer(spec, layer);
+            sum_op += layer.op_gops();
+            mp_acc += current_mp as f64;
+            block_size += 1;
+        }
+        if block_size == 0 {
+            continue;
+        }
+        let avg_mp = mp_acc / block_size as f64;
+        if sum_op / avg_mp >= params.opcount_critical && allowed[i + 1] {
+            blocks.push(Block {
+                start: block_start,
+                end: i + 1,
+                mp: floor_pow2(avg_mp, spec.num_cores),
+            });
+            block_start = i + 1;
+            sum_op = 0.0;
+            mp_acc = 0.0;
+            block_size = 0;
+        }
+    }
+    if block_start < n {
+        let mp = if block_size > 0 {
+            floor_pow2(mp_acc / block_size as f64, spec.num_cores)
+        } else {
+            1
+        };
+        blocks.push(Block { start: block_start, end: n, mp });
+    }
+    let schedule = Schedule::new(blocks);
+    debug_assert!(schedule.validate(n, spec.num_cores).is_ok());
+    schedule
+}
+
 /// Line 14: `2^floor(log2(avg_mp))`, clamped to `[1, max]`.
 fn floor_pow2(avg_mp: f64, max: usize) -> usize {
     if avg_mp < 1.0 {
@@ -230,6 +290,46 @@ mod tests {
         let s = spec();
         let m = zoo::resnet18();
         assert_eq!(dlfusion_schedule(&m, &s), dlfusion_schedule(&m, &s));
+    }
+
+    #[test]
+    fn all_legal_mask_is_bit_identical_to_unmasked() {
+        let s = spec();
+        for m in zoo::all_models() {
+            let params = AlgorithmParams::for_spec(&s);
+            let mask = vec![true; m.num_layers() + 1];
+            assert_eq!(
+                dlfusion_schedule_masked(&m, &s, &params, &mask),
+                dlfusion_schedule_with(&m, &s, &params),
+                "{}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn masked_walk_only_cuts_at_legal_boundaries() {
+        let s = spec();
+        let m = zoo::identical_conv_model("t", ConvSpec::same(256, 256, 56, 3), 16);
+        let n = m.num_layers();
+        // Only every fourth boundary (plus the ends) is legal; a tight
+        // threshold would otherwise cut almost everywhere.
+        let mut mask = vec![false; n + 1];
+        for p in (0..=n).step_by(4) {
+            mask[p] = true;
+        }
+        mask[0] = true;
+        mask[n] = true;
+        let params = AlgorithmParams {
+            opcount_critical: 0.2,
+            mp_model: MpModel::default(),
+        };
+        let sched = dlfusion_schedule_masked(&m, &s, &params, &mask);
+        sched.validate(n, s.num_cores).unwrap();
+        assert!(sched.num_blocks() >= 2, "{}", sched.summary());
+        for b in &sched.blocks {
+            assert!(mask[b.start] && mask[b.end], "illegal boundary: {b:?}");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod algorithm;
 pub mod strategies;
 pub mod space;
 
-pub use algorithm::{dlfusion_schedule, AlgorithmParams};
+pub use algorithm::{dlfusion_schedule, dlfusion_schedule_masked, AlgorithmParams};
 pub use schedule::{Block, Schedule};
 pub use strategies::{run_strategy_with, strategy_schedule_with, Strategy};
 #[allow(deprecated)]

@@ -67,13 +67,39 @@ pub fn anneal_with(engine: &mut CostEngine, cfg: &AnnealConfig,
 pub fn anneal_budgeted(engine: &mut CostEngine, cfg: &AnnealConfig,
                        init: Option<Schedule>, max_evals: Option<u64>,
                        max_wall_us: Option<u64>) -> (Schedule, f64, bool) {
+    anneal_masked(engine, cfg, init, None, max_evals, max_wall_us)
+}
+
+/// The walk restricted to a fusion-legal boundary mask (the DAG
+/// linearizer's cut set — rust/docs/DESIGN.md §13): splits only land on
+/// legal positions (a split with no legal interior point is a no-op move),
+/// merges and MP nudges never create boundaries, and the default initial
+/// state is the finest legal partition at MP 1. A provided `init` must
+/// already be cut-aligned. `allowed = None` is [`anneal_budgeted`] exactly;
+/// an all-`true` mask consumes the identical RNG stream (same spans, same
+/// draws), so the trajectory is bit-identical either way.
+pub fn anneal_masked(engine: &mut CostEngine, cfg: &AnnealConfig,
+                     init: Option<Schedule>, allowed: Option<&[bool]>,
+                     max_evals: Option<u64>,
+                     max_wall_us: Option<u64>) -> (Schedule, f64, bool) {
     let n = engine.model().num_layers();
     let max_mp = engine.sim().spec.num_cores;
+    if let Some(a) = allowed {
+        assert_eq!(a.len(), n + 1, "mask covers every boundary");
+        assert!(a[0] && a[n], "model ends must be legal cuts");
+    }
     let t0 = std::time::Instant::now();
     let queries0 = engine.local_stats().queries();
     let mut rng = XorShiftRng::new(cfg.seed);
-    let mut cur = init.unwrap_or_else(|| Schedule::layerwise(n, 1));
+    let mut cur = init.unwrap_or_else(|| match allowed {
+        None => Schedule::layerwise(n, 1),
+        Some(a) => finest_legal_partition(n, a),
+    });
     debug_assert!(cur.validate(n, max_mp).is_ok());
+    debug_assert!(
+        allowed.map_or(true, |a| cur.blocks.iter().all(|b| a[b.start] && a[b.end])),
+        "initial schedule must sit on legal cut positions"
+    );
     let mut cur_cost = engine.schedule_cost(&cur);
     let mut best = cur.clone();
     let mut best_cost = cur_cost;
@@ -93,7 +119,7 @@ pub fn anneal_budgeted(engine: &mut CostEngine, cfg: &AnnealConfig,
                 break;
             }
         }
-        let (cand, changed) = propose(&cur, &mut rng, max_mp);
+        let (cand, changed) = propose_masked(&cur, &mut rng, max_mp, allowed);
         let cand_cost = engine.delta_cost(&cand, &changed);
         let accept = cand_cost < cur_cost
             || rng.next_f64() < (-(cand_cost - cur_cost) / temp.max(1e-12)).exp();
@@ -110,12 +136,39 @@ pub fn anneal_budgeted(engine: &mut CostEngine, cfg: &AnnealConfig,
     (best, best_cost, truncated)
 }
 
+/// The finest partition whose boundaries are all legal, at MP 1 — the
+/// masked walk's counterpart of `Schedule::layerwise(n, 1)` (and exactly it
+/// when every boundary is legal).
+fn finest_legal_partition(n: usize, allowed: &[bool]) -> Schedule {
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    for p in 1..=n {
+        if allowed[p] {
+            blocks.push(Block { start, end: p, mp: 1 });
+            start = p;
+        }
+    }
+    Schedule::new(blocks)
+}
+
 /// One random neighbourhood move; always yields a valid schedule. Returns
 /// the candidate plus the indices (into the *candidate's* block list) of the
 /// blocks the move created — every other block is carried over verbatim, so
 /// an engine that has costed the parent schedule re-computes only these.
 fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize)
            -> (Schedule, Vec<usize>) {
+    propose_masked(s, rng, max_mp, None)
+}
+
+/// [`propose`] under an optional boundary mask. Splits draw from the
+/// block's *legal* interior positions (under an all-`true` mask that range
+/// has the same size as the unmasked draw, so the RNG stream — and
+/// therefore the whole trajectory — is bit-identical); a block with no
+/// legal interior point yields the unchanged schedule, like the existing
+/// len-1 split. Merges and MP nudges only ever remove or keep boundaries,
+/// so they need no masking.
+fn propose_masked(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize,
+                  allowed: Option<&[bool]>) -> (Schedule, Vec<usize>) {
     let mut blocks = s.blocks.clone();
     let mut changed = Vec::with_capacity(2);
     match rng.gen_usize(0, 2) {
@@ -124,7 +177,17 @@ fn propose(s: &Schedule, rng: &mut XorShiftRng, max_mp: usize)
             let bi = rng.gen_usize(0, blocks.len() - 1);
             let b = blocks[bi];
             if b.len() >= 2 {
-                let cut = b.start + rng.gen_usize(1, b.len() - 1);
+                let cut = match allowed {
+                    None => b.start + rng.gen_usize(1, b.len() - 1),
+                    Some(a) => {
+                        let choices: Vec<usize> =
+                            (b.start + 1..b.end).filter(|&p| a[p]).collect();
+                        if choices.is_empty() {
+                            return (Schedule::new(blocks), changed);
+                        }
+                        choices[rng.gen_usize(0, choices.len() - 1)]
+                    }
+                };
                 blocks[bi] = Block { start: b.start, end: cut, mp: b.mp };
                 blocks.insert(bi + 1, Block { start: cut, end: b.end, mp: b.mp });
                 changed.extend([bi, bi + 1]);
@@ -207,6 +270,42 @@ mod tests {
             next.validate(m.num_layers(), s.spec.num_cores).unwrap();
             assert!(changed.iter().all(|&bi| bi < next.blocks.len()));
             cur = next;
+        }
+    }
+
+    #[test]
+    fn all_legal_mask_is_bit_identical_to_unmasked() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let cfg = AnnealConfig { iterations: 300, ..Default::default() };
+        let mask = vec![true; m.num_layers() + 1];
+        let mut e1 = CostEngine::new(&s, &m);
+        let (a, ca, _) = anneal_budgeted(&mut e1, &cfg, None, None, None);
+        let mut e2 = CostEngine::new(&s, &m);
+        let (b, cb, _) = anneal_masked(&mut e2, &cfg, None, Some(&mask), None, None);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+        assert_eq!(e1.stats(), e2.stats());
+    }
+
+    #[test]
+    fn masked_walk_stays_on_legal_boundaries() {
+        let s = sim();
+        let m = zoo::resnet18();
+        let n = m.num_layers();
+        let mut mask = vec![false; n + 1];
+        for p in (0..=n).step_by(5) {
+            mask[p] = true;
+        }
+        mask[n] = true;
+        let cfg = AnnealConfig { iterations: 400, ..Default::default() };
+        let mut engine = CostEngine::new(&s, &m);
+        let (sched, cost, _) =
+            anneal_masked(&mut engine, &cfg, None, Some(&mask), None, None);
+        sched.validate(n, s.spec.num_cores).unwrap();
+        assert!(cost.is_finite() && cost > 0.0);
+        for b in &sched.blocks {
+            assert!(mask[b.start] && mask[b.end], "illegal boundary: {b:?}");
         }
     }
 

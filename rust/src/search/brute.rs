@@ -62,6 +62,50 @@ impl BlockRule {
     }
 }
 
+/// Block admissibility under a size rule, optionally restricted to a
+/// fusion-legal boundary mask (the DAG linearizer's legal cut set —
+/// rust/docs/DESIGN.md §13). `allowed[p]` answers "may a block boundary sit
+/// before layer `p`"; positions 0 and n must be legal. Under a mask the
+/// size rule counts fusion-legal *segments* (`cum[j] - cum[i]`) instead of
+/// raw layers: the segments are the units the partition can actually vary
+/// over, so the multiple-of-four reduction keeps meaning (and stays
+/// feasible — a residual block of 7 layers is one segment, not an
+/// impossible non-multiple-of-four span). With every boundary legal the
+/// segment count *is* the layer count, so the unmasked DP is unchanged bit
+/// for bit.
+struct CutSpace<'m> {
+    rule: BlockRule,
+    allowed: Option<&'m [bool]>,
+    /// `cum[p]` = number of legal boundaries in `1..=p`; empty when unmasked.
+    cum: Vec<usize>,
+}
+
+impl<'m> CutSpace<'m> {
+    fn new(n: usize, rule: BlockRule, allowed: Option<&'m [bool]>) -> CutSpace<'m> {
+        let cum = match allowed {
+            None => Vec::new(),
+            Some(a) => {
+                assert_eq!(a.len(), n + 1, "mask covers every boundary");
+                assert!(a[0] && a[n], "model ends must be legal cuts");
+                let mut cum = vec![0usize; n + 1];
+                for p in 1..=n {
+                    cum[p] = cum[p - 1] + usize::from(a[p]);
+                }
+                cum
+            }
+        };
+        CutSpace { rule, allowed, cum }
+    }
+
+    /// Is `[i, j)` an admissible block of an `n`-layer model?
+    fn admissible(&self, i: usize, j: usize, n: usize) -> bool {
+        match self.allowed {
+            None => self.rule.allowed(j - i, j == n),
+            Some(a) => a[i] && a[j] && self.rule.allowed(self.cum[j] - self.cum[i], j == n),
+        }
+    }
+}
+
 /// An evaluation budget stopped the DP before it reached the optimum (a
 /// partial DP has no usable result, so the caller gets an error, not a
 /// schedule — see rust/docs/DESIGN.md §8 budget semantics).
@@ -120,7 +164,7 @@ pub fn oracle_schedule_full_with(engine: &mut CostEngine) -> (Schedule, SearchSt
 /// [`crate::tuner::OracleDp`], which validates the request first.
 pub fn oracle_schedule_constrained(engine: &mut CostEngine, mp_set: &[usize],
                                    rule: BlockRule) -> (Schedule, SearchStats) {
-    match dp_search(engine, mp_set, rule, None, 1) {
+    match dp_search(engine, mp_set, rule, None, None, 1) {
         Ok(r) => r,
         Err(_) => unreachable!("unbudgeted DP cannot exhaust a budget"),
     }
@@ -131,7 +175,7 @@ pub fn oracle_schedule_constrained(engine: &mut CostEngine, mp_set: &[usize],
 pub fn oracle_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
                                 rule: BlockRule, max_evals: Option<u64>)
                                 -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
-    dp_search(engine, mp_set, rule, max_evals, 1)
+    dp_search(engine, mp_set, rule, None, max_evals, 1)
 }
 
 /// The budgeted DP with intra-search parallelism: with `threads > 1` and no
@@ -147,27 +191,40 @@ pub fn oracle_schedule_threaded(engine: &mut CostEngine, mp_set: &[usize],
                                 rule: BlockRule, max_evals: Option<u64>,
                                 threads: usize)
                                 -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
-    dp_search(engine, mp_set, rule, max_evals, threads)
+    dp_search(engine, mp_set, rule, None, max_evals, threads)
 }
 
-/// Cut positions the DP can reach from layer 0 under `rule` — exactly the
+/// The DP restricted to a fusion-legal boundary mask (see [`CutSpace`]):
+/// every block's endpoints must be legal positions and the size rule counts
+/// legal segments. `allowed = None` is exactly [`oracle_schedule_threaded`];
+/// an all-`true` mask admits the same blocks, so schedules, stats, and the
+/// engine's counters are bit-identical either way.
+pub fn oracle_schedule_masked(engine: &mut CostEngine, mp_set: &[usize],
+                              rule: BlockRule, allowed: Option<&[bool]>,
+                              max_evals: Option<u64>, threads: usize)
+                              -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
+    dp_search(engine, mp_set, rule, allowed, max_evals, threads)
+}
+
+/// Cut positions the DP can reach from layer 0 under `space` — exactly the
 /// `dp[i].is_infinite()` skips of the recurrence, derivable up front
 /// because block costs are finite.
-fn reachable_cuts(n: usize, rule: BlockRule) -> Vec<bool> {
+fn reachable_cuts(n: usize, space: &CutSpace<'_>) -> Vec<bool> {
     let mut reach = vec![false; n + 1];
     reach[0] = true;
     for j in 1..=n {
-        reach[j] = (0..j).any(|i| reach[i] && rule.allowed(j - i, j == n));
+        reach[j] = (0..j).any(|i| reach[i] && space.admissible(i, j, n));
     }
     reach
 }
 
 fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
-             max_evals: Option<u64>, threads: usize)
+             allowed: Option<&[bool]>, max_evals: Option<u64>, threads: usize)
              -> Result<(Schedule, SearchStats), DpBudgetExceeded> {
     let n = engine.model().num_layers();
     assert!(n >= 1);
     assert!(!mp_set.is_empty());
+    let space = CutSpace::new(n, sizes, allowed);
     let t0 = Instant::now();
     let engine_stats0 = engine.local_stats();
     let mut stats = SearchStats::default();
@@ -178,11 +235,11 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
     // call per admissible block either way.
     let mut rows: HashMap<(usize, usize), Vec<f64>> = HashMap::new();
     if threads > 1 && max_evals.is_none() {
-        let reach = reachable_cuts(n, sizes);
+        let reach = reachable_cuts(n, &space);
         let mut pairs = Vec::new();
         for j in 1..=n {
             for i in 0..j {
-                if reach[i] && sizes.allowed(j - i, j == n) {
+                if reach[i] && space.admissible(i, j, n) {
                     pairs.push((i, j));
                 }
             }
@@ -201,8 +258,7 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
 
     for j in 1..=n {
         for i in 0..j {
-            let len = j - i;
-            if !sizes.allowed(len, j == n) {
+            if !space.admissible(i, j, n) {
                 continue;
             }
             if dp[i].is_infinite() {
@@ -445,6 +501,108 @@ mod tests {
             // even the engines' merged counters agree.
             assert_eq!(seq.stats(), par.stats(), "{}", m.name);
         }
+    }
+
+    #[test]
+    fn all_legal_mask_is_bit_identical_to_unmasked() {
+        let s = sim();
+        for m in [zoo::resnet18(), zoo::alexnet()] {
+            let mps = s.spec.reduced_mp_set();
+            let mask = vec![true; m.num_layers() + 1];
+            let mut e1 = CostEngine::new(&s, &m);
+            let (a, sta) = oracle_schedule_threaded(
+                &mut e1, &mps, BlockRule::MultipleOfFour, None, 1).unwrap();
+            let mut e2 = CostEngine::new(&s, &m);
+            let (b, stb) = oracle_schedule_masked(
+                &mut e2, &mps, BlockRule::MultipleOfFour, Some(&mask), None, 1)
+                .unwrap();
+            assert_eq!(a, b, "{}", m.name);
+            assert_eq!(sta.evaluations, stb.evaluations, "{}", m.name);
+            assert_eq!(sta.blocks_considered, stb.blocks_considered, "{}", m.name);
+            assert_eq!(sta.cache_hits, stb.cache_hits, "{}", m.name);
+            assert_eq!(sta.cache_misses, stb.cache_misses, "{}", m.name);
+            assert_eq!(e1.stats(), e2.stats(), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn masked_dp_respects_the_mask_and_counts_segments() {
+        let s = sim();
+        let m = zoo::identical_conv_model("t", ConvSpec::same(64, 64, 28, 3), 16);
+        let n = m.num_layers();
+        // Legal boundaries every 2 layers: 16 segments of 2 layers each.
+        let mut mask = vec![false; n + 1];
+        for p in (0..=n).step_by(2) {
+            mask[p] = true;
+        }
+        let mps = s.spec.reduced_mp_set();
+        let mut engine = CostEngine::new(&s, &m);
+        let (sched, _) = oracle_schedule_masked(
+            &mut engine, &mps, BlockRule::MultipleOfFour, Some(&mask), None, 1)
+            .unwrap();
+        sched.validate(n, s.spec.num_cores).unwrap();
+        let segs = |b: &Block| (b.start + 1..=b.end).filter(|&p| mask[p]).count();
+        for (i, b) in sched.blocks.iter().enumerate() {
+            assert!(mask[b.start] && mask[b.end], "illegal boundary: {b:?}");
+            let last = i == sched.blocks.len() - 1;
+            assert!(segs(b) % 4 == 0 || last,
+                    "block {b:?} spans {} segments", segs(b));
+        }
+    }
+
+    #[test]
+    fn masked_dp_stays_feasible_on_sparse_cut_sets() {
+        // Residual-style legality: blocks of 7 and 9 layers between legal
+        // boundaries. Raw multiple-of-four would be infeasible everywhere
+        // except the single block; segment counting keeps a real search.
+        let s = sim();
+        let m = zoo::resnet18();
+        let n = m.num_layers();
+        let legal = [0usize, 2, 7, 12, 19, 26, 33, 40, n];
+        let mut mask = vec![false; n + 1];
+        for &p in &legal {
+            mask[p] = true;
+        }
+        let mps = s.spec.reduced_mp_set();
+        let mut engine = CostEngine::new(&s, &m);
+        let (sched, st) = oracle_schedule_masked(
+            &mut engine, &mps, BlockRule::MultipleOfFour, Some(&mask), None, 1)
+            .unwrap();
+        sched.validate(n, s.spec.num_cores).unwrap();
+        for b in &sched.blocks {
+            assert!(mask[b.start] && mask[b.end], "illegal boundary: {b:?}");
+        }
+        // The mask admits far fewer candidate blocks than the free DP.
+        let mut free = CostEngine::new(&s, &m);
+        let (_, st_free) = oracle_schedule_with(&mut free);
+        assert!(st.blocks_considered < st_free.blocks_considered);
+    }
+
+    #[test]
+    fn threaded_masked_dp_is_bit_identical_to_sequential() {
+        let s = sim();
+        let m = zoo::resnet18();
+        let n = m.num_layers();
+        let mut mask = vec![false; n + 1];
+        for p in (0..=n).step_by(3) {
+            mask[p] = true;
+        }
+        mask[n] = true;
+        let mps = s.spec.reduced_mp_set();
+        let mut seq = CostEngine::new(&s, &m);
+        let (a, sta) = oracle_schedule_masked(
+            &mut seq, &mps, BlockRule::MultipleOfFour, Some(&mask), None, 1)
+            .unwrap();
+        let mut par = CostEngine::new(&s, &m);
+        let (b, stb) = oracle_schedule_masked(
+            &mut par, &mps, BlockRule::MultipleOfFour, Some(&mask), None, 4)
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(sta.evaluations, stb.evaluations);
+        assert_eq!(sta.blocks_considered, stb.blocks_considered);
+        assert_eq!(sta.cache_hits, stb.cache_hits);
+        assert_eq!(sta.cache_misses, stb.cache_misses);
+        assert_eq!(seq.stats(), par.stats());
     }
 
     #[test]

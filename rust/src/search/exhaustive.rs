@@ -81,7 +81,7 @@ pub fn exhaustive_schedule_with(engine: &mut CostEngine, mp_set: &[usize])
 pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
                                     max_evals: Option<u64>)
                                     -> Result<(Schedule, SearchStats), ExhaustiveError> {
-    enumerate(engine, mp_set, max_evals, 1)
+    enumerate(engine, mp_set, None, max_evals, 1)
 }
 
 /// Exhaustive enumeration with intra-search parallelism: with `threads > 1`
@@ -95,11 +95,24 @@ pub fn exhaustive_schedule_budgeted(engine: &mut CostEngine, mp_set: &[usize],
 pub fn exhaustive_schedule_threaded(engine: &mut CostEngine, mp_set: &[usize],
                                     max_evals: Option<u64>, threads: usize)
                                     -> Result<(Schedule, SearchStats), ExhaustiveError> {
-    enumerate(engine, mp_set, max_evals, threads)
+    enumerate(engine, mp_set, None, max_evals, threads)
 }
 
-fn enumerate(engine: &mut CostEngine, mp_set: &[usize], max_evals: Option<u64>,
-             threads: usize)
+/// Exhaustive enumeration restricted to a fusion-legal boundary mask (the
+/// DAG linearizer's cut set — rust/docs/DESIGN.md §13): cut masks placing a
+/// boundary at an illegal position are skipped before any evaluation, so
+/// `space_visited` counts only the legal joint space. `allowed = None` is
+/// exactly [`exhaustive_schedule_threaded`]; an all-`true` mask skips
+/// nothing, so results and every counter are bit-identical either way.
+pub fn exhaustive_schedule_masked(engine: &mut CostEngine, mp_set: &[usize],
+                                  allowed: Option<&[bool]>,
+                                  max_evals: Option<u64>, threads: usize)
+                                  -> Result<(Schedule, SearchStats), ExhaustiveError> {
+    enumerate(engine, mp_set, allowed, max_evals, threads)
+}
+
+fn enumerate(engine: &mut CostEngine, mp_set: &[usize],
+             allowed: Option<&[bool]>, max_evals: Option<u64>, threads: usize)
              -> Result<(Schedule, SearchStats), ExhaustiveError> {
     let n = engine.model().num_layers();
     if n < 1 || n > MAX_EXHAUSTIVE_LAYERS {
@@ -107,6 +120,10 @@ fn enumerate(engine: &mut CostEngine, mp_set: &[usize], max_evals: Option<u64>,
     }
     if mp_set.is_empty() {
         return Err(ExhaustiveError::EmptyMpSet);
+    }
+    if let Some(a) = allowed {
+        assert_eq!(a.len(), n + 1, "mask covers every boundary");
+        assert!(a[0] && a[n], "model ends must be legal cuts");
     }
     let t0 = Instant::now();
     let engine_stats0 = engine.local_stats();
@@ -121,7 +138,9 @@ fn enumerate(engine: &mut CostEngine, mp_set: &[usize], max_evals: Option<u64>,
         let mut pairs = Vec::new();
         for i in 0..n {
             for j in (i + 1)..=n {
-                pairs.push((i, j));
+                if allowed.map_or(true, |a| a[i] && a[j]) {
+                    pairs.push((i, j));
+                }
             }
         }
         let shared: &CostEngine = engine;
@@ -133,6 +152,13 @@ fn enumerate(engine: &mut CostEngine, mp_set: &[usize], max_evals: Option<u64>,
 
     // Each mask bit k set = a cut after layer k.
     for mask in 0u32..(1 << (n - 1)) {
+        // Under a boundary mask, partitions cutting at an illegal position
+        // are skipped outright (the `None` path iterates identically).
+        if let Some(a) = allowed {
+            if (0..(n - 1)).any(|k| mask & (1 << k) != 0 && !a[k + 1]) {
+                continue;
+            }
+        }
         // Build block ranges.
         let mut ranges = Vec::new();
         let mut start = 0usize;
@@ -347,6 +373,83 @@ mod tests {
         assert_eq!(st_seq.space_visited, st_par.space_visited);
         assert_eq!(st_seq.cache_hits, st_par.cache_hits);
         assert_eq!(st_seq.cache_misses, st_par.cache_misses);
+    }
+
+    #[test]
+    fn all_legal_mask_is_bit_identical_to_unmasked() {
+        let sim = Simulator::new(crate::accel::Target::mlu100());
+        let m = conv_only(6);
+        let mp_set = vec![1, 2, 4, 8];
+        let mask = vec![true; 7];
+        let mut e1 = CostEngine::new(&sim, &m);
+        let (a, sta) = exhaustive_schedule_with(&mut e1, &mp_set).unwrap();
+        let mut e2 = CostEngine::new(&sim, &m);
+        let (b, stb) =
+            exhaustive_schedule_masked(&mut e2, &mp_set, Some(&mask), None, 1).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(sta.evaluations, stb.evaluations);
+        assert_eq!(sta.blocks_considered, stb.blocks_considered);
+        assert_eq!(sta.space_visited, stb.space_visited);
+        assert_eq!(sta.cache_hits, stb.cache_hits);
+        assert_eq!(sta.cache_misses, stb.cache_misses);
+        assert_eq!(e1.stats(), e2.stats());
+    }
+
+    #[test]
+    fn masked_enumeration_skips_illegal_partitions() {
+        let sim = Simulator::new(crate::accel::Target::mlu100());
+        let m = conv_only(6);
+        let mp_set = vec![1, 2, 4, 8];
+        // Only boundaries 0, 3, 6 are legal: 4 legal partitions of the
+        // 2^5 = 32 total.
+        let mask = vec![true, false, false, true, false, false, true];
+        let mut engine = CostEngine::new(&sim, &m);
+        let (sched, st) =
+            exhaustive_schedule_masked(&mut engine, &mp_set, Some(&mask), None, 1)
+                .unwrap();
+        sched.validate(6, sim.spec.num_cores).unwrap();
+        for b in &sched.blocks {
+            assert!(mask[b.start] && mask[b.end], "illegal boundary: {b:?}");
+        }
+        // Legal partitions: {}, {3} as interior cut sets -> 2 partitions;
+        // visited space = 4^1 + 4^2.
+        assert_eq!(st.space_visited, 4 + 16);
+        // The masked optimum equals brute force over the legal partitions:
+        // one block [0,6) or two blocks [0,3)+[3,6), best MP each.
+        let free_block = |i: usize, j: usize| {
+            mp_set
+                .iter()
+                .map(|&mp| engine.block_latency(i, j, mp))
+                .fold(f64::INFINITY, f64::min)
+        };
+        let one = free_block(0, 6);
+        let two = free_block(0, 3) + free_block(3, 6);
+        let best = one.min(two);
+        let got: f64 = sched
+            .blocks
+            .iter()
+            .map(|b| engine.block_latency(b.start, b.end, b.mp))
+            .sum();
+        assert!((got - best).abs() < 1e-12, "got {got} vs best {best}");
+    }
+
+    #[test]
+    fn threaded_masked_enumeration_matches_sequential() {
+        let sim = Simulator::new(crate::accel::Target::mlu100());
+        let m = conv_only(7);
+        let mp_set = vec![1, 2, 4, 8];
+        let mask = vec![true, false, true, true, false, true, false, true];
+        let mut seq = CostEngine::new(&sim, &m);
+        let (a, sta) =
+            exhaustive_schedule_masked(&mut seq, &mp_set, Some(&mask), None, 1).unwrap();
+        let mut par = CostEngine::new(&sim, &m);
+        let (b, stb) =
+            exhaustive_schedule_masked(&mut par, &mp_set, Some(&mask), None, 4).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(sta.evaluations, stb.evaluations);
+        assert_eq!(sta.space_visited, stb.space_visited);
+        assert_eq!(sta.cache_hits, stb.cache_hits);
+        assert_eq!(sta.cache_misses, stb.cache_misses);
     }
 
     #[test]

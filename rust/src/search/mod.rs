@@ -26,12 +26,13 @@ pub mod brute;
 pub mod exhaustive;
 pub mod annealing;
 
-pub use annealing::{anneal_budgeted, anneal_with, AnnealConfig};
+pub use annealing::{anneal_budgeted, anneal_masked, anneal_with, AnnealConfig};
 pub use brute::{full_mp_set, oracle_schedule_budgeted, oracle_schedule_constrained,
-                oracle_schedule_full_with, oracle_schedule_with, BlockRule,
-                DpBudgetExceeded, SearchStats};
-pub use exhaustive::{exhaustive_schedule_budgeted, exhaustive_schedule_with,
-                     ExhaustiveError, MAX_EXHAUSTIVE_LAYERS};
+                oracle_schedule_full_with, oracle_schedule_masked,
+                oracle_schedule_with, BlockRule, DpBudgetExceeded, SearchStats};
+pub use exhaustive::{exhaustive_schedule_budgeted, exhaustive_schedule_masked,
+                     exhaustive_schedule_with, ExhaustiveError,
+                     MAX_EXHAUSTIVE_LAYERS};
 #[allow(deprecated)]
 pub use annealing::anneal;
 #[allow(deprecated)]

@@ -12,7 +12,7 @@
 use std::time::Instant;
 
 use crate::cost::CostStats;
-use crate::optimizer::algorithm::dlfusion_schedule_with;
+use crate::optimizer::algorithm::{dlfusion_schedule_masked, dlfusion_schedule_with};
 use crate::optimizer::schedule::Schedule;
 use crate::optimizer::strategies::{strategy_schedule_with, Strategy};
 use crate::search::annealing;
@@ -104,7 +104,11 @@ impl Algorithm1 {
         let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
         let params = cx.params;
-        let schedule = dlfusion_schedule_with(cx.engine.model(), &cx.engine.sim().spec, &params);
+        let spec = &cx.engine.sim().spec;
+        let schedule = match cx.checked_cut_mask()? {
+            Some(mask) => dlfusion_schedule_masked(cx.engine.model(), spec, &params, &mask),
+            None => dlfusion_schedule_with(cx.engine.model(), spec, &params),
+        };
         let predicted_ms = cx.engine.schedule_cost(&schedule);
         let stats = delta_stats(before, cx.engine.local_stats(),
                                 t0.elapsed().as_micros() as u64, false);
@@ -135,6 +139,16 @@ pub struct TableStrategy(pub Strategy);
 impl TableStrategy {
     fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
                      -> Result<TuningOutcome, TuningError> {
+        // The Table III strategies pin the paper's linear-chain definitions;
+        // a cut-constrained (DAG) workload has no Table III row.
+        if cx.allowed_cuts.is_some() {
+            return Err(TuningError::InvalidRequest(
+                "Table III strategies are defined over linear chains; \
+                 cut-constrained (DAG) workloads need algorithm1, the \
+                 oracle DP, annealing, or exhaustive"
+                    .into(),
+            ));
+        }
         let t0 = Instant::now();
         let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
@@ -221,9 +235,10 @@ impl OracleDp {
         if mps.is_empty() {
             return Err(TuningError::EmptyMpSet);
         }
+        let mask = cx.checked_cut_mask()?;
         let (schedule, st) =
-            brute::oracle_schedule_threaded(&mut cx.engine, &mps, rule,
-                                            cx.budget.max_evaluations, cx.threads)
+            brute::oracle_schedule_masked(&mut cx.engine, &mps, rule, mask.as_deref(),
+                                          cx.budget.max_evaluations, cx.threads)
                 .map_err(|e| TuningError::BudgetExhausted {
                     spent: e.evaluations,
                     budget: e.budget,
@@ -278,10 +293,12 @@ impl Annealer {
         let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
         let cfg = cx.anneal;
-        let (schedule, best_cost, truncated) = annealing::anneal_budgeted(
+        let mask = cx.checked_cut_mask()?;
+        let (schedule, best_cost, truncated) = annealing::anneal_masked(
             &mut cx.engine,
             &cfg,
             self.init.clone(),
+            mask.as_deref(),
             cx.budget.max_evaluations,
             cx.budget.max_wall_us,
         );
@@ -323,8 +340,10 @@ impl Exhaustive {
         let t0 = Instant::now();
         let batch = cx.engine.batch();
         let mps = cx.checked_mps()?;
-        let (schedule, st) = exhaustive::exhaustive_schedule_threaded(
-            &mut cx.engine, &mps, cx.budget.max_evaluations, cx.threads)
+        let mask = cx.checked_cut_mask()?;
+        let (schedule, st) = exhaustive::exhaustive_schedule_masked(
+            &mut cx.engine, &mps, mask.as_deref(),
+            cx.budget.max_evaluations, cx.threads)
             .map_err(|e| match e {
                 ExhaustiveError::ModelTooLarge { layers, max } => {
                     TuningError::ModelTooLarge { layers, max }

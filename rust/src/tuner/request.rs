@@ -55,6 +55,7 @@ pub struct TuningRequest<'a> {
     params: Option<AlgorithmParams>,
     budget: Budget,
     threads: usize,
+    allowed_cuts: Option<Vec<usize>>,
 }
 
 impl<'a> TuningRequest<'a> {
@@ -73,6 +74,7 @@ impl<'a> TuningRequest<'a> {
             params: None,
             budget: Budget::default(),
             threads: 1,
+            allowed_cuts: None,
         }
     }
 
@@ -98,6 +100,19 @@ impl<'a> TuningRequest<'a> {
     /// the paper's multiple-of-four rule.
     pub fn granularity(mut self, rule: BlockRule) -> Self {
         self.granularity = rule;
+        self
+    }
+
+    /// Restrict fusion boundaries to the given cut positions (a position
+    /// `p` means "between layer `p-1` and layer `p`"; 0 and `n` are always
+    /// implied). This is how DAG workloads tune: the linearizer's
+    /// fusion-legal cut set ([`crate::graph::dag::Linearization::cuts`])
+    /// becomes the searchable boundary set, so no block ever straddles a
+    /// branching region. `None` (the default) leaves every boundary legal —
+    /// all backends are bit-identical to their unconstrained selves
+    /// (rust/docs/DESIGN.md §13).
+    pub fn allowed_cuts(mut self, cuts: Vec<usize>) -> Self {
+        self.allowed_cuts = Some(cuts);
         self
     }
 
@@ -173,6 +188,7 @@ impl<'a> TuningRequest<'a> {
                 .unwrap_or_else(|| AlgorithmParams::for_spec(&self.sim.spec)),
             budget: self.budget,
             threads: self.threads,
+            allowed_cuts: self.allowed_cuts.clone(),
         }
     }
 
@@ -204,6 +220,7 @@ impl<'a> TuningRequest<'a> {
             params: self.params,
             budget: self.budget,
             threads: self.threads,
+            allowed_cuts: self.allowed_cuts.clone(),
         }
     }
 }
@@ -219,6 +236,7 @@ pub struct TuningContext<'a> {
     pub(crate) params: AlgorithmParams,
     pub(crate) budget: Budget,
     pub(crate) threads: usize,
+    pub(crate) allowed_cuts: Option<Vec<usize>>,
 }
 
 impl<'a> TuningContext<'a> {
@@ -248,6 +266,7 @@ impl<'a> TuningContext<'a> {
             params: self.params,
             budget: self.budget,
             threads: 1,
+            allowed_cuts: self.allowed_cuts.clone(),
         }
     }
 
@@ -313,6 +332,38 @@ impl<'a> TuningContext<'a> {
         self.budget
     }
 
+    /// The request's cut-position constraint (see
+    /// [`TuningRequest::allowed_cuts`]); `None` means every boundary is
+    /// legal.
+    pub fn allowed_cuts(&self) -> Option<&[usize]> {
+        self.allowed_cuts.as_deref()
+    }
+
+    /// The cut constraint as a per-boundary legality mask of length `n + 1`
+    /// (index `p` = "may a block boundary sit before layer `p`"), validated
+    /// against the model. `Ok(None)` when the request is unconstrained —
+    /// the backends' fast path, bit-identical to the pre-DAG code. The
+    /// model's two ends are always legal whether listed or not.
+    pub(crate) fn checked_cut_mask(&self) -> Result<Option<Vec<bool>>, TuningError> {
+        let cuts = match &self.allowed_cuts {
+            None => return Ok(None),
+            Some(c) => c,
+        };
+        let n = self.engine.model().num_layers();
+        let mut mask = vec![false; n + 1];
+        for &p in cuts {
+            if p > n {
+                return Err(TuningError::InvalidRequest(format!(
+                    "allowed cut position {p} beyond the model's {n} layers"
+                )));
+            }
+            mask[p] = true;
+        }
+        mask[0] = true;
+        mask[n] = true;
+        Ok(Some(mask))
+    }
+
     /// The MP candidate set, validated against the accelerator.
     pub(crate) fn checked_mps(&self) -> Result<Vec<usize>, TuningError> {
         if self.mp_candidates.is_empty() {
@@ -338,5 +389,55 @@ impl<'a> TuningContext<'a> {
             }
         }
         Ok(self.batch_candidates.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Target;
+    use crate::zoo;
+
+    #[test]
+    fn unconstrained_request_has_no_cut_mask() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::alexnet();
+        let cx = TuningRequest::new(&sim, &m).context();
+        assert_eq!(cx.checked_cut_mask().unwrap(), None);
+        assert_eq!(cx.allowed_cuts(), None);
+    }
+
+    #[test]
+    fn cut_mask_marks_positions_and_forces_the_ends() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::alexnet();
+        let n = m.num_layers();
+        let cx = TuningRequest::new(&sim, &m).allowed_cuts(vec![3, 5]).context();
+        let mask = cx.checked_cut_mask().unwrap().unwrap();
+        assert_eq!(mask.len(), n + 1);
+        assert!(mask[0] && mask[n], "ends are always legal");
+        assert!(mask[3] && mask[5]);
+        assert!(!mask[1] && !mask[2] && !mask[4]);
+    }
+
+    #[test]
+    fn out_of_range_cut_position_is_rejected() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::alexnet();
+        let n = m.num_layers();
+        let cx = TuningRequest::new(&sim, &m).allowed_cuts(vec![n + 1]).context();
+        assert!(matches!(cx.checked_cut_mask(),
+                         Err(TuningError::InvalidRequest(_))));
+    }
+
+    #[test]
+    fn cut_constraint_survives_fork_and_for_sim() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::alexnet();
+        let req = TuningRequest::new(&sim, &m).allowed_cuts(vec![4]);
+        assert_eq!(req.context().fork().allowed_cuts(), Some(&[4usize][..]));
+        let sim2 = Simulator::new(Target::mlu100());
+        let re = req.for_sim(&sim2, &m);
+        assert_eq!(re.context().allowed_cuts(), Some(&[4usize][..]));
     }
 }

@@ -13,6 +13,11 @@
 //! the BatchNorm / ReLU / Pool / Add auxiliary layers the real networks
 //! carry; `rust/tests/paper_tables.rs` checks our Eq. 1 totals against the
 //! paper's Table II numbers.
+//!
+//! The ResNets also exist as genuine branching DAGs ([`resnet18_dag`],
+//! [`resnet50_dag`], resolved by [`dag_by_name`]): real residual edges and
+//! true two-input joins, with the same Table II op accounting as the linear
+//! fakes (pinned in `zoo/resnet.rs` tests).
 
 pub mod builder;
 pub mod resnet;
@@ -23,10 +28,11 @@ pub mod synthetic;
 
 pub use alexnet::alexnet;
 pub use mobilenet::mobilenet_v2;
-pub use resnet::{resnet18, resnet50};
+pub use resnet::{resnet18, resnet18_dag, resnet50, resnet50_dag};
 pub use synthetic::{identical_conv_model, mini_cnn, scaled_conv_layer};
 pub use vgg::vgg19;
 
+use crate::graph::dag::DagModel;
 use crate::graph::Model;
 
 /// All Table II evaluation networks, in the paper's order.
@@ -64,6 +70,24 @@ pub fn by_names(list: &str) -> Result<Vec<Model>, String> {
 pub const MODEL_NAMES: &[&str] =
     &["resnet18", "resnet50", "vgg19", "alexnet", "mobilenet", "mini_cnn"];
 
+/// The genuine branching DAG variants of the zoo ResNets (real residual
+/// edges instead of the faked-sequential chains).
+pub fn dag_models() -> Vec<DagModel> {
+    vec![resnet18_dag(), resnet50_dag()]
+}
+
+/// Look a DAG zoo model up by (case-insensitive) name.
+pub fn dag_by_name(name: &str) -> Option<DagModel> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet18-dag" | "resnet18_dag" => Some(resnet18_dag()),
+        "resnet50-dag" | "resnet50_dag" => Some(resnet50_dag()),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`dag_by_name`], for CLI help.
+pub const DAG_MODEL_NAMES: &[&str] = &["resnet18-dag", "resnet50-dag"];
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +115,20 @@ mod tests {
         assert!(by_name("nope").is_none());
         for n in MODEL_NAMES {
             assert!(by_name(n).is_some(), "{n}");
+        }
+    }
+
+    #[test]
+    fn dag_by_name_resolves() {
+        for n in DAG_MODEL_NAMES {
+            assert!(dag_by_name(n).is_some(), "{n}");
+        }
+        assert!(dag_by_name("RESNET18_DAG").is_some());
+        // The dag namespace is disjoint from the linear one.
+        assert!(by_name("resnet18-dag").is_none());
+        assert!(dag_by_name("resnet18").is_none());
+        for d in dag_models() {
+            d.validate().unwrap_or_else(|e| panic!("{}: {e}", d.name));
         }
     }
 

@@ -8,6 +8,7 @@
 //! counts.
 
 use super::builder::NetBuilder;
+use crate::graph::dag::{DagBuilder, DagModel, ValueRef};
 use crate::graph::Model;
 
 /// Skip-path 1x1 projection, linearized after the main path.
@@ -97,9 +98,108 @@ pub fn resnet50() -> Model {
     b.build()
 }
 
+// ---- genuine branching DAG variants ------------------------------------
+//
+// Same networks, but with *real* residual edges: the skip path (identity or
+// strided 1x1 projection) reads the block input, and the join is a true
+// two-input `Add`. Node insertion order mirrors the linear builders' layer
+// order, so the deterministic linearization lays layers out identically;
+// the only per-layer difference is that the downsample projection is the
+// real `c_in -> c_out` conv instead of the grouped fake — whose Eq. 1 cost
+// and weight bytes are equal by construction (see `downsample_proj`).
+
+/// One basic block with a real skip edge.
+fn dag_basic_block(
+    b: &mut DagBuilder,
+    x: &ValueRef,
+    c_out: usize,
+    stride: usize,
+    downsample: bool,
+) -> ValueRef {
+    let m = b.conv_bn_relu(x, c_out, 3, stride, 1, 1);
+    let m = b.conv(&m, c_out, 3, 1, 1, 1);
+    let m = b.bn(&m);
+    let skip = if downsample {
+        let p = b.conv(x, c_out, 1, stride, 0, 1);
+        b.bn(&p)
+    } else {
+        x.clone()
+    };
+    let j = b.add(&[&m, &skip]);
+    b.relu(&j)
+}
+
+/// One bottleneck block with a real skip edge.
+fn dag_bottleneck_block(
+    b: &mut DagBuilder,
+    x: &ValueRef,
+    c_mid: usize,
+    c_out: usize,
+    stride: usize,
+    downsample: bool,
+) -> ValueRef {
+    let m = b.conv_bn_relu(x, c_mid, 1, stride, 0, 1);
+    let m = b.conv_bn_relu(&m, c_mid, 3, 1, 1, 1);
+    let m = b.conv(&m, c_out, 1, 1, 0, 1);
+    let m = b.bn(&m);
+    let skip = if downsample {
+        let p = b.conv(x, c_out, 1, stride, 0, 1);
+        b.bn(&p)
+    } else {
+        x.clone()
+    };
+    let j = b.add(&[&m, &skip]);
+    b.relu(&j)
+}
+
+/// ResNet-18 as a genuine branching DAG.
+pub fn resnet18_dag() -> DagModel {
+    let mut b = DagBuilder::new("resnet18-dag");
+    let x = b.input("image", 224, 224, 3);
+    let x = b.conv_bn_relu(&x, 64, 7, 2, 3, 1);
+    let x = b.pool(&x, 3, 2);
+    let x = dag_basic_block(&mut b, &x, 64, 1, false);
+    let x = dag_basic_block(&mut b, &x, 64, 1, false);
+    let x = dag_basic_block(&mut b, &x, 128, 2, true);
+    let x = dag_basic_block(&mut b, &x, 128, 1, false);
+    let x = dag_basic_block(&mut b, &x, 256, 2, true);
+    let x = dag_basic_block(&mut b, &x, 256, 1, false);
+    let x = dag_basic_block(&mut b, &x, 512, 2, true);
+    let x = dag_basic_block(&mut b, &x, 512, 1, false);
+    let x = b.global_pool(&x);
+    let x = b.fc(&x, 1000);
+    b.output(&x);
+    b.build()
+}
+
+/// ResNet-50 as a genuine branching DAG.
+pub fn resnet50_dag() -> DagModel {
+    let mut b = DagBuilder::new("resnet50-dag");
+    let mut x = b.input("image", 224, 224, 3);
+    x = b.conv_bn_relu(&x, 64, 7, 2, 3, 1);
+    x = b.pool(&x, 3, 2);
+    let stages: [(usize, usize, usize, usize); 4] = [
+        (64, 256, 3, 1),
+        (128, 512, 4, 2),
+        (256, 1024, 6, 2),
+        (512, 2048, 3, 2),
+    ];
+    for (c_mid, c_out, blocks, first_stride) in stages {
+        for i in 0..blocks {
+            let stride = if i == 0 { first_stride } else { 1 };
+            x = dag_bottleneck_block(&mut b, &x, c_mid, c_out, stride, i == 0);
+        }
+    }
+    x = b.global_pool(&x);
+    x = b.fc(&x, 1000);
+    b.output(&x);
+    b.build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::dag::linearize;
 
     #[test]
     fn resnet18_conv_count_and_ops() {
@@ -135,5 +235,51 @@ mod tests {
         // First block conv after the stem operates at 56x56.
         let c = m.layers.iter().filter(|l| l.is_compute()).nth(1).unwrap();
         assert_eq!(c.input_shape().h, 56);
+    }
+
+    #[test]
+    fn dag_variants_match_linear_op_accounting() {
+        // The grouped-fake downsample was constructed to cost exactly what
+        // the real projection costs, so the DAG variants reproduce the
+        // Table II op counts of the linear fakes to the bit.
+        for (dag, linear) in [(resnet18_dag(), resnet18()), (resnet50_dag(), resnet50())] {
+            let lowered = linearize(&dag).unwrap().model;
+            let (ds, ls) = (lowered.stats(), linear.stats());
+            assert_eq!(ds.num_conv, ls.num_conv, "{}", dag.name);
+            assert_eq!(ds.num_layers, ls.num_layers, "{}", dag.name);
+            assert_eq!(ds.total_conv_gops, ls.total_conv_gops, "{}", dag.name);
+            assert_eq!(lowered.weight_bytes(), linear.weight_bytes(), "{}", dag.name);
+        }
+    }
+
+    #[test]
+    fn dag_variants_really_branch() {
+        for dag in [resnet18_dag(), resnet50_dag()] {
+            assert!(!dag.is_linear(), "{}", dag.name);
+            let lin = linearize(&dag).unwrap();
+            let cuts = lin.cuts.expect("branching => constrained cuts");
+            let n = lin.model.num_layers();
+            // Residual interiors are illegal, so the legal set is a strict
+            // subset of all boundaries.
+            assert!(cuts.len() < n + 1, "{}", dag.name);
+            assert_eq!(cuts.first(), Some(&0));
+            assert_eq!(cuts.last(), Some(&n));
+        }
+    }
+
+    #[test]
+    fn resnet18_dag_skip_edges_read_block_input() {
+        let dag = resnet18_dag();
+        // Every join has two distinct inputs (main path + skip).
+        let joins: Vec<_> = dag
+            .nodes
+            .iter()
+            .filter(|nd| matches!(nd.op, crate::graph::dag::DagOp::Add { .. }))
+            .collect();
+        assert_eq!(joins.len(), 8);
+        for j in joins {
+            assert_eq!(j.inputs.len(), 2, "{}", j.name);
+            assert_ne!(j.inputs[0], j.inputs[1], "{}", j.name);
+        }
     }
 }

@@ -310,6 +310,92 @@ fn codegen_writes_files() {
 }
 
 #[test]
+fn model_subcommands_happy_paths() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_model_cmd");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // Export prints to stdout, or writes --out; v1 for chains, v2 for dags.
+    assert_eq!(run("model export mini_cnn"), 0);
+    assert_eq!(run("model export resnet18-dag"), 0);
+    let v1 = dir.join("mini.dlm");
+    let v2 = dir.join("r18.dlm");
+    assert_eq!(run(&format!("model export mini_cnn --out {}", v1.display())), 0);
+    assert_eq!(run(&format!("model export resnet18-dag --out {}", v2.display())), 0);
+    // Import validates both on-disk versions.
+    assert_eq!(run(&format!("model import {}", v1.display())), 0);
+    assert_eq!(run(&format!("model import {}", v2.display())), 0);
+    // Show renders zoo names, dag names, and files.
+    assert_eq!(run("model show mini_cnn"), 0);
+    assert_eq!(run("model show resnet18-dag"), 0);
+    assert_eq!(run(&format!("model show {}", v2.display())), 0);
+    // The acceptance pipeline: an exported v2 document imports and tunes.
+    assert_eq!(run(&format!("tune --model-file {}", v2.display())), 0);
+    assert_eq!(run(&format!("tune --model-file {} --tuner oracle", v1.display())), 0);
+    // A .dlm positional resolves v2 too (suffix routing).
+    assert_eq!(run(&format!("tune {}", v2.display())), 0);
+}
+
+#[test]
+fn model_subcommands_error_paths() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_model_err");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // Missing / unknown verbs and operands.
+    assert_eq!(run("model"), 1);
+    assert_eq!(run("model frobnicate"), 1);
+    assert_eq!(run("model import"), 1);
+    assert_eq!(run("model export nope_net"), 1);
+    assert_eq!(run("model show nope_net"), 1);
+    // Missing file.
+    assert_eq!(run("model import /no/such/file.dlm"), 1);
+    assert_eq!(run("tune --model-file /no/such/file.dlm"), 1);
+    // Malformed JSON.
+    let bad = dir.join("bad.dlm");
+    std::fs::write(&bad, "{nope").unwrap();
+    assert_eq!(run(&format!("model import {}", bad.display())), 1);
+    assert_eq!(run(&format!("model show {}", bad.display())), 1);
+    // v2 features in a v1 document: per-layer dataflow is rejected, not
+    // silently ignored.
+    let mixed = dir.join("mixed.dlm");
+    std::fs::write(
+        &mixed,
+        r#"{"name": "t", "input": [8, 8, 3], "layers": [
+            {"name": "c1", "op": "conv", "c_in": 3, "c_out": 8, "h_in": 8,
+             "w_in": 8, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+            {"name": "r1", "op": "relu", "shape": [8, 8, 8], "inputs": ["c1"]}
+        ]}"#,
+    )
+    .unwrap();
+    assert_eq!(run(&format!("model import {}", mixed.display())), 1);
+    // Unsupported version number.
+    let v9 = dir.join("v9.dlm");
+    std::fs::write(&v9, r#"{"version": 9, "name": "t"}"#).unwrap();
+    assert_eq!(run(&format!("model import {}", v9.display())), 1);
+}
+
+#[test]
+fn tune_handles_branching_dag_workloads() {
+    // The DAG zoo variants tune end-to-end, fusion confined to legal cuts.
+    assert_eq!(run("tune resnet18-dag"), 0);
+    assert_eq!(run("tune resnet50-dag"), 0);
+    assert_eq!(run("tune resnet18-dag --tuner oracle"), 0);
+    assert_eq!(run("tune resnet18-dag --tuner anneal --iterations 100"), 0);
+    assert_eq!(run("tune resnet18-dag --compare --iterations 100"), 0);
+    assert_eq!(run("tune resnet18-dag --compare-targets"), 0);
+    // Table III strategies are defined over linear chains only.
+    assert_eq!(run("tune resnet18-dag --tuner strategy3"), 1);
+}
+
+#[test]
+fn linear_only_commands_reject_branching_dags() {
+    assert_eq!(run("optimize resnet18-dag"), 1);
+    assert_eq!(run("simulate resnet18-dag"), 1);
+    assert_eq!(run("search resnet18-dag"), 1);
+    assert_eq!(run("trace resnet18-dag"), 1);
+    assert_eq!(run("codegen resnet18-dag"), 1);
+}
+
+#[test]
 fn optimize_dlm_file() {
     let dir = std::env::temp_dir().join("dlfusion_cli_dlm");
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,225 @@
+//! Integration: the DAG IR vs the range-based path (rust/docs/DESIGN.md §13).
+//!
+//! Two contracts are pinned here:
+//!
+//! 1. **Linear-chain parity.** Importing any legacy chain as a DAG
+//!    (`DagModel::from_model` → `linearize`) yields `cuts: None` and a model
+//!    whose tuning outcome is *bit-identical* — same schedule, same
+//!    `predicted_ms` bits — to the range-based path, for every backend.
+//!    An explicit all-legal cut set is likewise the identity constraint.
+//!
+//! 2. **Branching constraint.** A genuinely branching DAG (the zoo's
+//!    `resnet18-dag`) tunes end-to-end with fusion confined to its legal cut
+//!    set, and the constrained oracle partition differs from both the
+//!    unconstrained oracle on the same linearization and the legacy
+//!    faked-sequential chain.
+
+use std::collections::BTreeSet;
+
+use dlfusion::accel::{Simulator, Target};
+use dlfusion::graph::dag::{self, load_dlm, to_dlm_v2, DagModel, LoadedModel};
+use dlfusion::graph::{format as dlm, Model};
+use dlfusion::optimizer::Strategy;
+use dlfusion::tuner::{backend_by_name, Algorithm1, Annealer, Exhaustive, OracleDp,
+                      TableStrategy, Tuner, TuningError, TuningOutcome,
+                      TuningRequest};
+use dlfusion::zoo;
+
+fn sim() -> Simulator {
+    Simulator::new(Target::mlu100())
+}
+
+/// Run one fresh backend instance against a model, optionally constrained.
+fn tune(s: &Simulator, m: &Model, backend: &str, cuts: Option<Vec<usize>>)
+        -> Result<TuningOutcome, TuningError> {
+    let mut t = backend_by_name(backend).expect("known backend");
+    let mut req = TuningRequest::new(s, m);
+    if let Some(c) = cuts {
+        req = req.allowed_cuts(c);
+    }
+    req.run(t.as_mut())
+}
+
+fn assert_bit_identical(a: &TuningOutcome, b: &TuningOutcome, label: &str) {
+    assert_eq!(a.schedule, b.schedule, "{label}: schedules diverge");
+    assert_eq!(a.predicted_ms.to_bits(), b.predicted_ms.to_bits(),
+               "{label}: predicted_ms bits diverge");
+    assert_eq!(a.batch, b.batch, "{label}: batch diverges");
+}
+
+#[test]
+fn linear_dag_lowering_reproduces_the_legacy_model_layer_for_layer() {
+    for m in zoo::all_models() {
+        let d = DagModel::from_model(&m);
+        let lin = dag::linearize(&d).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        assert!(lin.cuts.is_none(), "{}: chain import must be unconstrained", m.name);
+        assert_eq!(lin.model.name, m.name);
+        assert_eq!(lin.model.input, m.input, "{}", m.name);
+        assert_eq!(lin.model.layers, m.layers, "{}", m.name);
+    }
+}
+
+#[test]
+fn dlm_roundtrip_is_a_fixed_point_for_every_zoo_model() {
+    // v1: text → model → text is stable, for every chain.
+    for m in zoo::all_models() {
+        let text = dlm::to_dlm(&m);
+        let re = dlm::from_dlm(&text).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        assert_eq!(re, m, "{}: v1 parse must reproduce the model", m.name);
+        assert_eq!(dlm::to_dlm(&re), text, "{}: v1 serialization unstable", m.name);
+        // The version dispatcher agrees with the direct v1 parser.
+        match load_dlm(&text).unwrap() {
+            LoadedModel::Linear(via) => assert_eq!(via, m, "{}", m.name),
+            LoadedModel::Dag(_) => panic!("{}: v1 text loaded as a dag", m.name),
+        }
+    }
+    // v2: every chain imported as a DAG, and every native DAG, round-trips.
+    let imported = zoo::all_models().iter().map(DagModel::from_model).collect::<Vec<_>>();
+    for d in imported.into_iter().chain(zoo::dag_models()) {
+        let text = to_dlm_v2(&d);
+        match load_dlm(&text).unwrap_or_else(|e| panic!("{}: {e}", d.name)) {
+            LoadedModel::Dag(re) => {
+                assert_eq!(re, d, "{}: v2 parse must reproduce the dag", d.name);
+                assert_eq!(to_dlm_v2(&re), text, "{}: v2 serialization unstable", d.name);
+            }
+            LoadedModel::Linear(_) => panic!("{}: v2 text loaded as v1", d.name),
+        }
+    }
+}
+
+#[test]
+fn linear_dag_import_is_bit_identical_for_algorithm1_on_every_zoo_model() {
+    let s = sim();
+    for m in zoo::all_models() {
+        let lin = dag::linearize(&DagModel::from_model(&m)).unwrap();
+        assert!(lin.cuts.is_none(), "{}", m.name);
+        let base = tune(&s, &m, "algorithm1", None).unwrap();
+        let via = tune(&s, &lin.model, "algorithm1", None).unwrap();
+        assert_bit_identical(&base, &via, &format!("{} algorithm1", m.name));
+    }
+}
+
+#[test]
+fn linear_dag_import_is_bit_identical_for_search_backends() {
+    let s = sim();
+    for m in [zoo::alexnet(), zoo::resnet18()] {
+        let lin = dag::linearize(&DagModel::from_model(&m)).unwrap();
+        for backend in ["oracle", "anneal"] {
+            let base = tune(&s, &m, backend, None).unwrap();
+            let via = tune(&s, &lin.model, backend, None).unwrap();
+            assert_bit_identical(&base, &via, &format!("{} {backend}", m.name));
+        }
+    }
+    // Exhaustive and the Table III strategies certify on the tiny chain.
+    let m = zoo::mini_cnn();
+    let lin = dag::linearize(&DagModel::from_model(&m)).unwrap();
+    let base = tune(&s, &m, "exhaustive", None).unwrap();
+    let via = tune(&s, &lin.model, "exhaustive", None).unwrap();
+    assert_bit_identical(&base, &via, "mini_cnn exhaustive");
+    for st in Strategy::ALL {
+        let base = TuningRequest::new(&s, &m).run(&mut TableStrategy(st)).unwrap();
+        let via = TuningRequest::new(&s, &lin.model)
+            .run(&mut TableStrategy(st))
+            .unwrap();
+        assert_bit_identical(&base, &via, &format!("mini_cnn {st}"));
+    }
+}
+
+#[test]
+fn an_explicit_all_legal_cut_set_is_the_identity_constraint() {
+    let s = sim();
+    let m = zoo::alexnet();
+    let all: Vec<usize> = (0..=m.num_layers()).collect();
+    for backend in ["algorithm1", "oracle", "anneal"] {
+        let free = tune(&s, &m, backend, None).unwrap();
+        let masked = tune(&s, &m, backend, Some(all.clone())).unwrap();
+        assert_bit_identical(&free, &masked, &format!("alexnet {backend}"));
+    }
+    let m = zoo::mini_cnn();
+    let all: Vec<usize> = (0..=m.num_layers()).collect();
+    let free = tune(&s, &m, "exhaustive", None).unwrap();
+    let masked = tune(&s, &m, "exhaustive", Some(all)).unwrap();
+    assert_bit_identical(&free, &masked, "mini_cnn exhaustive");
+}
+
+/// The pinned branching result: on the true ResNet-18 DAG the oracle's
+/// fusion partition is *not* what either the unconstrained DP on the same
+/// linearization or the legacy faked-sequential chain produces — the skip
+/// edges genuinely reshape the fusion space.
+#[test]
+fn branching_resnet18_oracle_partition_differs_from_the_sequential_fake() {
+    let s = sim();
+    let d = zoo::resnet18_dag();
+    let lin = dag::linearize(&d).unwrap();
+    let cuts = lin.cuts.clone().expect("resnet18-dag must really branch");
+    let legal: BTreeSet<usize> = cuts.iter().copied().collect();
+
+    let constrained = tune(&s, &lin.model, "oracle", Some(cuts)).unwrap();
+    for b in &constrained.schedule.blocks {
+        assert!(legal.contains(&b.start) && legal.contains(&b.end),
+                "oracle block {}..{} crosses a live skip edge", b.start, b.end);
+    }
+
+    // The constraint binds: unconstrained DP on the same linearization cuts
+    // where a skip connection is still live (interior legal positions are
+    // almost never the multiples of four the free reduced DP is limited to).
+    let free = tune(&s, &lin.model, "oracle", None).unwrap();
+    let free_crosses_skip = free.schedule.blocks.iter().any(
+        |b| !legal.contains(&b.start) || !legal.contains(&b.end));
+    if free_crosses_skip {
+        assert_ne!(free.schedule, constrained.schedule,
+                   "the legal-cut constraint never bound");
+    }
+
+    // And the faked-sequential chain's oracle partition is different again.
+    let legacy = tune(&s, &zoo::resnet18(), "oracle", None).unwrap();
+    assert_ne!(legacy.schedule.blocks, constrained.schedule.blocks,
+               "dag-constrained partition matches the sequential fake");
+}
+
+#[test]
+fn branching_resnet18_tunes_through_every_constraint_aware_backend() {
+    let s = sim();
+    let lin = dag::linearize(&zoo::resnet18_dag()).unwrap();
+    let cuts = lin.cuts.clone().unwrap();
+    let legal: BTreeSet<usize> = cuts.iter().copied().collect();
+    for backend in ["algorithm1", "oracle", "anneal"] {
+        let out = tune(&s, &lin.model, backend, Some(cuts.clone())).unwrap();
+        assert!(out.predicted_ms.is_finite() && out.predicted_ms > 0.0,
+                "{backend}");
+        for b in &out.schedule.blocks {
+            assert!(legal.contains(&b.start) && legal.contains(&b.end),
+                    "{backend}: block {}..{} crosses a live skip edge",
+                    b.start, b.end);
+        }
+    }
+}
+
+#[test]
+fn table_strategies_reject_cut_constrained_requests() {
+    let s = sim();
+    let lin = dag::linearize(&zoo::resnet18_dag()).unwrap();
+    let req = TuningRequest::new(&s, &lin.model).allowed_cuts(lin.cuts.unwrap());
+    let err = req.run(&mut TableStrategy(Strategy::ALL[0])).unwrap_err();
+    assert!(matches!(err, TuningError::InvalidRequest(_)), "{err:?}");
+}
+
+#[test]
+fn out_of_range_cut_positions_are_a_structured_error() {
+    let s = sim();
+    let m = zoo::mini_cnn();
+    let bad = vec![0, 3, m.num_layers() + 1];
+    for backend in [
+        Box::new(Algorithm1) as Box<dyn Tuner>,
+        Box::new(OracleDp::reduced()),
+        Box::new(Annealer::new()),
+        Box::new(Exhaustive),
+    ] {
+        let mut backend = backend;
+        let err = TuningRequest::new(&s, &m)
+            .allowed_cuts(bad.clone())
+            .run(backend.as_mut())
+            .unwrap_err();
+        assert!(matches!(err, TuningError::InvalidRequest(_)), "{err:?}");
+    }
+}
