@@ -1,0 +1,33 @@
+#!/usr/bin/env sh
+# One-command refresh of the perf-smoke gating baseline
+# (rust/ci/perf_baseline.json; see rust/ci/README.md and
+# rust/docs/DESIGN.md §12 "perf-smoke gating tiers").
+#
+# Run this FROM A TRUSTED RUNNER-CLASS MACHINE — the recorded wall_metrics
+# band gates future runs of the same hardware class, so a developer laptop
+# or an offline build container would record numbers CI can never meet (or
+# trivially beats). The simulated `metrics` section is machine-independent
+# and bit-stable; review the diff before committing and expect ONLY
+# deliberate changes there.
+#
+# Usage:  ci/record_baseline.sh [--threads N]      (from rust/)
+#         rust/ci/record_baseline.sh [--threads N] (from the repo root)
+#
+# Flags are passed through to `dlfusion perf-smoke` (e.g. --threads for
+# the parallel-speedup leg; default 4).
+
+set -eu
+
+# Resolve the crate root (this script's parent's parent) so it works from
+# anywhere in the repo.
+script_dir=$(CDPATH= cd -- "$(dirname -- "$0")" && pwd)
+crate_dir=$(dirname -- "$script_dir")
+cd "$crate_dir"
+
+cargo run --release -- perf-smoke --write-baseline \
+    --out BENCH_ci.json --baseline ci/perf_baseline.json "$@"
+
+echo
+echo "recorded ci/perf_baseline.json — review with 'git diff rust/ci/' and"
+echo "commit; the simulated metrics section must only change when a PR"
+echo "deliberately moves the predicted-performance surface."

@@ -8,6 +8,7 @@
 
 use std::time::Instant;
 
+use crate::obs::Probe;
 use crate::stats::Summary;
 
 /// Default output directory for bench CSVs.
@@ -87,6 +88,19 @@ impl Bench {
         }
         self.results
     }
+
+    /// Like [`Self::finish`], but also publishes every result through a
+    /// [`Probe`] (rust/docs/DESIGN.md §14.3): a `{name}.mean_ms` sample
+    /// plus one `span_us` per result, so benches and `perf-smoke` feed the
+    /// same instrumentation surface as the tuner and the serving stack.
+    pub fn finish_into(self, probe: &mut dyn Probe) -> Vec<BenchResult> {
+        let results = self.finish();
+        for r in &results {
+            probe.sample(&format!("{}.mean_ms", r.name), r.mean_ms());
+            probe.span_us(&r.name, r.mean_ms() * 1e3);
+        }
+        results
+    }
 }
 
 /// `std::hint::black_box` wrapper (stable since 1.66).
@@ -130,5 +144,20 @@ mod tests {
         let r = b.time("x", || 1 + 1);
         let rep = r.report();
         assert!(rep.contains("g/x") && rep.contains("ms/iter"));
+    }
+
+    #[test]
+    fn finish_into_publishes_through_a_probe() {
+        use crate::obs::{Domain, MetricsRegistry, RegistryProbe};
+        let mut b = Bench::new("g").with_iters(0, 2);
+        b.time("x", || 1 + 1);
+        let mut reg = MetricsRegistry::new();
+        let results = {
+            let mut p = RegistryProbe::new(&mut reg, Domain::Wall);
+            b.finish_into(&mut p)
+        };
+        assert_eq!(results.len(), 1);
+        assert_eq!(reg.gauge("g/x.mean_ms"), Some(results[0].mean_ms()));
+        assert_eq!(reg.histogram("g/x").unwrap().count(), 1);
     }
 }

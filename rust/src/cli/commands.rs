@@ -7,6 +7,7 @@ use crate::coordinator::{self, driver, equivalence, plan};
 use crate::cost::CostEngine;
 use crate::graph::dag::{self, DagModel, LoadedModel};
 use crate::graph::{format as dlm, LayerKind, Model};
+use crate::obs::{Domain, MetricsRegistry, TraceSession};
 use crate::optimizer::{self, Strategy};
 use crate::perfmodel;
 use crate::runtime::Runtime;
@@ -14,7 +15,7 @@ use crate::search::{AnnealConfig, BlockRule};
 use crate::serving;
 use crate::tuner::{self, Tuner};
 use crate::util::units::{fmt_gops, fmt_ms};
-use crate::util::Table;
+use crate::util::{Json, Table};
 use crate::zoo;
 
 pub const HELP: &str = "\
@@ -36,14 +37,19 @@ COMMANDS:
         [--compare-targets]      (NAME: algorithm1 strategy1..7 oracle
         [--threads N]             oracle-full oracle-constrained anneal
         [--model-file F.dlm]      exhaustive);
-                                 --model-file reads a .dlm v1/v2 document;
-                                 v2 dags tune with fusion constrained to
+        [--metrics-out F]        --model-file reads a .dlm v1/v2 document;
+        [--trace-out F]          v2 dags tune with fusion constrained to
                                  the graph's legal cut set;
                                  --compare-targets runs the one backend on
                                  every registry target instead (the cross-
                                  target analog of --compare); --threads fans
                                  the search/comparison across N workers,
-                                 bit-identical to the sequential run
+                                 bit-identical to the sequential run;
+                                 --metrics-out writes the unified metrics
+                                 snapshot (JSON; Prometheus text if F ends
+                                 in .prom), --trace-out a Chrome trace of
+                                 the tuner's wall-clock phases (single-
+                                 backend runs only)
     model import <file.dlm>      parse + validate a .dlm v1/v2 document
     model export <model>         write a zoo model as .dlm (v2 for dags)
         [--out FILE]
@@ -64,9 +70,16 @@ COMMANDS:
         [--max-batch N] [--batch-wait-ms MS] core pool, then a deterministic
         [--allocator load|single] event-driven SLO report; --policy batch
         [--no-events]            forms per-model batches of up to N requests,
-                                 holding partial batches at most MS ms;
-                                 --no-events skips recording the event trace
-                                 (hot path; identical SLO report)
+        [--metrics-out F]        holding partial batches at most MS ms;
+        [--trace-out F]          --no-events skips recording the event trace
+                                 (hot path; identical SLO report, but
+                                 incompatible with --trace-out);
+                                 --metrics-out writes the SLO report's
+                                 metrics snapshot (JSON; .prom = Prometheus
+                                 text), --trace-out a deterministic
+                                 sim-time Chrome trace of the serving run
+    report <snapshot.json>       render a --metrics-out snapshot as a table
+        [--prom]                 (or re-emit it as Prometheus text)
     perf-smoke                   deterministic perf metrics: tuned latencies
         [--out FILE.json]        on the target + the mlu100/edge4 cross-
         [--baseline FILE.json]   target points + serving/batching throughput
@@ -105,6 +118,7 @@ pub fn run(args: &Args) -> i32 {
         "run" => cmd_run(args),
         "serve-sim" => cmd_serve_sim(args),
         "perf-smoke" => cmd_perf_smoke(args),
+        "report" => cmd_report(args),
         other => Err(format!("unknown command '{other}' (try 'help')")),
     };
     match result {
@@ -316,6 +330,64 @@ fn parse_usize_list(args: &Args, name: &str) -> Result<Option<Vec<usize>>, Strin
     }
 }
 
+/// Write observability output, creating parent directories like the
+/// perf-smoke writer does.
+fn write_obs_file(path: &str, text: &str) -> Result<(), String> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("{path}: {e}"))?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| format!("{path}: {e}"))
+}
+
+/// Honor `--metrics-out FILE`: the unified snapshot as pretty JSON, or
+/// Prometheus exposition text when the path ends in `.prom`
+/// (rust/docs/DESIGN.md §14.2). No flag, no output.
+fn write_metrics_out(args: &Args, reg: &MetricsRegistry) -> Result<(), String> {
+    let Some(path) = args.flag_value("metrics-out").map_err(|e| e.to_string())? else {
+        return Ok(());
+    };
+    let text = if path.ends_with(".prom") {
+        reg.to_prometheus()
+    } else {
+        reg.snapshot().to_pretty()
+    };
+    write_obs_file(path, &text)?;
+    println!("wrote metrics snapshot ({} metrics) to {path}", reg.len());
+    Ok(())
+}
+
+/// Honor `--trace-out FILE`: the session as Chrome trace-event JSON
+/// (load it at chrome://tracing or ui.perfetto.dev). No flag, no output.
+fn write_trace_out(args: &Args, session: &TraceSession) -> Result<(), String> {
+    let Some(path) = args.flag_value("trace-out").map_err(|e| e.to_string())? else {
+        return Ok(());
+    };
+    write_obs_file(path, &session.to_chrome_string())?;
+    println!("wrote chrome trace ({} events) to {path}", session.len());
+    Ok(())
+}
+
+/// `dlfusion report SNAPSHOT.json [--prom]` — re-render a `--metrics-out`
+/// snapshot (or a perf-smoke `BENCH_ci.json`, whose `metrics`/`wall_metrics`
+/// sections parse the same way) as a human-readable table or as Prometheus
+/// exposition text.
+fn cmd_report(args: &Args) -> Result<(), String> {
+    let path = args
+        .positional(0)
+        .ok_or("usage: report <snapshot.json> [--prom]")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let reg = MetricsRegistry::from_snapshot(&doc).map_err(|e| format!("{path}: {e}"))?;
+    if args.flag_bool("prom") {
+        print!("{}", reg.to_prometheus());
+    } else {
+        println!("{}", reg.render_table());
+    }
+    Ok(())
+}
+
 /// Apply the shared tune/search flags to a request (any target's).
 fn apply_request_flags<'a>(args: &Args, mut request: tuner::TuningRequest<'a>)
                            -> Result<tuner::TuningRequest<'a>, String> {
@@ -385,6 +457,15 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
     let model = &workload.model;
     let tuner_flag = args.flag_value("tuner").map_err(|e| e.to_string())?;
 
+    // The observability exports describe one backend's run; a comparison
+    // interleaves several over one shared cache, so the flags would lie.
+    if (args.flag("metrics-out").is_some() || args.flag("trace-out").is_some())
+        && (args.flag_bool("compare") || args.flag_bool("compare-targets"))
+    {
+        return Err("--metrics-out/--trace-out apply to single-backend tune \
+                    runs, not --compare/--compare-targets".into());
+    }
+
     if args.flag_bool("compare-targets") {
         if args.flag_bool("compare") {
             return Err("--compare and --compare-targets are mutually \
@@ -433,7 +514,10 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
     }
 
     let mut backend = parse_tuner(tuner_flag.unwrap_or("algorithm1"))?;
-    let outcome = request.run(backend.as_mut()).map_err(|e| e.to_string())?;
+    // A named context (not `request.run`) so the engine stays reachable for
+    // the --metrics-out export after the backend returns.
+    let mut cx = request.context();
+    let outcome = backend.tune(&mut cx).map_err(|e| e.to_string())?;
     println!("model:     {}", model.name);
     if let Some(cuts) = &workload.cuts {
         println!("graph:     branching dag — fusion constrained to {} of {} \
@@ -463,6 +547,33 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
         println!("space:     {} joint (fusion, MP) candidates certified",
                  st.space_visited);
     }
+
+    // Observability exports (rust/docs/DESIGN.md §14): the unified metrics
+    // snapshot (tuner outcome + cost-engine cache/shard counters) and a
+    // wall-clock Chrome trace of the backend's phases. Tuning timers are
+    // machine-dependent, so every span here rides the wall clock — clearly
+    // segregated from the deterministic serve-sim traces.
+    let mut reg = MetricsRegistry::new();
+    outcome.export_metrics(&mut reg);
+    cx.engine().export_metrics(&mut reg);
+    write_metrics_out(args, &reg)?;
+    let mut session = TraceSession::new(&format!("tune {}", model.name));
+    let span_args = |phase: &str| {
+        vec![("tuner".to_string(), Json::Str(outcome.tuner.clone())),
+             ("phase".to_string(), Json::Str(phase.to_string()))]
+    };
+    let prewarm = st.prewarm_us as f64;
+    let search = st.search_us.max(st.prewarm_us) as f64;
+    let wall = st.wall_us.max(st.search_us) as f64;
+    if st.prewarm_us > 0 {
+        session.wall_span("prewarm", "tuner", 0, 0.0, prewarm,
+                          span_args("parallel cache prewarm"));
+    }
+    session.wall_span("search", "tuner", 0, prewarm, search - prewarm,
+                      span_args("schedule-producing search"));
+    session.wall_span("pricing", "tuner", 0, search, wall - search,
+                      span_args("final-schedule pricing + bookkeeping"));
+    write_trace_out(args, &session)?;
     Ok(())
 }
 
@@ -536,6 +647,7 @@ fn layer_op(kind: &LayerKind) -> &'static str {
         LayerKind::BatchNorm { .. } => "batchnorm",
         LayerKind::Pool { .. } => "pool",
         LayerKind::Add { .. } => "add",
+        LayerKind::Concat { .. } => "concat",
     }
 }
 
@@ -791,6 +903,12 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     if concurrency == Some(0) {
         return Err("--concurrency must be at least 1".into());
     }
+    // The sim-time trace replays the event log, so it cannot coexist with
+    // the trace-free hot path; reject the combination before any work.
+    if args.flag("trace-out").is_some() && args.flag_bool("no-events") {
+        return Err("--trace-out replays the recorded event trace and cannot \
+                    be combined with --no-events".into());
+    }
     let arrivals = args.flag_value("arrivals").map_err(|e| e.to_string())?
         .unwrap_or("poisson");
     // --rate only drives the open-loop modes, so it is validated there and
@@ -879,7 +997,8 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     // --no-events skips recording the per-instant trace (the hot serving
     // path); the SLO report below is identical either way.
     let record_events = !args.flag_bool("no-events");
-    let result = serving::simulate_with(&cfg, &plan.services(load_aware), &trace,
+    let services = plan.services(load_aware);
+    let result = serving::simulate_with(&cfg, &services, &trace,
                                         process.closed_loop_population(),
                                         record_events)?;
     println!(
@@ -887,7 +1006,19 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
         result.completed.len(), result.events_processed,
         if record_events { "" } else { ", trace off" }, policy.name(),
         if load_aware { "load-aware" } else { "single-request" });
-    print!("{}", serving::SloReport::from_sim(&result, slo_ms).render());
+    let report = serving::SloReport::from_sim(&result, slo_ms);
+    print!("{}", report.render());
+
+    // Observability exports (rust/docs/DESIGN.md §14): everything here is
+    // event-clock state — pure sim time, bit-identical across reruns and
+    // thread counts — so the snapshot's wall section stays empty and the
+    // trace rides the deterministic clock.
+    let mut reg = MetricsRegistry::new();
+    report.export_metrics(&mut reg);
+    write_metrics_out(args, &reg)?;
+    if args.flag("trace-out").is_some() {
+        write_trace_out(args, &serving::sim_trace(&result, &services, "serve-sim"))?;
+    }
     Ok(())
 }
 
@@ -1033,8 +1164,6 @@ fn perf_smoke_wall_metrics(sim: &Simulator, threads: usize)
 }
 
 fn cmd_perf_smoke(args: &Args) -> Result<(), String> {
-    use crate::util::json::Json;
-
     let out_path = args.flag_value("out").map_err(|e| e.to_string())?
         .unwrap_or("BENCH_ci.json");
     let baseline_path = args.flag_value("baseline").map_err(|e| e.to_string())?
@@ -1057,12 +1186,22 @@ fn cmd_perf_smoke(args: &Args) -> Result<(), String> {
     let metrics = perf_smoke_metrics(&sim)?;
     let wall = perf_smoke_wall_metrics(&sim, threads)?;
 
+    // The smoke document renders through the MetricsRegistry snapshot path
+    // (rust/docs/DESIGN.md §14.2): the simulated suite lands in the
+    // deterministic domain, the wall-clock suite in the wall domain, and
+    // `domain_json` prints gauges as plain numbers — byte-compatible with
+    // the checked-in schema-2 baseline's key set.
+    let mut reg = MetricsRegistry::new();
+    for (k, v) in &metrics {
+        reg.set_gauge(Domain::Sim, k, *v);
+    }
+    for (k, v) in &wall {
+        reg.set_gauge(Domain::Wall, k, *v);
+    }
     let doc = Json::obj(vec![
         ("schema", Json::Num(2.0)),
-        ("metrics", Json::Obj(
-            metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())),
-        ("wall_metrics", Json::Obj(
-            wall.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())),
+        ("metrics", reg.domain_json(Domain::Sim)),
+        ("wall_metrics", reg.domain_json(Domain::Wall)),
     ]);
     let write = |path: &str| -> Result<(), String> {
         if let Some(dir) = std::path::Path::new(path).parent() {

@@ -1,7 +1,12 @@
 //! Request-loop metrics: counters and latency histograms.
+//!
+//! Both primitives export into the unified [`MetricsRegistry`]
+//! (rust/docs/DESIGN.md §14.2), so ad-hoc consumers and the
+//! `--metrics-out` / `dlfusion report` surface read the same numbers.
 
 use std::cell::RefCell;
 
+use crate::obs::{Domain, MetricsRegistry};
 use crate::stats::descriptive::{percentile_sorted, Summary};
 
 /// Online latency recorder with percentile reporting.
@@ -71,6 +76,24 @@ impl LatencyRecorder {
         }))
     }
 
+    /// Export `count`/`mean`/`p50`/`p95`/`p99`/`max` (ms) as gauges named
+    /// `{prefix}…` into the unified registry. Percentiles reuse the cached
+    /// sorted view, so this is one O(n log n) sort at most.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry, domain: Domain,
+                          prefix: &str) {
+        reg.set_gauge(domain, &format!("{prefix}count"), self.count() as f64);
+        if let Some(s) = self.summary() {
+            let ps = self
+                .percentiles(&[50.0, 95.0, 99.0])
+                .expect("summary implies samples");
+            reg.set_gauge(domain, &format!("{prefix}mean_ms"), s.mean);
+            reg.set_gauge(domain, &format!("{prefix}p50_ms"), ps[0]);
+            reg.set_gauge(domain, &format!("{prefix}p95_ms"), ps[1]);
+            reg.set_gauge(domain, &format!("{prefix}p99_ms"), ps[2]);
+            reg.set_gauge(domain, &format!("{prefix}max_ms"), s.max);
+        }
+    }
+
     /// "p50/p95/p99 mean" one-liner.
     pub fn report(&self) -> String {
         match self.summary() {
@@ -104,7 +127,15 @@ impl Counters {
     }
 
     pub fn add(&mut self, name: &str, v: u64) {
-        *self.entries.entry(name.to_string()).or_insert(0) += v;
+        // Look up by `&str` first: the `entry` API would allocate a fresh
+        // `String` per call, and this runs once per event in the serving
+        // loop where the key almost always exists already. The allocation
+        // now happens exactly once per distinct name.
+        if let Some(e) = self.entries.get_mut(name) {
+            *e += v;
+        } else {
+            self.entries.insert(name.to_string(), v);
+        }
     }
 
     pub fn get(&self, name: &str) -> u64 {
@@ -113,6 +144,14 @@ impl Counters {
 
     pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
         self.entries.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// Export every counter as `{prefix}{name}` into the unified registry.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry, domain: Domain,
+                          prefix: &str) {
+        for (name, v) in self.iter() {
+            reg.inc(domain, &format!("{prefix}{name}"), v);
+        }
     }
 }
 
@@ -194,5 +233,34 @@ mod tests {
         assert_eq!(c.get("convs"), 6);
         assert_eq!(c.get("missing"), 0);
         assert_eq!(c.iter().count(), 2);
+    }
+
+    #[test]
+    fn counters_export_into_registry() {
+        let mut c = Counters::new();
+        c.add("slo_ok", 9);
+        c.inc("core_launches");
+        let mut reg = MetricsRegistry::new();
+        c.export_metrics(&mut reg, Domain::Sim, "serving.");
+        assert_eq!(reg.counter("serving.slo_ok"), Some(9));
+        assert_eq!(reg.counter("serving.core_launches"), Some(1));
+    }
+
+    #[test]
+    fn latency_recorder_exports_percentile_gauges() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        let mut reg = MetricsRegistry::new();
+        r.export_metrics(&mut reg, Domain::Sim, "e2e.");
+        assert_eq!(reg.gauge("e2e.count"), Some(100.0));
+        assert_eq!(reg.gauge("e2e.max_ms"), Some(100.0));
+        assert_eq!(reg.gauge("e2e.p50_ms"), r.percentile(50.0));
+        // An empty recorder exports only its (zero) count.
+        let mut reg2 = MetricsRegistry::new();
+        LatencyRecorder::new().export_metrics(&mut reg2, Domain::Sim, "q.");
+        assert_eq!(reg2.gauge("q.count"), Some(0.0));
+        assert_eq!(reg2.gauge("q.p50_ms"), None);
     }
 }

@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex};
 use super::facts::ModelFacts;
 use crate::accel::{BlockPerf, PerfReport, Simulator};
 use crate::graph::Model;
+use crate::obs::{Domain, MetricsRegistry};
 use crate::optimizer::schedule::Schedule;
 
 /// Evaluation-throughput counters for a [`CostEngine`].
@@ -117,10 +118,19 @@ impl StatCells {
 }
 
 /// State shared by every handle cloned off one engine: the sharded memo
-/// cache plus the merged counters.
+/// cache plus the merged counters and the per-shard instrumentation.
 struct SharedState {
     shards: Vec<Mutex<CacheShard>>,
     merged: StatCells,
+    /// Lock acquisitions per shard. Deterministic: shard selection is by
+    /// block start and every evaluation call locks its shard exactly once,
+    /// so the counts depend only on the query stream, not on threading.
+    shard_locks: Vec<AtomicU64>,
+    /// Lock acquisitions per shard that found the lock already held
+    /// (`try_lock` failed and the caller had to block). Machine- and
+    /// timing-dependent — a wall-domain quantity, zero in any
+    /// single-threaded run.
+    shard_contended: Vec<AtomicU64>,
 }
 
 /// Memoized `(start, end, mp, batch) -> latency` evaluation over one
@@ -174,6 +184,8 @@ impl<'a> CostEngine<'a> {
         let shared = Arc::new(SharedState {
             shards: (0..NUM_SHARDS).map(|_| Mutex::new(CacheShard::default())).collect(),
             merged: StatCells::default(),
+            shard_locks: (0..NUM_SHARDS).map(|_| AtomicU64::new(0)).collect(),
+            shard_contended: (0..NUM_SHARDS).map(|_| AtomicU64::new(0)).collect(),
         });
         shared.merged.layer_facts_built.store(built, Ordering::Relaxed);
         let local = StatCells::default();
@@ -251,8 +263,69 @@ impl<'a> CostEngine<'a> {
         self.local.reset_queries();
     }
 
-    fn shard(&self, start: usize) -> &Mutex<CacheShard> {
-        &self.shared.shards[start % NUM_SHARDS]
+    /// Lock the shard owning block start `start`, metering the acquisition:
+    /// every lock bumps the shard's (deterministic) acquisition count, and a
+    /// failed `try_lock` — another handle holds the shard right now — bumps
+    /// its (wall-domain) contention count before blocking.
+    fn lock_shard(&self, start: usize) -> std::sync::MutexGuard<'_, CacheShard> {
+        let idx = start % NUM_SHARDS;
+        self.shared.shard_locks[idx].fetch_add(1, Ordering::Relaxed);
+        match self.shared.shards[idx].try_lock() {
+            Ok(guard) => guard,
+            Err(_) => {
+                self.shared.shard_contended[idx].fetch_add(1, Ordering::Relaxed);
+                self.shared.shards[idx].lock().unwrap()
+            }
+        }
+    }
+
+    /// Per-shard lock-contention counts (wall-domain: depends on thread
+    /// timing; all zeros in a single-threaded run).
+    pub fn shard_contention(&self) -> Vec<u64> {
+        self.shared
+            .shard_contended
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Export the merged counters plus per-shard cache statistics into the
+    /// unified registry (rust/docs/DESIGN.md §14). Deterministic quantities
+    /// — query totals, cached-entry counts, per-shard lock acquisitions —
+    /// land in [`Domain::Sim`]; lock-contention counts depend on thread
+    /// timing and land in [`Domain::Wall`].
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        let st = self.stats();
+        reg.inc(Domain::Sim, "cost.cache.hits", st.hits);
+        reg.inc(Domain::Sim, "cost.cache.misses", st.misses);
+        reg.inc(Domain::Sim, "cost.seed_layer_evals", st.seed_layer_evals);
+        reg.inc(Domain::Sim, "cost.layer_facts_built", st.layer_facts_built);
+        reg.set_gauge(Domain::Sim, "cost.cache.hit_rate", st.hit_rate());
+        let mut entries = 0u64;
+        for (i, shard) in self.shared.shards.iter().enumerate() {
+            let n = {
+                let g = shard.lock().unwrap();
+                (g.scalar.len() + g.sweep.len()) as u64
+            };
+            entries += n;
+            reg.set_gauge(Domain::Sim, &format!("cost.shard{i:02}.entries"), n as f64);
+            reg.inc(
+                Domain::Sim,
+                &format!("cost.shard{i:02}.locks"),
+                self.shared.shard_locks[i].load(Ordering::Relaxed),
+            );
+            reg.inc(
+                Domain::Wall,
+                &format!("cost.shard{i:02}.lock_contended"),
+                self.shared.shard_contended[i].load(Ordering::Relaxed),
+            );
+        }
+        reg.inc(Domain::Sim, "cost.cache.entries", entries);
+        reg.inc(
+            Domain::Wall,
+            "cost.lock_contended_total",
+            self.shard_contention().iter().sum(),
+        );
     }
 
     fn count_hit(&self) {
@@ -277,7 +350,7 @@ impl<'a> CostEngine<'a> {
     pub fn block_cost_at(&self, start: usize, end: usize, mp: usize,
                          batch: usize) -> BlockCost {
         self.count_seed_layers((end - start) as u64);
-        let mut shard = self.shard(start).lock().unwrap();
+        let mut shard = self.lock_shard(start);
         if let Some(&c) = shard.scalar.get(&(start, end, mp, batch)) {
             self.count_hit();
             return c;
@@ -338,7 +411,7 @@ impl<'a> CostEngine<'a> {
         self.count_seed_layers((end - start) as u64);
         let spec = &self.sim.spec;
         let batch = self.batch;
-        let mut shard = self.shard(start).lock().unwrap();
+        let mut shard = self.lock_shard(start);
         mps.iter()
             .map(|&mp| {
                 if let Some(&v) = shard.sweep.get(&(start, end, mp, batch)) {
@@ -673,5 +746,44 @@ mod tests {
         // held across the miss computation), so merged misses are
         // deterministic and equal to the sequential engine's.
         assert_eq!(engine.stats().misses, reference.stats().misses);
+        // Per-shard lock acquisitions are query-stream-determined too: both
+        // engines saw the same calls, in any order.
+        assert_eq!(
+            engine.shared.shard_locks.iter().map(|c| c.load(Ordering::Relaxed)).collect::<Vec<_>>(),
+            reference.shared.shard_locks.iter().map(|c| c.load(Ordering::Relaxed)).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn export_metrics_separates_sim_and_wall_domains() {
+        let s = sim();
+        let m = zoo::alexnet();
+        let engine = CostEngine::new(&s, &m);
+        let sched = Schedule::uniform_blocks(m.num_layers(), 3, 4);
+        engine.schedule_cost(&sched);
+        engine.schedule_cost(&sched);
+        let mut reg = MetricsRegistry::new();
+        engine.export_metrics(&mut reg);
+        let st = engine.stats();
+        assert_eq!(reg.counter("cost.cache.hits"), Some(st.hits));
+        assert_eq!(reg.counter("cost.cache.misses"), Some(st.misses));
+        assert_eq!(reg.counter("cost.cache.entries"), Some(st.misses),
+                   "every miss inserts exactly one entry");
+        assert_eq!(reg.gauge("cost.cache.hit_rate"), Some(st.hit_rate()));
+        // Single-threaded: lock acquisitions happened, contention did not.
+        assert_eq!(reg.counter("cost.lock_contended_total"), Some(0));
+        assert!(engine.shard_contention().iter().all(|&c| c == 0));
+        let locks: u64 = (0..NUM_SHARDS)
+            .map(|i| reg.counter(&format!("cost.shard{i:02}.locks")).unwrap())
+            .sum();
+        assert_eq!(locks, st.queries(), "scalar path: one lock per query");
+        // Domain split: shard entry/lock metrics are sim, contention wall.
+        let snap = reg.snapshot();
+        let sim_section = snap.get("deterministic").unwrap();
+        let wall_section = snap.get("wall").unwrap();
+        assert!(sim_section.get("cost.shard00.locks").is_some());
+        assert!(sim_section.get("cost.shard00.lock_contended").is_none());
+        assert!(wall_section.get("cost.shard00.lock_contended").is_some());
+        assert!(wall_section.get("cost.shard00.locks").is_none());
     }
 }

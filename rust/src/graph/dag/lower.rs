@@ -5,10 +5,12 @@
 //! end)` blocks. The DAG joins them through two artifacts:
 //!
 //! 1. a **linearization** — the nodes in deterministic topological order,
-//!    lowered to legacy [`Layer`]s (joins become `LayerKind::Add` at the
-//!    join's output shape: identical elementwise GOPs, zero weights, zero
-//!    halo — the same approximation the faked-sequential zoo chains always
-//!    made); and
+//!    lowered to legacy [`Layer`]s (an `Add` join becomes `LayerKind::Add`
+//!    at the join's output shape — identical elementwise GOPs, zero
+//!    weights, zero halo, the same approximation the faked-sequential zoo
+//!    chains always made — and a `Concat` join becomes
+//!    `LayerKind::Concat`, costed as pure data movement: zero MACs under
+//!    Eq. 1); and
 //! 2. the **fusion-legal cut set** — a boundary in that order is a legal
 //!    block edge iff exactly **one** live value crosses it. A fusion block
 //!    hands exactly one tensor to its successor (the Fig. 7 pipeline), so a
@@ -50,7 +52,8 @@ pub fn linearize(d: &DagModel) -> Result<Linearization, DagError> {
             let node = &d.nodes[ni];
             let kind = match node.op {
                 DagOp::Layer(kind) => kind,
-                DagOp::Add { shape } | DagOp::Concat { shape } => LayerKind::Add { shape },
+                DagOp::Add { shape } => LayerKind::Add { shape },
+                DagOp::Concat { shape } => LayerKind::Concat { shape },
             };
             Layer::new(node.name.clone(), kind)
         })
@@ -168,7 +171,7 @@ mod tests {
     }
 
     #[test]
-    fn concat_lowers_to_add_at_output_shape() {
+    fn concat_lowers_to_concat_at_output_shape() {
         let d = DagModel::new(
             "cat",
             vec![GraphInput { name: "x".into(), shape: TensorShape::new(8, 8, 4) }],
@@ -195,8 +198,10 @@ mod tests {
         let lin = linearize(&d).unwrap();
         assert_eq!(
             lin.model.layers[2].kind,
-            LayerKind::Add { shape: TensorShape::new(8, 8, 16) }
+            LayerKind::Concat { shape: TensorShape::new(8, 8, 16) }
         );
+        // Concat is pure data movement: the lowered layer costs zero GOPs.
+        assert_eq!(lin.model.layers[2].op_gops(), 0.0);
         // Both interior boundaries carry two live values (x + a, then a + b).
         assert_eq!(lin.cuts, Some(vec![0, 3]));
     }

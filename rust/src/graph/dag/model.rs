@@ -29,9 +29,9 @@ pub struct GraphInput {
 ///
 /// Unary layer ops reuse [`LayerKind`] unchanged; the joins (`Add`,
 /// `Concat`) are native DAG ops because the linear IR cannot express their
-/// arity. `LayerKind::Add` is *not* allowed inside `DagOp::Layer` — the DAG
-/// canonical form for an elementwise sum is always [`DagOp::Add`], which
-/// keeps "is this a join?" a structural question.
+/// arity. `LayerKind::Add` and `LayerKind::Concat` are *not* allowed inside
+/// `DagOp::Layer` — the DAG canonical forms are always [`DagOp::Add`] /
+/// [`DagOp::Concat`], which keeps "is this a join?" a structural question.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum DagOp {
     /// A unary op from the linear IR: conv, FC, ReLU, batch-norm, pool.
@@ -39,9 +39,9 @@ pub enum DagOp {
     /// Elementwise sum of all inputs; every input must have shape `shape`.
     Add { shape: TensorShape },
     /// Channel concatenation: inputs share `shape`'s spatial dims and their
-    /// channels sum to `shape.c`. Lowered to `LayerKind::Add { shape }` for
-    /// costing (same elementwise GOPs, zero weights, zero halo) — see
-    /// `lower.rs`.
+    /// channels sum to `shape.c`. Lowered to `LayerKind::Concat { shape }`
+    /// for costing (pure data movement: zero MACs under Eq. 1, zero
+    /// weights, zero halo) — see `lower.rs`.
     Concat { shape: TensorShape },
 }
 
@@ -63,7 +63,7 @@ impl DagOp {
             DagOp::Layer(LayerKind::BatchNorm { .. }) => "batchnorm",
             DagOp::Layer(LayerKind::Pool { .. }) => "pool",
             DagOp::Layer(LayerKind::Add { .. }) | DagOp::Add { .. } => "add",
-            DagOp::Concat { .. } => "concat",
+            DagOp::Layer(LayerKind::Concat { .. }) | DagOp::Concat { .. } => "concat",
         }
     }
 }
@@ -301,6 +301,7 @@ impl DagModel {
         for layer in &m.layers {
             let op = match layer.kind {
                 LayerKind::Add { shape } => DagOp::Add { shape },
+                LayerKind::Concat { shape } => DagOp::Concat { shape },
                 other => DagOp::Layer(other),
             };
             nodes.push(DagNode { name: layer.name.clone(), op, inputs: vec![prev] });
@@ -323,6 +324,10 @@ fn check_node_shapes(node: &DagNode, got: &[TensorShape]) -> Result<(), DagError
         DagOp::Layer(LayerKind::Add { .. }) => Err(DagError::BadArity {
             node: node.name.clone(),
             message: "elementwise add must use the dag 'add' op, not a unary layer".into(),
+        }),
+        DagOp::Layer(LayerKind::Concat { .. }) => Err(DagError::BadArity {
+            node: node.name.clone(),
+            message: "concat must use the dag 'concat' op, not a unary layer".into(),
         }),
         DagOp::Layer(kind) => {
             if got.len() != 1 {

@@ -211,6 +211,10 @@ pub(crate) fn layer_to_json(l: &Layer) -> Json {
             pairs.push(("op", Json::Str("add".into())));
             pairs.push(("shape", shape_to_json(*shape)));
         }
+        LayerKind::Concat { shape } => {
+            pairs.push(("op", Json::Str("concat".into())));
+            pairs.push(("shape", shape_to_json(*shape)));
+        }
     }
     Json::obj(pairs)
 }
@@ -247,6 +251,9 @@ pub(crate) fn layer_from_json(v: &Json) -> Result<Layer, String> {
             stride: usize_field("stride")?,
         },
         "add" => LayerKind::Add {
+            shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
+        },
+        "concat" => LayerKind::Concat {
             shape: shape_from_json(v.get("shape")).ok_or("bad 'shape'")?,
         },
         other => return Err(format!("unknown op '{other}'")),

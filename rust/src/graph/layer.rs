@@ -111,8 +111,8 @@ impl FcSpec {
 }
 
 /// The layer types the CNML operator SDK supports that we model
-/// (conv, FC, ReLU, BatchNorm, pooling, elementwise add — the building
-/// blocks of every evaluated network).
+/// (conv, FC, ReLU, BatchNorm, pooling, elementwise add, channel concat —
+/// the building blocks of every evaluated network).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum LayerKind {
     Conv(ConvSpec),
@@ -125,6 +125,11 @@ pub enum LayerKind {
     Pool { shape: TensorShape, k: usize, stride: usize },
     /// Elementwise residual add over `shape`.
     Add { shape: TensorShape },
+    /// Channel-axis concatenation producing `shape` (the summed-channel
+    /// output). Pure data movement: under Eq. 1's MAC accounting it
+    /// performs zero arithmetic, unlike the one-op-per-element `Add` it
+    /// was previously costed as.
+    Concat { shape: TensorShape },
 }
 
 /// One layer in the model's execution order.
@@ -161,6 +166,9 @@ impl Layer {
                 (shape.elems() * k * k) as f64 / 1e9
             }
             LayerKind::Add { shape } => shape.elems() as f64 / 1e9,
+            // Concat moves bytes but multiplies nothing: Eq. 1 with zero
+            // MACs. Its traffic still shows up in `tensor_bytes`.
+            LayerKind::Concat { .. } => 0.0,
         }
     }
 
@@ -172,7 +180,8 @@ impl Layer {
             LayerKind::Fc(f) => f.n,
             LayerKind::ReLU { shape }
             | LayerKind::BatchNorm { shape }
-            | LayerKind::Add { shape } => shape.c,
+            | LayerKind::Add { shape }
+            | LayerKind::Concat { shape } => shape.c,
             LayerKind::Pool { shape, .. } => shape.c,
         }
     }
@@ -184,7 +193,8 @@ impl Layer {
             LayerKind::Fc(f) => TensorShape::new(1, 1, f.k),
             LayerKind::ReLU { shape }
             | LayerKind::BatchNorm { shape }
-            | LayerKind::Add { shape } => *shape,
+            | LayerKind::Add { shape }
+            | LayerKind::Concat { shape } => *shape,
             LayerKind::Pool { shape, .. } => *shape,
         }
     }
@@ -196,7 +206,8 @@ impl Layer {
             LayerKind::Fc(f) => TensorShape::new(1, 1, f.n),
             LayerKind::ReLU { shape }
             | LayerKind::BatchNorm { shape }
-            | LayerKind::Add { shape } => *shape,
+            | LayerKind::Add { shape }
+            | LayerKind::Concat { shape } => *shape,
             LayerKind::Pool { shape, stride, .. } => {
                 let s = (*stride).max(1);
                 TensorShape::new(shape.h / s, shape.w / s, shape.c)
@@ -309,6 +320,24 @@ mod tests {
         let shape = TensorShape::new(4, 4, 4);
         assert!(!Layer::new("r", LayerKind::ReLU { shape }).is_compute());
         assert!(!Layer::new("a", LayerKind::Add { shape }).is_compute());
+    }
+
+    #[test]
+    fn concat_is_free_data_movement() {
+        let shape = TensorShape::new(8, 8, 32);
+        let cat = Layer::new("cat", LayerKind::Concat { shape });
+        assert_eq!(cat.op_gops(), 0.0, "Eq. 1 with zero MACs");
+        assert!(!cat.is_compute());
+        assert_eq!(cat.channels(), 32);
+        assert_eq!(cat.input_shape(), shape);
+        assert_eq!(cat.output_shape(), shape);
+        assert_eq!(cat.weight_bytes(), 0.0);
+        assert_eq!(cat.halo_radius(), 0);
+        // Traffic is still accounted: input + output activations.
+        assert_eq!(cat.tensor_bytes(), 2.0 * shape.bytes());
+        // And strictly cheaper than the Add it used to be costed as.
+        let add = Layer::new("add", LayerKind::Add { shape });
+        assert!(add.op_gops() > cat.op_gops());
     }
 
     #[test]

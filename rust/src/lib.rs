@@ -29,6 +29,7 @@
 //! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
 //! | [`serving`] | multi-tenant serving simulator + load-aware (MP, batch) allocation (rust/docs/DESIGN.md §9, §10) |
 //! | [`stats`] | descriptive stats, regression, PCA (used for characterization) |
+//! | [`obs`] | observability: span tracing, metrics registry, profiling hooks (rust/docs/DESIGN.md §14) |
 //! | [`util`] | JSON, RNG, tables, CSV (offline-environment substitutes) |
 //! | [`bench_harness`] | criterion-replacement used by `rust/benches/` |
 //!
@@ -69,6 +70,7 @@
 //! the PJRT C API. Python is never on the request path.
 
 pub mod util;
+pub mod obs;
 pub mod stats;
 pub mod graph;
 pub mod zoo;
@@ -97,6 +99,7 @@ pub mod prelude {
                                 DagModel, DagNode, DagOp, Linearization,
                                 LoadedModel};
     pub use crate::graph::{DlmError, Layer, LayerKind, Model};
+    pub use crate::obs::{Domain, MetricsRegistry, Probe, TraceSession};
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;
     pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};

@@ -1,0 +1,562 @@
+//! The unified metrics registry (rust/docs/DESIGN.md §14.2).
+//!
+//! Every subsystem that counts something — the cost engine's cache stats,
+//! the tuner's evaluation budgets and phase timings, the serving
+//! simulator's SLO report — exports into one [`MetricsRegistry`] instead
+//! of growing another ad-hoc struct. The registry holds three metric
+//! kinds (counters, gauges, fixed-log-bucket histograms), each registered
+//! under one of two *domains*:
+//!
+//! - [`Domain::Sim`] — derived purely from simulated quantities (event
+//!   clocks, cache-key counts, predicted latencies). Bit-identical
+//!   run-to-run and across `--threads N`; CI gates on these exactly.
+//! - [`Domain::Wall`] — wall-clock measurements (tuning throughput, phase
+//!   timings, lock contention). Machine-dependent; exposed in a separate
+//!   section so no consumer can mistake one for the other (the PR 6
+//!   merged-`stats` vs `local_stats` discipline, promoted into the export
+//!   format itself).
+//!
+//! Exposition is dual: [`MetricsRegistry::snapshot`] renders JSON through
+//! [`crate::util::Json`] (`BTreeMap`-sorted keys, so deterministic
+//! byte-for-byte), and [`MetricsRegistry::to_prometheus`] renders the
+//! Prometheus text format with a `domain` label on every sample. The
+//! `dlfusion report` command round-trips a snapshot back through
+//! [`MetricsRegistry::from_snapshot`] to render it as a table.
+
+use std::collections::BTreeMap;
+
+use crate::util::{Json, Table};
+
+/// Which clock a metric is derived from. The split is the repo's central
+/// observability contract: `Sim` values are pure functions of the inputs
+/// (pinned bit-identical by rust/tests/parallel_parity.rs), `Wall` values
+/// are measurements of this machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    /// Deterministic: simulated time, counted work, predicted latencies.
+    Sim,
+    /// Machine-dependent: wall-clock durations, throughput, contention.
+    Wall,
+}
+
+impl Domain {
+    /// Section key used in the canonical snapshot JSON.
+    pub fn key(self) -> &'static str {
+        match self {
+            Domain::Sim => "deterministic",
+            Domain::Wall => "wall",
+        }
+    }
+
+    /// Short label used in Prometheus exposition and tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Domain::Sim => "sim",
+            Domain::Wall => "wall",
+        }
+    }
+}
+
+/// Histogram bucket layout: log2 bounds `2^-4, 2^-3, …, 2^24` plus an
+/// overflow bucket. Fixed (not data-dependent) so two histograms are
+/// always mergeable and snapshots are comparable across runs.
+const HIST_MIN_EXP: i32 = -4;
+const HIST_NUM_BOUNDS: usize = 29;
+
+/// A fixed-log-bucket histogram (unit-agnostic; callers pick ms, µs, …).
+///
+/// Bucketing uses only comparisons against exact powers of two — no
+/// transcendental functions — so the bucket a value lands in is
+/// deterministic everywhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    /// `counts[i]` = observations with `bound(i-1) < v <= bound(i)`;
+    /// `counts[HIST_NUM_BOUNDS]` is the overflow bucket.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: vec![0; HIST_NUM_BOUNDS + 1], count: 0, sum: 0.0 }
+    }
+}
+
+impl Histogram {
+    /// Upper bound of bucket `i` (exact power of two).
+    fn bound(i: usize) -> f64 {
+        2f64.powi(HIST_MIN_EXP + i as i32)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = (0..HIST_NUM_BOUNDS)
+            .find(|&i| v <= Self::bound(i))
+            .unwrap_or(HIST_NUM_BOUNDS);
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// JSON form: `{"count", "sum", "buckets": [[le, n], …]}` with only
+    /// the non-empty buckets listed (the overflow bucket's `le` is the
+    /// string `"+Inf"`).
+    fn to_json(&self) -> Json {
+        let mut buckets = Vec::new();
+        for (i, &n) in self.counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let le = if i < HIST_NUM_BOUNDS {
+                Json::Num(Self::bound(i))
+            } else {
+                Json::Str("+Inf".into())
+            };
+            buckets.push(Json::Arr(vec![le, Json::Num(n as f64)]));
+        }
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<Histogram> {
+        let mut counts = vec![0u64; HIST_NUM_BOUNDS + 1];
+        for b in v.get("buckets").as_arr()? {
+            let n = b.at(1).as_f64()? as u64;
+            let idx = match b.at(0) {
+                Json::Str(s) if s == "+Inf" => HIST_NUM_BOUNDS,
+                Json::Num(le) => (0..HIST_NUM_BOUNDS)
+                    .find(|&i| (Self::bound(i) - le).abs() < 1e-12)?,
+                _ => return None,
+            };
+            counts[idx] = n;
+        }
+        Some(Histogram {
+            counts,
+            count: v.get("count").as_f64()? as u64,
+            sum: v.get("sum").as_f64()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+impl MetricValue {
+    fn kind(&self) -> &'static str {
+        match self {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Metric {
+    domain: Domain,
+    value: MetricValue,
+}
+
+/// The one registry behind `--metrics-out`, `dlfusion report`, and the
+/// perf-smoke CI artifact. Name-keyed over a `BTreeMap`, so every
+/// exposition walks metrics in sorted order (deterministic output).
+///
+/// Writing a name with a different kind (or domain) than before replaces
+/// the previous registration — last writer wins, no silent partial
+/// merges.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    metrics: BTreeMap<String, Metric>,
+    help: BTreeMap<String, String>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// Increment a counter (created at zero on first use).
+    pub fn inc(&mut self, domain: Domain, name: &str, by: u64) {
+        match self.metrics.get_mut(name) {
+            Some(m) if m.domain == domain => {
+                if let MetricValue::Counter(c) = &mut m.value {
+                    *c += by;
+                    return;
+                }
+                m.value = MetricValue::Counter(by);
+            }
+            _ => {
+                self.metrics.insert(
+                    name.to_string(),
+                    Metric { domain, value: MetricValue::Counter(by) },
+                );
+            }
+        }
+    }
+
+    /// Set a gauge to its current value.
+    pub fn set_gauge(&mut self, domain: Domain, name: &str, v: f64) {
+        self.metrics.insert(
+            name.to_string(),
+            Metric { domain, value: MetricValue::Gauge(v) },
+        );
+    }
+
+    /// Record one observation into a histogram (created empty on first
+    /// use).
+    pub fn observe(&mut self, domain: Domain, name: &str, v: f64) {
+        match self.metrics.get_mut(name) {
+            Some(m) if m.domain == domain => {
+                if let MetricValue::Histogram(h) = &mut m.value {
+                    h.observe(v);
+                    return;
+                }
+                let mut h = Histogram::default();
+                h.observe(v);
+                m.value = MetricValue::Histogram(h);
+            }
+            _ => {
+                let mut h = Histogram::default();
+                h.observe(v);
+                self.metrics.insert(
+                    name.to_string(),
+                    Metric { domain, value: MetricValue::Histogram(h) },
+                );
+            }
+        }
+    }
+
+    /// Attach a help string (emitted as `# HELP` in Prometheus text).
+    pub fn describe(&mut self, name: &str, help: &str) {
+        self.help.insert(name.to_string(), help.to_string());
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        match self.metrics.get(name)?.value {
+            MetricValue::Counter(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.metrics.get(name)?.value {
+            MetricValue::Gauge(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        match &self.metrics.get(name)?.value {
+            MetricValue::Histogram(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// One domain's metrics as a flat JSON object: counters and gauges as
+    /// numbers, histograms as their structured form. This is the section
+    /// body the snapshot (and the perf-smoke `metrics`/`wall_metrics`
+    /// sections) are built from.
+    pub fn domain_json(&self, domain: Domain) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, m) in &self.metrics {
+            if m.domain != domain {
+                continue;
+            }
+            let v = match &m.value {
+                MetricValue::Counter(c) => Json::Num(*c as f64),
+                MetricValue::Gauge(g) => Json::Num(*g),
+                MetricValue::Histogram(h) => h.to_json(),
+            };
+            obj.insert(name.clone(), v);
+        }
+        Json::Obj(obj)
+    }
+
+    /// The canonical snapshot: `{"deterministic": {…}, "wall": {…}}`.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (Domain::Sim.key(), self.domain_json(Domain::Sim)),
+            (Domain::Wall.key(), self.domain_json(Domain::Wall)),
+        ])
+    }
+
+    /// Rebuild a registry from a snapshot. Accepts both the canonical
+    /// section keys (`deterministic`/`wall`) and the perf-smoke CI ones
+    /// (`metrics`/`wall_metrics`), so `dlfusion report` renders either
+    /// artifact. Plain numbers come back as gauges (the snapshot does not
+    /// distinguish them from counters); histograms round-trip exactly.
+    pub fn from_snapshot(doc: &Json) -> Result<MetricsRegistry, String> {
+        let mut reg = MetricsRegistry::new();
+        let mut any_section = false;
+        for (keys, domain) in [
+            (["deterministic", "metrics"], Domain::Sim),
+            (["wall", "wall_metrics"], Domain::Wall),
+        ] {
+            for key in keys {
+                let Some(obj) = doc.get(key).as_obj() else { continue };
+                any_section = true;
+                for (name, v) in obj {
+                    match v {
+                        Json::Num(n) => reg.set_gauge(domain, name, *n),
+                        Json::Obj(_) => {
+                            let h = Histogram::from_json(v).ok_or_else(|| {
+                                format!("metric '{name}' is not a histogram")
+                            })?;
+                            reg.metrics.insert(
+                                name.clone(),
+                                Metric { domain, value: MetricValue::Histogram(h) },
+                            );
+                        }
+                        _ => {
+                            return Err(format!(
+                                "metric '{name}' has a non-numeric value"));
+                        }
+                    }
+                }
+            }
+        }
+        if !any_section {
+            return Err("no metrics sections found (expected \
+                        'deterministic'/'wall' or 'metrics'/'wall_metrics')"
+                .into());
+        }
+        Ok(reg)
+    }
+
+    /// Prometheus text exposition. Metric names are sanitized to the
+    /// Prometheus charset and prefixed `dlfusion_`; every sample carries a
+    /// `domain="sim"|"wall"` label so the determinism contract survives
+    /// scraping.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.metrics {
+            let pname = prom_name(name);
+            if let Some(h) = self.help.get(name) {
+                out.push_str(&format!("# HELP {pname} {h}\n"));
+            }
+            out.push_str(&format!("# TYPE {pname} {}\n", m.value.kind()));
+            let dom = m.domain.label();
+            match &m.value {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!(
+                        "{pname}{{domain=\"{dom}\"}} {}\n", fmt_num(*c as f64)));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{pname}{{domain=\"{dom}\"}} {}\n", fmt_num(*g)));
+                }
+                MetricValue::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, &n) in h.counts.iter().enumerate() {
+                        cum += n;
+                        // Skip still-empty leading buckets to keep the
+                        // exposition short; cumulative counts stay exact.
+                        if cum == 0 && i < HIST_NUM_BOUNDS {
+                            continue;
+                        }
+                        let le = if i < HIST_NUM_BOUNDS {
+                            fmt_num(Histogram::bound(i))
+                        } else {
+                            "+Inf".to_string()
+                        };
+                        out.push_str(&format!(
+                            "{pname}_bucket{{domain=\"{dom}\",le=\"{le}\"}} {cum}\n"));
+                    }
+                    out.push_str(&format!(
+                        "{pname}_sum{{domain=\"{dom}\"}} {}\n", fmt_num(h.sum())));
+                    out.push_str(&format!(
+                        "{pname}_count{{domain=\"{dom}\"}} {}\n", h.count()));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the registry as the `dlfusion report` table.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "domain", "kind", "value"])
+            .label_first()
+            .with_title("metrics snapshot");
+        for (name, m) in &self.metrics {
+            let value = match &m.value {
+                MetricValue::Counter(c) => format!("{c}"),
+                MetricValue::Gauge(g) => fmt_num(*g),
+                MetricValue::Histogram(h) => format!(
+                    "n={} sum={} mean={:.4}", h.count(), fmt_num(h.sum()), h.mean()),
+            };
+            t.row(vec![
+                name.clone(),
+                m.domain.label().to_string(),
+                m.value.kind().to_string(),
+                value,
+            ]);
+        }
+        t
+    }
+}
+
+/// Number formatting shared with [`crate::util::Json`]: integral values
+/// print without a fraction, everything else via the shortest `{}` form.
+/// Keeps Prometheus text byte-stable with the JSON exposition.
+fn fmt_num(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s = String::from("dlfusion_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            s.push(c);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut r = MetricsRegistry::new();
+        r.inc(Domain::Sim, "hits", 3);
+        r.inc(Domain::Sim, "hits", 4);
+        r.set_gauge(Domain::Wall, "rate", 1.5);
+        r.set_gauge(Domain::Wall, "rate", 2.5);
+        assert_eq!(r.counter("hits"), Some(7));
+        assert_eq!(r.gauge("rate"), Some(2.5));
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_are_deterministic_powers_of_two() {
+        let mut h = Histogram::default();
+        h.observe(0.05); // <= 2^-4
+        h.observe(1.0); // exactly a bound
+        h.observe(3.0); // (2, 4]
+        h.observe(1e9); // overflow
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[4], 1, "1.0 lands on the 2^0 bound");
+        assert_eq!(h.counts[6], 1, "3.0 in (2, 4]");
+        assert_eq!(h.counts[HIST_NUM_BOUNDS], 1);
+    }
+
+    #[test]
+    fn snapshot_sections_segregate_domains() {
+        let mut r = MetricsRegistry::new();
+        r.inc(Domain::Sim, "evals", 10);
+        r.set_gauge(Domain::Wall, "wall_us", 123.0);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("deterministic").get("evals").as_f64(), Some(10.0));
+        assert!(snap.get("deterministic").get("wall_us").is_null());
+        assert_eq!(snap.get("wall").get("wall_us").as_f64(), Some(123.0));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_from_snapshot() {
+        let mut r = MetricsRegistry::new();
+        r.inc(Domain::Sim, "evals", 10);
+        r.observe(Domain::Wall, "lat_ms", 0.5);
+        r.observe(Domain::Wall, "lat_ms", 7.0);
+        let snap = r.snapshot();
+        let back = MetricsRegistry::from_snapshot(&snap).unwrap();
+        // Counters come back as gauges; histograms round-trip exactly.
+        assert_eq!(back.gauge("evals"), Some(10.0));
+        let h = back.histogram("lat_ms").unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 7.5);
+        assert_eq!(back.snapshot(), snap);
+    }
+
+    #[test]
+    fn from_snapshot_accepts_perf_smoke_keys_and_rejects_garbage() {
+        let doc = Json::parse(
+            r#"{"schema": 2, "metrics": {"a_ms": 1.5}, "wall_metrics": {"b": 2}}"#,
+        )
+        .unwrap();
+        let r = MetricsRegistry::from_snapshot(&doc).unwrap();
+        assert_eq!(r.gauge("a_ms"), Some(1.5));
+        assert_eq!(r.gauge("b"), Some(2.0));
+        let err = MetricsRegistry::from_snapshot(&Json::parse("{}").unwrap());
+        assert!(err.unwrap_err().contains("no metrics sections"));
+        let bad = Json::parse(r#"{"metrics": {"x": "nope"}}"#).unwrap();
+        assert!(MetricsRegistry::from_snapshot(&bad).is_err());
+    }
+
+    #[test]
+    fn prometheus_text_carries_domain_labels_and_types() {
+        let mut r = MetricsRegistry::new();
+        r.inc(Domain::Sim, "cache.hits", 5);
+        r.describe("cache.hits", "cost-engine cache hits");
+        r.set_gauge(Domain::Wall, "rate", 2.5);
+        r.observe(Domain::Wall, "lat", 3.0);
+        let text = r.to_prometheus();
+        assert!(text.contains("# HELP dlfusion_cache_hits cost-engine cache hits"));
+        assert!(text.contains("# TYPE dlfusion_cache_hits counter"));
+        assert!(text.contains("dlfusion_cache_hits{domain=\"sim\"} 5"));
+        assert!(text.contains("dlfusion_rate{domain=\"wall\"} 2.5"));
+        assert!(text.contains("dlfusion_lat_bucket{domain=\"wall\",le=\"4\"} 1"));
+        assert!(text.contains("dlfusion_lat_bucket{domain=\"wall\",le=\"+Inf\"} 1"));
+        assert!(text.contains("dlfusion_lat_count{domain=\"wall\"} 1"));
+    }
+
+    #[test]
+    fn exposition_is_deterministic() {
+        let build = || {
+            let mut r = MetricsRegistry::new();
+            r.set_gauge(Domain::Sim, "z", 1.0);
+            r.inc(Domain::Sim, "a", 2);
+            r.observe(Domain::Wall, "m", 0.25);
+            r
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.snapshot().to_string(), b.snapshot().to_string());
+        assert_eq!(a.to_prometheus(), b.to_prometheus());
+    }
+
+    #[test]
+    fn report_table_lists_every_metric() {
+        let mut r = MetricsRegistry::new();
+        r.inc(Domain::Sim, "evals", 10);
+        r.set_gauge(Domain::Wall, "rate", 2.5);
+        let t = r.render_table();
+        assert_eq!(t.num_rows(), 2);
+        let s = t.render();
+        assert!(s.contains("evals") && s.contains("sim"));
+        assert!(s.contains("rate") && s.contains("wall"));
+    }
+}

@@ -1,0 +1,32 @@
+//! Unified observability: span tracing, a metrics registry, and profiling
+//! hooks (rust/docs/DESIGN.md §14).
+//!
+//! The repo's telemetry used to be scattered — `CostEngine` hit/miss
+//! stats, tuner `SearchStats`, serving `Counters`/`LatencyRecorder`,
+//! `events_processed` — each with its own struct and its own printing.
+//! This module is the one layer they all export through:
+//!
+//! - [`trace`]: hierarchical [`Span`]s in a [`TraceSession`], exported as
+//!   Chrome trace-event JSON (Perfetto-viewable) by `tune --trace-out`
+//!   and `serve-sim --trace-out`;
+//! - [`metrics`]: the [`MetricsRegistry`] (counters, gauges,
+//!   fixed-log-bucket histograms) behind `--metrics-out` and
+//!   `dlfusion report`, with JSON and Prometheus-text exposition;
+//! - [`probe`]: the [`Probe`] trait benches and `perf-smoke` subscribe
+//!   through.
+//!
+//! One rule binds all three: **every value is tagged with its clock**.
+//! Simulated-time quantities ([`Clock::Sim`], [`Domain::Sim`]) are pure
+//! functions of the inputs — bit-identical run-to-run and across
+//! `--threads N`, pinned by rust/tests/parallel_parity.rs and gated
+//! exactly in CI. Wall-clock quantities ([`Clock::Wall`],
+//! [`Domain::Wall`]) are machine measurements, exported in a separate
+//! section/process so the two can never be confused downstream.
+
+pub mod metrics;
+pub mod probe;
+pub mod trace;
+
+pub use metrics::{Domain, Histogram, MetricsRegistry};
+pub use probe::{NullProbe, Probe, RegistryProbe};
+pub use trace::{Clock, Span, TraceSession};

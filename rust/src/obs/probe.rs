@@ -1,0 +1,87 @@
+//! Profiling hooks: the [`Probe`] trait (rust/docs/DESIGN.md §14.3).
+//!
+//! Instrumented code (the bench harness, `perf-smoke`, future fleet and
+//! learned-search drivers) emits named counters and samples through a
+//! `&mut dyn Probe` instead of hand-rolling yet another stats struct. The
+//! two shipped sinks are [`NullProbe`] (the free default) and
+//! [`RegistryProbe`] (funnels everything into a [`MetricsRegistry`] under
+//! a fixed [`Domain`], which is how `perf-smoke` routes its wall
+//! measurements into the unified snapshot).
+
+use super::metrics::{Domain, MetricsRegistry};
+
+/// A sink for instrumentation events. All methods have no-op defaults so
+/// a probe implements only what it cares about.
+pub trait Probe {
+    /// A monotonically accumulated count (events processed, cache hits).
+    fn counter(&mut self, _name: &str, _value: u64) {}
+
+    /// A point-in-time measurement (a rate, a mean latency).
+    fn sample(&mut self, _name: &str, _value: f64) {}
+
+    /// A completed timed section, duration in microseconds.
+    fn span_us(&mut self, _name: &str, _dur_us: f64) {}
+}
+
+/// The do-nothing probe: instrumentation compiles to nothing observable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullProbe;
+
+impl Probe for NullProbe {}
+
+/// Routes probe events into a [`MetricsRegistry`]: counters accumulate,
+/// samples set gauges, spans feed a log-bucket histogram (in ms).
+pub struct RegistryProbe<'a> {
+    registry: &'a mut MetricsRegistry,
+    domain: Domain,
+}
+
+impl<'a> RegistryProbe<'a> {
+    pub fn new(registry: &'a mut MetricsRegistry, domain: Domain) -> Self {
+        RegistryProbe { registry, domain }
+    }
+}
+
+impl Probe for RegistryProbe<'_> {
+    fn counter(&mut self, name: &str, value: u64) {
+        self.registry.inc(self.domain, name, value);
+    }
+
+    fn sample(&mut self, name: &str, value: f64) {
+        self.registry.set_gauge(self.domain, name, value);
+    }
+
+    fn span_us(&mut self, name: &str, dur_us: f64) {
+        self.registry.observe(self.domain, name, dur_us / 1000.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_probe_accepts_everything() {
+        let mut p = NullProbe;
+        p.counter("c", 1);
+        p.sample("s", 2.0);
+        p.span_us("t", 3.0);
+    }
+
+    #[test]
+    fn registry_probe_routes_by_event_kind() {
+        let mut reg = MetricsRegistry::new();
+        {
+            let mut p = RegistryProbe::new(&mut reg, Domain::Wall);
+            p.counter("events", 5);
+            p.counter("events", 2);
+            p.sample("rate", 9.5);
+            p.span_us("section", 2000.0);
+        }
+        assert_eq!(reg.counter("events"), Some(7));
+        assert_eq!(reg.gauge("rate"), Some(9.5));
+        let h = reg.histogram("section").unwrap();
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 2.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Hierarchical span tracing with Chrome trace-event export
+//! (rust/docs/DESIGN.md §14.1).
+//!
+//! A [`TraceSession`] collects [`Span`]s (named intervals with a track id
+//! and key/value args) and counter samples, then serializes them as Chrome
+//! trace-event JSON — the `{"traceEvents": […]}` format `chrome://tracing`
+//! and Perfetto load directly.
+//!
+//! The two-clock rule: every span is stamped with the [`Clock`] it was
+//! measured on.
+//!
+//! - [`Clock::Sim`] spans carry *simulated* milliseconds (the serving
+//!   event loop's clock). They are pure functions of the run's inputs:
+//!   bit-identical run-to-run and under `--threads N`, and pinned so by
+//!   rust/tests/parallel_parity.rs.
+//! - [`Clock::Wall`] spans carry wall-clock microseconds (tuning phases).
+//!   They are measurements of this machine and may differ every run.
+//!
+//! The export never mixes the two: each clock renders as its own process
+//! (`pid`) with a `process_name` metadata record, so a mixed session shows
+//! two clearly-labeled lanes in the viewer and a deterministic consumer
+//! can filter on `pid` alone.
+
+use crate::util::Json;
+
+/// Which clock a span's timestamps were taken from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// Simulated time (milliseconds in the discrete-event simulator).
+    Sim,
+    /// Wall-clock time (microseconds since the session's epoch).
+    Wall,
+}
+
+impl Clock {
+    /// Chrome trace `pid` for this clock's lane.
+    fn pid(self) -> u64 {
+        match self {
+            Clock::Sim => 1,
+            Clock::Wall => 2,
+        }
+    }
+
+    fn process_name(self) -> &'static str {
+        match self {
+            Clock::Sim => "sim-time (deterministic)",
+            Clock::Wall => "wall-clock (machine-dependent)",
+        }
+    }
+}
+
+/// One complete ("X"-phase) interval on a [`Clock`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    /// Category string (Chrome trace `cat`; used for viewer filtering).
+    pub cat: String,
+    pub clock: Clock,
+    /// Start in microseconds on `clock` (Chrome trace `ts` is always µs;
+    /// sim-time spans convert their milliseconds once, exactly, here).
+    pub ts_us: f64,
+    pub dur_us: f64,
+    /// Track (Chrome trace `tid`): a lane within the clock's process —
+    /// model index for serving spans, backend/batch lane for tuning.
+    pub track: u64,
+    pub args: Vec<(String, Json)>,
+}
+
+/// One sample of a named counter track ("C"-phase event).
+#[derive(Debug, Clone, PartialEq)]
+struct CounterSample {
+    name: String,
+    clock: Clock,
+    ts_us: f64,
+    value: f64,
+}
+
+/// An in-memory trace being assembled for export.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSession {
+    /// Session name (rendered as the trace's `otherData.name`).
+    pub name: String,
+    spans: Vec<Span>,
+    counters: Vec<CounterSample>,
+}
+
+impl TraceSession {
+    pub fn new(name: &str) -> TraceSession {
+        TraceSession { name: name.to_string(), ..TraceSession::default() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.counters.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len() + self.counters.len()
+    }
+
+    pub fn push(&mut self, span: Span) {
+        self.spans.push(span);
+    }
+
+    /// Record a simulated-time span from `[start_ms, end_ms]` on `track`.
+    pub fn sim_span(&mut self, name: &str, cat: &str, track: u64, start_ms: f64,
+                    end_ms: f64, args: Vec<(String, Json)>) {
+        self.push(Span {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            clock: Clock::Sim,
+            ts_us: start_ms * 1000.0,
+            dur_us: (end_ms - start_ms) * 1000.0,
+            track,
+            args,
+        });
+    }
+
+    /// Record a wall-clock span from `[start_us, start_us + dur_us]`.
+    pub fn wall_span(&mut self, name: &str, cat: &str, track: u64, start_us: f64,
+                     dur_us: f64, args: Vec<(String, Json)>) {
+        self.push(Span {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            clock: Clock::Wall,
+            ts_us: start_us,
+            dur_us,
+            track,
+            args,
+        });
+    }
+
+    /// Record one sample of a simulated-time counter track (rendered as a
+    /// stepped area chart by the trace viewers).
+    pub fn sim_counter(&mut self, name: &str, time_ms: f64, value: f64) {
+        self.counters.push(CounterSample {
+            name: name.to_string(),
+            clock: Clock::Sim,
+            ts_us: time_ms * 1000.0,
+            value,
+        });
+    }
+
+    fn uses_clock(&self, clock: Clock) -> bool {
+        self.spans.iter().any(|s| s.clock == clock)
+            || self.counters.iter().any(|c| c.clock == clock)
+    }
+
+    /// Serialize as a Chrome trace-event document. Events appear in
+    /// insertion order after the per-clock `process_name` metadata, so the
+    /// output is a deterministic function of the recorded spans (for
+    /// [`Clock::Sim`]-only sessions, deterministic end to end).
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        for clock in [Clock::Sim, Clock::Wall] {
+            if !self.uses_clock(clock) {
+                continue;
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::Str("process_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(clock.pid() as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![(
+                    "name",
+                    Json::Str(clock.process_name().into()),
+                )])),
+            ]));
+        }
+        for s in &self.spans {
+            let args: Vec<(&str, Json)> =
+                s.args.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+            events.push(Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("cat", Json::Str(s.cat.clone())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(s.ts_us)),
+                ("dur", Json::Num(s.dur_us)),
+                ("pid", Json::Num(s.clock.pid() as f64)),
+                ("tid", Json::Num(s.track as f64)),
+                ("args", Json::obj(args)),
+            ]));
+        }
+        for c in &self.counters {
+            events.push(Json::obj(vec![
+                ("name", Json::Str(c.name.clone())),
+                ("ph", Json::Str("C".into())),
+                ("ts", Json::Num(c.ts_us)),
+                ("pid", Json::Num(c.clock.pid() as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![(c.name.as_str(), Json::Num(c.value))])),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+            ("otherData", Json::obj(vec![("name", Json::Str(self.name.clone()))])),
+        ])
+    }
+
+    /// Compact single-line serialization of [`Self::to_chrome_json`].
+    pub fn to_chrome_string(&self) -> String {
+        self.to_chrome_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_spans_convert_ms_to_us_exactly() {
+        let mut t = TraceSession::new("s");
+        t.sim_span("svc", "serving", 3, 1.5, 4.0, vec![]);
+        assert_eq!(t.len(), 1);
+        let doc = t.to_chrome_json();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // events[0] is the process_name metadata record.
+        assert_eq!(events[0].get("ph").as_str(), Some("M"));
+        let span = &events[1];
+        assert_eq!(span.get("ph").as_str(), Some("X"));
+        assert_eq!(span.get("ts").as_f64(), Some(1500.0));
+        assert_eq!(span.get("dur").as_f64(), Some(2500.0));
+        assert_eq!(span.get("pid").as_f64(), Some(1.0));
+        assert_eq!(span.get("tid").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn clocks_render_as_separate_labeled_processes() {
+        let mut t = TraceSession::new("mixed");
+        t.sim_span("a", "serving", 0, 0.0, 1.0, vec![]);
+        t.wall_span("b", "tuning", 0, 0.0, 50.0, vec![]);
+        let doc = t.to_chrome_json();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        let meta: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 2);
+        assert!(meta[0].get("args").get("name").as_str().unwrap()
+            .contains("deterministic"));
+        assert!(meta[1].get("args").get("name").as_str().unwrap()
+            .contains("machine-dependent"));
+        // The two spans land in different pids.
+        let pids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .map(|e| e.get("pid").as_f64().unwrap())
+            .collect();
+        assert_eq!(pids, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn counter_samples_render_as_c_events() {
+        let mut t = TraceSession::new("c");
+        t.sim_counter("free_cores", 2.0, 30.0);
+        let doc = t.to_chrome_json();
+        let ev = doc.get("traceEvents").at(1);
+        assert_eq!(ev.get("ph").as_str(), Some("C"));
+        assert_eq!(ev.get("ts").as_f64(), Some(2000.0));
+        assert_eq!(ev.get("args").get("free_cores").as_f64(), Some(30.0));
+    }
+
+    #[test]
+    fn export_is_valid_json_and_deterministic() {
+        let build = || {
+            let mut t = TraceSession::new("d");
+            t.sim_span("x", "serving", 1, 0.25, 0.75,
+                       vec![("id".into(), Json::Num(7.0))]);
+            t.sim_counter("depth", 0.25, 1.0);
+            t.to_chrome_string()
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a, b);
+        let doc = Json::parse(&a).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").as_str(), Some("ms"));
+        assert!(doc.get("traceEvents").as_arr().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn empty_session_exports_no_events() {
+        let t = TraceSession::new("empty");
+        assert!(t.is_empty());
+        let doc = t.to_chrome_json();
+        assert!(doc.get("traceEvents").as_arr().unwrap().is_empty());
+    }
+}

@@ -42,6 +42,10 @@ pub struct SearchStats {
     pub cache_misses: usize,
     /// Wall-clock search time, microseconds.
     pub wall_us: u64,
+    /// Wall-clock time of the parallel cache-prewarm pool, microseconds —
+    /// zero for sequential or budgeted runs, which have no prewarm phase.
+    /// The recurrence/enumeration phase is `wall_us - prewarm_us`.
+    pub prewarm_us: u64,
 }
 
 /// Block-size rule a DP or enumeration admits.
@@ -248,6 +252,7 @@ fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
         let costs = ParallelMap::new(threads)
             .map(&pairs, |_, &(i, j)| shared.block_latency_sweep(i, j, mp_set));
         rows = pairs.into_iter().zip(costs).collect();
+        stats.prewarm_us = t0.elapsed().as_micros() as u64;
     }
 
     // best_block[i][j-1]: (cost, mp) of the best single block over [i, j).

@@ -148,6 +148,7 @@ fn enumerate(engine: &mut CostEngine, mp_set: &[usize],
             mp_set.iter().map(|&mp| shared.block_latency(i, j, mp)).collect::<Vec<f64>>()
         });
         table = Some(pairs.into_iter().zip(rows).collect());
+        stats.prewarm_us = t0.elapsed().as_micros() as u64;
     }
 
     // Each mask bit k set = a cut after layer k.

@@ -57,5 +57,5 @@ pub use cluster::{simulate, simulate_with, ClusterConfig, CompletedRequest,
                   ModelService, SimEvent, SimEventKind, SimResult};
 pub use queue::{DispatchPolicy, QueueSet, QueuedRequest, DEFAULT_BATCH_WAIT_MS,
                 DEFAULT_MAX_BATCH};
-pub use report::SloReport;
+pub use report::{sim_trace, ServingSeries, SloReport};
 pub use workload::{generate_trace, ArrivalProcess, ModelMix, Request};

@@ -7,9 +7,139 @@
 //! under a deadline.
 
 use crate::coordinator::metrics::{Counters, LatencyRecorder};
-use crate::util::Table;
+use crate::obs::{Domain, MetricsRegistry, TraceSession};
+use crate::util::{Json, Table};
 
-use super::cluster::SimResult;
+use super::cluster::{ModelService, SimEventKind, SimResult};
+
+/// Utilization buckets per run (the series is a report/trace aid, not a
+/// raw log, so it stays small regardless of trace length).
+const UTIL_BUCKETS: usize = 64;
+
+/// Queue-depth samples kept after deterministic downsampling.
+const MAX_QUEUE_SAMPLES: usize = 256;
+
+/// Time-series view of one simulation run (rust/docs/DESIGN.md §14):
+/// event-sampled queue depth plus fixed-bucket core utilization. Both are
+/// pure functions of the (deterministic) simulation, so metrics snapshots
+/// and trace exports built from them are bit-identical run to run and
+/// across `--threads` counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServingSeries {
+    /// Sample times, simulated ms — one entry per Arrive/Start event
+    /// (empty when the run recorded no events).
+    pub queue_time_ms: Vec<f64>,
+    /// Requests waiting (arrived, not yet started) after each sample.
+    pub queue_depth: Vec<u64>,
+    /// Width of one utilization bucket, ms (0 when the run is empty).
+    pub util_bucket_ms: f64,
+    /// Busy-core fraction per bucket over `[0, makespan)`.
+    pub utilization: Vec<f64>,
+}
+
+impl ServingSeries {
+    /// Replay a run into the series. Queue depth comes from the event log
+    /// (each `Arrive` is one waiting rider, each `Start` seats one);
+    /// utilization comes from the completion records, where each rider
+    /// carries its `cores / batch` share of the invocation's reservation —
+    /// an invocation's riders sum back to exactly its reserved cores.
+    pub fn from_sim(result: &SimResult) -> ServingSeries {
+        let mut s = ServingSeries::default();
+        let mut waiting: u64 = 0;
+        for e in &result.events {
+            match e.kind {
+                SimEventKind::Arrive { .. } => waiting += 1,
+                SimEventKind::Start { .. } => waiting = waiting.saturating_sub(1),
+                SimEventKind::Finish { .. } => continue,
+            }
+            s.queue_time_ms.push(e.time_ms);
+            s.queue_depth.push(waiting);
+        }
+        s.downsample_queue(MAX_QUEUE_SAMPLES);
+        let makespan = result.makespan_ms();
+        if makespan > 0.0 && !result.completed.is_empty() {
+            let bucket = makespan / UTIL_BUCKETS as f64;
+            let mut busy_ms = vec![0.0; UTIL_BUCKETS];
+            for c in &result.completed {
+                let weight = c.cores as f64 / c.batch as f64;
+                for (b, acc) in busy_ms.iter_mut().enumerate() {
+                    let lo = b as f64 * bucket;
+                    let overlap =
+                        (c.finish_ms.min(lo + bucket) - c.start_ms.max(lo)).max(0.0);
+                    *acc += weight * overlap;
+                }
+            }
+            s.util_bucket_ms = bucket;
+            s.utilization = busy_ms
+                .into_iter()
+                .map(|b| b / (result.num_cores as f64 * bucket))
+                .collect();
+        }
+        s
+    }
+
+    /// Deterministic decimation: keep every `ceil(n / cap)`-th sample plus
+    /// the final one, so reruns agree sample for sample.
+    fn downsample_queue(&mut self, cap: usize) {
+        let n = self.queue_time_ms.len();
+        if n <= cap {
+            return;
+        }
+        let stride = n.div_ceil(cap);
+        let mut keep: Vec<usize> = (0..n).step_by(stride).collect();
+        if *keep.last().unwrap() != n - 1 {
+            keep.push(n - 1);
+        }
+        self.queue_time_ms = keep.iter().map(|&i| self.queue_time_ms[i]).collect();
+        self.queue_depth = keep.iter().map(|&i| self.queue_depth[i]).collect();
+    }
+
+    /// Highest sampled queue depth (0 when no events were recorded).
+    pub fn peak_queue_depth(&self) -> u64 {
+        self.queue_depth.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Highest bucket utilization (0 when the run is empty).
+    pub fn peak_utilization(&self) -> f64 {
+        self.utilization.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Build the sim-time trace of a recorded run: one lane (`tid`) per model
+/// with a queue span (when the request waited) and a service span per
+/// completed request, plus queue-depth and core-utilization counter
+/// tracks. Every event is on the sim clock, so the Chrome trace-event
+/// export is bit-identical run to run and across `--threads` counts
+/// (pinned by rust/tests/parallel_parity.rs). Requires the simulation to
+/// have recorded events for the queue-depth track; spans need only the
+/// completion records.
+pub fn sim_trace(result: &SimResult, services: &[ModelService],
+                 name: &str) -> TraceSession {
+    let mut tr = TraceSession::new(name);
+    for c in &result.completed {
+        let model = services.get(c.model).map_or("model", |s| s.name.as_str());
+        if c.queue_ms() > 0.0 {
+            tr.sim_span(&format!("{model} queue"), "queue", c.model as u64,
+                        c.arrival_ms, c.start_ms,
+                        vec![("id".to_string(), Json::Num(c.id as f64))]);
+        }
+        tr.sim_span(&format!("{model} serve"), "service", c.model as u64,
+                    c.start_ms, c.finish_ms,
+                    vec![
+                        ("id".to_string(), Json::Num(c.id as f64)),
+                        ("cores".to_string(), Json::Num(c.cores as f64)),
+                        ("batch".to_string(), Json::Num(c.batch as f64)),
+                    ]);
+    }
+    let series = ServingSeries::from_sim(result);
+    for (t, d) in series.queue_time_ms.iter().zip(&series.queue_depth) {
+        tr.sim_counter("queue depth", *t, *d as f64);
+    }
+    for (b, u) in series.utilization.iter().enumerate() {
+        tr.sim_counter("core utilization", b as f64 * series.util_bucket_ms, *u);
+    }
+    tr
+}
 
 /// SLO-oriented summary of a [`SimResult`].
 #[derive(Debug, Clone)]
@@ -30,6 +160,8 @@ pub struct SloReport {
     /// `throughput_rps` when no SLO is set).
     pub goodput_rps: f64,
     pub makespan_ms: f64,
+    /// Queue-depth / utilization time series replayed from the run.
+    pub series: ServingSeries,
 }
 
 impl SloReport {
@@ -78,6 +210,33 @@ impl SloReport {
             throughput_rps,
             goodput_rps,
             makespan_ms,
+            series: ServingSeries::from_sim(result),
+        }
+    }
+
+    /// Export the report into the unified registry (rust/docs/DESIGN.md
+    /// §14). Everything here is simulated-time derived — [`Domain::Sim`]
+    /// throughout — so snapshots are bit-identical run to run.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.set_gauge(Domain::Sim, "serving.throughput_rps", self.throughput_rps);
+        reg.set_gauge(Domain::Sim, "serving.goodput_rps", self.goodput_rps);
+        reg.set_gauge(Domain::Sim, "serving.utilization", self.utilization);
+        reg.set_gauge(Domain::Sim, "serving.makespan_ms", self.makespan_ms);
+        reg.set_gauge(Domain::Sim, "serving.slo_attainment", self.slo_attainment());
+        self.counters.export_metrics(reg, Domain::Sim, "serving.");
+        self.e2e.export_metrics(reg, Domain::Sim, "serving.e2e.");
+        self.queueing.export_metrics(reg, Domain::Sim, "serving.queueing.");
+        self.service.export_metrics(reg, Domain::Sim, "serving.service.");
+        if !self.series.queue_depth.is_empty() {
+            reg.set_gauge(Domain::Sim, "serving.peak_queue_depth",
+                          self.series.peak_queue_depth() as f64);
+            for &d in &self.series.queue_depth {
+                reg.observe(Domain::Sim, "serving.queue_depth", d as f64);
+            }
+        }
+        if !self.series.utilization.is_empty() {
+            reg.set_gauge(Domain::Sim, "serving.peak_utilization",
+                          self.series.peak_utilization());
         }
     }
 
@@ -114,6 +273,14 @@ impl SloReport {
         }
         t.row(vec!["core utilization".into(),
                    format!("{:.1}%", 100.0 * self.utilization)]);
+        if !self.series.queue_depth.is_empty() {
+            t.row(vec!["peak queue depth".into(),
+                       self.series.peak_queue_depth().to_string()]);
+        }
+        if !self.series.utilization.is_empty() {
+            t.row(vec!["peak bucket utilization".into(),
+                       format!("{:.1}%", 100.0 * self.series.peak_utilization())]);
+        }
         if let Some(ps) = self.e2e.percentiles(&[50.0, 95.0, 99.0]) {
             t.row(vec!["e2e p50/p95/p99".into(),
                        format!("{:.2} / {:.2} / {:.2} ms", ps[0], ps[1], ps[2])]);
@@ -130,7 +297,7 @@ impl SloReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serving::cluster::{CompletedRequest, SimResult};
+    use crate::serving::cluster::{CompletedRequest, SimEvent, SimResult};
 
     fn result() -> SimResult {
         let completed = vec![
@@ -143,6 +310,110 @@ mod tests {
         ];
         SimResult { events: Vec::new(), completed, num_cores: 2,
                     events_processed: 0 }
+    }
+
+    fn result_with_events() -> SimResult {
+        let mut r = result();
+        r.events = vec![
+            SimEvent { time_ms: 0.0,
+                       kind: SimEventKind::Arrive { id: 0, model: 0 } },
+            SimEvent { time_ms: 0.0,
+                       kind: SimEventKind::Arrive { id: 1, model: 0 } },
+            SimEvent { time_ms: 0.0,
+                       kind: SimEventKind::Start { id: 0, cores: 2 } },
+            SimEvent { time_ms: 5.0,
+                       kind: SimEventKind::Arrive { id: 2, model: 0 } },
+            SimEvent { time_ms: 10.0,
+                       kind: SimEventKind::Finish { id: 0, free_cores: 2 } },
+            SimEvent { time_ms: 10.0,
+                       kind: SimEventKind::Start { id: 1, cores: 2 } },
+            SimEvent { time_ms: 20.0,
+                       kind: SimEventKind::Finish { id: 1, free_cores: 2 } },
+            SimEvent { time_ms: 20.0,
+                       kind: SimEventKind::Start { id: 2, cores: 2 } },
+            SimEvent { time_ms: 30.0,
+                       kind: SimEventKind::Finish { id: 2, free_cores: 2 } },
+        ];
+        r.events_processed = r.events.len() as u64;
+        r
+    }
+
+    #[test]
+    fn series_replays_queue_depth_and_buckets_utilization() {
+        let r = result_with_events();
+        let s = ServingSeries::from_sim(&r);
+        // Arrive, Arrive, Start, Arrive, Start, Start — Finish is skipped.
+        assert_eq!(s.queue_depth, vec![1, 2, 1, 2, 1, 0]);
+        assert_eq!(s.queue_time_ms, vec![0.0, 0.0, 0.0, 5.0, 10.0, 20.0]);
+        assert_eq!(s.peak_queue_depth(), 2);
+        // Back-to-back full-width invocations: every bucket fully busy.
+        assert_eq!(s.utilization.len(), 64);
+        assert!(s.utilization.iter().all(|&u| (u - 1.0).abs() < 1e-9),
+                "{:?}", s.utilization);
+        assert!((s.peak_utilization() - 1.0).abs() < 1e-9);
+        // Bucket mean agrees with the run's aggregate utilization.
+        let mean = s.utilization.iter().sum::<f64>() / s.utilization.len() as f64;
+        assert!((mean - r.utilization()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_downsamples_deterministically() {
+        let mut r = result_with_events();
+        // Inflate the log past the sample cap with arrive/start pairs.
+        for i in 0..2000u64 {
+            r.events.push(SimEvent {
+                time_ms: 30.0 + i as f64,
+                kind: SimEventKind::Arrive { id: 100 + i, model: 0 },
+            });
+        }
+        let a = ServingSeries::from_sim(&r);
+        let b = ServingSeries::from_sim(&r);
+        assert_eq!(a, b);
+        assert!(a.queue_depth.len() <= MAX_QUEUE_SAMPLES + 1,
+                "{}", a.queue_depth.len());
+        // The final sample is always kept.
+        assert_eq!(*a.queue_time_ms.last().unwrap(), 30.0 + 1999.0);
+    }
+
+    #[test]
+    fn report_exports_sim_domain_metrics() {
+        let rep = SloReport::from_sim(&result_with_events(), Some(15.0));
+        let mut reg = MetricsRegistry::new();
+        rep.export_metrics(&mut reg);
+        assert_eq!(reg.gauge("serving.throughput_rps"), Some(rep.throughput_rps));
+        assert_eq!(reg.gauge("serving.peak_queue_depth"), Some(2.0));
+        assert_eq!(reg.counter("serving.slo_ok"), Some(1));
+        assert_eq!(reg.gauge("serving.e2e.p50_ms"), rep.e2e.percentile(50.0));
+        let h = reg.histogram("serving.queue_depth").unwrap();
+        assert_eq!(h.count(), rep.series.queue_depth.len() as u64);
+        // Everything lands in the deterministic section.
+        let snap = reg.snapshot();
+        assert!(snap.get("wall").as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn sim_trace_is_deterministic_and_pure_sim_time() {
+        let r = result_with_events();
+        let services = [ModelService::new("m", 2, 10.0)];
+        let a = sim_trace(&r, &services, "serve-sim");
+        let b = sim_trace(&r, &services, "serve-sim");
+        assert_eq!(a.to_chrome_string(), b.to_chrome_string());
+        let doc = a.to_chrome_json();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // 3 service spans + 2 queue spans (request 0 never waited) + one
+        // metadata record + counter samples.
+        let spans = events.iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .count();
+        assert_eq!(spans, 5);
+        // Pure sim clock: every non-metadata event sits in pid 1.
+        assert!(events.iter()
+            .filter(|e| e.get("ph").as_str() != Some("M"))
+            .all(|e| e.get("pid").as_f64() == Some(1.0)));
+        assert!(events.iter()
+            .any(|e| e.get("name").as_str() == Some("queue depth")));
+        assert!(events.iter()
+            .any(|e| e.get("name").as_str() == Some("core utilization")));
     }
 
     #[test]

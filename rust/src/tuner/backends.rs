@@ -24,8 +24,11 @@ use super::request::TuningContext;
 use super::Tuner;
 
 /// Unified stats for backends whose bookkeeping is the engine-counter delta
-/// (every query is one candidate-block evaluation).
-fn delta_stats(before: CostStats, after: CostStats, wall_us: u64, truncated: bool) -> TuningStats {
+/// (every query is one candidate-block evaluation). `search_us` is the
+/// schedule-producing phase's share of `wall_us` (rust/docs/DESIGN.md §14);
+/// these backends have no prewarm pool, so `prewarm_us` stays zero.
+fn delta_stats(before: CostStats, after: CostStats, wall_us: u64, search_us: u64,
+               truncated: bool) -> TuningStats {
     let hits = after.hits - before.hits;
     let misses = after.misses - before.misses;
     TuningStats {
@@ -35,6 +38,8 @@ fn delta_stats(before: CostStats, after: CostStats, wall_us: u64, truncated: boo
         cache_hits: hits,
         cache_misses: misses,
         wall_us,
+        search_us,
+        prewarm_us: 0,
         truncated,
     }
 }
@@ -74,6 +79,8 @@ where
         total.cache_hits += out.stats.cache_hits;
         total.cache_misses += out.stats.cache_misses;
         total.wall_us += out.stats.wall_us;
+        total.search_us += out.stats.search_us;
+        total.prewarm_us += out.stats.prewarm_us;
         total.truncated |= out.stats.truncated;
         let better = match &best {
             None => true,
@@ -109,9 +116,10 @@ impl Algorithm1 {
             Some(mask) => dlfusion_schedule_masked(cx.engine.model(), spec, &params, &mask),
             None => dlfusion_schedule_with(cx.engine.model(), spec, &params),
         };
+        let search_us = t0.elapsed().as_micros() as u64;
         let predicted_ms = cx.engine.schedule_cost(&schedule);
         let stats = delta_stats(before, cx.engine.local_stats(),
-                                t0.elapsed().as_micros() as u64, false);
+                                t0.elapsed().as_micros() as u64, search_us, false);
         Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
     }
 }
@@ -153,25 +161,30 @@ impl TableStrategy {
         let before = cx.engine.local_stats();
         let batch = cx.engine.batch();
         let params = cx.params;
+        let mut prewarm_us = 0;
         let schedule = if self.0 == Strategy::BruteForce {
             // Same search `strategy_schedule_with` delegates to
             // (`oracle_schedule_with`: reduced MP set, blocks % 4), but
             // budget-checked like every other DP run.
             let mps = cx.engine.sim().spec.reduced_mp_set();
-            brute::oracle_schedule_threaded(&mut cx.engine, &mps,
-                                            BlockRule::MultipleOfFour,
-                                            cx.budget.max_evaluations, cx.threads)
-                .map_err(|e| TuningError::BudgetExhausted {
-                    spent: e.evaluations,
-                    budget: e.budget,
-                })?
-                .0
+            let (schedule, st) =
+                brute::oracle_schedule_threaded(&mut cx.engine, &mps,
+                                                BlockRule::MultipleOfFour,
+                                                cx.budget.max_evaluations, cx.threads)
+                    .map_err(|e| TuningError::BudgetExhausted {
+                        spent: e.evaluations,
+                        budget: e.budget,
+                    })?;
+            prewarm_us = st.prewarm_us;
+            schedule
         } else {
             strategy_schedule_with(&mut cx.engine, self.0, &params)
         };
+        let search_us = t0.elapsed().as_micros() as u64;
         let predicted_ms = cx.engine.schedule_cost(&schedule);
-        let stats = delta_stats(before, cx.engine.local_stats(),
-                                t0.elapsed().as_micros() as u64, false);
+        let mut stats = delta_stats(before, cx.engine.local_stats(),
+                                    t0.elapsed().as_micros() as u64, search_us, false);
+        stats.prewarm_us = prewarm_us;
         Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
     }
 }
@@ -302,8 +315,9 @@ impl Annealer {
             cx.budget.max_evaluations,
             cx.budget.max_wall_us,
         );
+        let search_us = t0.elapsed().as_micros() as u64;
         let stats = delta_stats(before, cx.engine.local_stats(),
-                                t0.elapsed().as_micros() as u64, truncated);
+                                t0.elapsed().as_micros() as u64, search_us, truncated);
         Ok(TuningOutcome {
             tuner: self.name(),
             schedule,

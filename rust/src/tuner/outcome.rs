@@ -1,5 +1,6 @@
 //! The uniform result surface of a tuning run: outcome, stats, errors.
 
+use crate::obs::{Domain, MetricsRegistry};
 use crate::optimizer::schedule::Schedule;
 use crate::search::brute::SearchStats;
 
@@ -23,6 +24,15 @@ pub struct TuningStats {
     pub cache_misses: u64,
     /// Wall-clock time of the whole `tune()` call, microseconds.
     pub wall_us: u64,
+    /// Wall-clock time of the schedule-producing search phase (the DP
+    /// recurrence, the annealing walk, the heuristic partition),
+    /// microseconds. The remainder of `wall_us` is final-schedule pricing
+    /// and per-batch bookkeeping.
+    pub search_us: u64,
+    /// Wall-clock time of the parallel cache-prewarm phase inside
+    /// `search_us` — zero for sequential runs and for backends without a
+    /// prewarm pool. The DP's own recurrence is `search_us - prewarm_us`.
+    pub prewarm_us: u64,
     /// The run stopped early on a budget and returned its best-so-far
     /// result (only backends that can: see the [`super::Tuner`] contract).
     pub truncated: bool,
@@ -48,6 +58,10 @@ impl TuningStats {
             cache_hits: st.cache_hits as u64,
             cache_misses: st.cache_misses as u64,
             wall_us: st.wall_us,
+            // The search function's internal wall time is the search phase;
+            // the backend overwrites `wall_us` with its whole-call time.
+            search_us: st.wall_us,
+            prewarm_us: st.prewarm_us,
             truncated: false,
         }
     }
@@ -82,6 +96,28 @@ impl TuningOutcome {
     /// objective (equals `predicted_ms` at batch 1).
     pub fn per_sample_ms(&self) -> f64 {
         self.predicted_ms / self.batch as f64
+    }
+
+    /// Export the outcome into the unified registry (rust/docs/DESIGN.md
+    /// §14). Search-space quantities — evaluation counts, cache counters,
+    /// the predicted latency — are reproducible for a fixed request and
+    /// land in [`Domain::Sim`]; every timer (whole call, search phase,
+    /// prewarm phase) is machine-dependent and lands in [`Domain::Wall`].
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.inc(Domain::Sim, "tuner.evaluations", self.stats.evaluations);
+        reg.inc(Domain::Sim, "tuner.blocks_considered", self.stats.blocks_considered);
+        reg.inc(Domain::Sim, "tuner.space_visited", self.stats.space_visited);
+        reg.inc(Domain::Sim, "tuner.cache_hits", self.stats.cache_hits);
+        reg.inc(Domain::Sim, "tuner.cache_misses", self.stats.cache_misses);
+        reg.set_gauge(Domain::Sim, "tuner.cache_hit_rate", self.stats.hit_rate());
+        reg.set_gauge(Domain::Sim, "tuner.predicted_ms", self.predicted_ms);
+        reg.set_gauge(Domain::Sim, "tuner.batch", self.batch as f64);
+        reg.set_gauge(Domain::Sim, "tuner.schedule_blocks",
+                      self.schedule.num_blocks() as f64);
+        reg.inc(Domain::Sim, "tuner.truncated", u64::from(self.stats.truncated));
+        reg.inc(Domain::Wall, "tuner.wall_us", self.stats.wall_us);
+        reg.inc(Domain::Wall, "tuner.search_us", self.stats.search_us);
+        reg.inc(Domain::Wall, "tuner.prewarm_us", self.stats.prewarm_us);
     }
 }
 

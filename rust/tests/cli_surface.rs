@@ -300,6 +300,107 @@ fn unknown_command_fails() {
 }
 
 #[test]
+fn tune_observability_exports_and_report_roundtrip() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_obs_tune");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics = dir.join("metrics.json");
+    let prom = dir.join("metrics.prom");
+    let trace = dir.join("trace.json");
+    assert_eq!(
+        run(&format!("tune alexnet --tuner oracle --metrics-out {} --trace-out {}",
+                     metrics.display(), trace.display())),
+        0);
+    // The snapshot splits domains: search-space counters are deterministic,
+    // timers live under "wall".
+    let doc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert!(doc.get("deterministic").get("tuner.evaluations")
+            .as_f64().is_some_and(|v| v > 0.0));
+    assert!(doc.get("deterministic").get("cost.cache.misses")
+            .as_f64().is_some_and(|v| v > 0.0));
+    assert!(doc.get("wall").get("tuner.wall_us")
+            .as_f64().is_some_and(|v| v > 0.0));
+    // The trace is a chrome trace-event document with at least one span.
+    let tdoc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&trace).unwrap()).unwrap();
+    assert!(!tdoc.get("traceEvents").as_arr().unwrap().is_empty());
+    // A .prom suffix switches to Prometheus exposition text.
+    assert_eq!(run(&format!("tune alexnet --metrics-out {}", prom.display())), 0);
+    let text = std::fs::read_to_string(&prom).unwrap();
+    assert!(text.contains("dlfusion_tuner_evaluations"));
+    assert!(text.contains("domain=\"wall\""));
+    // `report` renders the JSON snapshot as a table or as Prometheus text.
+    assert_eq!(run(&format!("report {}", metrics.display())), 0);
+    assert_eq!(run(&format!("report {} --prom", metrics.display())), 0);
+    // perf-smoke documents ride the same parser (metrics/wall_metrics keys).
+    let smoke = dir.join("smoke.json");
+    std::fs::write(&smoke,
+                   r#"{"schema": 2, "metrics": {"a_ms": 1.5}, "wall_metrics": {}}"#)
+        .unwrap();
+    assert_eq!(run(&format!("report {}", smoke.display())), 0);
+}
+
+#[test]
+fn serve_sim_observability_exports() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_obs_serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics = dir.join("metrics.json");
+    let trace = dir.join("trace.json");
+    assert_eq!(
+        run(&format!("serve-sim --models alexnet --requests 32 --rate 300 \
+                      --slo-ms 50 --metrics-out {} --trace-out {}",
+                     metrics.display(), trace.display())),
+        0);
+    // Everything serving reports is event-clock state: the deterministic
+    // section carries the SLO metrics, the wall section stays empty.
+    let doc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert!(doc.get("deterministic").get("serving.throughput_rps")
+            .as_f64().is_some_and(|v| v > 0.0));
+    assert!(doc.get("wall").as_obj().unwrap().is_empty());
+    let tdoc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&trace).unwrap()).unwrap();
+    assert!(!tdoc.get("traceEvents").as_arr().unwrap().is_empty());
+    assert_eq!(run(&format!("report {}", metrics.display())), 0);
+}
+
+#[test]
+fn observability_flag_error_paths() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_obs_err");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // Bare flags expect a value.
+    assert_eq!(run("tune alexnet --metrics-out"), 1);
+    assert_eq!(run("tune alexnet --trace-out"), 1);
+    assert_eq!(run("serve-sim --models alexnet --requests 8 --metrics-out"), 1);
+    // Unwritable destination (parent is a regular file) is a clean error.
+    let blocker = dir.join("not_a_dir");
+    std::fs::write(&blocker, "x").unwrap();
+    let unwritable = blocker.join("x.json");
+    assert_eq!(run(&format!("tune alexnet --metrics-out {}",
+                            unwritable.display())), 1);
+    assert_eq!(run(&format!("serve-sim --models alexnet --requests 8 \
+                             --trace-out {}", unwritable.display())), 1);
+    // The exports describe one backend's run, not a comparison.
+    assert_eq!(run("tune alexnet --compare --metrics-out /tmp/x.json"), 1);
+    assert_eq!(run("tune alexnet --compare-targets --trace-out /tmp/x.json"), 1);
+    // The sim trace replays the event log; --no-events removes it.
+    assert_eq!(run("serve-sim --models alexnet --requests 8 --no-events \
+                    --trace-out /tmp/x.json"), 1);
+    // report: missing operand, missing file, malformed JSON, no sections.
+    assert_eq!(run("report"), 1);
+    assert_eq!(run("report /no/such/snapshot.json"), 1);
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{nope").unwrap();
+    assert_eq!(run(&format!("report {}", bad.display())), 1);
+    let empty = dir.join("empty.json");
+    std::fs::write(&empty, r#"{"schema": 2}"#).unwrap();
+    assert_eq!(run(&format!("report {}", empty.display())), 1);
+}
+
+#[test]
 fn codegen_writes_files() {
     let out = std::env::temp_dir().join("dlfusion_cli_codegen");
     let _ = std::fs::remove_dir_all(&out);

@@ -99,3 +99,65 @@ fn threaded_comparison_matches_sequential_outcomes_and_engine_totals() {
     assert_eq!(seq.engine_stats.hits + seq.engine_stats.misses,
                par.engine_stats.hits + par.engine_stats.misses);
 }
+
+/// The observability determinism contract (rust/docs/DESIGN.md §14): the
+/// deterministic (sim-domain) half of a tuning run's metrics snapshot is a
+/// pure function of the request — `--threads` buys wall time, never a
+/// different snapshot. Only the wall domain may move between runs.
+#[test]
+fn sim_domain_metrics_snapshot_is_thread_invariant() {
+    use dlfusion::obs::{Domain, MetricsRegistry};
+
+    let sim = Simulator::new(Target::mlu100());
+    let model = zoo::resnet18();
+    let snap = |threads: usize| {
+        let request = tuner::TuningRequest::new(&sim, &model).threads(threads);
+        let mut cx = request.context();
+        let outcome = tuner::OracleDp::reduced().tune(&mut cx).expect("tune");
+        let mut reg = MetricsRegistry::new();
+        outcome.export_metrics(&mut reg);
+        cx.engine().export_metrics(&mut reg);
+        reg.domain_json(Domain::Sim).to_string()
+    };
+    let seq = snap(1);
+    let par = snap(4);
+    assert_eq!(seq, par,
+               "deterministic metrics must not depend on thread count");
+    // And the same snapshot again at the same thread count: run-to-run
+    // identical, byte for byte.
+    assert_eq!(par, snap(4));
+}
+
+/// Serving runs entirely on the event clock, so both its Chrome trace
+/// export and its metrics snapshot — wall section included, because it is
+/// empty — are bit-identical from run to run.
+#[test]
+fn serving_trace_and_metrics_exports_are_run_to_run_identical() {
+    use dlfusion::obs::MetricsRegistry;
+    use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
+                            ModelMix, SloReport};
+
+    let sim = Simulator::new(Target::mlu100());
+    let run_once = || {
+        let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
+        let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("plan");
+        let trace = serving::generate_trace(
+            &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 128, 7);
+        let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
+                                  policy: DispatchPolicy::Fifo };
+        let services = plan.services(true);
+        let result = serving::simulate(&cfg, &services, &trace, None)
+            .expect("simulate");
+        let session = serving::sim_trace(&result, &services, "parity");
+        let mut reg = MetricsRegistry::new();
+        SloReport::from_sim(&result, Some(50.0)).export_metrics(&mut reg);
+        (session.to_chrome_string(), reg.snapshot().to_string())
+    };
+    let (trace_a, snap_a) = run_once();
+    let (trace_b, snap_b) = run_once();
+    assert_eq!(trace_a, trace_b,
+               "chrome trace export must be bit-identical run to run");
+    assert_eq!(snap_a, snap_b,
+               "metrics snapshot must be bit-identical run to run");
+    assert!(trace_a.contains("traceEvents"));
+}
