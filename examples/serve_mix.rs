@@ -10,8 +10,9 @@
 //! ```
 
 use dlfusion::accel::{Simulator, Target};
-use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
-                        ModelMix, SloReport};
+use dlfusion::serving::{self, AllocationRequest, ArrivalProcess,
+                        ClusterConfig, DispatchPolicy, ModelMix,
+                        SimulationRun, SloReport};
 use dlfusion::zoo;
 
 fn main() {
@@ -21,7 +22,10 @@ fn main() {
                                  vec![3.0, 1.0]);
     let slo_ms = Some(40.0);
 
-    let plan = serving::plan_allocations(&sim, &mix, slo_ms).expect("allocation");
+    let plan = AllocationRequest::new(&sim, &mix)
+        .slo_ms(slo_ms)
+        .plan()
+        .expect("allocation");
     print!("{}", plan.render());
     println!("predicted capacity on {} cores: {:.0} req/s load-aware vs \
               {:.0} req/s single-request",
@@ -37,8 +41,9 @@ fn main() {
                               policy: DispatchPolicy::Fifo };
 
     for (label, load_aware) in [("single-request", false), ("load-aware", true)] {
-        let result = serving::simulate(&cfg, &plan.services(load_aware), &trace,
-                                       None)
+        let result = SimulationRun::new(&cfg, &plan.services(load_aware))
+            .trace(&trace)
+            .run()
             .expect("simulate");
         println!("\n--- {label} allocation, {:.0} req/s offered ---", rate);
         print!("{}", SloReport::from_sim(&result, slo_ms).render());
@@ -48,7 +53,10 @@ fn main() {
     // tuned schedule at every batch, and the `batch` dispatch policy forms
     // per-model batches whose invocations amortize the weight fetch.
     let max_batch = serving::DEFAULT_MAX_BATCH;
-    let batched = serving::plan_allocations_batched(&sim, &mix, slo_ms, max_batch)
+    let batched = AllocationRequest::new(&sim, &mix)
+        .slo_ms(slo_ms)
+        .max_batch(max_batch)
+        .plan()
         .expect("allocation");
     println!("\npredicted batched capacity: {:.0} req/s at the load-aware \
               batches (vs {:.0} req/s one-at-a-time)",
@@ -61,7 +69,9 @@ fn main() {
             max_wait_ms: serving::DEFAULT_BATCH_WAIT_MS,
         },
     };
-    let result = serving::simulate(&cfg, &batched.services(true), &trace, None)
+    let result = SimulationRun::new(&cfg, &batched.services(true))
+        .trace(&trace)
+        .run()
         .expect("simulate");
     println!("\n--- load-aware allocation, batch dispatch ---");
     print!("{}", SloReport::from_sim(&result, slo_ms).render());

@@ -4,8 +4,9 @@
 
 use dlfusion::accel::{efficiency, Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
-use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
-                        ModelMix};
+use dlfusion::serving::{self, AllocationRequest, ArrivalProcess,
+                        ClusterConfig, DispatchPolicy, ModelMix,
+                        SimulationRun};
 use dlfusion::tuner::{Algorithm1, Tuner, TuningRequest};
 use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
@@ -60,7 +61,9 @@ fn main() {
     // ---- serving: batch policy vs FIFO under 2x-capacity overload ----
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
     let max_batch = serving::DEFAULT_MAX_BATCH;
-    let plan = serving::plan_allocations_batched(&sim, &mix, None, max_batch)
+    let plan = AllocationRequest::new(&sim, &mix)
+        .max_batch(max_batch)
+        .plan()
         .expect("allocation");
     let services = plan.services(true);
     let rate = 2.0 * plan.predicted_capacity_rps(sim.spec.num_cores, true);
@@ -90,9 +93,14 @@ fn main() {
     ] {
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
         b.time(&format!("simulate_2k_requests_{label}"), || {
-            serving::simulate(&cfg, &services, &trace, None).expect("simulate")
+            SimulationRun::new(&cfg, &services)
+                .trace(&trace)
+                .run()
+                .expect("simulate")
         });
-        let result = serving::simulate(&cfg, &services, &trace, None)
+        let result = SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .run()
             .expect("simulate");
         let rep = serving::SloReport::from_sim(&result, Some(slo));
         let p99 = rep.e2e.percentiles(&[99.0]).map_or(0.0, |p| p[0]);

@@ -4,8 +4,9 @@
 
 use dlfusion::accel::{Simulator, Target};
 use dlfusion::bench_harness::{banner, Bench, BENCH_OUT_DIR};
-use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
-                        ModelMix};
+use dlfusion::serving::{self, AllocationRequest, ArrivalProcess,
+                        ClusterConfig, DispatchPolicy, ModelMix,
+                        SimulationRun};
 use dlfusion::util::csv::Csv;
 use dlfusion::util::Table;
 use dlfusion::zoo;
@@ -17,16 +18,24 @@ fn main() {
 
     let mut b = Bench::new("serving_throughput");
     b.time("plan_allocations_2_models", || {
-        serving::plan_allocations(&sim, &mix, Some(50.0)).expect("allocation")
+        AllocationRequest::new(&sim, &mix)
+            .slo_ms(Some(50.0))
+            .plan()
+            .expect("allocation")
     });
 
-    let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("allocation");
+    let plan = AllocationRequest::new(&sim, &mix)
+        .slo_ms(Some(50.0))
+        .plan()
+        .expect("allocation");
     let trace = serving::generate_trace(
         &mix, ArrivalProcess::OpenPoisson { rate_rps: 800.0 }, 2000, 7);
     for policy in [DispatchPolicy::Fifo, DispatchPolicy::ShortestJobFirst] {
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
         b.time(&format!("simulate_2k_requests_{}", policy.name()), || {
-            serving::simulate(&cfg, &plan.services(true), &trace, None)
+            SimulationRun::new(&cfg, &plan.services(true))
+                .trace(&trace)
+                .run()
                 .expect("simulate")
         });
     }
@@ -36,15 +45,20 @@ fn main() {
     let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
                               policy: DispatchPolicy::Fifo };
     b.time("simulate_2k_requests_fifo_no_trace", || {
-        serving::simulate_with(&cfg, &plan.services(true), &trace, None, false)
+        SimulationRun::new(&cfg, &plan.services(true))
+            .trace(&trace)
+            .record_events(false)
+            .run()
             .expect("simulate")
     });
     let results = b.finish();
     let sim_ms = results[1].mean_ms();
     println!("\nevent loop: {:.0}k requests/s of simulator wall time",
              2000.0 / sim_ms);
-    let hot = serving::simulate_with(&cfg, &plan.services(true), &trace, None,
-                                     false)
+    let hot = SimulationRun::new(&cfg, &plan.services(true))
+        .trace(&trace)
+        .record_events(false)
+        .run()
         .expect("simulate");
     let hot_ms = results[3].mean_ms();
     println!("hot path (trace off): {:.0}k events/s \
@@ -64,8 +78,10 @@ fn main() {
     let saturating = serving::generate_trace(
         &mix, ArrivalProcess::ClosedLoop { concurrency: 64 }, 1000, 7);
     for (label, load_aware) in [("single-request", false), ("load-aware", true)] {
-        let r = serving::simulate(&cfg, &plan.services(load_aware), &saturating,
-                                  Some(64))
+        let r = SimulationRun::new(&cfg, &plan.services(load_aware))
+            .trace(&saturating)
+            .closed_loop(Some(64))
+            .run()
             .expect("simulate");
         let rep = serving::SloReport::from_sim(&r, None);
         let p99 = rep.e2e.percentiles(&[99.0]).map_or(0.0, |p| p[0]);

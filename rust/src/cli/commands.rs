@@ -68,16 +68,30 @@ COMMANDS:
         [--arrivals poisson|closed|bursty] [--rate RPS] [--requests N]
         [--policy fifo|sjf|batch] [--slo-ms MS] [--seed S] [--concurrency K]
         [--max-batch N] [--batch-wait-ms MS] core pool, then a deterministic
-        [--allocator load|single] event-driven SLO report; --policy batch
-        [--no-events]            forms per-model batches of up to N requests,
-        [--metrics-out F]        holding partial batches at most MS ms;
-        [--trace-out F]          --no-events skips recording the event trace
-                                 (hot path; identical SLO report, but
-                                 incompatible with --trace-out);
+        [--allocator load|single] event-driven SLO report; --models mixes
+        [--model-file F.dlm]     zoo names, dag variants (fusion constrained
+        [--no-events]            to the graph's legal cuts), and .dlm paths;
+        [--metrics-out F]        --policy batch forms per-model batches of
+        [--trace-out F]          up to N requests, holding partial batches
+                                 at most MS ms; --no-events skips recording
+                                 the event trace (hot path; identical SLO
+                                 report, but incompatible with --trace-out);
                                  --metrics-out writes the SLO report's
                                  metrics snapshot (JSON; .prom = Prometheus
                                  text), --trace-out a deterministic
                                  sim-time Chrome trace of the serving run
+    serve-fleet                  fleet serving simulation: a multi-chip
+        [--fleet mlu100x2,edge4x4] (heterogeneous) fleet planned per chip
+        [--route round-robin|least-loaded|model-sharded] kind through the
+        [--queue-cap N]          fleet-wide tuned-plan cache, a deterministic
+        [--models a,b,..] [--model-file F.dlm] routing layer with admission
+        [--arrivals poisson|bursty] [--rate RPS] control (--queue-cap sheds
+        [--requests N] [--seed S] requests finding N already waiting), then
+        [--policy fifo|sjf|batch] [--max-batch N] [--batch-wait-ms MS]
+        [--slo-ms MS] [--allocator load|single] the merged SLO report with
+        [--no-events]            shed accounting and a per-chip breakdown;
+        [--metrics-out F]        a one-chip fleet reproduces serve-sim
+        [--trace-out F]          bit-identically; open-loop arrivals only
     report <snapshot.json>       render a --metrics-out snapshot as a table
         [--prom]                 (or re-emit it as Prometheus text)
     perf-smoke                   deterministic perf metrics: tuned latencies
@@ -91,10 +105,12 @@ COMMANDS:
     help                         this text
 
 MODELS:  resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file);
-         branching dag variants (tune/model only): resnet18-dag resnet50-dag
+         branching dag variants (tune/model/serve-sim/serve-fleet):
+         resnet18-dag resnet50-dag
 TARGETS: every hardware-touching command takes --target NAME (default
          mlu100; see 'targets'): zoo optimize tune simulate search codegen
-         characterize trace run serve-sim perf-smoke
+         characterize trace run serve-sim perf-smoke; serve-fleet names its
+         chips' targets in --fleet instead
 ";
 
 /// Execute a parsed command line; returns the process exit code.
@@ -117,6 +133,7 @@ pub fn run(args: &Args) -> i32 {
         "trace" => cmd_trace(args),
         "run" => cmd_run(args),
         "serve-sim" => cmd_serve_sim(args),
+        "serve-fleet" => cmd_serve_fleet(args),
         "perf-smoke" => cmd_perf_smoke(args),
         "report" => cmd_report(args),
         other => Err(format!("unknown command '{other}' (try 'help')")),
@@ -861,26 +878,54 @@ fn cmd_trace(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve_sim(args: &Args) -> Result<(), String> {
-    let sim = parse_sim(args)?;
-
-    // ---- validate every flag before any tuning work ----
-    let models = zoo::by_names(
-        args.flag_value("models").map_err(|e| e.to_string())?
-            .unwrap_or("resnet18,alexnet"))?;
-    let mix = serving::ModelMix::uniform(models);
-    let rate = args.flag_f64("rate").map_err(|e| e.to_string())?.unwrap_or(200.0);
-    let requests = args
-        .flag_usize("requests")
-        .map_err(|e| e.to_string())?
-        .unwrap_or(256);
-    let seed = args.flag_usize("seed").map_err(|e| e.to_string())?.unwrap_or(7) as u64;
-    let slo_ms = args.flag_f64("slo-ms").map_err(|e| e.to_string())?;
-    if let Some(slo) = slo_ms {
-        if !(slo > 0.0) {
-            return Err(format!("--slo-ms must be positive, got {slo}"));
+/// Resolve the serving mix for serve-sim/serve-fleet: `--models` is a
+/// comma-separated list of zoo names, DAG zoo variants (linearized, their
+/// fusion-legal cut sets threaded into the allocator sweep), or `.dlm`
+/// paths; `--model-file F` adds one more file-based entry. With neither
+/// flag, the pinned `resnet18,alexnet` default.
+fn serving_mix(args: &Args) -> Result<serving::ModelMix, String> {
+    let mut entries: Vec<(Model, Option<Vec<usize>>)> = Vec::new();
+    if let Some(list) = args.flag_value("models").map_err(|e| e.to_string())? {
+        for name in list.split(',') {
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("--models '{list}': empty model name"));
+            }
+            let w = if name.ends_with(".dlm") {
+                workload_from_file(name)?
+            } else if let Some(model) = zoo::by_name(name) {
+                LoadedWorkload { model, cuts: None, dag: None }
+            } else if let Some(d) = zoo::dag_by_name(name) {
+                workload_from_dag(d)?
+            } else {
+                return Err(unknown_model(name));
+            };
+            entries.push((w.model, w.cuts));
         }
     }
+    if let Some(path) = args.flag_value("model-file").map_err(|e| e.to_string())? {
+        let w = workload_from_file(path)?;
+        entries.push((w.model, w.cuts));
+    }
+    if entries.is_empty() {
+        for name in ["resnet18", "alexnet"] {
+            entries.push((zoo::by_name(name).expect("pinned zoo model"), None));
+        }
+    }
+    // Duplicate names would alias per-model queues, report lanes, and
+    // plan-cache keys.
+    for i in 0..entries.len() {
+        if entries[i + 1..].iter().any(|(m, _)| m.name == entries[i].0.name) {
+            return Err(format!(
+                "duplicate model '{}' in the serving mix", entries[i].0.name));
+        }
+    }
+    Ok(serving::ModelMix::uniform_with_cuts(entries))
+}
+
+/// Parse `--policy`/`--max-batch`/`--batch-wait-ms` into the dispatch
+/// policy (shared by serve-sim and serve-fleet).
+fn parse_dispatch_policy(args: &Args) -> Result<serving::DispatchPolicy, String> {
     let mut policy = serving::DispatchPolicy::parse(
         args.flag_value("policy").map_err(|e| e.to_string())?.unwrap_or("fifo"))?;
     let max_batch_flag = args.flag_usize("max-batch").map_err(|e| e.to_string())?;
@@ -899,6 +944,42 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     } else if max_batch_flag.is_some() || batch_wait_flag.is_some() {
         println!("note: --max-batch/--batch-wait-ms only apply to --policy batch");
     }
+    Ok(policy)
+}
+
+/// Parse `--slo-ms` (positive when given).
+fn parse_slo_ms(args: &Args) -> Result<Option<f64>, String> {
+    let slo_ms = args.flag_f64("slo-ms").map_err(|e| e.to_string())?;
+    if let Some(slo) = slo_ms {
+        if !(slo > 0.0) {
+            return Err(format!("--slo-ms must be positive, got {slo}"));
+        }
+    }
+    Ok(slo_ms)
+}
+
+/// Parse `--allocator load|single` into the load-aware toggle.
+fn parse_allocator(args: &Args) -> Result<bool, String> {
+    match args.flag_value("allocator").map_err(|e| e.to_string())?.unwrap_or("load") {
+        "load" | "load-aware" => Ok(true),
+        "single" | "single-request" => Ok(false),
+        other => Err(format!("--allocator expects 'load' or 'single', got '{other}'")),
+    }
+}
+
+fn cmd_serve_sim(args: &Args) -> Result<(), String> {
+    let sim = parse_sim(args)?;
+
+    // ---- validate every flag before any tuning work ----
+    let mix = serving_mix(args)?;
+    let rate = args.flag_f64("rate").map_err(|e| e.to_string())?.unwrap_or(200.0);
+    let requests = args
+        .flag_usize("requests")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(256);
+    let seed = args.flag_usize("seed").map_err(|e| e.to_string())?.unwrap_or(7) as u64;
+    let slo_ms = parse_slo_ms(args)?;
+    let policy = parse_dispatch_policy(args)?;
     let concurrency = args.flag_usize("concurrency").map_err(|e| e.to_string())?;
     if concurrency == Some(0) {
         return Err("--concurrency must be at least 1".into());
@@ -942,28 +1023,21 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     } else if !closed && args.flag("concurrency").is_some() {
         println!("note: --concurrency only applies to --arrivals closed");
     }
-    let load_aware = match args.flag_value("allocator").map_err(|e| e.to_string())?
-        .unwrap_or("load")
-    {
-        "load" | "load-aware" => true,
-        "single" | "single-request" => false,
-        other => {
-            return Err(format!(
-                "--allocator expects 'load' or 'single', got '{other}'"))
-        }
-    };
+    let load_aware = parse_allocator(args)?;
 
     // ---- allocate, generate, simulate, report ----
     // Under the batch policy the allocator sweeps (mp_cap, batch) so the
     // services carry engine-predicted batched latencies; otherwise the
     // batch-1 sweep (identical to the pre-batch allocator).
-    let plan = match policy {
-        serving::DispatchPolicy::Batch { max_batch, .. } => {
-            serving::plan_allocations_batched(&sim, &mix, slo_ms, max_batch)
-        }
-        _ => serving::plan_allocations(&sim, &mix, slo_ms),
-    }
-    .map_err(|e| e.to_string())?;
+    let max_batch = match policy {
+        serving::DispatchPolicy::Batch { max_batch, .. } => max_batch,
+        _ => 1,
+    };
+    let plan = serving::AllocationRequest::new(&sim, &mix)
+        .slo_ms(slo_ms)
+        .max_batch(max_batch)
+        .plan()
+        .map_err(|e| e.to_string())?;
     print!("{}", plan.render());
     if let serving::DispatchPolicy::Batch { .. } = policy {
         // The batched plan's load-aware points win at their chosen batch,
@@ -998,9 +1072,11 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     // path); the SLO report below is identical either way.
     let record_events = !args.flag_bool("no-events");
     let services = plan.services(load_aware);
-    let result = serving::simulate_with(&cfg, &services, &trace,
-                                        process.closed_loop_population(),
-                                        record_events)?;
+    let result = serving::SimulationRun::new(&cfg, &services)
+        .trace(&trace)
+        .closed_loop(process.closed_loop_population())
+        .record_events(record_events)
+        .run()?;
     println!(
         "\nsimulated {} requests ({} events{}, policy {}, seed {seed}, {} allocation)",
         result.completed.len(), result.events_processed,
@@ -1018,6 +1094,89 @@ fn cmd_serve_sim(args: &Args) -> Result<(), String> {
     write_metrics_out(args, &reg)?;
     if args.flag("trace-out").is_some() {
         write_trace_out(args, &serving::sim_trace(&result, &services, "serve-sim"))?;
+    }
+    Ok(())
+}
+
+fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
+    // ---- validate every flag before any tuning work ----
+    let fleet = serving::Fleet::parse(
+        args.flag_value("fleet").map_err(|e| e.to_string())?.unwrap_or("mlu100"))?;
+    let route = serving::RoutePolicy::parse(
+        args.flag_value("route").map_err(|e| e.to_string())?
+            .unwrap_or("least-loaded"))?;
+    let queue_cap = args.flag_usize("queue-cap").map_err(|e| e.to_string())?;
+    if queue_cap == Some(0) {
+        return Err("--queue-cap must be at least 1".into());
+    }
+    let mix = serving_mix(args)?;
+    let rate = args.flag_f64("rate").map_err(|e| e.to_string())?.unwrap_or(200.0);
+    if !(rate > 0.0) {
+        return Err(format!("--rate must be positive, got {rate}"));
+    }
+    let requests = args
+        .flag_usize("requests")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(256);
+    let seed = args.flag_usize("seed").map_err(|e| e.to_string())?.unwrap_or(7) as u64;
+    let slo_ms = parse_slo_ms(args)?;
+    let policy = parse_dispatch_policy(args)?;
+    let load_aware = parse_allocator(args)?;
+    if args.flag("trace-out").is_some() && args.flag_bool("no-events") {
+        return Err("--trace-out replays the recorded event trace and cannot \
+                    be combined with --no-events".into());
+    }
+    let process = match args.flag_value("arrivals").map_err(|e| e.to_string())?
+        .unwrap_or("poisson")
+    {
+        "poisson" => serving::ArrivalProcess::OpenPoisson { rate_rps: rate },
+        "bursty" => serving::ArrivalProcess::Bursty { rate_rps: rate, burst: 8 },
+        "closed" | "closed-loop" => {
+            return Err("serve-fleet is open-loop only (--arrivals poisson or \
+                        bursty); a fleet has no single concurrency gate".into())
+        }
+        other => {
+            return Err(format!(
+                "--arrivals expects 'poisson' or 'bursty', got '{other}'"))
+        }
+    };
+
+    // ---- plan (through the fleet-wide tuned-plan cache), generate, run ----
+    let max_batch = match policy {
+        serving::DispatchPolicy::Batch { max_batch, .. } => max_batch,
+        _ => 1,
+    };
+    let mut cache = serving::PlanCache::new();
+    let plan =
+        serving::plan_fleet(&fleet, &mix, slo_ms, max_batch, load_aware,
+                            &mut cache)
+            .map_err(|e| e.to_string())?;
+    print!("{}", plan.render(load_aware));
+    println!("predicted fleet capacity on {} cores: {:.1} req/s",
+             plan.total_cores(), plan.predicted_capacity_rps(load_aware));
+
+    let trace = serving::generate_trace(&mix, process, requests, seed);
+    let record_events = !args.flag_bool("no-events");
+    let router = serving::RouterConfig::new(route).queue_cap(queue_cap);
+    let result = serving::FleetRun::new(&plan, router)
+        .policy(policy)
+        .trace(&trace)
+        .record_events(record_events)
+        .run()?;
+    println!("\nsimulated {} requests on {} chips ({} completed, {} shed, \
+              routing {}, policy {}, seed {seed})",
+             result.offered(), plan.chips.len(), result.completed(),
+             result.shed.len(), route.name(), policy.name());
+    let report = serving::FleetReport::from_run(&result, &plan, slo_ms);
+    print!("{}", report.render());
+
+    // Observability exports: all sim-domain (deterministic), with per-chip
+    // gauges and — when events were recorded — the per-chip trace lanes.
+    let mut reg = MetricsRegistry::new();
+    report.export_metrics(&mut reg);
+    write_metrics_out(args, &reg)?;
+    if args.flag("trace-out").is_some() {
+        write_trace_out(args, &serving::fleet_trace(&result, &plan, "serve-fleet"))?;
     }
     Ok(())
 }
@@ -1042,13 +1201,17 @@ fn perf_smoke_metrics(sim: &Simulator) -> Result<Vec<(String, f64)>, String> {
 
     // Serving throughput/goodput on the pinned light mix.
     let mix = serving::ModelMix::uniform(zoo::by_names("resnet18,alexnet")?);
-    let plan = serving::plan_allocations(sim, &mix, Some(50.0))
+    let plan = serving::AllocationRequest::new(sim, &mix)
+        .slo_ms(Some(50.0))
+        .plan()
         .map_err(|e| e.to_string())?;
     let trace = serving::generate_trace(
         &mix, serving::ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 256, 7);
     let cfg = serving::ClusterConfig { num_cores: sim.spec.num_cores,
                                        policy: serving::DispatchPolicy::Fifo };
-    let result = serving::simulate(&cfg, &plan.services(true), &trace, None)?;
+    let result = serving::SimulationRun::new(&cfg, &plan.services(true))
+        .trace(&trace)
+        .run()?;
     let rep = serving::SloReport::from_sim(&result, Some(50.0));
     metrics.push(("serving_fifo_throughput_rps".into(), rep.throughput_rps));
     metrics.push(("serving_fifo_goodput_rps".into(), rep.goodput_rps));
@@ -1057,7 +1220,9 @@ fn perf_smoke_metrics(sim: &Simulator) -> Result<Vec<(String, f64)>, String> {
     // twice the batch-1 capacity and an SLO generous to both policies.
     let mix = serving::ModelMix::uniform(zoo::by_names("vgg19,resnet18")?);
     let max_batch = serving::DEFAULT_MAX_BATCH;
-    let plan = serving::plan_allocations_batched(sim, &mix, None, max_batch)
+    let plan = serving::AllocationRequest::new(sim, &mix)
+        .max_batch(max_batch)
+        .plan()
         .map_err(|e| e.to_string())?;
     let services = plan.services(true);
     let rate = 2.0 * plan.predicted_capacity_rps(sim.spec.num_cores, true);
@@ -1075,7 +1240,9 @@ fn perf_smoke_metrics(sim: &Simulator) -> Result<Vec<(String, f64)>, String> {
         }),
     ] {
         let cfg = serving::ClusterConfig { num_cores: sim.spec.num_cores, policy };
-        let result = serving::simulate(&cfg, &services, &trace, None)?;
+        let result = serving::SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .run()?;
         let rep = serving::SloReport::from_sim(&result, Some(slo));
         metrics.push((format!("batching_{label}_goodput_rps"), rep.goodput_rps));
     }
@@ -1148,15 +1315,20 @@ fn perf_smoke_wall_metrics(sim: &Simulator, threads: usize)
 
     // Trace-free event loop on a long pinned trace.
     let mix = serving::ModelMix::uniform(zoo::by_names("resnet18,alexnet")?);
-    let plan = serving::plan_allocations(sim, &mix, Some(50.0))
+    let plan = serving::AllocationRequest::new(sim, &mix)
+        .slo_ms(Some(50.0))
+        .plan()
         .map_err(|e| e.to_string())?;
     let trace = serving::generate_trace(
         &mix, serving::ArrivalProcess::OpenPoisson { rate_rps: 800.0 }, 20_000, 7);
     let cfg = serving::ClusterConfig { num_cores: sim.spec.num_cores,
                                        policy: serving::DispatchPolicy::Fifo };
+    let services = plan.services(true);
     let t2 = Instant::now();
-    let result = serving::simulate_with(&cfg, &plan.services(true), &trace,
-                                        None, false)?;
+    let result = serving::SimulationRun::new(&cfg, &services)
+        .trace(&trace)
+        .record_events(false)
+        .run()?;
     let serve_s = t2.elapsed().as_secs_f64().max(1e-9);
     wall.push(("serve_events_per_s".to_string(),
                result.events_processed as f64 / serve_s));

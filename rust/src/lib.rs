@@ -27,7 +27,7 @@
 //! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
 //! | [`runtime`] | PJRT client: load AOT HLO-text artifacts, execute |
 //! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
-//! | [`serving`] | multi-tenant serving simulator + load-aware (MP, batch) allocation (rust/docs/DESIGN.md §9, §10) |
+//! | [`serving`] | multi-tenant serving simulator, load-aware (MP, batch) allocation, multi-chip fleet routing + plan cache (rust/docs/DESIGN.md §9, §10, §15) |
 //! | [`stats`] | descriptive stats, regression, PCA (used for characterization) |
 //! | [`obs`] | observability: span tracing, metrics registry, profiling hooks (rust/docs/DESIGN.md §14) |
 //! | [`util`] | JSON, RNG, tables, CSV (offline-environment substitutes) |
@@ -63,6 +63,23 @@
 //! };
 //! let outcome = request.run(&mut Algorithm1).expect("tuning");
 //! println!("{}: {} blocks", dag.name, outcome.schedule.num_blocks());
+//!
+//! // Serving is builder-driven (rust/docs/DESIGN.md §9, §15): plan a mix
+//! // with `AllocationRequest`, simulate one pool with `SimulationRun`, or
+//! // scale out to a heterogeneous fleet with a routing policy and the
+//! // fleet-wide tuned-plan cache.
+//! let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
+//! let fleet = Fleet::parse("mlu100x2,edge4x4").expect("fleet spec");
+//! let mut cache = PlanCache::new();
+//! let plan = plan_fleet(&fleet, &mix, Some(50.0), 1, true, &mut cache)
+//!     .expect("fleet plan");
+//! let trace = serving::generate_trace(
+//!     &mix, ArrivalProcess::OpenPoisson { rate_rps: 800.0 }, 1000, 7);
+//! let result = FleetRun::new(&plan, RouterConfig::new(RoutePolicy::LeastLoaded))
+//!     .trace(&trace)
+//!     .run()
+//!     .expect("fleet run");
+//! println!("{}", FleetReport::from_run(&result, &plan, Some(50.0)).render());
 //! ```
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts` lowers
@@ -103,8 +120,11 @@ pub mod prelude {
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;
     pub use crate::search::{self, AnnealConfig, BlockRule, SearchStats};
-    pub use crate::serving::{self, AllocationPlan, ArrivalProcess, ClusterConfig,
-                             DispatchPolicy, ModelMix, SloReport};
+    pub use crate::serving::{self, plan_fleet, AllocationPlan,
+                             AllocationRequest, ArrivalProcess, ClusterConfig,
+                             DispatchPolicy, Fleet, FleetPlan, FleetReport,
+                             FleetRun, ModelMix, PlanCache, RoutePolicy,
+                             RouterConfig, SimulationRun, SloReport};
     pub use crate::tuner::{self, backend_by_name, compare, compare_targets,
                            compare_targets_with, compare_threaded, run_sweep,
                            Algorithm1, Annealer, Budget, Exhaustive, OracleDp,

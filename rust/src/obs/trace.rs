@@ -75,6 +75,17 @@ struct CounterSample {
     value: f64,
 }
 
+/// A zero-duration point marker ("i"-phase event) — a moment worth seeing
+/// in the viewer that occupies no interval, like a fleet shed decision.
+#[derive(Debug, Clone, PartialEq)]
+struct InstantMark {
+    name: String,
+    cat: String,
+    clock: Clock,
+    ts_us: f64,
+    track: u64,
+}
+
 /// An in-memory trace being assembled for export.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TraceSession {
@@ -82,6 +93,7 @@ pub struct TraceSession {
     pub name: String,
     spans: Vec<Span>,
     counters: Vec<CounterSample>,
+    instants: Vec<InstantMark>,
 }
 
 impl TraceSession {
@@ -91,10 +103,11 @@ impl TraceSession {
 
     pub fn is_empty(&self) -> bool {
         self.spans.is_empty() && self.counters.is_empty()
+            && self.instants.is_empty()
     }
 
     pub fn len(&self) -> usize {
-        self.spans.len() + self.counters.len()
+        self.spans.len() + self.counters.len() + self.instants.len()
     }
 
     pub fn push(&mut self, span: Span) {
@@ -140,9 +153,23 @@ impl TraceSession {
         });
     }
 
+    /// Record a simulated-time instant marker on `track` (thread-scoped
+    /// "i"-phase event: a vertical tick in the viewers).
+    pub fn sim_instant(&mut self, name: &str, cat: &str, track: u64,
+                       time_ms: f64) {
+        self.instants.push(InstantMark {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            clock: Clock::Sim,
+            ts_us: time_ms * 1000.0,
+            track,
+        });
+    }
+
     fn uses_clock(&self, clock: Clock) -> bool {
         self.spans.iter().any(|s| s.clock == clock)
             || self.counters.iter().any(|c| c.clock == clock)
+            || self.instants.iter().any(|i| i.clock == clock)
     }
 
     /// Serialize as a Chrome trace-event document. Events appear in
@@ -188,6 +215,19 @@ impl TraceSession {
                 ("pid", Json::Num(c.clock.pid() as f64)),
                 ("tid", Json::Num(0.0)),
                 ("args", Json::obj(vec![(c.name.as_str(), Json::Num(c.value))])),
+            ]));
+        }
+        for i in &self.instants {
+            events.push(Json::obj(vec![
+                ("name", Json::Str(i.name.clone())),
+                ("cat", Json::Str(i.cat.clone())),
+                ("ph", Json::Str("i".into())),
+                // Thread-scoped: the tick renders on its own track, not
+                // across the whole process.
+                ("s", Json::Str("t".into())),
+                ("ts", Json::Num(i.ts_us)),
+                ("pid", Json::Num(i.clock.pid() as f64)),
+                ("tid", Json::Num(i.track as f64)),
             ]));
         }
         Json::obj(vec![
@@ -258,6 +298,24 @@ mod tests {
         assert_eq!(ev.get("ph").as_str(), Some("C"));
         assert_eq!(ev.get("ts").as_f64(), Some(2000.0));
         assert_eq!(ev.get("args").get("free_cores").as_f64(), Some(30.0));
+    }
+
+    #[test]
+    fn instant_marks_render_as_thread_scoped_i_events() {
+        let mut t = TraceSession::new("i");
+        t.sim_instant("shed #4", "shed", 64, 3.5);
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_empty());
+        let doc = t.to_chrome_json();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // events[0] is the sim-clock process_name metadata record.
+        assert_eq!(events.len(), 2);
+        let ev = &events[1];
+        assert_eq!(ev.get("ph").as_str(), Some("i"));
+        assert_eq!(ev.get("s").as_str(), Some("t"));
+        assert_eq!(ev.get("ts").as_f64(), Some(3500.0));
+        assert_eq!(ev.get("pid").as_f64(), Some(1.0));
+        assert_eq!(ev.get("tid").as_f64(), Some(64.0));
     }
 
     #[test]

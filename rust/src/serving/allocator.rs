@@ -79,8 +79,12 @@ pub struct ModelAllocation {
     /// batch)` candidates.
     pub load_aware: OperatingPoint,
     /// The batch size at which `load_aware` minimizes per-request core-ms
-    /// (1 unless the plan swept batches — see `plan_allocations_batched`).
+    /// (1 unless the plan swept batches — see
+    /// [`AllocationRequest::max_batch`]).
     pub load_aware_batch: usize,
+    /// Cost-engine evaluations the tuning sweep spent on this model — what
+    /// a fleet plan-cache hit saves (rust/docs/DESIGN.md §15.3).
+    pub tuning_evaluations: u64,
 }
 
 impl ModelAllocation {
@@ -193,39 +197,130 @@ impl AllocationPlan {
     }
 }
 
-/// Sweep each model's MP caps through the constrained oracle DP and pick
-/// both operating points. One `TuningRequest` context per model: the caps
-/// share the memoized `(block, mp)` cache, so the whole sweep costs barely
-/// more than one uncapped search. Equivalent to
-/// [`plan_allocations_batched`] with `max_batch = 1`.
-pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
-                        slo_ms: Option<f64>) -> Result<AllocationPlan, TuningError> {
-    plan_allocations_batched(sim, mix, slo_ms, 1)
+/// Builder for one allocation plan — the single entry point behind the
+/// deprecated [`plan_allocations`] / [`plan_allocations_batched`] free
+/// functions, and what [`super::fleet::plan_fleet`] composes per chip kind
+/// through the plan cache.
+///
+/// Defaults: no SLO, batch 1 (no batching), load-aware service selection.
+///
+/// ```no_run
+/// use dlfusion::accel::{Simulator, Target};
+/// use dlfusion::serving::{AllocationRequest, ModelMix};
+/// use dlfusion::zoo;
+///
+/// let sim = Simulator::new(Target::mlu100());
+/// let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+/// let plan = AllocationRequest::new(&sim, &mix)
+///     .slo_ms(Some(40.0))
+///     .max_batch(8)
+///     .plan()
+///     .expect("tunable mix");
+/// println!("{}", plan.render());
+/// ```
+#[derive(Debug, Clone)]
+pub struct AllocationRequest<'a> {
+    sim: &'a Simulator,
+    mix: &'a ModelMix,
+    slo_ms: Option<f64>,
+    max_batch: usize,
+    load_aware: bool,
 }
 
-/// The `(mp_cap, batch)` operating-point sweep (rust/docs/DESIGN.md §10).
-///
-/// Per model, each MP cap runs the constrained oracle DP at batch 1 —
-/// exactly the [`plan_allocations`] sweep, so the batch-1 points are
-/// unchanged — and the tuned schedule is then priced at every batch
-/// `1..=max_batch` through the same engine's batch-aware model, giving each
-/// point a batched-latency table. The **load-aware** choice minimizes
-/// per-request core-milliseconds `cores * service_at(b) / b` over the full
-/// `(point, batch)` grid, subject to the invocation latency `service_at(b)`
-/// meeting the SLO (a request's end-to-end latency is at least its
-/// invocation's); the **single-request** choice stays the paper's batch-1
-/// minimum-latency point.
+impl<'a> AllocationRequest<'a> {
+    /// An allocation request for `mix` on `sim`'s target.
+    pub fn new(sim: &'a Simulator, mix: &'a ModelMix) -> AllocationRequest<'a> {
+        AllocationRequest { sim, mix, slo_ms: None, max_batch: 1, load_aware: true }
+    }
+
+    /// Per-request service SLO, ms: the load-aware scan only admits
+    /// `(point, batch)` candidates whose invocation latency meets it.
+    pub fn slo_ms(mut self, slo_ms: Option<f64>) -> AllocationRequest<'a> {
+        self.slo_ms = slo_ms;
+        self
+    }
+
+    /// Price every tuned schedule at batches `1..=max_batch` (the batch
+    /// candidates of the load-aware grid). Must be at least 1; 1 (the
+    /// default) means single-request serving.
+    pub fn max_batch(mut self, max_batch: usize) -> AllocationRequest<'a> {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Whether [`Self::services`] folds the plan to the load-aware points
+    /// (default) or the single-request optima. The plan itself always
+    /// carries both.
+    pub fn load_aware(mut self, load_aware: bool) -> AllocationRequest<'a> {
+        self.load_aware = load_aware;
+        self
+    }
+
+    /// Run the `(mp_cap, batch)` sweep (rust/docs/DESIGN.md §10) and build
+    /// the plan.
+    ///
+    /// Per model, each MP cap runs the constrained oracle DP at batch 1,
+    /// and the tuned schedule is then priced at every batch
+    /// `1..=max_batch` through the same engine's batch-aware model, giving
+    /// each point a batched-latency table. The **load-aware** choice
+    /// minimizes per-request core-milliseconds `cores * service_at(b) / b`
+    /// over the full `(point, batch)` grid, subject to the invocation
+    /// latency `service_at(b)` meeting the SLO (a request's end-to-end
+    /// latency is at least its invocation's); the **single-request** choice
+    /// stays the paper's batch-1 minimum-latency point. Models carrying a
+    /// cut constraint in the mix ([`ModelMix::cuts_for`], DAG-derived
+    /// workloads) tune with it applied.
+    pub fn plan(self) -> Result<AllocationPlan, TuningError> {
+        plan_mix(self.sim, self.mix, self.slo_ms, self.max_batch)
+    }
+
+    /// [`Self::plan`], folded to the per-model cluster services at the
+    /// requested operating points.
+    pub fn services(self) -> Result<Vec<ModelService>, TuningError> {
+        let load_aware = self.load_aware;
+        Ok(self.plan()?.services(load_aware))
+    }
+}
+
+/// Sweep each model's MP caps through the constrained oracle DP and pick
+/// both operating points. Equivalent to [`AllocationRequest::plan`] with
+/// the default batch of 1.
+#[deprecated(note = "build an `AllocationRequest`: \
+                     AllocationRequest::new(sim, mix).slo_ms(slo).plan()")]
+pub fn plan_allocations(sim: &Simulator, mix: &ModelMix,
+                        slo_ms: Option<f64>) -> Result<AllocationPlan, TuningError> {
+    AllocationRequest::new(sim, mix).slo_ms(slo_ms).plan()
+}
+
+/// The `(mp_cap, batch)` operating-point sweep —
+/// [`AllocationRequest::plan`] as a free function.
+#[deprecated(note = "build an `AllocationRequest` with .max_batch(...)")]
 pub fn plan_allocations_batched(sim: &Simulator, mix: &ModelMix,
                                 slo_ms: Option<f64>, max_batch: usize)
                                 -> Result<AllocationPlan, TuningError> {
+    AllocationRequest::new(sim, mix).slo_ms(slo_ms).max_batch(max_batch).plan()
+}
+
+/// The sweep body behind [`AllocationRequest::plan`]. One `TuningRequest`
+/// context per model: the caps share the memoized `(block, mp)` cache, so
+/// the whole sweep costs barely more than one uncapped search. Each model
+/// is planned independently (its own request, context, and engine), which
+/// is what lets the fleet plan cache reuse single-model plans inside any
+/// mix bit-identically.
+fn plan_mix(sim: &Simulator, mix: &ModelMix, slo_ms: Option<f64>,
+            max_batch: usize) -> Result<AllocationPlan, TuningError> {
     if max_batch == 0 {
         return Err(TuningError::InvalidBatch { batch: 0 });
     }
     let caps = sim.spec.reduced_mp_set();
     let mut models = Vec::new();
     for (mi, model) in mix.models.iter().enumerate() {
-        let request = TuningRequest::new(sim, model);
+        let mut request = TuningRequest::new(sim, model);
+        if let Some(cuts) = mix.cuts_for(mi) {
+            request = request.allowed_cuts(cuts.to_vec());
+        }
         let mut cx = request.context();
+        let mut tuning_evaluations: u64 = 0;
         // Every cap outcome, pre-dedup: same-cores schedules from different
         // caps can have different fusion structures, and a structure that is
         // marginally slower at batch 1 can still win the batched grid (its
@@ -237,6 +332,7 @@ pub fn plan_allocations_batched(sim: &Simulator, mix: &ModelMix,
                 caps.iter().copied().filter(|&m| m <= cap).collect();
             cx.set_mp_candidates(mps);
             let out = OracleDp::constrained().tune(&mut cx)?;
+            tuning_evaluations += out.stats.evaluations;
             // The request reserves only the cores its schedule ever uses.
             let cores = out
                 .schedule
@@ -322,12 +418,15 @@ pub fn plan_allocations_batched(sim: &Simulator, mix: &ModelMix,
             single,
             load_aware,
             load_aware_batch,
+            tuning_evaluations,
         });
     }
     Ok(AllocationPlan { models, slo_ms, target: sim.target().to_string() })
 }
 
 #[cfg(test)]
+// The legacy shims stay covered until they are removed.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::zoo;
@@ -450,6 +549,53 @@ mod tests {
                 <= m.single.core_ms() + 1e-12);
         // Zero max_batch is rejected, not clamped.
         assert!(plan_allocations_batched(&sim, &mix, None, 0).is_err());
+    }
+
+    #[test]
+    fn builder_and_deprecated_shims_are_bit_identical() {
+        let sim = Simulator::new(crate::accel::Target::mlu100());
+        let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+        let built = AllocationRequest::new(&sim, &mix)
+            .slo_ms(Some(100.0))
+            .plan()
+            .unwrap();
+        assert_eq!(built, plan_allocations(&sim, &mix, Some(100.0)).unwrap());
+        let batched = AllocationRequest::new(&sim, &mix).max_batch(4).plan().unwrap();
+        assert_eq!(batched,
+                   plan_allocations_batched(&sim, &mix, None, 4).unwrap());
+        // The sweep accounts its engine evaluations (what a plan-cache hit
+        // saves), and the non-load-aware fold picks the single points.
+        assert!(built.models.iter().all(|m| m.tuning_evaluations > 0));
+        let singles = AllocationRequest::new(&sim, &mix)
+            .load_aware(false)
+            .services()
+            .unwrap();
+        for (s, m) in singles.iter().zip(&built.models) {
+            assert_eq!(s.cores, m.single.cores);
+        }
+        // Invalid batch still surfaces through the builder.
+        assert!(AllocationRequest::new(&sim, &mix).max_batch(0).plan().is_err());
+    }
+
+    #[test]
+    fn cut_constraints_thread_into_the_sweep() {
+        let sim = Simulator::new(crate::accel::Target::mlu100());
+        let model = zoo::alexnet();
+        let free = AllocationRequest::new(
+            &sim, &ModelMix::uniform(vec![model.clone()])).plan().unwrap();
+        // Forbid every interior cut: the whole model must fuse into one
+        // block, which can never beat the unconstrained optimum.
+        let fused =
+            ModelMix::uniform_with_cuts(vec![(model.clone(), Some(Vec::new()))]);
+        assert_eq!(fused.cuts_for(0), Some(&[][..]));
+        let constrained = AllocationRequest::new(&sim, &fused).plan().unwrap();
+        assert!(constrained.models[0].single.service_ms
+                >= free.models[0].single.service_ms - 1e-12);
+        // A single-model slice of a mix keeps the model's cuts.
+        let sliced = fused.single(0);
+        assert_eq!(sliced.cuts_for(0), fused.cuts_for(0));
+        assert_eq!(AllocationRequest::new(&sim, &sliced).plan().unwrap().models,
+                   constrained.models);
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //! by `(finish time, start sequence)`). The whole simulation is a pure
 //! function of its inputs: no wall clock, no global RNG, ties broken by
 //! explicit sequence numbers.
+//!
+//! Entry point: the [`SimulationRun`] builder. The incremental engine
+//! underneath ([`ChipSim`]) is also driven chip-by-chip by the fleet
+//! simulator ([`super::fleet`]), which interleaves routing decisions with
+//! per-chip event processing.
 
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -31,8 +36,8 @@ pub struct ModelService {
     pub batch_service_ms: Vec<f64>,
     /// Registry name of the hardware target the service times were planned
     /// for (rust/docs/DESIGN.md §11); empty when hand-built outside a plan.
-    /// [`simulate`] refuses to co-schedule services planned for different
-    /// targets — a pool is one chip.
+    /// [`SimulationRun`] refuses to co-schedule services planned for
+    /// different targets — a pool is one chip.
     pub target: String,
 }
 
@@ -138,7 +143,8 @@ impl CompletedRequest {
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
     /// The full event trace — empty when the run disabled recording
-    /// ([`simulate_with`]); [`SimResult::events_processed`] still counts.
+    /// ([`SimulationRun::record_events`]); [`SimResult::events_processed`]
+    /// still counts.
     pub events: Vec<SimEvent>,
     pub completed: Vec<CompletedRequest>,
     pub num_cores: usize,
@@ -229,6 +235,9 @@ impl Ord for HeapEntry {
 #[derive(Debug)]
 struct RunningBatch {
     start_ms: f64,
+    /// When the invocation completes — mirrors its heap entry, so the
+    /// router's backlog estimate reads the slab instead of walking the heap.
+    finish_ms: f64,
     /// Cores the invocation occupies (the model's allocation, once for the
     /// whole batch).
     cores: usize,
@@ -236,263 +245,490 @@ struct RunningBatch {
     reqs: Vec<QueuedRequest>,
 }
 
+/// Builder for one deterministic simulation of the core pool — the single
+/// entry point behind `serve-sim`, the fleet per-chip event loops
+/// ([`super::fleet`]), and the deprecated [`simulate`] / [`simulate_with`]
+/// shims.
+///
+/// Defaults: empty trace, open loop, event recording on.
+///
+/// ```
+/// use dlfusion::serving::{ClusterConfig, DispatchPolicy, ModelService,
+///                         Request, SimulationRun};
+///
+/// let cfg = ClusterConfig { num_cores: 4, policy: DispatchPolicy::Fifo };
+/// let services = [ModelService::new("m", 2, 10.0)];
+/// let trace = [Request { id: 0, model: 0, arrival_ms: 0.0 }];
+/// let result = SimulationRun::new(&cfg, &services)
+///     .trace(&trace)
+///     .record_events(false)
+///     .run()
+///     .expect("valid run");
+/// assert_eq!(result.completed.len(), 1);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SimulationRun<'a> {
+    cfg: ClusterConfig,
+    services: &'a [ModelService],
+    trace: &'a [Request],
+    closed_loop: Option<usize>,
+    record_events: bool,
+}
+
+impl<'a> SimulationRun<'a> {
+    /// A run of `services` over the `cfg` pool.
+    pub fn new(cfg: &ClusterConfig, services: &'a [ModelService]) -> SimulationRun<'a> {
+        SimulationRun {
+            cfg: *cfg,
+            services,
+            trace: &[],
+            closed_loop: None,
+            record_events: true,
+        }
+    }
+
+    /// The arrival trace to replay (sorted by arrival time).
+    pub fn trace(mut self, trace: &'a [Request]) -> SimulationRun<'a> {
+        self.trace = trace;
+        self
+    }
+
+    /// `Some(k)`: fixed-population closed loop — only the first `k` trace
+    /// entries arrive up front; each completion injects the next backlogged
+    /// entry at the completion instant. `None` (the default): open loop,
+    /// the trace arrives as timestamped.
+    pub fn closed_loop(mut self, population: Option<usize>) -> SimulationRun<'a> {
+        self.closed_loop = population;
+        self
+    }
+
+    /// Whether to record the [`SimEvent`] trace (default on). The trace
+    /// exists for inspection and determinism pinning; on throughput runs it
+    /// is pure overhead (three records per request). Disabling it changes
+    /// nothing else — completions, makespan, and
+    /// [`SimResult::events_processed`] are bit-identical —
+    /// and `SimResult::events` comes back empty.
+    pub fn record_events(mut self, record: bool) -> SimulationRun<'a> {
+        self.record_events = record;
+        self
+    }
+
+    /// Validate the inputs and run the simulation to completion.
+    ///
+    /// Completions at the same instant as an arrival are processed first,
+    /// so freed cores are visible to the arrival's dispatch. Under
+    /// [`DispatchPolicy::Batch`] a third event kind joins arrivals and
+    /// completions: the *flush deadline* of a held partial batch
+    /// (`oldest arrival + max_wait_ms`), processed after any completion or
+    /// arrival at the same instant so a just-freed core or a just-arrived
+    /// request is visible to the flush. The simulation stays a pure
+    /// function of its inputs.
+    pub fn run(self) -> Result<SimResult, String> {
+        let mut chip = ChipSim::new(&self.cfg, self.services, self.record_events)?;
+        chip.load_trace(self.trace, self.closed_loop)?;
+        chip.advance(None);
+        Ok(chip.into_result())
+    }
+}
+
 /// Run the discrete-event simulation of `trace` over the core pool.
 ///
 /// `closed_loop`: when `Some(k)`, only the first `k` trace entries arrive up
 /// front; each completion injects the next backlogged entry at the
-/// completion instant (a fixed-population closed loop). Completions at the
-/// same instant as an arrival are processed first, so freed cores are
-/// visible to the arrival's dispatch.
-///
-/// Under [`DispatchPolicy::Batch`] a third event kind joins arrivals and
-/// completions: the *flush deadline* of a held partial batch
-/// (`oldest arrival + max_wait_ms`), processed after any completion or
-/// arrival at the same instant so a just-freed core or a just-arrived
-/// request is visible to the flush. The simulation stays a pure function of
-/// its inputs.
+/// completion instant (a fixed-population closed loop).
+#[deprecated(note = "build a `SimulationRun`: \
+                     SimulationRun::new(cfg, services).trace(trace).run()")]
 pub fn simulate(cfg: &ClusterConfig, services: &[ModelService],
                 trace: &[Request], closed_loop: Option<usize>)
                 -> Result<SimResult, String> {
-    simulate_with(cfg, services, trace, closed_loop, true)
+    SimulationRun::new(cfg, services).trace(trace).closed_loop(closed_loop).run()
 }
 
-/// [`simulate`], with the [`SimEvent`] trace recording made optional. The
-/// trace exists for inspection and determinism pinning; on throughput runs
-/// it is pure overhead (three records per request). `record_events: false`
-/// skips it — the simulation is otherwise bit-identical (completions,
-/// makespan, [`SimResult::events_processed`]) and `SimResult::events`
-/// comes back empty.
+/// [`simulate`], with the [`SimEvent`] trace recording made optional —
+/// [`SimulationRun::record_events`] as a free function.
+#[deprecated(note = "build a `SimulationRun` with .record_events(...)")]
 pub fn simulate_with(cfg: &ClusterConfig, services: &[ModelService],
                      trace: &[Request], closed_loop: Option<usize>,
                      record_events: bool)
                      -> Result<SimResult, String> {
-    if cfg.num_cores == 0 {
-        return Err("cluster has no cores".into());
-    }
-    let batch_knobs = match cfg.policy {
-        DispatchPolicy::Batch { max_batch, max_wait_ms } => {
-            if max_batch == 0 {
-                return Err("batch policy needs max_batch >= 1".into());
-            }
-            if !(max_wait_ms >= 0.0) {
-                return Err(format!(
-                    "batch policy needs a non-negative max_wait_ms, got {max_wait_ms}"));
-            }
-            Some((max_batch, max_wait_ms))
-        }
-        _ => None,
-    };
-    // One pool is one chip: services planned for different hardware targets
-    // cannot share it (their service times are in different "units").
-    let mut planned_target: Option<&str> = None;
-    for s in services {
-        if s.target.is_empty() {
-            continue;
-        }
-        match planned_target {
-            None => planned_target = Some(s.target.as_str()),
-            Some(first) if first != s.target => {
-                return Err(crate::accel::TargetError::MixedTargets {
-                    first: first.to_string(),
-                    second: s.target.clone(),
-                }
-                .to_string());
-            }
-            Some(_) => {}
-        }
-    }
-    for s in services {
-        if s.cores == 0 || s.cores > cfg.num_cores {
-            return Err(format!(
-                "model '{}' allocated {} cores outside 1..={}",
-                s.name, s.cores, cfg.num_cores));
-        }
-        if !(s.service_ms > 0.0) {
-            return Err(format!(
-                "model '{}' has non-positive service time {} ms",
-                s.name, s.service_ms));
-        }
-        if let Some(&bad) = s.batch_service_ms.iter().find(|&&t| !(t > 0.0)) {
-            return Err(format!(
-                "model '{}' has a non-positive batched service time {bad} ms",
-                s.name));
-        }
-    }
-    for w in trace.windows(2) {
-        if w[1].arrival_ms < w[0].arrival_ms {
-            return Err("trace is not sorted by arrival time".into());
-        }
-    }
-    if let Some(r) = trace.iter().find(|r| r.model >= services.len()) {
-        return Err(format!(
-            "request {} references model {} but only {} are allocated",
-            r.id, r.model, services.len()));
-    }
-    // Closed-loop injections append at completion instants, which stay
-    // ordered only because every closed-loop trace arrives at one instant
-    // (what `generate_trace` emits for `ArrivalProcess::ClosedLoop`).
-    if closed_loop.is_some()
-        && trace.windows(2).any(|w| w[1].arrival_ms != w[0].arrival_ms)
-    {
-        return Err("closed-loop simulation expects a simultaneous-arrival \
-                    trace (generate with ArrivalProcess::ClosedLoop)"
-            .into());
-    }
+    SimulationRun::new(cfg, services)
+        .trace(trace)
+        .closed_loop(closed_loop)
+        .record_events(record_events)
+        .run()
+}
 
-    let mut arrivals: VecDeque<Request> = trace.iter().copied().collect();
-    let mut backlog: VecDeque<Request> = VecDeque::new();
-    if let Some(k) = closed_loop {
-        let k = k.max(1);
-        if arrivals.len() > k {
-            backlog = arrivals.split_off(k);
-        }
-    }
+/// The incremental single-chip engine behind [`SimulationRun`]: validated
+/// pool state plus the three event sources (completions, queued arrivals,
+/// flush deadlines). [`SimulationRun::run`] loads a whole trace and drains
+/// it in one [`ChipSim::advance`]; the fleet loop ([`super::fleet`])
+/// instead advances every chip to each arrival instant, consults the
+/// router against the chips' exact queue/backlog state, and injects the
+/// routed request via [`ChipSim::arrive`]. Either way each chip processes
+/// the same `(time, rank)` event sequence — which is why a one-chip fleet
+/// is bit-identical to a single-pool run.
+#[derive(Debug)]
+pub(crate) struct ChipSim<'a> {
+    num_cores: usize,
+    policy: DispatchPolicy,
+    batch_knobs: Option<(usize, f64)>,
+    services: &'a [ModelService],
+    record_events: bool,
+    closed_loop: bool,
+    arrivals: VecDeque<Request>,
+    backlog: VecDeque<Request>,
+    events: Vec<SimEvent>,
+    events_processed: u64,
+    completed: Vec<CompletedRequest>,
+    queues: QueueSet,
+    heap: BinaryHeap<HeapEntry>,
+    slab: Vec<Option<RunningBatch>>,
+    free_slots: Vec<usize>,
+    free: usize,
+    seq: u64,
+}
 
-    // Every request arrives, starts, and finishes exactly once (closed-loop
-    // runs replay the same trace entries), so the recorded trace is exactly
-    // three events per request: pre-size it once.
-    let mut events = if record_events {
-        Vec::with_capacity(trace.len() * 3)
-    } else {
-        Vec::new()
-    };
-    let mut events_processed: u64 = 0;
-    let mut completed = Vec::with_capacity(trace.len());
-    let mut queues = QueueSet::new(services.len());
-    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
-    let mut slab: Vec<Option<RunningBatch>> = Vec::new();
-    let mut free_slots: Vec<usize> = Vec::new();
-    let mut free = cfg.num_cores;
-    let mut seq: u64 = 0;
-
-    loop {
-        let next_arrival = arrivals.front().map(|r| r.arrival_ms);
-        let next_finish = heap.peek().map(|c| c.finish_ms);
-        // The earliest flush deadline among held partial batches that could
-        // dispatch right now (batch policy only). Anything not dispatchable
-        // now — cores busy, or already a full batch — needs no timer: the
-        // completion or arrival that changes that re-runs the dispatch pass.
-        let next_deadline = batch_knobs.and_then(|(max_batch, max_wait_ms)| {
-            let mut deadline: Option<f64> = None;
-            for (m, svc) in services.iter().enumerate() {
-                let Some(head) = queues.head(m) else { continue };
-                if svc.cores > free || queues.len_for(m) >= max_batch {
-                    continue;
-                }
-                let d = head.arrival_ms + max_wait_ms;
-                let sooner = match deadline {
-                    None => true,
-                    Some(cur) => d < cur,
-                };
-                if sooner {
-                    deadline = Some(d);
-                }
-            }
-            deadline
-        });
-        // Tie order at one instant: completions first (free cores before
-        // dispatching), then arrivals (a request arriving exactly at a
-        // flush deadline joins the batch), then deadlines.
-        let mut choice: Option<(f64, u8)> = None;
-        for (t, rank) in [(next_finish, 0u8), (next_arrival, 1), (next_deadline, 2)] {
-            if let Some(t) = t {
-                let better = match choice {
-                    None => true,
-                    Some(best) => (t, rank) < best,
-                };
-                if better {
-                    choice = Some((t, rank));
-                }
-            }
+impl<'a> ChipSim<'a> {
+    /// Validate the pool configuration and services; build an idle chip.
+    pub(crate) fn new(cfg: &ClusterConfig, services: &'a [ModelService],
+                      record_events: bool) -> Result<ChipSim<'a>, String> {
+        if cfg.num_cores == 0 {
+            return Err("cluster has no cores".into());
         }
-        let Some((event_ms, rank)) = choice else { break };
-        let now = match rank {
-            0 => {
-                let entry = heap.pop().unwrap();
-                let c = slab[entry.slot].take().expect("heap entry has a live slot");
-                free_slots.push(entry.slot);
-                free += c.cores;
-                let batch = c.reqs.len();
-                for r in &c.reqs {
-                    events_processed += 1;
-                    if record_events {
-                        events.push(SimEvent {
-                            time_ms: entry.finish_ms,
-                            kind: SimEventKind::Finish { id: r.id, free_cores: free },
-                        });
-                    }
-                    completed.push(CompletedRequest {
-                        id: r.id,
-                        model: r.model,
-                        arrival_ms: r.arrival_ms,
-                        start_ms: c.start_ms,
-                        finish_ms: entry.finish_ms,
-                        cores: c.cores,
-                        batch,
-                    });
+        let batch_knobs = match cfg.policy {
+            DispatchPolicy::Batch { max_batch, max_wait_ms } => {
+                if max_batch == 0 {
+                    return Err("batch policy needs max_batch >= 1".into());
                 }
-                if closed_loop.is_some() {
-                    for _ in 0..batch {
-                        if let Some(mut nxt) = backlog.pop_front() {
-                            nxt.arrival_ms = entry.finish_ms;
-                            arrivals.push_back(nxt);
-                        }
-                    }
+                if !(max_wait_ms >= 0.0) {
+                    return Err(format!(
+                        "batch policy needs a non-negative max_wait_ms, got {max_wait_ms}"));
                 }
-                entry.finish_ms
+                Some((max_batch, max_wait_ms))
             }
-            1 => {
-                let r = arrivals.pop_front().unwrap();
-                events_processed += 1;
-                if record_events {
-                    events.push(SimEvent {
-                        time_ms: r.arrival_ms,
-                        kind: SimEventKind::Arrive { id: r.id, model: r.model },
-                    });
-                }
-                let svc = &services[r.model];
-                queues.push(QueuedRequest {
-                    id: r.id,
-                    model: r.model,
-                    arrival_ms: r.arrival_ms,
-                    cores: svc.cores,
-                    service_ms: svc.service_ms,
-                });
-                r.arrival_ms
-            }
-            // Flush deadline: only the clock advances; the dispatch pass
-            // below releases every matured batch.
-            _ => event_ms,
+            _ => None,
         };
+        // One pool is one chip: services planned for different hardware
+        // targets cannot share it (their service times are in different
+        // "units"). Heterogeneity lives across fleet chips, never within one.
+        let mut planned_target: Option<&str> = None;
+        for s in services {
+            if s.target.is_empty() {
+                continue;
+            }
+            match planned_target {
+                None => planned_target = Some(s.target.as_str()),
+                Some(first) if first != s.target => {
+                    return Err(crate::accel::TargetError::MixedTargets {
+                        first: first.to_string(),
+                        second: s.target.clone(),
+                    }
+                    .to_string());
+                }
+                Some(_) => {}
+            }
+        }
+        for s in services {
+            if s.cores == 0 || s.cores > cfg.num_cores {
+                return Err(format!(
+                    "model '{}' allocated {} cores outside 1..={}",
+                    s.name, s.cores, cfg.num_cores));
+            }
+            if !(s.service_ms > 0.0) {
+                return Err(format!(
+                    "model '{}' has non-positive service time {} ms",
+                    s.name, s.service_ms));
+            }
+            if let Some(&bad) = s.batch_service_ms.iter().find(|&&t| !(t > 0.0)) {
+                return Err(format!(
+                    "model '{}' has a non-positive batched service time {bad} ms",
+                    s.name));
+            }
+        }
+        Ok(ChipSim {
+            num_cores: cfg.num_cores,
+            policy: cfg.policy,
+            batch_knobs,
+            services,
+            record_events,
+            closed_loop: false,
+            arrivals: VecDeque::new(),
+            backlog: VecDeque::new(),
+            events: Vec::new(),
+            events_processed: 0,
+            completed: Vec::new(),
+            queues: QueueSet::new(services.len()),
+            heap: BinaryHeap::new(),
+            slab: Vec::new(),
+            free_slots: Vec::new(),
+            free: cfg.num_cores,
+            seq: 0,
+        })
+    }
 
-        // Dispatch at the current instant.
-        match batch_knobs {
+    /// Load a whole arrival trace (the single-pool path): validate it and
+    /// queue every entry as an internal arrival event.
+    fn load_trace(&mut self, trace: &[Request],
+                  closed_loop: Option<usize>) -> Result<(), String> {
+        for w in trace.windows(2) {
+            if w[1].arrival_ms < w[0].arrival_ms {
+                return Err("trace is not sorted by arrival time".into());
+            }
+        }
+        if let Some(r) = trace.iter().find(|r| r.model >= self.services.len()) {
+            return Err(format!(
+                "request {} references model {} but only {} are allocated",
+                r.id, r.model, self.services.len()));
+        }
+        // Closed-loop injections append at completion instants, which stay
+        // ordered only because every closed-loop trace arrives at one
+        // instant (what `generate_trace` emits for
+        // `ArrivalProcess::ClosedLoop`).
+        if closed_loop.is_some()
+            && trace.windows(2).any(|w| w[1].arrival_ms != w[0].arrival_ms)
+        {
+            return Err("closed-loop simulation expects a simultaneous-arrival \
+                        trace (generate with ArrivalProcess::ClosedLoop)"
+                .into());
+        }
+        self.arrivals = trace.iter().copied().collect();
+        if let Some(k) = closed_loop {
+            self.closed_loop = true;
+            let k = k.max(1);
+            if self.arrivals.len() > k {
+                self.backlog = self.arrivals.split_off(k);
+            }
+        }
+        // Every request arrives, starts, and finishes exactly once
+        // (closed-loop runs replay the same trace entries), so the recorded
+        // trace is exactly three events per request: pre-size it once.
+        if self.record_events {
+            self.events.reserve(trace.len() * 3);
+        }
+        self.completed.reserve(trace.len());
+        Ok(())
+    }
+
+    /// Process events in `(time, rank)` order — completions rank 0,
+    /// arrivals rank 1, flush deadlines rank 2 — until every source is dry
+    /// or, with `limit = Some(t)`, until the next event would sort at or
+    /// after an external arrival at `t` (a rank-1 slot): completions at `t`
+    /// still run first, same-instant flush deadlines wait until after the
+    /// arrival is injected. The fleet loop alternates `advance(Some(t))` /
+    /// [`Self::arrive`] per routed request and finishes with
+    /// `advance(None)`.
+    pub(crate) fn advance(&mut self, limit: Option<f64>) {
+        loop {
+            let next_arrival = self.arrivals.front().map(|r| r.arrival_ms);
+            let next_finish = self.heap.peek().map(|c| c.finish_ms);
+            let next_deadline = self.next_deadline();
+            // Tie order at one instant: completions first (free cores before
+            // dispatching), then arrivals (a request arriving exactly at a
+            // flush deadline joins the batch), then deadlines.
+            let mut choice: Option<(f64, u8)> = None;
+            for (t, rank) in
+                [(next_finish, 0u8), (next_arrival, 1), (next_deadline, 2)]
+            {
+                if let Some(t) = t {
+                    let better = match choice {
+                        None => true,
+                        Some(best) => (t, rank) < best,
+                    };
+                    if better {
+                        choice = Some((t, rank));
+                    }
+                }
+            }
+            let Some((event_ms, rank)) = choice else { break };
+            if let Some(lim) = limit {
+                if event_ms > lim || (event_ms == lim && rank >= 1) {
+                    break;
+                }
+            }
+            let now = match rank {
+                0 => self.complete_one(),
+                1 => {
+                    let r = self.arrivals.pop_front().unwrap();
+                    self.admit(r);
+                    r.arrival_ms
+                }
+                // Flush deadline: only the clock advances; the dispatch pass
+                // below releases every matured batch.
+                _ => event_ms,
+            };
+            self.dispatch_at(now);
+        }
+    }
+
+    /// Inject an external (router-chosen) arrival at its own instant. The
+    /// caller must have advanced the chip to the arrival time first
+    /// (`advance(Some(arrival_ms))`), so this lands in the exact `(time,
+    /// rank)` slot an internally queued arrival would occupy.
+    pub(crate) fn arrive(&mut self, r: Request) {
+        debug_assert!(r.model < self.services.len());
+        self.admit(r);
+        self.dispatch_at(r.arrival_ms);
+    }
+
+    /// Requests queued (arrived, not yet dispatched) — the admission
+    /// controller's shed signal.
+    pub(crate) fn waiting(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Estimated time to drain everything on the chip at `now`, in ms: the
+    /// remaining core-ms of running invocations plus the single-request
+    /// core-ms of every queued request, normalized by the pool width. The
+    /// least-loaded router's join-shortest-expected-delay signal — an
+    /// estimate (queued work is priced at batch 1), but a deterministic
+    /// one.
+    pub(crate) fn backlog_ms(&self, now: f64) -> f64 {
+        let mut core_ms = 0.0;
+        for b in self.slab.iter().flatten() {
+            core_ms += (b.finish_ms - now).max(0.0) * b.cores as f64;
+        }
+        for q in self.queues.iter() {
+            core_ms += q.service_ms * q.cores as f64;
+        }
+        core_ms / self.num_cores as f64
+    }
+
+    /// Tear down into the run's result. Debug builds assert the pool
+    /// drained (every admitted request completed, all cores free).
+    pub(crate) fn into_result(self) -> SimResult {
+        debug_assert!(self.queues.is_empty(), "validated requests cannot strand");
+        debug_assert_eq!(self.free, self.num_cores);
+        debug_assert!(self.slab.iter().all(Option::is_none),
+                      "no invocation left running");
+        SimResult {
+            events: self.events,
+            completed: self.completed,
+            num_cores: self.num_cores,
+            events_processed: self.events_processed,
+        }
+    }
+
+    /// The earliest flush deadline among held partial batches that could
+    /// dispatch right now (batch policy only). Anything not dispatchable
+    /// now — cores busy, or already a full batch — needs no timer: the
+    /// completion or arrival that changes that re-runs the dispatch pass.
+    fn next_deadline(&self) -> Option<f64> {
+        let (max_batch, max_wait_ms) = self.batch_knobs?;
+        let mut deadline: Option<f64> = None;
+        for (m, svc) in self.services.iter().enumerate() {
+            let Some(head) = self.queues.head(m) else { continue };
+            if svc.cores > self.free || self.queues.len_for(m) >= max_batch {
+                continue;
+            }
+            let d = head.arrival_ms + max_wait_ms;
+            let sooner = match deadline {
+                None => true,
+                Some(cur) => d < cur,
+            };
+            if sooner {
+                deadline = Some(d);
+            }
+        }
+        deadline
+    }
+
+    /// Pop the earliest completion: free its cores, record every rider,
+    /// and (closed loop) inject one backlogged arrival per rider at the
+    /// completion instant. Returns the completion time.
+    fn complete_one(&mut self) -> f64 {
+        let entry = self.heap.pop().unwrap();
+        let c = self.slab[entry.slot].take().expect("heap entry has a live slot");
+        self.free_slots.push(entry.slot);
+        self.free += c.cores;
+        let batch = c.reqs.len();
+        for r in &c.reqs {
+            self.events_processed += 1;
+            if self.record_events {
+                self.events.push(SimEvent {
+                    time_ms: entry.finish_ms,
+                    kind: SimEventKind::Finish { id: r.id, free_cores: self.free },
+                });
+            }
+            self.completed.push(CompletedRequest {
+                id: r.id,
+                model: r.model,
+                arrival_ms: r.arrival_ms,
+                start_ms: c.start_ms,
+                finish_ms: entry.finish_ms,
+                cores: c.cores,
+                batch,
+            });
+        }
+        if self.closed_loop {
+            for _ in 0..batch {
+                if let Some(mut nxt) = self.backlog.pop_front() {
+                    nxt.arrival_ms = entry.finish_ms;
+                    self.arrivals.push_back(nxt);
+                }
+            }
+        }
+        entry.finish_ms
+    }
+
+    /// Record an arrival and queue it at its model's operating point.
+    fn admit(&mut self, r: Request) {
+        self.events_processed += 1;
+        if self.record_events {
+            self.events.push(SimEvent {
+                time_ms: r.arrival_ms,
+                kind: SimEventKind::Arrive { id: r.id, model: r.model },
+            });
+        }
+        let svc = &self.services[r.model];
+        self.queues.push(QueuedRequest {
+            id: r.id,
+            model: r.model,
+            arrival_ms: r.arrival_ms,
+            cores: svc.cores,
+            service_ms: svc.service_ms,
+        });
+    }
+
+    /// Seat a running invocation in the slab and key it on the heap.
+    fn launch(&mut self, body: RunningBatch) {
+        self.seq += 1;
+        let finish_ms = body.finish_ms;
+        let seq = self.seq;
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.slab[s] = Some(body);
+                s
+            }
+            None => {
+                self.slab.push(Some(body));
+                self.slab.len() - 1
+            }
+        };
+        self.heap.push(HeapEntry { finish_ms, seq, slot });
+    }
+
+    /// Dispatch at the current instant (runs after every event).
+    fn dispatch_at(&mut self, now: f64) {
+        match self.batch_knobs {
             None => {
                 // Single-request policies: work-conserving fit-filtered pops.
-                while let Some(q) = queues.pop_fitting(cfg.policy, free) {
-                    free -= q.cores;
-                    events_processed += 1;
-                    if record_events {
-                        events.push(SimEvent {
+                while let Some(q) = self.queues.pop_fitting(self.policy, self.free) {
+                    self.free -= q.cores;
+                    self.events_processed += 1;
+                    if self.record_events {
+                        self.events.push(SimEvent {
                             time_ms: now,
                             kind: SimEventKind::Start { id: q.id, cores: q.cores },
                         });
                     }
-                    seq += 1;
                     let finish_ms = now + q.service_ms;
                     let cores = q.cores;
-                    let body = RunningBatch { start_ms: now, cores, reqs: vec![q] };
-                    let slot = match free_slots.pop() {
-                        Some(s) => {
-                            slab[s] = Some(body);
-                            s
-                        }
-                        None => {
-                            slab.push(Some(body));
-                            slab.len() - 1
-                        }
-                    };
-                    heap.push(HeapEntry { finish_ms, seq, slot });
+                    self.launch(RunningBatch {
+                        start_ms: now,
+                        finish_ms,
+                        cores,
+                        reqs: vec![q],
+                    });
                 }
             }
             Some((max_batch, max_wait_ms)) => {
@@ -501,12 +737,12 @@ pub fn simulate_with(cfg: &ClusterConfig, services: &[ModelService],
                 // longest-waiting model first (ties by request id).
                 loop {
                     let mut pick: Option<(usize, (f64, u64))> = None;
-                    for (m, svc) in services.iter().enumerate() {
-                        let Some(head) = queues.head(m) else { continue };
-                        if svc.cores > free {
+                    for (m, svc) in self.services.iter().enumerate() {
+                        let Some(head) = self.queues.head(m) else { continue };
+                        if svc.cores > self.free {
                             continue;
                         }
-                        let mature = queues.len_for(m) >= max_batch
+                        let mature = self.queues.len_for(m) >= max_batch
                             || now >= head.arrival_ms + max_wait_ms;
                         if !mature {
                             continue;
@@ -521,44 +757,34 @@ pub fn simulate_with(cfg: &ClusterConfig, services: &[ModelService],
                         }
                     }
                     let Some((m, _)) = pick else { break };
-                    let reqs = queues.pop_front_n(m, max_batch);
-                    let cores = services[m].cores;
-                    let service = services[m].service_at(reqs.len());
-                    free -= cores;
+                    let reqs = self.queues.pop_front_n(m, max_batch);
+                    let cores = self.services[m].cores;
+                    let service = self.services[m].service_at(reqs.len());
+                    self.free -= cores;
                     for r in &reqs {
-                        events_processed += 1;
-                        if record_events {
-                            events.push(SimEvent {
+                        self.events_processed += 1;
+                        if self.record_events {
+                            self.events.push(SimEvent {
                                 time_ms: now,
                                 kind: SimEventKind::Start { id: r.id, cores },
                             });
                         }
                     }
-                    seq += 1;
-                    let body = RunningBatch { start_ms: now, cores, reqs };
-                    let slot = match free_slots.pop() {
-                        Some(s) => {
-                            slab[s] = Some(body);
-                            s
-                        }
-                        None => {
-                            slab.push(Some(body));
-                            slab.len() - 1
-                        }
-                    };
-                    heap.push(HeapEntry { finish_ms: now + service, seq, slot });
+                    self.launch(RunningBatch {
+                        start_ms: now,
+                        finish_ms: now + service,
+                        cores,
+                        reqs,
+                    });
                 }
             }
         }
     }
-
-    debug_assert!(queues.is_empty(), "validated requests cannot strand");
-    debug_assert_eq!(free, cfg.num_cores);
-    debug_assert!(slab.iter().all(Option::is_none), "no invocation left running");
-    Ok(SimResult { events, completed, num_cores: cfg.num_cores, events_processed })
 }
 
 #[cfg(test)]
+// The legacy shims stay covered until they are removed.
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -850,5 +1076,80 @@ mod tests {
         assert_eq!(off.completed, on.completed);
         assert_eq!(off.events_processed, on.events_processed);
         assert_eq!(off.makespan_ms(), on.makespan_ms());
+    }
+
+    #[test]
+    fn builder_and_deprecated_shims_are_bit_identical() {
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 3, max_wait_ms: 2.0 },
+        };
+        let services = [svc("a", 2, 7.0).with_batch_table(vec![7.0, 9.0, 10.0]),
+                        svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 0.5), req(2, 0, 1.0),
+                     req(3, 0, 1.5), req(4, 1, 6.0)];
+        let built =
+            SimulationRun::new(&cfg, &services).trace(&trace).run().unwrap();
+        assert_eq!(built, simulate(&cfg, &services, &trace, None).unwrap());
+        let quiet = SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .record_events(false)
+            .run()
+            .unwrap();
+        assert_eq!(quiet,
+                   simulate_with(&cfg, &services, &trace, None, false).unwrap());
+        // Closed loop too (simultaneous-arrival trace).
+        let fifo = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
+        let pool = [svc("m", 1, 5.0)];
+        let closed: Vec<Request> = (0..6).map(|i| req(i, 0, 0.0)).collect();
+        let built = SimulationRun::new(&fifo, &pool)
+            .trace(&closed)
+            .closed_loop(Some(2))
+            .run()
+            .unwrap();
+        assert_eq!(built, simulate(&fifo, &pool, &closed, Some(2)).unwrap());
+    }
+
+    #[test]
+    fn incremental_arrival_injection_matches_whole_trace_run() {
+        // The fleet drive: advance to each arrival instant, then inject. The
+        // batch policy exercises the flush-deadline rank alongside the
+        // external arrivals.
+        let cfg = ClusterConfig {
+            num_cores: 4,
+            policy: DispatchPolicy::Batch { max_batch: 3, max_wait_ms: 2.0 },
+        };
+        let services = [svc("a", 2, 7.0).with_batch_table(vec![7.0, 9.0, 10.0]),
+                        svc("b", 1, 3.0)];
+        let trace = [req(0, 0, 0.0), req(1, 1, 0.5), req(2, 0, 1.0),
+                     req(3, 0, 1.5), req(4, 1, 6.0), req(5, 0, 6.0)];
+        let whole =
+            SimulationRun::new(&cfg, &services).trace(&trace).run().unwrap();
+        let mut chip = ChipSim::new(&cfg, &services, true).unwrap();
+        for r in &trace {
+            chip.advance(Some(r.arrival_ms));
+            chip.arrive(*r);
+        }
+        chip.advance(None);
+        assert_eq!(chip.into_result(), whole);
+    }
+
+    #[test]
+    fn backlog_estimate_counts_running_and_queued_work() {
+        let cfg = ClusterConfig { num_cores: 2, policy: DispatchPolicy::Fifo };
+        let services = [svc("m", 2, 10.0)];
+        let mut chip = ChipSim::new(&cfg, &services, false).unwrap();
+        assert_eq!(chip.waiting(), 0);
+        assert_eq!(chip.backlog_ms(0.0), 0.0);
+        // One running (dispatched on arrival), one queued behind it.
+        chip.arrive(req(0, 0, 0.0));
+        chip.arrive(req(1, 0, 0.0));
+        assert_eq!(chip.waiting(), 1);
+        // Running: 10 ms remaining on 2 cores; queued: 10 ms * 2 cores.
+        // Normalized by the 2-core pool: 20 ms to drain.
+        assert!((chip.backlog_ms(0.0) - 20.0).abs() < 1e-12);
+        // Halfway through the running invocation the estimate shrinks.
+        assert!((chip.backlog_ms(5.0) - 15.0).abs() < 1e-12);
+        chip.advance(None);
     }
 }

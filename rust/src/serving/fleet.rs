@@ -1,0 +1,642 @@
+//! Fleet-scale serving (rust/docs/DESIGN.md §15): many chips, one front
+//! door.
+//!
+//! PR 5's serving layer simulates one chip — a single core pool running a
+//! tuned model mix. This module scales that picture out without changing
+//! it: a [`Fleet`] is a list of named chips (each its own hardware
+//! [`Target`] and pool width, heterogeneous mixes allowed), a [`Router`]
+//! assigns every arriving request to one chip and optionally sheds under
+//! overload, and each chip then runs the *exact* single-pool event loop
+//! ([`super::cluster::ChipSim`]) it always ran. Placement is two-level:
+//!
+//! 1. **Per chip kind** — [`plan_fleet`] tunes the mix for each distinct
+//!    hardware target through the fleet-wide [`PlanCache`], so each
+//!    `(model, target, batch)` key is swept exactly once no matter how
+//!    many chips share the kind.
+//! 2. **Per model** — a greedy pass pins every model to its cheapest chip
+//!    (descending traffic share, balancing predicted core-ms load), which
+//!    becomes the `model-sharded` routing table.
+//!
+//! Determinism contract: routing and shedding are pure functions of the
+//! trace and the chips' simulated state at each arrival instant, so a
+//! fleet run — per-chip results, shed events, merged report, trace export
+//! — is bit-identical run to run. A one-chip fleet with no queue cap
+//! degenerates to the single-pool simulation exactly (pinned by
+//! rust/tests/fleet_sim.rs).
+
+use crate::accel::{Simulator, Target};
+use crate::obs::{Domain, MetricsRegistry, TraceSession};
+use crate::tuner::TuningError;
+use crate::util::{Json, Table};
+
+use super::allocator::AllocationPlan;
+use super::cluster::{ChipSim, ClusterConfig, ModelService, SimResult};
+use super::plan_cache::{PlanCache, PlanCacheStats};
+use super::queue::DispatchPolicy;
+use super::report::{ServingSeries, SloReport};
+use super::router::{ChipLoad, Router, RouterConfig};
+use super::workload::{ModelMix, Request};
+
+/// One chip of the fleet: a hardware target plus its pool width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chip {
+    /// Fleet-unique name, `<target>-<index>` from the spec parser.
+    pub name: String,
+    pub target: Target,
+    /// Pool width — the target's core count.
+    pub num_cores: usize,
+}
+
+/// An ordered list of chips. Heterogeneous mixes are the point: PR 5's
+/// single pool rejects mixed targets ([`crate::accel::TargetError`]'s
+/// `MixedTargets`, still enforced *per chip*), while the fleet plans each
+/// chip for its own hardware and balances across them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fleet {
+    pub chips: Vec<Chip>,
+}
+
+impl Fleet {
+    /// Parse a fleet spec: comma-separated groups of `<target>x<count>`
+    /// (or a bare `<target>` for one chip), e.g. `mlu100x2,edge4x4`.
+    /// Chips are named `<target>-<i>` with `i` counting per target across
+    /// the whole spec, so `mlu100,mlu100` and `mlu100x2` name identically.
+    pub fn parse(spec: &str) -> Result<Fleet, String> {
+        let mut chips = Vec::new();
+        let mut seen: Vec<(String, usize)> = Vec::new();
+        for group in spec.split(',') {
+            let group = group.trim();
+            if group.is_empty() {
+                return Err(format!("fleet spec '{spec}': empty chip group"));
+            }
+            let (name, count) = match group.rsplit_once('x') {
+                Some((name, n)) => match n.parse::<usize>() {
+                    Ok(count) => (name, count),
+                    Err(_) => (group, 1),
+                },
+                None => (group, 1),
+            };
+            if count == 0 {
+                return Err(format!("chip group '{group}' asks for zero chips"));
+            }
+            let target = Target::by_name(name)
+                .map_err(|e| format!("fleet spec '{spec}': {e}"))?;
+            let start = match seen.iter_mut().find(|(t, _)| t == name) {
+                Some((_, n)) => {
+                    let start = *n;
+                    *n += count;
+                    start
+                }
+                None => {
+                    seen.push((name.to_string(), count));
+                    0
+                }
+            };
+            for i in 0..count {
+                chips.push(Chip {
+                    name: format!("{name}-{}", start + i),
+                    num_cores: target.spec().num_cores,
+                    target: target.clone(),
+                });
+            }
+        }
+        Ok(Fleet { chips })
+    }
+
+    pub fn len(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty()
+    }
+
+    /// Cores across every chip.
+    pub fn total_cores(&self) -> usize {
+        self.chips.iter().map(|c| c.num_cores).sum()
+    }
+
+    /// Distinct target names in first-appearance order — the set the plan
+    /// cache actually tunes for.
+    pub fn kinds(&self) -> Vec<&str> {
+        let mut kinds: Vec<&str> = Vec::new();
+        for c in &self.chips {
+            if !kinds.contains(&c.target.name()) {
+                kinds.push(c.target.name());
+            }
+        }
+        kinds
+    }
+}
+
+/// One chip's tuned slice of the fleet plan.
+#[derive(Debug, Clone)]
+pub struct ChipPlan {
+    pub chip: Chip,
+    /// The mix tuned for this chip's target (through the plan cache).
+    pub plan: AllocationPlan,
+    /// The services the chip's event loop simulates.
+    pub services: Vec<ModelService>,
+}
+
+/// [`plan_fleet`]'s output: per-chip tuned plans, the level-1 model
+/// placement, and what the plan cache saved building it.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub slo_ms: Option<f64>,
+    pub chips: Vec<ChipPlan>,
+    /// Model index → chip index: the greedy placement, read by
+    /// `model-sharded` routing.
+    pub shard_of: Vec<usize>,
+    /// Cache accounting for this planning call alone (a delta, not the
+    /// cache's cumulative totals).
+    pub cache_stats: PlanCacheStats,
+}
+
+impl FleetPlan {
+    pub fn total_cores(&self) -> usize {
+        self.chips.iter().map(|c| c.chip.num_cores).sum()
+    }
+
+    /// Predicted sustainable aggregate rate: the sum of every chip's
+    /// single-pool capacity at the chosen operating points.
+    pub fn predicted_capacity_rps(&self, load_aware: bool) -> f64 {
+        self.chips
+            .iter()
+            .map(|c| c.plan.predicted_capacity_rps(c.chip.num_cores, load_aware))
+            .sum()
+    }
+
+    /// Render the fleet table, the model placement, and the cache line.
+    pub fn render(&self, load_aware: bool) -> String {
+        let mut t = Table::new(&["chip", "target", "cores", "capacity"])
+            .label_first()
+            .with_title("fleet plan");
+        for c in &self.chips {
+            let cap = c.plan.predicted_capacity_rps(c.chip.num_cores, load_aware);
+            t.row(vec![
+                c.chip.name.clone(),
+                c.chip.target.name().to_string(),
+                c.chip.num_cores.to_string(),
+                format!("{cap:.1} req/s"),
+            ]);
+        }
+        let mut out = format!("{t}\n");
+        for (m, &c) in self.shard_of.iter().enumerate() {
+            let model = self.chips[c]
+                .plan
+                .models
+                .get(m)
+                .map_or("model", |a| a.name.as_str());
+            out.push_str(&format!("{model} -> {}\n", self.chips[c].chip.name));
+        }
+        let s = self.cache_stats;
+        out.push_str(&format!(
+            "plan cache: {} tuned, {} reused ({} evals saved)\n",
+            s.misses, s.hits, s.evals_saved));
+        out
+    }
+}
+
+/// Two-level fleet placement (rust/docs/DESIGN.md §15.1). Level 1 tunes
+/// the mix once per chip *kind* through `cache`; level 2 greedily pins
+/// each model (descending traffic share, ties by index) to the chip where
+/// its predicted core-ms load lands cheapest, balancing per-core load.
+/// The placement is advisory for `least-loaded`/`round-robin` routing and
+/// binding for `model-sharded`.
+pub fn plan_fleet(fleet: &Fleet, mix: &ModelMix, slo_ms: Option<f64>,
+                  max_batch: usize, load_aware: bool, cache: &mut PlanCache)
+                  -> Result<FleetPlan, TuningError> {
+    if fleet.is_empty() {
+        return Err(TuningError::InvalidRequest("fleet has no chips".into()));
+    }
+    let before = cache.stats();
+    let mut chips = Vec::with_capacity(fleet.chips.len());
+    for chip in &fleet.chips {
+        let sim = Simulator::new(chip.target.clone());
+        let plan = cache.plan_mix(&sim, mix, slo_ms, max_batch)?;
+        let services = plan.services(load_aware);
+        chips.push(ChipPlan { chip: chip.clone(), plan, services });
+    }
+
+    // Level 2: heaviest models place first; each lands on the chip whose
+    // per-core load after taking it is smallest (strict `<`, so ties keep
+    // the lowest chip index — deterministic).
+    let mut order: Vec<usize> = (0..mix.models.len()).collect();
+    order.sort_by(|&a, &b| {
+        mix.share(b).total_cmp(&mix.share(a)).then(a.cmp(&b))
+    });
+    let mut load = vec![0.0f64; chips.len()];
+    let mut shard_of = vec![0usize; mix.models.len()];
+    for m in order {
+        let mut best = 0usize;
+        let mut best_load = f64::INFINITY;
+        for (c, cp) in chips.iter().enumerate() {
+            let alloc = &cp.plan.models[m];
+            let per_req = if load_aware {
+                alloc.load_aware.core_ms_at(alloc.load_aware_batch)
+            } else {
+                alloc.single.core_ms()
+            };
+            let taken =
+                load[c] + mix.share(m) * per_req / cp.chip.num_cores as f64;
+            if taken < best_load {
+                best_load = taken;
+                best = c;
+            }
+        }
+        shard_of[m] = best;
+        load[best] = best_load;
+    }
+
+    let after = cache.stats();
+    let cache_stats = PlanCacheStats {
+        hits: after.hits - before.hits,
+        misses: after.misses - before.misses,
+        evals_spent: after.evals_spent - before.evals_spent,
+        evals_saved: after.evals_saved - before.evals_saved,
+    };
+    Ok(FleetPlan { slo_ms, chips, shard_of, cache_stats })
+}
+
+/// One request rejected by admission control: part of the deterministic
+/// trace surface (shed events are pinned alongside the event log).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShedEvent {
+    pub time_ms: f64,
+    pub id: u64,
+    pub model: usize,
+    /// The chip the router picked before admission control rejected.
+    pub chip: usize,
+}
+
+/// A fleet run's output: every chip's single-pool result plus the shed
+/// log.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub per_chip: Vec<SimResult>,
+    pub shed: Vec<ShedEvent>,
+    /// Cores across the fleet (the merged view's pool width).
+    pub total_cores: usize,
+}
+
+impl FleetResult {
+    /// Requests completed across every chip.
+    pub fn completed(&self) -> u64 {
+        self.per_chip.iter().map(|r| r.completed.len() as u64).sum()
+    }
+
+    /// Requests the trace offered: completed plus shed (every validated
+    /// request is exactly one of the two).
+    pub fn offered(&self) -> u64 {
+        self.completed() + self.shed.len() as u64
+    }
+
+    /// Fraction of offered requests shed.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            return 0.0;
+        }
+        self.shed.len() as f64 / offered as f64
+    }
+
+    /// Fold the per-chip results into one fleet-wide [`SimResult`]: events
+    /// stably ordered by time (same-instant events keep chip order),
+    /// completions by `(finish_ms, id)`, pool width = fleet cores. A
+    /// one-chip fleet's merged view *is* the chip's own result — the
+    /// single-pool parity pin.
+    pub fn merged(&self) -> SimResult {
+        if self.per_chip.len() == 1 {
+            return self.per_chip[0].clone();
+        }
+        let mut events = Vec::new();
+        let mut completed = Vec::new();
+        let mut events_processed = 0;
+        for r in &self.per_chip {
+            events.extend(r.events.iter().copied());
+            completed.extend(r.completed.iter().copied());
+            events_processed += r.events_processed;
+        }
+        events.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
+        completed.sort_by(|a, b| {
+            a.finish_ms.total_cmp(&b.finish_ms).then(a.id.cmp(&b.id))
+        });
+        SimResult { events, completed, num_cores: self.total_cores,
+                    events_processed }
+    }
+}
+
+/// Builder for one fleet simulation — the fleet counterpart of
+/// [`super::cluster::SimulationRun`].
+///
+/// Defaults: FIFO dispatch on every chip, events recorded. Fleet runs are
+/// open-loop only (a closed loop has no meaningful fleet-wide
+/// concurrency gate).
+///
+/// The run interleaves routing with simulation: for each trace request,
+/// every chip advances to the arrival instant (so loads are exact, not
+/// stale), the router picks a chip from those loads, and admission
+/// control either injects the request or sheds it. See the module docs
+/// for the determinism contract.
+#[derive(Debug, Clone)]
+pub struct FleetRun<'a> {
+    plan: &'a FleetPlan,
+    router: RouterConfig,
+    policy: DispatchPolicy,
+    trace: &'a [Request],
+    record_events: bool,
+}
+
+impl<'a> FleetRun<'a> {
+    pub fn new(plan: &'a FleetPlan, router: RouterConfig) -> FleetRun<'a> {
+        FleetRun {
+            plan,
+            router,
+            policy: DispatchPolicy::Fifo,
+            trace: &[],
+            record_events: true,
+        }
+    }
+
+    /// Per-chip dispatch policy (every chip runs the same one).
+    pub fn policy(mut self, policy: DispatchPolicy) -> FleetRun<'a> {
+        self.policy = policy;
+        self
+    }
+
+    /// The arrival trace, sorted by arrival time.
+    pub fn trace(mut self, trace: &'a [Request]) -> FleetRun<'a> {
+        self.trace = trace;
+        self
+    }
+
+    /// Whether each chip keeps its full event log (default true).
+    pub fn record_events(mut self, record_events: bool) -> FleetRun<'a> {
+        self.record_events = record_events;
+        self
+    }
+
+    /// Validate and run the fleet simulation.
+    pub fn run(self) -> Result<FleetResult, String> {
+        if self.plan.chips.is_empty() {
+            return Err("fleet has no chips".into());
+        }
+        let n_models = self.plan.chips[0].services.len();
+        let mut last = f64::NEG_INFINITY;
+        for r in self.trace {
+            if r.arrival_ms < last {
+                return Err("trace must be sorted by arrival time".into());
+            }
+            last = r.arrival_ms;
+            if r.model >= n_models {
+                return Err(format!(
+                    "request {} references model {} but only {} are planned",
+                    r.id, r.model, n_models));
+            }
+        }
+        let mut sims = Vec::with_capacity(self.plan.chips.len());
+        for cp in &self.plan.chips {
+            let cfg = ClusterConfig {
+                num_cores: cp.chip.num_cores,
+                policy: self.policy,
+            };
+            let sim = ChipSim::new(&cfg, &cp.services, self.record_events)
+                .map_err(|e| format!("chip {}: {e}", cp.chip.name))?;
+            sims.push(sim);
+        }
+        let mut router = Router::new(self.router, self.plan.shard_of.clone());
+        let mut shed = Vec::new();
+        for r in self.trace {
+            // Advance every chip to the arrival instant first: completions
+            // up to (and at) `arrival_ms` land before the router reads
+            // loads, so the decision sees the exact simulated state.
+            for sim in sims.iter_mut() {
+                sim.advance(Some(r.arrival_ms));
+            }
+            let loads: Vec<ChipLoad> = sims
+                .iter()
+                .map(|s| ChipLoad {
+                    waiting: s.waiting(),
+                    backlog_ms: s.backlog_ms(r.arrival_ms),
+                })
+                .collect();
+            let c = router.route(r.model, &loads);
+            if router.sheds(loads[c].waiting) {
+                shed.push(ShedEvent {
+                    time_ms: r.arrival_ms,
+                    id: r.id,
+                    model: r.model,
+                    chip: c,
+                });
+            } else {
+                sims[c].arrive(*r);
+            }
+        }
+        let total_cores = self.plan.total_cores();
+        let mut per_chip = Vec::with_capacity(sims.len());
+        for mut sim in sims {
+            sim.advance(None);
+            per_chip.push(sim.into_result());
+        }
+        Ok(FleetResult { per_chip, shed, total_cores })
+    }
+}
+
+/// One chip's headline numbers in the fleet report.
+#[derive(Debug, Clone)]
+pub struct ChipSummary {
+    pub name: String,
+    pub requests: u64,
+    pub throughput_rps: f64,
+    pub utilization: f64,
+}
+
+/// The fleet report: the merged-run [`SloReport`] (with shed accounting)
+/// plus a per-chip breakdown.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub slo: SloReport,
+    pub chips: Vec<ChipSummary>,
+}
+
+impl FleetReport {
+    pub fn from_run(result: &FleetResult, plan: &FleetPlan,
+                    slo_ms: Option<f64>) -> FleetReport {
+        let slo = SloReport::from_sim(&result.merged(), slo_ms)
+            .with_shed(result.shed.len() as u64);
+        let chips = result
+            .per_chip
+            .iter()
+            .zip(&plan.chips)
+            .map(|(r, cp)| ChipSummary {
+                name: cp.chip.name.clone(),
+                requests: r.completed.len() as u64,
+                throughput_rps: r.throughput_rps(),
+                utilization: r.utilization(),
+            })
+            .collect();
+        FleetReport { slo, chips }
+    }
+
+    /// The SLO table followed by the per-chip breakdown.
+    pub fn render(&self) -> String {
+        let mut out = self.slo.render();
+        let mut t = Table::new(&["chip", "requests", "throughput", "util"])
+            .label_first()
+            .with_title("per-chip breakdown");
+        for c in &self.chips {
+            t.row(vec![
+                c.name.clone(),
+                c.requests.to_string(),
+                format!("{:.1} req/s", c.throughput_rps),
+                format!("{:.1}%", 100.0 * c.utilization),
+            ]);
+        }
+        out.push_str(&format!("{t}\n"));
+        out
+    }
+
+    /// The merged [`SloReport`] export plus per-chip gauges
+    /// (`serving.chip.<name>.*`).
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        self.slo.export_metrics(reg);
+        for c in &self.chips {
+            reg.set_gauge(Domain::Sim,
+                          &format!("serving.chip.{}.requests", c.name),
+                          c.requests as f64);
+            reg.set_gauge(Domain::Sim,
+                          &format!("serving.chip.{}.throughput_rps", c.name),
+                          c.throughput_rps);
+            reg.set_gauge(Domain::Sim,
+                          &format!("serving.chip.{}.utilization", c.name),
+                          c.utilization);
+        }
+    }
+}
+
+/// Lanes reserved per chip in the fleet trace: chip `c`'s model `m` spans
+/// render on track `c * LANES_PER_CHIP + m`.
+const LANES_PER_CHIP: u64 = 64;
+
+/// Build the fleet's sim-time trace: per chip, the same queue/serve spans
+/// and queue-depth/utilization counter tracks as the single-pool
+/// [`super::report::sim_trace`], on chip-prefixed names and per-chip
+/// lanes; shed requests render as instant marks plus a cumulative
+/// counter. Pure sim clock throughout, so the export is bit-identical run
+/// to run.
+pub fn fleet_trace(result: &FleetResult, plan: &FleetPlan,
+                   name: &str) -> TraceSession {
+    let mut tr = TraceSession::new(name);
+    for (c, (r, cp)) in result.per_chip.iter().zip(&plan.chips).enumerate() {
+        let chip = cp.chip.name.as_str();
+        for done in &r.completed {
+            let model = cp
+                .services
+                .get(done.model)
+                .map_or("model", |s| s.name.as_str());
+            let track = c as u64 * LANES_PER_CHIP + done.model as u64;
+            if done.queue_ms() > 0.0 {
+                tr.sim_span(&format!("{chip}/{model} queue"), "queue", track,
+                            done.arrival_ms, done.start_ms,
+                            vec![("id".to_string(), Json::Num(done.id as f64))]);
+            }
+            tr.sim_span(&format!("{chip}/{model} serve"), "service", track,
+                        done.start_ms, done.finish_ms,
+                        vec![
+                            ("id".to_string(), Json::Num(done.id as f64)),
+                            ("cores".to_string(), Json::Num(done.cores as f64)),
+                            ("batch".to_string(), Json::Num(done.batch as f64)),
+                        ]);
+        }
+        let series = ServingSeries::from_sim(r);
+        for (t, d) in series.queue_time_ms.iter().zip(&series.queue_depth) {
+            tr.sim_counter(&format!("{chip} queue depth"), *t, *d as f64);
+        }
+        for (b, u) in series.utilization.iter().enumerate() {
+            tr.sim_counter(&format!("{chip} core utilization"),
+                           b as f64 * series.util_bucket_ms, *u);
+        }
+    }
+    for (i, s) in result.shed.iter().enumerate() {
+        tr.sim_instant(&format!("shed #{}", s.id), "shed",
+                       s.chip as u64 * LANES_PER_CHIP, s.time_ms);
+        tr.sim_counter("shed requests", s.time_ms, (i + 1) as f64);
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::cluster::CompletedRequest;
+
+    #[test]
+    fn parse_names_chips_per_target() {
+        let fleet = Fleet::parse("mlu100x2,edge4x4").unwrap();
+        assert_eq!(fleet.len(), 6);
+        let names: Vec<&str> =
+            fleet.chips.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["mlu100-0", "mlu100-1", "edge4-0", "edge4-1",
+                               "edge4-2", "edge4-3"]);
+        assert_eq!(fleet.kinds(), vec!["mlu100", "edge4"]);
+        assert_eq!(fleet.total_cores(), 2 * 32 + 4 * 4);
+        // A bare target is one chip; repeated groups keep counting.
+        let again = Fleet::parse("edge4,edge4x2").unwrap();
+        let names: Vec<&str> =
+            again.chips.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["edge4-0", "edge4-1", "edge4-2"]);
+        assert_eq!(again.kinds(), vec!["edge4"]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        let err = Fleet::parse("mlu100x2,").unwrap_err();
+        assert!(err.contains("empty chip group"), "{err}");
+        let err = Fleet::parse("mlu100x0").unwrap_err();
+        assert!(err.contains("zero chips"), "{err}");
+        let err = Fleet::parse("tpu9000x2").unwrap_err();
+        assert!(err.contains("unknown target"), "{err}");
+        assert!(err.contains("fleet spec"), "{err}");
+    }
+
+    fn done(id: u64, finish_ms: f64) -> CompletedRequest {
+        CompletedRequest { id, model: 0, arrival_ms: 0.0, start_ms: 0.0,
+                           finish_ms, cores: 1, batch: 1 }
+    }
+
+    fn chip_result(completed: Vec<CompletedRequest>, num_cores: usize)
+                   -> SimResult {
+        SimResult { events: Vec::new(), completed, num_cores,
+                    events_processed: 0 }
+    }
+
+    #[test]
+    fn merged_single_chip_is_the_chip_result() {
+        let r = chip_result(vec![done(1, 8.0), done(0, 8.0)], 4);
+        let fr = FleetResult { per_chip: vec![r.clone()], shed: Vec::new(),
+                               total_cores: 4 };
+        // Identity — even for same-instant completions the single-pool
+        // order is preserved verbatim.
+        assert_eq!(fr.merged(), r);
+    }
+
+    #[test]
+    fn merged_interleaves_chips_deterministically() {
+        let a = chip_result(vec![done(0, 5.0), done(2, 9.0)], 4);
+        let b = chip_result(vec![done(1, 5.0), done(3, 7.0)], 2);
+        let fr = FleetResult {
+            per_chip: vec![a, b],
+            shed: vec![ShedEvent { time_ms: 1.0, id: 9, model: 0, chip: 1 }],
+            total_cores: 6,
+        };
+        assert_eq!(fr.completed(), 4);
+        assert_eq!(fr.offered(), 5);
+        assert!((fr.shed_rate() - 0.2).abs() < 1e-12);
+        let merged = fr.merged();
+        assert_eq!(merged.num_cores, 6);
+        let ids: Vec<u64> = merged.completed.iter().map(|c| c.id).collect();
+        // finish order, same-instant ties by id.
+        assert_eq!(ids, vec![0, 1, 3, 2]);
+    }
+}

@@ -1,5 +1,6 @@
 //! Multi-tenant serving: a deterministic discrete-event simulator over the
-//! MLU core pool plus a load-aware core allocator (rust/docs/DESIGN.md §9).
+//! MLU core pool, a load-aware core allocator, and a multi-chip fleet
+//! layer (rust/docs/DESIGN.md §9, §15).
 //!
 //! The paper's tuner optimizes *one* inference; the ROADMAP's north star is
 //! serving heavy traffic. This module closes that gap:
@@ -13,34 +14,47 @@
 //!   (FIFO, shortest-job-first, and dynamic batching — up to `max_batch`
 //!   same-model requests ride one invocation priced by the engine's
 //!   batch-aware model, held at most `max_wait_ms`; rust/docs/DESIGN.md
-//!   §10) with per-model queues;
-//! - [`allocator`]: sweeps `(mp_cap, batch)` operating points per model
-//!   through the constrained oracle DP (one shared cost-engine cache per
-//!   model) and picks the throughput-optimal point under the offered load,
-//!   reporting when it diverges from the single-request optimum;
+//!   §10) with per-model queues — driven through the [`SimulationRun`]
+//!   builder;
+//! - [`allocator`]: the [`AllocationRequest`] builder sweeps `(mp_cap,
+//!   batch)` operating points per model through the constrained oracle DP
+//!   (one shared cost-engine cache per model) and picks the
+//!   throughput-optimal point under the offered load, reporting when it
+//!   diverges from the single-request optimum;
 //! - [`report`]: the SLO report — p50/p95/p99 end-to-end latency split
 //!   into queueing vs service time, core utilization, and goodput under a
 //!   deadline — built on the coordinator's [`crate::coordinator::metrics`]
-//!   primitives.
+//!   primitives;
+//! - [`fleet`] + [`router`] + [`plan_cache`]: many chips behind one front
+//!   door — heterogeneous [`Fleet`]s planned per chip kind through the
+//!   fleet-wide tuned-[`PlanCache`], a deterministic routing layer
+//!   (round-robin, least-loaded, model-sharded) with admission control,
+//!   and the merged [`FleetReport`]/trace.
 //!
-//! Everything is a pure function of `(mix, process, seed, allocation)`:
-//! same seed ⇒ identical event trace and report. The CLI front-end is
-//! `dlfusion serve-sim`.
+//! Everything is a pure function of `(mix, process, seed, allocation,
+//! fleet, routing)`: same seed ⇒ identical event trace and report. The
+//! CLI front-ends are `dlfusion serve-sim` and `dlfusion serve-fleet`.
 //!
 //! ```no_run
 //! use dlfusion::accel::{Simulator, Target};
-//! use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
-//!                         ModelMix, SloReport};
+//! use dlfusion::serving::{self, AllocationRequest, ArrivalProcess,
+//!                         ClusterConfig, DispatchPolicy, ModelMix,
+//!                         SimulationRun, SloReport};
 //! use dlfusion::zoo;
 //!
 //! let sim = Simulator::new(Target::mlu100());
 //! let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
-//! let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("plan");
+//! let plan = AllocationRequest::new(&sim, &mix)
+//!     .slo_ms(Some(50.0))
+//!     .plan()
+//!     .expect("plan");
 //! let trace = serving::generate_trace(
 //!     &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 1000, 7);
 //! let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
 //!                           policy: DispatchPolicy::Fifo };
-//! let result = serving::simulate(&cfg, &plan.services(true), &trace, None)
+//! let result = SimulationRun::new(&cfg, &plan.services(true))
+//!     .trace(&trace)
+//!     .run()
 //!     .expect("simulate");
 //! println!("{}", SloReport::from_sim(&result, Some(50.0)).render());
 //! ```
@@ -50,12 +64,25 @@ pub mod queue;
 pub mod cluster;
 pub mod allocator;
 pub mod report;
+pub mod plan_cache;
+pub mod router;
+pub mod fleet;
 
-pub use allocator::{plan_allocations, plan_allocations_batched, AllocationPlan,
-                    ModelAllocation, OperatingPoint};
-pub use cluster::{simulate, simulate_with, ClusterConfig, CompletedRequest,
-                  ModelService, SimEvent, SimEventKind, SimResult};
+pub use allocator::{AllocationPlan, AllocationRequest, ModelAllocation,
+                    OperatingPoint};
+pub use cluster::{ClusterConfig, CompletedRequest, ModelService, SimEvent,
+                  SimEventKind, SimResult, SimulationRun};
+pub use fleet::{fleet_trace, plan_fleet, Chip, ChipPlan, ChipSummary, Fleet,
+                FleetPlan, FleetReport, FleetResult, FleetRun, ShedEvent};
+pub use plan_cache::{PlanCache, PlanCacheStats};
 pub use queue::{DispatchPolicy, QueueSet, QueuedRequest, DEFAULT_BATCH_WAIT_MS,
                 DEFAULT_MAX_BATCH};
 pub use report::{sim_trace, ServingSeries, SloReport};
+pub use router::{ChipLoad, RoutePolicy, Router, RouterConfig};
 pub use workload::{generate_trace, ArrivalProcess, ModelMix, Request};
+
+// The legacy free functions stay exported (and covered) until removal.
+#[allow(deprecated)]
+pub use allocator::{plan_allocations, plan_allocations_batched};
+#[allow(deprecated)]
+pub use cluster::{simulate, simulate_with};

@@ -1,0 +1,196 @@
+//! The fleet-wide tuned-plan cache (rust/docs/DESIGN.md §15.3).
+//!
+//! Tuning a model's operating points — the constrained-oracle `(MP, batch)`
+//! sweep behind [`AllocationRequest`] — is the expensive step of serving
+//! bring-up. A fleet would naively repeat it once per chip, but the outcome
+//! depends only on the model, the chip's hardware target, and the batch
+//! candidates (plus the SLO that filters the load-aware choice): chips of
+//! the same kind are redundant work. [`PlanCache`] memoizes per-model
+//! allocations under the key `(model, target, max_batch)` so each key is
+//! tuned exactly once fleet-wide, and accounts the cost-engine evaluations
+//! that every hit avoided.
+//!
+//! Caching per *model* rather than per *mix* is what makes reuse broad:
+//! [`AllocationRequest`] plans each model independently (its own tuning
+//! context and engine), so a model's cached allocation is bit-identical
+//! whether it was first planned alone or inside any mix — only its traffic
+//! `share` is mix-dependent, and [`PlanCache::plan_mix`] re-captures that
+//! from the current mix on every request.
+
+use std::collections::BTreeMap;
+
+use crate::accel::Simulator;
+use crate::tuner::TuningError;
+
+use super::allocator::{AllocationPlan, AllocationRequest, ModelAllocation};
+use super::workload::ModelMix;
+
+/// Cumulative cache accounting: how much fleet bring-up the cache avoided.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Keys served from the cache (sweeps avoided).
+    pub hits: u64,
+    /// Keys tuned (sweeps actually run).
+    pub misses: u64,
+    /// Cost-engine evaluations the misses spent.
+    pub evals_spent: u64,
+    /// Evaluations the hits would have re-spent — the fleet-wide saving.
+    pub evals_saved: u64,
+}
+
+#[derive(Debug, Clone)]
+struct CacheEntry {
+    /// The SLO the cached sweep ran under (bit pattern: the load-aware
+    /// choice is SLO-dependent, so an entry only serves plans requested
+    /// with the same SLO; a mismatch re-tunes and replaces the entry).
+    slo_bits: Option<u64>,
+    alloc: ModelAllocation,
+}
+
+/// Keyed `(model, target, max_batch)` store of tuned per-model allocations.
+///
+/// Deterministic: a `BTreeMap` keyed by owned strings, no hashing, no
+/// wall-clock eviction — a cache lookup can never change what a plan
+/// contains, only whether its sweep re-runs.
+#[derive(Debug, Clone, Default)]
+pub struct PlanCache {
+    entries: BTreeMap<(String, String, usize), CacheEntry>,
+    stats: PlanCacheStats,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Cumulative hit/miss/evaluation accounting across every
+    /// [`Self::plan_mix`] call so far.
+    pub fn stats(&self) -> PlanCacheStats {
+        self.stats
+    }
+
+    /// Distinct `(model, target, max_batch)` keys tuned so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Plan `mix` on `sim`'s target through the cache. Each model resolves
+    /// by `(model name, target, max_batch)`: a miss runs one single-model
+    /// [`AllocationRequest`] sweep (bit-identical to planning the model
+    /// inside the full mix) and stores the allocation; a hit clones it.
+    /// Either way the returned allocation's `share` is re-captured from
+    /// the *current* mix, so cached entries compose into any plan.
+    pub fn plan_mix(&mut self, sim: &Simulator, mix: &ModelMix,
+                    slo_ms: Option<f64>, max_batch: usize)
+                    -> Result<AllocationPlan, TuningError> {
+        let target = sim.target().to_string();
+        let slo_bits = slo_ms.map(f64::to_bits);
+        let mut models = Vec::with_capacity(mix.models.len());
+        for (mi, model) in mix.models.iter().enumerate() {
+            let key = (model.name.clone(), target.clone(), max_batch);
+            let cached = self
+                .entries
+                .get(&key)
+                .filter(|e| e.slo_bits == slo_bits)
+                .map(|e| e.alloc.clone());
+            let mut alloc = match cached {
+                Some(alloc) => {
+                    self.stats.hits += 1;
+                    self.stats.evals_saved += alloc.tuning_evaluations;
+                    alloc
+                }
+                None => {
+                    let single = mix.single(mi);
+                    let plan = AllocationRequest::new(sim, &single)
+                        .slo_ms(slo_ms)
+                        .max_batch(max_batch)
+                        .plan()?;
+                    let alloc = plan
+                        .models
+                        .into_iter()
+                        .next()
+                        .expect("a one-model mix plans one model");
+                    self.stats.misses += 1;
+                    self.stats.evals_spent += alloc.tuning_evaluations;
+                    self.entries
+                        .insert(key, CacheEntry { slo_bits, alloc: alloc.clone() });
+                    alloc
+                }
+            };
+            alloc.share = mix.share(mi);
+            models.push(alloc);
+        }
+        Ok(AllocationPlan { models, slo_ms, target })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Target;
+    use crate::zoo;
+
+    #[test]
+    fn cache_reuses_keys_and_matches_direct_planning() {
+        let sim = Simulator::new(Target::mlu100());
+        let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+        let direct = AllocationRequest::new(&sim, &mix).max_batch(4).plan().unwrap();
+
+        let mut cache = PlanCache::new();
+        assert!(cache.is_empty());
+        let first = cache.plan_mix(&sim, &mix, None, 4).unwrap();
+        assert_eq!(first, direct, "cached planning is bit-identical");
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.stats().hits, 0);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.stats().evals_spent > 0);
+
+        // Second plan of the same mix: all hits, same plan, evals saved.
+        let second = cache.plan_mix(&sim, &mix, None, 4).unwrap();
+        assert_eq!(second, direct);
+        assert_eq!(cache.stats().hits, 2);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.stats().evals_saved, cache.stats().evals_spent);
+    }
+
+    #[test]
+    fn shares_are_recaptured_from_the_requesting_mix() {
+        let sim = Simulator::new(Target::mlu100());
+        let models = vec![zoo::alexnet(), zoo::mini_cnn()];
+        let uniform = ModelMix::uniform(models.clone());
+        let skewed = ModelMix::weighted(models, vec![3.0, 1.0]);
+        let mut cache = PlanCache::new();
+        let a = cache.plan_mix(&sim, &uniform, None, 1).unwrap();
+        let b = cache.plan_mix(&sim, &skewed, None, 1).unwrap();
+        assert_eq!(cache.stats().hits, 2, "same keys despite different mix");
+        assert_eq!(a.models[0].share, 0.5);
+        assert_eq!(b.models[0].share, 0.75);
+        // Everything but the share is the cached allocation.
+        assert_eq!(a.models[0].points, b.models[0].points);
+        assert_eq!(a.models[0].single, b.models[0].single);
+    }
+
+    #[test]
+    fn distinct_targets_batches_and_slos_are_distinct_work() {
+        let sim = Simulator::new(Target::mlu100());
+        let edge = Simulator::new(Target::edge4());
+        let mix = ModelMix::uniform(vec![zoo::mini_cnn()]);
+        let mut cache = PlanCache::new();
+        cache.plan_mix(&sim, &mix, None, 1).unwrap();
+        cache.plan_mix(&edge, &mix, None, 1).unwrap();
+        cache.plan_mix(&sim, &mix, None, 2).unwrap();
+        assert_eq!(cache.stats().misses, 3, "target and batch key the cache");
+        assert_eq!(cache.len(), 3);
+        // A different SLO re-tunes (the load-aware choice depends on it)…
+        cache.plan_mix(&sim, &mix, Some(50.0), 1).unwrap();
+        assert_eq!(cache.stats().misses, 4);
+        // …but does not grow the key space: it replaces the entry.
+        assert_eq!(cache.len(), 3);
+        cache.plan_mix(&sim, &mix, Some(50.0), 1).unwrap();
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

@@ -204,6 +204,13 @@ impl QueueSet {
         self.queues[model].front()
     }
 
+    /// Every queued request, grouped by model (arrival order within each
+    /// model) — the fleet router's backlog estimator reads queued service
+    /// demand through this without disturbing the head indexes.
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> {
+        self.queues.iter().flat_map(|q| q.iter())
+    }
+
     /// Pop up to `n` requests from one model's queue, in arrival order —
     /// the batch former of the `batch` dispatch policy.
     pub fn pop_front_n(&mut self, model: usize, n: usize) -> Vec<QueuedRequest> {

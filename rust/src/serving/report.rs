@@ -160,6 +160,12 @@ pub struct SloReport {
     /// `throughput_rps` when no SLO is set).
     pub goodput_rps: f64,
     pub makespan_ms: f64,
+    /// Requests rejected by fleet admission control before queueing
+    /// (rust/docs/DESIGN.md §15.2) — 0 for single-pool runs, attached via
+    /// [`Self::with_shed`] by the fleet path. A zero-shed report renders
+    /// and exports byte-identically to the pre-fleet shape, which is what
+    /// pins the one-chip fleet to `serve-sim`.
+    pub shed: u64,
     /// Queue-depth / utilization time series replayed from the run.
     pub series: ServingSeries,
 }
@@ -210,8 +216,32 @@ impl SloReport {
             throughput_rps,
             goodput_rps,
             makespan_ms,
+            shed: 0,
             series: ServingSeries::from_sim(result),
         }
+    }
+
+    /// Attach fleet admission-control accounting: `shed` requests were
+    /// rejected before queueing, so they appear in no completion record.
+    /// With `shed > 0` the report gains a `shed` counter and a shed-rate
+    /// row/gauge; with `shed = 0` it stays byte-identical to
+    /// [`Self::from_sim`]'s output.
+    pub fn with_shed(mut self, shed: u64) -> SloReport {
+        self.shed = shed;
+        if shed > 0 {
+            self.counters.add("shed", shed);
+        }
+        self
+    }
+
+    /// Fraction of offered requests (completed + shed) rejected by
+    /// admission control.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.counters.get("requests") + self.shed;
+        if offered == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / offered as f64
     }
 
     /// Export the report into the unified registry (rust/docs/DESIGN.md
@@ -223,6 +253,9 @@ impl SloReport {
         reg.set_gauge(Domain::Sim, "serving.utilization", self.utilization);
         reg.set_gauge(Domain::Sim, "serving.makespan_ms", self.makespan_ms);
         reg.set_gauge(Domain::Sim, "serving.slo_attainment", self.slo_attainment());
+        if self.shed > 0 {
+            reg.set_gauge(Domain::Sim, "serving.shed_rate", self.shed_rate());
+        }
         self.counters.export_metrics(reg, Domain::Sim, "serving.");
         self.e2e.export_metrics(reg, Domain::Sim, "serving.e2e.");
         self.queueing.export_metrics(reg, Domain::Sim, "serving.queueing.");
@@ -256,6 +289,11 @@ impl SloReport {
             .with_title("serving SLO report");
         let n = self.e2e.count();
         t.row(vec!["requests completed".into(), n.to_string()]);
+        if self.shed > 0 {
+            t.row(vec!["requests shed".into(),
+                       format!("{} ({:.1}%)", self.shed,
+                               100.0 * self.shed_rate())]);
+        }
         t.row(vec!["makespan".into(), format!("{:.2} ms", self.makespan_ms)]);
         t.row(vec!["throughput".into(),
                    format!("{:.1} req/s", self.throughput_rps)]);
@@ -451,6 +489,33 @@ mod tests {
                        "e2e p50/p95/p99", "core utilization"] {
             assert!(text.contains(needle), "missing {needle}: {text}");
         }
+    }
+
+    #[test]
+    fn shed_accounting_is_opt_in_and_zero_is_invisible() {
+        let base = SloReport::from_sim(&result(), Some(15.0));
+        // Zero shed leaves the report byte-identical — the one-chip fleet
+        // parity pin depends on this.
+        let zero = SloReport::from_sim(&result(), Some(15.0)).with_shed(0);
+        assert_eq!(zero.render(), base.render());
+        assert_eq!(zero.shed_rate(), 0.0);
+        let mut reg_a = MetricsRegistry::new();
+        let mut reg_b = MetricsRegistry::new();
+        base.export_metrics(&mut reg_a);
+        zero.export_metrics(&mut reg_b);
+        assert_eq!(reg_a.snapshot().to_string(), reg_b.snapshot().to_string());
+
+        let shed = SloReport::from_sim(&result(), Some(15.0)).with_shed(1);
+        // 3 completed + 1 shed offered.
+        assert!((shed.shed_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(shed.counters.get("shed"), 1);
+        let text = shed.render();
+        assert!(text.contains("requests shed"), "{text}");
+        assert!(text.contains("(25.0%)"), "{text}");
+        let mut reg = MetricsRegistry::new();
+        shed.export_metrics(&mut reg);
+        assert_eq!(reg.gauge("serving.shed_rate"), Some(0.25));
+        assert_eq!(reg.counter("serving.shed"), Some(1));
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! The fleet routing layer (rust/docs/DESIGN.md §15.2).
+//!
+//! One router sits in front of the per-chip event loops: each arriving
+//! request is assigned a chip by policy, then passed through admission
+//! control (an optional per-chip queue cap) which either injects it into
+//! the chip's simulation or sheds it. Every decision is a pure function of
+//! the chips' exact simulated state at the arrival instant — no randomness,
+//! no wall clock — so the whole fleet run stays deterministic.
+//!
+//! Over a one-chip fleet every policy degenerates to pass-through (there is
+//! only one chip to pick), which is what pins the one-chip fleet
+//! bit-identical to the single-pool `serve-sim` path.
+
+/// How the fleet routes each arriving request to a chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle chips in fleet order, one request each — load-blind.
+    RoundRobin,
+    /// Join shortest expected delay: the chip with the smallest
+    /// backlog-drain estimate at the arrival instant (ties to the lowest
+    /// chip index).
+    LeastLoaded,
+    /// Every model is pinned to one chip — the [`super::fleet::plan_fleet`]
+    /// placement — and all of the model's traffic lands there (perfect
+    /// per-chip cache/weight locality, no balancing).
+    ModelSharded,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI policy name.
+    pub fn parse(name: &str) -> Result<RoutePolicy, String> {
+        match name {
+            "round-robin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            "least-loaded" | "ll" => Ok(RoutePolicy::LeastLoaded),
+            "model-sharded" | "sharded" => Ok(RoutePolicy::ModelSharded),
+            other => Err(format!(
+                "unknown routing policy '{other}' (known: round-robin, \
+                 least-loaded, model-sharded)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::ModelSharded => "model-sharded",
+        }
+    }
+}
+
+/// The routing layer's configuration: a policy plus optional admission
+/// control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterConfig {
+    pub policy: RoutePolicy,
+    /// Admission control: a routed request finding this many (or more)
+    /// requests already waiting on its chip is shed — rejected outright,
+    /// never queued. `None` admits everything.
+    pub queue_cap: Option<usize>,
+}
+
+impl RouterConfig {
+    /// A router with the given policy and no admission control.
+    pub fn new(policy: RoutePolicy) -> RouterConfig {
+        RouterConfig { policy, queue_cap: None }
+    }
+
+    /// Set the per-chip waiting cap (load shedding under overload).
+    pub fn queue_cap(mut self, cap: Option<usize>) -> RouterConfig {
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// One chip's load as the router sees it at an arrival instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChipLoad {
+    /// Requests queued (arrived, not yet dispatched).
+    pub waiting: usize,
+    /// Estimated time to drain running + queued work, ms (normalized by
+    /// the chip's pool width).
+    pub backlog_ms: f64,
+}
+
+/// The per-run router state: policy, placement, and the round-robin
+/// cursor. Deterministic by construction — see the module docs.
+#[derive(Debug, Clone)]
+pub struct Router {
+    cfg: RouterConfig,
+    /// Model index → chip index (the `plan_fleet` placement), read by
+    /// [`RoutePolicy::ModelSharded`].
+    shard_of: Vec<usize>,
+    next_rr: usize,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig, shard_of: Vec<usize>) -> Router {
+        Router { cfg, shard_of, next_rr: 0 }
+    }
+
+    /// Pick the chip for a `model` request given every chip's current
+    /// load. Round-robin advances its cursor whether or not the request is
+    /// later shed — the cycle position is part of the deterministic
+    /// contract, not a function of admission outcomes.
+    pub fn route(&mut self, model: usize, loads: &[ChipLoad]) -> usize {
+        debug_assert!(!loads.is_empty());
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => {
+                let c = self.next_rr % loads.len();
+                self.next_rr += 1;
+                c
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                for (c, load) in loads.iter().enumerate().skip(1) {
+                    if load.backlog_ms < loads[best].backlog_ms {
+                        best = c;
+                    }
+                }
+                best
+            }
+            RoutePolicy::ModelSharded => self.shard_of[model],
+        }
+    }
+
+    /// Admission control: is a request shed when `waiting` requests are
+    /// already queued on its routed chip?
+    pub fn sheds(&self, waiting: usize) -> bool {
+        match self.cfg.queue_cap {
+            Some(cap) => waiting >= cap,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(waiting: usize, backlog_ms: f64) -> ChipLoad {
+        ChipLoad { waiting, backlog_ms }
+    }
+
+    #[test]
+    fn parse_accepts_names_and_aliases() {
+        assert_eq!(RoutePolicy::parse("round-robin"), Ok(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("rr"), Ok(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("least-loaded"), Ok(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("sharded"), Ok(RoutePolicy::ModelSharded));
+        let err = RoutePolicy::parse("nope").unwrap_err();
+        assert!(err.contains("unknown routing policy"), "{err}");
+        assert!(err.contains("least-loaded"), "{err}");
+        assert_eq!(RoutePolicy::parse(RoutePolicy::LeastLoaded.name()),
+                   Ok(RoutePolicy::LeastLoaded));
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_load() {
+        let mut r = Router::new(RouterConfig::new(RoutePolicy::RoundRobin),
+                                vec![0]);
+        let loads = [load(9, 100.0), load(0, 0.0), load(0, 0.0)];
+        let picks: Vec<usize> = (0..5).map(|_| r.route(0, &loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn least_loaded_picks_smallest_backlog_with_index_ties() {
+        let mut r = Router::new(RouterConfig::new(RoutePolicy::LeastLoaded),
+                                vec![0]);
+        assert_eq!(r.route(0, &[load(0, 5.0), load(0, 2.0), load(0, 4.0)]), 1);
+        // Exact tie: lowest chip index wins.
+        assert_eq!(r.route(0, &[load(0, 3.0), load(0, 3.0)]), 0);
+    }
+
+    #[test]
+    fn model_sharded_reads_the_placement() {
+        let mut r = Router::new(RouterConfig::new(RoutePolicy::ModelSharded),
+                                vec![2, 0]);
+        let loads = [load(0, 0.0), load(0, 0.0), load(9, 99.0)];
+        assert_eq!(r.route(0, &loads), 2, "placement beats load");
+        assert_eq!(r.route(1, &loads), 0);
+    }
+
+    #[test]
+    fn queue_cap_sheds_at_the_threshold() {
+        let r = Router::new(
+            RouterConfig::new(RoutePolicy::RoundRobin).queue_cap(Some(3)),
+            vec![0]);
+        assert!(!r.sheds(2));
+        assert!(r.sheds(3));
+        assert!(r.sheds(4));
+        let open = Router::new(RouterConfig::new(RoutePolicy::RoundRobin),
+                               vec![0]);
+        assert!(!open.sheds(1_000_000));
+    }
+}

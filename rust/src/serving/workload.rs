@@ -35,7 +35,8 @@ pub enum ArrivalProcess {
 
 impl ArrivalProcess {
     /// The closed-loop population size, if this is a closed-loop process
-    /// (what [`super::cluster::simulate`] takes as its injection limit).
+    /// (what [`super::cluster::SimulationRun::closed_loop`] takes as its
+    /// injection limit).
     pub fn closed_loop_population(&self) -> Option<usize> {
         match *self {
             ArrivalProcess::ClosedLoop { concurrency } => Some(concurrency.max(1)),
@@ -50,20 +51,35 @@ pub struct ModelMix {
     pub models: Vec<Model>,
     /// Relative (unnormalized, positive) traffic weights, one per model.
     pub weights: Vec<f64>,
+    /// Per-model fusion-legal cut points (layer boundary indices), for
+    /// models linearized from a branching DAG (rust/docs/DESIGN.md §13):
+    /// the allocator threads them into its tuning sweep so a DAG-derived
+    /// model is never fused across an illegal boundary. `None` =
+    /// unconstrained (every linear zoo model).
+    pub cuts: Vec<Option<Vec<usize>>>,
 }
 
 impl ModelMix {
     /// Equal traffic share for every model.
     pub fn uniform(models: Vec<Model>) -> ModelMix {
         let n = models.len();
-        ModelMix { models, weights: vec![1.0; n] }
+        ModelMix { models, weights: vec![1.0; n], cuts: vec![None; n] }
+    }
+
+    /// Equal traffic share with per-model cut constraints — the DAG-aware
+    /// variant of [`ModelMix::uniform`].
+    pub fn uniform_with_cuts(entries: Vec<(Model, Option<Vec<usize>>)>) -> ModelMix {
+        let (models, cuts): (Vec<_>, Vec<_>) = entries.into_iter().unzip();
+        let n = models.len();
+        ModelMix { models, weights: vec![1.0; n], cuts }
     }
 
     /// Explicit traffic weights (must be positive, one per model).
     pub fn weighted(models: Vec<Model>, weights: Vec<f64>) -> ModelMix {
         assert_eq!(models.len(), weights.len(), "one weight per model");
         assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
-        ModelMix { models, weights }
+        let n = models.len();
+        ModelMix { models, weights, cuts: vec![None; n] }
     }
 
     pub fn num_models(&self) -> usize {
@@ -74,6 +90,21 @@ impl ModelMix {
     pub fn share(&self, i: usize) -> f64 {
         let total: f64 = self.weights.iter().sum();
         if total <= 0.0 { 0.0 } else { self.weights[i] / total }
+    }
+
+    /// Model `i`'s cut constraint (`None` = every boundary is legal).
+    pub fn cuts_for(&self, i: usize) -> Option<&[usize]> {
+        self.cuts.get(i).and_then(|c| c.as_deref())
+    }
+
+    /// A one-model mix holding model `i`'s entry (weight 1, cuts kept) —
+    /// the plan cache's per-model planning unit.
+    pub fn single(&self, i: usize) -> ModelMix {
+        ModelMix {
+            models: vec![self.models[i].clone()],
+            weights: vec![1.0],
+            cuts: vec![self.cuts.get(i).cloned().flatten()],
+        }
     }
 
     /// Draw a model index with probability proportional to its weight.

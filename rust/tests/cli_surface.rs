@@ -295,6 +295,118 @@ fn serve_sim_rejects_bad_flags() {
 }
 
 #[test]
+fn serve_sim_accepts_dag_and_file_workloads() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_serve_dag");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // DAG zoo names serve through their linearization, and mix freely with
+    // linear zoo models (the serve-sim workload-loading fix).
+    assert_eq!(run("serve-sim --models resnet18-dag --requests 16 --rate 200"), 0);
+    assert_eq!(
+        run("serve-sim --models alexnet,resnet18-dag --requests 16 --rate 300"),
+        0);
+    // .dlm documents serve too: via --model-file and inline in --models.
+    let v2 = dir.join("r18.dlm");
+    assert_eq!(run(&format!("model export resnet18-dag --out {}", v2.display())), 0);
+    assert_eq!(
+        run(&format!("serve-sim --model-file {} --requests 16 --rate 200",
+                     v2.display())),
+        0);
+    assert_eq!(
+        run(&format!("serve-sim --models alexnet,{} --requests 16 --rate 300",
+                     v2.display())),
+        0);
+    // Duplicate names would alias queues, lanes, and plan-cache keys.
+    assert_eq!(run("serve-sim --models alexnet,alexnet"), 1);
+    assert_eq!(run("serve-sim --models alexnet, --requests 8"), 1);
+    assert_eq!(run("serve-sim --model-file /no/such/mix.dlm"), 1);
+}
+
+#[test]
+fn serve_fleet_happy_paths() {
+    // A one-chip fleet is the serve-sim degenerate case.
+    assert_eq!(
+        run("serve-fleet --fleet mlu100 --models alexnet --requests 32 \
+             --rate 300 --seed 5"),
+        0);
+    // Heterogeneous fleet, SLO accounting, explicit routing.
+    assert_eq!(
+        run("serve-fleet --fleet mlu100,edge4x2 --models alexnet,mini_cnn \
+             --requests 48 --rate 500 --route least-loaded --slo-ms 50"),
+        0);
+    assert_eq!(
+        run("serve-fleet --fleet edge4x2 --models mini_cnn --requests 24 \
+             --rate 200 --route rr"),
+        0);
+    assert_eq!(
+        run("serve-fleet --fleet mlu100x2 --models alexnet,mini_cnn \
+             --requests 32 --rate 400 --route sharded --no-events"),
+        0);
+    // Admission control and dynamic batching ride along.
+    assert_eq!(
+        run("serve-fleet --fleet edge4x2 --models mini_cnn --requests 32 \
+             --rate 600 --queue-cap 2"),
+        0);
+    assert_eq!(
+        run("serve-fleet --fleet mlu100 --models alexnet --policy batch \
+             --max-batch 4 --requests 32 --rate 400 --arrivals bursty"),
+        0);
+}
+
+#[test]
+fn serve_fleet_rejects_bad_flags() {
+    assert_eq!(run("serve-fleet --fleet tpu9000x2"), 1);
+    assert_eq!(run("serve-fleet --fleet mlu100x0"), 1);
+    assert_eq!(run("serve-fleet --fleet"), 1);
+    assert_eq!(run("serve-fleet --route lifo"), 1);
+    assert_eq!(run("serve-fleet --queue-cap 0"), 1);
+    assert_eq!(run("serve-fleet --queue-cap abc"), 1);
+    assert_eq!(run("serve-fleet --models nope_net"), 1);
+    assert_eq!(run("serve-fleet --models alexnet,alexnet"), 1);
+    assert_eq!(run("serve-fleet --rate 0"), 1);
+    assert_eq!(run("serve-fleet --slo-ms -3"), 1);
+    assert_eq!(run("serve-fleet --allocator psychic"), 1);
+    assert_eq!(run("serve-fleet --policy batch --max-batch 0"), 1);
+    // Fleets are open-loop only: no single concurrency gate exists.
+    assert_eq!(run("serve-fleet --arrivals closed"), 1);
+    assert_eq!(run("serve-fleet --arrivals sometimes"), 1);
+    // The fleet trace replays recorded events; --no-events removes them.
+    assert_eq!(
+        run("serve-fleet --requests 8 --no-events --trace-out /tmp/x.json"), 1);
+}
+
+#[test]
+fn serve_fleet_observability_exports() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_obs_fleet");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics = dir.join("metrics.json");
+    let trace = dir.join("trace.json");
+    assert_eq!(
+        run(&format!("serve-fleet --fleet mlu100,edge4 --models mini_cnn \
+                      --requests 24 --rate 300 --slo-ms 50 --metrics-out {} \
+                      --trace-out {}",
+                     metrics.display(), trace.display())),
+        0);
+    // Fleet metrics are all event-clock state: the merged SLO gauges plus
+    // per-chip gauges land in the deterministic section, wall stays empty.
+    let doc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert!(doc.get("deterministic").get("serving.throughput_rps")
+            .as_f64().is_some_and(|v| v > 0.0));
+    for chip in ["mlu100-0", "edge4-0"] {
+        assert!(doc.get("deterministic")
+                .get(&format!("serving.chip.{chip}.requests"))
+                .as_f64().is_some(), "missing per-chip gauges for {chip}");
+    }
+    assert!(doc.get("wall").as_obj().unwrap().is_empty());
+    let tdoc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&trace).unwrap()).unwrap();
+    assert!(!tdoc.get("traceEvents").as_arr().unwrap().is_empty());
+    assert_eq!(run(&format!("report {}", metrics.display())), 0);
+}
+
+#[test]
 fn unknown_command_fails() {
     assert_eq!(run("frobnicate"), 1);
 }

@@ -1,0 +1,263 @@
+//! Integration: the multi-chip fleet layer (ISSUE PR 9 acceptance) — the
+//! one-chip-fleet parity pin against the single-pool simulation, fleet-run
+//! determinism, routing-policy separation under overload, admission-control
+//! accounting, and the plan cache's tune-each-key-exactly-once guarantee.
+
+use dlfusion::accel::{Simulator, Target};
+use dlfusion::obs::MetricsRegistry;
+use dlfusion::serving::{self, fleet_trace, plan_fleet, AllocationRequest,
+                        ArrivalProcess, ClusterConfig, DispatchPolicy, Fleet,
+                        FleetReport, FleetRun, ModelMix, PlanCache, Request,
+                        RoutePolicy, RouterConfig, SimulationRun, SloReport};
+use dlfusion::zoo;
+
+const POLICIES: [RoutePolicy; 3] =
+    [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded,
+     RoutePolicy::ModelSharded];
+
+/// The tentpole's backward-compatibility pin: a one-chip fleet with no
+/// queue cap reproduces the single-pool `serve-sim` path bit for bit —
+/// same completions and events under every routing policy, same rendered
+/// SLO report, same metrics snapshot.
+#[test]
+fn one_chip_fleet_reproduces_the_single_pool_simulation() {
+    let sim = Simulator::new(Target::mlu100());
+    let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 200, 7);
+
+    // The single-pool path, exactly as `serve-sim` runs it.
+    let plan =
+        AllocationRequest::new(&sim, &mix).slo_ms(Some(50.0)).plan().unwrap();
+    let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
+                              policy: DispatchPolicy::Fifo };
+    let single = SimulationRun::new(&cfg, &plan.services(true))
+        .trace(&trace)
+        .run()
+        .unwrap();
+
+    // The same workload as a one-chip fleet: every policy degenerates to
+    // pass-through, so the merged result is the chip's result verbatim.
+    let fleet = Fleet::parse("mlu100").unwrap();
+    let mut cache = PlanCache::new();
+    let fplan =
+        plan_fleet(&fleet, &mix, Some(50.0), 1, true, &mut cache).unwrap();
+    for policy in POLICIES {
+        let result = FleetRun::new(&fplan, RouterConfig::new(policy))
+            .trace(&trace)
+            .run()
+            .unwrap();
+        assert!(result.shed.is_empty(), "{}", policy.name());
+        assert_eq!(result.merged(), single,
+                   "one-chip fleet under {} must be bit-identical to the \
+                    single pool", policy.name());
+    }
+
+    // The report surface pins too: rendered SLO table and exported
+    // metrics are byte-identical (zero shed is invisible by design).
+    let result = FleetRun::new(&fplan, RouterConfig::new(RoutePolicy::LeastLoaded))
+        .trace(&trace)
+        .run()
+        .unwrap();
+    let report = FleetReport::from_run(&result, &fplan, Some(50.0));
+    let single_report = SloReport::from_sim(&single, Some(50.0));
+    assert_eq!(report.slo.render(), single_report.render());
+    let mut reg_fleet = MetricsRegistry::new();
+    report.slo.export_metrics(&mut reg_fleet);
+    let mut reg_single = MetricsRegistry::new();
+    single_report.export_metrics(&mut reg_single);
+    assert_eq!(reg_fleet.snapshot().to_string(),
+               reg_single.snapshot().to_string());
+}
+
+/// Same seed ⇒ identical per-chip results, shed log, rendered fleet
+/// report, and Chrome trace export on a heterogeneous fleet; a different
+/// seed diverges. Routing reads only simulated state, so no wall clock can
+/// leak into a fleet run.
+#[test]
+fn same_seed_pins_the_fleet_run_and_its_exports() {
+    let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+    let fleet = Fleet::parse("mlu100,edge4x2").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    let router =
+        RouterConfig::new(RoutePolicy::LeastLoaded).queue_cap(Some(16));
+    let run = |seed: u64| {
+        let trace = serving::generate_trace(
+            &mix, ArrivalProcess::OpenPoisson { rate_rps: 600.0 }, 240, seed);
+        let result =
+            FleetRun::new(&plan, router).trace(&trace).run().unwrap();
+        let report = FleetReport::from_run(&result, &plan, Some(50.0));
+        let chrome = fleet_trace(&result, &plan, "parity").to_chrome_string();
+        (result, report.render(), chrome)
+    };
+    let (r1, rep1, tr1) = run(42);
+    let (r2, rep2, tr2) = run(42);
+    assert_eq!(r1.per_chip, r2.per_chip);
+    assert_eq!(r1.shed, r2.shed);
+    assert_eq!(rep1, rep2);
+    assert_eq!(tr1, tr2, "fleet trace export must be bit-identical");
+    let (r3, _, _) = run(43);
+    assert_ne!(r1.per_chip, r3.per_chip,
+               "different seed must change the fleet run");
+}
+
+/// The routing acceptance criterion: on the overloaded vgg19+resnet18 mix
+/// over a heterogeneous fleet, load-aware `least-loaded` routing achieves
+/// strictly higher goodput than load-blind `round-robin`, which keeps
+/// sending every other request to the narrow edge chips.
+#[test]
+fn least_loaded_beats_round_robin_goodput_under_overload() {
+    let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
+    let fleet = Fleet::parse("mlu100,edge4x2").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    // An SLO generous to the slowest chip's invocation latency, so the
+    // comparison is about sustained queueing, not one service time.
+    let slo = 3.0 * plan
+        .chips
+        .iter()
+        .flat_map(|cp| cp.services.iter())
+        .map(|s| s.service_at(1))
+        .fold(0.0, f64::max);
+    let rate = 2.0 * plan.predicted_capacity_rps(true);
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: rate }, 400, 11);
+    let run = |policy| {
+        let result = FleetRun::new(&plan, RouterConfig::new(policy))
+            .trace(&trace)
+            .run()
+            .unwrap();
+        FleetReport::from_run(&result, &plan, Some(slo))
+    };
+    let ll = run(RoutePolicy::LeastLoaded);
+    let rr = run(RoutePolicy::RoundRobin);
+    // No shedding: both policies complete the identical request set.
+    assert_eq!(ll.slo.counters.get("requests"),
+               rr.slo.counters.get("requests"));
+    assert!(ll.slo.goodput_rps > rr.slo.goodput_rps,
+            "least-loaded {} req/s goodput must strictly beat round-robin \
+             {} req/s (SLO {slo:.1} ms, offered {rate:.0} req/s)",
+            ll.slo.goodput_rps, rr.slo.goodput_rps);
+}
+
+/// The plan-cache acceptance criterion: across a fleet with repeated chip
+/// kinds, each `(model, target, batch)` key is tuned exactly once — misses
+/// count kinds x models, every further chip is a hit, and chips of the
+/// same kind carry identical plans.
+#[test]
+fn plan_cache_tunes_each_key_exactly_once_across_the_fleet() {
+    let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+    let fleet = Fleet::parse("mlu100x2,edge4x2").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    let kinds = fleet.kinds().len() as u64;
+    let models = mix.models.len() as u64;
+    assert_eq!(plan.cache_stats.misses, kinds * models);
+    assert_eq!(plan.cache_stats.hits,
+               (fleet.len() as u64 - kinds) * models);
+    assert!(plan.cache_stats.evals_saved > 0);
+    assert_eq!(cache.len(), (kinds * models) as usize);
+    // Same-kind chips share the tuned plan bit for bit.
+    assert_eq!(plan.chips[0].plan, plan.chips[1].plan);
+    assert_eq!(plan.chips[2].plan, plan.chips[3].plan);
+    // Re-planning the same fleet is all hits, nothing re-tuned.
+    let again = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    assert_eq!(again.cache_stats.misses, 0);
+    assert_eq!(again.cache_stats.hits, fleet.len() as u64 * models);
+    assert_eq!(again.cache_stats.evals_spent, 0);
+    // The render carries the accounting line the CLI prints.
+    assert!(plan.render(true).contains("plan cache:"), "{}", plan.render(true));
+}
+
+/// Admission control: with a queue cap under overload some requests shed,
+/// every offered request is exactly one of completed or shed, and the
+/// report/trace surfaces account for them.
+#[test]
+fn queue_cap_sheds_deterministically_and_accounts_every_request() {
+    let mix = ModelMix::uniform(vec![zoo::alexnet()]);
+    let fleet = Fleet::parse("edge4x2").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    let rate = 4.0 * plan.predicted_capacity_rps(true);
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: rate }, 200, 21);
+    let router = RouterConfig::new(RoutePolicy::LeastLoaded).queue_cap(Some(2));
+    let result = FleetRun::new(&plan, router).trace(&trace).run().unwrap();
+    assert!(!result.shed.is_empty(), "4x overload with cap 2 must shed");
+    assert_eq!(result.offered(), trace.len() as u64);
+    assert_eq!(result.completed() + result.shed.len() as u64,
+               result.offered());
+    assert!(result.shed_rate() > 0.0 && result.shed_rate() < 1.0);
+    // Determinism covers the shed log itself.
+    let again = FleetRun::new(&plan, router).trace(&trace).run().unwrap();
+    assert_eq!(result.shed, again.shed);
+    // Report: the shed row and rate appear, and completed + shed adds up.
+    let report = FleetReport::from_run(&result, &plan, None);
+    assert_eq!(report.slo.shed, result.shed.len() as u64);
+    assert_eq!(report.slo.counters.get("requests") + report.slo.shed,
+               trace.len() as u64);
+    assert!(report.render().contains("requests shed"), "{}", report.render());
+    let mut reg = MetricsRegistry::new();
+    report.export_metrics(&mut reg);
+    assert!(reg.gauge("serving.shed_rate").is_some());
+    // Trace: shed instants and the cumulative shed counter are exported.
+    let chrome = fleet_trace(&result, &plan, "shed").to_chrome_string();
+    assert!(chrome.contains("shed requests"), "missing shed counter track");
+}
+
+/// `model-sharded` routing is binding: every completion lands on the chip
+/// the fleet plan pinned its model to.
+#[test]
+fn model_sharded_routing_pins_models_to_their_chips() {
+    let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::mini_cnn()]);
+    let fleet = Fleet::parse("mlu100,edge4").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: 200.0 }, 120, 3);
+    let result =
+        FleetRun::new(&plan, RouterConfig::new(RoutePolicy::ModelSharded))
+            .trace(&trace)
+            .run()
+            .unwrap();
+    assert_eq!(result.completed(), trace.len() as u64);
+    for (c, r) in result.per_chip.iter().enumerate() {
+        for done in &r.completed {
+            assert_eq!(plan.shard_of[done.model], c,
+                       "model {} completed on chip {c} but is sharded to \
+                        chip {}", done.model, plan.shard_of[done.model]);
+        }
+    }
+    // The placement the run obeyed is the one the plan renders.
+    let rendered = plan.render(true);
+    for (m, &c) in plan.shard_of.iter().enumerate() {
+        let line = format!("{} -> {}",
+                           plan.chips[c].plan.models[m].name,
+                           plan.chips[c].chip.name);
+        assert!(rendered.contains(&line), "missing '{line}' in:\n{rendered}");
+    }
+}
+
+/// `FleetRun` validates its inputs: unsorted traces and out-of-range model
+/// indices are rejected with actionable messages.
+#[test]
+fn fleet_run_validates_its_trace() {
+    let mix = ModelMix::uniform(vec![zoo::mini_cnn()]);
+    let fleet = Fleet::parse("edge4").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    let router = RouterConfig::new(RoutePolicy::RoundRobin);
+
+    let unsorted = [Request { id: 0, model: 0, arrival_ms: 5.0 },
+                    Request { id: 1, model: 0, arrival_ms: 1.0 }];
+    let err =
+        FleetRun::new(&plan, router).trace(&unsorted).run().unwrap_err();
+    assert!(err.contains("sorted"), "{err}");
+
+    let out_of_range = [Request { id: 0, model: 7, arrival_ms: 0.0 }];
+    let err =
+        FleetRun::new(&plan, router).trace(&out_of_range).run().unwrap_err();
+    assert!(err.contains("model 7"), "{err}");
+    assert!(err.contains("only 1"), "{err}");
+}

@@ -134,19 +134,25 @@ fn sim_domain_metrics_snapshot_is_thread_invariant() {
 #[test]
 fn serving_trace_and_metrics_exports_are_run_to_run_identical() {
     use dlfusion::obs::MetricsRegistry;
-    use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
-                            ModelMix, SloReport};
+    use dlfusion::serving::{self, AllocationRequest, ArrivalProcess,
+                            ClusterConfig, DispatchPolicy, ModelMix,
+                            SimulationRun, SloReport};
 
     let sim = Simulator::new(Target::mlu100());
     let run_once = || {
         let mix = ModelMix::uniform(vec![zoo::resnet18(), zoo::alexnet()]);
-        let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).expect("plan");
+        let plan = AllocationRequest::new(&sim, &mix)
+            .slo_ms(Some(50.0))
+            .plan()
+            .expect("plan");
         let trace = serving::generate_trace(
             &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 128, 7);
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
                                   policy: DispatchPolicy::Fifo };
         let services = plan.services(true);
-        let result = serving::simulate(&cfg, &services, &trace, None)
+        let result = SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .run()
             .expect("simulate");
         let session = serving::sim_trace(&result, &services, "parity");
         let mut reg = MetricsRegistry::new();

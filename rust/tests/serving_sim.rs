@@ -3,8 +3,9 @@
 //! end-to-end SLO accounting (ISSUE acceptance criteria).
 
 use dlfusion::accel::{Simulator, Target};
-use dlfusion::serving::{self, ArrivalProcess, ClusterConfig, DispatchPolicy,
-                        ModelMix, SimEventKind, SloReport};
+use dlfusion::serving::{self, AllocationRequest, ArrivalProcess,
+                        ClusterConfig, DispatchPolicy, ModelMix, SimEventKind,
+                        SimulationRun, SloReport};
 use dlfusion::zoo;
 
 /// Same seed ⇒ identical event trace and rendered SLO report; a different
@@ -13,14 +14,17 @@ use dlfusion::zoo;
 fn same_seed_pins_the_event_trace_and_report() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
-    let plan = serving::plan_allocations(&sim, &mix, Some(50.0)).unwrap();
+    let plan =
+        AllocationRequest::new(&sim, &mix).slo_ms(Some(50.0)).plan().unwrap();
     let run = |seed: u64| {
         let trace = serving::generate_trace(
             &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 120, seed);
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
                                   policy: DispatchPolicy::Fifo };
-        let result =
-            serving::simulate(&cfg, &plan.services(true), &trace, None).unwrap();
+        let result = SimulationRun::new(&cfg, &plan.services(true))
+            .trace(&trace)
+            .run()
+            .unwrap();
         let report = SloReport::from_sim(&result, Some(50.0)).render();
         (result, report)
     };
@@ -41,7 +45,7 @@ fn same_seed_pins_the_event_trace_and_report() {
 fn load_aware_mp_diverges_and_wins_aggregate_throughput() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
-    let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
+    let plan = AllocationRequest::new(&sim, &mix).plan().unwrap();
 
     assert!(plan.models.iter().any(|m| m.diverged()),
             "expected at least one model's load-aware MP to differ from its \
@@ -65,10 +69,16 @@ fn load_aware_mp_diverges_and_wins_aggregate_throughput() {
         &mix, ArrivalProcess::ClosedLoop { concurrency: 64 }, 200, 7);
     let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
                               policy: DispatchPolicy::Fifo };
-    let single =
-        serving::simulate(&cfg, &plan.services(false), &trace, Some(64)).unwrap();
-    let load =
-        serving::simulate(&cfg, &plan.services(true), &trace, Some(64)).unwrap();
+    let single = SimulationRun::new(&cfg, &plan.services(false))
+        .trace(&trace)
+        .closed_loop(Some(64))
+        .run()
+        .unwrap();
+    let load = SimulationRun::new(&cfg, &plan.services(true))
+        .trace(&trace)
+        .closed_loop(Some(64))
+        .run()
+        .unwrap();
     assert_eq!(single.completed.len(), 200);
     assert_eq!(load.completed.len(), 200);
     assert!(load.throughput_rps() > single.throughput_rps(),
@@ -85,13 +95,15 @@ fn load_aware_mp_diverges_and_wins_aggregate_throughput() {
 fn event_trace_is_causally_consistent_under_both_policies() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
-    let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
+    let plan = AllocationRequest::new(&sim, &mix).plan().unwrap();
     let trace = serving::generate_trace(
         &mix, ArrivalProcess::Bursty { rate_rps: 600.0, burst: 8 }, 96, 13);
     for policy in [DispatchPolicy::Fifo, DispatchPolicy::ShortestJobFirst] {
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
-        let result =
-            serving::simulate(&cfg, &plan.services(true), &trace, None).unwrap();
+        let result = SimulationRun::new(&cfg, &plan.services(true))
+            .trace(&trace)
+            .run()
+            .unwrap();
         assert_eq!(result.completed.len(), 96, "{}", policy.name());
         for w in result.events.windows(2) {
             assert!(w[1].time_ms >= w[0].time_ms);
@@ -116,7 +128,7 @@ fn event_trace_is_causally_consistent_under_both_policies() {
 fn sjf_improves_mean_latency_on_a_skewed_mix() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::mini_cnn()]);
-    let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
+    let plan = AllocationRequest::new(&sim, &mix).plan().unwrap();
     // Pin every request to one core: with equal widths the comparison is
     // pure scheduling (no packing effects), where shortest-first is the
     // classical mean-latency winner.
@@ -128,7 +140,11 @@ fn sjf_improves_mean_latency_on_a_skewed_mix() {
         &mix, ArrivalProcess::ClosedLoop { concurrency: 48 }, 150, 3);
     let run = |policy| {
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
-        let r = serving::simulate(&cfg, &services, &trace, Some(48)).unwrap();
+        let r = SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .closed_loop(Some(48))
+            .run()
+            .unwrap();
         SloReport::from_sim(&r, None)
     };
     let fifo = run(DispatchPolicy::Fifo);
@@ -148,7 +164,9 @@ fn same_seed_pins_the_batched_serving_trace() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
     let max_batch = serving::DEFAULT_MAX_BATCH;
-    let plan = serving::plan_allocations_batched(&sim, &mix, None, max_batch)
+    let plan = AllocationRequest::new(&sim, &mix)
+        .max_batch(max_batch)
+        .plan()
         .unwrap();
     let services = plan.services(true);
     let rate = 2.0 * plan.predicted_capacity_rps(sim.spec.num_cores, true);
@@ -159,7 +177,10 @@ fn same_seed_pins_the_batched_serving_trace() {
             num_cores: sim.spec.num_cores,
             policy: DispatchPolicy::Batch { max_batch, max_wait_ms: 2.0 },
         };
-        let result = serving::simulate(&cfg, &services, &trace, None).unwrap();
+        let result = SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .run()
+            .unwrap();
         let report = SloReport::from_sim(&result, Some(100.0)).render();
         (result, report)
     };
@@ -187,7 +208,9 @@ fn dynamic_batching_beats_fifo_goodput_on_the_poisson_mix() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::vgg19(), zoo::resnet18()]);
     let max_batch = serving::DEFAULT_MAX_BATCH;
-    let plan = serving::plan_allocations_batched(&sim, &mix, None, max_batch)
+    let plan = AllocationRequest::new(&sim, &mix)
+        .max_batch(max_batch)
+        .plan()
         .unwrap();
     let services = plan.services(true);
     // The batched capacity edge exists in the plan itself.
@@ -206,7 +229,10 @@ fn dynamic_batching_beats_fifo_goodput_on_the_poisson_mix() {
         &mix, ArrivalProcess::OpenPoisson { rate_rps: rate }, 600, 11);
     let run = |policy| {
         let cfg = ClusterConfig { num_cores: sim.spec.num_cores, policy };
-        let result = serving::simulate(&cfg, &services, &trace, None).unwrap();
+        let result = SimulationRun::new(&cfg, &services)
+            .trace(&trace)
+            .run()
+            .unwrap();
         SloReport::from_sim(&result, Some(slo))
     };
     let fifo = run(DispatchPolicy::Fifo);
@@ -227,15 +253,17 @@ fn dynamic_batching_beats_fifo_goodput_on_the_poisson_mix() {
 fn slo_report_accounts_goodput_under_deadline() {
     let sim = Simulator::new(Target::mlu100());
     let mix = ModelMix::uniform(vec![zoo::alexnet()]);
-    let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
+    let plan = AllocationRequest::new(&sim, &mix).plan().unwrap();
     // Overload: arrivals at ~4x the pool's capacity at the load-aware point.
     let cap = plan.predicted_capacity_rps(sim.spec.num_cores, true);
     let trace = serving::generate_trace(
         &mix, ArrivalProcess::OpenPoisson { rate_rps: 4.0 * cap }, 300, 21);
     let cfg = ClusterConfig { num_cores: sim.spec.num_cores,
                               policy: DispatchPolicy::Fifo };
-    let result =
-        serving::simulate(&cfg, &plan.services(true), &trace, None).unwrap();
+    let result = SimulationRun::new(&cfg, &plan.services(true))
+        .trace(&trace)
+        .run()
+        .unwrap();
     let slo = plan.models[0].load_aware.service_ms * 2.0;
     let rep = SloReport::from_sim(&result, Some(slo));
     // Overloaded: queues build, some requests must miss the deadline.

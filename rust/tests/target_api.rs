@@ -222,7 +222,7 @@ fn tuning_request_and_serving_plan_record_their_target() {
     assert_eq!(request.context().target(), "edge4");
 
     let mix = ModelMix::uniform(vec![zoo::alexnet()]);
-    let plan = serving::plan_allocations(&sim, &mix, None).unwrap();
+    let plan = serving::AllocationRequest::new(&sim, &mix).plan().unwrap();
     assert_eq!(plan.target, "edge4");
     assert!(plan.render().contains("edge4"));
     for svc in plan.services(true) {
@@ -238,8 +238,8 @@ fn cluster_rejects_services_planned_for_different_targets() {
 
     let sim_a = Simulator::new(Target::mlu100());
     let sim_b = Simulator::new(Target::edge4());
-    let plan_a = serving::plan_allocations(&sim_a, &mix, None).unwrap();
-    let plan_b = serving::plan_allocations(&sim_b, &mix, None).unwrap();
+    let plan_a = serving::AllocationRequest::new(&sim_a, &mix).plan().unwrap();
+    let plan_b = serving::AllocationRequest::new(&sim_b, &mix).plan().unwrap();
     let mut services = plan_a.services(true);
     let mut foreign = plan_b.services(true);
     foreign[0].name = "alexnet_edge".to_string();
@@ -247,20 +247,25 @@ fn cluster_rejects_services_planned_for_different_targets() {
 
     let cfg = ClusterConfig { num_cores: sim_a.spec.num_cores,
                               policy: DispatchPolicy::Fifo };
-    let err = serving::simulate(&cfg, &services, &trace, None).unwrap_err();
+    let err = serving::SimulationRun::new(&cfg, &services)
+        .trace(&trace)
+        .run()
+        .unwrap_err();
     assert!(err.contains("mixes hardware targets"), "{err}");
     assert!(err.contains("mlu100") && err.contains("edge4"), "{err}");
 
     // Homogeneous plans still simulate, and hand-built services with no
     // recorded target stay compatible with planned ones.
-    let ok = serving::simulate(&cfg, &plan_a.services(true), &trace, None);
+    let ok = serving::SimulationRun::new(&cfg, &plan_a.services(true))
+        .trace(&trace)
+        .run();
     assert!(ok.is_ok());
     let mut services = plan_a.services(true);
     services.push(ModelService::new("adhoc", 1, 1.0));
     // A second model index is required for the extra service to be valid
     // in a trace, so just validate the target check by reusing the trace
     // over model index 0 only.
-    let ok = serving::simulate(&cfg, &services, &trace, None);
+    let ok = serving::SimulationRun::new(&cfg, &services).trace(&trace).run();
     assert!(ok.is_ok(), "{ok:?}");
 }
 
