@@ -7,6 +7,7 @@ use crate::coordinator::{self, driver, equivalence, plan};
 use crate::cost::CostEngine;
 use crate::graph::dag::{self, DagModel, LoadedModel};
 use crate::graph::{format as dlm, LayerKind, Model};
+use crate::learn;
 use crate::obs::{Domain, MetricsRegistry, TraceSession};
 use crate::optimizer::{self, Strategy};
 use crate::perfmodel;
@@ -36,7 +37,7 @@ COMMANDS:
         [--batch 1,2,4,8]        serve the per-sample-fastest point
         [--compare-targets]      (NAME: algorithm1 strategy1..7 oracle
         [--threads N]             oracle-full oracle-constrained anneal
-        [--model-file F.dlm]      exhaustive);
+        [--model-file F.dlm]      exhaustive learned);
         [--metrics-out F]        --model-file reads a .dlm v1/v2 document;
         [--trace-out F]          v2 dags tune with fusion constrained to
                                  the graph's legal cut set;
@@ -92,6 +93,18 @@ COMMANDS:
         [--no-events]            shed accounting and a per-chip breakdown;
         [--metrics-out F]        a one-chip fleet reproduces serve-sim
         [--trace-out F]          bit-identically; open-loop arrivals only
+    learn fit <model|file.dlm>   fit the learned cost model on cost-engine
+        [--out FILE.json]        samples over the reduced oracle block space
+        [--pca K] [--holdout F]  and print the fit report (R2, MAPE, residual
+        [--seed S]               band); --out saves the versioned model file,
+        [--metrics-out F]        --pca projects onto K principal components
+    learn eval <model|file.dlm> <FILE.json>  score a saved model file on a
+                                 workload's samples (MAPE; pass --target to
+                                 measure a cross-target transfer point)
+    learn transfer [model]       fit per registry target, evaluate on every
+        [--pca K] [--holdout F]  other: the cross-target MAPE matrix of the
+        [--seed S]               learned cost model (default workload:
+        [--metrics-out F]        resnet18)
     report <snapshot.json>       render a --metrics-out snapshot as a table
         [--prom]                 (or re-emit it as Prometheus text)
     perf-smoke                   deterministic perf metrics: tuned latencies
@@ -109,8 +122,9 @@ MODELS:  resnet18 resnet50 vgg19 alexnet mobilenet mini_cnn (or a .dlm file);
          resnet18-dag resnet50-dag
 TARGETS: every hardware-touching command takes --target NAME (default
          mlu100; see 'targets'): zoo optimize tune simulate search codegen
-         characterize trace run serve-sim perf-smoke; serve-fleet names its
-         chips' targets in --fleet instead
+         characterize trace run serve-sim perf-smoke learn fit/eval;
+         serve-fleet names its chips' targets in --fleet instead; learn
+         transfer always sweeps the whole registry
 ";
 
 /// Execute a parsed command line; returns the process exit code.
@@ -135,6 +149,7 @@ pub fn run(args: &Args) -> i32 {
         "serve-sim" => cmd_serve_sim(args),
         "serve-fleet" => cmd_serve_fleet(args),
         "perf-smoke" => cmd_perf_smoke(args),
+        "learn" => cmd_learn(args),
         "report" => cmd_report(args),
         other => Err(format!("unknown command '{other}' (try 'help')")),
     };
@@ -402,6 +417,114 @@ fn cmd_report(args: &Args) -> Result<(), String> {
     } else {
         println!("{}", reg.render_table());
     }
+    Ok(())
+}
+
+/// `dlfusion learn <fit|eval|transfer>` — the learned-cost-model surface
+/// (rust/docs/DESIGN.md §16): fit a surrogate of the cost engine, score a
+/// saved model file, or build the cross-target transfer matrix.
+fn cmd_learn(args: &Args) -> Result<(), String> {
+    let verb = args
+        .positional(0)
+        .ok_or("usage: learn <fit|eval|transfer> [model|file.dlm] [--flags]")?;
+    match verb {
+        "fit" => cmd_learn_fit(args),
+        "eval" => cmd_learn_eval(args),
+        "transfer" => cmd_learn_transfer(args),
+        other => Err(format!("unknown learn verb '{other}' (fit, eval, transfer)")),
+    }
+}
+
+/// Resolve the learn subcommands' workload from positional `pos` (the verb
+/// occupies positional 0, so the model name sits one slot later than in
+/// [`load_workload`]). Dag variants linearize; the learned model samples
+/// the unconstrained reduced block space either way.
+fn learn_workload(args: &Args, pos: usize, usage: &str) -> Result<Model, String> {
+    let name = args.positional(pos).ok_or_else(|| usage.to_string())?;
+    if name.ends_with(".dlm") {
+        Ok(workload_from_file(name)?.model)
+    } else if let Some(model) = zoo::by_name(name) {
+        Ok(model)
+    } else if let Some(d) = zoo::dag_by_name(name) {
+        Ok(workload_from_dag(d)?.model)
+    } else {
+        Err(unknown_model(name))
+    }
+}
+
+/// Parse the shared fit knobs (`--pca K`, `--holdout F`, `--seed S`) on top
+/// of [`learn::FitConfig::default`].
+fn parse_fit_config(args: &Args) -> Result<learn::FitConfig, String> {
+    let mut cfg = learn::FitConfig::default();
+    if let Some(k) = args.flag_usize("pca").map_err(|e| e.to_string())? {
+        cfg.pca = Some(k);
+    }
+    if let Some(h) = args.flag_f64("holdout").map_err(|e| e.to_string())? {
+        cfg.holdout = h;
+    }
+    if let Some(s) = args.flag_usize("seed").map_err(|e| e.to_string())? {
+        cfg.seed = s as u64;
+    }
+    Ok(cfg)
+}
+
+fn cmd_learn_fit(args: &Args) -> Result<(), String> {
+    let model = learn_workload(
+        args, 1,
+        "usage: learn fit <model|file.dlm> [--target T] [--out FILE.json] \
+         [--pca K] [--holdout F] [--seed S]")?;
+    let sim = parse_sim(args)?;
+    let cfg = parse_fit_config(args)?;
+    let engine = CostEngine::new(&sim, &model);
+    let samples = learn::collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]);
+    let fitted = learn::LearnedCostModel::fit(sim.target(), &samples, &cfg)?;
+    println!("workload: {}", model.name);
+    print!("{}", fitted.render());
+    if let Some(path) = args.flag_value("out").map_err(|e| e.to_string())? {
+        fitted.save(path)?;
+        println!("wrote model file to {path}");
+    }
+    let mut reg = MetricsRegistry::new();
+    fitted.export_metrics(&mut reg);
+    write_metrics_out(args, &reg)?;
+    Ok(())
+}
+
+fn cmd_learn_eval(args: &Args) -> Result<(), String> {
+    const USAGE: &str =
+        "usage: learn eval <model|file.dlm> <model-file.json> [--target T]";
+    let model = learn_workload(args, 1, USAGE)?;
+    let path = args.positional(2).ok_or(USAGE)?;
+    let fitted = learn::LearnedCostModel::load(path)?;
+    let sim = parse_sim(args)?;
+    let engine = CostEngine::new(&sim, &model);
+    let samples = learn::collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]);
+    println!("workload:   {}", model.name);
+    println!("trained on: {}", fitted.target);
+    println!("evaluated:  {} ({} samples)", sim.target(), samples.len());
+    println!("mape:       {:.2}%", fitted.mape_on(&samples) * 100.0);
+    if fitted.target != sim.target() {
+        println!("(a cross-target transfer point — 'learn transfer' sweeps \
+                  the full matrix)");
+    }
+    Ok(())
+}
+
+fn cmd_learn_transfer(args: &Args) -> Result<(), String> {
+    let model = match args.positional(1) {
+        None => zoo::resnet18(),
+        Some(_) => learn_workload(
+            args, 1,
+            "usage: learn transfer [model|file.dlm] [--pca K] [--holdout F] \
+             [--seed S]")?,
+    };
+    let cfg = parse_fit_config(args)?;
+    let matrix = learn::TransferMatrix::build(&model, &cfg)?;
+    println!("workload: {}", model.name);
+    print!("{}", matrix.render());
+    let mut reg = MetricsRegistry::new();
+    matrix.export_metrics(&mut reg);
+    write_metrics_out(args, &reg)?;
     Ok(())
 }
 
@@ -1262,6 +1385,29 @@ fn perf_smoke_metrics(sim: &Simulator) -> Result<Vec<(String, f64)>, String> {
                       a1.predicted_ms));
         metrics.push((format!("{}_{}_oracle_ms", target_sim.target(), model.name),
                       dp.predicted_ms));
+    }
+
+    // Learned-cost-model quality and active-tuner pruning (rust/docs/
+    // DESIGN.md §16): the holdout MAPE of the default resnet18 fit and the
+    // fraction of the reference sweep the active tuner avoided. Both are
+    // pure functions of the code, so they ride the exact-match gate like
+    // every other simulated metric.
+    {
+        let model = zoo::resnet18();
+        let engine = CostEngine::new(sim, &model);
+        let samples =
+            learn::collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]);
+        let fitted = learn::LearnedCostModel::fit(
+            sim.target(), &samples, &learn::FitConfig::default())?;
+        metrics.push(("learned_resnet18_mape".into(), fitted.report.mape_holdout));
+
+        let request = tuner::TuningRequest::new(sim, &model);
+        let outcome = request
+            .run(&mut learn::ActiveTuner::new())
+            .map_err(|e| e.to_string())?;
+        let full_space = samples.len().max(1) as f64;
+        metrics.push(("active_evals_saved_ratio".into(),
+                      outcome.stats.evals_saved as f64 / full_space));
     }
     Ok(metrics)
 }

@@ -1,0 +1,300 @@
+//! The active-learning tuner: a model-guided walk of the oracle DP's space.
+//!
+//! The reduced oracle DP sweeps every admissible block at every MP
+//! candidate — `|blocks| × |MP|` real engine evaluations. [`ActiveTuner`]
+//! spends a fraction of that and lands on (near-)the same schedule:
+//!
+//! 1. **Seed round.** Every `seed_stride`-th admissible block (the same
+//!    enumeration the DP visits — [`crate::search::brute`]) is swept at
+//!    every MP for real, producing labelled samples.
+//! 2. **Fit.** A [`LearnedCostModel`] is fitted on the seed samples
+//!    (fixed seed, deterministic split — rust/docs/DESIGN.md §16).
+//! 3. **Probe round.** For every remaining block the model *predicts* the
+//!    per-MP latencies; only the predicted-best MP and every MP inside the
+//!    **residual band** — the uncertainty rule: predicted within
+//!    `(1 + band)×` of the predicted best, where `band` is the fit's
+//!    maximum relative error, clamped to `[0.25, 2.0]` — are measured for
+//!    real. MPs the model confidently rules out are never evaluated.
+//! 4. **DP + refine.** The usual shortest-path DP runs over the measured
+//!    per-block minima; the winning partition's blocks then get a full
+//!    real MP sweep (cheap: a handful of blocks) so the final schedule's
+//!    MPs are exactly optimal for its cuts.
+//!
+//! Every number the tuner consumes is a deterministic engine value and the
+//! walk is sequential, so the outcome is bit-identical across runs and
+//! thread counts (`--threads` changes nothing here by construction). The
+//! pruning is reported as [`TuningStats::evals_saved`] = full sweep size
+//! minus real queries issued. Budget semantics: `max_evaluations` is
+//! checked before every real sweep like the DP's — exceeding it aborts
+//! with [`TuningError::BudgetExhausted`] (a partial walk has no usable
+//! result).
+
+use std::time::Instant;
+
+use crate::optimizer::schedule::{Block, Schedule};
+use crate::search::brute::admissible_blocks;
+use crate::tuner::{Tuner, TuningContext, TuningError, TuningOutcome, TuningStats};
+
+use super::features::block_features;
+use super::model::{FitConfig, LearnedCostModel, Sample};
+
+/// Uncertainty-band clamp: never trust the model past ruling out 2×
+/// mispredictions, never probe less than a 25% near-tie margin.
+const BAND_MIN: f64 = 0.25;
+const BAND_MAX: f64 = 2.0;
+
+/// The model-guided active-learning backend (`--tuner learned`).
+#[derive(Debug, Clone)]
+pub struct ActiveTuner {
+    /// Every `seed_stride`-th candidate block is fully swept to train the
+    /// surrogate; the rest are probed selectively.
+    pub seed_stride: usize,
+    /// Fit configuration of the per-run surrogate (fixed seed — the run
+    /// must be reproducible).
+    pub fit: FitConfig,
+}
+
+impl Default for ActiveTuner {
+    fn default() -> ActiveTuner {
+        ActiveTuner::new()
+    }
+}
+
+impl ActiveTuner {
+    pub fn new() -> ActiveTuner {
+        ActiveTuner { seed_stride: 3, fit: FitConfig::default() }
+    }
+
+    fn tune_at_batch(&mut self, cx: &mut TuningContext<'_>)
+                     -> Result<TuningOutcome, TuningError> {
+        let t0 = Instant::now();
+        let before = cx.engine().local_stats();
+        let batch = cx.engine().batch();
+        let mps = cx.checked_mps()?;
+        let mask = cx.checked_cut_mask()?;
+        let n = cx.model().num_layers();
+        let edges = admissible_blocks(n, cx.granularity(), mask.as_deref());
+        let full_space = (edges.len() * mps.len()) as u64;
+        let cap = cx.budget().max_evaluations;
+        let mut real_queries: u64 = 0;
+        let stride = self.seed_stride.max(2);
+
+        // Per-edge measured minimum (cost, mp); None until measured.
+        let mut measured: Vec<Option<(f64, usize)>> = vec![None; edges.len()];
+        let mut samples: Vec<Sample> = Vec::new();
+
+        // A real sweep of one edge over an MP subset, with the DP's budget
+        // rule (checked before the sweep, whole sweep counted).
+        let mut sweep = |cx: &mut TuningContext<'_>, i: usize, j: usize,
+                         probe: &[usize], real_queries: &mut u64,
+                         samples: Option<&mut Vec<Sample>>|
+         -> Result<(f64, usize), TuningError> {
+            if let Some(cap) = cap {
+                if *real_queries + probe.len() as u64 > cap {
+                    return Err(TuningError::BudgetExhausted {
+                        spent: *real_queries,
+                        budget: cap,
+                    });
+                }
+            }
+            *real_queries += probe.len() as u64;
+            let mut best = f64::INFINITY;
+            let mut best_mp = probe[0];
+            let mut local = Vec::new();
+            for &mp in probe {
+                let latency = cx.engine().block_latency(i, j, mp);
+                if latency < best {
+                    best = latency;
+                    best_mp = mp;
+                }
+                local.push((mp, latency));
+            }
+            if let Some(out) = samples {
+                let model = cx.engine().model();
+                let facts = cx.engine().facts();
+                let spec = &cx.engine().sim().spec;
+                for (mp, latency_ms) in local {
+                    out.push(Sample {
+                        start: i,
+                        end: j,
+                        mp,
+                        batch,
+                        features: block_features(model, facts, spec, i, j, mp, batch),
+                        latency_ms,
+                    });
+                }
+            }
+            Ok((best, best_mp))
+        };
+
+        // Seed round: full sweeps on every stride-th edge.
+        for (k, &(i, j)) in edges.iter().enumerate() {
+            if k % stride == 0 {
+                measured[k] =
+                    Some(sweep(cx, i, j, &mps, &mut real_queries, Some(&mut samples))?);
+            }
+        }
+
+        // Fit the surrogate. Too-small sample sets (tiny models) fall back
+        // to full sweeps — the DP itself, with zero savings.
+        let surrogate = LearnedCostModel::fit(cx.target(), &samples, &self.fit).ok();
+        let band = surrogate
+            .as_ref()
+            .map(|m| m.residual_band.clamp(BAND_MIN, BAND_MAX))
+            .unwrap_or(f64::INFINITY);
+
+        // Probe round: real evaluations only where the model is uncertain.
+        for (k, &(i, j)) in edges.iter().enumerate() {
+            if measured[k].is_some() {
+                continue;
+            }
+            let probe: Vec<usize> = match &surrogate {
+                None => mps.clone(),
+                Some(model) => {
+                    let facts = cx.engine().facts();
+                    let spec = &cx.engine().sim().spec;
+                    let preds: Vec<f64> = mps
+                        .iter()
+                        .map(|&mp| {
+                            model.predict_ms(&block_features(
+                                cx.engine().model(), facts, spec, i, j, mp, batch))
+                        })
+                        .collect();
+                    let best_pred =
+                        preds.iter().cloned().fold(f64::INFINITY, f64::min);
+                    mps.iter()
+                        .zip(&preds)
+                        .filter(|(_, &p)| p <= best_pred * (1.0 + band))
+                        .map(|(&mp, _)| mp)
+                        .collect()
+                }
+            };
+            measured[k] = Some(sweep(cx, i, j, &probe, &mut real_queries, None)?);
+        }
+
+        // Shortest-path DP over the measured per-edge minima.
+        let mut dp = vec![f64::INFINITY; n + 1];
+        let mut parent: Vec<Option<(usize, usize)>> = vec![None; n + 1];
+        dp[0] = 0.0;
+        for (k, &(i, j)) in edges.iter().enumerate() {
+            if dp[i].is_infinite() {
+                continue;
+            }
+            let (cost, mp) = measured[k].expect("every admissible edge was measured");
+            if dp[i] + cost < dp[j] {
+                dp[j] = dp[i] + cost;
+                parent[j] = Some((i, mp));
+            }
+        }
+        let mut blocks = Vec::new();
+        let mut j = n;
+        while j > 0 {
+            let (i, mp) = parent[j].ok_or_else(|| {
+                TuningError::InvalidRequest(format!(
+                    "no admissible partition reaches layer {j} under the cut \
+                     constraint"
+                ))
+            })?;
+            blocks.push(Block { start: i, end: j, mp });
+            j = i;
+        }
+        blocks.reverse();
+
+        // Refine: the chosen partition's blocks get an exact MP decision
+        // (full sweep; the probed MPs are already cached, so this costs
+        // only the candidates pruning skipped on these few blocks).
+        for b in blocks.iter_mut() {
+            let (_, mp) = sweep(cx, b.start, b.end, &mps, &mut real_queries, None)?;
+            b.mp = mp;
+        }
+        let schedule = Schedule::new(blocks);
+        debug_assert!(schedule.validate(n, cx.sim().spec.num_cores).is_ok());
+        let search_us = t0.elapsed().as_micros() as u64;
+        let predicted_ms = cx.engine().schedule_cost(&schedule);
+
+        let after = cx.engine().local_stats();
+        let hits = after.hits - before.hits;
+        let misses = after.misses - before.misses;
+        let stats = TuningStats {
+            evaluations: hits + misses,
+            blocks_considered: edges.len() as u64,
+            space_visited: 0,
+            cache_hits: hits,
+            cache_misses: misses,
+            wall_us: t0.elapsed().as_micros() as u64,
+            search_us,
+            prewarm_us: 0,
+            evals_saved: full_space.saturating_sub(real_queries),
+            truncated: false,
+        };
+        Ok(TuningOutcome { tuner: self.name(), schedule, batch, predicted_ms, stats })
+    }
+}
+
+impl Tuner for ActiveTuner {
+    fn name(&self) -> String {
+        "learned".into()
+    }
+
+    fn tune(&mut self, cx: &mut TuningContext<'_>) -> Result<TuningOutcome, TuningError> {
+        crate::tuner::tune_over_batches(cx, |cx| self.tune_at_batch(cx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{Simulator, Target};
+    use crate::tuner::{OracleDp, TuningRequest};
+    use crate::zoo;
+
+    #[test]
+    fn active_tuner_produces_a_valid_schedule() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let req = TuningRequest::new(&sim, &m);
+        let out = req.run(&mut ActiveTuner::new()).unwrap();
+        out.schedule.validate(m.num_layers(), sim.spec.num_cores).unwrap();
+        assert!(out.predicted_ms > 0.0);
+        assert!(out.stats.evals_saved > 0, "pruning must save something");
+    }
+
+    #[test]
+    fn active_tuner_saves_evals_vs_the_dp_reference() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let req = TuningRequest::new(&sim, &m);
+        let active = req.run(&mut ActiveTuner::new()).unwrap();
+        let oracle = req.run(&mut OracleDp::reduced()).unwrap();
+        // Cache misses = distinct real engine computations (each fresh
+        // context starts cold, so every unique query is one miss).
+        assert!(active.stats.cache_misses < oracle.stats.cache_misses,
+                "active {} vs oracle {}", active.stats.cache_misses,
+                oracle.stats.cache_misses);
+        assert!(active.predicted_ms <= oracle.predicted_ms * 1.05,
+                "active {} vs oracle {}", active.predicted_ms, oracle.predicted_ms);
+    }
+
+    #[test]
+    fn budget_aborts_cleanly() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let req = TuningRequest::new(&sim, &m).max_evaluations(4);
+        let err = req.run(&mut ActiveTuner::new()).unwrap_err();
+        assert!(matches!(err, TuningError::BudgetExhausted { .. }));
+    }
+
+    #[test]
+    fn masked_run_respects_the_cuts() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let n = m.num_layers();
+        let cuts: Vec<usize> = (0..=n).step_by(4).collect();
+        let req = TuningRequest::new(&sim, &m).allowed_cuts(cuts.clone());
+        let out = req.run(&mut ActiveTuner::new()).unwrap();
+        for b in &out.schedule.blocks {
+            assert!(cuts.contains(&b.start) || b.start == 0);
+            assert!(cuts.contains(&b.end) || b.end == n);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! The per-block feature schema of the learned cost model.
+//!
+//! Every candidate `(block, MP, batch)` point maps to one fixed-width
+//! feature vector drawn from the same sources the analytic model consumes:
+//! the per-layer [`crate::cost::ModelFacts`] (op counts, channel widths,
+//! halos, retile barriers), the Section II.B layer features of
+//! [`crate::perfmodel::features`], and the target's
+//! [`crate::accel::AcceleratorSpec`]. Three derived columns pre-combine
+//! workload and hardware the way Eq. 1 does — computed-GOPs over deployed
+//! compute, traffic over bandwidth, per-block launch/sync overhead — so a
+//! *linear* fit in log space can capture the dominant latency terms, and so
+//! a model fitted on one target carries signal to another (the transfer
+//! matrix of [`super::transfer`]). The raw spec columns are constant within
+//! a single-target sample set — deliberately collinear with the intercept,
+//! which the ridge fallback of [`crate::stats::multi_linear_fit`] absorbs.
+//!
+//! Everything here is arithmetic over deterministic inputs: the same
+//! `(model, spec, block, mp, batch)` always yields the bit-identical vector.
+
+use crate::accel::AcceleratorSpec;
+use crate::cost::ModelFacts;
+use crate::graph::Model;
+use crate::perfmodel::features::layer_features;
+
+/// Width of the feature vector (the learned model's input dimension).
+pub const FEATURE_DIM: usize = 16;
+
+/// Names of the feature columns, in order (serialized with the model so a
+/// loaded file documents what it was fitted on).
+pub const FEATURE_NAMES: [&str; FEATURE_DIM] = [
+    "log_gops",
+    "log_computed_gops",
+    "redundancy",
+    "layers",
+    "mean_log_channels",
+    "halo",
+    "barriers",
+    "mp",
+    "log_batch",
+    "mean_conv_op_count",
+    "mean_conv_kernel",
+    "compute_term",
+    "traffic_term",
+    "overhead_term",
+    "log_peak_gflops",
+    "log_mem_bw",
+];
+
+/// Featurize one candidate `(block [start, end), mp, batch)` point.
+///
+/// Panics if the range is empty or out of bounds (callers enumerate blocks
+/// from the model, so a bad range is a programming error, not bad input).
+pub fn block_features(model: &Model, facts: &ModelFacts, spec: &AcceleratorSpec,
+                      start: usize, end: usize, mp: usize, batch: usize)
+                      -> Vec<f64> {
+    assert!(start < end && end <= facts.len(), "block [{start}, {end}) out of range");
+    let layers = (end - start) as f64;
+    let gops = facts.block_gops(start, end);
+    let computed = facts.block_computed_gops(start, end, mp);
+    let mut log_channels = 0.0;
+    let mut traffic_bytes = 0.0;
+    for i in start..end {
+        let lf = facts.layer(i);
+        log_channels += (lf.channels.max(1) as f64).log2();
+        traffic_bytes += lf.unfused_bytes;
+    }
+    // Section II.B conv-layer features, averaged over the block's conv
+    // layers (zero for conv-free blocks — pooling/elementwise tails).
+    let mut conv_op = 0.0;
+    let mut conv_kernel = 0.0;
+    let mut convs = 0.0;
+    for layer in &model.layers[start..end] {
+        if let Some(f) = layer_features(layer) {
+            conv_op += f[0];
+            conv_kernel += f[2];
+            convs += 1.0;
+        }
+    }
+    if convs > 0.0 {
+        conv_op /= convs;
+        conv_kernel /= convs;
+    }
+    let b = batch as f64;
+    let compute_term =
+        (1.0 + computed * b / (mp as f64 * spec.peak_gflops_per_core)).log2();
+    let traffic_term = (1.0 + traffic_bytes * b / (spec.mem_bw_gbps * 1e9)).log2();
+    let overhead_term = (1.0
+        + spec.launch_overhead_us
+        + spec.sync_us_per_core * mp as f64
+        + spec.fused_layer_us * layers)
+        .log2();
+    vec![
+        (1.0 + gops).log2(),
+        (1.0 + computed).log2(),
+        computed / gops.max(1e-12),
+        layers,
+        log_channels / layers,
+        facts.halo(start, end) as f64,
+        facts.barriers(start, end) as f64,
+        mp as f64,
+        b.log2(),
+        conv_op,
+        conv_kernel,
+        compute_term,
+        traffic_term,
+        overhead_term,
+        (spec.num_cores as f64 * spec.peak_gflops_per_core).log2(),
+        spec.mem_bw_gbps.log2(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{Simulator, Target};
+    use crate::zoo;
+
+    #[test]
+    fn feature_vector_has_declared_width_and_names() {
+        assert_eq!(FEATURE_NAMES.len(), FEATURE_DIM);
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let facts = ModelFacts::new(&m);
+        let f = block_features(&m, &facts, &sim.spec, 0, 4, 8, 1);
+        assert_eq!(f.len(), FEATURE_DIM);
+        assert!(f.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn features_are_bit_deterministic() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let facts = ModelFacts::new(&m);
+        let a = block_features(&m, &facts, &sim.spec, 2, 10, 4, 2);
+        let b = block_features(&m, &facts, &sim.spec, 2, 10, 4, 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn features_separate_mp_and_batch() {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let facts = ModelFacts::new(&m);
+        let base = block_features(&m, &facts, &sim.spec, 0, 8, 4, 1);
+        let wide = block_features(&m, &facts, &sim.spec, 0, 8, 16, 1);
+        assert_ne!(base, wide, "MP must influence the vector");
+        let batched = block_features(&m, &facts, &sim.spec, 0, 8, 4, 8);
+        assert_ne!(base, batched, "batch must influence the vector");
+    }
+
+    #[test]
+    fn spec_terms_differ_across_targets() {
+        let m = zoo::resnet18();
+        let facts = ModelFacts::new(&m);
+        let a = Simulator::new(Target::mlu100());
+        let b = Simulator::new(Target::edge4());
+        let fa = block_features(&m, &facts, &a.spec, 0, 8, 4, 1);
+        let fb = block_features(&m, &facts, &b.spec, 0, 8, 4, 1);
+        assert_ne!(fa, fb, "spec-derived columns must carry the target");
+    }
+}

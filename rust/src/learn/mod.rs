@@ -1,0 +1,39 @@
+//! The learned cost model and active-learning tuner (ROADMAP item 4a,
+//! rust/docs/DESIGN.md §16).
+//!
+//! The paper's Algorithm 1 is a hand-derived heuristic over two layer
+//! features; this subsystem replaces hand-derivation with *fitting*: the
+//! analytic cost engine is treated as an expensive oracle, a linear model
+//! in log space is fitted over a deterministic per-block feature schema
+//! ([`features`]), and search queries the real engine only where the model
+//! is uncertain ([`ActiveTuner`], registered as `--tuner learned`).
+//! [`transfer`] measures how a model fitted on one registry target predicts
+//! the others — the cross-hardware generalization question every learned
+//! cost model must answer.
+//!
+//! Everything is deterministic: fixed-seed splits, sequential walks, and
+//! pure-arithmetic features, so fits, transfer matrices, and tuner
+//! schedules are bit-identical across runs and `--threads` settings.
+//!
+//! ```no_run
+//! use dlfusion::prelude::*;
+//! use dlfusion::learn::{collect_samples, FitConfig, LearnedCostModel};
+//!
+//! let sim = Simulator::new(Target::mlu100());
+//! let model = zoo::resnet18();
+//! let engine = CostEngine::new(&sim, &model);
+//! let samples = collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]);
+//! let fitted = LearnedCostModel::fit("mlu100", &samples,
+//!                                    &FitConfig::default()).expect("fit");
+//! println!("{}", fitted.render());
+//! ```
+
+pub mod active;
+pub mod features;
+pub mod model;
+pub mod transfer;
+
+pub use active::ActiveTuner;
+pub use features::{block_features, FEATURE_DIM, FEATURE_NAMES};
+pub use model::{collect_samples, FitConfig, FitReport, LearnedCostModel, Sample};
+pub use transfer::TransferMatrix;

@@ -1,0 +1,532 @@
+//! Fitting, evaluating, and serializing the learned cost model.
+//!
+//! The model is ordinary least squares (with the ridge fallback of
+//! [`crate::stats::multi_linear_fit`]) over the [`super::features`] schema,
+//! fitted in *log2-latency* space — the analytic model is multiplicative
+//! (compute × redundancy, traffic ÷ bandwidth), so its log is near-linear
+//! in the log-scaled features. Optionally the features are PCA-reduced
+//! first ([`crate::stats::Pca`], the paper's own Section II.B tool).
+//!
+//! A fit reports R² in the (log) fit domain and MAPE in the latency domain,
+//! on both the train split and a seeded holdout split, plus the
+//! **residual band**: the maximum relative prediction error observed over
+//! every sample seen at fit time. The band is the uncertainty rule of
+//! [`super::ActiveTuner`] — any candidate whose predicted latency lands
+//! within `(1 + band)` of the predicted best cannot be ruled out by the
+//! model and must be measured for real.
+//!
+//! Fitted models serialize to a versioned JSON text format
+//! ([`LearnedCostModel::save`] / [`LearnedCostModel::load`]). Rust's float
+//! formatting is shortest-roundtrip, so a save/load cycle reproduces the
+//! coefficients bit for bit.
+
+use crate::cost::CostEngine;
+use crate::obs::{Domain, MetricsRegistry};
+use crate::stats::{multi_linear_fit, Pca};
+use crate::util::{Json, XorShiftRng};
+
+use super::features::{block_features, FEATURE_DIM, FEATURE_NAMES};
+
+/// File format tag and version written into every saved model.
+pub const MODEL_FORMAT: &str = "dlfusion-learned-cost-model";
+pub const MODEL_VERSION: u64 = 1;
+
+/// One labelled training point: a `(block, mp, batch)` candidate, its
+/// feature vector, and the cost engine's latency for it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub start: usize,
+    pub end: usize,
+    pub mp: usize,
+    pub batch: usize,
+    pub features: Vec<f64>,
+    pub latency_ms: f64,
+}
+
+/// Enumerate the candidate blocks of the reduced oracle space — every
+/// `[i, j)` the multiple-of-four DP evaluates (size ≡ 0 mod 4, remainder
+/// only at the model end, start reachable from 0), in the DP's visit order.
+pub(crate) fn reduced_blocks(n: usize) -> Vec<(usize, usize)> {
+    crate::search::brute::admissible_blocks(n, crate::search::brute::BlockRule::MultipleOfFour,
+                                            None)
+}
+
+/// Sample the cost engine over the reduced oracle space at the given MP and
+/// batch candidates: one labelled point per `(block, mp, batch)`. The
+/// engine's memoization makes repeat collection free; the sample order is
+/// the DP's deterministic visit order.
+pub fn collect_samples(engine: &CostEngine<'_>, mps: &[usize], batches: &[usize])
+                       -> Vec<Sample> {
+    let model = engine.model();
+    let facts = engine.facts();
+    let spec = &engine.sim().spec;
+    let n = facts.len();
+    let mut out = Vec::new();
+    for (start, end) in reduced_blocks(n) {
+        for &batch in batches {
+            for &mp in mps {
+                let features = block_features(model, facts, spec, start, end, mp, batch);
+                let latency_ms = engine.block_cost_at(start, end, mp, batch).latency_ms;
+                out.push(Sample { start, end, mp, batch, features, latency_ms });
+            }
+        }
+    }
+    out
+}
+
+/// Knobs of a fit: optional PCA reduction to `pca` components, the holdout
+/// fraction, and the seed of the deterministic train/holdout shuffle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitConfig {
+    /// Project features onto this many principal components before the
+    /// linear fit (`None` = fit the raw schema).
+    pub pca: Option<usize>,
+    /// Fraction of samples withheld from the fit for validation.
+    pub holdout: f64,
+    /// Seed of the shuffle that assigns samples to splits.
+    pub seed: u64,
+}
+
+impl Default for FitConfig {
+    fn default() -> FitConfig {
+        FitConfig { pca: None, holdout: 0.25, seed: 0xd1f0 }
+    }
+}
+
+/// Quality numbers of one fit. R² lives in the log2-latency fit domain;
+/// MAPE is the mean `|pred - actual| / actual` in the latency domain
+/// (a fraction — multiply by 100 to quote percent).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FitReport {
+    pub samples: usize,
+    pub train: usize,
+    pub holdout: usize,
+    pub r2_train: f64,
+    pub r2_holdout: f64,
+    pub mape_train: f64,
+    pub mape_holdout: f64,
+}
+
+/// A fitted latency predictor over the [`super::features`] schema.
+#[derive(Debug, Clone)]
+pub struct LearnedCostModel {
+    /// Registry name of the target the training samples came from.
+    pub target: String,
+    /// The feature schema the weights index (pre-PCA column names).
+    pub feature_names: Vec<String>,
+    /// Optional PCA projection applied before the linear map.
+    pub pca: Option<Pca>,
+    /// Linear weights over the (possibly projected) features.
+    pub weights: Vec<f64>,
+    pub bias: f64,
+    /// Maximum relative prediction error over every fit-time sample — the
+    /// active tuner's uncertainty band.
+    pub residual_band: f64,
+    pub report: FitReport,
+}
+
+impl LearnedCostModel {
+    /// Fit on labelled samples from `target`. Needs at least 8 samples
+    /// (split-ability plus a minimally overdetermined system — collinear
+    /// columns are the ridge fallback's job, sample starvation is the
+    /// caller's).
+    pub fn fit(target: &str, samples: &[Sample], cfg: &FitConfig)
+               -> Result<LearnedCostModel, String> {
+        if samples.len() < 8 {
+            return Err(format!(
+                "need at least 8 samples to fit a learned cost model, got {}",
+                samples.len()
+            ));
+        }
+        if let Some(k) = cfg.pca {
+            if k == 0 || k > FEATURE_DIM {
+                return Err(format!("PCA components must be 1..={FEATURE_DIM}, got {k}"));
+            }
+        }
+        if !(0.0..1.0).contains(&cfg.holdout) {
+            return Err(format!("holdout fraction must be in [0, 1), got {}", cfg.holdout));
+        }
+        let mut idx: Vec<usize> = (0..samples.len()).collect();
+        let mut rng = XorShiftRng::new(cfg.seed);
+        rng.shuffle(&mut idx);
+        let n_hold = ((samples.len() as f64 * cfg.holdout) as usize)
+            .min(samples.len().saturating_sub(4));
+        let (hold_idx, train_idx) = idx.split_at(n_hold);
+
+        let pca = cfg.pca.map(|k| {
+            let rows: Vec<Vec<f64>> =
+                train_idx.iter().map(|&i| samples[i].features.clone()).collect();
+            let mut p = Pca::fit(&rows);
+            p.components.truncate(k);
+            p.eigenvalues.truncate(k);
+            p
+        });
+        let project = |f: &[f64]| -> Vec<f64> {
+            match &pca {
+                Some(p) => p.transform(f),
+                None => f.to_vec(),
+            }
+        };
+        let xs: Vec<Vec<f64>> =
+            train_idx.iter().map(|&i| project(&samples[i].features)).collect();
+        let ys: Vec<f64> =
+            train_idx.iter().map(|&i| fit_domain(samples[i].latency_ms)).collect();
+        let (weights, bias) = multi_linear_fit(&xs, &ys);
+
+        let mut model = LearnedCostModel {
+            target: target.to_string(),
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            pca,
+            weights,
+            bias,
+            residual_band: 0.0,
+            report: FitReport::default(),
+        };
+        let (r2_train, mape_train, band_train) = model.score(samples, train_idx);
+        let (r2_holdout, mape_holdout, band_hold) = model.score(samples, hold_idx);
+        model.residual_band = band_train.max(band_hold);
+        model.report = FitReport {
+            samples: samples.len(),
+            train: train_idx.len(),
+            holdout: hold_idx.len(),
+            r2_train,
+            r2_holdout,
+            mape_train,
+            mape_holdout,
+        };
+        Ok(model)
+    }
+
+    /// Predicted latency, ms, for one feature vector.
+    pub fn predict_ms(&self, features: &[f64]) -> f64 {
+        let x = match &self.pca {
+            Some(p) => p.transform(features),
+            None => features.to_vec(),
+        };
+        debug_assert_eq!(x.len(), self.weights.len());
+        let z: f64 = self.weights.iter().zip(&x).map(|(w, v)| w * v).sum::<f64>()
+            + self.bias;
+        from_fit_domain(z)
+    }
+
+    /// (R² in the fit domain, MAPE, max relative error) over the indexed
+    /// subset; `(1.0, 0.0, 0.0)` for an empty subset.
+    fn score(&self, samples: &[Sample], idx: &[usize]) -> (f64, f64, f64) {
+        if idx.is_empty() {
+            return (1.0, 0.0, 0.0);
+        }
+        let mut ss_res = 0.0;
+        let mut mape = 0.0;
+        let mut band = 0.0f64;
+        let ys: Vec<f64> = idx.iter().map(|&i| fit_domain(samples[i].latency_ms)).collect();
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        let ss_tot: f64 = ys.iter().map(|y| (y - mean).powi(2)).sum();
+        for (&i, &y) in idx.iter().zip(&ys) {
+            let pred_ms = self.predict_ms(&samples[i].features);
+            ss_res += (fit_domain(pred_ms) - y).powi(2);
+            let rel = (pred_ms - samples[i].latency_ms).abs()
+                / samples[i].latency_ms.max(1e-12);
+            mape += rel;
+            band = band.max(rel);
+        }
+        let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+        (r2, mape / idx.len() as f64, band)
+    }
+
+    /// MAPE (fraction) of this model over an arbitrary sample set — the
+    /// transfer matrix's cell metric.
+    pub fn mape_on(&self, samples: &[Sample]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let idx: Vec<usize> = (0..samples.len()).collect();
+        self.score(samples, &idx).1
+    }
+
+    /// Export fit-quality numbers into the unified registry. Everything a
+    /// fit produces is a pure function of `(model, target, config)`, so it
+    /// all lands in [`Domain::Sim`].
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.inc(Domain::Sim, "learn.fit.samples", self.report.samples as u64);
+        reg.set_gauge(Domain::Sim, "learn.fit.r2_train", self.report.r2_train);
+        reg.set_gauge(Domain::Sim, "learn.fit.r2_holdout", self.report.r2_holdout);
+        reg.set_gauge(Domain::Sim, "learn.fit.mape_train", self.report.mape_train);
+        reg.set_gauge(Domain::Sim, "learn.fit.mape_holdout", self.report.mape_holdout);
+        reg.set_gauge(Domain::Sim, "learn.fit.residual_band", self.residual_band);
+    }
+
+    /// Serialize to the versioned JSON document (see the module docs).
+    pub fn to_json(&self) -> Json {
+        let pca = match &self.pca {
+            None => Json::Null,
+            Some(p) => Json::obj(vec![
+                ("eigenvalues", Json::arr_f64(&p.eigenvalues)),
+                ("components",
+                 Json::Arr(p.components.iter().map(|c| Json::arr_f64(c)).collect())),
+                ("means", Json::arr_f64(&p.means)),
+                ("stds", Json::arr_f64(&p.stds)),
+            ]),
+        };
+        Json::obj(vec![
+            ("format", Json::Str(MODEL_FORMAT.to_string())),
+            ("version", Json::Num(MODEL_VERSION as f64)),
+            ("target", Json::Str(self.target.clone())),
+            ("feature_names",
+             Json::Arr(self.feature_names.iter().map(|n| Json::Str(n.clone())).collect())),
+            ("pca", pca),
+            ("weights", Json::arr_f64(&self.weights)),
+            ("bias", Json::Num(self.bias)),
+            ("residual_band", Json::Num(self.residual_band)),
+            ("report", Json::obj(vec![
+                ("samples", Json::Num(self.report.samples as f64)),
+                ("train", Json::Num(self.report.train as f64)),
+                ("holdout", Json::Num(self.report.holdout as f64)),
+                ("r2_train", Json::Num(self.report.r2_train)),
+                ("r2_holdout", Json::Num(self.report.r2_holdout)),
+                ("mape_train", Json::Num(self.report.mape_train)),
+                ("mape_holdout", Json::Num(self.report.mape_holdout)),
+            ])),
+        ])
+    }
+
+    /// Parse the versioned JSON document; clean errors for a wrong format
+    /// tag, an unsupported version, or missing/ill-typed fields.
+    pub fn from_json(doc: &Json) -> Result<LearnedCostModel, String> {
+        if doc.get("format").as_str() != Some(MODEL_FORMAT) {
+            return Err(format!("not a {MODEL_FORMAT} file (missing format tag)"));
+        }
+        let version = doc.get("version").as_usize().unwrap_or(0) as u64;
+        if version != MODEL_VERSION {
+            return Err(format!(
+                "unsupported model file version {version} (this build reads {MODEL_VERSION})"
+            ));
+        }
+        let target = doc
+            .get("target")
+            .as_str()
+            .ok_or("model file missing 'target'")?
+            .to_string();
+        let feature_names: Vec<String> = doc
+            .get("feature_names")
+            .as_arr()
+            .ok_or("model file missing 'feature_names'")?
+            .iter()
+            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+            .collect();
+        let weights = f64_vec(doc.get("weights")).ok_or("model file missing 'weights'")?;
+        let bias = doc.get("bias").as_f64().ok_or("model file missing 'bias'")?;
+        let residual_band = doc
+            .get("residual_band")
+            .as_f64()
+            .ok_or("model file missing 'residual_band'")?;
+        let pca = match doc.get("pca") {
+            Json::Null => None,
+            p => {
+                let components = p
+                    .get("components")
+                    .as_arr()
+                    .ok_or("model file pca missing 'components'")?
+                    .iter()
+                    .map(|row| f64_vec(row).ok_or("pca component row is not numeric"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Some(Pca {
+                    eigenvalues: f64_vec(p.get("eigenvalues"))
+                        .ok_or("model file pca missing 'eigenvalues'")?,
+                    components,
+                    means: f64_vec(p.get("means"))
+                        .ok_or("model file pca missing 'means'")?,
+                    stds: f64_vec(p.get("stds"))
+                        .ok_or("model file pca missing 'stds'")?,
+                })
+            }
+        };
+        let r = doc.get("report");
+        let report = FitReport {
+            samples: r.get("samples").as_usize().unwrap_or(0),
+            train: r.get("train").as_usize().unwrap_or(0),
+            holdout: r.get("holdout").as_usize().unwrap_or(0),
+            r2_train: r.get("r2_train").as_f64().unwrap_or(0.0),
+            r2_holdout: r.get("r2_holdout").as_f64().unwrap_or(0.0),
+            mape_train: r.get("mape_train").as_f64().unwrap_or(0.0),
+            mape_holdout: r.get("mape_holdout").as_f64().unwrap_or(0.0),
+        };
+        Ok(LearnedCostModel {
+            target,
+            feature_names,
+            pca,
+            weights,
+            bias,
+            residual_band,
+            report,
+        })
+    }
+
+    /// Write the model to `path` as pretty-printed JSON.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty() + "\n")
+            .map_err(|e| format!("cannot write model file '{path}': {e}"))
+    }
+
+    /// Read a model back from `path`; missing files and malformed or
+    /// wrong-version documents are clean errors, never panics.
+    pub fn load(path: &str) -> Result<LearnedCostModel, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read model file '{path}': {e}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| format!("model file '{path}' is not valid JSON: {e}"))?;
+        LearnedCostModel::from_json(&doc)
+            .map_err(|e| format!("model file '{path}': {e}"))
+    }
+
+    /// Human-readable fit summary (the `learn fit` report body).
+    pub fn render(&self) -> String {
+        let r = &self.report;
+        format!(
+            "learned cost model for {}\n\
+             samples: {} ({} train / {} holdout)\n\
+             pca: {}\n\
+             r2 (log domain): train {:.4}, holdout {:.4}\n\
+             mape: train {:.2}%, holdout {:.2}%\n\
+             residual band: {:.2}%\n",
+            self.target,
+            r.samples,
+            r.train,
+            r.holdout,
+            match &self.pca {
+                Some(p) => format!("{} components", p.components.len()),
+                None => "off".to_string(),
+            },
+            r.r2_train,
+            r.r2_holdout,
+            r.mape_train * 100.0,
+            r.mape_holdout * 100.0,
+            self.residual_band * 100.0,
+        )
+    }
+}
+
+/// The fit domain: log2 latency (the analytic cost is multiplicative).
+fn fit_domain(latency_ms: f64) -> f64 {
+    latency_ms.max(1e-12).log2()
+}
+
+fn from_fit_domain(z: f64) -> f64 {
+    z.exp2()
+}
+
+fn f64_vec(v: &Json) -> Option<Vec<f64>> {
+    v.as_arr().map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{Simulator, Target};
+    use crate::zoo;
+
+    fn resnet_samples() -> Vec<Sample> {
+        let sim = Simulator::new(Target::mlu100());
+        let m = zoo::resnet18();
+        let engine = CostEngine::new(&sim, &m);
+        collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1])
+    }
+
+    #[test]
+    fn reduced_blocks_match_the_dp_space() {
+        // alexnet-sized n: every (i, j) with i % 4 == 0 and the size rule.
+        let blocks = reduced_blocks(10);
+        assert!(blocks.contains(&(0, 4)));
+        assert!(blocks.contains(&(0, 10)), "remainder block at the end");
+        assert!(blocks.contains(&(8, 10)), "tail remainder from a reachable start");
+        assert!(!blocks.contains(&(1, 5)), "start 1 is unreachable");
+        assert!(!blocks.contains(&(0, 6)), "len 6 is not a multiple of four mid-model");
+    }
+
+    #[test]
+    fn fit_learns_the_simulator() {
+        let samples = resnet_samples();
+        let model =
+            LearnedCostModel::fit("mlu100", &samples, &FitConfig::default()).unwrap();
+        let r = &model.report;
+        assert!(r.samples > 100, "resnet18 reduced space has {} samples", r.samples);
+        assert!(r.r2_train > 0.8, "train r2 {}", r.r2_train);
+        assert!(r.r2_holdout > 0.7, "holdout r2 {}", r.r2_holdout);
+        assert!(r.mape_holdout < 0.5, "holdout mape {}", r.mape_holdout);
+        assert!(model.residual_band > 0.0);
+    }
+
+    #[test]
+    fn pca_reduced_fit_works() {
+        let samples = resnet_samples();
+        let cfg = FitConfig { pca: Some(6), ..FitConfig::default() };
+        let model = LearnedCostModel::fit("mlu100", &samples, &cfg).unwrap();
+        assert_eq!(model.weights.len(), 6);
+        assert!(model.report.r2_train > 0.5, "r2 {}", model.report.r2_train);
+    }
+
+    #[test]
+    fn fit_is_bit_deterministic() {
+        let samples = resnet_samples();
+        let cfg = FitConfig::default();
+        let a = LearnedCostModel::fit("mlu100", &samples, &cfg).unwrap();
+        let b = LearnedCostModel::fit("mlu100", &samples, &cfg).unwrap();
+        assert_eq!(a.bias.to_bits(), b.bias.to_bits());
+        assert_eq!(a.residual_band.to_bits(), b.residual_band.to_bits());
+        for (x, y) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let samples = resnet_samples();
+        let model =
+            LearnedCostModel::fit("mlu100", &samples, &FitConfig::default()).unwrap();
+        let dir = std::env::temp_dir().join("dlfusion_learn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        let path = path.to_str().unwrap();
+        model.save(path).unwrap();
+        let back = LearnedCostModel::load(path).unwrap();
+        assert_eq!(back.target, model.target);
+        assert_eq!(back.weights.len(), model.weights.len());
+        assert_eq!(back.bias.to_bits(), model.bias.to_bits());
+        for (a, b) in model.weights.iter().zip(&back.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Predictions agree bit for bit.
+        let f = &samples[17].features;
+        assert_eq!(model.predict_ms(f).to_bits(), back.predict_ms(f).to_bits());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_errors_are_clean() {
+        assert!(LearnedCostModel::load("/nonexistent/model.json")
+            .unwrap_err()
+            .contains("cannot read"));
+        let dir = std::env::temp_dir().join("dlfusion_learn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{ not json").unwrap();
+        assert!(LearnedCostModel::load(bad.to_str().unwrap())
+            .unwrap_err()
+            .contains("not valid JSON"));
+        let wrong = dir.join("wrong.json");
+        std::fs::write(&wrong, "{\"format\": \"other\"}").unwrap();
+        assert!(LearnedCostModel::load(wrong.to_str().unwrap())
+            .unwrap_err()
+            .contains("format"));
+        std::fs::remove_file(bad).ok();
+        std::fs::remove_file(wrong).ok();
+    }
+
+    #[test]
+    fn too_few_samples_is_an_error() {
+        let samples = resnet_samples();
+        let err =
+            LearnedCostModel::fit("mlu100", &samples[..5], &FitConfig::default())
+                .unwrap_err();
+        assert!(err.contains("at least 8"));
+    }
+}

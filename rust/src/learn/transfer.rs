@@ -1,0 +1,122 @@
+//! Cross-target transfer of the learned cost model.
+//!
+//! ROADMAP item 4(a)'s measurement: fit on cost-engine samples from *one*
+//! registry target, then score the prediction error on every other. Each
+//! matrix cell `(train, eval)` is the MAPE of the `train`-fitted model over
+//! the `eval` target's sample set — features are always computed against
+//! the *evaluated* target's spec, so the spec-derived columns (compute
+//! ratio, traffic ratio, overheads) are what carries, or fails to carry,
+//! the signal across hardware. The diagonal is in-target holdout-style
+//! error; off-diagonal growth is the transfer penalty.
+//!
+//! Every cell is a pure function of `(model, targets, config)` — the matrix
+//! is bit-identical across runs and thread counts.
+
+use crate::accel::{Simulator, Target};
+use crate::cost::CostEngine;
+use crate::graph::Model;
+use crate::obs::{Domain, MetricsRegistry};
+use crate::util::Table;
+
+use super::model::{collect_samples, FitConfig, LearnedCostModel, Sample};
+
+/// The train-target × eval-target MAPE matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferMatrix {
+    /// Registry names, one per row (train) and column (eval).
+    pub targets: Vec<String>,
+    /// `mape[r][c]` = MAPE (fraction) of the model fitted on `targets[r]`,
+    /// evaluated on `targets[c]`'s samples.
+    pub mape: Vec<Vec<f64>>,
+}
+
+impl TransferMatrix {
+    /// Fit-and-evaluate over every registry target for one workload.
+    pub fn build(model: &Model, cfg: &FitConfig) -> Result<TransferMatrix, String> {
+        let targets = Target::all();
+        let sims: Vec<Simulator> = targets.into_iter().map(Simulator::new).collect();
+        let mut names = Vec::new();
+        let mut sample_sets: Vec<Vec<Sample>> = Vec::new();
+        for sim in &sims {
+            names.push(sim.target().to_string());
+            let engine = CostEngine::new(sim, model);
+            sample_sets.push(collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]));
+        }
+        let mut mape = Vec::new();
+        for (row, name) in names.iter().enumerate() {
+            let fitted = LearnedCostModel::fit(name, &sample_sets[row], cfg)?;
+            mape.push(sample_sets.iter().map(|s| fitted.mape_on(s)).collect());
+        }
+        Ok(TransferMatrix { targets: names, mape })
+    }
+
+    /// MAPE of the model trained on `train` evaluated on `eval`, if both
+    /// are in the matrix.
+    pub fn cell(&self, train: &str, eval: &str) -> Option<f64> {
+        let r = self.targets.iter().position(|t| t == train)?;
+        let c = self.targets.iter().position(|t| t == eval)?;
+        Some(self.mape[r][c])
+    }
+
+    /// Render the matrix as a table (rows = train target, columns = eval
+    /// target, cells = MAPE %).
+    pub fn render(&self) -> String {
+        let mut header: Vec<&str> = vec!["train \\ eval"];
+        for t in &self.targets {
+            header.push(t);
+        }
+        let mut table = Table::new(&header).with_title("transfer matrix (MAPE %)")
+            .label_first();
+        for (t, row) in self.targets.iter().zip(&self.mape) {
+            let mut cells = vec![t.clone()];
+            for v in row {
+                cells.push(format!("{:.2}", v * 100.0));
+            }
+            table.row(cells);
+        }
+        table.render()
+    }
+
+    /// Export every cell as a sim-domain gauge
+    /// (`learn.transfer.<train>.<eval>.mape`).
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        for (r, train) in self.targets.iter().enumerate() {
+            for (c, eval) in self.targets.iter().enumerate() {
+                reg.set_gauge(Domain::Sim,
+                              &format!("learn.transfer.{train}.{eval}.mape"),
+                              self.mape[r][c]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn matrix_covers_the_registry() {
+        let m = zoo::alexnet();
+        let t = TransferMatrix::build(&m, &FitConfig::default()).unwrap();
+        assert_eq!(t.targets, vec!["mlu100", "mlu270", "edge4", "hbm32"]);
+        assert_eq!(t.mape.len(), 4);
+        assert!(t.mape.iter().all(|r| r.len() == 4));
+        assert!(t.mape.iter().flatten().all(|v| v.is_finite() && *v >= 0.0));
+        let rendered = t.render();
+        assert!(rendered.contains("mlu270"));
+    }
+
+    #[test]
+    fn matrix_is_bit_deterministic() {
+        let m = zoo::alexnet();
+        let cfg = FitConfig::default();
+        let a = TransferMatrix::build(&m, &cfg).unwrap();
+        let b = TransferMatrix::build(&m, &cfg).unwrap();
+        for (ra, rb) in a.mape.iter().zip(&b.mape) {
+            for (x, y) in ra.iter().zip(rb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

@@ -24,6 +24,7 @@
 //! | [`optimizer`] | Algorithm 1 and the seven evaluation strategies (Table III) |
 //! | [`search`] | the reduced brute-force oracle (strategy 7), annealing, exhaustive certification |
 //! | [`tuner`] | the unified tuning API: one request/outcome surface over every search backend (rust/docs/DESIGN.md §8) |
+//! | [`learn`] | learned cost model + active-learning tuner: feature schema, log-space fit, residual-band pruning, cross-target transfer (rust/docs/DESIGN.md §16) |
 //! | [`codegen`] | CNML-style C++ code generation (paper Fig. 9) |
 //! | [`runtime`] | PJRT client: load AOT HLO-text artifacts, execute |
 //! | [`coordinator`] | end-to-end driver: numerics via PJRT + perf via simulator |
@@ -50,6 +51,13 @@
 //! let outcome = request.run(&mut Algorithm1).expect("tuning");
 //! println!("{}: {} blocks, {:.1} FPS predicted",
 //!          model.name, outcome.schedule.num_blocks(), outcome.fps());
+//!
+//! // `--tuner learned` / `ActiveTuner` fits a surrogate on cost-engine
+//! // samples and queries the real engine only where the surrogate is
+//! // uncertain, reporting the pruning as `TuningStats::evals_saved`
+//! // (rust/docs/DESIGN.md §16).
+//! let outcome = request.run(&mut ActiveTuner::new()).expect("tuning");
+//! println!("learned: {} evals saved", outcome.stats.evals_saved);
 //!
 //! // Branching models are first-class: a DAG workload linearizes to a
 //! // topological layer order plus the set of fusion-legal cut points, and
@@ -98,6 +106,7 @@ pub mod cost;
 pub mod optimizer;
 pub mod search;
 pub mod tuner;
+pub mod learn;
 pub mod codegen;
 pub mod runtime;
 pub mod coordinator;
@@ -116,6 +125,8 @@ pub mod prelude {
                                 DagModel, DagNode, DagOp, Linearization,
                                 LoadedModel};
     pub use crate::graph::{DlmError, Layer, LayerKind, Model};
+    pub use crate::learn::{self, ActiveTuner, FitConfig, LearnedCostModel,
+                           TransferMatrix};
     pub use crate::obs::{Domain, MetricsRegistry, Probe, TraceSession};
     pub use crate::optimizer::{self, Schedule, Strategy};
     pub use crate::perfmodel;

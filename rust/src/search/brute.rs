@@ -222,6 +222,27 @@ fn reachable_cuts(n: usize, space: &CutSpace<'_>) -> Vec<bool> {
     reach
 }
 
+/// The admissible candidate blocks a DP over `(n, rule, mask)` evaluates —
+/// every `[i, j)` with legal endpoints, a rule-satisfying size, and a start
+/// reachable from layer 0 — in the DP's deterministic visit order (`j`
+/// outer, `i` inner). This is the candidate space the learned active tuner
+/// ([`crate::learn::ActiveTuner`]) prunes; sharing the enumeration keeps
+/// its evals-saved accounting honest against the DP reference.
+pub(crate) fn admissible_blocks(n: usize, rule: BlockRule,
+                                allowed: Option<&[bool]>) -> Vec<(usize, usize)> {
+    let space = CutSpace::new(n, rule, allowed);
+    let reach = reachable_cuts(n, &space);
+    let mut out = Vec::new();
+    for j in 1..=n {
+        for i in 0..j {
+            if reach[i] && space.admissible(i, j, n) {
+                out.push((i, j));
+            }
+        }
+    }
+    out
+}
+
 fn dp_search(engine: &mut CostEngine, mp_set: &[usize], sizes: BlockRule,
              allowed: Option<&[bool]>, max_evals: Option<u64>, threads: usize)
              -> Result<(Schedule, SearchStats), DpBudgetExceeded> {

@@ -458,6 +458,13 @@ pub struct ChipSummary {
 pub struct FleetReport {
     pub slo: SloReport,
     pub chips: Vec<ChipSummary>,
+    /// Core-milliseconds of fleet capacity spent per completed request —
+    /// `total chip-cores × makespan / completed` (0 when nothing
+    /// completed). The fleet-composition price tag ROADMAP item 5's
+    /// capacity planning minimizes: a composition that meets the SLO with
+    /// a lower `cost_per_request` retires the same traffic on less
+    /// hardware-time.
+    pub cost_per_request: f64,
 }
 
 impl FleetReport {
@@ -476,7 +483,13 @@ impl FleetReport {
                 utilization: r.utilization(),
             })
             .collect();
-        FleetReport { slo, chips }
+        let completed = result.completed();
+        let cost_per_request = if completed == 0 {
+            0.0
+        } else {
+            result.total_cores as f64 * slo.makespan_ms / completed as f64
+        };
+        FleetReport { slo, chips, cost_per_request }
     }
 
     /// The SLO table followed by the per-chip breakdown.
@@ -494,6 +507,8 @@ impl FleetReport {
             ]);
         }
         out.push_str(&format!("{t}\n"));
+        out.push_str(&format!("cost per request: {:.3} core-ms\n",
+                              self.cost_per_request));
         out
     }
 
@@ -501,6 +516,7 @@ impl FleetReport {
     /// (`serving.chip.<name>.*`).
     pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
         self.slo.export_metrics(reg);
+        reg.set_gauge(Domain::Sim, "serving.cost_per_request", self.cost_per_request);
         for c in &self.chips {
             reg.set_gauge(Domain::Sim,
                           &format!("serving.chip.{}.requests", c.name),

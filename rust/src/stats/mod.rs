@@ -14,4 +14,4 @@ pub mod pca;
 
 pub use descriptive::Summary;
 pub use pca::Pca;
-pub use regression::linear_fit;
+pub use regression::{linear_fit, multi_linear_fit};

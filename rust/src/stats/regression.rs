@@ -35,6 +35,14 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
 
 /// Multiple linear regression `y = X·w + b` via normal equations with
 /// Gaussian elimination. Columns of `xs` are features; returns (weights, b).
+///
+/// Singular or collinear Gram matrices (zero-variance feature columns, a
+/// duplicated feature, fewer samples than features) are handled by ridge
+/// regularization instead of a panic: a multiple of the identity, scaled by
+/// the Gram trace and escalated tenfold until the elimination succeeds, is
+/// added to the diagonal. The fallback is deterministic and always returns
+/// finite coefficients — a zero-variance column simply gets (near-)zero
+/// weight and its constant contribution folds into the intercept.
 pub fn multi_linear_fit(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
     assert_eq!(xs.len(), ys.len());
     assert!(!xs.is_empty());
@@ -54,13 +62,33 @@ pub fn multi_linear_fit(xs: &[Vec<f64>], ys: &[f64]) -> (Vec<f64>, f64) {
             }
         }
     }
-    let w = solve(&mut ata, &mut atb);
-    let b = w[d];
-    (w[..d].to_vec(), b)
+    // Scale-aware ridge ladder: exact solve first, then λ escalating
+    // tenfold from trace/k · 1e-10. The intercept column keeps the trace
+    // ≥ n, so the final rung (λ = trace/k · 0.1) dominates any residual
+    // rank deficiency and the loop always terminates with finite
+    // coefficients.
+    let trace: f64 = (0..k).map(|i| ata[i][i]).sum();
+    let base = (trace / k as f64).max(f64::MIN_POSITIVE);
+    for attempt in 0..=10 {
+        let lambda = if attempt == 0 { 0.0 } else { base * 1e-10 * 10f64.powi(attempt - 1) };
+        let mut a = ata.clone();
+        let mut b = atb.clone();
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += lambda;
+        }
+        if let Some(w) = solve(&mut a, &mut b) {
+            if w.iter().all(|v| v.is_finite()) {
+                let bias = w[d];
+                return (w[..d].to_vec(), bias);
+            }
+        }
+    }
+    unreachable!("ridge ladder ends at a strictly diagonally dominated system")
 }
 
 /// Solve `A x = b` in place by Gaussian elimination with partial pivoting.
-fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+/// Returns `None` when a pivot is too small to divide by (singular system).
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
     let n = b.len();
     for col in 0..n {
         // Pivot.
@@ -70,7 +98,9 @@ fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
         a.swap(col, piv);
         b.swap(col, piv);
         let diag = a[col][col];
-        assert!(diag.abs() > 1e-12, "singular normal equations");
+        if diag.abs() <= 1e-12 {
+            return None;
+        }
         for row in (col + 1)..n {
             let f = a[row][col] / diag;
             for c in col..n {
@@ -87,7 +117,7 @@ fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
         }
         x[row] = acc / a[row][row];
     }
-    x
+    Some(x)
 }
 
 #[cfg(test)]
@@ -133,5 +163,55 @@ mod tests {
     #[should_panic(expected = "degenerate")]
     fn degenerate_x_panics() {
         linear_fit(&[1.0, 1.0], &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_variance_column_falls_back_to_ridge() {
+        // Column 1 is constant — perfectly collinear with the intercept.
+        // The fit must stay finite and still recover the informative slope.
+        let xs: Vec<Vec<f64>> = (0..12).map(|i| vec![i as f64, 7.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|r| 3.0 * r[0] + 1.0).collect();
+        let (w, b) = multi_linear_fit(&xs, &ys);
+        assert!(w.iter().all(|v| v.is_finite()) && b.is_finite());
+        assert!((w[0] - 3.0).abs() < 1e-3, "slope {}", w[0]);
+        // Predictions are what the ridge split of the constant term must
+        // preserve, not the individual (w[1], b) coefficients.
+        for (row, &y) in xs.iter().zip(&ys) {
+            let pred = w[0] * row[0] + w[1] * row[1] + b;
+            assert!((pred - y).abs() < 1e-3, "pred {pred} vs {y}");
+        }
+    }
+
+    #[test]
+    fn duplicated_column_falls_back_to_ridge() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64, i as f64]).collect();
+        let ys: Vec<f64> = xs.iter().map(|r| 2.0 * r[0] + 5.0).collect();
+        let (w, b) = multi_linear_fit(&xs, &ys);
+        assert!(w.iter().all(|v| v.is_finite()) && b.is_finite());
+        // The duplicated pair shares the true slope in some split; their sum
+        // must carry it.
+        assert!((w[0] + w[1] - 2.0).abs() < 1e-3, "w = {w:?}");
+        assert!((b - 5.0).abs() < 1e-2, "b = {b}");
+    }
+
+    #[test]
+    fn underdetermined_system_stays_finite() {
+        // Two samples, three features: the Gram matrix is rank-deficient.
+        let xs = vec![vec![1.0, 2.0, 3.0], vec![2.0, 1.0, 0.5]];
+        let ys = vec![10.0, 20.0];
+        let (w, b) = multi_linear_fit(&xs, &ys);
+        assert!(w.iter().all(|v| v.is_finite()) && b.is_finite());
+    }
+
+    #[test]
+    fn degenerate_fit_is_deterministic() {
+        let xs: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64, 4.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|r| r[0] * 0.5 - 2.0).collect();
+        let (w1, b1) = multi_linear_fit(&xs, &ys);
+        let (w2, b2) = multi_linear_fit(&xs, &ys);
+        assert_eq!(b1.to_bits(), b2.to_bits());
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -40,6 +40,7 @@ fn delta_stats(before: CostStats, after: CostStats, wall_us: u64, search_us: u64
         wall_us,
         search_us,
         prewarm_us: 0,
+        evals_saved: 0,
         truncated,
     }
 }
@@ -57,8 +58,8 @@ fn delta_stats(before: CostStats, after: CostStats, wall_us: u64, search_us: u64
 /// batch-1 run, bit-identical to the pre-batch backends. Budgets bound
 /// each candidate's search independently; the first failing candidate
 /// aborts the whole run.
-fn tune_over_batches<F>(cx: &mut TuningContext<'_>,
-                        mut body: F) -> Result<TuningOutcome, TuningError>
+pub(crate) fn tune_over_batches<F>(cx: &mut TuningContext<'_>,
+                                   mut body: F) -> Result<TuningOutcome, TuningError>
 where
     F: FnMut(&mut TuningContext<'_>) -> Result<TuningOutcome, TuningError>,
 {
@@ -81,6 +82,7 @@ where
         total.wall_us += out.stats.wall_us;
         total.search_us += out.stats.search_us;
         total.prewarm_us += out.stats.prewarm_us;
+        total.evals_saved += out.stats.evals_saved;
         total.truncated |= out.stats.truncated;
         let better = match &best {
             None => true,
@@ -389,7 +391,8 @@ impl Tuner for Exhaustive {
 /// cross-target comparison builds one backend per worker from the name).
 /// Known names: `algorithm1`/`dlfusion`, `strategy1..7`, `oracle`/
 /// `oracle-dp`, `oracle-full`, `oracle-constrained`, `anneal`/`annealing`,
-/// `exhaustive`.
+/// `exhaustive`, `learned`/`active` (the model-guided
+/// [`crate::learn::ActiveTuner`]).
 pub fn backend_by_name(name: &str) -> Result<Box<dyn Tuner>, String> {
     match name {
         "algorithm1" | "dlfusion" => Ok(Box::new(Algorithm1)),
@@ -398,6 +401,7 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn Tuner>, String> {
         "oracle-constrained" => Ok(Box::new(OracleDp::constrained())),
         "anneal" | "annealing" => Ok(Box::new(Annealer::new())),
         "exhaustive" => Ok(Box::new(Exhaustive)),
+        "learned" | "active" => Ok(Box::new(crate::learn::ActiveTuner::new())),
         s if s.starts_with("strategy") => {
             let idx: usize = s["strategy".len()..]
                 .parse()
@@ -408,7 +412,8 @@ pub fn backend_by_name(name: &str) -> Result<Box<dyn Tuner>, String> {
         }
         other => Err(format!(
             "unknown tuner '{other}' (known: algorithm1, strategy1..7, \
-             oracle, oracle-full, oracle-constrained, anneal, exhaustive)"
+             oracle, oracle-full, oracle-constrained, anneal, exhaustive, \
+             learned)"
         )),
     }
 }

@@ -26,7 +26,9 @@
 //! The five backends are [`Algorithm1`], [`TableStrategy`], [`OracleDp`],
 //! [`Annealer`], and [`Exhaustive`]. Each is pinned bit-identical to the
 //! legacy free function it wraps (`rust/tests/tuner_parity.rs`); the legacy
-//! functions remain as `#[deprecated]` shims.
+//! functions remain as `#[deprecated]` shims. A sixth, model-guided backend
+//! — [`crate::learn::ActiveTuner`], registered as `learned` — lives in the
+//! `learn` subsystem (rust/docs/DESIGN.md §16).
 //!
 //! ```no_run
 //! use dlfusion::prelude::*;
@@ -46,6 +48,7 @@ pub mod parallel;
 
 pub use backends::{backend_by_name, Algorithm1, Annealer, Exhaustive, OracleDp,
                    TableStrategy};
+pub(crate) use backends::tune_over_batches;
 pub use compare::{compare, compare_targets, compare_targets_with,
                   compare_threaded, Comparison, TargetComparison,
                   TargetOutcome};

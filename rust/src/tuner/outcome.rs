@@ -33,6 +33,12 @@ pub struct TuningStats {
     /// `search_us` — zero for sequential runs and for backends without a
     /// prewarm pool. The DP's own recurrence is `search_us - prewarm_us`.
     pub prewarm_us: u64,
+    /// Real engine evaluations the backend *avoided* relative to sweeping
+    /// its full candidate space (`|admissible blocks| × |MP set|` per
+    /// batch). Nonzero only for model-guided backends — the learned active
+    /// tuner ([`crate::learn::ActiveTuner`]) reports here how much of the
+    /// reduced-DP reference sweep its surrogate pruned.
+    pub evals_saved: u64,
     /// The run stopped early on a budget and returned its best-so-far
     /// result (only backends that can: see the [`super::Tuner`] contract).
     pub truncated: bool,
@@ -62,6 +68,7 @@ impl TuningStats {
             // the backend overwrites `wall_us` with its whole-call time.
             search_us: st.wall_us,
             prewarm_us: st.prewarm_us,
+            evals_saved: 0,
             truncated: false,
         }
     }
@@ -114,6 +121,7 @@ impl TuningOutcome {
         reg.set_gauge(Domain::Sim, "tuner.batch", self.batch as f64);
         reg.set_gauge(Domain::Sim, "tuner.schedule_blocks",
                       self.schedule.num_blocks() as f64);
+        reg.inc(Domain::Sim, "tuner.evals_saved", self.stats.evals_saved);
         reg.inc(Domain::Sim, "tuner.truncated", u64::from(self.stats.truncated));
         reg.inc(Domain::Wall, "tuner.wall_us", self.stats.wall_us);
         reg.inc(Domain::Wall, "tuner.search_us", self.stats.search_us);

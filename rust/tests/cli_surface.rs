@@ -252,7 +252,8 @@ fn perf_smoke_emits_json_and_compares_against_baseline() {
                 "serving_fifo_throughput_rps", "serving_fifo_goodput_rps",
                 "batching_fifo_goodput_rps", "batching_batch_goodput_rps",
                 "mlu100_resnet18_algorithm1_ms", "mlu100_resnet18_oracle_ms",
-                "edge4_resnet18_algorithm1_ms", "edge4_resnet18_oracle_ms"] {
+                "edge4_resnet18_algorithm1_ms", "edge4_resnet18_oracle_ms",
+                "learned_resnet18_mape", "active_evals_saved_ratio"] {
         let v = metrics.get(key).and_then(|m| m.as_f64());
         assert!(v.is_some_and(|v| v.is_finite() && v > 0.0), "metric {key}: {v:?}");
     }
@@ -619,4 +620,75 @@ fn optimize_dlm_file() {
     // Corrupt file -> error.
     std::fs::write(dir.join("bad.dlm"), "{nope").unwrap();
     assert_eq!(run(&format!("optimize {}", dir.join("bad.dlm").display())), 1);
+}
+
+#[test]
+fn learn_fit_eval_transfer_happy_paths() {
+    let dir = std::env::temp_dir().join("dlfusion_cli_learn");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let model_file = dir.join("fitted.json");
+    let metrics = dir.join("metrics.json");
+    // Fit prints the report and saves the versioned model file.
+    assert_eq!(
+        run(&format!("learn fit resnet18 --out {} --metrics-out {}",
+                     model_file.display(), metrics.display())),
+        0);
+    let doc = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&model_file).unwrap()).unwrap();
+    assert_eq!(doc.get("format").as_str(),
+               Some("dlfusion-learned-cost-model"));
+    let snap = dlfusion::util::json::Json::parse(
+        &std::fs::read_to_string(&metrics).unwrap()).unwrap();
+    assert!(snap.get("deterministic").get("learn.fit.r2_train")
+            .as_f64().is_some_and(|v| v > 0.5));
+    // Eval scores the saved file, on the fit target and across targets.
+    assert_eq!(run(&format!("learn eval resnet18 {}", model_file.display())), 0);
+    assert_eq!(run(&format!("learn eval resnet18 {} --target edge4",
+                            model_file.display())), 0);
+    // PCA-reduced fits and dag workloads ride the same surface.
+    assert_eq!(run("learn fit alexnet --pca 6 --holdout 0.2 --seed 7"), 0);
+    assert_eq!(run("learn fit resnet18-dag"), 0);
+    // Transfer sweeps the registry (default workload when none is named).
+    assert_eq!(run("learn transfer alexnet"), 0);
+}
+
+#[test]
+fn learn_error_paths_are_clean() {
+    // Missing/unknown verbs and workloads are usage errors, not panics.
+    assert_eq!(run("learn"), 1);
+    assert_eq!(run("learn frobnicate"), 1);
+    assert_eq!(run("learn fit"), 1);
+    assert_eq!(run("learn fit nope_net"), 1);
+    assert_eq!(run("learn fit resnet18 --target tpu9"), 1);
+    assert_eq!(run("learn fit resnet18 --pca 99"), 1);
+    assert_eq!(run("learn fit resnet18 --holdout 1.5"), 1);
+    // Eval needs both the workload and a readable, well-formed model file.
+    assert_eq!(run("learn eval resnet18"), 1);
+    assert_eq!(run("learn eval resnet18 /nonexistent/model.json"), 1);
+    let dir = std::env::temp_dir().join("dlfusion_cli_learn_bad");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{ not json").unwrap();
+    assert_eq!(run(&format!("learn eval resnet18 {}", bad.display())), 1);
+    let wrong = dir.join("wrong.json");
+    std::fs::write(&wrong, r#"{"format": "something-else"}"#).unwrap();
+    assert_eq!(run(&format!("learn eval resnet18 {}", wrong.display())), 1);
+    assert_eq!(run("learn transfer nope_net"), 1);
+}
+
+#[test]
+fn tune_learned_backend_happy_paths() {
+    // The learned backend rides the whole tune surface: single runs,
+    // comparisons, cross-target sweeps, dag constraints, batch sets.
+    assert_eq!(run("tune resnet18 --tuner learned"), 0);
+    assert_eq!(run("tune alexnet --tuner learned --target edge4"), 0);
+    assert_eq!(run("tune alexnet --compare --tuner learned"), 0);
+    assert_eq!(run("tune alexnet --tuner learned --compare-targets"), 0);
+    assert_eq!(run("tune resnet18-dag --tuner learned"), 0);
+    assert_eq!(run("tune alexnet --tuner learned --batch 1,4"), 0);
+    // `active` is a registered alias of the same backend.
+    assert_eq!(run("tune alexnet --tuner active"), 0);
+    // Unknown tuner names still fail cleanly.
+    assert_eq!(run("tune alexnet --tuner learnt"), 1);
 }

@@ -261,3 +261,44 @@ fn fleet_run_validates_its_trace() {
     assert!(err.contains("model 7"), "{err}");
     assert!(err.contains("only 1"), "{err}");
 }
+
+/// The fleet's price tag: `cost_per_request` is exactly
+/// `total chip-cores x makespan / completed` — pinned arithmetically
+/// against the run's own numbers, rendered, and exported as a sim gauge.
+#[test]
+fn cost_per_request_is_pinned_to_the_run() {
+    let mix = ModelMix::uniform(vec![zoo::alexnet(), zoo::mini_cnn()]);
+    let fleet = Fleet::parse("mlu100,edge4x2").unwrap();
+    let mut cache = PlanCache::new();
+    let plan = plan_fleet(&fleet, &mix, None, 1, true, &mut cache).unwrap();
+    let trace = serving::generate_trace(
+        &mix, ArrivalProcess::OpenPoisson { rate_rps: 400.0 }, 160, 5);
+    let result = FleetRun::new(&plan, RouterConfig::new(RoutePolicy::LeastLoaded))
+        .trace(&trace)
+        .run()
+        .unwrap();
+    let report = FleetReport::from_run(&result, &plan, Some(50.0));
+    let expected = result.total_cores as f64 * report.slo.makespan_ms
+        / result.completed() as f64;
+    assert!(result.completed() > 0);
+    assert_eq!(report.cost_per_request.to_bits(), expected.to_bits(),
+               "cost_per_request {} != cores x makespan / completed {}",
+               report.cost_per_request, expected);
+    assert!(report.render().contains("cost per request"));
+    let mut reg = MetricsRegistry::new();
+    report.export_metrics(&mut reg);
+    assert_eq!(reg.gauge("serving.cost_per_request"),
+               Some(report.cost_per_request));
+    // A bigger fleet retiring the same trace costs more core-ms per
+    // request when the extra cores sit idle.
+    let fleet2 = Fleet::parse("mlu100x2,edge4x2").unwrap();
+    let plan2 = plan_fleet(&fleet2, &mix, None, 1, true, &mut cache).unwrap();
+    let result2 =
+        FleetRun::new(&plan2, RouterConfig::new(RoutePolicy::LeastLoaded))
+            .trace(&trace)
+            .run()
+            .unwrap();
+    let report2 = FleetReport::from_run(&result2, &plan2, Some(50.0));
+    assert!(report2.cost_per_request.is_finite()
+            && report2.cost_per_request > 0.0);
+}

@@ -1,0 +1,107 @@
+//! Integration: the learned cost model + active-learning tuner
+//! (rust/docs/DESIGN.md §16). The acceptance criterion of ROADMAP item
+//! 4(a): on resnet18/mlu100 the active tuner lands within 5% of the
+//! reduced oracle DP's predicted latency while issuing strictly fewer
+//! real cost-engine evaluations, and the whole stack — fit, save/load,
+//! transfer — is deterministic and survives the tuner-registry surface.
+
+use dlfusion::accel::{Simulator, Target};
+use dlfusion::cost::CostEngine;
+use dlfusion::learn::{collect_samples, ActiveTuner, FitConfig,
+                      LearnedCostModel, TransferMatrix, FEATURE_DIM};
+use dlfusion::tuner::{self, OracleDp, Tuner, TuningRequest};
+use dlfusion::zoo;
+
+#[test]
+fn active_tuner_is_within_five_percent_of_the_oracle_with_fewer_evals() {
+    let sim = Simulator::new(Target::mlu100());
+    let model = zoo::resnet18();
+    let request = TuningRequest::new(&sim, &model);
+    // Fresh contexts: each backend starts cold, so its cache-miss count is
+    // exactly the number of distinct real engine computations it forced.
+    let active = request.run(&mut ActiveTuner::new()).expect("learned tune");
+    let oracle = request.run(&mut OracleDp::reduced()).expect("oracle tune");
+    assert!(active.predicted_ms <= oracle.predicted_ms * 1.05,
+            "active {} ms vs oracle {} ms: over the 5% acceptance band",
+            active.predicted_ms, oracle.predicted_ms);
+    assert!(active.stats.cache_misses < oracle.stats.cache_misses,
+            "active tuner must force strictly fewer real evaluations \
+             ({} vs {})",
+            active.stats.cache_misses, oracle.stats.cache_misses);
+    assert!(active.stats.evals_saved > 0,
+            "the pruning report must show savings");
+    active.schedule
+        .validate(model.num_layers(), sim.spec.num_cores)
+        .expect("valid schedule");
+}
+
+#[test]
+fn learned_backend_rides_the_registry_and_the_compare_panel() {
+    let sim = Simulator::new(Target::mlu100());
+    let model = zoo::resnet18();
+    // Registry: both names resolve to the same backend.
+    assert_eq!(tuner::backend_by_name("learned").unwrap().name(), "learned");
+    assert_eq!(tuner::backend_by_name("active").unwrap().name(), "learned");
+    // The comparison surface (one shared engine) accepts the backend and
+    // reports its pruning next to the references.
+    let request = TuningRequest::new(&sim, &model);
+    let mut tuners: Vec<Box<dyn Tuner>> = vec![
+        Box::new(tuner::Algorithm1),
+        Box::new(OracleDp::reduced()),
+        Box::new(ActiveTuner::new()),
+    ];
+    let cmp = request.compare(&mut tuners).expect("comparison");
+    let learned = cmp.outcomes.iter().find(|o| o.tuner == "learned")
+        .expect("learned row in the comparison");
+    let oracle = cmp.outcomes.iter().find(|o| o.tuner.contains("oracle"))
+        .expect("oracle row in the comparison");
+    assert!(learned.predicted_ms <= oracle.predicted_ms * 1.05,
+            "learned {} ms vs oracle {} ms in the shared-engine comparison",
+            learned.predicted_ms, oracle.predicted_ms);
+    assert!(learned.stats.evals_saved > 0);
+    assert!(cmp.render("learned acceptance").contains("learned"));
+}
+
+#[test]
+fn fit_save_load_predicts_identically() {
+    let sim = Simulator::new(Target::mlu100());
+    let model = zoo::resnet18();
+    let engine = CostEngine::new(&sim, &model);
+    let samples = collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]);
+    assert!(samples.iter().all(|s| s.features.len() == FEATURE_DIM));
+    let fitted =
+        LearnedCostModel::fit("mlu100", &samples, &FitConfig::default())
+            .expect("fit");
+    assert!(fitted.report.r2_holdout > 0.7,
+            "holdout r2 {}", fitted.report.r2_holdout);
+
+    let dir = std::env::temp_dir().join("dlfusion_learned_cost_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    let path = path.to_str().unwrap();
+    fitted.save(path).unwrap();
+    let back = LearnedCostModel::load(path).unwrap();
+    for s in samples.iter().step_by(17) {
+        assert_eq!(fitted.predict_ms(&s.features).to_bits(),
+                   back.predict_ms(&s.features).to_bits(),
+                   "save/load must preserve predictions bit for bit");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn transfer_matrix_spans_the_registry_with_a_sane_diagonal() {
+    let model = zoo::resnet18();
+    let t = TransferMatrix::build(&model, &FitConfig::default()).unwrap();
+    let names: Vec<&str> = Target::NAMES.to_vec();
+    assert_eq!(t.targets, names);
+    for (r, train) in names.iter().enumerate() {
+        assert_eq!(t.mape[r].len(), names.len());
+        let diag = t.cell(train, train).unwrap();
+        assert!(diag.is_finite() && diag >= 0.0);
+        assert!(diag < 0.6,
+                "in-target mape for {train} is {diag}: the model should \
+                 at least fit its own hardware");
+    }
+    assert!(t.render().contains("transfer matrix"));
+}

@@ -167,3 +167,61 @@ fn serving_trace_and_metrics_exports_are_run_to_run_identical() {
                "metrics snapshot must be bit-identical run to run");
     assert!(trace_a.contains("traceEvents"));
 }
+
+/// The learned stack's determinism contract (rust/docs/DESIGN.md §16):
+/// fit coefficients, the transfer matrix, and the active tuner's schedule
+/// are pure functions of the request — bit-identical across runs and
+/// across `--threads` settings (the walk is sequential by construction, so
+/// the thread knob must change nothing).
+#[test]
+fn learned_stack_is_bit_identical_across_runs_and_threads() {
+    use dlfusion::cost::CostEngine;
+    use dlfusion::learn::{collect_samples, ActiveTuner, FitConfig,
+                          LearnedCostModel, TransferMatrix};
+
+    let sim = Simulator::new(Target::mlu100());
+    let model = zoo::resnet18();
+
+    // Fit: same samples, same config => same coefficient bits.
+    let fit_once = || {
+        let engine = CostEngine::new(&sim, &model);
+        let samples =
+            collect_samples(&engine, &sim.spec.reduced_mp_set(), &[1]);
+        LearnedCostModel::fit("mlu100", &samples, &FitConfig::default())
+            .expect("fit")
+    };
+    let a = fit_once();
+    let b = fit_once();
+    assert_eq!(a.bias.to_bits(), b.bias.to_bits());
+    assert_eq!(a.residual_band.to_bits(), b.residual_band.to_bits());
+    for (x, y) in a.weights.iter().zip(&b.weights) {
+        assert_eq!(x.to_bits(), y.to_bits(), "fit weights must be stable");
+    }
+
+    // Transfer matrix: every cell run-to-run identical.
+    let ta = TransferMatrix::build(&model, &FitConfig::default()).unwrap();
+    let tb = TransferMatrix::build(&model, &FitConfig::default()).unwrap();
+    for (ra, rb) in ta.mape.iter().zip(&tb.mape) {
+        for (x, y) in ra.iter().zip(rb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "transfer cell moved");
+        }
+    }
+
+    // Active tuner: schedule, latency bits, and pruning accounting are
+    // invariant across runs and thread counts.
+    let tune_once = |threads: usize| {
+        let request =
+            tuner::TuningRequest::new(&sim, &model).threads(threads);
+        request.run(&mut ActiveTuner::new()).expect("learned tune")
+    };
+    let s1 = tune_once(1);
+    let s1b = tune_once(1);
+    let s4 = tune_once(4);
+    for other in [&s1b, &s4] {
+        assert_eq!(s1.schedule, other.schedule, "learned schedule moved");
+        assert_eq!(s1.predicted_ms.to_bits(), other.predicted_ms.to_bits());
+        assert_eq!(s1.stats.evaluations, other.stats.evaluations);
+        assert_eq!(s1.stats.cache_misses, other.stats.cache_misses);
+        assert_eq!(s1.stats.evals_saved, other.stats.evals_saved);
+    }
+}
